@@ -1,0 +1,22 @@
+//! Bench: §2.2 finding (i) (small models) and the §6.6 extension
+//! ablations (serverless cold starts, QoS-clustered scheduling).
+
+use dynasplit::experiments::{extensions, small_models, Ctx};
+use dynasplit::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    b.run_once("finding_i_small_models", || {
+        small_models::print_report(&small_models::run());
+    });
+    b.run_once("ext_serverless_cold_start", || {
+        let r = extensions::run_cold_start(&ctx, 50, 800.0, 42);
+        extensions::print_cold_start(&r);
+    });
+    b.run_once("ext_qos_clustering", || {
+        let r = extensions::run_clustering(&ctx, 100, 6, 42);
+        extensions::print_clustering(&r);
+    });
+    b.finish();
+}

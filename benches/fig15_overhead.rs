@@ -1,0 +1,47 @@
+//! Bench: regenerate Fig. 15 (controller overhead) + micro-bench the two
+//! controller operations the paper times: configuration selection
+//! (Algorithm 1) and configuration application.
+
+use dynasplit::controller::algorithm1;
+use dynasplit::controller::apply::Applier;
+use dynasplit::experiments::{overhead, Ctx};
+use dynasplit::solver::{Solver, Strategy};
+use dynasplit::space::Network;
+use dynasplit::util::bench::Bencher;
+use dynasplit::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    b.run_once("fig15_overhead_analysis", || {
+        let results: Vec<_> = Network::ALL
+            .iter()
+            .map(|&net| overhead::run(&ctx, net, 50, 1000, 42))
+            .collect();
+        overhead::print_report(&results);
+    });
+
+    // --- micro: Algorithm-1 selection over a paper-sized config set ---
+    let mut solver = Solver::new(&ctx.testbed, Network::Vgg16);
+    solver.batch_per_trial = 200;
+    let out = solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), 42);
+    let mut sorted = out.pareto.clone();
+    algorithm1::sort_config_set(&mut sorted);
+    let mut qos = 80.0;
+    b.bench("algorithm1_select", || {
+        qos = if qos > 5000.0 { 80.0 } else { qos + 37.0 };
+        algorithm1::select(&sorted, qos).config
+    });
+
+    // --- micro: configuration application state machine ---
+    let mut applier = Applier::default();
+    let mut rng = Pcg32::seeded(3);
+    let space = dynasplit::space::Space::new(Network::Vgg16);
+    let pool: Vec<_> = (0..13).map(|_| space.sample(&mut rng)).collect();
+    let mut i = 0;
+    b.bench("applier_state_machine", || {
+        i = (i + 1) % pool.len();
+        applier.apply(&pool[i], &mut rng)
+    });
+    b.finish();
+}

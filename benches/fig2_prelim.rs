@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 2a–2e (preliminary study).
+//!
+//! Prints the five panels as tables with the paper-shape commentary and
+//! records the end-to-end wall time.
+
+use dynasplit::experiments::{prelim, Ctx};
+use dynasplit::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    b.run_once("fig2_prelim_study", || {
+        let r = prelim::run(&ctx, 1000, 42);
+        prelim::print_report(&r);
+    });
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 5 (QoS request distributions) + micro-bench the
+//! workload generator itself.
+
+use dynasplit::experiments::workload_dist;
+use dynasplit::space::Network;
+use dynasplit::util::bench::Bencher;
+use dynasplit::util::rng::Pcg32;
+use dynasplit::workload::WorkloadGen;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    b.run_once("fig5_workload_distributions", || {
+        let dists = [
+            workload_dist::run(Network::Vgg16, 10_000, 42),
+            workload_dist::run(Network::Vit, 10_000, 42),
+        ];
+        workload_dist::print_report(&dists);
+    });
+    let gen = WorkloadGen::paper(Network::Vgg16);
+    let mut rng = Pcg32::seeded(1);
+    b.bench("workload_generate_10k", || gen.generate(10_000, &mut rng));
+    b.finish();
+}

@@ -1,0 +1,83 @@
+//! Micro benchmarks of the coordinator's hot paths (§Perf L3):
+//! trial simulation, NSGA-III machinery, meter integration, transport
+//! framing, JSON parsing, and — when artifacts are present — the real
+//! PJRT layer execution path.
+
+use dynasplit::model::{Manifest, NetCost};
+use dynasplit::nsga::{refpoints, sort};
+use dynasplit::simulator::meter::{Meter, PowerTrace};
+use dynasplit::simulator::Testbed;
+use dynasplit::space::{Network, Space};
+use dynasplit::transport::frame::Frame;
+use dynasplit::util::bench::Bencher;
+use dynasplit::util::json::Json;
+use dynasplit::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let tb = Testbed::synthetic();
+    let space = Space::new(Network::Vgg16);
+    let mut rng = Pcg32::seeded(1);
+
+    // --- simulator ---
+    let configs: Vec<_> = (0..64).map(|_| space.sample(&mut rng)).collect();
+    let mut ci = 0;
+    b.bench("testbed_trial_1000_inferences", || {
+        ci = (ci + 1) % configs.len();
+        tb.run_trial_n(&configs[ci], 1000, &mut rng).latency_ms
+    });
+    b.bench("device_latency_model", || {
+        ci = (ci + 1) % configs.len();
+        tb.vgg.latency(&configs[ci]).total_s()
+    });
+
+    // --- meter ---
+    let mut trace = PowerTrace::new();
+    for i in 0..2000 {
+        trace.push(0.2, 3.0 + (i % 7) as f64 * 0.3);
+    }
+    let meter = Meter::edge();
+    b.bench("meter_sample_2000seg_trace", || meter.measure_energy_j(&trace, &mut rng));
+
+    // --- NSGA machinery ---
+    let objs: Vec<[f64; 3]> = (0..200)
+        .map(|_| [rng.f64() * 1000.0, rng.f64() * 100.0, -rng.f64()])
+        .collect();
+    b.bench("non_dominated_sort_200", || sort::non_dominated_fronts(&objs).len());
+    b.bench("das_dennis_p12", || refpoints::das_dennis(12).len());
+
+    // --- transport framing ---
+    let payload: Vec<f32> = (0..16_384).map(|i| i as f32).collect();
+    b.bench("frame_encode_64KiB_tensor", || Frame::tensor(&payload).encode().len());
+    let encoded = Frame::tensor(&payload).encode();
+    b.bench("frame_decode_64KiB_tensor", || {
+        Frame::decode(&encoded).unwrap().unwrap().1
+    });
+
+    // --- JSON / manifest ---
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        b.bench("json_parse_manifest", || Json::parse(&text).unwrap());
+    }
+
+    // --- cost model ---
+    b.bench("netcost_tables", || {
+        NetCost::of(Network::Vgg16).total_macs() + NetCost::of(Network::Vit).total_macs()
+    });
+
+    // --- real PJRT path (artifacts required) ---
+    if let Ok(manifest) = Manifest::load(&dynasplit::artifacts_dir(None)) {
+        let engine = dynasplit::runtime::Engine::cpu().unwrap();
+        let vgg =
+            dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, Network::Vgg16).unwrap();
+        let (images, _) = manifest.load_eval_set().unwrap();
+        let x = &images[..manifest.batch * manifest.img * manifest.img * 3];
+        b.bench("pjrt_vgg_layer0_batch16", || vgg.run_range(0, 1, false, x).unwrap().len());
+        b.bench("pjrt_vgg_full_forward_batch16", || vgg.run_full(0, x).unwrap().len());
+        b.bench("pjrt_vgg_int8_head11_batch16", || {
+            vgg.run_head(11, true, x).unwrap().len()
+        });
+    } else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+    }
+    b.finish();
+}

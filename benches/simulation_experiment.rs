@@ -1,0 +1,19 @@
+//! Bench: regenerate the Simulation Experiment — Fig. 11 (scheduling),
+//! Fig. 12 (latency), Fig. 13 (QoS violations), Fig. 14 (energy) at the
+//! paper's full 10,000-request scale.
+
+use dynasplit::experiments::{simulation, Ctx};
+use dynasplit::space::Network;
+use dynasplit::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    for net in Network::ALL {
+        b.run_once(&format!("fig11_to_14_simulation_{}", net.name()), || {
+            let exp = simulation::run(&ctx, net, 10_000, 1000, 42);
+            simulation::print_report(&exp);
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Table 2 (latency bounds + achieving configurations)
+//! via the full feasible-space grid sweep.
+
+use dynasplit::experiments::{bounds, Ctx};
+use dynasplit::space::Network;
+use dynasplit::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    b.run_once("table2_latency_bounds", || {
+        let vgg = bounds::run(&ctx, Network::Vgg16, 200, 42);
+        let vit = bounds::run(&ctx, Network::Vit, 200, 42);
+        bounds::print_report(&vgg, &vit);
+    });
+    b.finish();
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the Testbed Experiment — Fig. 6 (scheduling
+//! decisions), Fig. 7 (latency), Fig. 8 (QoS violations), Fig. 9
+//! (energy), and the headline energy-reduction / QoS-met numbers.
+
+use dynasplit::experiments::{testbed_exp, Ctx};
+use dynasplit::space::Network;
+use dynasplit::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    for net in Network::ALL {
+        b.run_once(&format!("fig6_to_9_testbed_{}", net.name()), || {
+            let exp = testbed_exp::run(&ctx, net, 50, 1000, 42);
+            testbed_exp::print_report(&exp);
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,19 @@
+//! The paper's controller-overhead analysis (§6.5, Fig. 15): startup
+//! load+sort, per-request configuration selection, and configuration
+//! application, with the §6.5 relative-overhead comparison.
+//!
+//! ```bash
+//! cargo run --release --example overhead_analysis
+//! ```
+
+use dynasplit::experiments::{overhead, Ctx};
+use dynasplit::space::Network;
+
+fn main() {
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    let results: Vec<_> = Network::ALL
+        .iter()
+        .map(|&net| overhead::run(&ctx, net, 50, 1000, 42))
+        .collect();
+    overhead::print_report(&results);
+}

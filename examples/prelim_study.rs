@@ -1,0 +1,16 @@
+//! The paper's preliminary study (§2.2, Fig. 2a–2e): the impact of CPU
+//! frequency, split layer, edge TPU mode, and cloud GPU on VGG16
+//! latency / energy / accuracy.
+//!
+//! ```bash
+//! cargo run --release --example prelim_study
+//! ```
+
+use dynasplit::experiments::{prelim, Ctx};
+
+fn main() {
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    println!("accuracy table source: {}", ctx.accuracy_origin);
+    let r = prelim::run(&ctx, 1000, 42);
+    prelim::print_report(&r);
+}

@@ -1,0 +1,100 @@
+//! Quickstart: the whole DynaSplit pipeline in one binary.
+//!
+//! 1. offline phase — NSGA-III over 20% of the VGG16 space;
+//! 2. online phase — Algorithm-1 scheduling of a small workload;
+//! 3. **real** end-to-end split execution: the PJRT head runs on this
+//!    thread, the intermediate activation streams over the gRPC-analog
+//!    transport to a cloud thread running the PJRT tail — proving the
+//!    three layers (Pallas kernels → JAX layers → rust coordinator)
+//!    compose.  Requires `make artifacts`; steps 1–2 also run without.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dynasplit::controller::real::RealSplitExecutor;
+use dynasplit::controller::{Controller, SimExecutor};
+use dynasplit::experiments::Ctx;
+use dynasplit::model::Manifest;
+use dynasplit::solver::{Solver, Strategy};
+use dynasplit::space::Network;
+use dynasplit::transport::channel::LinkShaping;
+use dynasplit::util::rng::Pcg32;
+use dynasplit::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = dynasplit::artifacts_dir(None);
+    let ctx = Ctx::load(&artifacts);
+    println!("accuracy table source: {}", ctx.accuracy_origin);
+
+    // ---- 1. offline phase ----
+    let mut solver = Solver::new(&ctx.testbed, Network::Vgg16);
+    solver.batch_per_trial = 200;
+    let trials = solver.trials_for_fraction(0.2);
+    println!("offline: NSGA-III, {trials} trials ...");
+    let out = solver.run(Strategy::NsgaIII, trials, 42);
+    println!("offline: non-dominated set has {} configurations:", out.pareto.len());
+    for p in &out.pareto {
+        println!(
+            "  {:<46} {:>8.1} ms {:>7.2} J  acc {:.3}",
+            p.config.describe(),
+            p.latency_ms,
+            p.energy_j,
+            p.accuracy
+        );
+    }
+
+    // ---- 2. online phase (simulated metrics) ----
+    let mut controller = Controller::new(out.pareto.clone(), 42);
+    let gen = WorkloadGen::paper(Network::Vgg16);
+    let mut rng = Pcg32::seeded(7);
+    let requests = gen.generate(20, &mut rng);
+    let mut sim = SimExecutor::Fresh { testbed: &ctx.testbed, rng: Pcg32::seeded(8) };
+    let metrics = controller.serve(&requests, &mut sim, "dynasplit");
+    let (c, s, e) = metrics.placement_counts();
+    println!(
+        "\nonline: 20 requests -> {c} cloud / {s} split / {e} edge; \
+         QoS met {:.0}%; median energy {:.1} J (vs cloud-only ~68 J)",
+        metrics.qos_met_fraction() * 100.0,
+        metrics.energy_summary().median
+    );
+
+    // ---- 3. real end-to-end split execution ----
+    match Manifest::load(&artifacts) {
+        Ok(manifest) => {
+            println!("\nreal e2e: loading PJRT runtimes + cloud thread ...");
+            let mut real = RealSplitExecutor::new(&manifest, Some(LinkShaping::from_calib()))?;
+            // three QoS levels that force all three placements through the
+            // real compute + transport path: strict -> cloud, medium ->
+            // split, lenient -> edge.
+            for (i, qos_ms) in [99.0, 300.0, 5000.0].into_iter().enumerate() {
+                let req = dynasplit::workload::Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms,
+                    inferences: 16,
+                    seed: i as u64,
+                };
+                let record = controller.handle(&req, &mut real);
+                println!(
+                    "  QoS {qos_ms:>6.0} ms: {:<6} split {:<2} -> {:.2} ms/inference (wall), \
+                     batch accuracy {:.3}",
+                    record.config.placement(),
+                    record.config.split,
+                    record.latency_ms,
+                    record.accuracy
+                );
+            }
+            let stats = real.shutdown()?;
+            println!(
+                "real e2e: cloud thread served {} tensor batches ({} elements) — \
+                 all three layers compose.",
+                stats.batches, stats.tensor_elements
+            );
+        }
+        Err(e) => {
+            println!("\n(real e2e skipped: {e:#}; run `make artifacts` first)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! The paper's search-budget ablation (§6.3.4, Fig. 10): NSGA-III over
+//! 20% of the VGG16 space vs a grid over ~80%, serving the same workload.
+//!
+//! ```bash
+//! cargo run --release --example search_ablation
+//! ```
+
+use dynasplit::experiments::{ablation, Ctx};
+
+fn main() {
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    let r = ablation::run(&ctx, 50, 1000, 42);
+    ablation::print_report(&r);
+}

@@ -1,0 +1,19 @@
+//! The paper's Simulation Experiment (§6.4): up to 10,000 requests per
+//! network served from the observation pool — regenerates Fig. 11–14.
+//!
+//! ```bash
+//! cargo run --release --example simulation_experiment [requests]
+//! ```
+
+use dynasplit::experiments::{simulation, Ctx};
+use dynasplit::space::Network;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(10_000);
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    println!("accuracy table source: {}", ctx.accuracy_origin);
+    for net in Network::ALL {
+        let exp = simulation::run(&ctx, net, n, 1000, 42);
+        simulation::print_report(&exp);
+    }
+}

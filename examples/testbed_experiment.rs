@@ -1,0 +1,20 @@
+//! The paper's Testbed Experiment (§6.3): 50 requests per network,
+//! DynaSplit vs the four §6.2.3 baselines — regenerates Fig. 6–9 and the
+//! headline numbers (up to −72% energy vs cloud-only, ~90% QoS met).
+//!
+//! ```bash
+//! cargo run --release --example testbed_experiment [requests]
+//! ```
+
+use dynasplit::experiments::{testbed_exp, Ctx};
+use dynasplit::space::Network;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(50);
+    let ctx = Ctx::load(&dynasplit::artifacts_dir(None));
+    println!("accuracy table source: {}", ctx.accuracy_origin);
+    for net in Network::ALL {
+        let exp = testbed_exp::run(&ctx, net, n, 1000, 42);
+        testbed_exp::print_report(&exp);
+    }
+}

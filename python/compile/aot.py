@@ -1,0 +1,283 @@
+"""AOT pipeline: train -> quantize -> per-layer HLO artifacts + manifest.
+
+This is the only place Python runs in DynaSplit — at build time
+(``make artifacts``).  It:
+
+  1. trains the two mini networks on the synthetic dataset ("pre-trained"
+     substitute; cached in artifacts/.params_<net>.npz),
+  2. post-training-quantizes VGG16 for the edge-TPU path (compile.quant),
+  3. lowers **every layer separately** (kernel path, parameters bound as
+     constants) to HLO *text* — not ``.serialize()``: jax >= 0.5 emits
+     protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+     the text parser reassigns ids and round-trips cleanly,
+  4. writes the evaluation set as raw binaries for the rust runtime,
+  5. computes the python-side expected accuracy table (oracle path) the
+     rust integration tests cross-check against, and
+  6. writes artifacts/manifest.json describing all of it.
+
+Usage:
+  python -m compile.aot --out ../artifacts          # build everything
+  python -m compile.aot --report                    # §Perf structural report
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model, quant, train
+import compile.kernels.attention as attn_k
+import compile.kernels.matmul as mm_k
+
+BATCH = 16
+EVAL_COUNT = 256
+EVAL_SEED = 99  # disjoint from training (123) and calibration (7) seeds
+MANIFEST_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission (the interchange format — see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print_large_constants.  The default printer elides big
+    # literals as `constant({...})`, which the HLO text parser reads back
+    # as ZEROS — every baked-in weight would silently vanish and the rust
+    # runtime would classify at chance.  (Found the hard way; the rust
+    # integration test now pins measured-vs-oracle accuracy.)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and no metadata: modern jax emits source_end_line/... attributes
+    # the 0.5.1 text parser rejects.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_layer_fn(fn, in_shape) -> str:
+    spec = jax.ShapeDtypeStruct((BATCH, *in_shape), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter cache
+# ---------------------------------------------------------------------------
+
+
+def _params_path(out_dir: str, net: str) -> str:
+    return os.path.join(out_dir, f".params_{net}.npz")
+
+
+def save_params(path: str, params: List[Dict[str, Any]]) -> None:
+    flat = {f"{i}/{k}": np.asarray(v) for i, p in enumerate(params) for k, v in p.items()}
+    flat["__len__"] = np.asarray(len(params))
+    np.savez(path, **flat)
+
+
+def load_params(path: str) -> List[Dict[str, Any]]:
+    data = np.load(path)
+    n = int(data["__len__"])
+    params: List[Dict[str, Any]] = [{} for _ in range(n)]
+    for key in data.files:
+        if key == "__len__":
+            continue
+        i, name = key.split("/", 1)
+        params[int(i)][name] = jnp.asarray(data[key])
+    return params
+
+
+def get_trained_params(out_dir: str, net: str, force: bool = False):
+    path = _params_path(out_dir, net)
+    if not force and os.path.exists(path):
+        print(f"[aot] using cached params {path}")
+        return load_params(path)
+    params, acc = train.train(net)
+    if acc < 0.8:
+        raise RuntimeError(
+            f"{net} trained to only {acc:.3f} accuracy; synthetic dataset or "
+            "training schedule regressed — refusing to emit artifacts"
+        )
+    save_params(path, params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Expected accuracy table (oracle path; rust cross-checks via PJRT)
+# ---------------------------------------------------------------------------
+
+
+def eval_accuracy(net, params, x, y, quant_dict=None, quant_upto=0) -> float:
+    probs = model.forward(
+        net, params, x, use_kernels=False, quant=quant_dict, quant_upto=quant_upto
+    )
+    return float(jnp.mean(jnp.argmax(probs, axis=-1) == y))
+
+
+def expected_accuracies(net, params, quant_dict, x, y) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"fp32": eval_accuracy(net, params, x, y)}
+    if net == "vgg16":
+        # int8_prefix[k] = accuracy when layers < k run quantized (the head
+        # on the edge TPU) and the rest fp32 — the Fig. 2e sweep.
+        out["int8_prefix"] = [
+            eval_accuracy(net, params, x, y, quant_dict, quant_upto=k)
+            for k in range(model.num_layers(net) + 1)
+        ]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Artifact emission
+# ---------------------------------------------------------------------------
+
+
+def emit_network(out_dir: str, net: str, params, quant_dict) -> List[Dict[str, Any]]:
+    """Lower every layer (and int8 variants for VGG) to HLO text files."""
+    metas = model.metas(net)
+    entries = []
+    for meta in metas:
+        i = meta.index
+        rel_fp32 = f"{net}/fp32/layer_{i:02d}.hlo.txt"
+        path = os.path.join(out_dir, rel_fp32)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        t0 = time.time()
+
+        def fp32_fn(x, _i=i):
+            return model.apply_layer(net, params, _i, x, use_kernels=True)
+
+        with open(path, "w") as f:
+            f.write(lower_layer_fn(fp32_fn, meta.in_shape))
+        entry: Dict[str, Any] = {
+            "index": i,
+            "name": meta.name,
+            "kind": meta.kind,
+            "in_shape": list(meta.in_shape),
+            "out_shape": list(meta.out_shape),
+            "out_bytes": meta.out_bytes,
+            "macs": meta.macs,
+            "quantizable": meta.quantizable,
+            "fp32": rel_fp32,
+        }
+        if net == "vgg16" and meta.quantizable:
+            rel_int8 = f"{net}/int8/layer_{i:02d}.hlo.txt"
+            p8 = os.path.join(out_dir, rel_int8)
+            os.makedirs(os.path.dirname(p8), exist_ok=True)
+
+            def int8_fn(x, _i=i):
+                return model.apply_layer(
+                    net, params, _i, x, use_kernels=True, quant=quant_dict
+                )
+
+            with open(p8, "w") as f:
+                f.write(lower_layer_fn(int8_fn, meta.in_shape))
+            entry["int8"] = rel_int8
+        print(f"[aot] {net} layer {i:2d} ({meta.kind:11s}) lowered in "
+              f"{time.time() - t0:.2f}s")
+        entries.append(entry)
+    return entries
+
+
+def emit_eval_set(out_dir: str) -> Dict[str, Any]:
+    x, y = model.make_dataset(EVAL_COUNT, seed=EVAL_SEED)
+    xi = np.asarray(x, dtype="<f4")
+    yi = np.asarray(y, dtype=np.uint8)
+    with open(os.path.join(out_dir, "eval_images.bin"), "wb") as f:
+        f.write(xi.tobytes())
+    with open(os.path.join(out_dir, "eval_labels.bin"), "wb") as f:
+        f.write(yi.tobytes())
+    return {
+        "images": "eval_images.bin",
+        "labels": "eval_labels.bin",
+        "count": EVAL_COUNT,
+        "seed": EVAL_SEED,
+    }
+
+
+def build(out_dir: str, force_train: bool = False) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    eval_info = emit_eval_set(out_dir)
+    ex, ey = model.make_dataset(EVAL_COUNT, seed=EVAL_SEED)
+
+    manifest: Dict[str, Any] = {
+        "version": MANIFEST_VERSION,
+        "batch": BATCH,
+        "img": model.IMG,
+        "classes": model.NUM_CLASSES,
+        "eval": eval_info,
+        "networks": {},
+    }
+    for net in model.NETWORKS:
+        params = get_trained_params(out_dir, net, force=force_train)
+        quant_dict = quant.build_vgg_quant(params) if net == "vgg16" else None
+        layers = emit_network(out_dir, net, params, quant_dict)
+        manifest["networks"][net] = {
+            "num_layers": model.num_layers(net),
+            "layers": layers,
+            "expected_accuracy": expected_accuracies(net, params, quant_dict, ex, ey),
+        }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written to {out_dir}/manifest.json")
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# §Perf structural report (VMEM footprint / MXU utilization estimate)
+# ---------------------------------------------------------------------------
+
+
+def report() -> None:
+    print("L1 kernel structural report (real-TPU estimate; see DESIGN.md §Perf)")
+    print(f"{'layer':24s} {'matmul MxKxN':>20s} {'VMEM/tile':>10s} {'MXU util':>9s}")
+    for net in model.NETWORKS:
+        for meta in model.metas(net):
+            dims = None
+            if meta.kind == "conv":
+                h, w, c = meta.in_shape
+                dims = (BATCH * h * w, 9 * c, meta.out_shape[-1])
+            elif meta.kind in ("fc", "predictions", "pre_logits", "head", "embed"):
+                m = BATCH * (meta.in_shape[0] if len(meta.in_shape) > 1 else 1)
+                dims = (m, meta.in_shape[-1], meta.out_shape[-1])
+            if dims is None:
+                continue
+            m, k, n = dims
+            vmem = mm_k.vmem_tile_bytes(k)
+            # MXU fp32 utilization per 128x128 tile: fraction of the
+            # systolic array covered by the (possibly padded) operand tile.
+            util = min(1.0, k / 128.0) * min(1.0, n / 128.0)
+            print(f"{net+'/'+meta.name:24s} {f'{m}x{k}x{n}':>20s} "
+                  f"{vmem/1024:>8.1f}Ki {util*100:>8.1f}%")
+    s, d = model.VIT_SEQ, model.VIT_HDIM
+    print(f"attention tile: S={s} d={d} VMEM/step="
+          f"{attn_k.vmem_tile_bytes(s, d)/1024:.1f}Ki")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force-train", action="store_true",
+                    help="retrain even if cached params exist")
+    ap.add_argument("--report", action="store_true",
+                    help="print the §Perf structural report and exit")
+    args = ap.parse_args()
+    if args.report:
+        report()
+        return
+    t0 = time.time()
+    build(args.out, force_train=args.force_train)
+    print(f"[aot] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so the resulting HLO
+runs on the CPU PJRT client used by the rust runtime.  Real-TPU lowering
+would emit a Mosaic custom-call that the CPU plugin cannot execute; the
+TPU efficiency story is therefore argued structurally (tile shapes, VMEM
+footprint) in DESIGN.md §Perf rather than measured in interpret mode.
+
+Kernels:
+  matmul.matmul             -- tiled f32 matmul (the MXU-shaped hot spot)
+  quant_matmul.quant_matmul -- int8-grid fake-quant matmul (edge-TPU path)
+  attention.attention       -- fused scaled-dot-product attention (ViT)
+
+ref.py holds the pure-jnp oracles used by pytest.
+
+NOTE: no function re-exports here — a package attribute named like a
+submodule (``kernels.matmul``) would shadow the submodule and break
+``import compile.kernels.matmul as mm_k`` elsewhere.
+"""

@@ -1,0 +1,90 @@
+"""Fused scaled-dot-product attention Pallas kernel (ViT blocks).
+
+One grid step processes one (batch, head) pair: the full (S, d) Q/K/V
+tiles stay VMEM-resident and the kernel fuses QK^T -> stable softmax -> PV
+in a single pass, the flash-attention structure collapsed to a single KV
+block (DynaSplit-mini sequences are 17 tokens, so one block *is* the whole
+sequence; the online-softmax recurrence would be a no-op).  The fusion is
+the point: no (S, S) score matrix ever round-trips to HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """Fused attention for a (bq, S, d) block of batch*head slices."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jax.lax.dot_general(
+        q, k,
+        (((2,), (2,)), ((0,), (0,))),  # bsd,btd->bst
+        preferred_element_type=jnp.float32,
+    ) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)  # numerically stable softmax
+    p = jnp.exp(s - m)
+    o = jax.lax.dot_general(
+        p, v,
+        (((2,), (1,)), ((0,), (0,))),  # bst,btd->bsd
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = o / jnp.sum(p, axis=-1, keepdims=True)
+
+
+# Same grid-step economics as matmul.py: the CPU interpreter charges a
+# fixed cost per grid step, so we process a block of head-slices per step
+# (<= MAX_GRID steps) instead of one slice per step.  On a real TPU the
+# natural choice is one (S, d) slice per core iteration.
+MAX_GRID = 4
+
+
+@functools.partial(jax.jit, static_argnames=("bq",))
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, bq: int | None = None
+) -> jax.Array:
+    """Multi-head attention core.
+
+    Args:
+      q, k, v: (BH, S, d) f32 — batch*heads folded into the leading dim.
+      bq: head-slices per grid step (static); None = adaptive.
+
+    Returns:
+      (BH, S, d) f32 == softmax(q k^T / sqrt(d)) v, matching
+      ``ref.attention_ref`` (pytest asserts allclose at 1e-5).
+    """
+    if q.shape != k.shape or q.shape != v.shape:
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    bh, s, d = q.shape
+    if bq is None:
+        bq = (bh + MAX_GRID - 1) // MAX_GRID
+    bq = min(bq, bh)
+    # pad leading dim to a multiple of bq
+    bhp = ((bh + bq - 1) // bq) * bq
+    if bhp != bh:
+        pad = ((0, bhp - bh), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    scale = 1.0 / (d**0.5)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(bhp // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhp, s, d), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    return out[:bh]
+
+
+def vmem_tile_bytes(s: int, d: int) -> int:
+    """VMEM bytes per grid step: Q,K,V,O tiles + the fused (S,S) scores."""
+    return 4 * (4 * s * d + s * s)

@@ -1,0 +1,121 @@
+"""Tiled matmul Pallas kernel — the MXU-shaped compute hot spot.
+
+DynaSplit's per-layer compute (conv-as-im2col, FC layers, attention
+projections) all bottoms out in a dense ``(M, K) @ (K, N)`` matmul.  On a
+real edge TPU this is the systolic-array (MXU) workload; here the kernel
+is written with an explicit HBM->VMEM tiling schedule via BlockSpec so the
+same structure would map onto Mosaic tiles, and is lowered with
+``interpret=True`` for CPU-PJRT execution (see kernels/__init__.py).
+
+Tiling scheme
+-------------
+The grid iterates over (M/bm, N/bn) output tiles; the contraction (K)
+dimension is kept resident in a single block.  At DynaSplit-mini scale K
+is at most a few hundred, so one (bm, K) x (K, bn) tile pair fits VMEM
+comfortably; DESIGN.md §Perf reports the per-tile footprint.  Inputs are
+zero-padded up to tile multiples and the result is sliced back, so any
+shape is accepted.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-shape policy
+# ------------------
+# On a real TPU the output tile would be fixed at 128x128 (MXU-native, fp32
+# minimum tile 8x128; VMEM budget ~16 MiB comfortably holds the (128, K) +
+# (K, 128) operand tiles at our K <= 576).  The CPU interpreter, however,
+# charges a ~1.8 ms fixed cost *per grid step* (measured; EXPERIMENTS.md
+# §Perf), so small tiles are catastrophic there: bm=32 -> 512 steps ->
+# 811 ms for a conv matmul vs 1.1 ms single-step.  `bm=None` therefore
+# selects an adaptive row tile targeting <= MAX_GRID_ROWS steps; pass
+# bm=TPU_BM explicitly to get the Mosaic-shaped schedule.
+TPU_BM = 128
+TPU_BN = 128
+DEFAULT_BN = 128
+MAX_GRID_ROWS = 4
+
+
+def pick_bm(m_padded: int) -> int:
+    """Adaptive row-tile: at most MAX_GRID_ROWS grid steps, 8-aligned."""
+    bm = _round_up((m_padded + MAX_GRID_ROWS - 1) // MAX_GRID_ROWS, 8)
+    return min(bm, m_padded)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction, f32 accumulate."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    bm: int | None = None,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """``a @ b`` via the tiled Pallas kernel.
+
+    Args:
+      a: (M, K) f32.
+      b: (K, N) f32.
+      bm: output row tile (static); None selects the adaptive CPU policy,
+        TPU_BM gives the Mosaic-shaped 128-row schedule.
+      bn: output column tile (static).
+
+    Returns:
+      (M, N) f32, numerically equal to ``ref.matmul_ref`` (same accumulate
+      order within a tile; pytest asserts allclose at 1e-5).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm_ = pick_bm(_round_up(m, 8)) if bm is None else min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm_), _round_up(n, bn_)
+    a_p = _pad_to(a.astype(jnp.float32), mp, k)
+    b_p = _pad_to(b.astype(jnp.float32), k, np_)
+
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm_, np_ // bn_),
+        in_specs=[
+            # A tile: row-block i, all of K (K stays VMEM-resident).
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            # B tile: all of K, column-block j.
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_tile_bytes(k: int, bm: int = TPU_BM, bn: int = TPU_BN) -> int:
+    """Estimated VMEM bytes held by one grid step (A tile + B tile + out).
+
+    Used by ``aot.py --report`` for the DESIGN.md §Perf structural estimate.
+    """
+    return 4 * (bm * k + k * bn + bm * bn)

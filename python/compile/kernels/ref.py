@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth pytest compares the kernels against; they are
+also the forward path used for *training* the mini networks (autodiff
+through interpret-mode pallas_call is not supported, so training runs on
+the oracle path and the trained parameters are bound into the kernel path
+for AOT — pytest asserts both paths agree, which is the model-level
+kernel-vs-ref check).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMIN, QMAX = -127.0, 127.0
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul: plain f32 contraction."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def quantize_ref(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Oracle for kernels.quant_matmul.quantize."""
+    return jnp.clip(jnp.round(x / scale), QMIN, QMAX)
+
+
+def quant_matmul_ref(
+    x: jax.Array, w_q: jax.Array, x_scale: float, w_scale: float
+) -> jax.Array:
+    """Oracle for kernels.quant_matmul: same int8-grid fake-quant numerics."""
+    x_q = quantize_ref(x.astype(jnp.float32), x_scale)
+    return jnp.dot(
+        x_q, w_q.astype(jnp.float32), preferred_element_type=jnp.float32
+    ) * (x_scale * w_scale)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Oracle for kernels.attention: unfused softmax(q k^T / sqrt(d)) v."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bsd,btd->bst", q, k) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v)

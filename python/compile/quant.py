@@ -1,0 +1,63 @@
+"""Post-training quantization for the VGG16 edge-TPU path.
+
+Mirrors the paper's LiteRT flow (§5): weights are frozen to the int8 grid
+offline; activation scales come from calibration over 100 images (the
+paper uses 100 random ImageNet validation images, we use 100 synthetic
+ones).  The resulting per-layer dict plugs into
+``model.vgg_apply_layer(..., quant=...)``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+import compile.kernels.quant_matmul as qmm
+import compile.kernels.ref as ref
+
+CALIB_IMAGES = 100
+
+
+def calibrate_vgg(
+    params: List[Dict[str, Any]], calib_x: jax.Array
+) -> Dict[int, float]:
+    """Per-layer activation scales from an fp32 calibration pass.
+
+    The scale for layer ``i`` covers the *input* activation of that layer
+    (what ``quant_matmul`` snaps at runtime): symmetric max-abs over the
+    calibration batch, mapped onto the int8 grid.
+    """
+    scales: Dict[int, float] = {}
+    x = calib_x
+    for i in range(model.num_layers("vgg16")):
+        if model.VGG_PLAN[i][0] in ("conv", "fc", "predictions"):
+            scales[i] = float(jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0)
+        x = model.vgg_apply_layer(params, i, x, use_kernels=False)
+    return scales
+
+
+def quantize_vgg(
+    params: List[Dict[str, Any]], act_scales: Dict[int, float]
+) -> Dict[int, Dict[str, Any]]:
+    """Freeze conv/fc weights to integer-valued f32 on the int8 grid."""
+    quant: Dict[int, Dict[str, Any]] = {}
+    for i, (kind, _) in enumerate(model.VGG_PLAN):
+        if kind not in ("conv", "fc", "predictions"):
+            continue
+        w = params[i]["w"]
+        w_scale = float(qmm.scale_for(w))
+        quant[i] = {
+            "w_q": ref.quantize_ref(w, w_scale),
+            "w_scale": w_scale,
+            "x_scale": act_scales[i],
+        }
+    return quant
+
+
+def build_vgg_quant(params: List[Dict[str, Any]], seed: int = 7):
+    """Calibrate + quantize in one step (the offline §4.2.2 preparation)."""
+    calib_x, _ = model.make_dataset(CALIB_IMAGES, seed=seed)
+    return quantize_vgg(params, calibrate_vgg(params, calib_x))

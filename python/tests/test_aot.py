@@ -1,0 +1,108 @@
+"""AOT pipeline checks: lowering, parameter cache, accuracy table."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, quant
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params("vgg16")
+
+
+def test_to_hlo_text_is_parseable_hlo(params):
+    def fn(x):
+        return model.apply_layer("vgg16", params, 0, x, use_kernels=True)
+
+    text = aot.lower_layer_fn(fn, (32, 32, 3))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: the root must be a tuple
+    assert "tuple(" in text
+
+
+def test_lowered_layer_executes_like_python(params):
+    """Execute the lowered HLO via jax and compare to direct execution —
+    the python-side half of the AOT round-trip (rust is the other half)."""
+    def fn(x):
+        return model.apply_layer("vgg16", params, 19, x, use_kernels=True)
+
+    x = jnp.ones((aot.BATCH, 64), jnp.float32) * 0.1
+    direct = fn(x)
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct(x.shape, x.dtype))
+    out = lowered.compile()(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct), rtol=1e-6)
+
+
+def test_param_cache_roundtrip(tmp_path, params):
+    path = str(tmp_path / "params.npz")
+    aot.save_params(path, params)
+    loaded = aot.load_params(path)
+    assert len(loaded) == len(params)
+    for a, b in zip(params, loaded):
+        assert set(a.keys()) == set(b.keys())
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_eval_accuracy_perfect_and_chance(params):
+    x, y = model.make_dataset(32, seed=1)
+    acc = aot.eval_accuracy("vgg16", params, x, y)
+    assert 0.0 <= acc <= 1.0  # untrained net: anything goes, but bounded
+
+
+def test_expected_accuracies_shape(params):
+    q = quant.build_vgg_quant(params)
+    x, y = model.make_dataset(32, seed=2)
+    table = aot.expected_accuracies("vgg16", params, q, x, y)
+    assert "fp32" in table
+    assert len(table["int8_prefix"]) == 23
+    assert table["int8_prefix"][0] == table["fp32"]  # k=0 quantizes nothing
+
+
+def test_emit_eval_set_binary_format(tmp_path):
+    info = aot.emit_eval_set(str(tmp_path))
+    imgs = np.fromfile(tmp_path / info["images"], dtype="<f4")
+    labels = np.fromfile(tmp_path / info["labels"], dtype=np.uint8)
+    assert imgs.shape[0] == info["count"] * model.IMG * model.IMG * 3
+    assert labels.shape[0] == info["count"]
+    assert labels.max() < model.NUM_CLASSES
+    # determinism: regenerating produces identical bytes
+    info2 = aot.emit_eval_set(str(tmp_path))
+    imgs2 = np.fromfile(tmp_path / info2["images"], dtype="<f4")
+    np.testing.assert_array_equal(imgs, imgs2)
+
+
+def test_quant_scales_positive(params):
+    q = quant.build_vgg_quant(params)
+    for entry in q.values():
+        assert entry["w_scale"] > 0
+        assert entry["x_scale"] > 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_consistent_with_model():
+    import json
+
+    with open(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")) as f:
+        man = json.load(f)
+    assert man["batch"] == aot.BATCH
+    for net in model.NETWORKS:
+        entry = man["networks"][net]
+        metas = model.metas(net)
+        assert entry["num_layers"] == len(metas)
+        for lm, lj in zip(metas, entry["layers"]):
+            assert list(lm.in_shape) == lj["in_shape"], (net, lm.index)
+            assert list(lm.out_shape) == lj["out_shape"], (net, lm.index)
+            assert lm.macs == lj["macs"], (net, lm.index)
+            # every artifact file referenced must exist
+            p = os.path.join(os.path.dirname(__file__), "../../artifacts", lj["fp32"])
+            assert os.path.exists(p), p

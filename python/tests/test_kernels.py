@@ -1,0 +1,192 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes (and tile parameters) for each Pallas kernel and
+asserts allclose against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels.attention as attn_k
+import compile.kernels.matmul as mm_k
+import compile.kernels.quant_matmul as qmm_k
+import compile.kernels.ref as ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 80),
+    n=st.integers(1, 72),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    got = mm_k.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_tile_invariance(bm, bn, seed):
+    """Result must not depend on the tile decomposition."""
+    a = _rand(seed, (40, 24))
+    b = _rand(seed + 1, (24, 36))
+    got = mm_k.matmul(a, b, bm=bm, bn=bn)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.ones((4, 5))
+    with pytest.raises(ValueError):
+        mm_k.matmul(a, jnp.ones((6, 3)))
+    with pytest.raises(ValueError):
+        mm_k.matmul(jnp.ones((4,)), jnp.ones((4, 3)))
+
+
+def test_matmul_conv_shape():
+    """The exact im2col shape the VGG conv layers produce."""
+    a = _rand(0, (16 * 32 * 32, 144))
+    b = _rand(1, (144, 16))
+    np.testing.assert_allclose(
+        np.asarray(mm_k.matmul(a, b)), np.asarray(ref.matmul_ref(a, b)),
+        rtol=1e-5, atol=1e-4,
+    )
+
+
+def test_pick_bm_bounds():
+    for m in (8, 16, 100, 512, 16384):
+        mp = ((m + 7) // 8) * 8
+        bm = mm_k.pick_bm(mp)
+        assert 1 <= bm <= mp
+        assert bm % 8 == 0 or bm == mp
+        assert (mp + bm - 1) // bm <= mm_k.MAX_GRID_ROWS + 1
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    w_scale = float(qmm_k.scale_for(w))
+    w_q = ref.quantize_ref(w, w_scale)
+    x_scale = float(qmm_k.scale_for(x))
+    got = qmm_k.quant_matmul(x, w_q, x_scale, w_scale)
+    want = ref.quant_matmul_ref(x, w_q, x_scale, w_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_quantize_grid_is_int8(seed):
+    x = _rand(seed, (17, 9)) * 10.0
+    s = float(qmm_k.scale_for(x))
+    q = np.asarray(qmm_k.quantize(x, s))
+    assert np.all(q == np.round(q)), "values must sit on the integer grid"
+    assert q.min() >= -127 and q.max() <= 127
+
+
+def test_quant_error_bounded():
+    """Dequantized product error is bounded by the quantization step."""
+    x = _rand(3, (32, 16))
+    w = _rand(4, (16, 8))
+    w_scale = float(qmm_k.scale_for(w))
+    x_scale = float(qmm_k.scale_for(x))
+    w_q = ref.quantize_ref(w, w_scale)
+    got = np.asarray(qmm_k.quant_matmul(x, w_q, x_scale, w_scale))
+    exact = np.asarray(ref.matmul_ref(x, w))
+    # error per term <= 0.5*x_scale*|w| + 0.5*w_scale*|x| (+ cross term)
+    bound = (
+        0.5 * x_scale * np.abs(np.asarray(w)).sum(0)
+        + 0.5 * w_scale * np.abs(np.asarray(x)).sum(1)[:, None]
+        + 0.25 * x_scale * w_scale * w.shape[0]
+    )
+    assert np.all(np.abs(got - exact) <= bound + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 24),
+    s=st.integers(1, 24),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(bh, s, d, seed):
+    q = _rand(seed, (bh, s, d))
+    k = _rand(seed + 1, (bh, s, d))
+    v = _rand(seed + 2, (bh, s, d))
+    got = attn_k.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(bq=st.sampled_from([1, 2, 3, 8]), seed=st.integers(0, 2**16))
+def test_attention_block_invariance(bq, seed):
+    q = _rand(seed, (8, 17, 16))
+    k = _rand(seed + 1, (8, 17, 16))
+    v = _rand(seed + 2, (8, 17, 16))
+    got = attn_k.attention(q, k, v, bq=bq)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_softmax_rows_sum_to_one():
+    """With v = identity-ish stack, attention returns convex combinations."""
+    q = _rand(0, (4, 9, 8))
+    k = _rand(1, (4, 9, 8))
+    v = jnp.ones((4, 9, 8), jnp.float32)
+    out = np.asarray(attn_k.attention(q, k, v))
+    np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-5)
+
+
+def test_attention_large_logits_stable():
+    """The fused softmax must be max-subtracted (no overflow at 1e4 scale)."""
+    q = _rand(0, (2, 5, 4)) * 100.0
+    k = _rand(1, (2, 5, 4)) * 100.0
+    v = _rand(2, (2, 5, 4))
+    out = np.asarray(attn_k.attention(q, k, v))
+    assert np.all(np.isfinite(out))
+    want = np.asarray(ref.attention_ref(q, k, v))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        attn_k.attention(jnp.ones((2, 3, 4)), jnp.ones((2, 3, 4)), jnp.ones((2, 3, 5)))

@@ -1,0 +1,197 @@
+"""L2 model checks: topology, shapes, kernel-path equivalence, quantization."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, quant
+
+
+@pytest.fixture(scope="module")
+def small_batch():
+    return model.make_dataset(4, seed=5)
+
+
+@pytest.fixture(scope="module", params=model.NETWORKS)
+def net(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    return {n: model.init_params(n) for n in model.NETWORKS}
+
+
+# ---------------------------------------------------------------------------
+# Topology (the paper's split-point counts are load-bearing: Table 1)
+# ---------------------------------------------------------------------------
+
+
+def test_vgg_has_22_layers():
+    assert model.num_layers("vgg16") == 22  # split points 0..22
+
+
+def test_vit_has_19_layers():
+    assert model.num_layers("vit") == 19  # split points 0..19
+
+
+def test_vgg_plan_matches_keras_structure():
+    kinds = [k for k, _ in model.VGG_PLAN]
+    assert kinds.count("conv") == 13
+    assert kinds.count("pool") == 5
+    assert kinds.count("fc") == 2
+    assert kinds.count("flatten") == 1
+    assert kinds.count("predictions") == 1
+
+
+def test_vit_block_count():
+    kinds = [m.kind for m in model.vit_metas()]
+    assert kinds.count("block") == 12
+
+
+# ---------------------------------------------------------------------------
+# Metadata consistency (drives the manifest and the L3 cost model)
+# ---------------------------------------------------------------------------
+
+
+def test_metas_chain_shapes(net, params_cache, small_batch):
+    x, _ = small_batch
+    params = params_cache[net]
+    for m in model.metas(net):
+        assert tuple(x.shape[1:]) == m.in_shape, (net, m.index)
+        x = model.apply_layer(net, params, m.index, x)
+        assert tuple(x.shape[1:]) == m.out_shape, (net, m.index)
+
+
+def test_metas_out_bytes(net):
+    for m in model.metas(net):
+        assert m.out_bytes == 4 * int(np.prod(m.out_shape))
+
+
+def test_metas_macs_positive_for_compute_layers(net):
+    for m in model.metas(net):
+        if m.kind in ("conv", "fc", "predictions", "block", "embed"):
+            assert m.macs > 0, m.name
+
+
+def test_vgg_intermediate_sizes_nonmonotonic():
+    """Paper finding (iii): intermediate output sizes vary significantly,
+    and early conv outputs are *larger* than the input."""
+    metas = model.vgg_metas()
+    input_bytes = 4 * model.IMG * model.IMG * 3
+    assert metas[0].out_bytes > input_bytes
+    sizes = [m.out_bytes for m in metas]
+    assert any(sizes[i] < sizes[i + 1] for i in range(len(sizes) - 1))
+    assert any(sizes[i] > sizes[i + 1] for i in range(len(sizes) - 1))
+
+
+# ---------------------------------------------------------------------------
+# Kernel path == oracle path (the model-level kernel-vs-ref signal)
+# ---------------------------------------------------------------------------
+
+
+def test_forward_kernel_path_matches_oracle(net, params_cache, small_batch):
+    x, _ = small_batch
+    params = params_cache[net]
+    o_ref = model.forward(net, params, x, use_kernels=False)
+    o_k = model.forward(net, params, x, use_kernels=True)
+    np.testing.assert_allclose(
+        np.asarray(o_ref), np.asarray(o_k), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_forward_outputs_probabilities(net, params_cache, small_batch):
+    x, _ = small_batch
+    probs = np.asarray(model.forward(net, params_cache[net], x))
+    assert probs.shape == (4, model.NUM_CLASSES)
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+    assert np.all(probs >= 0)
+
+
+def test_per_layer_composition_equals_forward(net, params_cache, small_batch):
+    """Composing apply_layer over all layers == forward (split correctness)."""
+    x, _ = small_batch
+    params = params_cache[net]
+    full = model.forward(net, params, x)
+    step = x
+    for i in range(model.num_layers(net)):
+        step = model.apply_layer(net, params, i, step)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (edge-TPU path)
+# ---------------------------------------------------------------------------
+
+
+def test_quant_covers_parametric_layers(params_cache):
+    q = quant.build_vgg_quant(params_cache["vgg16"])
+    kinds = {i: k for i, (k, _) in enumerate(model.VGG_PLAN)}
+    for i, kind in kinds.items():
+        if kind in ("conv", "fc", "predictions"):
+            assert i in q, f"layer {i} ({kind}) missing from quant dict"
+        else:
+            assert i not in q
+
+
+def test_quant_weights_on_grid(params_cache):
+    q = quant.build_vgg_quant(params_cache["vgg16"])
+    for i, entry in q.items():
+        w_q = np.asarray(entry["w_q"])
+        assert np.all(w_q == np.round(w_q)), f"layer {i} weights off-grid"
+        assert np.abs(w_q).max() <= 127
+        assert entry["w_scale"] > 0 and entry["x_scale"] > 0
+
+
+def test_quant_forward_close_to_fp32(params_cache, small_batch):
+    """Quantized probabilities stay near fp32 (paper: sub-percent accuracy)."""
+    x, _ = small_batch
+    params = params_cache["vgg16"]
+    q = quant.build_vgg_quant(params)
+    p_fp = np.asarray(model.forward("vgg16", params, x))
+    p_q = np.asarray(
+        model.forward("vgg16", params, x, quant=q, quant_upto=22)
+    )
+    assert np.abs(p_fp - p_q).max() < 0.25  # distributions stay close
+    # prefix composition: quant_upto=0 must be exactly fp32
+    p_q0 = np.asarray(model.forward("vgg16", params, x, quant=q, quant_upto=0))
+    np.testing.assert_allclose(p_fp, p_q0, rtol=1e-6)
+
+
+def test_quant_prefix_monotone_composition(params_cache, small_batch):
+    """quant_upto=k must equal running k quantized layers then fp32 rest."""
+    x, _ = small_batch
+    params = params_cache["vgg16"]
+    q = quant.build_vgg_quant(params)
+    k = 7
+    mixed = model.forward("vgg16", params, x, quant=q, quant_upto=k)
+    step = x
+    for i in range(model.num_layers("vgg16")):
+        step = model.vgg_apply_layer(
+            params, i, step, quant=q if i < k else None
+        )
+    np.testing.assert_allclose(np.asarray(mixed), np.asarray(step), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dataset
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_deterministic():
+    x1, y1 = model.make_dataset(16, seed=3)
+    x2, y2 = model.make_dataset(16, seed=3)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_dataset_seed_sensitivity():
+    x1, _ = model.make_dataset(16, seed=3)
+    x2, _ = model.make_dataset(16, seed=4)
+    assert not np.allclose(np.asarray(x1), np.asarray(x2))
+
+
+def test_dataset_labels_in_range():
+    _, y = model.make_dataset(64, seed=0)
+    y = np.asarray(y)
+    assert y.min() >= 0 and y.max() < model.NUM_CLASSES

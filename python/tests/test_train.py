@@ -1,0 +1,47 @@
+"""Training-loop checks (kept light: a handful of steps, no convergence)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, train
+
+
+def test_cross_entropy_known_values():
+    probs = jnp.array([[0.5, 0.5], [0.9, 0.1]], jnp.float32)
+    labels = jnp.array([0, 0])
+    ce = float(train.cross_entropy(probs, labels))
+    expected = -(np.log(0.5) + np.log(0.9)) / 2.0
+    assert abs(ce - expected) < 1e-6
+
+
+def test_cross_entropy_clips_zeros():
+    probs = jnp.array([[1.0, 0.0]], jnp.float32)
+    labels = jnp.array([1])
+    assert np.isfinite(float(train.cross_entropy(probs, labels)))
+
+
+def test_adam_update_moves_against_gradient():
+    p = jnp.array(1.0)
+    g = jnp.array(2.0)  # positive gradient: p must decrease
+    m = jnp.zeros(())
+    v = jnp.zeros(())
+    p2, m2, v2 = train._adam_update(p, g, m, v, step=1, lr=0.1)
+    assert float(p2) < float(p)
+    assert float(m2) != 0.0 and float(v2) != 0.0
+
+
+def test_few_steps_reduce_loss_vit():
+    """A handful of steps on the (fast) ViT must reduce the loss."""
+    params = model.init_params("vit")
+    x, y = model.make_dataset(64, seed=0)
+    before = float(train._loss(params, "vit", x, y))
+    trained, _ = train.train("vit", steps=25, batch=32, verbose=False)
+    after = float(train._loss(trained, "vit", x, y))
+    assert after < before, f"{before} -> {after}"
+
+
+def test_accuracy_helper_bounds():
+    params = model.init_params("vit")
+    x, y = model.make_dataset(32, seed=3)
+    acc = train.accuracy("vit", params, x, y)
+    assert 0.0 <= acc <= 1.0

@@ -1,0 +1,152 @@
+//! Algorithm 1 — Request Scheduling and Configuration (paper §4.3.1).
+//!
+//! Input: the non-dominated configuration set sorted by (energy asc,
+//! accuracy desc), and the request's QoS level (max latency, ms).
+//! Output: the most energy-efficient configuration satisfying the QoS,
+//! or — if none satisfies it — the fastest available configuration, so
+//! the violation is minimized.  O(n) per request.
+
+use crate::solver::ParetoEntry;
+
+/// The paper's sort criteria for the non-dominated set: ascending energy,
+/// then descending accuracy (§4.3.1).
+pub fn sort_config_set(entries: &mut [ParetoEntry]) {
+    entries.sort_by(|a, b| {
+        a.energy_j
+            .partial_cmp(&b.energy_j)
+            .unwrap()
+            .then(b.accuracy.partial_cmp(&a.accuracy).unwrap())
+    });
+}
+
+/// Algorithm 1, line-for-line.
+pub fn select<'a>(sorted: &'a [ParetoEntry], qos_ms: f64) -> &'a ParetoEntry {
+    assert!(!sorted.is_empty(), "empty configuration set");
+    let mut config = &sorted[0]; // line 1
+    for entry in sorted {
+        // lines 2-5
+        if entry.latency_ms <= qos_ms {
+            return entry;
+        }
+        // lines 6-8
+        if entry.latency_ms < config.latency_ms {
+            config = entry;
+        }
+    }
+    config // line 10
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Config as PropConfig};
+    use crate::space::{Config, Network, TpuMode};
+
+    fn entry(latency: f64, energy: f64, accuracy: f64) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: false,
+                split: 22,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy,
+        }
+    }
+
+    fn sorted(entries: Vec<ParetoEntry>) -> Vec<ParetoEntry> {
+        let mut e = entries;
+        sort_config_set(&mut e);
+        e
+    }
+
+    #[test]
+    fn sort_by_energy_then_accuracy() {
+        let e = sorted(vec![
+            entry(1.0, 5.0, 0.9),
+            entry(2.0, 3.0, 0.8),
+            entry(3.0, 3.0, 0.95),
+        ]);
+        assert_eq!(e[0].accuracy, 0.95); // energy 3, higher accuracy first
+        assert_eq!(e[1].accuracy, 0.8);
+        assert_eq!(e[2].energy_j, 5.0);
+    }
+
+    #[test]
+    fn picks_most_energy_efficient_satisfying_qos() {
+        let e = sorted(vec![
+            entry(400.0, 2.0, 0.95), // frugal but slow
+            entry(100.0, 60.0, 0.95), // fast but hungry
+        ]);
+        // QoS 500 ms: the frugal one satisfies it and wins.
+        assert_eq!(select(&e, 500.0).energy_j, 2.0);
+        // QoS 200 ms: only the fast one satisfies it.
+        assert_eq!(select(&e, 200.0).energy_j, 60.0);
+    }
+
+    #[test]
+    fn falls_back_to_fastest_when_unsatisfiable() {
+        let e = sorted(vec![
+            entry(400.0, 2.0, 0.95),
+            entry(150.0, 60.0, 0.95),
+            entry(300.0, 30.0, 0.95),
+        ]);
+        // QoS 50 ms: nothing satisfies it -> fastest (150 ms).
+        assert_eq!(select(&e, 50.0).latency_ms, 150.0);
+    }
+
+    #[test]
+    fn single_entry_set() {
+        let e = sorted(vec![entry(100.0, 1.0, 0.9)]);
+        assert_eq!(select(&e, 1.0).latency_ms, 100.0);
+        assert_eq!(select(&e, 1000.0).latency_ms, 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty configuration set")]
+    fn empty_set_panics() {
+        select(&[], 100.0);
+    }
+
+    #[test]
+    fn algorithm1_invariants() {
+        forall("algorithm1", PropConfig::default(), |rng| {
+            let n = 1 + rng.below(20) as usize;
+            let entries: Vec<ParetoEntry> = (0..n)
+                .map(|_| {
+                    entry(
+                        rng.uniform(50.0, 5000.0),
+                        rng.uniform(1.0, 100.0),
+                        rng.uniform(0.9, 1.0),
+                    )
+                })
+                .collect();
+            let e = sorted(entries);
+            let qos = rng.uniform(10.0, 6000.0);
+            let picked = select(&e, qos);
+            let satisfiable: Vec<&ParetoEntry> =
+                e.iter().filter(|x| x.latency_ms <= qos).collect();
+            if satisfiable.is_empty() {
+                // fallback: must be the globally fastest
+                let fastest =
+                    e.iter().map(|x| x.latency_ms).fold(f64::INFINITY, f64::min);
+                anyhow::ensure!(picked.latency_ms == fastest, "not fastest fallback");
+            } else {
+                // must satisfy QoS with minimal energy among satisfiers
+                anyhow::ensure!(picked.latency_ms <= qos, "violates satisfiable QoS");
+                let min_e = satisfiable
+                    .iter()
+                    .map(|x| x.energy_j)
+                    .fold(f64::INFINITY, f64::min);
+                anyhow::ensure!(
+                    picked.energy_j <= min_e + 1e-12,
+                    "not the most energy-efficient satisfier"
+                );
+            }
+            Ok(())
+        });
+    }
+}

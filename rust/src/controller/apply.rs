@@ -1,0 +1,204 @@
+//! Configuration application (§4.3.2) and its overhead model (Fig. 15b).
+//!
+//! Applying a configuration means adjusting the *edge* node (DVFS write,
+//! TPU power/runtime switch, head-model load) and — for split/cloud
+//! execution — sending the cloud an initialization message (tail network
+//! + GPU flag).  Each action only costs time when the relevant state
+//! actually changes, so repeated requests with similar configurations
+//! are cheap — this is what produces the paper's Fig. 15b distribution
+//! (most applies < 200 ms, medians < 150 ms, occasional ~500 ms outliers
+//! when everything must change at once).
+//!
+//! The costs are modeled (we have no RPi to syscall into); each constant
+//! is documented with its real-world source.
+
+use crate::space::{Config, Network, TpuMode};
+use crate::util::rng::Pcg32;
+
+/// Modeled costs of the individual apply actions (milliseconds).
+pub mod cost {
+    /// Writing scaling_setspeed under the userspace governor: a sysfs
+    /// write + PLL relock, ~10 ms on the RPi 4.
+    pub const DVFS_MS: f64 = 10.0;
+    /// Toggling the TPU's USB port power + libedgetpu runtime init (std ↔
+    /// max even needs a library swap, §6.1): dominant apply cost.
+    pub const TPU_TOGGLE_MS: f64 = 120.0;
+    /// Switching the TPU frequency (std <-> max): runtime re-init only.
+    pub const TPU_FREQ_MS: f64 = 60.0;
+    /// (Re)loading a head model on the edge (mmap + TPU program upload).
+    pub const HEAD_LOAD_MS: f64 = 40.0;
+    /// Cloud init message round trip + tail model (re)load cloud-side.
+    pub const CLOUD_INIT_MS: f64 = 30.0;
+    /// Lognormal sigma of apply-time jitter (gives Fig. 15b's outliers).
+    pub const JITTER_SIGMA: f64 = 0.35;
+}
+
+/// The edge/cloud state the controller tracks between requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppliedState {
+    pub cpu_idx: Option<usize>,
+    pub tpu: Option<TpuMode>,
+    /// (network, split) of the loaded head model, if any.
+    pub head: Option<(Network, usize)>,
+    /// (network, split, gpu) the cloud was last initialized with.
+    pub cloud: Option<(Network, usize, bool)>,
+}
+
+impl AppliedState {
+    /// Fresh boot: nothing configured yet.
+    pub fn cold() -> AppliedState {
+        AppliedState { cpu_idx: None, tpu: None, head: None, cloud: None }
+    }
+}
+
+/// Applies configurations, tracking state and charging modeled overhead.
+#[derive(Debug, Clone)]
+pub struct Applier {
+    pub state: AppliedState,
+}
+
+impl Default for Applier {
+    fn default() -> Self {
+        Applier { state: AppliedState::cold() }
+    }
+}
+
+impl Applier {
+    /// Apply `config`; returns the modeled overhead in ms.
+    pub fn apply(&mut self, config: &Config, rng: &mut Pcg32) -> f64 {
+        let mut ms = 0.0;
+
+        // --- DVFS (§4.3.2: "first adjusts both the CPU and TPU freqs") ---
+        if self.state.cpu_idx != Some(config.cpu_idx) {
+            ms += cost::DVFS_MS;
+            self.state.cpu_idx = Some(config.cpu_idx);
+        }
+        // --- TPU mode ---
+        if self.state.tpu != Some(config.tpu) {
+            let was_off = matches!(self.state.tpu, Some(TpuMode::Off) | None);
+            let now_off = config.tpu == TpuMode::Off;
+            ms += if was_off != now_off { cost::TPU_TOGGLE_MS } else { cost::TPU_FREQ_MS };
+            self.state.tpu = Some(config.tpu);
+        }
+        // --- head model (loaded when not previously in use) ---
+        if config.split > 0 {
+            let head = (config.net, config.split);
+            if self.state.head != Some(head) {
+                ms += cost::HEAD_LOAD_MS;
+                self.state.head = Some(head);
+            }
+        }
+        // --- cloud init (only when cloud computation will be used) ---
+        if !config.is_edge_only() {
+            let cloud = (config.net, config.split, config.gpu);
+            if self.state.cloud != Some(cloud) {
+                ms += cost::CLOUD_INIT_MS;
+                self.state.cloud = Some(cloud);
+            }
+        }
+        // identical configuration: nothing to do, negligible check cost
+        if ms == 0.0 {
+            return 0.2;
+        }
+        ms * rng.lognormal(0.0, cost::JITTER_SIGMA)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::feasible;
+
+    fn cfg(cpu_idx: usize, tpu: TpuMode, gpu: bool, split: usize) -> Config {
+        feasible::repair(Config { net: Network::Vgg16, cpu_idx, tpu, gpu, split })
+    }
+
+    #[test]
+    fn cold_apply_charges_everything() {
+        let mut a = Applier::default();
+        let mut rng = Pcg32::seeded(1);
+        let ms = a.apply(&cfg(3, TpuMode::Max, true, 7), &mut rng);
+        assert!(ms > 100.0, "cold apply too cheap: {ms}");
+    }
+
+    #[test]
+    fn repeat_apply_is_nearly_free() {
+        let mut a = Applier::default();
+        let mut rng = Pcg32::seeded(2);
+        let c = cfg(3, TpuMode::Max, true, 7);
+        a.apply(&c, &mut rng);
+        let ms = a.apply(&c, &mut rng);
+        assert!(ms < 1.0, "repeat apply should be ~free: {ms}");
+    }
+
+    #[test]
+    fn dvfs_only_change_is_cheap() {
+        let mut a = Applier::default();
+        let mut rng = Pcg32::seeded(3);
+        a.apply(&cfg(3, TpuMode::Max, true, 7), &mut rng);
+        // average over jitter: only the DVFS term should be charged
+        let mut total = 0.0;
+        let n = 200;
+        for i in 0..n {
+            let mut b = a.clone();
+            let mut r = Pcg32::seeded(100 + i);
+            total += b.apply(&cfg(4, TpuMode::Max, true, 7), &mut r);
+        }
+        let mean = total / n as f64;
+        assert!((5.0..25.0).contains(&mean), "DVFS-only mean {mean}");
+    }
+
+    #[test]
+    fn tpu_toggle_dearer_than_freq_switch() {
+        let mut rng = Pcg32::seeded(4);
+        let mut mean_toggle = 0.0;
+        let mut mean_freq = 0.0;
+        let n = 300;
+        for _ in 0..n {
+            let mut a = Applier::default();
+            a.apply(&cfg(3, TpuMode::Off, true, 7), &mut rng);
+            mean_toggle += a.apply(&cfg(3, TpuMode::Max, true, 7), &mut rng);
+            let mut b = Applier::default();
+            b.apply(&cfg(3, TpuMode::Std, true, 7), &mut rng);
+            mean_freq += b.apply(&cfg(3, TpuMode::Max, true, 7), &mut rng);
+        }
+        assert!(mean_toggle / n as f64 > mean_freq / n as f64);
+    }
+
+    #[test]
+    fn cloud_init_skipped_for_edge_only() {
+        let mut a = Applier::default();
+        let mut rng = Pcg32::seeded(5);
+        a.apply(&cfg(6, TpuMode::Max, false, 22), &mut rng);
+        assert_eq!(a.state.cloud, None);
+    }
+
+    #[test]
+    fn head_load_skipped_for_cloud_only() {
+        let mut a = Applier::default();
+        let mut rng = Pcg32::seeded(6);
+        a.apply(&cfg(6, TpuMode::Off, true, 0), &mut rng);
+        assert_eq!(a.state.head, None);
+    }
+
+    #[test]
+    fn fig15b_distribution_shape() {
+        // Walk over a small non-dominated-set-sized pool of configurations
+        // (the controller only ever applies ~12-15 distinct configs, §6.5):
+        // most applies < 200 ms, median < 150 ms — the Fig. 15b envelope.
+        let mut a = Applier::default();
+        let mut rng = Pcg32::seeded(7);
+        let mut samples = Vec::new();
+        let space = crate::space::Space::new(Network::Vgg16);
+        let pool: Vec<Config> = (0..13).map(|_| space.sample(&mut rng)).collect();
+        for _ in 0..400 {
+            let c = *rng.choose(&pool);
+            samples.push(a.apply(&c, &mut rng));
+        }
+        let s = crate::util::stats::Summary::of(&samples);
+        assert!(s.median < 150.0, "median {}", s.median);
+        let under200 = samples.iter().filter(|&&x| x < 200.0).count();
+        assert!(under200 as f64 / samples.len() as f64 > 0.6, "{under200}");
+        assert!(s.max > 200.0, "expect occasional expensive applies");
+    }
+}

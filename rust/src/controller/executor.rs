@@ -1,0 +1,136 @@
+//! Inference execution behind the controller (§4.3.3).
+//!
+//! [`Executor`] abstracts *how* a scheduled request is actually run:
+//!
+//! * [`SimExecutor`] — metrics come from the testbed simulator (fresh
+//!   trial) or from the observation pool (the paper's Simulation
+//!   Experiment reuses stored observations, §6.2);
+//! * `RealSplitExecutor` (in [`super::real`]) — executes a real PJRT
+//!   head on the edge thread, streams real tensors to a cloud thread
+//!   over the shaped transport, and measures wall-clock — the end-to-end
+//!   proof that all three layers compose.
+
+use crate::simulator::Testbed;
+use crate::solver::ObservationPool;
+use crate::space::Config;
+use crate::util::rng::Pcg32;
+use crate::workload::Request;
+
+/// Outcome of executing one request under a configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOutcome {
+    /// Mean end-to-end latency per inference (ms).
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    pub accuracy: f64,
+}
+
+/// Executes a request under an applied configuration.
+pub trait Executor {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome;
+}
+
+/// Simulator-backed executor.
+pub enum SimExecutor<'tb> {
+    /// Run a fresh simulated trial per request (Testbed Experiment mode).
+    Fresh { testbed: &'tb Testbed, rng: Pcg32 },
+    /// Re-sample stored observations per request (Simulation Experiment
+    /// mode, §6.2); falls back to a fresh trial for unseen configs.
+    Pool { pool: ObservationPool, testbed: &'tb Testbed, rng: Pcg32 },
+}
+
+impl<'tb> Executor for SimExecutor<'tb> {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        match self {
+            SimExecutor::Fresh { testbed, rng } => {
+                let mut r = rng.fork(request.seed);
+                let t = testbed.run_trial_n(config, request.inferences.min(1000), &mut r);
+                ExecOutcome {
+                    latency_ms: t.latency_ms,
+                    energy_j: t.energy_j,
+                    edge_energy_j: t.edge_energy_j,
+                    cloud_energy_j: t.cloud_energy_j,
+                    accuracy: t.accuracy,
+                }
+            }
+            SimExecutor::Pool { pool, testbed, rng } => {
+                let mut r = rng.fork(request.seed);
+                match pool.sample(config, &mut r) {
+                    Some(o) => ExecOutcome {
+                        latency_ms: o.latency_ms,
+                        energy_j: o.energy_j,
+                        edge_energy_j: o.edge_energy_j,
+                        cloud_energy_j: o.cloud_energy_j,
+                        accuracy: o.accuracy,
+                    },
+                    None => {
+                        // unseen config: evaluate once and memoize
+                        let t = testbed.run_trial_n(config, 200, &mut r);
+                        pool.record(&t);
+                        ExecOutcome {
+                            latency_ms: t.latency_ms,
+                            energy_j: t.energy_j,
+                            edge_energy_j: t.edge_energy_j,
+                            cloud_energy_j: t.cloud_energy_j,
+                            accuracy: t.accuracy,
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Network, TpuMode};
+
+    fn request(seed: u64) -> Request {
+        Request { id: 0, net: Network::Vgg16, qos_ms: 500.0, inferences: 100, seed }
+    }
+
+    fn config() -> Config {
+        Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Max, gpu: false, split: 22 }
+    }
+
+    #[test]
+    fn fresh_executor_produces_plausible_outcome() {
+        let tb = Testbed::synthetic();
+        let mut ex = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(1) };
+        let o = ex.execute(&request(42), &config());
+        assert!((300.0..600.0).contains(&o.latency_ms), "{}", o.latency_ms);
+        assert!(o.energy_j > 0.0 && o.accuracy > 0.5);
+    }
+
+    #[test]
+    fn pool_executor_memoizes_unseen_configs() {
+        let tb = Testbed::synthetic();
+        let mut ex = SimExecutor::Pool {
+            pool: ObservationPool::default(),
+            testbed: &tb,
+            rng: Pcg32::seeded(2),
+        };
+        ex.execute(&request(1), &config());
+        if let SimExecutor::Pool { pool, .. } = &ex {
+            assert_eq!(pool.observations(&config()).len(), 1);
+        }
+        ex.execute(&request(2), &config());
+        if let SimExecutor::Pool { pool, .. } = &ex {
+            // second execution sampled the stored observation; no growth
+            assert_eq!(pool.observations(&config()).len(), 1);
+        }
+    }
+
+    #[test]
+    fn fresh_executor_request_seed_determines_outcome() {
+        let tb = Testbed::synthetic();
+        let mut a = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(3) };
+        let mut b = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(3) };
+        let oa = a.execute(&request(7), &config());
+        let ob = b.execute(&request(7), &config());
+        assert_eq!(oa.latency_ms, ob.latency_ms);
+    }
+}

@@ -1,0 +1,210 @@
+//! The DynaSplit *Controller* — the Online Phase (§4.3).
+//!
+//! On startup it loads and sorts the non-dominated configuration set
+//! produced by the Solver; per request it (i) selects the most
+//! energy-efficient configuration meeting the QoS ([`algorithm1`]),
+//! (ii) applies it ([`apply`] — DVFS, TPU power, model loading, cloud
+//! init), and (iii) executes the inference ([`executor`]), recording the
+//! §6.2.2 metrics plus its own overheads (Fig. 15).
+
+pub mod algorithm1;
+pub mod apply;
+pub mod executor;
+pub mod real;
+
+use std::time::Instant;
+
+use crate::metrics::{MetricSet, RequestRecord};
+use crate::solver::ParetoEntry;
+use crate::util::rng::Pcg32;
+use crate::workload::Request;
+
+pub use executor::{ExecOutcome, Executor, SimExecutor};
+
+/// Startup statistics (Fig. 15 / §6.5 "loads and sorts ... only once").
+#[derive(Debug, Clone, Copy)]
+pub struct StartupStats {
+    pub load_sort_ms: f64,
+    pub config_count: usize,
+}
+
+/// The online-phase controller.
+pub struct Controller {
+    /// Non-dominated set, sorted by (energy asc, accuracy desc).
+    entries: Vec<ParetoEntry>,
+    applier: apply::Applier,
+    rng: Pcg32,
+    pub startup: StartupStats,
+}
+
+impl Controller {
+    /// Startup: sort the non-dominated set once and keep it in memory.
+    pub fn new(mut entries: Vec<ParetoEntry>, seed: u64) -> Controller {
+        assert!(!entries.is_empty(), "controller needs a non-empty configuration set");
+        let t0 = Instant::now();
+        algorithm1::sort_config_set(&mut entries);
+        let load_sort_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let config_count = entries.len();
+        Controller {
+            entries,
+            applier: apply::Applier::default(),
+            rng: Pcg32::new(seed, 7),
+            startup: StartupStats { load_sort_ms, config_count },
+        }
+    }
+
+    pub fn config_set(&self) -> &[ParetoEntry] {
+        &self.entries
+    }
+
+    /// Handle one request end to end; returns the §6.2.2 record.
+    pub fn handle<E: Executor>(&mut self, request: &Request, executor: &mut E) -> RequestRecord {
+        // (i) select — measured for Fig. 15a
+        let t0 = Instant::now();
+        let entry = algorithm1::select(&self.entries, request.qos_ms).clone();
+        let select_overhead_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        // (ii) apply — modeled overhead (Fig. 15b)
+        let apply_overhead_ms = self.applier.apply(&entry.config, &mut self.rng);
+
+        // (iii) execute
+        let outcome = executor.execute(request, &entry.config);
+
+        RequestRecord {
+            request_id: request.id,
+            qos_ms: request.qos_ms,
+            config: entry.config,
+            latency_ms: outcome.latency_ms,
+            energy_j: outcome.energy_j,
+            edge_energy_j: outcome.edge_energy_j,
+            cloud_energy_j: outcome.cloud_energy_j,
+            accuracy: outcome.accuracy,
+            select_overhead_ms,
+            apply_overhead_ms,
+        }
+    }
+
+    /// Serve a whole workload; returns the aggregated metric set.
+    pub fn serve<E: Executor>(
+        &mut self,
+        requests: &[Request],
+        executor: &mut E,
+        strategy_name: &str,
+    ) -> MetricSet {
+        let records = requests.iter().map(|r| self.handle(r, executor)).collect();
+        MetricSet::new(strategy_name, records)
+    }
+}
+
+/// A static single-configuration "controller" — the paper's four
+/// baselines (§6.2.3) always run one fixed configuration.
+pub struct StaticBaseline {
+    pub entry: ParetoEntry,
+}
+
+impl StaticBaseline {
+    pub fn serve<E: Executor>(
+        &self,
+        requests: &[Request],
+        executor: &mut E,
+        strategy_name: &str,
+    ) -> MetricSet {
+        let records = requests
+            .iter()
+            .map(|r| {
+                let outcome = executor.execute(r, &self.entry.config);
+                RequestRecord {
+                    request_id: r.id,
+                    qos_ms: r.qos_ms,
+                    config: self.entry.config,
+                    latency_ms: outcome.latency_ms,
+                    energy_j: outcome.energy_j,
+                    edge_energy_j: outcome.edge_energy_j,
+                    cloud_energy_j: outcome.cloud_energy_j,
+                    accuracy: outcome.accuracy,
+                    select_overhead_ms: 0.0,
+                    apply_overhead_ms: 0.0,
+                }
+            })
+            .collect();
+        MetricSet::new(strategy_name, records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::Testbed;
+    use crate::solver::{Solver, Strategy};
+    use crate::space::Network;
+    use crate::workload::WorkloadGen;
+
+    fn pareto() -> Vec<ParetoEntry> {
+        let mut tb = Testbed::synthetic();
+        tb.batch_per_trial = 40;
+        let mut s = Solver::new(&tb, Network::Vgg16);
+        s.batch_per_trial = 40;
+        s.run(Strategy::NsgaIII, 120, 11).pareto
+    }
+
+    #[test]
+    fn controller_serves_workload_with_high_qos_satisfaction() {
+        let entries = pareto();
+        let tb = Testbed::synthetic();
+        let mut controller = Controller::new(entries, 1);
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let mut rng = Pcg32::seeded(2);
+        let requests = gen.generate(50, &mut rng);
+        let mut ex = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(3) };
+        let metrics = controller.serve(&requests, &mut ex, "dynasplit");
+        assert_eq!(metrics.len(), 50);
+        // paper: ~90% of QoS thresholds met on average
+        assert!(
+            metrics.qos_met_fraction() > 0.75,
+            "QoS met only {:.0}%",
+            metrics.qos_met_fraction() * 100.0
+        );
+    }
+
+    #[test]
+    fn select_overhead_is_small() {
+        // Fig. 15a: selection ≤ 12 ms on an RPi3 in python; in rust it
+        // must be far below a millisecond.
+        let mut controller = Controller::new(pareto(), 4);
+        let tb = Testbed::synthetic();
+        let mut ex = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(5) };
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let mut rng = Pcg32::seeded(6);
+        let requests = gen.generate(20, &mut rng);
+        let metrics = controller.serve(&requests, &mut ex, "dynasplit");
+        for r in &metrics.records {
+            assert!(r.select_overhead_ms < 1.0, "select took {} ms", r.select_overhead_ms);
+        }
+    }
+
+    #[test]
+    fn startup_sorts_by_energy() {
+        let controller = Controller::new(pareto(), 7);
+        let set = controller.config_set();
+        assert!(set.windows(2).all(|w| w[0].energy_j <= w[1].energy_j));
+        assert_eq!(controller.startup.config_count, set.len());
+    }
+
+    #[test]
+    fn static_baseline_uses_one_config() {
+        let entries = pareto();
+        let fastest = entries
+            .iter()
+            .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+            .unwrap()
+            .clone();
+        let tb = Testbed::synthetic();
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let mut rng = Pcg32::seeded(8);
+        let requests = gen.generate(10, &mut rng);
+        let mut ex = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(9) };
+        let metrics =
+            StaticBaseline { entry: fastest.clone() }.serve(&requests, &mut ex, "latency");
+        assert!(metrics.records.iter().all(|r| r.config == fastest.config));
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig. 10 — DynaSplit's 20% search vs the ~80% grid exploration
+//! (§6.3.4): both produce non-dominated sets; the controller's behaviour
+//! under the same workload should be nearly identical.
+
+use crate::solver::{Solver, Strategy};
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::WorkloadGen;
+
+use super::testbed_exp::serve_strategies;
+use super::Ctx;
+use crate::metrics::MetricSet;
+
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub small: MetricSet,  // 20% NSGA-III
+    pub large: MetricSet,  // ~80% grid
+    pub small_trials: usize,
+    pub large_trials: usize,
+    pub small_pareto: usize,
+    pub large_pareto: usize,
+}
+
+/// Run both searches and serve the same workload from each result.
+pub fn run(ctx: &Ctx, n_requests: usize, trial_batch: usize, seed: u64) -> AblationResult {
+    let net = Network::Vgg16; // the paper ablates on VGG16 only
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = trial_batch;
+
+    let small_trials = solver.trials_for_fraction(0.2); // paper: 184
+    let large_trials = solver.trials_for_fraction(0.815); // paper: 747
+    let small_out = solver.run(Strategy::NsgaIII, small_trials, seed);
+    let large_out = solver.run(Strategy::Grid, large_trials, seed);
+
+    let gen = WorkloadGen::paper(net);
+    let mut rng = Pcg32::new(seed, 71);
+    let requests = gen.generate(n_requests, &mut rng);
+
+    // same workload + same executor seeds for an apples-to-apples compare
+    let small = serve_strategies(&ctx.testbed, small_out.pareto.clone(), &requests, seed)
+        .dynasplit;
+    let large = serve_strategies(&ctx.testbed, large_out.pareto.clone(), &requests, seed)
+        .dynasplit;
+    AblationResult {
+        small,
+        large,
+        small_trials,
+        large_trials,
+        small_pareto: small_out.pareto.len(),
+        large_pareto: large_out.pareto.len(),
+    }
+}
+
+pub fn print_report(r: &AblationResult) {
+    println!(
+        "\n== Fig. 10 — 20% search ({} trials, |front| {}) vs ~80% search ({} trials, |front| {}) ==",
+        r.small_trials, r.small_pareto, r.large_trials, r.large_pareto
+    );
+    let mut t = Table::new([
+        "search", "cloud/split/edge", "lat median", "violations", "med exceed", "energy median",
+    ]);
+    for m in [&r.small, &r.large] {
+        let (c, s, e) = m.placement_counts();
+        let exceed = m
+            .violation_summary()
+            .map(|v| format!("{:.0} ms", v.median))
+            .unwrap_or_else(|| "-".to_string());
+        t.row([
+            if std::ptr::eq(m, &r.small) { "20% (NSGA-III)" } else { "80% (grid)" }.to_string(),
+            format!("{c}/{s}/{e}"),
+            format!("{:.0} ms", m.latency_summary().median),
+            format!("{}", m.violations()),
+            exceed,
+            format!("{:.1} J", m.energy_summary().median),
+        ]);
+    }
+    t.print();
+    println!("paper: identical cloud counts, ≤1 data-point split/edge differences, \
+              no significant latency/violation/energy differences.");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_percent_matches_eighty_percent() {
+        let r = run(&Ctx::synthetic(), 50, 40, 9);
+        // Fig. 10: the two searches must produce near-identical outcomes.
+        let lat_ratio =
+            r.small.latency_summary().median / r.large.latency_summary().median;
+        assert!((0.5..2.0).contains(&lat_ratio), "latency ratio {lat_ratio}");
+        let e_ratio = r.small.energy_summary().median / r.large.energy_summary().median;
+        assert!((0.5..2.0).contains(&e_ratio), "energy ratio {e_ratio}");
+        let dv = (r.small.violations() as i64 - r.large.violations() as i64).abs();
+        assert!(dv <= 10, "violation counts differ by {dv}");
+    }
+
+    #[test]
+    fn budgets_match_paper_scale() {
+        let ctx = Ctx::synthetic();
+        let mut solver = Solver::new(&ctx.testbed, Network::Vgg16);
+        solver.batch_per_trial = 10;
+        // paper: 184 and 747 trials; ours derive from |X| = 966.
+        assert!((150..250).contains(&solver.trials_for_fraction(0.2)));
+        assert!((700..800).contains(&solver.trials_for_fraction(0.815)));
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&run(&Ctx::synthetic(), 30, 30, 10));
+    }
+}

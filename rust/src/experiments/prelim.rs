@@ -1,0 +1,204 @@
+//! Fig. 2 — the preliminary study (§2.2): the impact of each knob on
+//! VGG16 latency / energy / accuracy, averaged over many inferences.
+
+use super::Ctx;
+use crate::space::{Config, Network, TpuMode};
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+
+/// One sweep point: configuration + averaged metrics.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub accuracy: f64,
+}
+
+/// All five Fig. 2 panels.
+#[derive(Debug, Clone)]
+pub struct PrelimResult {
+    pub fig2a_cpu_freq: Vec<SweepPoint>,
+    pub fig2b_split: Vec<SweepPoint>,
+    pub fig2c_tpu: Vec<SweepPoint>,
+    pub fig2d_gpu: Vec<SweepPoint>,
+    pub fig2e_accuracy: Vec<SweepPoint>,
+}
+
+fn cfg(cpu_idx: usize, tpu: TpuMode, gpu: bool, split: usize) -> Config {
+    crate::space::feasible::repair(Config { net: Network::Vgg16, cpu_idx, tpu, gpu, split })
+}
+
+/// Run the preliminary study (batch inferences per point like the paper's
+/// 1,000-inference averages; `batch` shrinks it for tests).
+pub fn run(ctx: &Ctx, batch: usize, seed: u64) -> PrelimResult {
+    let mut rng = Pcg32::new(seed, 21);
+    let mut point = |label: String, c: &Config| {
+        let t = ctx.testbed.run_trial_n(c, batch, &mut rng);
+        SweepPoint { label, latency_ms: t.latency_ms, energy_j: t.energy_j, accuracy: t.accuracy }
+    };
+
+    // Fig. 2a: edge-only, TPU off, CPU frequency sweep.
+    let fig2a = (0..crate::space::CPU_FREQS_GHZ.len())
+        .map(|i| point(format!("{:.1} GHz", crate::space::CPU_FREQS_GHZ[i]), &cfg(i, TpuMode::Off, false, 22)))
+        .collect();
+
+    // Fig. 2b: split sweep with TPU max, CPU 1.8 GHz, cloud GPU.
+    let fig2b = (0..=22)
+        .map(|k| point(format!("split {k}"), &cfg(6, TpuMode::Max, true, k)))
+        .collect();
+
+    // Fig. 2c: edge acceleration off/std/max (edge-only, CPU 1.8).
+    let fig2c = TpuMode::ALL
+        .iter()
+        .map(|&m| point(m.label().to_string(), &cfg(6, m, false, 22)))
+        .collect();
+
+    // Fig. 2d: cloud GPU on/off (cloud-only, CPU 1.8).
+    let fig2d = [false, true]
+        .iter()
+        .map(|&g| point(if g { "GPU" } else { "no GPU" }.to_string(), &cfg(6, TpuMode::Off, g, 0)))
+        .collect();
+
+    // Fig. 2e: accuracy vs split, TPU (int8 head) vs CPU (fp32).
+    let mut fig2e = Vec::new();
+    for k in 0..=22 {
+        let tpu = ctx.testbed.accuracy.accuracy(&cfg(6, TpuMode::Max, true, k));
+        let cpu = ctx.testbed.accuracy.accuracy(&cfg(6, TpuMode::Off, true, k));
+        fig2e.push(SweepPoint {
+            label: format!("split {k} tpu"),
+            latency_ms: 0.0,
+            energy_j: 0.0,
+            accuracy: tpu,
+        });
+        fig2e.push(SweepPoint {
+            label: format!("split {k} cpu"),
+            latency_ms: 0.0,
+            energy_j: 0.0,
+            accuracy: cpu,
+        });
+    }
+
+    PrelimResult {
+        fig2a_cpu_freq: fig2a,
+        fig2b_split: fig2b,
+        fig2c_tpu: fig2c,
+        fig2d_gpu: fig2d,
+        fig2e_accuracy: fig2e,
+    }
+}
+
+pub fn print_report(r: &PrelimResult) {
+    println!("\n== Fig. 2a — edge-only latency/energy vs CPU frequency (VGG16, TPU off) ==");
+    let mut t = Table::new(["CPU freq", "latency", "energy"]);
+    for p in &r.fig2a_cpu_freq {
+        t.row([p.label.clone(), format!("{:.0} ms", p.latency_ms), format!("{:.2} J", p.energy_j)]);
+    }
+    t.print();
+    println!("paper shape: both fall as frequency rises; energy flattens at the top; outliers at 0.8 GHz.");
+
+    println!("\n== Fig. 2b — latency/energy vs split layer (TPU max, CPU 1.8, GPU) ==");
+    let mut t = Table::new(["split", "latency", "energy"]);
+    for p in &r.fig2b_split {
+        t.row([p.label.clone(), format!("{:.0} ms", p.latency_ms), format!("{:.2} J", p.energy_j)]);
+    }
+    t.print();
+    println!("paper shape: non-monotone; latency and energy track each other.");
+
+    println!("\n== Fig. 2c — edge acceleration (edge-only) ==");
+    let mut t = Table::new(["TPU", "latency", "energy"]);
+    for p in &r.fig2c_tpu {
+        t.row([p.label.clone(), format!("{:.0} ms", p.latency_ms), format!("{:.2} J", p.energy_j)]);
+    }
+    t.print();
+    let off = &r.fig2c_tpu[0];
+    let max = &r.fig2c_tpu[2];
+    println!(
+        "paper: TPU energy ~3x lower than CPU; measured ratio {:.1}x; std ≈ max.",
+        off.energy_j / max.energy_j
+    );
+
+    println!("\n== Fig. 2d — cloud acceleration (cloud-only) ==");
+    let mut t = Table::new(["cloud", "latency", "energy"]);
+    for p in &r.fig2d_gpu {
+        t.row([p.label.clone(), format!("{:.0} ms", p.latency_ms), format!("{:.2} J", p.energy_j)]);
+    }
+    t.print();
+
+    println!("\n== Fig. 2e — accuracy vs split layer (TPU int8 head vs CPU fp32) ==");
+    let mut t = Table::new(["split", "acc (TPU head)", "acc (CPU)"]);
+    for k in 0..=22usize {
+        let tpu = &r.fig2e_accuracy[2 * k];
+        let cpu = &r.fig2e_accuracy[2 * k + 1];
+        t.row([
+            format!("{k}"),
+            format!("{:.4}", tpu.accuracy),
+            format!("{:.4}", cpu.accuracy),
+        ]);
+    }
+    t.print();
+    let max_delta = (0..=22)
+        .map(|k| (r.fig2e_accuracy[2 * k].accuracy - r.fig2e_accuracy[2 * k + 1].accuracy).abs())
+        .fold(0.0f64, f64::max);
+    println!("paper: all deltas sub-percent; measured max delta {:.4}.", max_delta);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result() -> PrelimResult {
+        run(&Ctx::synthetic(), 60, 1)
+    }
+
+    #[test]
+    fn fig2a_latency_monotone_energy_decreasing() {
+        let r = result();
+        let lats: Vec<f64> = r.fig2a_cpu_freq.iter().map(|p| p.latency_ms).collect();
+        assert!(lats.windows(2).all(|w| w[0] > w[1]), "{lats:?}");
+        // energy decreasing apart from 0.8 GHz outlier wiggle
+        let e: Vec<f64> = r.fig2a_cpu_freq.iter().map(|p| p.energy_j).collect();
+        assert!(e.first().unwrap() > e.last().unwrap());
+    }
+
+    #[test]
+    fn fig2c_tpu_cuts_energy_about_3x() {
+        let r = result();
+        let ratio = r.fig2c_tpu[0].energy_j / r.fig2c_tpu[2].energy_j;
+        assert!((2.0..5.0).contains(&ratio), "ratio {ratio}");
+        // std ≈ max (paper: no significant difference)
+        let rel = (r.fig2c_tpu[1].latency_ms - r.fig2c_tpu[2].latency_ms).abs()
+            / r.fig2c_tpu[2].latency_ms;
+        assert!(rel < 0.2, "std vs max {rel}");
+    }
+
+    #[test]
+    fn fig2d_gpu_faster_and_cheaper() {
+        let r = result();
+        assert!(r.fig2d_gpu[1].latency_ms < r.fig2d_gpu[0].latency_ms);
+        assert!(r.fig2d_gpu[1].energy_j < r.fig2d_gpu[0].energy_j);
+    }
+
+    #[test]
+    fn fig2e_subpercent_deltas() {
+        let r = result();
+        for k in 0..=22usize {
+            let d = (r.fig2e_accuracy[2 * k].accuracy - r.fig2e_accuracy[2 * k + 1].accuracy).abs();
+            assert!(d < 0.01, "split {k}: delta {d}");
+        }
+    }
+
+    #[test]
+    fn fig2b_split_nonmonotone() {
+        let r = result();
+        let lats: Vec<f64> = r.fig2b_split.iter().map(|p| p.latency_ms).collect();
+        let rises = lats.windows(2).filter(|w| w[1] > w[0]).count();
+        let falls = lats.windows(2).filter(|w| w[1] < w[0]).count();
+        assert!(rises > 0 && falls > 0, "split sweep should be non-monotone");
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&result());
+    }
+}

@@ -1,0 +1,178 @@
+//! The Simulation Experiment (§6.4, Fig. 11–14): up to 10,000 requests,
+//! served from the observation pool (each configuration evaluated ≥ 5
+//! times on the testbed, then requests re-sample stored observations —
+//! exactly the paper's §6.2 methodology).
+
+use crate::controller::{Controller, SimExecutor, StaticBaseline};
+use crate::solver::{ObservationPool, ParetoEntry, Solver, Strategy};
+use crate::space::{Config, Network};
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::WorkloadGen;
+
+use super::testbed_exp::{
+    cloud_baseline, edge_baseline, energy_entry, fastest_entry, StrategySet,
+};
+use super::Ctx;
+
+/// Simulation-experiment output for one network.
+#[derive(Debug, Clone)]
+pub struct SimulationExp {
+    pub net: Network,
+    pub pareto: Vec<ParetoEntry>,
+    pub strategies: StrategySet,
+}
+
+/// Run the simulation experiment (`n_requests` up to the paper's 10,000).
+pub fn run(
+    ctx: &Ctx,
+    net: Network,
+    n_requests: usize,
+    trial_batch: usize,
+    seed: u64,
+) -> SimulationExp {
+    // Offline phase (re-used for the observation pool).
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = trial_batch;
+    let trials = solver.trials_for_fraction(0.2);
+    let out = solver.run(Strategy::NsgaIII, trials, seed);
+
+    // Build the observation pool: solver trials + topped-up coverage for
+    // every configuration any strategy can select (≥ 5 observations each).
+    let mut pool = ObservationPool::default();
+    for t in &out.trials {
+        pool.record(t);
+    }
+    let mut coverage_configs: Vec<Config> =
+        out.pareto.iter().map(|p| p.config).collect();
+    coverage_configs.push(cloud_baseline(net));
+    coverage_configs.push(edge_baseline(net));
+    let mut rng = Pcg32::new(seed, 61);
+    pool.ensure_coverage(&coverage_configs, 5, &ctx.testbed, trial_batch, &mut rng);
+
+    // Workload.
+    let gen = WorkloadGen::paper(net);
+    let mut wl_rng = Pcg32::new(seed, 62);
+    let requests = gen.generate(n_requests, &mut wl_rng);
+
+    // Serve all five strategies from the pool.
+    let exec = |s: u64| SimExecutor::Pool {
+        pool: pool.clone(),
+        testbed: &ctx.testbed,
+        rng: Pcg32::new(seed, 300 + s),
+    };
+    let static_entry = |config: Config| ParetoEntry {
+        config,
+        latency_ms: f64::NAN,
+        energy_j: f64::NAN,
+        accuracy: f64::NAN,
+    };
+    let cloud = StaticBaseline { entry: static_entry(cloud_baseline(net)) }
+        .serve(&requests, &mut exec(0), "cloud");
+    let edge = StaticBaseline { entry: static_entry(edge_baseline(net)) }
+        .serve(&requests, &mut exec(1), "edge");
+    let latency = StaticBaseline { entry: fastest_entry(&out.pareto) }
+        .serve(&requests, &mut exec(2), "latency");
+    let energy = StaticBaseline { entry: energy_entry(&out.pareto) }
+        .serve(&requests, &mut exec(3), "energy");
+    let mut controller = Controller::new(out.pareto.clone(), seed);
+    let dynasplit = controller.serve(&requests, &mut exec(4), "dynasplit");
+
+    SimulationExp {
+        net,
+        pareto: out.pareto,
+        strategies: StrategySet { cloud, edge, latency, energy, dynasplit },
+    }
+}
+
+pub fn print_report(exp: &SimulationExp) {
+    let s = &exp.strategies;
+    let n = s.dynasplit.len();
+    println!(
+        "\n===== Simulation Experiment — {} ({} requests) =====",
+        exp.net.name(),
+        n
+    );
+
+    // --- Fig. 11: scheduling decisions ---
+    let (cloud, split, edge) = s.dynasplit.placement_counts();
+    println!("\n== Fig. 11 — scheduling decisions ==");
+    let paper = match exp.net {
+        Network::Vgg16 => "paper: 4% cloud, ~4857 split, ~4695 edge of 10k",
+        Network::Vit => "paper: 1% cloud, 99% split, 0 edge",
+    };
+    println!(
+        "measured: {cloud} cloud ({:.0}%) / {split} split ({:.0}%) / {edge} edge ({:.0}%)   ({paper})",
+        100.0 * cloud as f64 / n as f64,
+        100.0 * split as f64 / n as f64,
+        100.0 * edge as f64 / n as f64
+    );
+
+    // --- Fig. 12-14 ---
+    println!("\n== Fig. 12 — latency | Fig. 13 — QoS violations | Fig. 14 — energy ==");
+    let mut t = Table::new([
+        "strategy", "lat median", "violations", "viol rate", "med exceed", "energy median",
+    ]);
+    for m in s.all() {
+        let med = m
+            .violation_summary()
+            .map(|v| format!("{:.0} ms", v.median))
+            .unwrap_or_else(|| "-".to_string());
+        t.row([
+            m.strategy.clone(),
+            format!("{:.0} ms", m.latency_summary().median),
+            format!("{}", m.violations()),
+            format!("{:.1}%", 100.0 * (1.0 - m.qos_met_fraction())),
+            med,
+            format!("{:.1} J", m.energy_summary().median),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper ({}): DynaSplit ~{}% violations; energy median {} J; \
+         cloud/latency ~{} J; edge {} J",
+        exp.net.name(),
+        if exp.net == Network::Vgg16 { "5" } else { "14" },
+        if exp.net == Network::Vgg16 { "62" } else { "89" },
+        if exp.net == Network::Vgg16 { "69" } else { "91" },
+        if exp.net == Network::Vgg16 { "2" } else { "17" },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(net: Network, n: usize) -> SimulationExp {
+        run(&Ctx::synthetic(), net, n, 40, 5)
+    }
+
+    #[test]
+    fn vgg_simulation_shape() {
+        let e = exp(Network::Vgg16, 2000);
+        let s = &e.strategies;
+        // Fig. 13: DynaSplit violation rate far below edge/energy baselines
+        let dyn_rate = 1.0 - s.dynasplit.qos_met_fraction();
+        let edge_rate = 1.0 - s.edge.qos_met_fraction();
+        assert!(dyn_rate < 0.25, "dyn violations {dyn_rate}");
+        assert!(edge_rate > 2.0 * dyn_rate, "edge {edge_rate} vs dyn {dyn_rate}");
+        // Fig. 14: energy ordering holds
+        assert!(
+            s.dynasplit.energy_summary().median < s.cloud.energy_summary().median
+        );
+    }
+
+    #[test]
+    fn pool_mode_is_fast_for_many_requests() {
+        // 2,000 pool-served requests must not require 2,000 fresh trials —
+        // wall-clock stays small.
+        let t0 = std::time::Instant::now();
+        let _ = exp(Network::Vit, 2000);
+        assert!(t0.elapsed().as_secs() < 30, "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&exp(Network::Vgg16, 500));
+    }
+}

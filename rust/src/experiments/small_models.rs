@@ -1,0 +1,193 @@
+//! Finding (i) of the preliminary study (§2.2): small, mobile-optimized
+//! models (ResNet50-mini, MobileNetV2-mini) do **not** benefit from
+//! split computing — their edge-only execution is fast and frugal enough
+//! that no split/cloud configuration improves on it, whereas the large
+//! models (VGG16, ViT) clearly do.  This is why the paper's main
+//! evaluation keeps only VGG16 and ViT.
+
+use crate::model::small::SmallNetCost;
+use crate::model::NetCost;
+use crate::simulator::calib;
+use crate::space::Network;
+use crate::util::table::Table;
+
+/// Latency/energy of one network at its three canonical placements
+/// (edge-only / best split / cloud-only), all at max CPU frequency.
+#[derive(Debug, Clone)]
+pub struct PlacementProfile {
+    pub name: String,
+    pub edge_ms: f64,
+    pub edge_j: f64,
+    pub best_split_ms: f64,
+    pub best_split_k: usize,
+    pub cloud_ms: f64,
+    pub cloud_j: f64,
+    /// Does any split/cloud placement beat edge-only latency by > 10%?
+    /// (§2.2's criterion is latency: the large models "demonstrated
+    /// substantial improvements in latency when utilizing both edge and
+    /// cloud resources"; the small ones did not)
+    pub benefits_from_split: bool,
+}
+
+/// Analytic placement profile for a *small* model (simulator-level; the
+/// small models have no artifacts — see model::small).
+pub fn profile_small(c: &SmallNetCost) -> PlacementProfile {
+    let l = c.layers.len();
+    let edge_rate = c.total_macs() as f64 / c.edge_full_fp32_s;
+    let gpu_rate = c.total_macs() as f64 / c.cloud_full_gpu_s;
+    let lat = |k: usize| -> f64 {
+        let head: u64 = c.layers[..k].iter().map(|x| x.macs).sum();
+        let tail: u64 = c.layers[k..].iter().map(|x| x.macs).sum();
+        let mut t = 0.005 + head as f64 / edge_rate; // prep + head
+        if k < l {
+            let bytes = c.transfer_bytes(k) + 40;
+            t += calib::LINK_RTT_S + bytes as f64 / calib::LINK_BYTES_PER_S;
+            t += 0.004 + tail as f64 / gpu_rate;
+        }
+        t
+    };
+    let edge_s = lat(l);
+    let cloud_s = lat(0);
+    let (best_k, best_s) = (1..l)
+        .map(|k| (k, lat(k)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    // energy: edge busy during head, idle during net+cloud; cloud window.
+    let energy = |k: usize| -> f64 {
+        let head: u64 = c.layers[..k].iter().map(|x| x.macs).sum();
+        let head_s = head as f64 / edge_rate;
+        let total_s = lat(k);
+        let busy_p = calib::EDGE_IDLE_W + calib::EDGE_CPU_CUBIC_W_PER_GHZ3 * 1.8f64.powi(3);
+        let mut e = busy_p * head_s + calib::EDGE_IDLE_W * (total_s - head_s - 0.005).max(0.0);
+        if k < l {
+            let tail: u64 = c.layers[k..].iter().map(|x| x.macs).sum();
+            e += calib::CLOUD_GPU_ACTIVE_W * (tail as f64 / gpu_rate);
+        }
+        e
+    };
+    let edge_j = energy(l);
+    let cloud_j = energy(0);
+    let beats = |ms: f64| ms < 0.9 * edge_s * 1000.0;
+    PlacementProfile {
+        name: c.name.to_string(),
+        edge_ms: edge_s * 1000.0,
+        edge_j,
+        best_split_ms: best_s * 1000.0,
+        best_split_k: best_k,
+        cloud_ms: cloud_s * 1000.0,
+        cloud_j,
+        benefits_from_split: beats(best_s * 1000.0) || beats(cloud_s * 1000.0),
+    }
+}
+
+/// Placement profile for a *large* (main-evaluation) network via the full
+/// device model.
+pub fn profile_large(net: Network) -> PlacementProfile {
+    let dm = crate::simulator::device::DeviceModel::new(NetCost::of(net));
+    let l = net.num_layers();
+    let cfg = |k: usize| {
+        crate::space::feasible::repair(crate::space::Config {
+            net,
+            cpu_idx: 6,
+            tpu: crate::space::TpuMode::Off,
+            gpu: true,
+            split: k,
+        })
+    };
+    let lat = |k: usize| dm.latency(&cfg(k)).total_s() * 1000.0;
+    let energy = |k: usize| {
+        let b = dm.latency(&cfg(k));
+        let busy = crate::simulator::power::edge_power(
+            crate::simulator::power::EdgeState::CpuBusy,
+            &cfg(k),
+        );
+        let idle = crate::simulator::power::edge_power(
+            crate::simulator::power::EdgeState::Idle,
+            &cfg(k),
+        );
+        busy * b.edge_s
+            + idle * (b.net_s + b.cloud_s)
+            + if k < l { crate::simulator::power::cloud_power(&cfg(k)) * b.cloud_s } else { 0.0 }
+    };
+    let (best_k, best_ms) = (1..l)
+        .map(|k| (k, lat(k)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let edge_ms = lat(l);
+    let edge_j = energy(l);
+    let cloud_ms = lat(0);
+    let beats = |ms: f64| ms < 0.9 * edge_ms;
+    PlacementProfile {
+        name: net.name().to_string(),
+        edge_ms,
+        edge_j,
+        best_split_ms: best_ms,
+        best_split_k: best_k,
+        cloud_ms,
+        cloud_j: energy(0),
+        benefits_from_split: beats(best_ms) || beats(cloud_ms),
+    }
+}
+
+/// Run the four-network §2.2 comparison.
+pub fn run() -> Vec<PlacementProfile> {
+    vec![
+        profile_small(&crate::model::small::mobilenetv2_mini()),
+        profile_small(&crate::model::small::resnet50_mini()),
+        profile_large(Network::Vgg16),
+        profile_large(Network::Vit),
+    ]
+}
+
+pub fn print_report(profiles: &[PlacementProfile]) {
+    println!("\n== §2.2 finding (i) — which networks benefit from split computing ==");
+    let mut t = Table::new([
+        "network", "edge-only", "edge J", "best split", "cloud-only", "benefits?",
+    ]);
+    for p in profiles {
+        t.row([
+            p.name.clone(),
+            format!("{:.0} ms", p.edge_ms),
+            format!("{:.1} J", p.edge_j),
+            format!("{:.0} ms (k={})", p.best_split_ms, p.best_split_k),
+            format!("{:.0} ms", p.cloud_ms),
+            if p.benefits_from_split { "YES" } else { "no" }.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper finding (i): ResNet50/MobileNetV2 gain nothing from split computing \
+         (fast + frugal edge-only); VGG16/ViT gain substantially — which is why the \
+         main evaluation keeps only the large networks."
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_i_reproduces() {
+        let profiles = run();
+        let by_name = |n: &str| profiles.iter().find(|p| p.name == n).unwrap();
+        assert!(!by_name("mobilenetv2").benefits_from_split, "{:?}", by_name("mobilenetv2"));
+        assert!(!by_name("resnet50").benefits_from_split, "{:?}", by_name("resnet50"));
+        assert!(by_name("vgg16").benefits_from_split, "{:?}", by_name("vgg16"));
+        assert!(by_name("vit").benefits_from_split, "{:?}", by_name("vit"));
+    }
+
+    #[test]
+    fn small_models_run_fast_on_edge() {
+        for p in run() {
+            if p.name == "mobilenetv2" || p.name == "resnet50" {
+                assert!(p.edge_ms < 250.0, "{}: {}", p.name, p.edge_ms);
+                assert!(p.edge_j < 2.0, "{}: {}", p.name, p.edge_j);
+            }
+        }
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&run());
+    }
+}

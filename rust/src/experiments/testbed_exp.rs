@@ -1,0 +1,264 @@
+//! The Testbed Experiment (§6.3, Fig. 6–9): 50 requests per network,
+//! DynaSplit vs the four static baselines (§6.2.3), on the simulated
+//! testbed with fresh trials per request.
+
+use crate::controller::{Controller, SimExecutor, StaticBaseline};
+use crate::metrics::MetricSet;
+use crate::simulator::Testbed;
+use crate::solver::{ParetoEntry, Solver, Strategy};
+use crate::space::{Config, Network, TpuMode};
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::{Request, WorkloadGen};
+
+use super::Ctx;
+
+/// The five strategies' metric sets (§6.2.3 baselines + DynaSplit).
+#[derive(Debug, Clone)]
+pub struct StrategySet {
+    pub cloud: MetricSet,
+    pub edge: MetricSet,
+    pub latency: MetricSet,
+    pub energy: MetricSet,
+    pub dynasplit: MetricSet,
+}
+
+impl StrategySet {
+    pub fn all(&self) -> [&MetricSet; 5] {
+        [&self.cloud, &self.edge, &self.latency, &self.energy, &self.dynasplit]
+    }
+}
+
+/// Complete testbed-experiment output for one network.
+#[derive(Debug, Clone)]
+pub struct TestbedExp {
+    pub net: Network,
+    pub pareto: Vec<ParetoEntry>,
+    pub strategies: StrategySet,
+}
+
+/// §6.2.3 (i): cloud-only baseline — GPU on, edge CPU at max.
+pub fn cloud_baseline(net: Network) -> Config {
+    crate::space::feasible::repair(Config {
+        net,
+        cpu_idx: crate::space::CPU_FREQS_GHZ.len() - 1,
+        tpu: TpuMode::Off,
+        gpu: true,
+        split: 0,
+    })
+}
+
+/// §6.2.3 (ii): edge-only baseline — TPU at max where usable (VGG16),
+/// off otherwise (ViT), CPU at max.
+pub fn edge_baseline(net: Network) -> Config {
+    crate::space::feasible::repair(Config {
+        net,
+        cpu_idx: crate::space::CPU_FREQS_GHZ.len() - 1,
+        tpu: if net.tpu_capable() { TpuMode::Max } else { TpuMode::Off },
+        gpu: false,
+        split: net.num_layers(),
+    })
+}
+
+fn static_entry(config: Config) -> ParetoEntry {
+    // metric fields are irrelevant for a static baseline (it never selects)
+    ParetoEntry { config, latency_ms: f64::NAN, energy_j: f64::NAN, accuracy: f64::NAN }
+}
+
+/// §6.2.3 (iii): fastest configuration from the non-dominated set.
+pub fn fastest_entry(pareto: &[ParetoEntry]) -> ParetoEntry {
+    pareto
+        .iter()
+        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .expect("empty pareto set")
+        .clone()
+}
+
+/// §6.2.3 (iv): most energy-efficient configuration from the set.
+pub fn energy_entry(pareto: &[ParetoEntry]) -> ParetoEntry {
+    pareto
+        .iter()
+        .min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).unwrap())
+        .expect("empty pareto set")
+        .clone()
+}
+
+/// Serve one workload under all five strategies with fresh trials.
+pub fn serve_strategies(
+    testbed: &Testbed,
+    pareto: Vec<ParetoEntry>,
+    requests: &[Request],
+    seed: u64,
+) -> StrategySet {
+    let net = requests[0].net;
+    let exec = |s: u64| SimExecutor::Fresh { testbed, rng: Pcg32::new(seed, 200 + s) };
+    let cloud = StaticBaseline { entry: static_entry(cloud_baseline(net)) }
+        .serve(requests, &mut exec(0), "cloud");
+    let edge = StaticBaseline { entry: static_entry(edge_baseline(net)) }
+        .serve(requests, &mut exec(1), "edge");
+    let latency = StaticBaseline { entry: fastest_entry(&pareto) }
+        .serve(requests, &mut exec(2), "latency");
+    let energy = StaticBaseline { entry: energy_entry(&pareto) }
+        .serve(requests, &mut exec(3), "energy");
+    let mut controller = Controller::new(pareto, seed);
+    let dynasplit = controller.serve(requests, &mut exec(4), "dynasplit");
+    StrategySet { cloud, edge, latency, energy, dynasplit }
+}
+
+/// Run the full testbed experiment for `net`.
+pub fn run(
+    ctx: &Ctx,
+    net: Network,
+    n_requests: usize,
+    trial_batch: usize,
+    seed: u64,
+) -> TestbedExp {
+    // Offline phase: NSGA-III over 20% of the space (§6.3.4).
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = trial_batch;
+    let trials = solver.trials_for_fraction(0.2);
+    let out = solver.run(Strategy::NsgaIII, trials, seed);
+
+    // Online phase: 50-request workload (§6.2.1).
+    let gen = WorkloadGen::paper(net);
+    let mut rng = Pcg32::new(seed, 51);
+    let requests = gen.generate(n_requests, &mut rng);
+    let strategies = serve_strategies(&ctx.testbed, out.pareto.clone(), &requests, seed);
+    TestbedExp { net, pareto: out.pareto, strategies }
+}
+
+pub fn print_report(exp: &TestbedExp) {
+    let s = &exp.strategies;
+    println!(
+        "\n===== Testbed Experiment — {} ({} requests, |pareto| = {}) =====",
+        exp.net.name(),
+        s.dynasplit.len(),
+        exp.pareto.len()
+    );
+
+    // --- Fig. 6: scheduling decisions ---
+    let (cloud, split, edge) = s.dynasplit.placement_counts();
+    println!("\n== Fig. 6 — DynaSplit scheduling decisions ==");
+    let paper = match exp.net {
+        Network::Vgg16 => "paper: 2 cloud / 11 split / 37 edge",
+        Network::Vit => "paper: 1 cloud / 49 split / 0 edge",
+    };
+    println!("measured: {cloud} cloud / {split} split / {edge} edge   ({paper})");
+
+    // --- Fig. 7: latency distributions ---
+    println!("\n== Fig. 7 — latency distributions ==");
+    let mut t = Table::new(["strategy", "median", "q1", "q3", "violin"]);
+    for m in s.all() {
+        let sum = m.latency_summary();
+        t.row([
+            m.strategy.clone(),
+            format!("{:.0} ms", sum.median),
+            format!("{:.0} ms", sum.q1),
+            format!("{:.0} ms", sum.q3),
+            m.latency_violin(),
+        ]);
+    }
+    t.print();
+
+    // --- Fig. 8: QoS violations ---
+    println!("\n== Fig. 8 — QoS violations ==");
+    let mut t = Table::new(["strategy", "violations", "rate", "median exceedance"]);
+    for m in s.all() {
+        let med = m
+            .violation_summary()
+            .map(|v| format!("{:.0} ms", v.median))
+            .unwrap_or_else(|| "-".to_string());
+        t.row([
+            m.strategy.clone(),
+            format!("{}", m.violations()),
+            format!("{:.0}%", 100.0 * (1.0 - m.qos_met_fraction())),
+            med,
+        ]);
+    }
+    t.print();
+
+    // --- Fig. 9: energy ---
+    println!("\n== Fig. 9 — energy distributions ==");
+    let mut t = Table::new(["strategy", "median", "q1", "q3", "max"]);
+    for m in s.all() {
+        let sum = m.energy_summary();
+        t.row([
+            m.strategy.clone(),
+            format!("{:.1} J", sum.median),
+            format!("{:.1} J", sum.q1),
+            format!("{:.1} J", sum.q3),
+            format!("{:.1} J", sum.max),
+        ]);
+    }
+    t.print();
+
+    // --- headline ---
+    let reduction =
+        1.0 - s.dynasplit.energy_summary().median / s.cloud.energy_summary().median;
+    println!(
+        "\nheadline: median energy vs cloud-only: -{:.0}%  (paper: up to 72%); \
+         QoS met: {:.0}% (paper: ~90%)",
+        reduction * 100.0,
+        s.dynasplit.qos_met_fraction() * 100.0
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(net: Network) -> TestbedExp {
+        run(&Ctx::synthetic(), net, 50, 60, 3)
+    }
+
+    #[test]
+    fn vgg_matches_paper_shape() {
+        let e = exp(Network::Vgg16);
+        let s = &e.strategies;
+        // Fig. 7 ordering: cloud/latency fast, edge/energy slow.
+        assert!(s.cloud.latency_summary().median < 150.0);
+        assert!(s.edge.latency_summary().median > 300.0);
+        // Fig. 9 ordering: cloud expensive, edge cheap.
+        assert!(s.cloud.energy_summary().median > 20.0 * s.edge.energy_summary().median);
+        // headline: DynaSplit ~90% QoS met, big energy cut vs cloud.
+        assert!(s.dynasplit.qos_met_fraction() > 0.8, "{}", s.dynasplit.qos_met_fraction());
+        let cut = 1.0 - s.dynasplit.energy_summary().median / s.cloud.energy_summary().median;
+        assert!(cut > 0.5, "energy cut only {cut}");
+        // Fig. 6: VGG leans edge-heavy (paper: 37/50 edge).
+        let (_c, _s, edge) = s.dynasplit.placement_counts();
+        assert!(edge > 15, "edge share too low: {edge}");
+    }
+
+    #[test]
+    fn vit_mostly_splits() {
+        let e = exp(Network::Vit);
+        // Paper Fig. 6: ViT = 1 cloud / 49 split / 0 edge.  The zero is a
+        // *search-path artifact*: the paper's 56-trial ViT search simply
+        // never retained an edge-only config ("the Solver did not identify
+        // any edge-only configuration"), even though its own Fig. 9 shows
+        // edge-only ViT (16 J) is cheaper than the front's energy
+        // baseline (80 J) — i.e. edge-only was non-dominated but unseen.
+        // Our search covers the space more thoroughly and legitimately
+        // keeps those configs, so lenient-QoS requests may go edge; we
+        // assert the dominant behaviour (split) matches the paper and
+        // document the divergence in EXPERIMENTS.md.
+        let (_cloud, split, edge) = e.strategies.dynasplit.placement_counts();
+        assert!(split >= 20, "ViT should mostly split: {split}");
+        assert!(edge <= 20, "ViT edge decisions unexpectedly dominant: {edge}");
+    }
+
+    #[test]
+    fn baseline_configs_match_section_623() {
+        let c = cloud_baseline(Network::Vgg16);
+        assert!(c.is_cloud_only() && c.gpu && c.cpu_idx == 6 && c.tpu == TpuMode::Off);
+        let e = edge_baseline(Network::Vgg16);
+        assert!(e.is_edge_only() && !e.gpu && e.tpu == TpuMode::Max);
+        let ev = edge_baseline(Network::Vit);
+        assert!(ev.tpu == TpuMode::Off, "ViT edge baseline must not use TPU");
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&exp(Network::Vgg16));
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 5 — the QoS (inference-time request) distributions for both
+//! networks: Weibull(shape=1) rescaled to the Table-2 latency bounds.
+
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+use crate::util::stats::{density_sketch, sparkline, Summary};
+use crate::util::table::Table;
+use crate::workload::WorkloadGen;
+
+#[derive(Debug, Clone)]
+pub struct WorkloadDist {
+    pub net: Network,
+    pub qos_ms: Vec<f64>,
+    pub summary: Summary,
+}
+
+pub fn run(net: Network, n: usize, seed: u64) -> WorkloadDist {
+    let gen = WorkloadGen::paper(net);
+    let mut rng = Pcg32::new(seed, 41);
+    let qos_ms: Vec<f64> = gen.generate(n, &mut rng).iter().map(|r| r.qos_ms).collect();
+    let summary = Summary::of(&qos_ms);
+    WorkloadDist { net, qos_ms, summary }
+}
+
+pub fn print_report(dists: &[WorkloadDist]) {
+    println!("\n== Fig. 5 — QoS request distributions (Weibull shape=1, Table-2 scaled) ==");
+    let mut t = Table::new(["network", "n", "min", "median", "max", "density"]);
+    for d in dists {
+        t.row([
+            d.net.name().to_string(),
+            format!("{}", d.summary.count),
+            format!("{:.1} ms", d.summary.min),
+            format!("{:.1} ms", d.summary.median),
+            format!("{:.1} ms", d.summary.max),
+            sparkline(&density_sketch(&d.qos_ms, 30)),
+        ]);
+    }
+    t.print();
+    println!("paper shape: heavy right skew — most requests demand near-minimum latency.");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributions_span_table2_bounds() {
+        let d = run(Network::Vgg16, 10_000, 1);
+        assert!((d.summary.min - 90.6).abs() < 1e-6);
+        assert!((d.summary.max - 5026.8).abs() < 1e-6);
+        let v = run(Network::Vit, 10_000, 1);
+        assert!((v.summary.min - 118.8).abs() < 1e-6);
+        assert!((v.summary.max - 10_287.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn right_skew() {
+        let d = run(Network::Vgg16, 10_000, 2);
+        assert!(d.summary.median < d.summary.mean, "exponential: median < mean");
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&[run(Network::Vgg16, 500, 3), run(Network::Vit, 500, 3)]);
+    }
+}

@@ -1,0 +1,52 @@
+//! DynaSplit — energy-aware split inference on edge (paper reproduction).
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (matmul / quantized matmul / fused attention),
+//!   authored in `python/compile/kernels/`, lowered `interpret=True`.
+//! * **L2** — per-layer JAX definitions of VGG16-mini and ViT-mini
+//!   (`python/compile/model.py`), AOT-lowered layer-by-layer to HLO text
+//!   by `python/compile/aot.py` into `artifacts/`.
+//! * **L3** — this crate: the DynaSplit *Solver* (offline NSGA-III search
+//!   over the hardware/software configuration space) and *Controller*
+//!   (online Algorithm-1 scheduling, configuration application, split
+//!   execution over an edge↔cloud streaming transport), plus every
+//!   substrate the paper's testbed provided physically (DVFS'd edge CPU,
+//!   Coral-style TPU, V100-style cloud GPU, power meters, network link) as
+//!   a calibrated simulator.
+//!
+//! Python never runs on the request path: the rust binary loads the HLO
+//! artifacts once via PJRT (`runtime`) and is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index that
+//! maps every figure/table of the paper to a module + bench.
+
+pub mod util;
+pub mod prop;
+pub mod space;
+pub mod nsga;
+pub mod model;
+pub mod simulator;
+pub mod transport;
+pub mod workload;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod controller;
+pub mod experiments;
+pub mod report; // (modules filled in build order; see DESIGN.md §7)
+
+/// Crate-wide result type (anyhow-based; rich context on substrate errors).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifact directory, overridable with `--artifacts` / env.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Resolve the artifact directory: CLI value, `DYNASPLIT_ARTIFACTS` env
+/// var, or the default, in that order.
+pub fn artifacts_dir(cli: Option<&str>) -> String {
+    if let Some(dir) = cli {
+        return dir.to_string();
+    }
+    std::env::var("DYNASPLIT_ARTIFACTS").unwrap_or_else(|_| DEFAULT_ARTIFACTS.to_string())
+}

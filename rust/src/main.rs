@@ -1,0 +1,371 @@
+//! `dynasplit` — leader entrypoint + CLI.
+//!
+//! Subcommands (each maps to a DESIGN.md experiment or an operational
+//! action):
+//!
+//! ```text
+//! dynasplit space                      print Table-1 configuration spaces
+//! dynasplit solve     [--net --trials --strategy --seed --out]
+//! dynasplit serve     [--net --requests --seed]          online phase (sim)
+//! dynasplit prelim                     Fig. 2a-e
+//! dynasplit bounds                     Table 2
+//! dynasplit workload                   Fig. 5
+//! dynasplit testbed   [--requests]     Fig. 6-9 + headline
+//! dynasplit ablation                   Fig. 10
+//! dynasplit simulate  [--requests]     Fig. 11-14
+//! dynasplit overhead                   Fig. 15
+//! dynasplit smallmodels                §2.2 finding (i)
+//! dynasplit extensions                 §6.6 ablations
+//! dynasplit accuracy                   measured PJRT accuracy table
+//! dynasplit runtime-info               artifact load/compile statistics
+//! ```
+
+use anyhow::{bail, Result};
+
+use dynasplit::controller::{Controller, SimExecutor};
+use dynasplit::experiments::{self, Ctx};
+use dynasplit::model::Manifest;
+use dynasplit::solver::{Solver, SolverOutput, Strategy};
+use dynasplit::space::{Network, Space};
+use dynasplit::util::cli::ArgSpec;
+use dynasplit::util::rng::Pcg32;
+use dynasplit::util::table::Table;
+use dynasplit::workload::WorkloadGen;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn spec(cmd: &str, about: &'static str) -> ArgSpec {
+    ArgSpec::new(format!("dynasplit {cmd}"), about)
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("seed", "42", "experiment seed")
+        .opt("batch", "1000", "inferences averaged per trial")
+}
+
+fn run() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "space" => cmd_space(),
+        "solve" => cmd_solve(),
+        "serve" => cmd_serve(),
+        "prelim" => cmd_prelim(),
+        "bounds" => cmd_bounds(),
+        "workload" => cmd_workload(),
+        "testbed" => cmd_testbed(),
+        "ablation" => cmd_ablation(),
+        "simulate" => cmd_simulate(),
+        "overhead" => cmd_overhead(),
+        "smallmodels" => cmd_smallmodels(),
+        "extensions" => cmd_extensions(),
+        "accuracy" => cmd_accuracy(),
+        "runtime-info" => cmd_runtime_info(),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{HELP}"),
+    }
+}
+
+const HELP: &str = "dynasplit — energy-aware split inference (paper reproduction)
+
+subcommands:
+  space          print the Table-1 configuration spaces
+  solve          offline phase: search the space, save the pareto set
+  serve          online phase over a simulated workload
+  prelim         Fig. 2a-e preliminary study
+  bounds         Table 2 latency bounds
+  workload       Fig. 5 QoS distributions
+  testbed        Fig. 6-9 testbed experiment + headline numbers
+  ablation       Fig. 10 20%-vs-80% search comparison
+  simulate       Fig. 11-14 simulation experiment
+  overhead       Fig. 15 controller overhead
+  smallmodels    §2.2 finding (i): small models don't benefit from splits
+  extensions     §6.6 ablations: serverless cold starts, QoS clustering
+  accuracy       measured (PJRT) accuracy table -> artifacts cache
+  runtime-info   artifact load/compile statistics
+
+run `dynasplit <cmd> --help` for per-command options.";
+
+fn cmd_space() -> Result<()> {
+    let mut t = Table::new(["network", "|X| raw", "|X| feasible", "gene bounds"]);
+    for net in Network::ALL {
+        let s = Space::new(net);
+        t.row([
+            net.name().to_string(),
+            s.cardinality().to_string(),
+            s.enumerate_feasible().len().to_string(),
+            format!("{:?}", s.gene_bounds()),
+        ]);
+    }
+    t.print();
+    println!("\nTable 1 domains: CPU {:?} GHz; TPU {{off, std, max}}; GPU {{yes, no}}; \
+              split 0..=L (VGG16 L=22, ViT L=19)", dynasplit::space::CPU_FREQS_GHZ);
+    Ok(())
+}
+
+fn cmd_solve() -> Result<()> {
+    let a = spec("solve", "offline phase: search the configuration space")
+        .opt("net", "vgg16", "network (vgg16|vit)")
+        .opt("trials", "193", "evaluation budget (trials)")
+        .opt("strategy", "nsga3", "search strategy (nsga3|grid)")
+        .opt_maybe("out", "output JSON path (default artifacts/pareto_<net>.json)")
+        .parse_env(2)?;
+    let net = Network::parse(a.str("net")?)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = a.usize("batch")?;
+    let strategy = match a.str("strategy")? {
+        "nsga3" => Strategy::NsgaIII,
+        "grid" => Strategy::Grid,
+        other => bail!("unknown strategy {other:?}"),
+    };
+    let trials = a.usize("trials")?;
+    println!(
+        "[solve] {} via {:?}: {} trials x {} inferences (accuracy table: {})",
+        net.name(), strategy, trials, solver.batch_per_trial, ctx.accuracy_origin
+    );
+    let t0 = std::time::Instant::now();
+    let out = solver.run(strategy, trials, a.u64("seed")?);
+    println!(
+        "[solve] {} trials in {:.2} s, non-dominated set size {}",
+        out.trials.len(),
+        t0.elapsed().as_secs_f64(),
+        out.pareto.len()
+    );
+    let default_path = format!("{}/pareto_{}.json", a.str("artifacts")?, net.name());
+    let path = a.get("out").unwrap_or(&default_path);
+    std::fs::create_dir_all(std::path::Path::new(path).parent().unwrap()).ok();
+    out.save(std::path::Path::new(path))?;
+    println!("[solve] saved to {path}");
+    let mut t = Table::new(["configuration", "latency", "energy", "accuracy"]);
+    for p in &out.pareto {
+        t.row([
+            p.config.describe(),
+            format!("{:.1} ms", p.latency_ms),
+            format!("{:.2} J", p.energy_j),
+            format!("{:.4}", p.accuracy),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve() -> Result<()> {
+    let a = spec("serve", "online phase over a simulated workload")
+        .opt("net", "vgg16", "network (vgg16|vit)")
+        .opt("requests", "50", "number of requests")
+        .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh 20% search)")
+        .parse_env(2)?;
+    let net = Network::parse(a.str("net")?)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let seed = a.u64("seed")?;
+    let pareto = match a.get("pareto") {
+        Some(path) => SolverOutput::load_pareto(std::path::Path::new(path))?,
+        None => {
+            let mut solver = Solver::new(&ctx.testbed, net);
+            solver.batch_per_trial = a.usize("batch")?;
+            solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto
+        }
+    };
+    let mut controller = Controller::new(pareto, seed);
+    println!(
+        "[serve] startup: sorted {} configs in {:.3} ms",
+        controller.startup.config_count, controller.startup.load_sort_ms
+    );
+    let gen = WorkloadGen::paper(net);
+    let mut rng = Pcg32::new(seed, 91);
+    let requests = gen.generate(a.usize("requests")?, &mut rng);
+    let mut ex = SimExecutor::Fresh { testbed: &ctx.testbed, rng: Pcg32::new(seed, 92) };
+    let metrics = controller.serve(&requests, &mut ex, "dynasplit");
+    let (c, s, e) = metrics.placement_counts();
+    println!(
+        "[serve] {} requests: {c} cloud / {s} split / {e} edge; QoS met {:.0}%; \
+         median latency {:.0} ms; median energy {:.1} J",
+        metrics.len(),
+        metrics.qos_met_fraction() * 100.0,
+        metrics.latency_summary().median,
+        metrics.energy_summary().median
+    );
+    dynasplit::report::write_csv(
+        a.str("artifacts")?,
+        &format!("serve_{}", net.name()),
+        &dynasplit::report::metric_set_table(&metrics),
+    )?;
+    Ok(())
+}
+
+fn cmd_prelim() -> Result<()> {
+    let a = spec("prelim", "Fig. 2 preliminary study").parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    println!("[prelim] accuracy table: {}", ctx.accuracy_origin);
+    let r = experiments::prelim::run(&ctx, a.usize("batch")?, a.u64("seed")?);
+    experiments::prelim::print_report(&r);
+    Ok(())
+}
+
+fn cmd_bounds() -> Result<()> {
+    let a = spec("bounds", "Table 2 latency bounds").parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let batch = a.usize("batch")?.min(200); // full-space sweep: keep trials lean
+    let vgg = experiments::bounds::run(&ctx, Network::Vgg16, batch, a.u64("seed")?);
+    let vit = experiments::bounds::run(&ctx, Network::Vit, batch, a.u64("seed")?);
+    experiments::bounds::print_report(&vgg, &vit);
+    Ok(())
+}
+
+fn cmd_workload() -> Result<()> {
+    let a = spec("workload", "Fig. 5 QoS distributions")
+        .opt("requests", "10000", "draws per network")
+        .parse_env(2)?;
+    let n = a.usize("requests")?;
+    let dists = [
+        experiments::workload_dist::run(Network::Vgg16, n, a.u64("seed")?),
+        experiments::workload_dist::run(Network::Vit, n, a.u64("seed")?),
+    ];
+    experiments::workload_dist::print_report(&dists);
+    Ok(())
+}
+
+fn cmd_testbed() -> Result<()> {
+    let a = spec("testbed", "Fig. 6-9 testbed experiment")
+        .opt("requests", "50", "requests per network")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    println!("[testbed] accuracy table: {}", ctx.accuracy_origin);
+    for net in Network::ALL {
+        let exp = experiments::testbed_exp::run(
+            &ctx,
+            net,
+            a.usize("requests")?,
+            a.usize("batch")?,
+            a.u64("seed")?,
+        );
+        experiments::testbed_exp::print_report(&exp);
+        for m in exp.strategies.all() {
+            dynasplit::report::write_csv(
+                a.str("artifacts")?,
+                &format!("testbed_{}_{}", net.name(), m.strategy),
+                &dynasplit::report::metric_set_table(m),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ablation() -> Result<()> {
+    let a = spec("ablation", "Fig. 10 search-budget ablation")
+        .opt("requests", "50", "requests")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let r = experiments::ablation::run(&ctx, a.usize("requests")?, a.usize("batch")?, a.u64("seed")?);
+    experiments::ablation::print_report(&r);
+    Ok(())
+}
+
+fn cmd_simulate() -> Result<()> {
+    let a = spec("simulate", "Fig. 11-14 simulation experiment")
+        .opt("requests", "10000", "requests per network")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    println!("[simulate] accuracy table: {}", ctx.accuracy_origin);
+    for net in Network::ALL {
+        let exp = experiments::simulation::run(
+            &ctx,
+            net,
+            a.usize("requests")?,
+            a.usize("batch")?,
+            a.u64("seed")?,
+        );
+        experiments::simulation::print_report(&exp);
+    }
+    Ok(())
+}
+
+fn cmd_overhead() -> Result<()> {
+    let a = spec("overhead", "Fig. 15 controller overhead")
+        .opt("requests", "50", "requests per network")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let (requests, batch, seed) = (a.usize("requests")?, a.usize("batch")?, a.u64("seed")?);
+    let results: Vec<_> = Network::ALL
+        .iter()
+        .map(|&net| experiments::overhead::run(&ctx, net, requests, batch, seed))
+        .collect();
+    experiments::overhead::print_report(&results);
+    Ok(())
+}
+
+fn cmd_smallmodels() -> Result<()> {
+    let profiles = experiments::small_models::run();
+    experiments::small_models::print_report(&profiles);
+    Ok(())
+}
+
+fn cmd_extensions() -> Result<()> {
+    let a = spec("extensions", "§6.6 ablations")
+        .opt("requests", "50", "requests per ablation")
+        .opt("coldstart", "800", "cold-start penalty (ms)")
+        .opt("buckets", "6", "QoS clustering buckets")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let cold = experiments::extensions::run_cold_start(
+        &ctx, a.usize("requests")?, a.f64("coldstart")?, a.u64("seed")?);
+    experiments::extensions::print_cold_start(&cold);
+    let cl = experiments::extensions::run_clustering(
+        &ctx, a.usize("requests")?, a.usize("buckets")?, a.u64("seed")?);
+    experiments::extensions::print_clustering(&cl);
+    Ok(())
+}
+
+fn cmd_accuracy() -> Result<()> {
+    let a = spec("accuracy", "measured PJRT accuracy table").parse_env(2)?;
+    let manifest = Manifest::load(a.str("artifacts")?)?;
+    let engine = dynasplit::runtime::Engine::cpu()?;
+    println!("[accuracy] PJRT platform: {}", engine.platform());
+    let vgg = dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, Network::Vgg16)?;
+    let vit = dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, Network::Vit)?;
+    println!(
+        "[accuracy] runtimes loaded: vgg {:.0} ms, vit {:.0} ms",
+        vgg.load_ms, vit.load_ms
+    );
+    let t0 = std::time::Instant::now();
+    let measured = dynasplit::runtime::evaluate::measure_cached(&manifest, &vgg, &vit, true)?;
+    println!("[accuracy] measured in {:.1} s", t0.elapsed().as_secs_f64());
+    // cross-check against the python oracle expectations
+    let exp = &manifest.vgg16.expected_accuracy;
+    println!(
+        "vgg16 fp32: measured {:.4} vs python-oracle {:.4}",
+        measured.vgg_fp32, exp.fp32
+    );
+    println!(
+        "vit   fp32: measured {:.4} vs python-oracle {:.4}",
+        measured.vit_fp32, manifest.vit.expected_accuracy.fp32
+    );
+    Ok(())
+}
+
+fn cmd_runtime_info() -> Result<()> {
+    let a = spec("runtime-info", "artifact load/compile statistics").parse_env(2)?;
+    let manifest = Manifest::load(a.str("artifacts")?)?;
+    let engine = dynasplit::runtime::Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let mut t = Table::new(["network", "layers", "int8 variants", "load+compile"]);
+    for net in Network::ALL {
+        let rt = dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, net)?;
+        let entry = manifest.network(net);
+        t.row([
+            net.name().to_string(),
+            rt.num_layers().to_string(),
+            entry.layers.iter().filter(|l| l.int8.is_some()).count().to_string(),
+            format!("{:.0} ms", rt.load_ms),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Evaluation metrics (§6.2.2): latency, QoS violations, energy, accuracy.
+//!
+//! [`RequestRecord`] captures everything about one served request;
+//! [`MetricSet`] aggregates a run into the quantities the paper reports
+//! per strategy (violin quartiles, violation counts/exceedances, medians).
+
+use crate::space::Config;
+use crate::util::stats::{self, Summary};
+
+/// Outcome of one served request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub request_id: usize,
+    pub qos_ms: f64,
+    pub config: Config,
+    /// Mean end-to-end latency per inference in the request (ms).
+    pub latency_ms: f64,
+    /// Energy per inference (J), split by node.
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    pub accuracy: f64,
+    /// Controller overheads (Fig. 15): configuration selection + apply.
+    pub select_overhead_ms: f64,
+    pub apply_overhead_ms: f64,
+}
+
+impl RequestRecord {
+    /// QoS violation amount (ms); 0 if the deadline was met.
+    pub fn violation_ms(&self) -> f64 {
+        (self.latency_ms - self.qos_ms).max(0.0)
+    }
+
+    pub fn violated(&self) -> bool {
+        self.latency_ms > self.qos_ms
+    }
+}
+
+/// Aggregated metrics over a run (one strategy × one network).
+#[derive(Debug, Clone)]
+pub struct MetricSet {
+    pub strategy: String,
+    pub records: Vec<RequestRecord>,
+}
+
+impl MetricSet {
+    pub fn new(strategy: impl Into<String>, records: Vec<RequestRecord>) -> MetricSet {
+        MetricSet { strategy: strategy.into(), records }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.latency_ms).collect::<Vec<_>>())
+    }
+
+    pub fn energy_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.energy_j).collect::<Vec<_>>())
+    }
+
+    pub fn accuracy_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.accuracy).collect::<Vec<_>>())
+    }
+
+    /// Count of requests that missed their QoS deadline.
+    pub fn violations(&self) -> usize {
+        self.records.iter().filter(|r| r.violated()).count()
+    }
+
+    /// Fraction of requests that met their deadline (the paper's ~90%).
+    pub fn qos_met_fraction(&self) -> f64 {
+        1.0 - self.violations() as f64 / self.records.len().max(1) as f64
+    }
+
+    /// Exceedance distribution over violating requests only (Fig. 8/13).
+    pub fn violation_summary(&self) -> Option<Summary> {
+        let v: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.violated())
+            .map(|r| r.violation_ms())
+            .collect();
+        (!v.is_empty()).then(|| Summary::of(&v))
+    }
+
+    /// Scheduling decision counts (cloud / split / edge) — Fig. 6/11.
+    pub fn placement_counts(&self) -> (usize, usize, usize) {
+        let mut cloud = 0;
+        let mut split = 0;
+        let mut edge = 0;
+        for r in &self.records {
+            match r.config.placement() {
+                "cloud" => cloud += 1,
+                "edge" => edge += 1,
+                _ => split += 1,
+            }
+        }
+        (cloud, split, edge)
+    }
+
+    /// Textual violin: sparkline of the latency density (report aesthetics).
+    pub fn latency_violin(&self) -> String {
+        let lat: Vec<f64> = self.records.iter().map(|r| r.latency_ms).collect();
+        stats::sparkline(&stats::density_sketch(&lat, 24))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Config, Network, TpuMode};
+
+    fn rec(id: usize, qos: f64, lat: f64, energy: f64, split: usize) -> RequestRecord {
+        RequestRecord {
+            request_id: id,
+            qos_ms: qos,
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: split != 22,
+                split,
+            },
+            latency_ms: lat,
+            energy_j: energy,
+            edge_energy_j: energy / 2.0,
+            cloud_energy_j: energy / 2.0,
+            accuracy: 0.95,
+            select_overhead_ms: 0.1,
+            apply_overhead_ms: 50.0,
+        }
+    }
+
+    #[test]
+    fn violation_accounting() {
+        let m = MetricSet::new(
+            "test",
+            vec![rec(0, 100.0, 90.0, 1.0, 0), rec(1, 100.0, 130.0, 1.0, 5), rec(2, 50.0, 49.0, 1.0, 22)],
+        );
+        assert_eq!(m.violations(), 1);
+        assert!((m.qos_met_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        let vs = m.violation_summary().unwrap();
+        assert_eq!(vs.count, 1);
+        assert!((vs.median - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_violations_gives_none() {
+        let m = MetricSet::new("test", vec![rec(0, 100.0, 90.0, 1.0, 0)]);
+        assert!(m.violation_summary().is_none());
+        assert_eq!(m.qos_met_fraction(), 1.0);
+    }
+
+    #[test]
+    fn placement_counts() {
+        let m = MetricSet::new(
+            "t",
+            vec![rec(0, 1.0, 1.0, 1.0, 0), rec(1, 1.0, 1.0, 1.0, 5), rec(2, 1.0, 1.0, 1.0, 22), rec(3, 1.0, 1.0, 1.0, 7)],
+        );
+        assert_eq!(m.placement_counts(), (1, 2, 1));
+    }
+
+    #[test]
+    fn summaries_match_stats() {
+        let m = MetricSet::new(
+            "t",
+            (0..5).map(|i| rec(i, 100.0, (i + 1) as f64 * 10.0, i as f64, 3)).collect(),
+        );
+        assert_eq!(m.latency_summary().median, 30.0);
+        assert_eq!(m.energy_summary().max, 4.0);
+        assert_eq!(m.latency_violin().chars().count(), 24);
+    }
+}

@@ -1,0 +1,301 @@
+//! Loader for `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//!
+//! The manifest is the contract between the build-time Python world and
+//! the run-time rust world: per-layer HLO artifact paths, the lowered
+//! batch size, the eval-set binaries, and the expected-accuracy table the
+//! rust runtime is cross-checked against.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::space::Network;
+use crate::util::json::Json;
+
+/// Per-layer artifact entry.
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub index: usize,
+    pub name: String,
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub out_bytes: u64,
+    pub macs: u64,
+    pub quantizable: bool,
+    /// Path to the fp32 HLO text, relative to the artifact dir.
+    pub fp32: String,
+    /// Path to the int8 (edge-TPU) HLO text, if the layer has one.
+    pub int8: Option<String>,
+}
+
+/// Expected accuracies computed by the python oracle path.
+#[derive(Debug, Clone)]
+pub struct ExpectedAccuracy {
+    pub fp32: f64,
+    /// `int8_prefix[k]` = accuracy with layers < k quantized (VGG only).
+    pub int8_prefix: Option<Vec<f64>>,
+}
+
+/// One network's manifest section.
+#[derive(Debug, Clone)]
+pub struct NetworkEntry {
+    pub net: Network,
+    pub num_layers: usize,
+    pub layers: Vec<LayerEntry>,
+    pub expected_accuracy: ExpectedAccuracy,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub img: usize,
+    pub classes: usize,
+    pub eval_images: PathBuf,
+    pub eval_labels: PathBuf,
+    pub eval_count: usize,
+    pub vgg16: NetworkEntry,
+    pub vit: NetworkEntry,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let root = Json::parse_file(&path)?;
+        let version = root.get("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let eval = root.get("eval")?;
+        let networks = root.get("networks")?;
+        let parse_net = |net: Network| -> Result<NetworkEntry> {
+            let entry = networks
+                .get(net.name())
+                .with_context(|| format!("network {} missing from manifest", net.name()))?;
+            let layers = entry
+                .get("layers")?
+                .as_arr()?
+                .iter()
+                .map(|l| parse_layer(l))
+                .collect::<Result<Vec<_>>>()?;
+            let acc = entry.get("expected_accuracy")?;
+            let expected_accuracy = ExpectedAccuracy {
+                fp32: acc.get("fp32")?.as_f64()?,
+                int8_prefix: match acc.opt("int8_prefix") {
+                    Some(a) => Some(a.as_f64_vec()?),
+                    None => None,
+                },
+            };
+            let e = NetworkEntry {
+                net,
+                num_layers: entry.get("num_layers")?.as_usize()?,
+                layers,
+                expected_accuracy,
+            };
+            e.validate()?;
+            Ok(e)
+        };
+        Ok(Manifest {
+            batch: root.get("batch")?.as_usize()?,
+            img: root.get("img")?.as_usize()?,
+            classes: root.get("classes")?.as_usize()?,
+            eval_images: dir.join(eval.get("images")?.as_str()?),
+            eval_labels: dir.join(eval.get("labels")?.as_str()?),
+            eval_count: eval.get("count")?.as_usize()?,
+            vgg16: parse_net(Network::Vgg16)?,
+            vit: parse_net(Network::Vit)?,
+            dir,
+        })
+    }
+
+    pub fn network(&self, net: Network) -> &NetworkEntry {
+        match net {
+            Network::Vgg16 => &self.vgg16,
+            Network::Vit => &self.vit,
+        }
+    }
+
+    /// Absolute path of a layer artifact.
+    pub fn artifact_path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// Load the eval set: `(images, labels)`; images are row-major
+    /// `count * img * img * 3` little-endian f32.
+    pub fn load_eval_set(&self) -> Result<(Vec<f32>, Vec<u8>)> {
+        let img_bytes = std::fs::read(&self.eval_images)
+            .with_context(|| format!("reading {}", self.eval_images.display()))?;
+        let expected = self.eval_count * self.img * self.img * 3 * 4;
+        if img_bytes.len() != expected {
+            bail!(
+                "eval image file is {} bytes, expected {expected}",
+                img_bytes.len()
+            );
+        }
+        let images: Vec<f32> = img_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let labels = std::fs::read(&self.eval_labels)
+            .with_context(|| format!("reading {}", self.eval_labels.display()))?;
+        if labels.len() != self.eval_count {
+            bail!("eval label file is {} bytes, expected {}", labels.len(), self.eval_count);
+        }
+        Ok((images, labels))
+    }
+}
+
+impl NetworkEntry {
+    fn validate(&self) -> Result<()> {
+        if self.layers.len() != self.num_layers {
+            bail!(
+                "{}: {} layer entries but num_layers = {}",
+                self.net.name(),
+                self.layers.len(),
+                self.num_layers
+            );
+        }
+        if self.num_layers != self.net.num_layers() {
+            bail!(
+                "{}: manifest has {} layers, Table-1 space expects {}",
+                self.net.name(),
+                self.num_layers,
+                self.net.num_layers()
+            );
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.index != i {
+                bail!("{}: layer {i} has index {}", self.net.name(), l.index);
+            }
+            // shapes must chain: layer i's output is layer i+1's input
+            if i + 1 < self.layers.len() && l.out_shape != self.layers[i + 1].in_shape {
+                bail!(
+                    "{}: layer {i} out_shape {:?} != layer {} in_shape {:?}",
+                    self.net.name(),
+                    l.out_shape,
+                    i + 1,
+                    self.layers[i + 1].in_shape
+                );
+            }
+        }
+        if let Some(prefix) = &self.expected_accuracy.int8_prefix {
+            if prefix.len() != self.num_layers + 1 {
+                bail!("int8_prefix has {} entries, expected {}", prefix.len(), self.num_layers + 1);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_layer(l: &Json) -> Result<LayerEntry> {
+    Ok(LayerEntry {
+        index: l.get("index")?.as_usize()?,
+        name: l.get("name")?.as_str()?.to_string(),
+        kind: l.get("kind")?.as_str()?.to_string(),
+        in_shape: l.get("in_shape")?.as_usize_vec()?,
+        out_shape: l.get("out_shape")?.as_usize_vec()?,
+        out_bytes: l.get("out_bytes")?.as_f64()? as u64,
+        macs: l.get("macs")?.as_f64()? as u64,
+        quantizable: l.get("quantizable")?.as_bool()?,
+        fp32: l.get("fp32")?.as_str()?.to_string(),
+        int8: match l.opt("int8") {
+            Some(p) => Some(p.as_str()?.to_string()),
+            None => None,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature but schema-complete manifest for parser tests.
+    pub fn fake_manifest_json() -> String {
+        let layer = |i: usize, net: &str, int8: bool| {
+            let int8_field = if int8 {
+                format!(r#","int8":"{net}/int8/layer_{i:02}.hlo.txt""#)
+            } else {
+                String::new()
+            };
+            format!(
+                r#"{{"index":{i},"name":"l{i}","kind":"conv","in_shape":[4],"out_shape":[4],
+                   "out_bytes":16,"macs":100,"quantizable":{int8}{int8_field},
+                   "fp32":"{net}/fp32/layer_{i:02}.hlo.txt"}}"#
+            )
+        };
+        let vgg_layers: Vec<String> = (0..22).map(|i| layer(i, "vgg16", true)).collect();
+        let vit_layers: Vec<String> = (0..19).map(|i| layer(i, "vit", false)).collect();
+        let prefix: Vec<String> = (0..=22).map(|_| "0.9".to_string()).collect();
+        format!(
+            r#"{{"version":1,"batch":16,"img":32,"classes":10,
+                "eval":{{"images":"eval_images.bin","labels":"eval_labels.bin","count":4,"seed":99}},
+                "networks":{{
+                  "vgg16":{{"num_layers":22,"layers":[{}],
+                            "expected_accuracy":{{"fp32":0.95,"int8_prefix":[{}]}}}},
+                  "vit":{{"num_layers":19,"layers":[{}],
+                          "expected_accuracy":{{"fp32":0.93}}}}}}}}"#,
+            vgg_layers.join(","),
+            prefix.join(","),
+            vit_layers.join(",")
+        )
+    }
+
+    fn write_fake(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        // eval set: 4 images of 32*32*3 f32 + 4 labels
+        let img = vec![0u8; 4 * 32 * 32 * 3 * 4];
+        std::fs::write(dir.join("eval_images.bin"), img).unwrap();
+        std::fs::write(dir.join("eval_labels.bin"), vec![0u8, 1, 2, 3]).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dynasplit_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let dir = tmpdir("ok");
+        write_fake(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.vgg16.layers.len(), 22);
+        assert_eq!(m.vit.layers.len(), 19);
+        assert!(m.vgg16.layers[0].int8.is_some());
+        assert!(m.vit.layers[0].int8.is_none());
+        assert_eq!(m.vgg16.expected_accuracy.int8_prefix.as_ref().unwrap().len(), 23);
+        let (imgs, labels) = m.load_eval_set().unwrap();
+        assert_eq!(imgs.len(), 4 * 32 * 32 * 3);
+        assert_eq!(labels, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let dir = tmpdir("ver");
+        write_fake(&dir);
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        std::fs::write(dir.join("manifest.json"), text.replace("\"version\":1", "\"version\":9"))
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_eval_set() {
+        let dir = tmpdir("trunc");
+        write_fake(&dir);
+        std::fs::write(dir.join("eval_images.bin"), vec![0u8; 10]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.load_eval_set().is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors_with_path() {
+        let err = Manifest::load("/nonexistent/nowhere").unwrap_err();
+        assert!(format!("{err:#}").contains("nowhere"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Static per-layer cost tables, mirroring `python/compile/model.py`.
+//!
+//! The VGG16-mini / ViT-mini layer plans are *shared constants* of the
+//! build: python derives them for AOT lowering, rust derives them here
+//! for the simulator's cost model.  `tests/manifest_consistency.rs`
+//! asserts both derivations agree layer-by-layer against the emitted
+//! manifest, so they cannot drift apart silently.
+
+use crate::space::Network;
+
+/// Image geometry (python: `model.IMG`, `model.NUM_CLASSES`).
+pub const IMG: usize = 32;
+pub const NUM_CLASSES: usize = 10;
+
+// ViT-mini geometry (python: `model.VIT_*`).
+pub const VIT_PATCH: usize = 8;
+pub const VIT_TOKENS: usize = (IMG / VIT_PATCH) * (IMG / VIT_PATCH);
+pub const VIT_SEQ: usize = VIT_TOKENS + 1;
+pub const VIT_DIM: usize = 64;
+pub const VIT_MLP: usize = 128;
+pub const VIT_BLOCKS: usize = 12;
+
+/// Cost-relevant description of one layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerCost {
+    pub index: usize,
+    pub name: String,
+    pub kind: &'static str,
+    /// Multiply-accumulates per image.
+    pub macs: u64,
+    /// f32 bytes of the layer's output per image (what a split after this
+    /// layer streams edge → cloud).
+    pub out_bytes: u64,
+    /// Whether an int8 edge-TPU variant exists (VGG conv/fc only).
+    pub quantizable: bool,
+}
+
+/// Whole-network cost table.
+#[derive(Debug, Clone)]
+pub struct NetCost {
+    pub net: Network,
+    pub layers: Vec<LayerCost>,
+    /// f32 bytes of the network input per image (what cloud-only streams).
+    pub input_bytes: u64,
+}
+
+impl NetCost {
+    pub fn of(net: Network) -> NetCost {
+        match net {
+            Network::Vgg16 => vgg_cost(),
+            Network::Vit => vit_cost(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// MACs of the head segment (layers < k).
+    pub fn head_macs(&self, k: usize) -> u64 {
+        self.layers[..k].iter().map(|l| l.macs).sum()
+    }
+
+    /// MACs of the tail segment (layers >= k).
+    pub fn tail_macs(&self, k: usize) -> u64 {
+        self.layers[k..].iter().map(|l| l.macs).sum()
+    }
+
+    /// Bytes streamed edge → cloud for split point k: the input for
+    /// cloud-only, the k-th intermediate otherwise, nothing for edge-only.
+    pub fn transfer_bytes(&self, k: usize) -> u64 {
+        if k == 0 {
+            self.input_bytes
+        } else if k >= self.layers.len() {
+            0
+        } else {
+            self.layers[k - 1].out_bytes
+        }
+    }
+
+    /// Bytes streamed cloud → edge (the class-probability vector).
+    pub fn result_bytes(&self) -> u64 {
+        4 * NUM_CLASSES as u64
+    }
+}
+
+/// VGG16-mini channel plan: (kind, width) exactly as python's `VGG_PLAN`.
+const VGG_PLAN: [(&str, usize); 22] = [
+    ("conv", 16), ("conv", 16), ("pool", 0),
+    ("conv", 32), ("conv", 32), ("pool", 0),
+    ("conv", 64), ("conv", 64), ("conv", 64), ("pool", 0),
+    ("conv", 64), ("conv", 64), ("conv", 64), ("pool", 0),
+    ("conv", 64), ("conv", 64), ("conv", 64), ("pool", 0),
+    ("flatten", 0), ("fc", 128), ("fc", 128), ("predictions", NUM_CLASSES),
+];
+
+fn vgg_cost() -> NetCost {
+    let mut layers = Vec::with_capacity(VGG_PLAN.len());
+    let mut cin = 3usize;
+    let mut spatial = IMG;
+    let mut feat = 0usize;
+    for (i, &(kind, width)) in VGG_PLAN.iter().enumerate() {
+        let (macs, out_elems, quantizable) = match kind {
+            "conv" => {
+                let m = 9 * cin * width * spatial * spatial;
+                cin = width;
+                (m, spatial * spatial * width, true)
+            }
+            "pool" => {
+                let m = spatial * spatial * cin; // comparisons charged as 1 MAC
+                spatial /= 2;
+                (m, spatial * spatial * cin, false)
+            }
+            "flatten" => {
+                feat = spatial * spatial * cin;
+                (0, feat, false)
+            }
+            _ => {
+                // fc / predictions
+                let m = feat * width;
+                feat = width;
+                (m, width, true)
+            }
+        };
+        layers.push(LayerCost {
+            index: i,
+            name: format!("{kind}_{i:02}"),
+            kind,
+            macs: macs as u64,
+            out_bytes: 4 * out_elems as u64,
+            quantizable,
+        });
+    }
+    NetCost {
+        net: Network::Vgg16,
+        layers,
+        input_bytes: (4 * IMG * IMG * 3) as u64,
+    }
+}
+
+fn vit_cost() -> NetCost {
+    let pdim = VIT_PATCH * VIT_PATCH * 3;
+    let (s, d) = (VIT_SEQ, VIT_DIM);
+    let mut layers = Vec::new();
+    let mut add = |name: &str, kind: &'static str, macs: usize, out_elems: usize| {
+        layers.push(LayerCost {
+            index: layers.len(),
+            name: name.to_string(),
+            kind,
+            macs: macs as u64,
+            out_bytes: 4 * out_elems as u64,
+            quantizable: false, // paper: ViT never runs on the edge TPU
+        });
+    };
+    add("patchify", "patchify", 0, VIT_TOKENS * pdim);
+    add("embed", "embed", VIT_TOKENS * pdim * d, VIT_TOKENS * d);
+    add("cls_pos", "cls_pos", s * d, s * d);
+    let block_macs = s * d * 3 * d + 2 * s * s * d + s * d * d + 2 * s * d * VIT_MLP;
+    for b in 0..VIT_BLOCKS {
+        add(&format!("block_{b:02}"), "block", block_macs, s * d);
+    }
+    add("norm", "norm", s * d, s * d);
+    add("extract", "extract", 0, d);
+    add("pre_logits", "pre_logits", d * d, d);
+    add("head", "head", d * NUM_CLASSES, NUM_CLASSES);
+    NetCost {
+        net: Network::Vit,
+        layers,
+        input_bytes: (4 * IMG * IMG * 3) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_table1() {
+        assert_eq!(NetCost::of(Network::Vgg16).num_layers(), 22);
+        assert_eq!(NetCost::of(Network::Vit).num_layers(), 19);
+    }
+
+    #[test]
+    fn vgg_macs_sane() {
+        let c = NetCost::of(Network::Vgg16);
+        // first conv: 9 * 3 * 16 * 32 * 32 = 442,368
+        assert_eq!(c.layers[0].macs, 442_368);
+        // fc1 after 5 pools: 1*1*64 -> 128
+        assert_eq!(c.layers[19].macs, 64 * 128);
+        // total in the 10-20M range for the mini scale
+        let t = c.total_macs();
+        assert!((10_000_000..25_000_000).contains(&t), "total {t}");
+    }
+
+    #[test]
+    fn head_plus_tail_is_total() {
+        for net in Network::ALL {
+            let c = NetCost::of(net);
+            for k in 0..=c.num_layers() {
+                assert_eq!(c.head_macs(k) + c.tail_macs(k), c.total_macs());
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_bytes_special_cases() {
+        let c = NetCost::of(Network::Vgg16);
+        assert_eq!(c.transfer_bytes(0), c.input_bytes); // cloud-only sends input
+        assert_eq!(c.transfer_bytes(22), 0); // edge-only sends nothing
+        // split after conv_00: 32*32*16 f32
+        assert_eq!(c.transfer_bytes(1), 4 * 32 * 32 * 16);
+    }
+
+    #[test]
+    fn vgg_intermediates_nonmonotone() {
+        // paper finding (iii): early conv outputs are larger than the input
+        let c = NetCost::of(Network::Vgg16);
+        assert!(c.layers[0].out_bytes > c.input_bytes);
+        let sizes: Vec<u64> = c.layers.iter().map(|l| l.out_bytes).collect();
+        assert!(sizes.windows(2).any(|w| w[0] < w[1]));
+        assert!(sizes.windows(2).any(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn vit_blocks_uniform() {
+        let c = NetCost::of(Network::Vit);
+        let blocks: Vec<&LayerCost> =
+            c.layers.iter().filter(|l| l.kind == "block").collect();
+        assert_eq!(blocks.len(), 12);
+        assert!(blocks.windows(2).all(|w| w[0].macs == w[1].macs));
+        assert!(blocks.windows(2).all(|w| w[0].out_bytes == w[1].out_bytes));
+    }
+
+    #[test]
+    fn quantizable_only_vgg_parametric() {
+        let vgg = NetCost::of(Network::Vgg16);
+        assert_eq!(vgg.layers.iter().filter(|l| l.quantizable).count(), 16);
+        let vit = NetCost::of(Network::Vit);
+        assert!(vit.layers.iter().all(|l| !l.quantizable));
+    }
+}

@@ -1,0 +1,18 @@
+//! Network models as seen from the coordinator.
+//!
+//! * [`meta`] — static per-layer cost tables (MACs, intermediate tensor
+//!   bytes, quantizability) computed from the same layer plans as
+//!   `python/compile/model.py`.  The simulator's cost model and the
+//!   solver run from these without needing artifacts on disk.
+//! * [`manifest`] — loader for `artifacts/manifest.json` produced by the
+//!   AOT step: artifact paths per layer, batch size, eval-set location,
+//!   and the python-side expected-accuracy table.  Integration tests
+//!   cross-check [`meta`] against the manifest so the two layer
+//!   descriptions can never drift silently.
+
+pub mod manifest;
+pub mod meta;
+pub mod small;
+
+pub use manifest::Manifest;
+pub use meta::{LayerCost, NetCost};

@@ -1,0 +1,164 @@
+//! Cost tables for the two *small* preliminary-study networks.
+//!
+//! The paper's preliminary study (§2.2) also measured ResNet50 and
+//! MobileNetV2 and found — key finding (i) — that "smaller models
+//! optimized for mobile devices do not benefit from split computing":
+//! they run fast and frugally edge-only, so no split or cloud
+//! configuration dominates.  Both were then dropped from the main
+//! evaluation.  We reproduce that finding with simulator-level cost
+//! tables (no AOT artifacts needed — the finding is about the cost
+//! structure, not the numerics): topology-faithful miniature layer
+//! plans with per-layer MACs and intermediate sizes.
+
+use crate::model::meta::{LayerCost, IMG, NUM_CLASSES};
+
+/// A small-model cost table (same shape as `NetCost`, but these networks
+/// are not part of the Table-1 configuration space — they only appear in
+/// the preliminary study).
+#[derive(Debug, Clone)]
+pub struct SmallNetCost {
+    pub name: &'static str,
+    pub layers: Vec<LayerCost>,
+    pub input_bytes: u64,
+    /// Edge-only fp32 full-network latency at 1.8 GHz (seconds) — the
+    /// §2.2 calibration anchor. Small models are *fast* on the edge:
+    /// the paper's motivation for finding (i).
+    pub edge_full_fp32_s: f64,
+    /// Cloud GPU full-network compute time (seconds).
+    pub cloud_full_gpu_s: f64,
+}
+
+impl SmallNetCost {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn transfer_bytes(&self, k: usize) -> u64 {
+        if k == 0 {
+            self.input_bytes
+        } else if k >= self.layers.len() {
+            0
+        } else {
+            self.layers[k - 1].out_bytes
+        }
+    }
+}
+
+fn layer(index: usize, kind: &'static str, macs: usize, out_elems: usize, q: bool) -> LayerCost {
+    LayerCost {
+        index,
+        name: format!("{kind}_{index:02}"),
+        kind,
+        macs: macs as u64,
+        out_bytes: 4 * out_elems as u64,
+        quantizable: q,
+    }
+}
+
+/// ResNet50-mini: conv stem + 16 bottleneck blocks (4 stages) + pool +
+/// fc, scaled to the 32×32 substrate like the main networks.  The paper
+/// quotes "0.85 million parameters" for its (reduced) ResNet50.
+pub fn resnet50_mini() -> SmallNetCost {
+    let mut layers = Vec::new();
+    let mut idx = 0;
+    let mut add = |kind: &'static str, macs: usize, out_elems: usize, q: bool| {
+        layers.push(layer(idx, kind, macs, out_elems, q));
+        idx += 1;
+    };
+    // stem: 3x3 conv 3->16 at 32x32
+    add("conv", 9 * 3 * 16 * 32 * 32, 32 * 32 * 16, true);
+    // 4 stages of bottleneck blocks: (blocks, width, spatial)
+    for &(blocks, w, s) in &[(3usize, 8usize, 32usize), (4, 12, 16), (6, 16, 8), (3, 24, 4)] {
+        for _ in 0..blocks {
+            // 1x1 reduce + 3x3 + 1x1 expand, charged as one block layer
+            let macs = (w * w + 9 * w * w + w * w) * s * s;
+            add("block", macs, s * s * w, true);
+        }
+    }
+    // global average pool + fc head
+    add("pool", 4 * 4 * 24, 24, false);
+    add("predictions", 24 * NUM_CLASSES, NUM_CLASSES, true);
+    SmallNetCost {
+        name: "resnet50",
+        layers,
+        input_bytes: (4 * IMG * IMG * 3) as u64,
+        // §2.2: "smaller models execute faster ... in edge-only
+        // deployments": edge-only runs *below* the cloud round-trip
+        // floor (prep + RTT + cloud prep ≈ 30 ms), so offloading can
+        // never win — the mechanism behind finding (i).
+        edge_full_fp32_s: 0.040,
+        cloud_full_gpu_s: 0.020,
+    }
+}
+
+/// MobileNetV2-mini: depthwise-separable inverted residuals — very few
+/// MACs, the canonical mobile-optimized network of finding (i).
+pub fn mobilenetv2_mini() -> SmallNetCost {
+    let mut layers = Vec::new();
+    let mut idx = 0;
+    let mut add = |kind: &'static str, macs: usize, out_elems: usize, q: bool| {
+        layers.push(layer(idx, kind, macs, out_elems, q));
+        idx += 1;
+    };
+    add("conv", 9 * 3 * 8 * 32 * 32, 32 * 32 * 8, true);
+    for &(blocks, w, s, expand) in
+        &[(2usize, 8usize, 32usize, 4usize), (3, 12, 16, 6), (4, 16, 8, 6), (3, 24, 4, 6)]
+    {
+        for _ in 0..blocks {
+            // 1x1 expand + 3x3 depthwise + 1x1 project
+            let macs = (w * w * expand + 9 * w * expand + w * expand * w) * s * s;
+            add("block", macs, s * s * w, true);
+        }
+    }
+    add("pool", 4 * 4 * 24, 24, false);
+    add("predictions", 24 * NUM_CLASSES, NUM_CLASSES, true);
+    SmallNetCost {
+        name: "mobilenetv2",
+        layers,
+        input_bytes: (4 * IMG * IMG * 3) as u64,
+        // fastest of the four §2.2 networks on the edge.
+        edge_full_fp32_s: 0.025,
+        cloud_full_gpu_s: 0.015,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_models_are_much_cheaper_than_vgg() {
+        let vgg = crate::model::NetCost::of(crate::space::Network::Vgg16);
+        for small in [resnet50_mini(), mobilenetv2_mini()] {
+            assert!(
+                small.total_macs() * 2 < vgg.total_macs(),
+                "{} not small: {} vs {}",
+                small.name,
+                small.total_macs(),
+                vgg.total_macs()
+            );
+            assert!(small.edge_full_fp32_s < 0.25);
+        }
+    }
+
+    #[test]
+    fn mobilenet_cheaper_than_resnet() {
+        assert!(mobilenetv2_mini().total_macs() < resnet50_mini().total_macs());
+    }
+
+    #[test]
+    fn transfer_bytes_structure() {
+        let r = resnet50_mini();
+        assert_eq!(r.transfer_bytes(0), r.input_bytes);
+        assert_eq!(r.transfer_bytes(r.layers.len()), 0);
+        // stem output (32*32*16 f32) is larger than the input — the same
+        // finding-(iii) structure as VGG16
+        assert!(r.transfer_bytes(1) > r.input_bytes);
+    }
+
+    #[test]
+    fn layer_counts() {
+        assert_eq!(resnet50_mini().layers.len(), 1 + 16 + 2);
+        assert_eq!(mobilenetv2_mini().layers.len(), 1 + 12 + 2);
+    }
+}

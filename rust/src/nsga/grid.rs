@@ -1,0 +1,82 @@
+//! Deterministic grid sampler (Optuna `GridSampler` substitute).
+//!
+//! The paper uses grid search for the "~80%" exploration baseline
+//! (§6.3.4) and implicitly for the Table-2 latency-bounds sweep.  The
+//! sampler walks the feasible space in a deterministic shuffled order so
+//! a budget of `n` trials covers a reproducible n-subset.
+
+use super::{Individual, M};
+use crate::space::Space;
+use crate::util::rng::Pcg32;
+
+/// Evaluate up to `max_trials` feasible configurations in deterministic
+/// (seed-shuffled) grid order.
+pub fn run<F>(space: &Space, max_trials: usize, seed: u64, mut evaluate: F) -> Vec<Individual>
+where
+    F: FnMut(&crate::space::Config) -> [f64; M],
+{
+    let mut configs = space.enumerate_feasible();
+    let mut rng = Pcg32::new(seed, 17);
+    rng.shuffle(&mut configs);
+    configs.truncate(max_trials);
+    configs
+        .into_iter()
+        .map(|config| Individual { genes: space.encode(&config), config, objs: evaluate(&config) })
+        .collect()
+}
+
+/// Full exhaustive sweep (Table 2 bounds).
+pub fn run_full<F>(space: &Space, evaluate: F) -> Vec<Individual>
+where
+    F: FnMut(&crate::space::Config) -> [f64; M],
+{
+    let n = space.enumerate_feasible().len();
+    run(space, n, 0, evaluate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{feasible, Network};
+
+    #[test]
+    fn deterministic_given_seed() {
+        let space = Space::new(Network::Vgg16);
+        let a = run(&space, 25, 9, |_| [0.0; 3]);
+        let b = run(&space, 25, 9, |_| [0.0; 3]);
+        let ga: Vec<_> = a.iter().map(|i| i.genes).collect();
+        let gb: Vec<_> = b.iter().map(|i| i.genes).collect();
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn different_seed_different_subset() {
+        let space = Space::new(Network::Vgg16);
+        let a = run(&space, 25, 1, |_| [0.0; 3]);
+        let b = run(&space, 25, 2, |_| [0.0; 3]);
+        let ga: Vec<_> = a.iter().map(|i| i.genes).collect();
+        let gb: Vec<_> = b.iter().map(|i| i.genes).collect();
+        assert_ne!(ga, gb);
+    }
+
+    #[test]
+    fn all_feasible_and_unique() {
+        let space = Space::new(Network::Vit);
+        let out = run(&space, 10_000, 3, |_| [0.0; 3]);
+        assert_eq!(out.len(), space.enumerate_feasible().len());
+        let mut genes: Vec<_> = out.iter().map(|i| i.genes).collect();
+        genes.sort_unstable();
+        genes.dedup();
+        assert_eq!(genes.len(), out.len());
+        for i in &out {
+            assert!(feasible::is_feasible(&i.config));
+        }
+    }
+
+    #[test]
+    fn full_sweep_covers_space() {
+        let space = Space::new(Network::Vgg16);
+        let out = run_full(&space, |_| [0.0; 3]);
+        assert_eq!(out.len(), space.enumerate_feasible().len());
+    }
+}

@@ -1,0 +1,248 @@
+//! NSGA-III from scratch (Deb & Jain 2014, parts I/II) + a grid sampler.
+//!
+//! The paper's DynaSplit *Solver* uses Optuna's `NSGAIIISampler` to solve
+//! the 3-objective MOOP (min latency, min energy, max accuracy) over the
+//! conditional configuration space; this module is our from-scratch
+//! substrate for it:
+//!
+//! * [`refpoints`] — Das–Dennis structured reference points;
+//! * [`sort`] — fast non-dominated sorting + Pareto utilities;
+//! * [`ops`] — integer/categorical genetic operators with feasibility
+//!   repair (`space::feasible`);
+//! * [`niching`] — normalization, reference-line association, and
+//!   niche-preserving selection (the NSGA-III replacement for NSGA-II's
+//!   crowding distance);
+//! * [`grid`] — exhaustive/deterministic sampler (the paper's ~80% search
+//!   and the Table-2 bounds sweep);
+//! * [`hypervolume`] — quality indicator used by the test-suite to show
+//!   NSGA-III beats random search at equal budget.
+
+pub mod grid;
+pub mod hypervolume;
+pub mod niching;
+pub mod ops;
+pub mod refpoints;
+pub mod sort;
+
+use crate::space::{feasible, Config, Space};
+use crate::util::rng::Pcg32;
+
+/// Number of objectives: (latency_ms, energy_j, -accuracy), all minimized.
+pub const M: usize = 3;
+
+/// One evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct Individual {
+    pub genes: [usize; 4],
+    pub config: Config,
+    /// Minimization objectives [latency_ms, energy_j, neg_accuracy].
+    pub objs: [f64; M],
+}
+
+/// `a` Pareto-dominates `b` (all ≤, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// NSGA-III hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct NsgaConfig {
+    /// Das–Dennis divisions (p=12 → 91 reference points for M=3).
+    pub divisions: usize,
+    /// Population size; rounded up to a multiple of 4 ≥ #refpoints.
+    pub population: usize,
+    /// Per-gene mutation probability.
+    pub mutation_p: f64,
+    /// Crossover probability per pair.
+    pub crossover_p: f64,
+}
+
+impl Default for NsgaConfig {
+    fn default() -> Self {
+        NsgaConfig { divisions: 12, population: 92, mutation_p: 0.25, crossover_p: 0.9 }
+    }
+}
+
+/// NSGA-III driver over the DynaSplit configuration space.
+///
+/// The evaluation budget is expressed in *trials* (distinct evaluations),
+/// matching how the paper reports search effort (20% of |X| = 184 trials
+/// for VGG16).  Already-seen genomes are not re-evaluated (the evaluator
+/// is assumed deterministic per trial; the solver layers measurement
+/// averaging on top).
+pub struct NsgaIII<'a> {
+    pub space: Space,
+    pub config: NsgaConfig,
+    evaluate: Box<dyn FnMut(&Config) -> [f64; M] + 'a>,
+    /// All evaluated individuals, in evaluation order (the trial log).
+    pub history: Vec<Individual>,
+    seen: std::collections::HashSet<[usize; 4]>,
+    ref_points: Vec<[f64; M]>,
+}
+
+impl<'a> NsgaIII<'a> {
+    pub fn new<F>(space: Space, config: NsgaConfig, evaluate: F) -> Self
+    where
+        F: FnMut(&Config) -> [f64; M] + 'a,
+    {
+        let ref_points = refpoints::das_dennis(config.divisions);
+        NsgaIII {
+            space,
+            config,
+            evaluate: Box::new(evaluate),
+            history: Vec::new(),
+            seen: std::collections::HashSet::new(),
+            ref_points,
+        }
+    }
+
+    fn eval(&mut self, genes: [usize; 4]) -> Option<Individual> {
+        let config = feasible::repair(self.space.decode(&genes));
+        let genes = self.space.encode(&config);
+        if !self.seen.insert(genes) {
+            return None; // duplicate: costs no trial budget
+        }
+        let objs = (self.evaluate)(&config);
+        let ind = Individual { genes, config, objs };
+        self.history.push(ind.clone());
+        Some(ind)
+    }
+
+    /// Run until `max_trials` evaluations; returns the final population.
+    pub fn run(&mut self, max_trials: usize, rng: &mut Pcg32) -> Vec<Individual> {
+        let pop_size = self.config.population.max(4);
+        // --- initial population: random feasible points ---
+        let mut pop: Vec<Individual> = Vec::with_capacity(pop_size);
+        let mut attempts = 0;
+        while pop.len() < pop_size.min(max_trials) && attempts < max_trials * 20 {
+            attempts += 1;
+            let c = self.space.sample(rng);
+            let genes = self.space.encode(&c);
+            if let Some(ind) = self.eval(genes) {
+                pop.push(ind);
+            }
+        }
+        // --- generations ---
+        while self.history.len() < max_trials {
+            let remaining = max_trials - self.history.len();
+            let mut offspring: Vec<Individual> = Vec::new();
+            let mut stale = 0;
+            while offspring.len() < pop_size.min(remaining) && stale < 200 {
+                let p1 = ops::tournament(&pop, rng);
+                let p2 = ops::tournament(&pop, rng);
+                let (mut c1, mut c2) =
+                    ops::crossover(&p1.genes, &p2.genes, self.config.crossover_p, rng);
+                ops::mutate(&mut c1, &self.space, self.config.mutation_p, rng);
+                ops::mutate(&mut c2, &self.space, self.config.mutation_p, rng);
+                let mut made = false;
+                for genes in [c1, c2] {
+                    if offspring.len() >= pop_size.min(remaining) {
+                        break;
+                    }
+                    if let Some(ind) = self.eval(genes) {
+                        offspring.push(ind);
+                        made = true;
+                    }
+                }
+                if !made {
+                    stale += 1;
+                }
+            }
+            if offspring.is_empty() {
+                break; // search space exhausted (possible on tiny spaces)
+            }
+            pop.extend(offspring);
+            pop = niching::select(pop, pop_size, &self.ref_points, rng);
+        }
+        pop
+    }
+
+    /// Non-dominated set over the entire history (what the offline phase
+    /// hands to the controller).
+    pub fn pareto_front(&self) -> Vec<Individual> {
+        sort::pareto_filter(&self.history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Network;
+
+    /// Synthetic objective with a known trade-off structure.
+    fn toy_eval(c: &Config) -> [f64; M] {
+        let lat = 100.0 + 10.0 * c.split as f64 - 20.0 * c.cpu_ghz(); // favor high freq
+        let energy = 5.0 + 0.5 * (22 - c.split.min(22)) as f64 + 2.0 * c.cpu_ghz();
+        let acc = 0.95 - 0.001 * c.split as f64;
+        [lat, energy, -acc]
+    }
+
+    #[test]
+    fn respects_trial_budget_and_dedup() {
+        let space = Space::new(Network::Vgg16);
+        let mut n = NsgaIII::new(space, NsgaConfig::default(), toy_eval);
+        let mut rng = Pcg32::seeded(42);
+        n.run(150, &mut rng);
+        assert!(n.history.len() <= 150);
+        let mut genes: Vec<_> = n.history.iter().map(|i| i.genes).collect();
+        genes.sort_unstable();
+        genes.dedup();
+        assert_eq!(genes.len(), n.history.len(), "re-evaluated a duplicate");
+    }
+
+    #[test]
+    fn all_evaluated_configs_feasible() {
+        let space = Space::new(Network::Vit);
+        let mut n = NsgaIII::new(space, NsgaConfig::default(), toy_eval);
+        let mut rng = Pcg32::seeded(7);
+        n.run(120, &mut rng);
+        for ind in &n.history {
+            assert!(feasible::is_feasible(&ind.config), "{:?}", ind.config);
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_mutually_nondominated() {
+        let space = Space::new(Network::Vgg16);
+        let mut n = NsgaIII::new(space, NsgaConfig::default(), toy_eval);
+        let mut rng = Pcg32::seeded(3);
+        n.run(200, &mut rng);
+        let front = n.pareto_front();
+        assert!(!front.is_empty());
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(&a.objs, &b.objs) || a.genes == b.genes);
+            }
+        }
+    }
+
+    #[test]
+    fn exhausts_tiny_space_gracefully() {
+        // With an enormous budget the loop must terminate once every
+        // feasible genome has been tried.
+        let space = Space::new(Network::Vit);
+        let feasible_n = space.enumerate_feasible().len();
+        let mut n = NsgaIII::new(space, NsgaConfig::default(), toy_eval);
+        let mut rng = Pcg32::seeded(9);
+        n.run(feasible_n * 10, &mut rng);
+        assert!(n.history.len() <= feasible_n);
+        assert!(n.history.len() > feasible_n / 2, "covered too little");
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 1.0]));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]));
+    }
+}

@@ -1,0 +1,237 @@
+//! NSGA-III environmental selection: non-dominated fronts, adaptive
+//! normalization, association to reference lines, and niche preservation
+//! (Deb & Jain 2014, Algorithm 1-4 — simplified extreme-point handling:
+//! nadir estimated from the worst of the first front, the standard
+//! fallback when the intercept system is degenerate).
+
+use super::{sort, Individual, M};
+use crate::util::rng::Pcg32;
+
+/// Select `target` survivors from a combined parent+offspring population.
+pub fn select(
+    pop: Vec<Individual>,
+    target: usize,
+    ref_points: &[[f64; M]],
+    rng: &mut Pcg32,
+) -> Vec<Individual> {
+    if pop.len() <= target {
+        return pop;
+    }
+    let objs: Vec<[f64; M]> = pop.iter().map(|i| i.objs).collect();
+    let fronts = sort::non_dominated_fronts(&objs);
+
+    let mut chosen: Vec<usize> = Vec::with_capacity(target);
+    let mut last_front: Vec<usize> = Vec::new();
+    for front in &fronts {
+        if chosen.len() + front.len() <= target {
+            chosen.extend_from_slice(front);
+            if chosen.len() == target {
+                return take(pop, &chosen);
+            }
+        } else {
+            last_front = front.clone();
+            break;
+        }
+    }
+    let k = target - chosen.len(); // fill k slots from last_front
+
+    // --- normalization over the candidates considered so far ---
+    let pool: Vec<usize> = chosen.iter().chain(&last_front).copied().collect();
+    let ideal = ideal_point(&objs, &pool);
+    let nadir = nadir_point(&objs, &fronts[0], &ideal);
+    let norm = |i: usize| -> [f64; M] {
+        let mut w = [0.0; M];
+        for m in 0..M {
+            let span = (nadir[m] - ideal[m]).max(1e-12);
+            w[m] = (objs[i][m] - ideal[m]) / span;
+        }
+        w
+    };
+
+    // --- associate every pool member with its nearest reference line ---
+    let assoc: Vec<(usize, f64)> = pool.iter().map(|&i| associate(&norm(i), ref_points)).collect();
+    let mut niche_count = vec![0usize; ref_points.len()];
+    for (idx, &i) in pool.iter().enumerate() {
+        if chosen.contains(&i) {
+            niche_count[assoc[idx].0] += 1;
+        }
+    }
+    // last-front members grouped by their associated reference point
+    let mut by_ref: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ref_points.len()];
+    for (idx, &i) in pool.iter().enumerate() {
+        if !chosen.contains(&i) {
+            by_ref[assoc[idx].0].push((i, assoc[idx].1));
+        }
+    }
+
+    // --- niching: repeatedly take from the least-crowded reference point ---
+    let mut filled = 0;
+    while filled < k {
+        // reference points that still have unclaimed last-front members
+        let candidates: Vec<usize> =
+            (0..ref_points.len()).filter(|&r| !by_ref[r].is_empty()).collect();
+        debug_assert!(!candidates.is_empty());
+        let min_count = candidates.iter().map(|&r| niche_count[r]).min().unwrap();
+        let least: Vec<usize> =
+            candidates.into_iter().filter(|&r| niche_count[r] == min_count).collect();
+        let r = *rng.choose(&least);
+        // if the niche is empty take the closest member, else random
+        let pick_idx = if niche_count[r] == 0 {
+            by_ref[r]
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap()
+        } else {
+            rng.below(by_ref[r].len() as u64) as usize
+        };
+        let (ind, _) = by_ref[r].swap_remove(pick_idx);
+        chosen.push(ind);
+        niche_count[r] += 1;
+        filled += 1;
+    }
+    take(pop, &chosen)
+}
+
+fn take(pop: Vec<Individual>, idxs: &[usize]) -> Vec<Individual> {
+    let mut keep: Vec<bool> = vec![false; pop.len()];
+    for &i in idxs {
+        keep[i] = true;
+    }
+    pop.into_iter()
+        .enumerate()
+        .filter_map(|(i, ind)| keep[i].then_some(ind))
+        .collect()
+}
+
+fn ideal_point(objs: &[[f64; M]], pool: &[usize]) -> [f64; M] {
+    let mut ideal = [f64::INFINITY; M];
+    for &i in pool {
+        for m in 0..M {
+            ideal[m] = ideal[m].min(objs[i][m]);
+        }
+    }
+    ideal
+}
+
+/// Nadir from the worst of the first front (robust fallback variant).
+fn nadir_point(objs: &[[f64; M]], first_front: &[usize], ideal: &[f64; M]) -> [f64; M] {
+    let mut nadir = [f64::NEG_INFINITY; M];
+    for &i in first_front {
+        for m in 0..M {
+            nadir[m] = nadir[m].max(objs[i][m]);
+        }
+    }
+    for m in 0..M {
+        if nadir[m] <= ideal[m] {
+            nadir[m] = ideal[m] + 1.0; // degenerate axis: any positive span
+        }
+    }
+    nadir
+}
+
+/// Perpendicular distance of normalized point `w` to each reference line;
+/// returns (argmin, distance).
+fn associate(w: &[f64; M], ref_points: &[[f64; M]]) -> (usize, f64) {
+    let mut best = (0usize, f64::INFINITY);
+    for (r, dir) in ref_points.iter().enumerate() {
+        let d = perpendicular_distance(w, dir);
+        if d < best.1 {
+            best = (r, d);
+        }
+    }
+    best
+}
+
+fn perpendicular_distance(w: &[f64; M], dir: &[f64; M]) -> f64 {
+    let norm2: f64 = dir.iter().map(|x| x * x).sum();
+    if norm2 < 1e-15 {
+        return w.iter().map(|x| x * x).sum::<f64>().sqrt();
+    }
+    let dot: f64 = w.iter().zip(dir).map(|(a, b)| a * b).sum();
+    let t = dot / norm2;
+    let mut d2 = 0.0;
+    for m in 0..M {
+        let diff = w[m] - t * dir[m];
+        d2 += diff * diff;
+    }
+    d2.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nsga::refpoints;
+    use crate::space::{Network, Space};
+
+    fn mk(objs: [f64; M]) -> Individual {
+        let space = Space::new(Network::Vgg16);
+        Individual { genes: [0, 0, 0, 0], config: space.decode(&[0, 0, 0, 0]), objs }
+    }
+
+    #[test]
+    fn keeps_whole_population_if_small() {
+        let pop = vec![mk([1.0, 2.0, 3.0]), mk([3.0, 2.0, 1.0])];
+        let refs = refpoints::das_dennis(4);
+        let mut rng = Pcg32::seeded(1);
+        assert_eq!(select(pop, 5, &refs, &mut rng).len(), 2);
+    }
+
+    #[test]
+    fn selects_exactly_target() {
+        let mut rng = Pcg32::seeded(2);
+        let pop: Vec<Individual> = (0..50)
+            .map(|_| mk([rng.f64() * 10.0, rng.f64() * 10.0, rng.f64() * 10.0]))
+            .collect();
+        let refs = refpoints::das_dennis(6);
+        let out = select(pop, 20, &refs, &mut rng);
+        assert_eq!(out.len(), 20);
+    }
+
+    #[test]
+    fn first_front_survives_preferentially() {
+        // Two dominating points + many dominated: the dominators must stay.
+        let mut pop = vec![mk([0.0, 0.0, 0.0]), mk([0.1, 0.1, 0.1])];
+        for i in 0..30 {
+            pop.push(mk([5.0 + i as f64, 5.0, 5.0]));
+        }
+        let refs = refpoints::das_dennis(6);
+        let mut rng = Pcg32::seeded(3);
+        let out = select(pop, 10, &refs, &mut rng);
+        assert!(out.iter().any(|i| i.objs == [0.0, 0.0, 0.0]));
+        assert!(out.iter().any(|i| i.objs == [0.1, 0.1, 0.1]));
+    }
+
+    #[test]
+    fn niching_spreads_across_objectives() {
+        // Three clusters near the three axes + filler; selection should
+        // keep representatives of all clusters rather than one corner.
+        let mut pop = Vec::new();
+        for i in 0..10 {
+            let e = 0.01 * i as f64;
+            pop.push(mk([0.1 + e, 1.0, 1.0]));
+            pop.push(mk([1.0, 0.1 + e, 1.0]));
+            pop.push(mk([1.0, 1.0, 0.1 + e]));
+        }
+        let refs = refpoints::das_dennis(8);
+        let mut rng = Pcg32::seeded(4);
+        let out = select(pop, 6, &refs, &mut rng);
+        let near = |sel: &[Individual], axis: usize| {
+            sel.iter().filter(|i| i.objs[axis] < 0.5).count()
+        };
+        assert!(near(&out, 0) >= 1, "lost latency-extreme cluster");
+        assert!(near(&out, 1) >= 1, "lost energy-extreme cluster");
+        assert!(near(&out, 2) >= 1, "lost accuracy-extreme cluster");
+    }
+
+    #[test]
+    fn perpendicular_distance_geometry() {
+        // point on the line has distance 0
+        let d = perpendicular_distance(&[0.5, 0.5, 0.0], &[1.0, 1.0, 0.0]);
+        assert!(d < 1e-12);
+        // unit offset perpendicular to an axis line
+        let d = perpendicular_distance(&[1.0, 1.0, 0.0], &[1.0, 0.0, 0.0]);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+}

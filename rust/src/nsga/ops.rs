@@ -1,0 +1,188 @@
+//! Genetic operators over the 4-gene integer genome (mixed
+//! numerical/categorical parameters, Table 1).
+//!
+//! * numerical genes (CPU-frequency index, split layer) mutate by ±1
+//!   *creep* most of the time and random reset occasionally — respecting
+//!   the ordinal structure of DVFS steps and split points;
+//! * categorical genes (TPU mode, GPU) mutate by uniform reset;
+//! * crossover is uniform per-gene swap;
+//! * selection is binary tournament on (front rank proxy) — we use simple
+//!   Pareto-dominance tournament, which NSGA-III pairs with niching at
+//!   survival time.
+
+use super::Individual;
+use crate::space::Space;
+use crate::util::rng::Pcg32;
+
+/// Binary tournament: prefer the dominating individual, else random.
+pub fn tournament<'a>(pop: &'a [Individual], rng: &mut Pcg32) -> &'a Individual {
+    let a = rng.choose(pop);
+    let b = rng.choose(pop);
+    if super::dominates(&a.objs, &b.objs) {
+        a
+    } else if super::dominates(&b.objs, &a.objs) {
+        b
+    } else if rng.chance(0.5) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Uniform crossover with probability `p` (else clones).
+pub fn crossover(
+    a: &[usize; 4],
+    b: &[usize; 4],
+    p: f64,
+    rng: &mut Pcg32,
+) -> ([usize; 4], [usize; 4]) {
+    let mut c1 = *a;
+    let mut c2 = *b;
+    if rng.chance(p) {
+        for g in 0..4 {
+            if rng.chance(0.5) {
+                std::mem::swap(&mut c1[g], &mut c2[g]);
+            }
+        }
+    }
+    (c1, c2)
+}
+
+/// Mutate genes in place (per-gene probability `p`); bounds come from the
+/// space.  Gene order: [cpu_idx, tpu, gpu, split].
+pub fn mutate(genes: &mut [usize; 4], space: &Space, p: f64, rng: &mut Pcg32) {
+    let bounds = space.gene_bounds();
+    for g in 0..4 {
+        if !rng.chance(p) {
+            continue;
+        }
+        let hi = bounds[g];
+        genes[g] = match g {
+            // ordinal genes: creep ±1 with prob .75, reset otherwise
+            0 | 3 => {
+                if rng.chance(0.75) {
+                    creep(genes[g], hi, rng)
+                } else {
+                    rng.below(hi as u64 + 1) as usize
+                }
+            }
+            // categorical genes: uniform reset to a *different* value
+            _ => reset_different(genes[g], hi, rng),
+        };
+    }
+}
+
+fn creep(v: usize, hi: usize, rng: &mut Pcg32) -> usize {
+    if hi == 0 {
+        return 0;
+    }
+    if v == 0 {
+        1
+    } else if v >= hi {
+        hi - 1
+    } else if rng.chance(0.5) {
+        v - 1
+    } else {
+        v + 1
+    }
+}
+
+fn reset_different(v: usize, hi: usize, rng: &mut Pcg32) -> usize {
+    if hi == 0 {
+        return 0;
+    }
+    let mut nv = rng.below(hi as u64) as usize;
+    if nv >= v {
+        nv += 1; // skip the current value: guaranteed change
+    }
+    nv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Config as PropConfig};
+    use crate::space::{Network, Space};
+
+    #[test]
+    fn crossover_preserves_gene_multiset() {
+        forall("crossover multiset", PropConfig::default(), |rng| {
+            let a = [rng.below(7) as usize, rng.below(3) as usize, rng.below(2) as usize, rng.below(23) as usize];
+            let b = [rng.below(7) as usize, rng.below(3) as usize, rng.below(2) as usize, rng.below(23) as usize];
+            let (c1, c2) = crossover(&a, &b, 1.0, rng);
+            for g in 0..4 {
+                let mut orig = [a[g], b[g]];
+                let mut kids = [c1[g], c2[g]];
+                orig.sort_unstable();
+                kids.sort_unstable();
+                anyhow::ensure!(orig == kids, "gene {g} lost values");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mutate_respects_bounds() {
+        forall("mutate in bounds", PropConfig::default(), |rng| {
+            for net in Network::ALL {
+                let space = Space::new(net);
+                let bounds = space.gene_bounds();
+                let mut genes = [
+                    rng.below(bounds[0] as u64 + 1) as usize,
+                    rng.below(bounds[1] as u64 + 1) as usize,
+                    rng.below(bounds[2] as u64 + 1) as usize,
+                    rng.below(bounds[3] as u64 + 1) as usize,
+                ];
+                mutate(&mut genes, &space, 1.0, rng);
+                for g in 0..4 {
+                    anyhow::ensure!(genes[g] <= bounds[g], "gene {g} out of bounds");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn categorical_mutation_changes_value() {
+        let space = Space::new(Network::Vgg16);
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..100 {
+            let mut genes = [0, 1, 0, 5];
+            // force-mutate every gene
+            mutate(&mut genes, &space, 1.0, &mut rng);
+            // tpu (idx 1) and gpu (idx 2) must differ from their originals
+            assert_ne!(genes[1], 1);
+            assert_ne!(genes[2], 0);
+        }
+    }
+
+    #[test]
+    fn creep_stays_adjacent() {
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..200 {
+            let v = rng.below(23) as usize;
+            let nv = creep(v, 22, &mut rng);
+            assert!((nv as i64 - v as i64).abs() == 1, "{v} -> {nv}");
+        }
+    }
+
+    #[test]
+    fn tournament_prefers_dominator() {
+        use crate::space::Network;
+        let space = Space::new(Network::Vgg16);
+        let mk = |objs: [f64; 3]| Individual {
+            genes: [0, 0, 0, 0],
+            config: space.decode(&[0, 0, 0, 0]),
+            objs,
+        };
+        let pop = vec![mk([1.0, 1.0, 1.0]), mk([9.0, 9.0, 9.0])];
+        let mut rng = Pcg32::seeded(8);
+        let mut wins = 0;
+        for _ in 0..200 {
+            if tournament(&pop, &mut rng).objs[0] < 5.0 {
+                wins += 1;
+            }
+        }
+        assert!(wins > 140, "dominator won only {wins}/200");
+    }
+}

@@ -1,0 +1,65 @@
+//! Das–Dennis structured reference points on the unit simplex.
+//!
+//! NSGA-III steers selection with a set of uniformly spread directions;
+//! for M=3 objectives and p divisions this produces C(p+2, 2) points
+//! (p=12 → 91), which is why the default population size is 92.
+
+use super::M;
+
+/// All points w ∈ R^M with components k/p summing to 1 (k integer ≥ 0).
+pub fn das_dennis(p: usize) -> Vec<[f64; M]> {
+    assert!(p > 0, "need at least one division");
+    let mut out = Vec::new();
+    for i in 0..=p {
+        for j in 0..=(p - i) {
+            let k = p - i - j;
+            out.push([i as f64 / p as f64, j as f64 / p as f64, k as f64 / p as f64]);
+        }
+    }
+    out
+}
+
+/// Number of Das–Dennis points for M=3: C(p+2, 2).
+pub fn count(p: usize) -> usize {
+    (p + 1) * (p + 2) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_formula() {
+        for p in 1..=15 {
+            assert_eq!(das_dennis(p).len(), count(p), "p={p}");
+        }
+        assert_eq!(count(12), 91);
+    }
+
+    #[test]
+    fn points_on_simplex() {
+        for w in das_dennis(7) {
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            assert!(w.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn points_distinct() {
+        let pts = das_dennis(10);
+        for (i, a) in pts.iter().enumerate() {
+            for b in &pts[i + 1..] {
+                assert!(a.iter().zip(b).any(|(x, y)| (x - y).abs() > 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn includes_axis_extremes() {
+        let pts = das_dennis(5);
+        for axis in 0..M {
+            assert!(pts.iter().any(|w| (w[axis] - 1.0).abs() < 1e-12));
+        }
+    }
+}

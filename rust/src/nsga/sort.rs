@@ -1,0 +1,129 @@
+//! Fast non-dominated sorting (Deb et al. 2002) + Pareto utilities.
+
+use super::{dominates, Individual};
+
+/// Partition indices into non-dominated fronts F0 (best) .. Fk.
+///
+/// O(M·N²) — fine for our population sizes (≤ a few hundred).
+pub fn non_dominated_fronts(objs: &[[f64; super::M]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<usize> = vec![0; n]; // count of dominators
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominates_list[j].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Extract the non-dominated subset of a set of individuals (the paper's
+/// "non-dominated configuration set" handed from Solver to Controller).
+pub fn pareto_filter(individuals: &[Individual]) -> Vec<Individual> {
+    let objs: Vec<[f64; super::M]> = individuals.iter().map(|i| i.objs).collect();
+    pareto_indices(&objs).into_iter().map(|i| individuals[i].clone()).collect()
+}
+
+/// Indices of the non-dominated points.
+pub fn pareto_indices(objs: &[[f64; super::M]]) -> Vec<usize> {
+    let fronts = non_dominated_fronts(objs);
+    fronts.into_iter().next().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Config as PropConfig};
+
+    #[test]
+    fn fronts_partition_everything() {
+        let objs = vec![
+            [1.0, 1.0, 1.0],
+            [2.0, 2.0, 2.0],
+            [1.0, 2.0, 3.0],
+            [3.0, 1.0, 2.0],
+            [3.0, 3.0, 3.0],
+        ];
+        let fronts = non_dominated_fronts(&objs);
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        assert_eq!(total, objs.len());
+        // [1,1,1] dominates everything else except nothing dominates it
+        assert!(fronts[0].contains(&0));
+    }
+
+    #[test]
+    fn identical_points_share_front() {
+        let objs = vec![[1.0, 1.0, 1.0]; 4];
+        let fronts = non_dominated_fronts(&objs);
+        assert_eq!(fronts.len(), 1);
+        assert_eq!(fronts[0].len(), 4);
+    }
+
+    #[test]
+    fn front_invariants_hold_randomly() {
+        forall("front invariants", PropConfig::default(), |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let objs: Vec<[f64; 3]> = (0..n)
+                .map(|_| [rng.f64() * 10.0, rng.f64() * 10.0, rng.f64() * 10.0])
+                .collect();
+            let fronts = non_dominated_fronts(&objs);
+            // partition
+            let mut all: Vec<usize> = fronts.iter().flatten().copied().collect();
+            all.sort_unstable();
+            anyhow::ensure!(all == (0..n).collect::<Vec<_>>(), "not a partition");
+            // within-front mutual non-domination
+            for front in &fronts {
+                for &a in front {
+                    for &b in front {
+                        anyhow::ensure!(
+                            !super::dominates(&objs[a], &objs[b]),
+                            "front member dominates another"
+                        );
+                    }
+                }
+            }
+            // every member of front k+1 is dominated by someone in front k
+            for w in fronts.windows(2) {
+                for &b in &w[1] {
+                    anyhow::ensure!(
+                        w[0].iter().any(|&a| super::dominates(&objs[a], &objs[b])),
+                        "front ordering violated"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pareto_indices_are_front_zero() {
+        let objs = vec![[1.0, 5.0, 1.0], [5.0, 1.0, 1.0], [6.0, 6.0, 6.0]];
+        assert_eq!(pareto_indices(&objs), vec![0, 1]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(non_dominated_fronts(&[]).is_empty());
+        assert!(pareto_indices(&[]).is_empty());
+    }
+}

@@ -1,0 +1,97 @@
+//! Mini property-based testing harness (proptest substitute).
+//!
+//! A property is a closure from a seeded [`Pcg32`] generator to `Result`;
+//! the harness runs it over many cases and, on failure, reports the
+//! failing case seed so it can be replayed deterministically:
+//!
+//! ```
+//! use dynasplit::prop::{forall, Config};
+//! forall("sorted stays sorted", Config::default(), |rng| {
+//!     let mut v: Vec<u32> = (0..rng.below(50)).map(|_| rng.next_u32()).collect();
+//!     v.sort_unstable();
+//!     anyhow::ensure!(v.windows(2).all(|w| w[0] <= w[1]));
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: u64,
+    /// Base seed; each case uses `base_seed + case_index` so a reported
+    /// failing seed reproduces with `replay`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env overrides let CI widen the sweep without code changes.
+        let cases = std::env::var("DYNASPLIT_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config { cases, base_seed: 0xD15EA5E }
+    }
+}
+
+/// Run `property` over `config.cases` seeded generators; panics with the
+/// failing seed on the first violation.
+pub fn forall<F>(name: &str, config: Config, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> anyhow::Result<()>,
+{
+    for case in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(case);
+        let mut rng = Pcg32::new(seed, 54);
+        if let Err(e) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n{e:#}\n\
+                 replay with prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging aid).
+pub fn replay<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> anyhow::Result<()>,
+{
+    let mut rng = Pcg32::new(seed, 54);
+    property(&mut rng).expect("replayed property still fails");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("tautology", Config { cases: 16, base_seed: 1 }, |rng| {
+            let x = rng.f64();
+            anyhow::ensure!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_reports_seed() {
+        forall("always fails", Config { cases: 4, base_seed: 2 }, |_| {
+            anyhow::bail!("nope")
+        });
+    }
+
+    #[test]
+    fn cases_are_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        forall("distinct", Config { cases: 32, base_seed: 3 }, |rng| {
+            seen.insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.len(), 32);
+    }
+}

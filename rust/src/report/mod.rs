@@ -1,0 +1,85 @@
+//! Report emission: CSV data files for EXPERIMENTS.md appendices and a
+//! small markdown section writer.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::MetricSet;
+use crate::util::table::Table;
+
+/// Where experiment CSVs land (gitignored alongside artifacts).
+pub fn reports_dir(base: &str) -> PathBuf {
+    Path::new(base).join("reports")
+}
+
+/// Write a table as CSV under `<base>/reports/<name>.csv`.
+pub fn write_csv(base: &str, name: &str, table: &Table) -> Result<PathBuf> {
+    let dir = reports_dir(base);
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv()).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Per-request CSV of a metric set (one row per request).
+pub fn metric_set_table(m: &MetricSet) -> Table {
+    let mut t = Table::new([
+        "request_id", "strategy", "placement", "qos_ms", "latency_ms", "violation_ms",
+        "energy_j", "edge_energy_j", "cloud_energy_j", "accuracy",
+        "select_ms", "apply_ms",
+    ]);
+    for r in &m.records {
+        t.row([
+            r.request_id.to_string(),
+            m.strategy.clone(),
+            r.config.placement().to_string(),
+            format!("{:.3}", r.qos_ms),
+            format!("{:.3}", r.latency_ms),
+            format!("{:.3}", r.violation_ms()),
+            format!("{:.4}", r.energy_j),
+            format!("{:.4}", r.edge_energy_j),
+            format!("{:.4}", r.cloud_energy_j),
+            format!("{:.4}", r.accuracy),
+            format!("{:.4}", r.select_overhead_ms),
+            format!("{:.3}", r.apply_overhead_ms),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RequestRecord;
+    use crate::space::{Config, Network, TpuMode};
+
+    #[test]
+    fn writes_csv_file() {
+        let rec = RequestRecord {
+            request_id: 0,
+            qos_ms: 100.0,
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 0,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split: 0,
+            },
+            latency_ms: 90.0,
+            energy_j: 50.0,
+            edge_energy_j: 1.0,
+            cloud_energy_j: 49.0,
+            accuracy: 0.95,
+            select_overhead_ms: 0.01,
+            apply_overhead_ms: 80.0,
+        };
+        let m = MetricSet::new("test", vec![rec]);
+        let base = std::env::temp_dir().join(format!("dynasplit_report_{}", std::process::id()));
+        let path = write_csv(base.to_str().unwrap(), "t", &metric_set_table(&m)).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("request_id,"));
+        assert!(text.contains("cloud")); // placement of split 0
+        assert_eq!(text.lines().count(), 2);
+    }
+}

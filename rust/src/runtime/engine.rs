@@ -1,0 +1,164 @@
+//! PJRT engine: compile HLO-text artifacts, execute layer batches.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see aot.py and /opt/xla-example/README.md).
+//! Every artifact was lowered with `return_tuple=True`, so execution
+//! unwraps a 1-tuple.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// Shared PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one layer artifact.  `in_shape`/`out_shape` are per-image
+    /// activation shapes; the lowered module takes `[batch, *in_shape]`.
+    pub fn load_layer(
+        &self,
+        path: &Path,
+        batch: usize,
+        in_shape: &[usize],
+        out_shape: &[usize],
+    ) -> Result<LayerExec> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LayerExec {
+            exe,
+            batch,
+            in_elems: batch * in_shape.iter().product::<usize>(),
+            out_elems: batch * out_shape.iter().product::<usize>(),
+            in_dims: std::iter::once(batch as i64)
+                .chain(in_shape.iter().map(|&d| d as i64))
+                .collect(),
+            compile_ms: t0.elapsed().as_secs_f64() * 1000.0,
+        })
+    }
+}
+
+/// One compiled layer executable.
+pub struct LayerExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub in_elems: usize,
+    pub out_elems: usize,
+    in_dims: Vec<i64>,
+    /// PJRT compile time (ms) — reported by `dynasplit runtime-info`.
+    pub compile_ms: f64,
+}
+
+impl LayerExec {
+    /// Execute the layer on a flat `[batch, *in_shape]` activation.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.in_elems {
+            bail!(
+                "layer expects {} input elements ({:?}), got {}",
+                self.in_elems,
+                self.in_dims,
+                input.len()
+            );
+        }
+        let literal = xla::Literal::vec1(input)
+            .reshape(&self.in_dims)
+            .context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[literal])?[0][0]
+            .to_literal_sync()
+            .context("fetching result buffer")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading f32 result")?;
+        if values.len() != self.out_elems {
+            bail!(
+                "layer produced {} elements, expected {}",
+                values.len(),
+                self.out_elems
+            );
+        }
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-written HLO module: f(x) = (x + 1,) over f32[2,3].
+    /// Written as text exactly like the python-lowered artifacts, so this
+    /// test exercises the whole load path without needing `make artifacts`.
+    const ADD_ONE_HLO: &str = r#"
+HloModule add_one, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  constant.2 = f32[] constant(1)
+  broadcast.3 = f32[2,3]{1,0} broadcast(constant.2), dimensions={}
+  add.4 = f32[2,3]{1,0} add(Arg_0.1, broadcast.3)
+  ROOT tuple.5 = (f32[2,3]{1,0}) tuple(add.4)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("dynasplit_{}_{}.hlo.txt", name, std::process::id()));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn engine_loads_and_runs_hlo_text() {
+        let engine = Engine::cpu().unwrap();
+        assert!(engine.platform().to_lowercase().contains("cpu"));
+        let path = write_tmp("add_one", ADD_ONE_HLO);
+        let layer = engine.load_layer(&path, 2, &[3], &[3]).unwrap();
+        let out = layer.run(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(layer.compile_ms > 0.0);
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let engine = Engine::cpu().unwrap();
+        let path = write_tmp("add_one_b", ADD_ONE_HLO);
+        let layer = engine.load_layer(&path, 2, &[3], &[3]).unwrap();
+        assert!(layer.run(&[1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_errors_with_path() {
+        let engine = Engine::cpu().unwrap();
+        let result = engine.load_layer(Path::new("/nonexistent/layer.hlo.txt"), 1, &[1], &[1]);
+        let err = match result {
+            Err(e) => e,
+            Ok(_) => panic!("expected load failure"),
+        };
+        assert!(format!("{err:#}").contains("layer.hlo.txt"));
+    }
+
+    #[test]
+    fn malformed_hlo_rejected() {
+        let engine = Engine::cpu().unwrap();
+        let path = write_tmp("garbage", "this is not hlo");
+        assert!(engine.load_layer(&path, 1, &[1], &[1]).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Measured accuracy table: classify the eval set through the *real*
+//! PJRT executables for every quantization prefix.
+//!
+//! accuracy(net, k) with layers < k quantized is computed incrementally:
+//! maintain the quantized-prefix activation a_k (a_0 = input, a_{k+1} =
+//! int8_layer_k(a_k)) and run the fp32 suffix from each a_k — O(L²/2)
+//! layer executions instead of O(L²) naive.  Results are cached to
+//! `artifacts/accuracy_rust.json` because the full sweep costs minutes
+//! of real PJRT compute.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::network::NetworkRuntime;
+use crate::model::manifest::Manifest;
+use crate::simulator::accuracy::AccuracyTable;
+use crate::space::Network;
+use crate::util::json::Json;
+
+/// Measured (PJRT) accuracies, mirroring the manifest's expected table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredAccuracy {
+    pub vgg_fp32: f64,
+    pub vgg_int8_prefix: Vec<f64>,
+    pub vit_fp32: f64,
+}
+
+impl MeasuredAccuracy {
+    pub fn to_table(&self) -> AccuracyTable {
+        AccuracyTable::from_values(self.vgg_fp32, self.vgg_int8_prefix.clone(), self.vit_fp32)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vgg_fp32", Json::num(self.vgg_fp32)),
+            (
+                "vgg_int8_prefix",
+                Json::arr(self.vgg_int8_prefix.iter().map(|&x| Json::num(x))),
+            ),
+            ("vit_fp32", Json::num(self.vit_fp32)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<MeasuredAccuracy> {
+        Ok(MeasuredAccuracy {
+            vgg_fp32: v.get("vgg_fp32")?.as_f64()?,
+            vgg_int8_prefix: v.get("vgg_int8_prefix")?.as_f64_vec()?,
+            vit_fp32: v.get("vit_fp32")?.as_f64()?,
+        })
+    }
+}
+
+fn cache_path(manifest: &Manifest) -> PathBuf {
+    manifest.dir.join("accuracy_rust.json")
+}
+
+/// Accuracy of predictions vs labels over batched probability outputs.
+fn batch_accuracy(hits: usize, total: usize) -> f64 {
+    hits as f64 / total.max(1) as f64
+}
+
+/// Classify the whole eval set through `run` and count hits.
+fn eval_hits<F>(
+    images: &[f32],
+    labels: &[u8],
+    batch: usize,
+    img_elems: usize,
+    classes: usize,
+    mut run: F,
+) -> Result<usize>
+where
+    F: FnMut(&[f32]) -> Result<Vec<f32>>,
+{
+    let mut hits = 0;
+    let n = labels.len();
+    assert_eq!(n % batch, 0, "eval count must be a batch multiple");
+    for b in 0..(n / batch) {
+        let x = &images[b * batch * img_elems..(b + 1) * batch * img_elems];
+        let probs = run(x)?;
+        let preds = NetworkRuntime::classify(&probs, classes);
+        for (i, &p) in preds.iter().enumerate() {
+            if p == labels[b * batch + i] as usize {
+                hits += 1;
+            }
+        }
+    }
+    Ok(hits)
+}
+
+/// Compute the full measured-accuracy table (expensive; see cache).
+pub fn measure(
+    manifest: &Manifest,
+    vgg: &NetworkRuntime,
+    vit: &NetworkRuntime,
+    progress: bool,
+) -> Result<MeasuredAccuracy> {
+    let (images, labels) = manifest.load_eval_set()?;
+    let batch = manifest.batch;
+    let img_elems = manifest.img * manifest.img * 3;
+    let classes = manifest.classes;
+    let n = labels.len();
+
+    // --- ViT fp32 ---
+    let vit_hits = eval_hits(&images, &labels, batch, img_elems, classes, |x| {
+        vit.run_full(0, x)
+    })?;
+    if progress {
+        println!("[accuracy] vit fp32: {:.4}", batch_accuracy(vit_hits, n));
+    }
+
+    // --- VGG int8 prefixes, incremental over k ---
+    let l = vgg.num_layers();
+    let mut prefix_acc = Vec::with_capacity(l + 1);
+    // quantized-prefix activations per batch, advanced one layer per k
+    let mut prefix_acts: Vec<Vec<f32>> = (0..n / batch)
+        .map(|b| images[b * batch * img_elems..(b + 1) * batch * img_elems].to_vec())
+        .collect();
+    for k in 0..=l {
+        let mut hits = 0;
+        for (b, act) in prefix_acts.iter().enumerate() {
+            let probs = vgg.run_range(k, l, false, act)?;
+            let preds = NetworkRuntime::classify(&probs, classes);
+            for (i, &p) in preds.iter().enumerate() {
+                if p == labels[b * batch + i] as usize {
+                    hits += 1;
+                }
+            }
+        }
+        prefix_acc.push(batch_accuracy(hits, n));
+        if progress {
+            println!("[accuracy] vgg int8 prefix k={k}: {:.4}", prefix_acc[k]);
+        }
+        if k < l {
+            for act in prefix_acts.iter_mut() {
+                *act = vgg.run_range(k, k + 1, true, act)?;
+            }
+        }
+    }
+
+    Ok(MeasuredAccuracy {
+        vgg_fp32: prefix_acc[0], // k = 0: nothing quantized
+        vgg_int8_prefix: prefix_acc,
+        vit_fp32: batch_accuracy(vit_hits, n),
+    })
+}
+
+/// Load the cached table, or measure and cache it.
+pub fn measure_cached(
+    manifest: &Manifest,
+    vgg: &NetworkRuntime,
+    vit: &NetworkRuntime,
+    progress: bool,
+) -> Result<MeasuredAccuracy> {
+    let path = cache_path(manifest);
+    if path.exists() {
+        let v = Json::parse_file(&path)?;
+        if let Ok(m) = MeasuredAccuracy::from_json(&v) {
+            if m.vgg_int8_prefix.len() == Network::Vgg16.num_layers() + 1 {
+                return Ok(m);
+            }
+        }
+        // stale/invalid cache: fall through and re-measure
+    }
+    let measured = measure(manifest, vgg, vit, progress)?;
+    std::fs::write(&path, measured.to_json().encode())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(measured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_accuracy_json_roundtrip() {
+        let m = MeasuredAccuracy {
+            vgg_fp32: 0.953,
+            vgg_int8_prefix: (0..=22).map(|k| 0.95 - 0.0001 * k as f64).collect(),
+            vit_fp32: 0.941,
+        };
+        let j = m.to_json();
+        let back = MeasuredAccuracy::from_json(&Json::parse(&j.encode()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn eval_hits_counts_correctly() {
+        // 2 batches of 2 images, 3 "pixels", 2 classes; runner says class
+        // = sign of first pixel.
+        let images = vec![
+            1.0, 0.0, 0.0, /**/ -1.0, 0.0, 0.0, // batch 0
+            -1.0, 0.0, 0.0, /**/ 1.0, 0.0, 0.0, // batch 1
+        ];
+        let labels = vec![0u8, 1, 1, 1];
+        let hits = eval_hits(&images, &labels, 2, 3, 2, |x| {
+            let mut probs = Vec::new();
+            for img in x.chunks_exact(3) {
+                if img[0] > 0.0 {
+                    probs.extend([0.9, 0.1]);
+                } else {
+                    probs.extend([0.1, 0.9]);
+                }
+            }
+            Ok(probs)
+        })
+        .unwrap();
+        // predictions: 0, 1, 1, 0 vs labels 0, 1, 1, 1 -> 3 hits
+        assert_eq!(hits, 3);
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from rust.
+//!
+//! This is the request-path compute engine.  `python/compile/aot.py`
+//! lowered every layer of both networks to HLO *text*;
+//! [`engine::Engine`] compiles each module once on the PJRT CPU client
+//! (`xla` crate) and [`network::NetworkRuntime`] composes arbitrary
+//! head/tail splits from the per-layer executables.  Python is never
+//! involved at run time.
+//!
+//! * [`engine`]   — PJRT client + one compiled executable per layer;
+//! * [`network`]  — head/tail pipeline execution over a whole network,
+//!   including the int8 (edge-TPU path) variants for VGG16;
+//! * [`evaluate`] — classify the eval set through the real executables
+//!   and produce the measured accuracy table (cross-checked against the
+//!   python oracle's expectations from the manifest).
+
+pub mod engine;
+pub mod evaluate;
+pub mod network;
+
+pub use engine::{Engine, LayerExec};
+pub use network::NetworkRuntime;

@@ -1,0 +1,196 @@
+//! Whole-network runtime: compose per-layer executables into arbitrary
+//! head/tail splits, with the int8 (edge-TPU) variants for VGG16 heads.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, LayerExec};
+use crate::model::manifest::{Manifest, NetworkEntry};
+use crate::space::Network;
+// (Engine is also used by RuntimeTailExecutor::load below.)
+
+/// All compiled executables for one network.
+pub struct NetworkRuntime {
+    pub net: Network,
+    pub batch: usize,
+    fp32: Vec<LayerExec>,
+    /// int8 variant per layer (None for non-quantizable / ViT layers —
+    /// those run the fp32 executable on the TPU path too, matching how
+    /// LiteRT falls back to the CPU delegate between fused ops).
+    int8: Vec<Option<LayerExec>>,
+    pub load_ms: f64,
+}
+
+impl NetworkRuntime {
+    /// Compile every layer artifact of `net` listed in the manifest.
+    pub fn load(engine: &Engine, manifest: &Manifest, net: Network) -> Result<NetworkRuntime> {
+        let entry: &NetworkEntry = manifest.network(net);
+        let t0 = Instant::now();
+        let mut fp32 = Vec::with_capacity(entry.layers.len());
+        let mut int8 = Vec::with_capacity(entry.layers.len());
+        for layer in &entry.layers {
+            let exec = engine
+                .load_layer(
+                    &manifest.artifact_path(&layer.fp32),
+                    manifest.batch,
+                    &layer.in_shape,
+                    &layer.out_shape,
+                )
+                .with_context(|| format!("{} layer {}", net.name(), layer.index))?;
+            fp32.push(exec);
+            int8.push(match &layer.int8 {
+                Some(rel) => Some(
+                    engine
+                        .load_layer(
+                            &manifest.artifact_path(rel),
+                            manifest.batch,
+                            &layer.in_shape,
+                            &layer.out_shape,
+                        )
+                        .with_context(|| format!("{} int8 layer {}", net.name(), layer.index))?,
+                ),
+                None => None,
+            });
+        }
+        Ok(NetworkRuntime {
+            net,
+            batch: manifest.batch,
+            fp32,
+            int8,
+            load_ms: t0.elapsed().as_secs_f64() * 1000.0,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.fp32.len()
+    }
+
+    fn layer(&self, i: usize, quantized: bool) -> &LayerExec {
+        if quantized {
+            self.int8[i].as_ref().unwrap_or(&self.fp32[i])
+        } else {
+            &self.fp32[i]
+        }
+    }
+
+    /// Run layers `[from, to)` sequentially on a flat activation batch.
+    /// `quantized` selects the int8 variants (edge-TPU path).
+    pub fn run_range(
+        &self,
+        from: usize,
+        to: usize,
+        quantized: bool,
+        input: &[f32],
+    ) -> Result<Vec<f32>> {
+        if from > to || to > self.num_layers() {
+            bail!("bad layer range {from}..{to} (L = {})", self.num_layers());
+        }
+        let mut x = input.to_vec();
+        for i in from..to {
+            x = self
+                .layer(i, quantized)
+                .run(&x)
+                .with_context(|| format!("{} layer {i}", self.net.name()))?;
+        }
+        Ok(x)
+    }
+
+    /// Head segment: layers [0, k), quantized when the TPU path is active.
+    pub fn run_head(&self, k: usize, tpu: bool, input: &[f32]) -> Result<Vec<f32>> {
+        self.run_range(0, k, tpu, input)
+    }
+
+    /// Tail segment: layers [k, L), always fp32 (cloud side).
+    pub fn run_tail(&self, k: usize, input: &[f32]) -> Result<Vec<f32>> {
+        self.run_range(k, self.num_layers(), false, input)
+    }
+
+    /// Full forward with the head quantized up to `quant_upto`.
+    pub fn run_full(&self, quant_upto: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let head = self.run_range(0, quant_upto, true, input)?;
+        self.run_range(quant_upto, self.num_layers(), false, &head)
+    }
+
+    /// Argmax class per image of a `[batch, classes]` probability matrix.
+    pub fn classify(probs: &[f32], classes: usize) -> Vec<usize> {
+        probs
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Tail executor over network runtimes, used by the cloud service loop
+/// (`transport::cloud`).  Constructed *inside* the cloud node's thread —
+/// PJRT handles are not `Send`, and the paper's cloud node owns its own
+/// runtime anyway (the tail networks are loaded cloud-side, §4.3.2).
+pub struct RuntimeTailExecutor {
+    pub vgg: NetworkRuntime,
+    pub vit: NetworkRuntime,
+}
+
+impl RuntimeTailExecutor {
+    /// Build a fresh engine + both network runtimes (cloud-node startup).
+    pub fn load(manifest: &Manifest) -> Result<RuntimeTailExecutor> {
+        let engine = Engine::cpu()?;
+        Ok(RuntimeTailExecutor {
+            vgg: NetworkRuntime::load(&engine, manifest, Network::Vgg16)?,
+            vit: NetworkRuntime::load(&engine, manifest, Network::Vit)?,
+        })
+    }
+}
+
+impl crate::transport::cloud::TailExecutor for RuntimeTailExecutor {
+    fn execute_tail(
+        &self,
+        network: &str,
+        split: usize,
+        _gpu: bool,
+        batch: &[f32],
+    ) -> Result<Vec<f32>> {
+        let rt = match Network::parse(network)? {
+            Network::Vgg16 => &self.vgg,
+            Network::Vit => &self.vit,
+        };
+        rt.run_tail(split, batch)
+    }
+}
+
+/// Spawn a cloud-node thread: it loads its own runtimes from `manifest`
+/// and serves the given endpoint until shutdown.  Returns the join handle
+/// carrying the service statistics.
+pub fn spawn_cloud_node(
+    manifest: Manifest,
+    endpoint: crate::transport::channel::Endpoint,
+    timeout: std::time::Duration,
+) -> std::thread::JoinHandle<Result<crate::transport::cloud::ServeStats>> {
+    std::thread::spawn(move || {
+        let executor = RuntimeTailExecutor::load(&manifest)?;
+        crate::transport::cloud::serve(endpoint, &executor, timeout)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_argmax() {
+        let probs = [0.1, 0.7, 0.2, /*img2*/ 0.5, 0.2, 0.3];
+        assert_eq!(NetworkRuntime::classify(&probs, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn classify_handles_short_tail() {
+        // trailing partial row is ignored by chunks_exact
+        let probs = [0.9, 0.1, 0.5];
+        assert_eq!(NetworkRuntime::classify(&probs, 2), vec![0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Accuracy lookup for trials.
+//!
+//! Accuracy depends only on (network, TPU-used, split point): quantized
+//! head layers perturb logits, fp32 layers do not (§2.2, Fig. 2e).  The
+//! table comes from either the manifest's python-oracle expectations or a
+//! PJRT-measured cache produced by the rust runtime (`runtime::evaluate`);
+//! per-trial jitter models re-sampling the evaluation images.
+
+use anyhow::Result;
+
+use crate::model::manifest::Manifest;
+use crate::space::{Config, Network, TpuMode};
+use crate::util::rng::Pcg32;
+
+/// Accuracy table for both networks.
+#[derive(Debug, Clone)]
+pub struct AccuracyTable {
+    vgg_fp32: f64,
+    /// `vgg_int8_prefix[k]`: layers < k quantized (TPU head), rest fp32.
+    vgg_int8_prefix: Vec<f64>,
+    vit_fp32: f64,
+}
+
+impl AccuracyTable {
+    /// Build from manifest expectations (python oracle path).
+    pub fn from_manifest(m: &Manifest) -> Result<AccuracyTable> {
+        let prefix = m
+            .vgg16
+            .expected_accuracy
+            .int8_prefix
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("manifest lacks vgg16 int8_prefix accuracies"))?;
+        Ok(AccuracyTable {
+            vgg_fp32: m.vgg16.expected_accuracy.fp32,
+            vgg_int8_prefix: prefix,
+            vit_fp32: m.vit.expected_accuracy.fp32,
+        })
+    }
+
+    /// Build from explicitly measured values (rust runtime evaluation).
+    pub fn from_values(vgg_fp32: f64, vgg_int8_prefix: Vec<f64>, vit_fp32: f64) -> AccuracyTable {
+        assert_eq!(vgg_int8_prefix.len(), Network::Vgg16.num_layers() + 1);
+        AccuracyTable { vgg_fp32, vgg_int8_prefix, vit_fp32 }
+    }
+
+    /// Synthetic stand-in used by tests and simulator-only runs without
+    /// artifacts: fp32 ≈ 95.3%, with a gentle sub-percent dip as more
+    /// layers are quantized (the Fig. 2e shape).
+    pub fn synthetic() -> AccuracyTable {
+        let l = Network::Vgg16.num_layers();
+        let prefix = (0..=l)
+            .map(|k| 0.953 - 0.004 * (k as f64 / l as f64) - 0.002 * ((k * 7 % 5) as f64 / 5.0))
+            .collect();
+        AccuracyTable { vgg_fp32: 0.953, vgg_int8_prefix: prefix, vit_fp32: 0.945 }
+    }
+
+    /// Noise-free accuracy for a configuration.
+    pub fn accuracy(&self, config: &Config) -> f64 {
+        match config.net {
+            Network::Vit => self.vit_fp32,
+            Network::Vgg16 => {
+                if config.tpu == TpuMode::Off {
+                    self.vgg_fp32
+                } else {
+                    // head (layers < k) runs quantized on the TPU
+                    self.vgg_int8_prefix[config.split.min(self.vgg_int8_prefix.len() - 1)]
+                }
+            }
+        }
+    }
+
+    /// Accuracy with per-trial measurement jitter, clamped to [0, 1].
+    pub fn sample(&self, config: &Config, rng: &mut Pcg32) -> f64 {
+        (self.accuracy(config) + rng.gaussian(0.0, super::calib::ACCURACY_JITTER))
+            .clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(net: Network, tpu: TpuMode, split: usize) -> Config {
+        Config { net, cpu_idx: 6, tpu, gpu: false, split }
+    }
+
+    #[test]
+    fn tpu_off_gives_fp32() {
+        let t = AccuracyTable::synthetic();
+        assert_eq!(t.accuracy(&cfg(Network::Vgg16, TpuMode::Off, 11)), 0.953);
+    }
+
+    #[test]
+    fn quantized_prefix_dips_subpercent() {
+        let t = AccuracyTable::synthetic();
+        let fp32 = t.accuracy(&cfg(Network::Vgg16, TpuMode::Off, 22));
+        let q_full = t.accuracy(&cfg(Network::Vgg16, TpuMode::Max, 22));
+        assert!(q_full < fp32);
+        assert!(fp32 - q_full < 0.01, "paper: sub-percent deltas");
+    }
+
+    #[test]
+    fn vit_ignores_tpu_and_split() {
+        let t = AccuracyTable::synthetic();
+        let a = t.accuracy(&cfg(Network::Vit, TpuMode::Off, 0));
+        let b = t.accuracy(&cfg(Network::Vit, TpuMode::Off, 19));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sample_stays_close_and_bounded() {
+        let t = AccuracyTable::synthetic();
+        let mut rng = Pcg32::seeded(5);
+        let c = cfg(Network::Vgg16, TpuMode::Max, 8);
+        let base = t.accuracy(&c);
+        for _ in 0..1_000 {
+            let s = t.sample(&c, &mut rng);
+            assert!((0.0..=1.0).contains(&s));
+            assert!((s - base).abs() < 0.012);
+        }
+    }
+
+    #[test]
+    fn from_values_validates_length() {
+        let r = std::panic::catch_unwind(|| {
+            AccuracyTable::from_values(0.9, vec![0.9; 5], 0.9)
+        });
+        assert!(r.is_err());
+    }
+}

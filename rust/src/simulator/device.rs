@@ -1,0 +1,228 @@
+//! Per-segment latency model: edge CPU (DVFS), edge TPU, cloud GPU/CPU.
+//!
+//! Latency of a segment = Σ_layers macs / rate(device, config), with the
+//! rates derived in [`calib`] from the paper's end-to-end numbers.  The
+//! model captures the paper's structure exactly:
+//!
+//!   T_inf(x) = T_edge(x) + T_net(x) + T_cloud(x)            (§3.3)
+//!
+//! with the special cases k=0 (edge does only request prep) and k=L
+//! (no network, no cloud).
+
+use super::calib::{self, Calib};
+use crate::model::NetCost;
+use crate::space::{Config, TpuMode};
+
+/// Device-model for one network (rates are per-network; see calib.rs).
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub cost: NetCost,
+    pub calib: Calib,
+    edge_cpu_rate_max: f64,
+    edge_tpu_rate_max: f64,
+    cloud_gpu_rate: f64,
+    cloud_cpu_rate: f64,
+}
+
+/// Latency decomposition of a single inference (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBreakdown {
+    pub edge_s: f64,
+    pub net_s: f64,
+    pub cloud_s: f64,
+    /// Of `edge_s`, the portion spent on the TPU (drives TPU power).
+    pub edge_tpu_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.edge_s + self.net_s + self.cloud_s
+    }
+}
+
+impl DeviceModel {
+    pub fn new(cost: NetCost) -> DeviceModel {
+        let calib = Calib::for_network(cost.net);
+        DeviceModel {
+            edge_cpu_rate_max: calib.edge_cpu_rate(&cost),
+            edge_tpu_rate_max: if cost.net.tpu_capable() {
+                calib.edge_tpu_rate(&cost)
+            } else {
+                f64::NAN
+            },
+            cloud_gpu_rate: calib.cloud_gpu_rate(&cost),
+            cloud_cpu_rate: calib.cloud_cpu_rate(&cost),
+            cost,
+            calib,
+        }
+    }
+
+    /// Edge CPU rate at the configured DVFS frequency:
+    /// rate(f) = rate(f_max) · (f / f_max)^alpha.
+    fn edge_cpu_rate(&self, cpu_ghz: f64) -> f64 {
+        let f_max = *crate::space::CPU_FREQS_GHZ.last().unwrap();
+        self.edge_cpu_rate_max * (cpu_ghz / f_max).powf(self.calib.dvfs_alpha)
+    }
+
+    fn edge_tpu_rate(&self, tpu: TpuMode) -> f64 {
+        match tpu {
+            TpuMode::Off => f64::NAN,
+            TpuMode::Std => self.edge_tpu_rate_max * self.calib.tpu_std_factor,
+            TpuMode::Max => self.edge_tpu_rate_max,
+        }
+    }
+
+    /// Deterministic (noise-free) latency breakdown for one inference.
+    pub fn latency(&self, config: &Config) -> LatencyBreakdown {
+        let l = self.cost.num_layers();
+        let k = config.split.min(l);
+        let cpu_rate = self.edge_cpu_rate(config.cpu_ghz());
+        let f_scale = cpu_rate / self.edge_cpu_rate_max; // prep scales too
+
+        // --- edge segment: layers < k, TPU-eligible layers on the TPU ---
+        let mut edge_s = self.calib.edge_prep_s / f_scale;
+        let mut edge_tpu_s = 0.0;
+        let tpu_on = config.tpu != TpuMode::Off && self.cost.net.tpu_capable();
+        for layer in &self.cost.layers[..k] {
+            if tpu_on && layer.quantizable {
+                let t = layer.macs as f64 / self.edge_tpu_rate(config.tpu);
+                edge_s += t;
+                edge_tpu_s += t;
+            } else {
+                edge_s += layer.macs as f64 / cpu_rate;
+            }
+        }
+
+        // --- network + cloud segments ---
+        let (net_s, cloud_s) = if k >= l {
+            (0.0, 0.0) // edge-only: no transfer, no cloud (§3.3 case ii)
+        } else {
+            let bytes = self.cost.transfer_bytes(k) + self.cost.result_bytes();
+            let net_s = calib::LINK_RTT_S + bytes as f64 / calib::LINK_BYTES_PER_S;
+            let rate = if config.gpu { self.cloud_gpu_rate } else { self.cloud_cpu_rate };
+            let cloud_s = self.calib.cloud_prep_s + self.cost.tail_macs(k) as f64 / rate;
+            (net_s, cloud_s)
+        };
+        LatencyBreakdown { edge_s, net_s, cloud_s, edge_tpu_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Network, Space};
+
+    fn model(net: Network) -> DeviceModel {
+        DeviceModel::new(NetCost::of(net))
+    }
+
+    fn cfg(net: Network, cpu_idx: usize, tpu: TpuMode, gpu: bool, split: usize) -> Config {
+        crate::space::feasible::repair(Config { net, cpu_idx, tpu, gpu, split })
+    }
+
+    #[test]
+    fn edge_only_has_no_net_or_cloud() {
+        let m = model(Network::Vgg16);
+        let b = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Max, false, 22));
+        assert_eq!(b.net_s, 0.0);
+        assert_eq!(b.cloud_s, 0.0);
+        assert!(b.edge_s > 0.0);
+    }
+
+    #[test]
+    fn cloud_only_has_minimal_edge() {
+        let m = model(Network::Vgg16);
+        let b = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Off, true, 0));
+        assert!(b.edge_s < 0.010, "only prep expected, got {}", b.edge_s);
+        assert!(b.cloud_s > 0.0 && b.net_s > 0.0);
+    }
+
+    #[test]
+    fn calibration_endpoints_vgg() {
+        let m = model(Network::Vgg16);
+        // edge-only fp32 at 1.8 GHz ≈ 1.676 s target (+prep)
+        let b = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Off, false, 22));
+        assert!((b.total_s() - 1.681).abs() < 0.02, "{}", b.total_s());
+        // edge-only TPU max ≈ 0.425 s target
+        let b = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Max, false, 22));
+        assert!((b.total_s() - 0.430).abs() < 0.02, "{}", b.total_s());
+        // cloud-only GPU ≈ 96 ms (§6.3.1 median)
+        let b = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Off, true, 0));
+        assert!((b.total_s() - 0.096).abs() < 0.012, "{}", b.total_s());
+    }
+
+    #[test]
+    fn calibration_endpoints_vit() {
+        let m = model(Network::Vit);
+        let b = m.latency(&cfg(Network::Vit, 6, TpuMode::Off, false, 19));
+        assert!((b.total_s() - 3.931).abs() < 0.03, "{}", b.total_s());
+        let b = m.latency(&cfg(Network::Vit, 6, TpuMode::Off, true, 0));
+        assert!((b.total_s() - 0.118).abs() < 0.012, "{}", b.total_s());
+    }
+
+    #[test]
+    fn table2_max_latency_scale() {
+        // Table 2: VGG16 max 5,026.8 ms at CPU 0.6, no TPU, no GPU, k=20.
+        let m = model(Network::Vgg16);
+        let b = m.latency(&cfg(Network::Vgg16, 0, TpuMode::Off, false, 20));
+        assert!((4.2..6.2).contains(&b.total_s()), "{}", b.total_s());
+        // ViT max 10,287.6 ms at 0.6 GHz, k=18.
+        let m = model(Network::Vit);
+        let b = m.latency(&cfg(Network::Vit, 0, TpuMode::Off, false, 18));
+        assert!((9.0..13.0).contains(&b.total_s()), "{}", b.total_s());
+    }
+
+    #[test]
+    fn latency_decreases_with_frequency() {
+        let m = model(Network::Vgg16);
+        let mut last = f64::INFINITY;
+        for cpu_idx in 0..7 {
+            let b = m.latency(&cfg(Network::Vgg16, cpu_idx, TpuMode::Off, false, 22));
+            assert!(b.total_s() < last);
+            last = b.total_s();
+        }
+    }
+
+    #[test]
+    fn gpu_faster_than_cloud_cpu() {
+        let m = model(Network::Vit);
+        let g = m.latency(&cfg(Network::Vit, 6, TpuMode::Off, true, 0));
+        let c = m.latency(&cfg(Network::Vit, 6, TpuMode::Off, false, 0));
+        assert!(c.cloud_s > 3.0 * g.cloud_s);
+    }
+
+    #[test]
+    fn tpu_accelerates_vgg_only() {
+        let m = model(Network::Vgg16);
+        let off = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Off, false, 22));
+        let max = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Max, false, 22));
+        let std = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Std, false, 22));
+        assert!(max.total_s() < off.total_s() / 2.0);
+        // Fig 2c: std ≈ max (no significant difference)
+        assert!((std.total_s() - max.total_s()).abs() / max.total_s() < 0.15);
+    }
+
+    #[test]
+    fn split_latency_between_extremes_somewhere() {
+        // Fig 2b: split latency is non-monotone but some split beats the
+        // worse extreme.
+        let m = model(Network::Vgg16);
+        let space = Space::new(Network::Vgg16);
+        let lat = |k| {
+            m.latency(&crate::space::feasible::repair(space.decode(&[6, 2, 1, k]))).total_s()
+        };
+        let edge_only = lat(22);
+        let any_split_better = (1..22).any(|k| lat(k) < edge_only);
+        assert!(any_split_better);
+    }
+
+    #[test]
+    fn transfer_bytes_drive_net_time() {
+        let m = model(Network::Vgg16);
+        // split after conv_00 (64 KiB/image) must cost more net time than
+        // after pool_17-ish small tensors
+        let early = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Off, true, 1));
+        let late = m.latency(&cfg(Network::Vgg16, 6, TpuMode::Off, true, 19));
+        assert!(early.net_s > late.net_s);
+    }
+}

@@ -1,0 +1,30 @@
+//! The edge-cloud testbed simulator (paper §6.1's physical testbed,
+//! substituted per DESIGN.md §Substitutions).
+//!
+//! The paper measures every trial on real hardware: a Raspberry Pi 4B
+//! with userspace DVFS, a Coral USB edge TPU, a Grid'5000 node with a
+//! V100, a GW-Instek GPM-8213 power meter (200 ms sampling) on the edge
+//! and an Omegawatt wattmeter (20 ms) on the cloud node.  We rebuild that
+//! testbed as a calibrated simulator:
+//!
+//! * [`calib`]   — every constant, each derived from a number in the paper;
+//! * [`device`]  — per-segment latency model (DVFS, TPU, GPU rates);
+//! * [`power`]   — instantaneous power model for both nodes;
+//! * [`meter`]   — sampling-limited power meters + trapezoidal energy
+//!   integration (including *why* the paper batches 1,000 inferences);
+//! * [`netlink`] — edge↔cloud link (RTT + bandwidth on real tensor sizes);
+//! * [`accuracy`]— accuracy lookup (from the manifest's expected table or
+//!   the PJRT-measured cache) + measurement jitter;
+//! * [`testbed`] — trial orchestration: configure → run n inferences →
+//!   collect (latency, energy, accuracy) like the DynaSplit Solver does.
+
+pub mod accuracy;
+pub mod calib;
+pub mod device;
+pub mod meter;
+pub mod netlink;
+pub mod power;
+pub mod testbed;
+
+pub use accuracy::AccuracyTable;
+pub use testbed::{Testbed, TrialResult};

@@ -1,0 +1,70 @@
+//! Edge↔cloud network link model.
+//!
+//! T_net = RTT + bytes / bandwidth over the *actual* intermediate tensor
+//! size of the chosen split point (from `model::meta`), which is what
+//! makes split-point selection non-trivial: early VGG conv outputs are
+//! bigger than the input image (paper finding iii), so "split early to
+//! save edge compute" can lose on transfer time.
+
+use super::calib;
+use crate::util::rng::Pcg32;
+
+/// Link parameters (defaults from calib; overridable for ablations).
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub rtt_s: f64,
+    pub bytes_per_s: f64,
+    /// Lognormal sigma of per-transfer jitter.
+    pub jitter_sigma: f64,
+}
+
+impl Default for Link {
+    fn default() -> Self {
+        Link {
+            rtt_s: calib::LINK_RTT_S,
+            bytes_per_s: calib::LINK_BYTES_PER_S,
+            jitter_sigma: 0.08,
+        }
+    }
+}
+
+impl Link {
+    /// Deterministic transfer time for `bytes` (one round trip).
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.rtt_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Jittered transfer time (WAN latency variation).
+    pub fn sample_transfer_s(&self, bytes: u64, rng: &mut Pcg32) -> f64 {
+        self.transfer_s(bytes) * rng.lognormal(0.0, self.jitter_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtt_floor() {
+        let l = Link::default();
+        assert!(l.transfer_s(0) >= l.rtt_s);
+    }
+
+    #[test]
+    fn linear_in_bytes() {
+        let l = Link::default();
+        let d = l.transfer_s(2_000_000) - l.transfer_s(1_000_000);
+        assert!((d - 1_000_000.0 / l.bytes_per_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_centered() {
+        let l = Link::default();
+        let mut rng = Pcg32::seeded(4);
+        let base = l.transfer_s(100_000);
+        let n = 5_000;
+        let mean: f64 =
+            (0..n).map(|_| l.sample_transfer_s(100_000, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean / base - 1.0).abs() < 0.03, "mean ratio {}", mean / base);
+    }
+}

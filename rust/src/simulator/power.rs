@@ -1,0 +1,104 @@
+//! Instantaneous power model for both nodes.
+//!
+//! Edge (RPi 4B): P = P_idle + c·f³ while the CPU computes, plus the TPU
+//! contribution when attached/active (the testbed powers the USB port off
+//! when the TPU is unused, §6.1).  Cloud (Grid'5000 node): node-level
+//! power during the active tail-compute window only, matching the paper's
+//! energy accounting (§3.4: cloud energy integrated over [t_net1, t_net2]).
+
+use super::calib::*;
+use crate::space::{Config, TpuMode};
+
+/// What the edge node is doing at an instant (drives its power draw).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeState {
+    /// Waiting (e.g. during network transfer or the cloud phase).
+    Idle,
+    /// Executing head layers on the CPU.
+    CpuBusy,
+    /// Executing quantized head layers on the TPU (CPU mostly orchestrates).
+    TpuBusy,
+}
+
+/// Edge power (W) for a state under a configuration.
+pub fn edge_power(state: EdgeState, config: &Config) -> f64 {
+    let f = config.cpu_ghz();
+    let cpu_active = EDGE_CPU_CUBIC_W_PER_GHZ3 * f * f * f;
+    // TPU contribution: off = unpowered USB port; attached (std/max) draws
+    // idle power whenever the edge node is up, more when active.
+    let tpu_attached = match config.tpu {
+        TpuMode::Off => 0.0,
+        _ => TPU_IDLE_ATTACHED_W,
+    };
+    match state {
+        EdgeState::Idle => EDGE_IDLE_W + tpu_attached,
+        EdgeState::CpuBusy => EDGE_IDLE_W + cpu_active + tpu_attached,
+        EdgeState::TpuBusy => {
+            let tpu_active = match config.tpu {
+                TpuMode::Off => 0.0, // unreachable in practice
+                TpuMode::Std => TPU_ACTIVE_STD_W,
+                TpuMode::Max => TPU_ACTIVE_MAX_W,
+            };
+            // CPU orchestrates DMA at ~20% of its active power.
+            EDGE_IDLE_W + 0.2 * cpu_active + tpu_active
+        }
+    }
+}
+
+/// Cloud node power (W) during active tail computation.
+pub fn cloud_power(config: &Config) -> f64 {
+    if config.gpu {
+        CLOUD_GPU_ACTIVE_W
+    } else {
+        CLOUD_CPU_ACTIVE_W
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Config, Network};
+
+    fn cfg(cpu_idx: usize, tpu: TpuMode, gpu: bool) -> Config {
+        Config { net: Network::Vgg16, cpu_idx, tpu, gpu, split: 11 }
+    }
+
+    #[test]
+    fn busy_exceeds_idle() {
+        let c = cfg(6, TpuMode::Off, false);
+        assert!(edge_power(EdgeState::CpuBusy, &c) > edge_power(EdgeState::Idle, &c));
+    }
+
+    #[test]
+    fn power_rises_with_frequency() {
+        let mut last = 0.0;
+        for cpu_idx in 0..7 {
+            let p = edge_power(EdgeState::CpuBusy, &cfg(cpu_idx, TpuMode::Off, false));
+            assert!(p > last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn tpu_off_draws_nothing_extra_idle() {
+        let off = edge_power(EdgeState::Idle, &cfg(6, TpuMode::Off, false));
+        let max = edge_power(EdgeState::Idle, &cfg(6, TpuMode::Max, false));
+        assert_eq!(off, EDGE_IDLE_W);
+        assert!(max > off); // attached TPU draws idle power
+    }
+
+    #[test]
+    fn tpu_busy_beats_cpu_busy_in_power_but_not_3x() {
+        // Fig 2c: TPU *draws more power* yet total energy is ~3x lower due
+        // to speed; power itself must be in the same ballpark.
+        let c = cfg(6, TpuMode::Max, false);
+        let tpu = edge_power(EdgeState::TpuBusy, &c);
+        let cpu = edge_power(EdgeState::CpuBusy, &c);
+        assert!(tpu > 0.8 * cpu && tpu < 2.0 * cpu, "tpu {tpu} cpu {cpu}");
+    }
+
+    #[test]
+    fn cloud_gpu_hotter_than_cpu() {
+        assert!(cloud_power(&cfg(6, TpuMode::Off, true)) > cloud_power(&cfg(6, TpuMode::Off, false)));
+    }
+}

@@ -1,0 +1,294 @@
+//! Trial orchestration — what the DynaSplit Solver does per candidate
+//! configuration (§4.2.3): configure the testbed, run a batch of
+//! inferences, and collect (latency, energy, accuracy) through the
+//! measurement chain.
+//!
+//! The batch execution mirrors the paper's §6.2.2 measurement mode:
+//! the edge performs `n` head inferences back-to-back, streams the
+//! intermediate outputs, the cloud performs `n` tail inferences — which
+//! stretches the active windows far beyond the power-meter sampling
+//! periods so energy readings are stable.
+
+use super::accuracy::AccuracyTable;
+use super::calib;
+use super::device::DeviceModel;
+use super::meter::{Meter, PowerTrace};
+use super::netlink::Link;
+use super::power::{cloud_power, edge_power, EdgeState};
+use crate::model::NetCost;
+use crate::space::{Config, Network};
+use crate::util::rng::Pcg32;
+
+/// Result of one trial (averages are per single inference).
+#[derive(Debug, Clone)]
+pub struct TrialResult {
+    pub config: Config,
+    /// Mean end-to-end latency per inference (ms).
+    pub latency_ms: f64,
+    /// Per-inference latencies (ms) — feeds distribution plots.
+    pub latencies_ms: Vec<f64>,
+    /// Measured energy per inference (J), edge + cloud.
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    /// Measured classification accuracy for this configuration.
+    pub accuracy: f64,
+    /// Mean latency decomposition (ms).
+    pub edge_ms: f64,
+    pub net_ms: f64,
+    pub cloud_ms: f64,
+}
+
+impl TrialResult {
+    /// Objective vector for the MOOP (all minimized): latency, energy,
+    /// negated accuracy (§3.5).
+    ///
+    /// Accuracy is quantized to 0.1% — the resolution at which a
+    /// 1,000-inference trial can measure it (1 flip = 0.1%).  Without
+    /// this, sub-resolution accuracy jitter makes nearly every
+    /// configuration non-dominated and the front balloons far past the
+    /// paper's 12–15 entries.
+    pub fn objectives(&self) -> [f64; 3] {
+        [self.latency_ms, self.energy_j, -(self.accuracy * 1000.0).round() / 1000.0]
+    }
+}
+
+/// The simulated edge-cloud testbed.
+pub struct Testbed {
+    pub vgg: DeviceModel,
+    pub vit: DeviceModel,
+    pub link: Link,
+    pub accuracy: AccuracyTable,
+    pub edge_meter: Meter,
+    pub cloud_meter: Meter,
+    /// Inferences batched per trial (paper: 1,000).
+    pub batch_per_trial: usize,
+}
+
+impl Testbed {
+    pub fn new(accuracy: AccuracyTable) -> Testbed {
+        Testbed {
+            vgg: DeviceModel::new(NetCost::of(Network::Vgg16)),
+            vit: DeviceModel::new(NetCost::of(Network::Vit)),
+            link: Link::default(),
+            accuracy,
+            edge_meter: Meter::edge(),
+            cloud_meter: Meter::cloud(),
+            batch_per_trial: 1000,
+        }
+    }
+
+    /// Simulator-only testbed (synthetic accuracy table) for tests and
+    /// artifact-free solver runs.
+    pub fn synthetic() -> Testbed {
+        Testbed::new(AccuracyTable::synthetic())
+    }
+
+    pub fn device(&self, net: Network) -> &DeviceModel {
+        match net {
+            Network::Vgg16 => &self.vgg,
+            Network::Vit => &self.vit,
+        }
+    }
+
+    /// Per-inference jittered latency breakdown (seconds).
+    fn sample_inference(
+        &self,
+        config: &Config,
+        rng: &mut Pcg32,
+    ) -> (f64, f64, f64, f64) {
+        let base = self.device(config.net).latency(config);
+        let mut jitter = rng.lognormal(0.0, calib::LATENCY_JITTER_SIGMA);
+        // Fig. 2a: unexplained outliers at the 800 MHz step.
+        if config.cpu_ghz() == 0.8 && rng.chance(calib::OUTLIER_800MHZ_P) {
+            jitter *= calib::OUTLIER_800MHZ_FACTOR;
+        }
+        let edge = base.edge_s * jitter;
+        let tpu = base.edge_tpu_s * jitter;
+        let net = if base.net_s > 0.0 {
+            self.link.sample_transfer_s(
+                self.device(config.net).cost.transfer_bytes(config.split)
+                    + self.device(config.net).cost.result_bytes(),
+                rng,
+            )
+        } else {
+            0.0
+        };
+        let cloud = base.cloud_s * rng.lognormal(0.0, calib::LATENCY_JITTER_SIGMA);
+        (edge, tpu, net, cloud)
+    }
+
+    /// Run one trial of `batch_per_trial` inferences under `config`.
+    pub fn run_trial(&self, config: &Config, rng: &mut Pcg32) -> TrialResult {
+        self.run_trial_n(config, self.batch_per_trial, rng)
+    }
+
+    /// Run one trial with an explicit batch size.
+    pub fn run_trial_n(&self, config: &Config, n: usize, rng: &mut Pcg32) -> TrialResult {
+        assert!(n > 0);
+        let mut latencies_ms = Vec::with_capacity(n);
+        let (mut sum_e, mut sum_n, mut sum_c) = (0.0f64, 0.0, 0.0);
+        let mut edge_trace = PowerTrace::new();
+        let mut cloud_trace = PowerTrace::new();
+        let mut total_tpu_s = 0.0;
+        let mut total_cpu_s = 0.0;
+        let mut total_cloud_s = 0.0;
+
+        for _ in 0..n {
+            let (edge, tpu, net, cloud) = self.sample_inference(config, rng);
+            latencies_ms.push((edge + net + cloud) * 1000.0);
+            sum_e += edge;
+            sum_n += net;
+            sum_c += cloud;
+            total_tpu_s += tpu;
+            total_cpu_s += edge - tpu;
+            total_cloud_s += cloud;
+        }
+
+        // --- build the batched-execution power traces (§6.2.2) ---
+        // Edge: CPU phase + TPU phase back-to-back over the n heads, then
+        // idle while the batch transfers and the cloud computes the tails.
+        edge_trace.push(total_cpu_s, edge_power(EdgeState::CpuBusy, config));
+        edge_trace.push(total_tpu_s, edge_power(EdgeState::TpuBusy, config));
+        if !config.is_edge_only() {
+            let batch_transfer = self.link.rtt_s
+                + (n as u64 * self.device(config.net).cost.transfer_bytes(config.split)) as f64
+                    / self.link.bytes_per_s;
+            edge_trace.push(batch_transfer + total_cloud_s, edge_power(EdgeState::Idle, config));
+            // Cloud: active only during the tail window (§3.4).
+            cloud_trace.push(total_cloud_s, cloud_power(config));
+        }
+
+        let edge_energy = self.edge_meter.measure_energy_j(&edge_trace, rng) / n as f64;
+        let cloud_energy = if config.is_edge_only() {
+            0.0
+        } else {
+            self.cloud_meter.measure_energy_j(&cloud_trace, rng) / n as f64
+        };
+
+        let inv_n = 1.0 / n as f64;
+        TrialResult {
+            config: *config,
+            latency_ms: latencies_ms.iter().sum::<f64>() * inv_n,
+            latencies_ms,
+            energy_j: edge_energy + cloud_energy,
+            edge_energy_j: edge_energy,
+            cloud_energy_j: cloud_energy,
+            accuracy: self.accuracy.sample(config, rng),
+            edge_ms: sum_e * 1000.0 * inv_n,
+            net_ms: sum_n * 1000.0 * inv_n,
+            cloud_ms: sum_c * 1000.0 * inv_n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{feasible, Space, TpuMode};
+
+    fn cfg(net: Network, cpu_idx: usize, tpu: TpuMode, gpu: bool, split: usize) -> Config {
+        feasible::repair(Config { net, cpu_idx, tpu, gpu, split })
+    }
+
+    fn trial(config: &Config, seed: u64) -> TrialResult {
+        let tb = Testbed::synthetic();
+        let mut rng = Pcg32::seeded(seed);
+        tb.run_trial_n(config, 300, &mut rng)
+    }
+
+    #[test]
+    fn vgg_edge_baseline_matches_paper() {
+        // §6.3.1/2: edge baseline (TPU max, CPU max) ≈ 425 ms, < 3 J.
+        let t = trial(&cfg(Network::Vgg16, 6, TpuMode::Max, false, 22), 1);
+        assert!((380.0..480.0).contains(&t.latency_ms), "{}", t.latency_ms);
+        assert!(t.energy_j < 3.0, "{}", t.energy_j);
+        assert_eq!(t.cloud_energy_j, 0.0);
+    }
+
+    #[test]
+    fn vgg_cloud_baseline_matches_paper() {
+        // §6.3.1/2: cloud baseline ≈ 96 ms, ≈ 68 J.
+        let t = trial(&cfg(Network::Vgg16, 6, TpuMode::Off, true, 0), 2);
+        assert!((85.0..115.0).contains(&t.latency_ms), "{}", t.latency_ms);
+        assert!((45.0..95.0).contains(&t.energy_j), "{}", t.energy_j);
+    }
+
+    #[test]
+    fn vit_baselines_match_paper() {
+        // edge ≈ 3,926 ms / ≈ 16-18 J ; cloud ≈ 117 ms / ≈ 90 J.
+        let e = trial(&cfg(Network::Vit, 6, TpuMode::Off, false, 19), 3);
+        assert!((3500.0..4400.0).contains(&e.latency_ms), "{}", e.latency_ms);
+        assert!((12.0..24.0).contains(&e.energy_j), "{}", e.energy_j);
+        let c = trial(&cfg(Network::Vit, 6, TpuMode::Off, true, 0), 4);
+        assert!((105.0..140.0).contains(&c.latency_ms), "{}", c.latency_ms);
+        assert!((60.0..120.0).contains(&c.energy_j), "{}", c.energy_j);
+    }
+
+    #[test]
+    fn headline_energy_reduction_reachable() {
+        // Abstract: up to 72% energy reduction vs cloud-only.
+        let cloud = trial(&cfg(Network::Vgg16, 6, TpuMode::Off, true, 0), 5);
+        let edge = trial(&cfg(Network::Vgg16, 6, TpuMode::Max, false, 22), 6);
+        let reduction = 1.0 - edge.energy_j / cloud.energy_j;
+        assert!(reduction > 0.72, "only {:.0}% reduction", reduction * 100.0);
+    }
+
+    #[test]
+    fn latency_decomposition_consistent() {
+        let t = trial(&cfg(Network::Vgg16, 4, TpuMode::Std, true, 9), 7);
+        let sum = t.edge_ms + t.net_ms + t.cloud_ms;
+        assert!((sum - t.latency_ms).abs() / t.latency_ms < 1e-6);
+        assert_eq!(t.latencies_ms.len(), 300);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = cfg(Network::Vgg16, 3, TpuMode::Off, true, 5);
+        let a = trial(&c, 11);
+        let b = trial(&c, 11);
+        assert_eq!(a.latency_ms, b.latency_ms);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+
+    #[test]
+    fn outliers_at_800mhz_only() {
+        let tb = Testbed::synthetic();
+        let spread = |cpu_idx: usize, seed: u64| {
+            let mut rng = Pcg32::seeded(seed);
+            let c = cfg(Network::Vgg16, cpu_idx, TpuMode::Off, false, 22);
+            let t = tb.run_trial_n(&c, 400, &mut rng);
+            let s = crate::util::stats::Summary::of(&t.latencies_ms);
+            (s.max - s.median) / s.median
+        };
+        // 0.8 GHz (idx 1) shows a heavier tail than 1.0 GHz (idx 2).
+        assert!(spread(1, 12) > spread(2, 12) + 0.2);
+    }
+
+    #[test]
+    fn energy_integrates_edge_idle_during_cloud_phase() {
+        // §3.4: edge energy spans the whole inference window, including
+        // waiting for the cloud — so a split config must charge more edge
+        // energy than its head compute alone would.
+        let tb = Testbed::synthetic();
+        let mut rng = Pcg32::seeded(13);
+        // k=0 cloud-only on slow CPU: nearly all edge energy is idle wait.
+        let t = tb.run_trial_n(&cfg(Network::Vgg16, 0, TpuMode::Off, false, 0), 300, &mut rng);
+        // idle power ≈ 2.7 W over ~ (prep + net + slow cloud tail)
+        assert!(t.edge_energy_j > 0.5, "{}", t.edge_energy_j);
+    }
+
+    #[test]
+    fn all_feasible_configs_produce_finite_results() {
+        let tb = Testbed::synthetic();
+        let mut rng = Pcg32::seeded(14);
+        for net in Network::ALL {
+            for c in Space::new(net).enumerate_feasible().iter().step_by(17) {
+                let t = tb.run_trial_n(c, 10, &mut rng);
+                assert!(t.latency_ms.is_finite() && t.latency_ms > 0.0, "{c:?}");
+                assert!(t.energy_j.is_finite() && t.energy_j > 0.0, "{c:?}");
+                assert!((0.0..=1.0).contains(&t.accuracy), "{c:?}");
+            }
+        }
+    }
+}

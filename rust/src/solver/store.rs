@@ -1,0 +1,256 @@
+//! Persistence for the offline phase: trial logs, the non-dominated set
+//! (the artifact the Controller loads at startup), and the observation
+//! pool the Simulation Experiment samples from.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::Strategy;
+use crate::simulator::TrialResult;
+use crate::space::{feasible, Config, Network, TpuMode};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// One non-dominated configuration with its measured objective values —
+/// what the paper's Solver hands to the Controller.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoEntry {
+    pub config: Config,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub accuracy: f64,
+}
+
+/// Complete offline-phase output.
+#[derive(Debug, Clone)]
+pub struct SolverOutput {
+    pub net: Network,
+    pub strategy: Strategy,
+    pub seed: u64,
+    pub trials: Vec<TrialResult>,
+    pub pareto: Vec<ParetoEntry>,
+}
+
+fn config_to_json(c: &Config) -> Json {
+    Json::obj(vec![
+        ("net", Json::str(c.net.name())),
+        ("cpu_idx", Json::num(c.cpu_idx as f64)),
+        ("tpu", Json::str(c.tpu.label())),
+        ("gpu", Json::Bool(c.gpu)),
+        ("split", Json::num(c.split as f64)),
+    ])
+}
+
+fn config_from_json(v: &Json) -> Result<Config> {
+    let net = Network::parse(v.get("net")?.as_str()?)?;
+    let tpu = match v.get("tpu")?.as_str()? {
+        "off" => TpuMode::Off,
+        "std" => TpuMode::Std,
+        "max" => TpuMode::Max,
+        other => anyhow::bail!("bad tpu mode {other:?}"),
+    };
+    let c = Config {
+        net,
+        cpu_idx: v.get("cpu_idx")?.as_usize()?,
+        tpu,
+        gpu: v.get("gpu")?.as_bool()?,
+        split: v.get("split")?.as_usize()?,
+    };
+    anyhow::ensure!(c.cpu_idx < crate::space::CPU_FREQS_GHZ.len(), "cpu_idx out of range");
+    anyhow::ensure!(c.split <= net.num_layers(), "split out of range");
+    anyhow::ensure!(feasible::is_feasible(&c), "infeasible persisted config {c:?}");
+    Ok(c)
+}
+
+fn entry_to_json(e: &ParetoEntry) -> Json {
+    Json::obj(vec![
+        ("config", config_to_json(&e.config)),
+        ("latency_ms", Json::num(e.latency_ms)),
+        ("energy_j", Json::num(e.energy_j)),
+        ("accuracy", Json::num(e.accuracy)),
+    ])
+}
+
+fn entry_from_json(v: &Json) -> Result<ParetoEntry> {
+    Ok(ParetoEntry {
+        config: config_from_json(v.get("config")?)?,
+        latency_ms: v.get("latency_ms")?.as_f64()?,
+        energy_j: v.get("energy_j")?.as_f64()?,
+        accuracy: v.get("accuracy")?.as_f64()?,
+    })
+}
+
+impl SolverOutput {
+    /// Persist the non-dominated set + a compact trial log.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let trials = Json::arr(self.trials.iter().map(|t| {
+            Json::obj(vec![
+                ("config", config_to_json(&t.config)),
+                ("latency_ms", Json::num(t.latency_ms)),
+                ("energy_j", Json::num(t.energy_j)),
+                ("edge_energy_j", Json::num(t.edge_energy_j)),
+                ("cloud_energy_j", Json::num(t.cloud_energy_j)),
+                ("accuracy", Json::num(t.accuracy)),
+            ])
+        }));
+        let root = Json::obj(vec![
+            ("net", Json::str(self.net.name())),
+            (
+                "strategy",
+                Json::str(match self.strategy {
+                    Strategy::NsgaIII => "nsga3",
+                    Strategy::Grid => "grid",
+                }),
+            ),
+            ("seed", Json::num(self.seed as f64)),
+            ("pareto", Json::arr(self.pareto.iter().map(entry_to_json))),
+            ("trials", trials),
+        ]);
+        std::fs::write(path, root.encode()).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load only the non-dominated set (what the Controller needs).
+    pub fn load_pareto(path: &Path) -> Result<Vec<ParetoEntry>> {
+        let root = Json::parse_file(path)?;
+        root.get("pareto")?.as_arr()?.iter().map(entry_from_json).collect()
+    }
+}
+
+/// Key for grouping observations by configuration.
+fn config_key(c: &Config) -> (usize, usize, bool, usize) {
+    (c.cpu_idx, c.tpu as usize, c.gpu, c.split)
+}
+
+/// Pool of repeated observations per configuration — the Simulation
+/// Experiment's data source (§6.2: each simulated request re-samples a
+/// stored observation of its selected configuration, ≥ 5 per config).
+#[derive(Debug, Clone, Default)]
+pub struct ObservationPool {
+    by_config: BTreeMap<(usize, usize, bool, usize), Vec<Observation>>,
+}
+
+/// One stored observation of a configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    pub accuracy: f64,
+}
+
+impl ObservationPool {
+    /// Record an observation from a trial.
+    pub fn record(&mut self, t: &TrialResult) {
+        self.by_config.entry(config_key(&t.config)).or_default().push(Observation {
+            latency_ms: t.latency_ms,
+            energy_j: t.energy_j,
+            edge_energy_j: t.edge_energy_j,
+            cloud_energy_j: t.cloud_energy_j,
+            accuracy: t.accuracy,
+        });
+    }
+
+    pub fn observations(&self, c: &Config) -> &[Observation] {
+        self.by_config.get(&config_key(c)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn min_observations(&self) -> usize {
+        self.by_config.values().map(|v| v.len()).min().unwrap_or(0)
+    }
+
+    /// Ensure every listed configuration has ≥ `min` observations by
+    /// running additional trials on `testbed` (the paper's §6.2 setup).
+    pub fn ensure_coverage(
+        &mut self,
+        configs: &[Config],
+        min: usize,
+        testbed: &crate::simulator::Testbed,
+        batch: usize,
+        rng: &mut Pcg32,
+    ) {
+        for c in configs {
+            while self.observations(c).len() < min {
+                let t = testbed.run_trial_n(c, batch, rng);
+                self.record(&t);
+            }
+        }
+    }
+
+    /// Sample a stored observation for `config` uniformly at random.
+    pub fn sample(&self, config: &Config, rng: &mut Pcg32) -> Option<Observation> {
+        let obs = self.observations(config);
+        (!obs.is_empty()).then(|| *rng.choose(obs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::Testbed;
+    use crate::solver::{Solver, Strategy};
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dynasplit_store_{tag}_{}.json", std::process::id()))
+    }
+
+    fn small_output() -> SolverOutput {
+        let mut tb = Testbed::synthetic();
+        tb.batch_per_trial = 30;
+        let mut s = Solver::new(&tb, Network::Vgg16);
+        s.batch_per_trial = 30;
+        s.run(Strategy::NsgaIII, 60, 5)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let out = small_output();
+        let path = tmpfile("roundtrip");
+        out.save(&path).unwrap();
+        let loaded = SolverOutput::load_pareto(&path).unwrap();
+        assert_eq!(loaded.len(), out.pareto.len());
+        for (a, b) in loaded.iter().zip(&out.pareto) {
+            assert_eq!(a.config, b.config);
+            assert!((a.latency_ms - b.latency_ms).abs() < 1e-9);
+            assert!((a.accuracy - b.accuracy).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn load_rejects_corrupted_config() {
+        let out = small_output();
+        let path = tmpfile("corrupt");
+        out.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // corrupt a split value beyond the layer count
+        let bad = text.replacen("\"split\":", "\"split\":999, \"x\":", 1);
+        std::fs::write(&path, bad).unwrap();
+        assert!(SolverOutput::load_pareto(&path).is_err());
+    }
+
+    #[test]
+    fn observation_pool_coverage_and_sampling() {
+        let tb = Testbed::synthetic();
+        let mut pool = ObservationPool::default();
+        let out = small_output();
+        let configs: Vec<Config> = out.pareto.iter().map(|p| p.config).collect();
+        let mut rng = Pcg32::seeded(9);
+        pool.ensure_coverage(&configs, 5, &tb, 20, &mut rng);
+        assert!(pool.min_observations() >= 5);
+        for c in &configs {
+            let s = pool.sample(c, &mut rng).unwrap();
+            assert!(s.latency_ms > 0.0);
+        }
+        // unknown config -> None
+        let other = Config {
+            net: Network::Vit,
+            cpu_idx: 0,
+            tpu: TpuMode::Off,
+            gpu: false,
+            split: 3,
+        };
+        assert!(pool.sample(&other, &mut rng).is_none());
+    }
+}

@@ -1,0 +1,118 @@
+//! Feasibility rules for the conditional configuration space (§4.2.1).
+//!
+//! The paper removes configurations where a parameter value is meaningless
+//! given another parameter's value; we additionally provide a *repair*
+//! operator (canonicalization) so genetic operators can stay simple and
+//! never produce wasted infeasible trials.
+
+use super::{Config, TpuMode};
+
+/// Paper §4.2.1 feasibility:
+///  (i) k = 0 (cloud-only) ⇒ TPU off — no edge processing exists;
+/// (ii) k = L (edge-only) ⇒ GPU unused — no cloud processing exists;
+/// (iii) ViT ⇒ TPU off in every configuration (edge-TPU memory limits).
+pub fn is_feasible(c: &Config) -> bool {
+    if c.is_cloud_only() && c.tpu != TpuMode::Off {
+        return false;
+    }
+    if c.is_edge_only() && c.gpu {
+        return false;
+    }
+    if !c.net.tpu_capable() && c.tpu != TpuMode::Off {
+        return false;
+    }
+    true
+}
+
+/// Canonicalize an arbitrary configuration into a feasible one by forcing
+/// the dependent parameters to their only-valid values.  Idempotent, and
+/// the identity on already-feasible configurations.
+pub fn repair(mut c: Config) -> Config {
+    if !c.net.tpu_capable() {
+        c.tpu = TpuMode::Off;
+    }
+    if c.is_cloud_only() {
+        c.tpu = TpuMode::Off;
+    }
+    if c.is_edge_only() {
+        c.gpu = false;
+    }
+    c
+}
+
+/// Count of feasible configurations (used in reports; the effective |X|).
+pub fn feasible_count(space: &super::Space) -> usize {
+    space.enumerate_feasible().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Config as PropConfig};
+    use crate::space::{Network, Space};
+
+    #[test]
+    fn cloud_only_requires_tpu_off() {
+        let s = Space::new(Network::Vgg16);
+        let c = s.decode(&[0, 1, 1, 0]); // split 0, tpu std
+        assert!(!is_feasible(&c));
+        assert!(is_feasible(&repair(c)));
+        assert_eq!(repair(c).tpu, TpuMode::Off);
+    }
+
+    #[test]
+    fn edge_only_requires_no_gpu() {
+        let s = Space::new(Network::Vgg16);
+        let c = s.decode(&[0, 0, 1, 22]);
+        assert!(!is_feasible(&c));
+        assert!(!repair(c).gpu);
+    }
+
+    #[test]
+    fn vit_never_uses_tpu() {
+        let s = Space::new(Network::Vit);
+        for c in s.enumerate_feasible() {
+            assert_eq!(c.tpu, TpuMode::Off);
+        }
+    }
+
+    #[test]
+    fn repair_is_idempotent_and_feasible() {
+        forall("repair idempotent+feasible", PropConfig::default(), |rng| {
+            for net in Network::ALL {
+                let s = Space::new(net);
+                // raw (possibly infeasible) random point
+                let c = s.decode(&[
+                    rng.below(7) as usize,
+                    rng.below(3) as usize,
+                    rng.below(2) as usize,
+                    rng.below(net.num_layers() as u64 + 1) as usize,
+                ]);
+                let r = repair(c);
+                anyhow::ensure!(is_feasible(&r), "repair produced infeasible {r:?}");
+                anyhow::ensure!(repair(r) == r, "repair not idempotent on {c:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repair_preserves_feasible_points() {
+        for net in Network::ALL {
+            for c in Space::new(net).enumerate_feasible() {
+                assert_eq!(repair(c), c);
+            }
+        }
+    }
+
+    #[test]
+    fn feasible_counts() {
+        // VGG16: infeasible = (k=0 with tpu != off): 7*2*2=28... computed
+        // directly instead: raw 966, minus k=0&tpu!=off (7*2*2=28), minus
+        // k=22&gpu (7*3*1=21), no overlap between the two sets.
+        assert_eq!(feasible_count(&Space::new(Network::Vgg16)), 966 - 28 - 21);
+        // ViT: tpu forced off: 7*1*2*20=280 raw-feasible by rule (iii),
+        // minus k=0 handled (already off), minus k=19&gpu (7*1*1=7).
+        assert_eq!(feasible_count(&Space::new(Network::Vit)), 280 - 7);
+    }
+}

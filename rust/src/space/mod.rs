@@ -1,0 +1,289 @@
+//! The hardware/software configuration space (paper Table 1 + §4.2.1).
+//!
+//! A configuration couples software (NN split layer) and hardware (edge
+//! CPU DVFS frequency, edge TPU mode, cloud GPU usage) parameters.  The
+//! space is *conditional*: some combinations are infeasible —
+//!
+//! * `k = 0` (cloud-only): the TPU must be off (no edge compute);
+//! * `k = L` (edge-only): the GPU is unused (no cloud compute);
+//! * ViT: the TPU is never used (edge-TPU memory limits, paper §4.2.1).
+//!
+//! [`Space`] enumerates, samples, repairs, and encodes configurations for
+//! the NSGA-III genome (`space::encode` / `space::decode`).
+
+use crate::util::rng::Pcg32;
+
+pub mod feasible;
+
+/// The two evaluation networks (paper §2.2: the small models —
+/// ResNet50/MobileNetV2 — showed no split-computing benefit and were
+/// dropped after the preliminary study).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Network {
+    Vgg16,
+    Vit,
+}
+
+impl Network {
+    pub const ALL: [Network; 2] = [Network::Vgg16, Network::Vit];
+
+    /// Layer count L (split points are 0..=L). Table 1: VGG16 22, ViT 19.
+    pub fn num_layers(self) -> usize {
+        match self {
+            Network::Vgg16 => 22,
+            Network::Vit => 19,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Network::Vgg16 => "vgg16",
+            Network::Vit => "vit",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Network> {
+        match s.to_ascii_lowercase().as_str() {
+            "vgg16" | "vgg" => Ok(Network::Vgg16),
+            "vit" => Ok(Network::Vit),
+            other => anyhow::bail!("unknown network {other:?} (expected vgg16|vit)"),
+        }
+    }
+
+    /// Whether the edge TPU can execute this network's head (paper: ViT is
+    /// too large for edge-TPU quantization [64]).
+    pub fn tpu_capable(self) -> bool {
+        matches!(self, Network::Vgg16)
+    }
+}
+
+/// Edge CPU DVFS frequencies in GHz (Table 1: 0.6..1.8 step 0.2).
+pub const CPU_FREQS_GHZ: [f64; 7] = [0.6, 0.8, 1.0, 1.2, 1.4, 1.6, 1.8];
+
+/// Edge TPU operating mode (Table 1: {off, std, max};
+/// libedgetpu1-std = 250 MHz, libedgetpu1-max = 500 MHz).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TpuMode {
+    Off,
+    Std,
+    Max,
+}
+
+impl TpuMode {
+    pub const ALL: [TpuMode; 3] = [TpuMode::Off, TpuMode::Std, TpuMode::Max];
+
+    pub fn mhz(self) -> f64 {
+        match self {
+            TpuMode::Off => 0.0,
+            TpuMode::Std => 250.0,
+            TpuMode::Max => 500.0,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            TpuMode::Off => "off",
+            TpuMode::Std => "std",
+            TpuMode::Max => "max",
+        }
+    }
+}
+
+/// One point of the configuration space X (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Config {
+    pub net: Network,
+    /// Edge CPU frequency index into [`CPU_FREQS_GHZ`].
+    pub cpu_idx: usize,
+    pub tpu: TpuMode,
+    pub gpu: bool,
+    /// Split layer k in 0..=L: first k layers on edge, rest on cloud.
+    pub split: usize,
+}
+
+impl Config {
+    pub fn cpu_ghz(&self) -> f64 {
+        CPU_FREQS_GHZ[self.cpu_idx]
+    }
+
+    /// Cloud-only (k = 0).
+    pub fn is_cloud_only(&self) -> bool {
+        self.split == 0
+    }
+
+    /// Edge-only (k = L).
+    pub fn is_edge_only(&self) -> bool {
+        self.split == self.net.num_layers()
+    }
+
+    pub fn is_split(&self) -> bool {
+        !self.is_cloud_only() && !self.is_edge_only()
+    }
+
+    /// Execution placement label used in Fig. 6/11 (cloud/split/edge).
+    pub fn placement(&self) -> &'static str {
+        if self.is_cloud_only() {
+            "cloud"
+        } else if self.is_edge_only() {
+            "edge"
+        } else {
+            "split"
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: CPU {:.1} GHz, TPU {}, GPU {}, split {}",
+            self.net.name(),
+            self.cpu_ghz(),
+            self.tpu.label(),
+            if self.gpu { "yes" } else { "no" },
+            self.split
+        )
+    }
+}
+
+/// The per-network configuration space with Table-1 domains.
+#[derive(Debug, Clone, Copy)]
+pub struct Space {
+    pub net: Network,
+}
+
+impl Space {
+    pub fn new(net: Network) -> Space {
+        Space { net }
+    }
+
+    /// Raw cardinality |X| = |CPUf| x |TPUf| x |GPU| x |L| (paper §4.2.1:
+    /// 966 for VGG16 — before feasibility filtering).
+    pub fn cardinality(&self) -> usize {
+        CPU_FREQS_GHZ.len() * TpuMode::ALL.len() * 2 * (self.net.num_layers() + 1)
+    }
+
+    /// Genome layout for NSGA-III: four integer genes with these
+    /// (inclusive) upper bounds.
+    pub fn gene_bounds(&self) -> [usize; 4] {
+        [
+            CPU_FREQS_GHZ.len() - 1,
+            TpuMode::ALL.len() - 1,
+            1,
+            self.net.num_layers(),
+        ]
+    }
+
+    pub fn decode(&self, genes: &[usize; 4]) -> Config {
+        Config {
+            net: self.net,
+            cpu_idx: genes[0].min(CPU_FREQS_GHZ.len() - 1),
+            tpu: TpuMode::ALL[genes[1].min(2)],
+            gpu: genes[2] == 1,
+            split: genes[3].min(self.net.num_layers()),
+        }
+    }
+
+    pub fn encode(&self, c: &Config) -> [usize; 4] {
+        [
+            c.cpu_idx,
+            TpuMode::ALL.iter().position(|&m| m == c.tpu).unwrap(),
+            c.gpu as usize,
+            c.split,
+        ]
+    }
+
+    /// Enumerate the *entire* raw space in a deterministic order (the
+    /// GridSampler used for the paper's ~80% exploration and Table 2).
+    pub fn enumerate(&self) -> Vec<Config> {
+        let mut out = Vec::with_capacity(self.cardinality());
+        for cpu_idx in 0..CPU_FREQS_GHZ.len() {
+            for &tpu in &TpuMode::ALL {
+                for gpu in [false, true] {
+                    for split in 0..=self.net.num_layers() {
+                        out.push(Config { net: self.net, cpu_idx, tpu, gpu, split });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Enumerate only feasible configurations.
+    pub fn enumerate_feasible(&self) -> Vec<Config> {
+        self.enumerate()
+            .into_iter()
+            .filter(feasible::is_feasible)
+            .collect()
+    }
+
+    /// Sample a uniformly random *feasible* configuration (rejection from
+    /// the raw space, then repair — matches how Optuna's samplers handle
+    /// our conditional space).
+    pub fn sample(&self, rng: &mut Pcg32) -> Config {
+        let c = Config {
+            net: self.net,
+            cpu_idx: rng.below(CPU_FREQS_GHZ.len() as u64) as usize,
+            tpu: *rng.choose(&TpuMode::ALL),
+            gpu: rng.chance(0.5),
+            split: rng.below(self.net.num_layers() as u64 + 1) as usize,
+        };
+        feasible::repair(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg_cardinality_matches_paper() {
+        // §4.2.1: |X| = 7 x 3 x 2 x 23 = 966 for VGG16.
+        assert_eq!(Space::new(Network::Vgg16).cardinality(), 966);
+    }
+
+    #[test]
+    fn vit_cardinality() {
+        assert_eq!(Space::new(Network::Vit).cardinality(), 7 * 3 * 2 * 20);
+    }
+
+    #[test]
+    fn enumerate_covers_cardinality() {
+        for net in Network::ALL {
+            let s = Space::new(net);
+            assert_eq!(s.enumerate().len(), s.cardinality());
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = Space::new(Network::Vgg16);
+        for c in s.enumerate() {
+            assert_eq!(s.decode(&s.encode(&c)), c);
+        }
+    }
+
+    #[test]
+    fn placement_labels() {
+        let s = Space::new(Network::Vgg16);
+        let mk = |split| s.decode(&[0, 0, 0, split]);
+        assert_eq!(mk(0).placement(), "cloud");
+        assert_eq!(mk(22).placement(), "edge");
+        assert_eq!(mk(5).placement(), "split");
+    }
+
+    #[test]
+    fn sampled_configs_are_feasible() {
+        let mut rng = Pcg32::seeded(1);
+        for net in Network::ALL {
+            let s = Space::new(net);
+            for _ in 0..500 {
+                assert!(feasible::is_feasible(&s.sample(&mut rng)));
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_freqs_match_table1() {
+        assert_eq!(CPU_FREQS_GHZ.len(), 7);
+        assert_eq!(CPU_FREQS_GHZ[0], 0.6);
+        assert_eq!(CPU_FREQS_GHZ[6], 1.8);
+    }
+}

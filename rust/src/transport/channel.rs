@@ -1,0 +1,212 @@
+//! In-process duplex byte stream with link shaping.
+//!
+//! `duplex()` returns two [`Endpoint`]s connected like a TCP socket pair;
+//! writes on one side become reads on the other, in order.  An optional
+//! [`LinkShaping`] delays delivery to model the WAN link (RTT/2 one-way
+//! latency + serialization time at the link bandwidth), so the online
+//! phase's measured `T_net` comes from the same link model the simulator
+//! uses.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::frame::Frame;
+
+/// Link shaping parameters (None = loopback, no delay).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkShaping {
+    pub one_way_latency: Duration,
+    pub bytes_per_s: f64,
+}
+
+impl LinkShaping {
+    pub fn from_calib() -> LinkShaping {
+        LinkShaping {
+            one_way_latency: Duration::from_secs_f64(crate::simulator::calib::LINK_RTT_S / 2.0),
+            bytes_per_s: crate::simulator::calib::LINK_BYTES_PER_S,
+        }
+    }
+
+    fn delivery_delay(&self, bytes: usize) -> Duration {
+        self.one_way_latency + Duration::from_secs_f64(bytes as f64 / self.bytes_per_s)
+    }
+}
+
+struct Packet {
+    deliver_at: Instant,
+    bytes: Vec<u8>,
+}
+
+/// One side of the duplex stream.
+pub struct Endpoint {
+    tx: Sender<Packet>,
+    rx: Receiver<Packet>,
+    shaping: Option<LinkShaping>,
+    /// Reassembly buffer for frame decoding.
+    inbox: VecDeque<u8>,
+    closed: bool,
+}
+
+/// Create a connected endpoint pair with optional link shaping.
+pub fn duplex(shaping: Option<LinkShaping>) -> (Endpoint, Endpoint) {
+    let (tx_a, rx_b) = mpsc::channel();
+    let (tx_b, rx_a) = mpsc::channel();
+    (
+        Endpoint { tx: tx_a, rx: rx_a, shaping, inbox: VecDeque::new(), closed: false },
+        Endpoint { tx: tx_b, rx: rx_b, shaping, inbox: VecDeque::new(), closed: false },
+    )
+}
+
+impl Endpoint {
+    /// Send a frame (returns the modeled wire delay applied to it).
+    pub fn send(&self, frame: &Frame) -> Result<Duration> {
+        let bytes = frame.encode();
+        let delay = self
+            .shaping
+            .map(|s| s.delivery_delay(bytes.len()))
+            .unwrap_or(Duration::ZERO);
+        let packet = Packet { deliver_at: Instant::now() + delay, bytes };
+        if self.tx.send(packet).is_err() {
+            bail!("peer endpoint dropped");
+        }
+        Ok(delay)
+    }
+
+    /// Blocking receive of the next frame, honoring shaped delivery times.
+    pub fn recv(&mut self, timeout: Duration) -> Result<Frame> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // try to decode from the reassembly buffer first
+            self.inbox.make_contiguous();
+            if let Some((frame, used)) = Frame::decode(self.inbox.as_slices().0)? {
+                self.inbox.drain(..used);
+                return Ok(frame);
+            }
+            if self.closed {
+                bail!("stream closed mid-frame");
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("transport recv timeout after {timeout:?}");
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(packet) => {
+                    // honor the shaped delivery time
+                    let now = Instant::now();
+                    if packet.deliver_at > now {
+                        std::thread::sleep(packet.deliver_at - now);
+                    }
+                    self.inbox.extend(packet.bytes);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("transport recv timeout after {timeout:?}")
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.closed = true;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{Kind, StreamMeta};
+
+    const T: Duration = Duration::from_secs(2);
+
+    #[test]
+    fn loopback_roundtrip() {
+        let (a, mut b) = duplex(None);
+        a.send(&Frame::tensor(&[1.0, 2.0])).unwrap();
+        let f = b.recv(T).unwrap();
+        assert_eq!(f.tensor_f32().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn bidirectional() {
+        let (mut a, mut b) = duplex(None);
+        a.send(&Frame::meta(&StreamMeta {
+            network: "vgg16".into(),
+            split: 3,
+            gpu: true,
+            tensor_len: 8,
+        }))
+        .unwrap();
+        assert_eq!(b.recv(T).unwrap().kind, Kind::Meta);
+        b.send(&Frame::result(&[0.5])).unwrap();
+        assert_eq!(a.recv(T).unwrap().kind, Kind::Result);
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        let (a, mut b) = duplex(None);
+        for i in 0..50 {
+            a.send(&Frame::tensor(&[i as f32])).unwrap();
+        }
+        for i in 0..50 {
+            assert_eq!(b.recv(T).unwrap().tensor_f32().unwrap(), vec![i as f32]);
+        }
+    }
+
+    #[test]
+    fn shaping_delays_delivery() {
+        let shaping = LinkShaping {
+            one_way_latency: Duration::from_millis(20),
+            bytes_per_s: 1e9,
+        };
+        let (a, mut b) = duplex(Some(shaping));
+        let t0 = Instant::now();
+        a.send(&Frame::tensor(&[1.0])).unwrap();
+        b.recv(T).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(18), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn bandwidth_term_scales_with_size() {
+        let shaping = LinkShaping {
+            one_way_latency: Duration::ZERO,
+            bytes_per_s: 1e6, // 1 MB/s: 100 KB ≈ 100 ms
+        };
+        let (a, mut b) = duplex(Some(shaping));
+        let big = vec![0f32; 25_000]; // 100 KB
+        let t0 = Instant::now();
+        a.send(&Frame::tensor(&big)).unwrap();
+        b.recv(T).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(80), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn recv_times_out() {
+        let (_a, mut b) = duplex(None);
+        let err = b.recv(Duration::from_millis(30)).unwrap_err();
+        assert!(format!("{err}").contains("timeout"));
+    }
+
+    #[test]
+    fn dropped_peer_detected() {
+        let (a, mut b) = duplex(None);
+        drop(a);
+        assert!(b.recv(Duration::from_millis(50)).is_err());
+    }
+
+    #[test]
+    fn works_across_threads() {
+        let (a, mut b) = duplex(None);
+        let h = std::thread::spawn(move || {
+            for i in 0..10 {
+                a.send(&Frame::tensor(&[i as f32])).unwrap();
+            }
+        });
+        let mut sum = 0.0;
+        for _ in 0..10 {
+            sum += b.recv(T).unwrap().tensor_f32().unwrap()[0];
+        }
+        h.join().unwrap();
+        assert_eq!(sum, 45.0);
+    }
+}

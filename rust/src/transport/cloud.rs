@@ -1,0 +1,171 @@
+//! Cloud-side service loop.
+//!
+//! Mirrors the paper's cloud node behaviour (§4.3.2-4.3.3): on stream
+//! open it receives an initialization message naming the tail network,
+//! the split point, and whether to use the GPU; it then serves tensor
+//! batches until shutdown, streaming results back.  The actual tail
+//! computation is abstracted behind [`TailExecutor`] so the service loop
+//! can run over the PJRT runtime (production) or a mock (tests).
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::channel::Endpoint;
+use super::frame::{Frame, Kind, StreamMeta};
+
+/// Executes the tail segment (layers k..L) of a network on a batch.
+///
+/// Deliberately NOT `Send`: PJRT executables hold thread-local handles
+/// (`Rc` internals in the `xla` crate), so each node thread constructs
+/// its *own* executor — which is also the honest topology: the paper's
+/// cloud node has its own runtime, it does not share the edge's.
+pub trait TailExecutor {
+    fn execute_tail(&self, network: &str, split: usize, gpu: bool, batch: &[f32])
+        -> Result<Vec<f32>>;
+}
+
+/// Statistics returned when the service loop exits.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    pub batches: usize,
+    pub tensor_elements: usize,
+}
+
+/// Run the cloud service loop until `Shutdown` (or peer drop).
+///
+/// Protocol: exactly one `Meta` frame first (gRPC metadata-once), then
+/// any number of `Tensor` frames each answered with a `Result` frame.
+pub fn serve<E: TailExecutor>(
+    mut endpoint: Endpoint,
+    executor: &E,
+    timeout: Duration,
+) -> Result<ServeStats> {
+    let first = endpoint.recv(timeout).context("waiting for stream metadata")?;
+    let mut stats = ServeStats::default();
+    if first.kind == Kind::Shutdown {
+        // shutdown before any stream opened (e.g. the whole workload ran
+        // edge-only and never touched the cloud): clean no-op exit.
+        return Ok(stats);
+    }
+    if first.kind != Kind::Meta {
+        bail!("protocol violation: first frame was {:?}, expected Meta", first.kind);
+    }
+    let mut meta = StreamMeta::decode(&first.payload)?;
+    loop {
+        let frame = match endpoint.recv(timeout) {
+            Ok(f) => f,
+            // peer dropping the stream is a normal end-of-request-cycle
+            Err(_) if stats.batches > 0 => return Ok(stats),
+            Err(e) => return Err(e),
+        };
+        match frame.kind {
+            Kind::Shutdown => return Ok(stats),
+            // a new Meta re-initializes the stream (the controller opened
+            // a new logical gRPC stream after a configuration change)
+            Kind::Meta => {
+                meta = StreamMeta::decode(&frame.payload)?;
+            }
+            Kind::Tensor => {
+                let batch = frame.tensor_f32()?;
+                if batch.len() as u64 != meta.tensor_len {
+                    bail!(
+                        "tensor has {} elements, stream metadata promised {}",
+                        batch.len(),
+                        meta.tensor_len
+                    );
+                }
+                let result = executor.execute_tail(
+                    &meta.network,
+                    meta.split as usize,
+                    meta.gpu,
+                    &batch,
+                )?;
+                endpoint.send(&Frame::result(&result))?;
+                stats.batches += 1;
+                stats.tensor_elements += batch.len();
+            }
+            other => bail!("protocol violation: unexpected {:?} mid-stream", other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::channel::duplex;
+
+    /// Doubles every element — enough to verify plumbing.
+    struct MockExecutor;
+
+    impl TailExecutor for MockExecutor {
+        fn execute_tail(
+            &self,
+            network: &str,
+            split: usize,
+            _gpu: bool,
+            batch: &[f32],
+        ) -> Result<Vec<f32>> {
+            assert_eq!(network, "vgg16");
+            assert_eq!(split, 7);
+            Ok(batch.iter().map(|x| x * 2.0).collect())
+        }
+    }
+
+    const T: Duration = Duration::from_secs(2);
+
+    fn meta(len: u64) -> StreamMeta {
+        StreamMeta { network: "vgg16".into(), split: 7, gpu: true, tensor_len: len }
+    }
+
+    #[test]
+    fn serves_batches_then_shutdown() {
+        let (edge, cloud) = duplex(None);
+        let server = std::thread::spawn(move || serve(cloud, &MockExecutor, T));
+        let mut edge = edge;
+        edge.send(&Frame::meta(&meta(3))).unwrap();
+        for i in 0..5 {
+            edge.send(&Frame::tensor(&[i as f32, 1.0, 2.0])).unwrap();
+            let r = edge.recv(T).unwrap();
+            assert_eq!(r.kind, Kind::Result);
+            assert_eq!(r.tensor_f32().unwrap(), vec![i as f32 * 2.0, 2.0, 4.0]);
+        }
+        edge.send(&Frame::shutdown()).unwrap();
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.batches, 5);
+        assert_eq!(stats.tensor_elements, 15);
+    }
+
+    #[test]
+    fn rejects_tensor_before_meta() {
+        let (edge, cloud) = duplex(None);
+        let server = std::thread::spawn(move || serve(cloud, &MockExecutor, T));
+        edge.send(&Frame::tensor(&[1.0])).unwrap();
+        let err = server.join().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("protocol violation"));
+    }
+
+    #[test]
+    fn rejects_wrong_tensor_length() {
+        let (edge, cloud) = duplex(None);
+        let server = std::thread::spawn(move || serve(cloud, &MockExecutor, T));
+        let mut edge = edge;
+        edge.send(&Frame::meta(&meta(3))).unwrap();
+        edge.send(&Frame::tensor(&[1.0])).unwrap(); // promised 3, sent 1
+        let err = server.join().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("promised"));
+    }
+
+    #[test]
+    fn peer_drop_after_batches_is_clean_end() {
+        let (edge, cloud) = duplex(None);
+        let server = std::thread::spawn(move || serve(cloud, &MockExecutor, T));
+        let mut edge = edge;
+        edge.send(&Frame::meta(&meta(1))).unwrap();
+        edge.send(&Frame::tensor(&[5.0])).unwrap();
+        edge.recv(T).unwrap();
+        drop(edge);
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.batches, 1);
+    }
+}

@@ -1,0 +1,251 @@
+//! Wire format for the edge↔cloud stream.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! [4: magic "DSP1"][1: kind][8: payload len][payload][4: crc32(payload)]
+//! ```
+//! Kinds: `Meta` (once at stream open — the gRPC "metadata sent only once
+//! at the beginning of the stream" behaviour, §5), `Tensor` (length-
+//! prefixed f32 batch), `Result`, `Shutdown`.
+
+use anyhow::{bail, Result};
+
+pub const MAGIC: [u8; 4] = *b"DSP1";
+
+/// Frame kinds on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Meta = 1,
+    Tensor = 2,
+    Result = 3,
+    Shutdown = 4,
+}
+
+impl Kind {
+    fn from_u8(b: u8) -> Result<Kind> {
+        Ok(match b {
+            1 => Kind::Meta,
+            2 => Kind::Tensor,
+            3 => Kind::Result,
+            4 => Kind::Shutdown,
+            other => bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// A decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: Kind,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn meta(meta: &StreamMeta) -> Frame {
+        Frame { kind: Kind::Meta, payload: meta.encode() }
+    }
+
+    pub fn tensor(data: &[f32]) -> Frame {
+        Frame { kind: Kind::Tensor, payload: f32s_to_bytes(data) }
+    }
+
+    pub fn result(data: &[f32]) -> Frame {
+        Frame { kind: Kind::Result, payload: f32s_to_bytes(data) }
+    }
+
+    pub fn shutdown() -> Frame {
+        Frame { kind: Kind::Shutdown, payload: Vec::new() }
+    }
+
+    pub fn tensor_f32(&self) -> Result<Vec<f32>> {
+        if self.payload.len() % 4 != 0 {
+            bail!("tensor payload not a multiple of 4 bytes");
+        }
+        Ok(bytes_to_f32s(&self.payload))
+    }
+
+    /// Serialize with header + checksum.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(17 + self.payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
+        out
+    }
+
+    /// Decode one frame from the head of `buf`; returns (frame, consumed)
+    /// or None if `buf` does not yet hold a complete frame.
+    pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+        if buf.len() < 13 {
+            return Ok(None);
+        }
+        if buf[..4] != MAGIC {
+            bail!("bad frame magic {:02x?}", &buf[..4]);
+        }
+        let kind = Kind::from_u8(buf[4])?;
+        let len = u64::from_le_bytes(buf[5..13].try_into().unwrap()) as usize;
+        let total = 13 + len + 4;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let payload = buf[13..13 + len].to_vec();
+        let want = u32::from_le_bytes(buf[13 + len..total].try_into().unwrap());
+        let got = crc32(&payload);
+        if want != got {
+            bail!("frame checksum mismatch: {want:#x} != {got:#x}");
+        }
+        Ok(Some((Frame { kind, payload }, total)))
+    }
+}
+
+/// Stream metadata: sent exactly once when the stream opens (§5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamMeta {
+    /// Which tail network to load ("vgg16" / "vit").
+    pub network: String,
+    /// Split layer: the cloud executes layers k..L.
+    pub split: u32,
+    /// Whether the cloud should use the GPU.
+    pub gpu: bool,
+    /// Elements per tensor message (batch * prod(shape)).
+    pub tensor_len: u64,
+}
+
+impl StreamMeta {
+    pub fn encode(&self) -> Vec<u8> {
+        let name = self.network.as_bytes();
+        let mut out = Vec::with_capacity(name.len() + 15);
+        out.push(name.len() as u8);
+        out.extend_from_slice(name);
+        out.extend_from_slice(&self.split.to_le_bytes());
+        out.push(self.gpu as u8);
+        out.extend_from_slice(&self.tensor_len.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<StreamMeta> {
+        if buf.is_empty() {
+            bail!("empty meta payload");
+        }
+        let nlen = buf[0] as usize;
+        if buf.len() != 1 + nlen + 4 + 1 + 8 {
+            bail!("meta payload has {} bytes, expected {}", buf.len(), 1 + nlen + 13);
+        }
+        let network = String::from_utf8(buf[1..1 + nlen].to_vec())?;
+        let split = u32::from_le_bytes(buf[1 + nlen..5 + nlen].try_into().unwrap());
+        let gpu = buf[5 + nlen] != 0;
+        let tensor_len = u64::from_le_bytes(buf[6 + nlen..14 + nlen].try_into().unwrap());
+        Ok(StreamMeta { network, split, gpu, tensor_len })
+    }
+}
+
+pub fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// CRC-32 (IEEE 802.3), table-less bitwise variant — small and sufficient
+/// for frame integrity checking.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // "123456789" -> 0xCBF43926 (standard check value)
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = Frame::tensor(&[1.0, -2.5, 3.25]);
+        let bytes = f.encode();
+        let (g, used) = Frame::decode(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(g, f);
+        assert_eq!(g.tensor_f32().unwrap(), vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn partial_frame_returns_none() {
+        let bytes = Frame::tensor(&[1.0; 16]).encode();
+        for cut in [0, 5, 12, bytes.len() - 1] {
+            assert!(Frame::decode(&bytes[..cut]).unwrap().is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_rejected() {
+        let mut bytes = Frame::tensor(&[1.0, 2.0]).encode();
+        bytes[14] ^= 0xFF;
+        assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = Frame::shutdown().encode();
+        bytes[0] = b'X';
+        assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn two_frames_in_one_buffer() {
+        let mut buf = Frame::meta(&StreamMeta {
+            network: "vgg16".into(),
+            split: 7,
+            gpu: true,
+            tensor_len: 1024,
+        })
+        .encode();
+        buf.extend(Frame::tensor(&[9.0]).encode());
+        let (f1, used) = Frame::decode(&buf).unwrap().unwrap();
+        assert_eq!(f1.kind, Kind::Meta);
+        let (f2, used2) = Frame::decode(&buf[used..]).unwrap().unwrap();
+        assert_eq!(f2.kind, Kind::Tensor);
+        assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let m = StreamMeta { network: "vit".into(), split: 19, gpu: false, tensor_len: 42 };
+        assert_eq!(StreamMeta::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn meta_rejects_truncation() {
+        let enc = StreamMeta {
+            network: "vgg16".into(),
+            split: 1,
+            gpu: true,
+            tensor_len: 8,
+        }
+        .encode();
+        assert!(StreamMeta::decode(&enc[..enc.len() - 1]).is_err());
+        assert!(StreamMeta::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! Edge↔cloud bidirectional streaming transport (gRPC substitute).
+//!
+//! The paper connects the edge and cloud nodes with gRPC bidirectional
+//! streams: stream metadata is sent once at stream-open, then tensors
+//! flow continuously and intermediate buffers are released progressively
+//! (§5).  We reproduce those semantics over std threads + channels:
+//!
+//! * [`frame`]  — wire format: framed messages with a one-time metadata
+//!   header, length-prefixed tensor payloads, checksums;
+//! * [`channel`]— in-process duplex byte-stream with an injectable link
+//!   model (latency + bandwidth) so transfer time behaves like the WAN
+//!   link of the testbed;
+//! * [`cloud`]  — the cloud-side service loop: receives an init message
+//!   (which tail network, GPU on/off), then serves tensor batches.
+//!
+//! The transport moves *real tensor bytes* (the PJRT head outputs) — it
+//! is on the request path, python is not.
+
+pub mod channel;
+pub mod cloud;
+pub mod frame;
+
+pub use channel::{duplex, Endpoint, LinkShaping};
+pub use frame::{Frame, StreamMeta};

@@ -1,0 +1,201 @@
+//! Mini criterion: a statistics-aware micro/macro benchmark harness.
+//!
+//! criterion is unavailable offline, so `benches/*.rs` (harness = false)
+//! use this: warmup, adaptive iteration count, median/p5/p95 over sample
+//! batches, and a one-line report.  `cargo bench` filters by substring
+//! argument just like criterion does.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Target measurement time per benchmark.
+    pub measure: Duration,
+    /// Warmup time before sampling.
+    pub warmup: Duration,
+    /// Number of sample batches the measurement is divided into.
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            measure: Duration::from_millis(800),
+            warmup: Duration::from_millis(200),
+            samples: 20,
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p5_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:48} {:>12}  [{} .. {}]  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p5_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Top-level runner: owns the filter (from `cargo bench -- <filter>` args)
+/// and collects results.
+pub struct Bencher {
+    config: BenchConfig,
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    /// Build from env args (skips the `--bench` flag cargo passes).
+    pub fn from_env() -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--") && !a.is_empty());
+        Bencher { config: BenchConfig::default(), filter, results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    fn matches(&self, name: &str) -> bool {
+        self.filter.as_ref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Benchmark a closure; the closure's return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        if !self.matches(name) {
+            return;
+        }
+        // Warmup + estimate cost of one call.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.config.warmup || calls < 3 {
+            std::hint::black_box(f());
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_nanos() as f64 / calls as f64;
+        // Batch size so that one sample ≈ measure/samples.
+        let sample_ns = self.config.measure.as_nanos() as f64 / self.config.samples as f64;
+        let batch = ((sample_ns / per_call.max(1.0)).ceil() as u64).max(1);
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.config.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            median_ns: stats::median(&samples_ns),
+            p5_ns: stats::quantile(&samples_ns, 0.05),
+            p95_ns: stats::quantile(&samples_ns, 0.95),
+            iters: total_iters,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+    }
+
+    /// Run a *macro* experiment once (experiment harnesses that already do
+    /// their own repetition + reporting); timed and recorded for the log.
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.matches(name) {
+            return;
+        }
+        println!("=== {name} ===");
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        println!("--- {name}: completed in {}\n", fmt_ns(ns));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            median_ns: ns,
+            p5_ns: ns,
+            p95_ns: ns,
+            iters: 1,
+        });
+    }
+
+    /// Final summary block (printed at the end of each bench binary).
+    pub fn finish(&self) {
+        println!("\n{} benchmark(s) run", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            measure: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            samples: 5,
+        }
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher { config: quick(), filter: None, results: Vec::new() };
+        b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].median_ns >= 0.0);
+        assert!(b.results[0].iters > 0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher {
+            config: quick(),
+            filter: Some("match-me".into()),
+            results: Vec::new(),
+        };
+        b.bench("other", || 1);
+        assert!(b.results.is_empty());
+        b.bench("yes-match-me-yes", || 1);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn run_once_records() {
+        let mut b = Bencher { config: quick(), filter: None, results: Vec::new() };
+        b.run_once("macro", || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].median_ns >= 1e6);
+    }
+}

@@ -1,0 +1,213 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generated `--help`.  Used by `main.rs` subcommands, the examples,
+//! and the bench harness.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative parser: declare options, then [`Args::parse`].
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+}
+
+impl ArgSpec {
+    pub fn new(program: impl Into<String>, about: &'static str) -> Self {
+        ArgSpec { program: program.into(), about, opts: Vec::new() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default.into()) });
+        self
+    }
+
+    /// `--name <value>`, optional, no default.
+    pub fn opt_maybe(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("  --{} <value>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:28} {}{default}\n", o.help));
+        }
+        s.push_str("  --help                       print this message\n");
+        s
+    }
+
+    /// Parse a raw token stream (without the program name).
+    pub fn parse<I>(&self, raw: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let Some(opt) = self.opts.iter().find(|o| o.name == name) else {
+                    bail!("unknown option --{name}\n\n{}", self.usage());
+                };
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => iter
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?,
+                    };
+                    values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    flags.push(name);
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        // defaults
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.clone());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse `std::env::args()` minus program name and subcommand tokens.
+    pub fn parse_env(&self, skip: usize) -> Result<Args> {
+        self.parse(std::env::args().skip(skip))
+    }
+}
+
+/// Parsed arguments with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .opt("n", "10", "count")
+            .opt_maybe("path", "a path")
+            .flag("verbose", "log more")
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args> {
+        spec().parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 10);
+        assert!(a.get("path").is_none());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--n", "5", "--path=/tmp/x"]).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 5);
+        assert_eq!(a.str("path").unwrap(), "/tmp/x");
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["--verbose", "cmd1", "cmd2"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["cmd1", "cmd2"]);
+    }
+
+    #[test]
+    fn unknown_option_fails_with_usage() {
+        let err = parse(&["--bogus"]).unwrap_err().to_string();
+        assert!(err.contains("unknown option"));
+        assert!(err.contains("--n"));
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(parse(&["--n"]).is_err());
+    }
+
+    #[test]
+    fn help_bails_with_usage() {
+        let err = parse(&["--help"]).unwrap_err().to_string();
+        assert!(err.contains("options:"));
+    }
+}

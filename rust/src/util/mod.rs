@@ -1,0 +1,9 @@
+//! Foundation utilities, hand-rolled because the offline build environment
+//! lacks `rand`/`serde`/`clap`/`criterion` (see Cargo.toml note).
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod bench;

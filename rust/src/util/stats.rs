@@ -1,0 +1,194 @@
+//! Descriptive statistics + numerical integration.
+//!
+//! The paper reports distributions as violin plots with quartile lines;
+//! [`Summary`] captures the same information textually (quartiles, median,
+//! whiskers, a coarse density sketch).  [`trapezoid`] is the exact energy
+//! integration the paper performs over sampled power-meter readings.
+
+/// Five-number summary + mean/count over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl Summary {
+    /// Compute from unsorted data. Panics on empty input.
+    pub fn of(data: &[f64]) -> Summary {
+        assert!(!data.is_empty(), "Summary::of(empty)");
+        let mut v: Vec<f64> = data.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in Summary::of"));
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        Summary {
+            count: v.len(),
+            min: v[0],
+            q1: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q3: quantile_sorted(&v, 0.75),
+            max: *v.last().unwrap(),
+            mean,
+        }
+    }
+
+    /// Inter-quartile range.
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+
+    /// One-line rendering used throughout the experiment reports.
+    pub fn line(&self, unit: &str) -> String {
+        format!(
+            "n={:<6} min={:>9.1}{u} q1={:>9.1}{u} med={:>9.1}{u} q3={:>9.1}{u} max={:>9.1}{u} mean={:>9.1}{u}",
+            self.count, self.min, self.q1, self.median, self.q3, self.max, self.mean,
+            u = unit
+        )
+    }
+}
+
+/// Linear-interpolated quantile of *sorted* data, q in [0, 1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Quantile of unsorted data.
+pub fn quantile(data: &[f64], q: f64) -> f64 {
+    let mut v = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile"));
+    quantile_sorted(&v, q)
+}
+
+/// Median convenience.
+pub fn median(data: &[f64]) -> f64 {
+    quantile(data, 0.5)
+}
+
+pub fn mean(data: &[f64]) -> f64 {
+    assert!(!data.is_empty());
+    data.iter().sum::<f64>() / data.len() as f64
+}
+
+pub fn stddev(data: &[f64]) -> f64 {
+    let m = mean(data);
+    (data.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / data.len() as f64).sqrt()
+}
+
+/// Trapezoidal integration of irregularly sampled `(t, y)` points — the
+/// paper's energy computation over power-meter samples (§6.1): E = ∫P dt.
+pub fn trapezoid(samples: &[(f64, f64)]) -> f64 {
+    samples
+        .windows(2)
+        .map(|w| 0.5 * (w[1].1 + w[0].1) * (w[1].0 - w[0].0))
+        .sum()
+}
+
+/// Coarse density sketch: histogram of `bins` counts over [min, max] —
+/// the textual stand-in for a violin shape in our reports.
+pub fn density_sketch(data: &[f64], bins: usize) -> Vec<usize> {
+    assert!(bins > 0);
+    if data.is_empty() {
+        return vec![0; bins];
+    }
+    let lo = data.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = data.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut counts = vec![0usize; bins];
+    let width = (hi - lo).max(1e-12);
+    for &x in data {
+        let b = (((x - lo) / width) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    counts
+}
+
+/// Render a density sketch as a unicode sparkline (report aesthetics).
+pub fn sparkline(counts: &[usize]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = counts.iter().copied().max().unwrap_or(0).max(1);
+    counts
+        .iter()
+        .map(|&c| BARS[(c * (BARS.len() - 1) + max / 2) / max])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_data() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.q3, 4.0);
+    }
+
+    #[test]
+    fn summary_single_element() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.min, 7.0);
+        assert_eq!(s.q1, 7.0);
+        assert_eq!(s.max, 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn summary_empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(quantile_sorted(&v, 0.5), 5.0);
+        assert_eq!(quantile_sorted(&v, 0.25), 2.5);
+    }
+
+    #[test]
+    fn trapezoid_constant_power() {
+        // 5 W for 2 s = 10 J, regardless of sampling grid.
+        let s = [(0.0, 5.0), (0.7, 5.0), (1.1, 5.0), (2.0, 5.0)];
+        assert!((trapezoid(&s) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trapezoid_linear_ramp() {
+        // P(t) = t over [0, 2] -> 2 J.
+        let s: Vec<(f64, f64)> = (0..=20).map(|i| (i as f64 * 0.1, i as f64 * 0.1)).collect();
+        assert!((trapezoid(&s) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trapezoid_empty_and_single() {
+        assert_eq!(trapezoid(&[]), 0.0);
+        assert_eq!(trapezoid(&[(0.0, 3.0)]), 0.0);
+    }
+
+    #[test]
+    fn density_sketch_sums_to_n() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let sketch = density_sketch(&data, 10);
+        assert_eq!(sketch.iter().sum::<usize>(), 100);
+        assert!(sketch.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn sparkline_length() {
+        assert_eq!(sparkline(&[0, 1, 2, 3]).chars().count(), 4);
+    }
+}

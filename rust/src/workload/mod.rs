@@ -1,0 +1,148 @@
+//! Workload generation (§6.2.1).
+//!
+//! Each user request asks for an inference task (a batch of images) with
+//! a QoS level — the maximum acceptable inference latency.  The paper
+//! draws QoS levels from a Weibull distribution with shape 1 (i.e.
+//! exponential), "a well-known distribution that models real-world
+//! latency distribution" [2], and rescales the samples so the smallest
+//! equals the minimum observed latency and the largest the maximum
+//! observed latency for the network (Table 2).
+
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+
+/// Latency bounds used to scale QoS draws (Table 2 defaults; solver runs
+/// can substitute their own measured bounds).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyBounds {
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyBounds {
+    /// Paper Table 2 values.
+    pub fn paper(net: Network) -> LatencyBounds {
+        match net {
+            Network::Vgg16 => LatencyBounds { min_ms: 90.6, max_ms: 5026.8 },
+            Network::Vit => LatencyBounds { min_ms: 118.8, max_ms: 10_287.6 },
+        }
+    }
+}
+
+/// One user request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub net: Network,
+    /// QoS level: maximum acceptable inference latency (ms).
+    pub qos_ms: f64,
+    /// Inferences in the request (paper: 1,000 images per request).
+    pub inferences: usize,
+    /// Per-request RNG seed (controller noise, data sampling).
+    pub seed: u64,
+}
+
+/// Workload generator: Weibull(shape=1) QoS draws min-max-rescaled to the
+/// network's observed latency bounds.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub net: Network,
+    pub bounds: LatencyBounds,
+    pub inferences_per_request: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(net: Network, bounds: LatencyBounds) -> WorkloadGen {
+        WorkloadGen { net, bounds, inferences_per_request: 1000 }
+    }
+
+    pub fn paper(net: Network) -> WorkloadGen {
+        WorkloadGen::new(net, LatencyBounds::paper(net))
+    }
+
+    /// Generate `n` requests.  The raw Weibull(1, 1) draws are rescaled so
+    /// min→bounds.min and max→bounds.max (the paper's construction,
+    /// §6.2.1), making the QoS spectrum span exactly the feasible range.
+    pub fn generate(&self, n: usize, rng: &mut Pcg32) -> Vec<Request> {
+        assert!(n >= 2, "need at least 2 requests to span the bounds");
+        let raw: Vec<f64> = (0..n).map(|_| rng.weibull(1.0, 1.0)).collect();
+        let lo = raw.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-12);
+        raw.iter()
+            .enumerate()
+            .map(|(id, &x)| Request {
+                id,
+                net: self.net,
+                qos_ms: self.bounds.min_ms
+                    + (x - lo) / span * (self.bounds.max_ms - self.bounds.min_ms),
+                inferences: self.inferences_per_request,
+                seed: rng.next_u64(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Config as PropConfig};
+    use crate::util::stats;
+
+    #[test]
+    fn qos_spans_bounds_exactly() {
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let mut rng = Pcg32::seeded(1);
+        let reqs = gen.generate(100, &mut rng);
+        let qos: Vec<f64> = reqs.iter().map(|r| r.qos_ms).collect();
+        let lo = qos.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = qos.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((lo - 90.6).abs() < 1e-9);
+        assert!((hi - 5026.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distribution_is_right_skewed() {
+        // Exponential QoS ⇒ most requests demand low latency (Fig. 5):
+        // median well below the midpoint of the range.
+        let gen = WorkloadGen::paper(Network::Vit);
+        let mut rng = Pcg32::seeded(2);
+        let reqs = gen.generate(10_000, &mut rng);
+        let qos: Vec<f64> = reqs.iter().map(|r| r.qos_ms).collect();
+        let med = stats::median(&qos);
+        let mid = (118.8 + 10_287.6) / 2.0;
+        assert!(med < mid * 0.5, "median {med} vs midpoint {mid}");
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let a = gen.generate(50, &mut Pcg32::seeded(3));
+        let b = gen.generate(50, &mut Pcg32::seeded(3));
+        let c = gen.generate(50, &mut Pcg32::seeded(4));
+        assert_eq!(
+            a.iter().map(|r| r.qos_ms).collect::<Vec<_>>(),
+            b.iter().map(|r| r.qos_ms).collect::<Vec<_>>()
+        );
+        assert_ne!(
+            a.iter().map(|r| r.qos_ms).collect::<Vec<_>>(),
+            c.iter().map(|r| r.qos_ms).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn request_fields_sane() {
+        forall("request fields", PropConfig::default(), |rng| {
+            let gen = WorkloadGen::paper(Network::Vgg16);
+            let n = 2 + rng.below(200) as usize;
+            let reqs = gen.generate(n, rng);
+            anyhow::ensure!(reqs.len() == n);
+            for (i, r) in reqs.iter().enumerate() {
+                anyhow::ensure!(r.id == i);
+                anyhow::ensure!(r.qos_ms >= 90.6 - 1e-9 && r.qos_ms <= 5026.8 + 1e-9);
+                anyhow::ensure!(r.inferences == 1000);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,159 @@
+//! Integration: real PJRT execution — the end-to-end proof that the
+//! three layers compose.  Skipped when `make artifacts` has not run.
+
+use std::time::Duration;
+
+use dynasplit::controller::real::RealSplitExecutor;
+use dynasplit::model::Manifest;
+use dynasplit::runtime::{evaluate, Engine, NetworkRuntime};
+use dynasplit::space::{Config, Network, TpuMode};
+use dynasplit::transport::channel::{duplex, LinkShaping};
+use dynasplit::transport::cloud::TailExecutor;
+use dynasplit::transport::frame::{Frame, StreamMeta};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(&dynasplit::artifacts_dir(None)) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn head_tail_composition_equals_full_forward() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let vgg = NetworkRuntime::load(&engine, &m, Network::Vgg16).unwrap();
+    let (images, _) = m.load_eval_set().unwrap();
+    let x = &images[..m.batch * m.img * m.img * 3];
+    let full = vgg.run_full(0, x).unwrap();
+    for k in [1, 7, 11, 21] {
+        let head = vgg.run_head(k, false, x).unwrap();
+        let tail = vgg.run_tail(k, &head).unwrap();
+        assert_eq!(tail.len(), full.len());
+        for (i, (a, b)) in tail.iter().zip(&full).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "split {k} diverges from full forward at {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_head_stays_close_to_fp32() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let vgg = NetworkRuntime::load(&engine, &m, Network::Vgg16).unwrap();
+    let (images, _) = m.load_eval_set().unwrap();
+    let x = &images[..m.batch * m.img * m.img * 3];
+    let fp32 = vgg.run_full(0, x).unwrap();
+    let q = vgg.run_full(11, x).unwrap(); // 11 quantized head layers
+    // probabilities must stay close (sub-percent accuracy effect)
+    let max_d = fp32.iter().zip(&q).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_d < 0.3, "quantized probabilities diverged: {max_d}");
+    // and the argmax rarely flips
+    let classes = m.classes;
+    let p1 = NetworkRuntime::classify(&fp32, classes);
+    let p2 = NetworkRuntime::classify(&q, classes);
+    let flips = p1.iter().zip(&p2).filter(|(a, b)| a != b).count();
+    assert!(flips <= 1, "{flips} argmax flips in one batch");
+}
+
+#[test]
+fn measured_accuracy_matches_python_oracle() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let vgg = NetworkRuntime::load(&engine, &m, Network::Vgg16).unwrap();
+    let vit = NetworkRuntime::load(&engine, &m, Network::Vit).unwrap();
+    let measured = evaluate::measure_cached(&m, &vgg, &vit, false).unwrap();
+    // The CORE cross-layer check: rust-PJRT accuracy == python-oracle
+    // accuracy within the numerics of 256 eval images (1 flip = 0.39%).
+    assert!(
+        (measured.vgg_fp32 - m.vgg16.expected_accuracy.fp32).abs() < 0.01,
+        "vgg fp32: {} vs {}",
+        measured.vgg_fp32,
+        m.vgg16.expected_accuracy.fp32
+    );
+    assert!(
+        (measured.vit_fp32 - m.vit.expected_accuracy.fp32).abs() < 0.01,
+        "vit fp32: {} vs {}",
+        measured.vit_fp32,
+        m.vit.expected_accuracy.fp32
+    );
+    let expected = m.vgg16.expected_accuracy.int8_prefix.as_ref().unwrap();
+    for (k, (me, ex)) in measured.vgg_int8_prefix.iter().zip(expected).enumerate() {
+        assert!((me - ex).abs() < 0.012, "int8 prefix k={k}: {me} vs {ex}");
+    }
+}
+
+#[test]
+fn cloud_node_serves_real_tails_over_transport() {
+    let Some(m) = manifest() else { return };
+    let (mut edge_ep, cloud_ep) = duplex(Some(LinkShaping::from_calib()));
+    let cloud = dynasplit::runtime::network::spawn_cloud_node(
+        m.clone(),
+        cloud_ep,
+        Duration::from_secs(60),
+    );
+    // edge side: real head, stream, compare with local full forward
+    let engine = Engine::cpu().unwrap();
+    let vgg = NetworkRuntime::load(&engine, &m, Network::Vgg16).unwrap();
+    let (images, _) = m.load_eval_set().unwrap();
+    let x = &images[..m.batch * m.img * m.img * 3];
+    let k = 9;
+    let head = vgg.run_head(k, false, x).unwrap();
+    edge_ep
+        .send(&Frame::meta(&StreamMeta {
+            network: "vgg16".into(),
+            split: k as u32,
+            gpu: true,
+            tensor_len: head.len() as u64,
+        }))
+        .unwrap();
+    edge_ep.send(&Frame::tensor(&head)).unwrap();
+    let result = edge_ep.recv(Duration::from_secs(60)).unwrap().tensor_f32().unwrap();
+    let local = vgg.run_full(0, x).unwrap();
+    for (a, b) in result.iter().zip(&local) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    edge_ep.send(&Frame::shutdown()).unwrap();
+    let stats = cloud.join().unwrap().unwrap();
+    assert_eq!(stats.batches, 1);
+}
+
+#[test]
+fn real_split_executor_runs_all_placements() {
+    let Some(m) = manifest() else { return };
+    let mut real = RealSplitExecutor::new(&m, None).unwrap();
+    for (split, tpu) in [(0, TpuMode::Off), (7, TpuMode::Max), (22, TpuMode::Max)] {
+        let config = dynasplit::space::feasible::repair(Config {
+            net: Network::Vgg16,
+            cpu_idx: 6,
+            tpu,
+            gpu: true,
+            split,
+        });
+        let out = real.execute_real(&config).unwrap();
+        assert!(out.latency_ms > 0.0 && out.latency_ms.is_finite());
+        assert!(out.accuracy > 0.8, "placement {split}: accuracy {}", out.accuracy);
+        assert!(out.energy_j > 0.0);
+    }
+    let stats = real.shutdown().unwrap();
+    assert_eq!(stats.batches, 2); // split-7 and split-0 went to the cloud
+}
+
+#[test]
+fn vit_tail_executor_via_trait() {
+    let Some(m) = manifest() else { return };
+    let exec = dynasplit::runtime::network::RuntimeTailExecutor::load(&m).unwrap();
+    let (images, labels) = m.load_eval_set().unwrap();
+    let x = &images[..m.batch * m.img * m.img * 3];
+    // ViT split 0 = cloud executes everything (input-sized "intermediate")
+    let probs = exec.execute_tail("vit", 0, true, x).unwrap();
+    let preds = NetworkRuntime::classify(&probs, m.classes);
+    let hits = preds.iter().zip(&labels[..m.batch]).filter(|(p, l)| **p == **l as usize).count();
+    assert!(hits >= m.batch - 2, "vit tail accuracy too low: {hits}/{}", m.batch);
+}

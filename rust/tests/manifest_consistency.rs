@@ -1,0 +1,89 @@
+//! Integration: the python-emitted manifest must agree with the rust-side
+//! static cost tables (`model::meta`) layer by layer — the two layer-plan
+//! derivations (python for AOT, rust for the simulator) can never drift
+//! apart silently.  Skipped when `make artifacts` has not run.
+
+use dynasplit::model::{Manifest, NetCost};
+use dynasplit::space::Network;
+
+fn manifest() -> Option<Manifest> {
+    let dir = dynasplit::artifacts_dir(None);
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_static_cost_tables() {
+    let Some(m) = manifest() else { return };
+    for net in Network::ALL {
+        let cost = NetCost::of(net);
+        let entry = m.network(net);
+        assert_eq!(entry.num_layers, cost.num_layers(), "{net:?} layer count");
+        for (lc, le) in cost.layers.iter().zip(&entry.layers) {
+            assert_eq!(lc.index, le.index);
+            assert_eq!(lc.kind, le.kind, "{net:?} layer {}", lc.index);
+            assert_eq!(lc.macs, le.macs, "{net:?} layer {} macs", lc.index);
+            assert_eq!(lc.out_bytes, le.out_bytes, "{net:?} layer {} bytes", lc.index);
+            assert_eq!(lc.quantizable, le.quantizable, "{net:?} layer {}", lc.index);
+        }
+    }
+}
+
+#[test]
+fn every_artifact_file_exists_and_is_hlo() {
+    let Some(m) = manifest() else { return };
+    let mut checked = 0;
+    for net in Network::ALL {
+        for layer in &m.network(net).layers {
+            for rel in std::iter::once(&layer.fp32).chain(layer.int8.iter()) {
+                let path = m.artifact_path(rel);
+                let text = std::fs::read_to_string(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                assert!(text.contains("HloModule"), "{} is not HLO text", path.display());
+                assert!(
+                    !text.contains("constant({...})"),
+                    "{} has ELIDED constants — weights lost (print_large_constants!)",
+                    path.display()
+                );
+                checked += 1;
+            }
+        }
+    }
+    // 22 fp32 + 16 int8 (vgg) + 19 fp32 (vit)
+    assert_eq!(checked, 22 + 16 + 19);
+}
+
+#[test]
+fn eval_set_loads_and_labels_in_range() {
+    let Some(m) = manifest() else { return };
+    let (images, labels) = m.load_eval_set().unwrap();
+    assert_eq!(images.len(), m.eval_count * m.img * m.img * 3);
+    assert_eq!(labels.len(), m.eval_count);
+    assert!(labels.iter().all(|&l| (l as usize) < m.classes));
+    assert!(images.iter().all(|x| x.is_finite()));
+    assert_eq!(m.eval_count % m.batch, 0, "eval count must be a batch multiple");
+}
+
+#[test]
+fn expected_accuracies_plausible() {
+    let Some(m) = manifest() else { return };
+    // the paper's networks are "pre-trained" and accurate; ours train to
+    // >= 95% on the synthetic task — anything lower means the AOT build
+    // shipped an undertrained model.
+    assert!(m.vgg16.expected_accuracy.fp32 > 0.95, "{}", m.vgg16.expected_accuracy.fp32);
+    assert!(m.vit.expected_accuracy.fp32 > 0.95, "{}", m.vit.expected_accuracy.fp32);
+    let prefix = m.vgg16.expected_accuracy.int8_prefix.as_ref().unwrap();
+    assert_eq!(prefix.len(), 23);
+    // Fig. 2e: sub-percent deltas between quantized and fp32
+    for (k, &acc) in prefix.iter().enumerate() {
+        assert!(
+            (m.vgg16.expected_accuracy.fp32 - acc).abs() < 0.01,
+            "k={k}: quantized accuracy {acc} deviates > 1%"
+        );
+    }
+}

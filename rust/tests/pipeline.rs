@@ -1,0 +1,102 @@
+//! Integration: the full offline→online pipeline on the simulated
+//! testbed (no artifacts needed), asserting the paper's qualitative
+//! results end to end, plus persistence through the controller.
+
+use dynasplit::controller::{Controller, SimExecutor};
+use dynasplit::experiments::{testbed_exp, Ctx};
+use dynasplit::solver::{Solver, SolverOutput, Strategy};
+use dynasplit::space::Network;
+use dynasplit::util::rng::Pcg32;
+use dynasplit::workload::WorkloadGen;
+
+#[test]
+fn offline_to_online_pipeline_headline_numbers() {
+    let ctx = Ctx::synthetic();
+    let exp = testbed_exp::run(&ctx, Network::Vgg16, 50, 300, 1);
+    let s = &exp.strategies;
+
+    // headline 1: energy reduction vs cloud-only well past the paper's 72%
+    // for the edge-leaning VGG16 workload.
+    let cut = 1.0 - s.dynasplit.energy_summary().median / s.cloud.energy_summary().median;
+    assert!(cut > 0.72, "energy cut {:.2}", cut);
+
+    // headline 2: ~90% of QoS thresholds met.
+    assert!(
+        s.dynasplit.qos_met_fraction() > 0.8,
+        "QoS met {:.2}",
+        s.dynasplit.qos_met_fraction()
+    );
+
+    // DynaSplit violates far less than the frugal static baselines ...
+    assert!(s.dynasplit.violations() * 2 < s.energy.violations().max(1) * 3);
+    // ... while using far less energy than the fast static baselines.
+    assert!(
+        s.dynasplit.energy_summary().median < 0.7 * s.latency.energy_summary().median
+    );
+}
+
+#[test]
+fn accuracy_is_preserved_across_strategies() {
+    let ctx = Ctx::synthetic();
+    let exp = testbed_exp::run(&ctx, Network::Vgg16, 30, 200, 2);
+    // §6.3.3: negligible accuracy differences (< 1%) between strategies.
+    let accs: Vec<f64> = exp
+        .strategies
+        .all()
+        .iter()
+        .map(|m| m.accuracy_summary().median)
+        .collect();
+    let spread = accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread < 0.01, "accuracy spread {spread} across strategies");
+}
+
+#[test]
+fn pareto_persistence_roundtrip_through_controller() {
+    let ctx = Ctx::synthetic();
+    let mut solver = Solver::new(&ctx.testbed, Network::Vit);
+    solver.batch_per_trial = 100;
+    let out = solver.run(Strategy::NsgaIII, 80, 3);
+    let path = std::env::temp_dir().join(format!("dynasplit_pipe_{}.json", std::process::id()));
+    out.save(&path).unwrap();
+    let loaded = SolverOutput::load_pareto(&path).unwrap();
+
+    // a controller over the loaded set behaves identically to one over
+    // the in-memory set
+    let gen = WorkloadGen::paper(Network::Vit);
+    let mut rng = Pcg32::seeded(4);
+    let requests = gen.generate(25, &mut rng);
+    let run = |entries: Vec<dynasplit::solver::ParetoEntry>| {
+        let mut c = Controller::new(entries, 9);
+        let mut ex = SimExecutor::Fresh { testbed: &ctx.testbed, rng: Pcg32::seeded(10) };
+        c.serve(&requests, &mut ex, "dynasplit")
+    };
+    let a = run(out.pareto.clone());
+    let b = run(loaded);
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.config, y.config, "selection diverged after persistence");
+    }
+}
+
+#[test]
+fn vit_front_has_no_tpu_configs() {
+    // §4.2.1: every ViT configuration with the TPU on is infeasible; the
+    // solver must never evaluate (let alone keep) one.
+    let ctx = Ctx::synthetic();
+    let mut solver = Solver::new(&ctx.testbed, Network::Vit);
+    solver.batch_per_trial = 50;
+    let out = solver.run(Strategy::NsgaIII, 100, 5);
+    for t in &out.trials {
+        assert_eq!(t.config.tpu, dynasplit::space::TpuMode::Off, "{:?}", t.config);
+    }
+}
+
+#[test]
+fn controller_scales_to_large_workloads() {
+    // 5,000 pool-mode requests in well under a minute (L3 perf floor).
+    let ctx = Ctx::synthetic();
+    let t0 = std::time::Instant::now();
+    let exp = dynasplit::experiments::simulation::run(&ctx, Network::Vgg16, 5000, 100, 6);
+    assert_eq!(exp.strategies.dynasplit.len(), 5000);
+    assert!(t0.elapsed().as_secs() < 60, "{:?}", t0.elapsed());
+}
