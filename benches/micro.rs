@@ -5,6 +5,7 @@
 
 use dynasplit::model::{Manifest, NetCost};
 use dynasplit::nsga::{refpoints, sort};
+use dynasplit::runtime::InferenceBackend;
 use dynasplit::simulator::meter::{Meter, PowerTrace};
 use dynasplit::simulator::Testbed;
 use dynasplit::space::{Network, Space};
@@ -64,20 +65,42 @@ fn main() {
         NetCost::of(Network::Vgg16).total_macs() + NetCost::of(Network::Vit).total_macs()
     });
 
-    // --- real PJRT path (artifacts required) ---
-    if let Ok(manifest) = Manifest::load(&dynasplit::artifacts_dir(None)) {
-        let engine = dynasplit::runtime::Engine::cpu().unwrap();
-        let vgg =
-            dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, Network::Vgg16).unwrap();
-        let (images, _) = manifest.load_eval_set().unwrap();
-        let x = &images[..manifest.batch * manifest.img * manifest.img * 3];
-        b.bench("pjrt_vgg_layer0_batch16", || vgg.run_range(0, 1, false, x).unwrap().len());
-        b.bench("pjrt_vgg_full_forward_batch16", || vgg.run_full(0, x).unwrap().len());
-        b.bench("pjrt_vgg_int8_head11_batch16", || {
-            vgg.run_head(11, true, x).unwrap().len()
-        });
-    } else {
-        println!("(pjrt benches skipped: run `make artifacts`)");
+    // --- real backend path (artifacts + XLA required) ---
+    // These benches characterize the production PJRT hot path; pointing
+    // them at the scalar reference interpreter would both crawl and
+    // measure nothing the reproduction cares about.
+    match (Manifest::load(&dynasplit::artifacts_dir(None)), dynasplit::runtime::default_backend()) {
+        (Ok(manifest), Ok(backend)) if backend.name() == "xla" => {
+            let vgg = dynasplit::runtime::NetworkRuntime::load(
+                backend.as_ref(),
+                &manifest,
+                Network::Vgg16,
+            )
+            .unwrap();
+            let (images, _) = manifest.load_eval_set().unwrap();
+            let x = &images[..manifest.batch * manifest.img * manifest.img * 3];
+            let tag = backend.name();
+            b.bench(&format!("{tag}_vgg_layer0_batch16"), || {
+                vgg.run_range(0, 1, false, x).unwrap().len()
+            });
+            b.bench(&format!("{tag}_vgg_full_forward_batch16"), || {
+                vgg.run_full(0, x).unwrap().len()
+            });
+            b.bench(&format!("{tag}_vgg_int8_head11_batch16"), || {
+                vgg.run_head(11, true, x).unwrap().len()
+            });
+        }
+        (manifest, backend) => {
+            let backend_note = match &backend {
+                Ok(b) if b.name() != "xla" => "not xla (build with --features xla)",
+                Ok(_) => "ok",
+                Err(_) => "unavailable",
+            };
+            println!(
+                "(runtime benches skipped: manifest {}, backend {backend_note})",
+                if manifest.is_ok() { "ok" } else { "missing — run `make artifacts`" },
+            );
+        }
     }
     b.finish();
 }

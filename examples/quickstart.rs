@@ -2,11 +2,14 @@
 //!
 //! 1. offline phase — NSGA-III over 20% of the VGG16 space;
 //! 2. online phase — Algorithm-1 scheduling of a small workload;
-//! 3. **real** end-to-end split execution: the PJRT head runs on this
+//! 3. **real** end-to-end split execution: the backend head runs on this
 //!    thread, the intermediate activation streams over the gRPC-analog
-//!    transport to a cloud thread running the PJRT tail — proving the
+//!    transport to a cloud thread running the backend tail — proving the
 //!    three layers (Pallas kernels → JAX layers → rust coordinator)
-//!    compose.  Requires `make artifacts`; steps 1–2 also run without.
+//!    compose.  Requires `make artifacts` for the manifest (under
+//!    `--features xla` the artifacts are executed for real; the default
+//!    reference backend interprets the same shapes); steps 1–2 run
+//!    without any artifacts.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -62,7 +65,11 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. real end-to-end split execution ----
     match Manifest::load(&artifacts) {
         Ok(manifest) => {
-            println!("\nreal e2e: loading PJRT runtimes + cloud thread ...");
+            println!(
+                "\nreal e2e: loading backend runtimes + cloud thread ... \
+                 (reference backend: synthetic weights, interpreter speed — \
+                 use --release; --features xla runs the real artifacts)"
+            );
             let mut real = RealSplitExecutor::new(&manifest, Some(LinkShaping::from_calib()))?;
             // three QoS levels that force all three placements through the
             // real compute + transport path: strict -> cloud, medium ->

@@ -9,13 +9,14 @@
 use crate::solver::ParetoEntry;
 
 /// The paper's sort criteria for the non-dominated set: ascending energy,
-/// then descending accuracy (§4.3.1).
+/// then descending accuracy (§4.3.1).  `total_cmp` keeps the sort total
+/// even if a trial produced a NaN objective — a single poisoned entry
+/// sorts deterministically to the end instead of panicking the scheduler.
 pub fn sort_config_set(entries: &mut [ParetoEntry]) {
     entries.sort_by(|a, b| {
         a.energy_j
-            .partial_cmp(&b.energy_j)
-            .unwrap()
-            .then(b.accuracy.partial_cmp(&a.accuracy).unwrap())
+            .total_cmp(&b.energy_j)
+            .then(b.accuracy.total_cmp(&a.accuracy))
     });
 }
 
@@ -109,6 +110,22 @@ mod tests {
     #[should_panic(expected = "empty configuration set")]
     fn empty_set_panics() {
         select(&[], 100.0);
+    }
+
+    #[test]
+    fn nan_objective_does_not_panic_the_sort() {
+        // A trial gone wrong (NaN energy or accuracy) must not take the
+        // whole scheduler down; total_cmp ranks NaN after every number.
+        let e = sorted(vec![
+            entry(100.0, f64::NAN, 0.9),
+            entry(200.0, 3.0, f64::NAN),
+            entry(300.0, 2.0, 0.95),
+        ]);
+        assert_eq!(e[0].energy_j, 2.0, "finite energies sort first");
+        assert!(e[2].energy_j.is_nan(), "NaN energy sorts last");
+        // selection over the poisoned set still terminates and returns a
+        // QoS-satisfying entry when one exists
+        assert!(select(&e, 250.0).latency_ms <= 250.0);
     }
 
     #[test]

@@ -195,7 +195,7 @@ mod tests {
         let entries = pareto();
         let fastest = entries
             .iter()
-            .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+            .min_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms))
             .unwrap()
             .clone();
         let tb = Testbed::synthetic();

@@ -1,8 +1,9 @@
-//! Real split execution: PJRT head on the edge thread, PJRT tail on a
-//! cloud thread, real tensors over the shaped transport.
+//! Real split execution: backend head on the edge thread, backend tail
+//! on a cloud thread, real tensors over the shaped transport.
 //!
-//! This is the end-to-end proof that the three layers compose: the HLO
-//! artifacts (containing the Pallas kernels) are executed by the same
+//! This is the end-to-end proof that the three layers compose: the
+//! per-layer executables (PJRT-compiled HLO artifacts under `--features
+//! xla`, the reference interpreter otherwise) are executed by the same
 //! coordinator that schedules them, with the intermediate activation of
 //! the chosen split point streamed through the gRPC-analog channel.
 //! Wall-clock is measured, energy is modeled from the measured segment
@@ -19,7 +20,7 @@ use anyhow::{Context, Result};
 use super::executor::{ExecOutcome, Executor};
 use crate::model::manifest::Manifest;
 use crate::runtime::network::spawn_cloud_node;
-use crate::runtime::{Engine, NetworkRuntime};
+use crate::runtime::{default_backend, NetworkRuntime};
 use crate::simulator::power::{cloud_power, edge_power, EdgeState};
 use crate::space::{Config, Network, TpuMode};
 use crate::transport::channel::{duplex, Endpoint, LinkShaping};
@@ -53,10 +54,10 @@ pub struct RealSplitExecutor {
 impl RealSplitExecutor {
     /// Load edge runtimes, spawn the cloud node, connect the transport.
     pub fn new(manifest: &Manifest, shaping: Option<LinkShaping>) -> Result<RealSplitExecutor> {
-        let engine = Engine::cpu()?;
-        let vgg = NetworkRuntime::load(&engine, manifest, Network::Vgg16)
+        let backend = default_backend()?;
+        let vgg = NetworkRuntime::load(backend.as_ref(), manifest, Network::Vgg16)
             .context("loading edge vgg16 runtime")?;
-        let vit = NetworkRuntime::load(&engine, manifest, Network::Vit)
+        let vit = NetworkRuntime::load(backend.as_ref(), manifest, Network::Vit)
             .context("loading edge vit runtime")?;
         let (edge_ep, cloud_ep) = duplex(shaping);
         let cloud = spawn_cloud_node(manifest.clone(), cloud_ep, RECV_TIMEOUT);
@@ -106,7 +107,7 @@ impl RealSplitExecutor {
         let k = config.split;
         let tpu_on = config.tpu != TpuMode::Off;
 
-        // --- edge head (real PJRT) ---
+        // --- edge head (real backend execution) ---
         let t0 = Instant::now();
         let head_out = self.runtime(net).run_head(k, tpu_on, &x)?;
         let edge_s = t0.elapsed().as_secs_f64();

@@ -28,12 +28,12 @@ pub fn run(ctx: &Ctx, net: Network, batch: usize, seed: u64) -> Bounds {
     });
     let min = results
         .iter()
-        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .min_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms))
         .unwrap()
         .clone();
     let max = results
         .iter()
-        .max_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .max_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms))
         .unwrap()
         .clone();
     Bounds { net, min, max }

@@ -50,7 +50,7 @@ pub fn profile_small(c: &SmallNetCost) -> PlacementProfile {
     let cloud_s = lat(0);
     let (best_k, best_s) = (1..l)
         .map(|k| (k, lat(k)))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap();
     // energy: edge busy during head, idle during net+cloud; cloud window.
     let energy = |k: usize| -> f64 {
@@ -111,7 +111,7 @@ pub fn profile_large(net: Network) -> PlacementProfile {
     };
     let (best_k, best_ms) = (1..l)
         .map(|k| (k, lat(k)))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap();
     let edge_ms = lat(l);
     let edge_j = energy(l);

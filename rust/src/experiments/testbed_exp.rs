@@ -69,7 +69,7 @@ fn static_entry(config: Config) -> ParetoEntry {
 pub fn fastest_entry(pareto: &[ParetoEntry]) -> ParetoEntry {
     pareto
         .iter()
-        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .min_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms))
         .expect("empty pareto set")
         .clone()
 }
@@ -78,7 +78,7 @@ pub fn fastest_entry(pareto: &[ParetoEntry]) -> ParetoEntry {
 pub fn energy_entry(pareto: &[ParetoEntry]) -> ParetoEntry {
     pareto
         .iter()
-        .min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).unwrap())
+        .min_by(|a, b| a.energy_j.total_cmp(&b.energy_j))
         .expect("empty pareto set")
         .clone()
 }

@@ -15,11 +15,15 @@
 //!   Coral-style TPU, V100-style cloud GPU, power meters, network link) as
 //!   a calibrated simulator.
 //!
-//! Python never runs on the request path: the rust binary loads the HLO
-//! artifacts once via PJRT (`runtime`) and is self-contained afterwards.
+//! Python never runs on the request path: the rust binary instantiates
+//! per-layer executables once at startup through a pluggable
+//! [`runtime::InferenceBackend`] — the PJRT/XLA engine compiling the HLO
+//! artifacts under `--features xla`, or the default dependency-free
+//! reference interpreter — and is self-contained afterwards.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index that
-//! maps every figure/table of the paper to a module + bench.
+//! See `DESIGN.md` for the system inventory, the backend feature matrix
+//! (§4), and the experiment index that maps every figure/table of the
+//! paper to a module + bench (§6).
 
 pub mod util;
 pub mod prop;

@@ -16,7 +16,7 @@
 //! dynasplit overhead                   Fig. 15
 //! dynasplit smallmodels                §2.2 finding (i)
 //! dynasplit extensions                 §6.6 ablations
-//! dynasplit accuracy                   measured PJRT accuracy table
+//! dynasplit accuracy                   measured backend accuracy table
 //! dynasplit runtime-info               artifact load/compile statistics
 //! ```
 
@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 use dynasplit::controller::{Controller, SimExecutor};
 use dynasplit::experiments::{self, Ctx};
 use dynasplit::model::Manifest;
+use dynasplit::runtime::InferenceBackend;
 use dynasplit::solver::{Solver, SolverOutput, Strategy};
 use dynasplit::space::{Network, Space};
 use dynasplit::util::cli::ArgSpec;
@@ -87,7 +88,7 @@ subcommands:
   overhead       Fig. 15 controller overhead
   smallmodels    §2.2 finding (i): small models don't benefit from splits
   extensions     §6.6 ablations: serverless cold starts, QoS clustering
-  accuracy       measured (PJRT) accuracy table -> artifacts cache
+  accuracy       measured accuracy table (cached only on the xla backend)
   runtime-info   artifact load/compile statistics
 
 run `dynasplit <cmd> --help` for per-command options.";
@@ -324,12 +325,24 @@ fn cmd_extensions() -> Result<()> {
 }
 
 fn cmd_accuracy() -> Result<()> {
-    let a = spec("accuracy", "measured PJRT accuracy table").parse_env(2)?;
+    let a = spec("accuracy", "measured accuracy table").parse_env(2)?;
     let manifest = Manifest::load(a.str("artifacts")?)?;
-    let engine = dynasplit::runtime::Engine::cpu()?;
-    println!("[accuracy] PJRT platform: {}", engine.platform());
-    let vgg = dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, Network::Vgg16)?;
-    let vit = dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, Network::Vit)?;
+    let backend = dynasplit::runtime::default_backend()?;
+    println!("[accuracy] backend: {} ({})", backend.name(), backend.platform());
+    // Only the XLA backend runs the real networks: the reference
+    // interpreter's synthetic weights make the table meaningless, and
+    // its scalar loops make the O(L²) prefix sweep over the eval set
+    // take hours — refuse instead of hanging, and never poison the
+    // measured cache that `Ctx::load` prefers over the manifest.
+    if backend.name() != "xla" {
+        bail!(
+            "`dynasplit accuracy` needs the real XLA backend (build with --features xla); \
+             the {} backend has synthetic weights and cannot produce a fidelity-grade table",
+            backend.name()
+        );
+    }
+    let vgg = dynasplit::runtime::NetworkRuntime::load(backend.as_ref(), &manifest, Network::Vgg16)?;
+    let vit = dynasplit::runtime::NetworkRuntime::load(backend.as_ref(), &manifest, Network::Vit)?;
     println!(
         "[accuracy] runtimes loaded: vgg {:.0} ms, vit {:.0} ms",
         vgg.load_ms, vit.load_ms
@@ -353,11 +366,11 @@ fn cmd_accuracy() -> Result<()> {
 fn cmd_runtime_info() -> Result<()> {
     let a = spec("runtime-info", "artifact load/compile statistics").parse_env(2)?;
     let manifest = Manifest::load(a.str("artifacts")?)?;
-    let engine = dynasplit::runtime::Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    let backend = dynasplit::runtime::default_backend()?;
+    println!("backend: {} ({})", backend.name(), backend.platform());
     let mut t = Table::new(["network", "layers", "int8 variants", "load+compile"]);
     for net in Network::ALL {
-        let rt = dynasplit::runtime::NetworkRuntime::load(&engine, &manifest, net)?;
+        let rt = dynasplit::runtime::NetworkRuntime::load(backend.as_ref(), &manifest, net)?;
         let entry = manifest.network(net);
         t.row([
             net.name().to_string(),

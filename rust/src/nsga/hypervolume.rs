@@ -21,7 +21,7 @@ pub fn hypervolume(points: &[[f64; M]], refp: &[f64; M]) -> f64 {
         return 0.0;
     }
     // sort by first objective ascending; sweep slabs of x
-    pts.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    pts.sort_by(|a, b| a[0].total_cmp(&b[0]));
     let mut hv = 0.0;
     for i in 0..pts.len() {
         let x_lo = pts[i][0];
@@ -40,7 +40,7 @@ pub fn hypervolume(points: &[[f64; M]], refp: &[f64; M]) -> f64 {
 /// 2-D dominated hypervolume (staircase area).
 fn hv2(points: &[[f64; 2]], refp: &[f64; 2]) -> f64 {
     let mut pts: Vec<[f64; 2]> = points.to_vec();
-    pts.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    pts.sort_by(|a, b| a[0].total_cmp(&b[0]));
     let mut area = 0.0;
     let mut best_y = refp[1];
     for p in pts {

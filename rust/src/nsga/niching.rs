@@ -80,7 +80,7 @@ pub fn select(
             by_ref[r]
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .min_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
                 .map(|(j, _)| j)
                 .unwrap()
         } else {

@@ -1,15 +1,23 @@
-//! PJRT engine: compile HLO-text artifacts, execute layer batches.
+//! PJRT engine (`--features xla`): compile HLO-text artifacts, execute
+//! layer batches.
 //!
 //! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see aot.py and /opt/xla-example/README.md).
 //! Every artifact was lowered with `return_tuple=True`, so execution
 //! unwraps a 1-tuple.
+//!
+//! The workspace links the vendored `third_party/xla` stub by default so
+//! this module always *compiles*; executing requires patching in the
+//! real `xla` crate (DESIGN.md §4).  [`Engine::cpu`] fails cleanly
+//! against the stub, and the tests below skip themselves in that case.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
+
+use super::backend::{InferenceBackend, LayerExecutable, LayerSpec};
 
 /// Shared PJRT CPU client.
 pub struct Engine {
@@ -22,13 +30,9 @@ impl Engine {
         Ok(Engine { client })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
     /// Compile one layer artifact.  `in_shape`/`out_shape` are per-image
     /// activation shapes; the lowered module takes `[batch, *in_shape]`.
-    pub fn load_layer(
+    pub fn compile_layer(
         &self,
         path: &Path,
         batch: usize,
@@ -55,6 +59,30 @@ impl Engine {
                 .collect(),
             compile_ms: t0.elapsed().as_secs_f64() * 1000.0,
         })
+    }
+}
+
+impl InferenceBackend for Engine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load_layer(&self, spec: &LayerSpec) -> Result<Box<dyn LayerExecutable>> {
+        let path = spec
+            .artifact
+            .as_ref()
+            .context("xla backend requires on-disk HLO artifacts (run `make artifacts`)")?;
+        let exec = self.compile_layer(
+            path,
+            spec.batch,
+            &spec.entry.in_shape,
+            &spec.entry.out_shape,
+        )?;
+        Ok(Box::new(exec))
     }
 }
 
@@ -100,9 +128,33 @@ impl LayerExec {
     }
 }
 
+impl LayerExecutable for LayerExec {
+    fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        LayerExec::run(self, input)
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.compile_ms
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     /// A tiny hand-written HLO module: f(x) = (x + 1,) over f32[2,3].
     /// Written as text exactly like the python-lowered artifacts, so this
@@ -119,18 +171,55 @@ ENTRY main.5 {
 }
 "#;
 
-    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
-        let p = std::env::temp_dir().join(format!("dynasplit_{}_{}.hlo.txt", name, std::process::id()));
-        std::fs::write(&p, text).unwrap();
-        p
+    /// Unique, self-deleting artifact file: pid + a process-wide counter
+    /// make names collision-free across concurrent test binaries and
+    /// repeated runs, and `Drop` cleans the temp dir up even on assertion
+    /// failure (panics unwind through it).
+    struct TmpArtifact(PathBuf);
+
+    impl TmpArtifact {
+        fn write(name: &str, text: &str) -> TmpArtifact {
+            static SEQ: AtomicU64 = AtomicU64::new(0);
+            let unique = format!(
+                "dynasplit_{}_{}_{}.hlo.txt",
+                name,
+                std::process::id(),
+                SEQ.fetch_add(1, Ordering::Relaxed)
+            );
+            let p = std::env::temp_dir().join(unique);
+            std::fs::write(&p, text).unwrap();
+            TmpArtifact(p)
+        }
+
+        fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+
+    impl Drop for TmpArtifact {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.0);
+        }
+    }
+
+    /// Engine, or a graceful skip when only the compile-only stub is
+    /// linked (no PJRT runtime available).
+    fn engine_or_skip(test: &str) -> Option<Engine> {
+        match Engine::cpu() {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("SKIPPED {test}: {e:#}");
+                None
+            }
+        }
     }
 
     #[test]
     fn engine_loads_and_runs_hlo_text() {
-        let engine = Engine::cpu().unwrap();
+        let Some(engine) = engine_or_skip("engine_loads_and_runs_hlo_text") else { return };
         assert!(engine.platform().to_lowercase().contains("cpu"));
-        let path = write_tmp("add_one", ADD_ONE_HLO);
-        let layer = engine.load_layer(&path, 2, &[3], &[3]).unwrap();
+        let artifact = TmpArtifact::write("add_one", ADD_ONE_HLO);
+        let layer = engine.compile_layer(artifact.path(), 2, &[3], &[3]).unwrap();
         let out = layer.run(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert!(layer.compile_ms > 0.0);
@@ -138,16 +227,16 @@ ENTRY main.5 {
 
     #[test]
     fn wrong_input_length_rejected() {
-        let engine = Engine::cpu().unwrap();
-        let path = write_tmp("add_one_b", ADD_ONE_HLO);
-        let layer = engine.load_layer(&path, 2, &[3], &[3]).unwrap();
+        let Some(engine) = engine_or_skip("wrong_input_length_rejected") else { return };
+        let artifact = TmpArtifact::write("add_one_b", ADD_ONE_HLO);
+        let layer = engine.compile_layer(artifact.path(), 2, &[3], &[3]).unwrap();
         assert!(layer.run(&[1.0; 5]).is_err());
     }
 
     #[test]
     fn missing_artifact_errors_with_path() {
-        let engine = Engine::cpu().unwrap();
-        let result = engine.load_layer(Path::new("/nonexistent/layer.hlo.txt"), 1, &[1], &[1]);
+        let Some(engine) = engine_or_skip("missing_artifact_errors_with_path") else { return };
+        let result = engine.compile_layer(Path::new("/nonexistent/layer.hlo.txt"), 1, &[1], &[1]);
         let err = match result {
             Err(e) => e,
             Ok(_) => panic!("expected load failure"),
@@ -157,8 +246,18 @@ ENTRY main.5 {
 
     #[test]
     fn malformed_hlo_rejected() {
-        let engine = Engine::cpu().unwrap();
-        let path = write_tmp("garbage", "this is not hlo");
-        assert!(engine.load_layer(&path, 1, &[1], &[1]).is_err());
+        let Some(engine) = engine_or_skip("malformed_hlo_rejected") else { return };
+        let artifact = TmpArtifact::write("garbage", "this is not hlo");
+        assert!(engine.compile_layer(artifact.path(), 1, &[1], &[1]).is_err());
+    }
+
+    #[test]
+    fn temp_artifacts_clean_up_after_themselves() {
+        let path = {
+            let artifact = TmpArtifact::write("cleanup_probe", "x");
+            assert!(artifact.path().exists());
+            artifact.path().to_path_buf()
+        };
+        assert!(!path.exists(), "temp artifact leaked at {}", path.display());
     }
 }

@@ -1,5 +1,7 @@
-//! Measured accuracy table: classify the eval set through the *real*
-//! PJRT executables for every quantization prefix.
+//! Measured accuracy table: classify the eval set through the loaded
+//! layer executables for every quantization prefix.  Fidelity-grade
+//! numbers require the XLA backend (`--features xla`); callers must not
+//! persist reference-backend results to the measured cache.
 //!
 //! accuracy(net, k) with layers < k quantized is computed incrementally:
 //! maintain the quantized-prefix activation a_k (a_0 = input, a_{k+1} =
@@ -18,7 +20,7 @@ use crate::simulator::accuracy::AccuracyTable;
 use crate::space::Network;
 use crate::util::json::Json;
 
-/// Measured (PJRT) accuracies, mirroring the manifest's expected table.
+/// Measured accuracies, mirroring the manifest's expected table.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MeasuredAccuracy {
     pub vgg_fp32: f64,

@@ -1,22 +1,33 @@
-//! PJRT runtime: load AOT HLO artifacts and execute them from rust.
+//! Runtime layer: execute the per-layer programs behind a pluggable
+//! backend trait.  This is the request-path compute engine.
 //!
-//! This is the request-path compute engine.  `python/compile/aot.py`
-//! lowered every layer of both networks to HLO *text*;
-//! [`engine::Engine`] compiles each module once on the PJRT CPU client
-//! (`xla` crate) and [`network::NetworkRuntime`] composes arbitrary
-//! head/tail splits from the per-layer executables.  Python is never
-//! involved at run time.
-//!
-//! * [`engine`]   — PJRT client + one compiled executable per layer;
-//! * [`network`]  — head/tail pipeline execution over a whole network,
+//! * [`backend`]   — the [`InferenceBackend`] / [`LayerExecutable`]
+//!   traits and [`default_backend`] selection (see DESIGN.md §4 for the
+//!   backend feature matrix);
+//! * [`reference`] — default pure-Rust dense conv/matmul/relu layer
+//!   interpreter driven by the manifest shapes: the full head/tail split
+//!   path with zero native dependencies;
+//! * [`engine`]    — (`--features xla`) PJRT client + one compiled
+//!   executable per HLO-text layer artifact lowered by
+//!   `python/compile/aot.py`;
+//! * [`network`]   — head/tail pipeline execution over a whole network,
 //!   including the int8 (edge-TPU path) variants for VGG16;
-//! * [`evaluate`] — classify the eval set through the real executables
-//!   and produce the measured accuracy table (cross-checked against the
-//!   python oracle's expectations from the manifest).
+//! * [`evaluate`]  — classify the eval set through the loaded
+//!   executables and produce the measured accuracy table (cross-checked
+//!   against the python oracle's expectations when the XLA backend runs
+//!   the real artifacts).
+//!
+//! Python is never involved at run time.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod evaluate;
 pub mod network;
+pub mod reference;
 
+pub use backend::{default_backend, InferenceBackend, LayerExecutable, LayerSpec};
+#[cfg(feature = "xla")]
 pub use engine::{Engine, LayerExec};
 pub use network::NetworkRuntime;
+pub use reference::ReferenceBackend;

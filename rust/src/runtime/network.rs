@@ -1,53 +1,75 @@
 //! Whole-network runtime: compose per-layer executables into arbitrary
 //! head/tail splits, with the int8 (edge-TPU) variants for VGG16 heads.
+//!
+//! Layers come from any [`InferenceBackend`] — the PJRT engine when
+//! artifacts and XLA are available, the pure-Rust reference interpreter
+//! otherwise — so the same head/tail composition logic serves both.
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{Engine, LayerExec};
-use crate::model::manifest::{Manifest, NetworkEntry};
+use super::backend::{InferenceBackend, LayerExecutable, LayerSpec};
+use crate::model::manifest::{LayerEntry, Manifest, NetworkEntry};
 use crate::space::Network;
-// (Engine is also used by RuntimeTailExecutor::load below.)
 
-/// All compiled executables for one network.
+/// All instantiated executables for one network.
 pub struct NetworkRuntime {
     pub net: Network,
     pub batch: usize,
-    fp32: Vec<LayerExec>,
+    fp32: Vec<Box<dyn LayerExecutable>>,
     /// int8 variant per layer (None for non-quantizable / ViT layers —
     /// those run the fp32 executable on the TPU path too, matching how
     /// LiteRT falls back to the CPU delegate between fused ops).
-    int8: Vec<Option<LayerExec>>,
+    int8: Vec<Option<Box<dyn LayerExecutable>>>,
     pub load_ms: f64,
 }
 
 impl NetworkRuntime {
-    /// Compile every layer artifact of `net` listed in the manifest.
-    pub fn load(engine: &Engine, manifest: &Manifest, net: Network) -> Result<NetworkRuntime> {
+    /// Instantiate every layer of `net` listed in the manifest.
+    pub fn load(
+        backend: &dyn InferenceBackend,
+        manifest: &Manifest,
+        net: Network,
+    ) -> Result<NetworkRuntime> {
         let entry: &NetworkEntry = manifest.network(net);
+        Self::from_layers(backend, net, manifest.batch, &entry.layers, Some(manifest.dir.as_path()))
+    }
+
+    /// Instantiate from raw layer entries — the manifest-free path used
+    /// by synthetic-network tests and tools.  `artifact_dir` resolves
+    /// each entry's relative artifact paths for backends that compile
+    /// from disk; interpreter backends run without it.
+    pub fn from_layers(
+        backend: &dyn InferenceBackend,
+        net: Network,
+        batch: usize,
+        layers: &[LayerEntry],
+        artifact_dir: Option<&Path>,
+    ) -> Result<NetworkRuntime> {
         let t0 = Instant::now();
-        let mut fp32 = Vec::with_capacity(entry.layers.len());
-        let mut int8 = Vec::with_capacity(entry.layers.len());
-        for layer in &entry.layers {
-            let exec = engine
-                .load_layer(
-                    &manifest.artifact_path(&layer.fp32),
-                    manifest.batch,
-                    &layer.in_shape,
-                    &layer.out_shape,
-                )
+        let mut fp32: Vec<Box<dyn LayerExecutable>> = Vec::with_capacity(layers.len());
+        let mut int8: Vec<Option<Box<dyn LayerExecutable>>> = Vec::with_capacity(layers.len());
+        for layer in layers {
+            let exec = backend
+                .load_layer(&LayerSpec {
+                    entry: layer,
+                    batch,
+                    artifact: artifact_dir.map(|d| d.join(&layer.fp32)),
+                    quantized: false,
+                })
                 .with_context(|| format!("{} layer {}", net.name(), layer.index))?;
             fp32.push(exec);
             int8.push(match &layer.int8 {
                 Some(rel) => Some(
-                    engine
-                        .load_layer(
-                            &manifest.artifact_path(rel),
-                            manifest.batch,
-                            &layer.in_shape,
-                            &layer.out_shape,
-                        )
+                    backend
+                        .load_layer(&LayerSpec {
+                            entry: layer,
+                            batch,
+                            artifact: artifact_dir.map(|d| d.join(rel)),
+                            quantized: true,
+                        })
                         .with_context(|| format!("{} int8 layer {}", net.name(), layer.index))?,
                 ),
                 None => None,
@@ -55,7 +77,7 @@ impl NetworkRuntime {
         }
         Ok(NetworkRuntime {
             net,
-            batch: manifest.batch,
+            batch,
             fp32,
             int8,
             load_ms: t0.elapsed().as_secs_f64() * 1000.0,
@@ -66,11 +88,11 @@ impl NetworkRuntime {
         self.fp32.len()
     }
 
-    fn layer(&self, i: usize, quantized: bool) -> &LayerExec {
+    fn layer(&self, i: usize, quantized: bool) -> &dyn LayerExecutable {
         if quantized {
-            self.int8[i].as_ref().unwrap_or(&self.fp32[i])
+            self.int8[i].as_deref().unwrap_or_else(|| &*self.fp32[i])
         } else {
-            &self.fp32[i]
+            &*self.fp32[i]
         }
     }
 
@@ -119,7 +141,7 @@ impl NetworkRuntime {
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(0)
             })
@@ -129,20 +151,22 @@ impl NetworkRuntime {
 
 /// Tail executor over network runtimes, used by the cloud service loop
 /// (`transport::cloud`).  Constructed *inside* the cloud node's thread —
-/// PJRT handles are not `Send`, and the paper's cloud node owns its own
-/// runtime anyway (the tail networks are loaded cloud-side, §4.3.2).
+/// layer executables are not `Send` (PJRT handles are thread-local), and
+/// the paper's cloud node owns its own runtime anyway (the tail networks
+/// are loaded cloud-side, §4.3.2).
 pub struct RuntimeTailExecutor {
     pub vgg: NetworkRuntime,
     pub vit: NetworkRuntime,
 }
 
 impl RuntimeTailExecutor {
-    /// Build a fresh engine + both network runtimes (cloud-node startup).
+    /// Build the configured backend + both network runtimes (cloud-node
+    /// startup).
     pub fn load(manifest: &Manifest) -> Result<RuntimeTailExecutor> {
-        let engine = Engine::cpu()?;
+        let backend = super::backend::default_backend()?;
         Ok(RuntimeTailExecutor {
-            vgg: NetworkRuntime::load(&engine, manifest, Network::Vgg16)?,
-            vit: NetworkRuntime::load(&engine, manifest, Network::Vit)?,
+            vgg: NetworkRuntime::load(backend.as_ref(), manifest, Network::Vgg16)?,
+            vit: NetworkRuntime::load(backend.as_ref(), manifest, Network::Vit)?,
         })
     }
 }
@@ -192,5 +216,13 @@ mod tests {
         // trailing partial row is ignored by chunks_exact
         let probs = [0.9, 0.1, 0.5];
         assert_eq!(NetworkRuntime::classify(&probs, 2), vec![0]);
+    }
+
+    #[test]
+    fn classify_survives_nan_rows() {
+        // total_cmp ranks NaN above every number, so a NaN poisons only
+        // its own row's argmax instead of panicking the whole batch.
+        let probs = [0.1, f32::NAN, 0.2, /*img2*/ 0.9, 0.05, 0.05];
+        assert_eq!(NetworkRuntime::classify(&probs, 3), vec![1, 0]);
     }
 }

@@ -1,0 +1,397 @@
+//! Pure-Rust reference backend: a dense f32 conv/matmul/relu layer
+//! interpreter driven by the same manifest shapes as the XLA engine.
+//!
+//! Weights are *synthetic*: generated deterministically per layer from a
+//! seed derived from the layer's name and index (quantized variants snap
+//! the same weights to an int8 grid, mimicking post-training
+//! quantization's small perturbation).  That makes the backend
+//! numerically self-consistent — head/tail compositions reproduce the
+//! full forward bit-for-bit, int8 prefixes stay close to fp32 — while
+//! requiring zero artifacts and zero native libraries, so the complete
+//! split-execution path (edge head → transport → cloud tail) is
+//! exercisable by `cargo test` in any environment.
+//!
+//! Fidelity to the *trained* models (real accuracies) is exclusively the
+//! XLA backend's job (`--features xla`).
+//!
+//! Op selection per layer, from the manifest shapes alone:
+//!
+//! * 3-D in / 3-D out (`[H, W, C]` activations) → 3×3 same-padded
+//!   convolution, stride inferred from the spatial ratio, ReLU;
+//! * small dense shapes → full matmul + bias + ReLU;
+//! * anything else (large flattens, attention blocks) → a strided
+//!   sparse mixing matmul (fixed taps per output), so cost stays linear
+//!   in the output size instead of `O(in × out)`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::backend::{InferenceBackend, LayerExecutable, LayerSpec};
+use crate::util::rng::Pcg32;
+
+/// Dense-ops-per-output cap above which the interpreter switches from a
+/// full matmul to the strided mixer (keeps debug-build tests fast).
+const DENSE_WEIGHT_CAP: usize = 1 << 22;
+
+/// Taps per output element in the strided mixer.
+const MIX_TAPS: usize = 16;
+
+/// The default, dependency-free backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend
+    }
+}
+
+impl InferenceBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn platform(&self) -> String {
+        "reference-cpu (synthetic weights)".to_string()
+    }
+
+    fn load_layer(&self, spec: &LayerSpec) -> Result<Box<dyn LayerExecutable>> {
+        let t0 = Instant::now();
+        let op = RefOp::build(spec)?;
+        Ok(Box::new(RefLayer {
+            batch: spec.batch,
+            in_per_img: spec.entry.in_shape.iter().product(),
+            out_per_img: spec.entry.out_shape.iter().product(),
+            op,
+            build_ms: t0.elapsed().as_secs_f64() * 1000.0,
+        }))
+    }
+}
+
+/// One interpreted layer.
+struct RefLayer {
+    batch: usize,
+    in_per_img: usize,
+    out_per_img: usize,
+    op: RefOp,
+    build_ms: f64,
+}
+
+enum RefOp {
+    /// 3×3 same-padded convolution over `[H, W, C]`, strided, ReLU.
+    Conv {
+        h_in: usize,
+        w_in: usize,
+        c_in: usize,
+        h_out: usize,
+        w_out: usize,
+        c_out: usize,
+        stride: usize,
+        /// `[c_out, 3, 3, c_in]` row-major.
+        w: Vec<f32>,
+        b: Vec<f32>,
+    },
+    /// Full matmul `[n_out, n_in]` + bias, ReLU.
+    Dense { n_in: usize, n_out: usize, w: Vec<f32>, b: Vec<f32> },
+    /// Strided sparse mixer: each output reads [`MIX_TAPS`] inputs.
+    Mix { n_in: usize, n_out: usize, w: Vec<f32>, b: Vec<f32> },
+}
+
+/// Deterministic per-layer weight seed: stable across edge and cloud
+/// nodes so separately-constructed runtimes agree bit-for-bit.
+fn layer_seed(spec: &LayerSpec) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in spec.entry.name.bytes() {
+        h = (h ^ byte as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ (spec.entry.index as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Uniform weights scaled He-style for variance preservation under ReLU;
+/// the quantized variant snaps the *same* weights to a 127-step grid.
+fn gen_weights(rng: &mut Pcg32, n: usize, fan_in: usize, quantized: bool) -> Vec<f32> {
+    let s = (6.0 / fan_in.max(1) as f64).sqrt();
+    let mut w: Vec<f32> = (0..n).map(|_| rng.uniform(-s, s) as f32).collect();
+    if quantized {
+        let m = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        if m > 0.0 {
+            let delta = m / 127.0;
+            for x in w.iter_mut() {
+                *x = (*x / delta).round() * delta;
+            }
+        }
+    }
+    w
+}
+
+fn gen_bias(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(0.0, 0.05) as f32).collect()
+}
+
+impl RefOp {
+    fn build(spec: &LayerSpec) -> Result<RefOp> {
+        let in_shape = &spec.entry.in_shape;
+        let out_shape = &spec.entry.out_shape;
+        let n_in: usize = in_shape.iter().product();
+        let n_out: usize = out_shape.iter().product();
+        if n_in == 0 || n_out == 0 {
+            bail!(
+                "layer {} has empty shape: in {:?} out {:?}",
+                spec.entry.index,
+                in_shape,
+                out_shape
+            );
+        }
+        // Weight generation ignores `quantized` for the *values drawn* (the
+        // int8 variant must share the fp32 weights) — quantization is a
+        // post-pass inside gen_weights.
+        let mut rng = Pcg32::new(layer_seed(spec), 0x5eed);
+        Ok(if in_shape.len() == 3 && out_shape.len() == 3 {
+            let (h_in, w_in, c_in) = (in_shape[0], in_shape[1], in_shape[2]);
+            let (h_out, w_out, c_out) = (out_shape[0], out_shape[1], out_shape[2]);
+            let stride = (h_in / h_out.max(1)).max(1);
+            let fan_in = 9 * c_in;
+            let w = gen_weights(&mut rng, c_out * fan_in, fan_in, spec.quantized);
+            let b = gen_bias(&mut rng, c_out);
+            RefOp::Conv { h_in, w_in, c_in, h_out, w_out, c_out, stride, w, b }
+        } else if n_in * n_out <= DENSE_WEIGHT_CAP {
+            let w = gen_weights(&mut rng, n_out * n_in, n_in, spec.quantized);
+            let b = gen_bias(&mut rng, n_out);
+            RefOp::Dense { n_in, n_out, w, b }
+        } else {
+            let w = gen_weights(&mut rng, n_out * MIX_TAPS, MIX_TAPS, spec.quantized);
+            let b = gen_bias(&mut rng, n_out);
+            RefOp::Mix { n_in, n_out, w, b }
+        })
+    }
+
+    /// Execute over one image: `x` has `in_per_img` elements, `out` is
+    /// pre-sized to `out_per_img`.
+    fn forward(&self, x: &[f32], out: &mut [f32]) {
+        match self {
+            RefOp::Conv { h_in, w_in, c_in, h_out, w_out, c_out, stride, w, b } => {
+                for oy in 0..*h_out {
+                    for ox in 0..*w_out {
+                        for co in 0..*c_out {
+                            let mut acc = b[co];
+                            for ky in 0..3usize {
+                                for kx in 0..3usize {
+                                    let iy = (oy * stride + ky) as isize - 1;
+                                    let ix = (ox * stride + kx) as isize - 1;
+                                    if iy < 0
+                                        || ix < 0
+                                        || iy >= *h_in as isize
+                                        || ix >= *w_in as isize
+                                    {
+                                        continue;
+                                    }
+                                    let in_base = (iy as usize * w_in + ix as usize) * c_in;
+                                    let w_base = (co * 9 + ky * 3 + kx) * c_in;
+                                    for ci in 0..*c_in {
+                                        acc += w[w_base + ci] * x[in_base + ci];
+                                    }
+                                }
+                            }
+                            out[(oy * w_out + ox) * c_out + co] = acc.max(0.0);
+                        }
+                    }
+                }
+            }
+            RefOp::Dense { n_in, n_out, w, b } => {
+                for (j, o) in out.iter_mut().enumerate().take(*n_out) {
+                    let row = &w[j * n_in..(j + 1) * n_in];
+                    let mut acc = b[j];
+                    for (wi, xi) in row.iter().zip(x) {
+                        acc += wi * xi;
+                    }
+                    *o = acc.max(0.0);
+                }
+            }
+            RefOp::Mix { n_in, n_out, w, b } => {
+                for (j, o) in out.iter_mut().enumerate().take(*n_out) {
+                    let mut acc = b[j];
+                    for t in 0..MIX_TAPS {
+                        let idx = (j.wrapping_mul(31) + t.wrapping_mul(17)) % n_in;
+                        acc += w[j * MIX_TAPS + t] * x[idx];
+                    }
+                    *o = acc.max(0.0);
+                }
+            }
+        }
+    }
+}
+
+impl LayerExecutable for RefLayer {
+    fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.in_elems() {
+            bail!(
+                "layer expects {} input elements (batch {} x {}), got {}",
+                self.in_elems(),
+                self.batch,
+                self.in_per_img,
+                input.len()
+            );
+        }
+        let mut out = vec![0.0f32; self.out_elems()];
+        for (img_in, img_out) in input
+            .chunks_exact(self.in_per_img)
+            .zip(out.chunks_exact_mut(self.out_per_img))
+        {
+            self.op.forward(img_in, img_out);
+        }
+        Ok(out)
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn in_elems(&self) -> usize {
+        self.batch * self.in_per_img
+    }
+
+    fn out_elems(&self) -> usize {
+        self.batch * self.out_per_img
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.build_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::LayerEntry;
+
+    fn entry(
+        index: usize,
+        kind: &str,
+        in_shape: Vec<usize>,
+        out_shape: Vec<usize>,
+        int8: bool,
+    ) -> LayerEntry {
+        LayerEntry {
+            index,
+            name: format!("{kind}_{index:02}"),
+            kind: kind.to_string(),
+            in_shape,
+            out_shape,
+            out_bytes: 0,
+            macs: 0,
+            quantizable: int8,
+            fp32: format!("fp32/layer_{index:02}.hlo.txt"),
+            int8: int8.then(|| format!("int8/layer_{index:02}.hlo.txt")),
+        }
+    }
+
+    fn load(entry: &LayerEntry, batch: usize, quantized: bool) -> Box<dyn LayerExecutable> {
+        ReferenceBackend::new()
+            .load_layer(&LayerSpec { entry, batch, artifact: None, quantized })
+            .unwrap()
+    }
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37).sin()).collect()
+    }
+
+    #[test]
+    fn conv_layer_shapes_and_relu() {
+        let e = entry(0, "conv", vec![6, 6, 2], vec![6, 6, 4], false);
+        let layer = load(&e, 2, false);
+        assert_eq!(layer.batch(), 2);
+        assert_eq!(layer.in_elems(), 2 * 72);
+        assert_eq!(layer.out_elems(), 2 * 144);
+        let out = layer.run(&ramp(layer.in_elems())).unwrap();
+        assert_eq!(out.len(), layer.out_elems());
+        assert!(out.iter().all(|&v| v >= 0.0 && v.is_finite()), "ReLU output");
+        assert!(out.iter().any(|&v| v > 0.0), "not all dead");
+    }
+
+    #[test]
+    fn strided_conv_downsamples() {
+        let e = entry(1, "conv", vec![8, 8, 3], vec![4, 4, 5], false);
+        let layer = load(&e, 1, false);
+        let out = layer.run(&ramp(8 * 8 * 3)).unwrap();
+        assert_eq!(out.len(), 4 * 4 * 5);
+    }
+
+    #[test]
+    fn dense_layer_small_shapes() {
+        let e = entry(2, "fc", vec![36], vec![10], false);
+        let layer = load(&e, 3, false);
+        let out = layer.run(&ramp(3 * 36)).unwrap();
+        assert_eq!(out.len(), 30);
+        assert!(out.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn large_shapes_take_the_mixer_path() {
+        // 4096 x 4096 > DENSE_WEIGHT_CAP: must not allocate a 16M-element
+        // weight matrix, and must still execute quickly.
+        let e = entry(3, "block", vec![4096], vec![4096], false);
+        let layer = load(&e, 1, false);
+        let out = layer.run(&ramp(4096)).unwrap();
+        assert_eq!(out.len(), 4096);
+        assert!(out.iter().all(|&v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let e = entry(4, "conv", vec![5, 5, 3], vec![5, 5, 4], false);
+        let a = load(&e, 2, false);
+        let b = load(&e, 2, false);
+        let x = ramp(a.in_elems());
+        assert_eq!(a.run(&x).unwrap(), b.run(&x).unwrap());
+    }
+
+    #[test]
+    fn different_layers_differ() {
+        let e0 = entry(5, "fc", vec![20], vec![20], false);
+        let e1 = entry(6, "fc", vec![20], vec![20], false);
+        let x = ramp(20);
+        assert_ne!(load(&e0, 1, false).run(&x).unwrap(), load(&e1, 1, false).run(&x).unwrap());
+    }
+
+    #[test]
+    fn quantized_variant_close_but_not_identical() {
+        let e = entry(7, "conv", vec![6, 6, 3], vec![6, 6, 4], true);
+        let fp = load(&e, 1, false);
+        let q = load(&e, 1, true);
+        let x = ramp(fp.in_elems());
+        let a = fp.run(&x).unwrap();
+        let b = q.run(&x).unwrap();
+        assert_ne!(a, b, "int8 grid must perturb the weights");
+        let scale = a.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6);
+        let max_d = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+        assert!(max_d / scale < 0.1, "int8 diverged: {max_d} vs scale {scale}");
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let e = entry(8, "fc", vec![10], vec![10], false);
+        let layer = load(&e, 1, false);
+        let err = layer.run(&[1.0; 9]).unwrap_err();
+        assert!(format!("{err:#}").contains("expects 10"));
+    }
+
+    #[test]
+    fn empty_shape_rejected() {
+        let e = entry(9, "fc", vec![0], vec![10], false);
+        let r = ReferenceBackend::new().load_layer(&LayerSpec {
+            entry: &e,
+            batch: 1,
+            artifact: None,
+            quantized: false,
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn backend_identity() {
+        let b = ReferenceBackend::new();
+        assert_eq!(b.name(), "reference");
+        assert!(b.platform().contains("reference"));
+    }
+}

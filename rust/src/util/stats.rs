@@ -19,10 +19,15 @@ pub struct Summary {
 
 impl Summary {
     /// Compute from unsorted data. Panics on empty input.
+    ///
+    /// NaN samples indicate an upstream bug: flagged loudly in debug
+    /// builds, while release builds stay panic-free (`total_cmp` sorts
+    /// NaN deterministically to the top, so it surfaces in `max`).
     pub fn of(data: &[f64]) -> Summary {
         assert!(!data.is_empty(), "Summary::of(empty)");
+        debug_assert!(!data.iter().any(|x| x.is_nan()), "NaN sample in Summary::of");
         let mut v: Vec<f64> = data.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in Summary::of"));
+        v.sort_by(f64::total_cmp);
         let mean = v.iter().sum::<f64>() / v.len() as f64;
         Summary {
             count: v.len(),
@@ -66,8 +71,9 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
 
 /// Quantile of unsorted data.
 pub fn quantile(data: &[f64], q: f64) -> f64 {
+    debug_assert!(!data.iter().any(|x| x.is_nan()), "NaN sample in quantile");
     let mut v = data.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile"));
+    v.sort_by(f64::total_cmp);
     quantile_sorted(&v, q)
 }
 

@@ -102,6 +102,70 @@ mod tests {
     }
 
     #[test]
+    fn vit_qos_spans_table2_bounds_exactly() {
+        // Table 2, ViT row: 118.8 ms .. 10,287.6 ms — the rescale must
+        // pin the extremes of every draw set to exactly these values.
+        let gen = WorkloadGen::paper(Network::Vit);
+        let mut rng = Pcg32::seeded(21);
+        let reqs = gen.generate(64, &mut rng);
+        let qos: Vec<f64> = reqs.iter().map(|r| r.qos_ms).collect();
+        let lo = qos.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = qos.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((lo - 118.8).abs() < 1e-9, "min {lo}");
+        assert!((hi - 10_287.6).abs() < 1e-9, "max {hi}");
+        assert!(qos.iter().all(|&q| (118.8 - 1e-9..=10_287.6 + 1e-9).contains(&q)));
+    }
+
+    #[test]
+    fn minimal_two_request_workload_hits_both_bounds() {
+        // n = 2 is the degenerate rescale: one draw becomes the Table-2
+        // minimum, the other the maximum, regardless of the raw values.
+        for net in Network::ALL {
+            let b = LatencyBounds::paper(net);
+            let reqs = WorkloadGen::paper(net).generate(2, &mut Pcg32::seeded(5));
+            let mut qos = [reqs[0].qos_ms, reqs[1].qos_ms];
+            qos.sort_by(f64::total_cmp);
+            assert!((qos[0] - b.min_ms).abs() < 1e-9, "{net:?} min {}", qos[0]);
+            assert!((qos[1] - b.max_ms).abs() < 1e-9, "{net:?} max {}", qos[1]);
+        }
+    }
+
+    #[test]
+    fn rescale_preserves_draw_order() {
+        // generate() draws all raw Weibull samples *first*, then the
+        // per-request seeds, so replaying the same RNG stream recovers
+        // the raw draws.  The rescale is affine with positive slope:
+        // request QoS ranks must equal raw draw ranks.
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let n = 40;
+        let mut replay = Pcg32::seeded(31);
+        let raw: Vec<f64> = (0..n).map(|_| replay.weibull(1.0, 1.0)).collect();
+        let reqs = gen.generate(n, &mut Pcg32::seeded(31));
+        for (a, b) in (0..n).zip(1..n) {
+            let raw_ord = raw[a].total_cmp(&raw[b]);
+            let qos_ord = reqs[a].qos_ms.total_cmp(&reqs[b].qos_ms);
+            assert_eq!(raw_ord, qos_ord, "rank flipped between draws {a} and {b}");
+        }
+        // and the extremes are attained exactly once each (continuous draws)
+        let b = LatencyBounds::paper(Network::Vgg16);
+        let at_min = reqs.iter().filter(|r| (r.qos_ms - b.min_ms).abs() < 1e-9).count();
+        let at_max = reqs.iter().filter(|r| (r.qos_ms - b.max_ms).abs() < 1e-9).count();
+        assert_eq!((at_min, at_max), (1, 1));
+    }
+
+    #[test]
+    fn custom_bounds_are_respected() {
+        // Solver-measured bounds substitute for Table 2 (§6.2.1).
+        let bounds = LatencyBounds { min_ms: 10.0, max_ms: 20.0 };
+        let gen = WorkloadGen::new(Network::Vit, bounds);
+        let reqs = gen.generate(50, &mut Pcg32::seeded(9));
+        let qos: Vec<f64> = reqs.iter().map(|r| r.qos_ms).collect();
+        let lo = qos.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = qos.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((lo - 10.0).abs() < 1e-9 && (hi - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn distribution_is_right_skewed() {
         // Exponential QoS ⇒ most requests demand low latency (Fig. 5):
         // median well below the midpoint of the range.

@@ -1,7 +1,11 @@
 //! Integration: the python-emitted manifest must agree with the rust-side
 //! static cost tables (`model::meta`) layer by layer — the two layer-plan
 //! derivations (python for AOT, rust for the simulator) can never drift
-//! apart silently.  Skipped when `make artifacts` has not run.
+//! apart silently.
+//!
+//! Explicitly skipped (printed + hard-failable) when `make artifacts` has
+//! not run: set `DYNASPLIT_REQUIRE_ARTIFACTS=1` to turn skips into
+//! failures in artifact-building CI lanes.
 
 use dynasplit::model::{Manifest, NetCost};
 use dynasplit::space::Network;
@@ -11,7 +15,10 @@ fn manifest() -> Option<Manifest> {
     match Manifest::load(&dir) {
         Ok(m) => Some(m),
         Err(e) => {
-            eprintln!("skipping (run `make artifacts`): {e:#}");
+            if std::env::var_os("DYNASPLIT_REQUIRE_ARTIFACTS").is_some() {
+                panic!("DYNASPLIT_REQUIRE_ARTIFACTS is set but artifacts are unavailable: {e:#}");
+            }
+            eprintln!("SKIPPED (run `make artifacts`): {e:#}");
             None
         }
     }

@@ -1,0 +1,265 @@
+//! Vendored, minimal `anyhow`-compatible error crate.
+//!
+//! The workspace must build in CI-grade environments with **no registry
+//! access**, so this path dependency re-implements exactly the surface
+//! the DynaSplit crate uses — nothing more:
+//!
+//! * [`Error`]: an opaque, `Send + Sync` error with a context *chain*;
+//! * [`Result<T>`]: alias with `Error` as the default error type;
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Formatting matches anyhow's conventions where the repo relies on
+//! them: `{e}` prints the outermost context, `{e:#}` prints the whole
+//! chain separated by `": "` (several tests assert on that form).
+//!
+//! If the build environment has crates.io access, the real `anyhow` can
+//! be swapped back in by deleting this directory and pointing the root
+//! `Cargo.toml` at the registry — no call sites change.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error: a chain of context messages, outermost first.
+pub struct Error {
+    /// `chain[0]` is the most recently attached context; the tail holds
+    /// every wrapped cause down to the root.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an ad-hoc error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach another layer of context (used by [`Context`]).
+    fn push_context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Outermost message (anyhow's `Display`).
+    fn outermost(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("unknown error")
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        // Capture the full source chain eagerly; the repo only formats
+        // errors (no downcasting), so owned strings are sufficient.
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first — "ctx: ...: root".
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Mirror of anyhow's context extension: both concrete `std` errors and
+/// already-wrapped [`Error`]s accept further context.  The two impls do
+/// not overlap because [`Error`] deliberately does not implement
+/// `std::error::Error` (same coherence trick the real anyhow uses).
+pub trait ContextExt {
+    fn ext_context<C: Display>(self, context: C) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> ContextExt for E {
+    fn ext_context<C: Display>(self, context: C) -> Error {
+        Error::from(self).push_context(context)
+    }
+}
+
+impl ContextExt for Error {
+    fn ext_context<C: Display>(self, context: C) -> Error {
+        self.push_context(context)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E>: private::Sealed {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ContextExt> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an ad-hoc [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Early-return with an ad-hoc error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "Condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_error() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_error())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let r: Result<i32, std::io::Error> = Ok(3);
+        let v = r.with_context(|| -> String { panic!("must not run") }).unwrap();
+        assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<i32> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e:#}"), "nothing there");
+    }
+
+    #[test]
+    fn context_stacks_on_wrapped_error() {
+        let e: Error = Err::<(), Error>(anyhow!("root {}", 7))
+            .context("middle")
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: middle: root 7");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0);
+            ensure!(x < 10, "too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert!(format!("{:#}", f(-1).unwrap_err()).contains("Condition failed"));
+        assert!(format!("{:#}", f(12).unwrap_err()).contains("too big: 12"));
+        assert!(format!("{:#}", f(5).unwrap_err()).contains("five"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/anyhow-shim-test")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
