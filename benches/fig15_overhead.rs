@@ -30,7 +30,7 @@ fn main() {
     let mut qos = 80.0;
     b.bench("algorithm1_select", || {
         qos = if qos > 5000.0 { 80.0 } else { qos + 37.0 };
-        algorithm1::select(&sorted, qos).config
+        algorithm1::select(&sorted, qos).expect("non-empty set").config
     });
 
     // --- micro: configuration application state machine ---

@@ -3,11 +3,13 @@
 //! framing, JSON parsing, and — when artifacts are present — the real
 //! PJRT layer execution path.
 
+use dynasplit::controller::algorithm1::{self, SelectIndex};
 use dynasplit::model::{Manifest, NetCost};
 use dynasplit::nsga::{refpoints, sort};
 use dynasplit::runtime::InferenceBackend;
 use dynasplit::simulator::meter::{Meter, PowerTrace};
 use dynasplit::simulator::Testbed;
+use dynasplit::solver::ParetoEntry;
 use dynasplit::space::{Network, Space};
 use dynasplit::transport::frame::Frame;
 use dynasplit::util::bench::Bencher;
@@ -39,6 +41,36 @@ fn main() {
     }
     let meter = Meter::edge();
     b.bench("meter_sample_2000seg_trace", || meter.measure_energy_j(&trace, &mut rng));
+
+    // --- Algorithm-1 selection: O(n) scan vs O(log n) index ---
+    // The paper's set holds ~12-15 entries; production-scale stores can
+    // hold thousands.  Same QoS sequence for both variants at each n.
+    for &n in &[100usize, 1_000, 10_000] {
+        let mut entries: Vec<ParetoEntry> = (0..n)
+            .map(|_| ParetoEntry {
+                config: space.sample(&mut rng),
+                latency_ms: rng.uniform(50.0, 5000.0),
+                energy_j: rng.uniform(1.0, 100.0),
+                accuracy: rng.uniform(0.9, 1.0),
+            })
+            .collect();
+        algorithm1::sort_config_set(&mut entries);
+        let index = SelectIndex::build(&entries);
+        let qos: Vec<f64> = (0..256).map(|_| rng.uniform(10.0, 6000.0)).collect();
+        let mut qi = 0;
+        b.bench(&format!("select_scan_n{n}"), || {
+            qi = (qi + 1) % qos.len();
+            algorithm1::select_pos(&entries, qos[qi])
+        });
+        let mut qj = 0;
+        b.bench(&format!("select_index_n{n}"), || {
+            qj = (qj + 1) % qos.len();
+            index.select(qos[qj])
+        });
+        b.bench(&format!("select_index_build_n{n}"), || {
+            SelectIndex::build(&entries).len()
+        });
+    }
 
     // --- NSGA machinery ---
     let objs: Vec<[f64; 3]> = (0..200)

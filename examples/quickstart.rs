@@ -82,7 +82,9 @@ fn main() -> anyhow::Result<()> {
                     inferences: 16,
                     seed: i as u64,
                 };
-                let record = controller.handle(&req, &mut real);
+                let record = controller
+                    .handle(&req, &mut real)
+                    .expect("paper policy admits every request");
                 println!(
                     "  QoS {qos_ms:>6.0} ms: {:<6} split {:<2} -> {:.2} ms/inference (wall), \
                      batch accuracy {:.3}",

@@ -4,7 +4,19 @@
 //! accuracy desc), and the request's QoS level (max latency, ms).
 //! Output: the most energy-efficient configuration satisfying the QoS,
 //! or — if none satisfies it — the fastest available configuration, so
-//! the violation is minimized.  O(n) per request.
+//! the violation is minimized.
+//!
+//! Two implementations of the same selection:
+//!
+//! * [`select`] / [`select_pos`] — the paper's O(n) scan, line-for-line;
+//! * [`SelectIndex`] — an O(log n) fast path for production-scale sets:
+//!   entries ranked by latency with a prefix-min over their energy-sort
+//!   position, so a binary search over latency answers "most
+//!   energy-efficient satisfier" directly (`benches/micro.rs` compares
+//!   both at n ∈ {10², 10³, 10⁴}).
+//!
+//! Both return `None` on an empty set so a drained Pareto store degrades
+//! gracefully (the scheduler rejects the request) instead of panicking.
 
 use crate::solver::ParetoEntry;
 
@@ -20,21 +32,107 @@ pub fn sort_config_set(entries: &mut [ParetoEntry]) {
     });
 }
 
-/// Algorithm 1, line-for-line.
-pub fn select<'a>(sorted: &'a [ParetoEntry], qos_ms: f64) -> &'a ParetoEntry {
-    assert!(!sorted.is_empty(), "empty configuration set");
-    let mut config = &sorted[0]; // line 1
-    for entry in sorted {
+/// Algorithm 1, line-for-line (O(n) scan).  `None` iff the set is empty.
+pub fn select(sorted: &[ParetoEntry], qos_ms: f64) -> Option<&ParetoEntry> {
+    select_pos(sorted, qos_ms).map(|i| &sorted[i])
+}
+
+/// Algorithm 1 returning the *position* of the pick in the energy-sorted
+/// set (what scheduling policies store).  `None` iff the set is empty.
+///
+/// The fastest-fallback comparison (line 7) uses `total_cmp` instead of
+/// the paper's plain `<`: with IEEE `<` a NaN latency in the *first*
+/// energy position is unbeatable (`x < NaN` is always false) and a
+/// poisoned entry would win the fallback.  Under `total_cmp` NaN ranks
+/// after every number, so the fallback returns the genuinely fastest
+/// entry — the same order [`SelectIndex`] uses.
+pub fn select_pos(sorted: &[ParetoEntry], qos_ms: f64) -> Option<usize> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let mut config = 0; // line 1
+    for (i, entry) in sorted.iter().enumerate() {
         // lines 2-5
         if entry.latency_ms <= qos_ms {
-            return entry;
+            return Some(i);
         }
-        // lines 6-8
-        if entry.latency_ms < config.latency_ms {
-            config = entry;
+        // lines 6-8 (NaN-totalized, see above)
+        if entry.latency_ms.total_cmp(&sorted[config].latency_ms) == std::cmp::Ordering::Less {
+            config = i;
         }
     }
-    config // line 10
+    Some(config) // line 10
+}
+
+/// O(log n) selection index over the energy-sorted non-dominated set.
+///
+/// Construction: rank entries by latency ascending (ties broken by their
+/// position in the energy sort, so equal-latency entries keep the
+/// paper's energy-then-accuracy preference), then take a running prefix
+/// minimum of those positions.  `prefix_best[i]` is therefore the
+/// energy-sort position of the most energy-efficient entry among the
+/// `i + 1` fastest — exactly what Algorithm 1's scan returns for any QoS
+/// cutting the latency axis between `by_latency[i]` and
+/// `by_latency[i + 1]`.
+///
+/// NaN latencies sort to the end under `total_cmp` and never satisfy a
+/// QoS comparison, matching the scan's behaviour on poisoned entries.
+#[derive(Debug, Clone)]
+pub struct SelectIndex {
+    /// `(latency_ms, energy-sort position)`, latency ascending.
+    by_latency: Vec<(f64, usize)>,
+    /// `prefix_best[i]` = min energy-sort position over `by_latency[..=i]`.
+    prefix_best: Vec<usize>,
+}
+
+impl SelectIndex {
+    /// Build from a set already ordered by [`sort_config_set`].
+    pub fn build(sorted: &[ParetoEntry]) -> SelectIndex {
+        let mut by_latency: Vec<(f64, usize)> = sorted
+            .iter()
+            .enumerate()
+            .map(|(pos, e)| (e.latency_ms, pos))
+            .collect();
+        by_latency.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut prefix_best = Vec::with_capacity(by_latency.len());
+        let mut best = usize::MAX;
+        for &(_, pos) in &by_latency {
+            best = best.min(pos);
+            prefix_best.push(best);
+        }
+        SelectIndex { by_latency, prefix_best }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_latency.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_latency.is_empty()
+    }
+
+    /// Most energy-efficient entry satisfying `qos_ms` (energy-sort
+    /// position), or `None` when no entry meets the deadline.
+    pub fn satisfier(&self, qos_ms: f64) -> Option<usize> {
+        let n = self.by_latency.partition_point(|&(lat, _)| lat <= qos_ms);
+        if n > 0 {
+            Some(self.prefix_best[n - 1])
+        } else {
+            None
+        }
+    }
+
+    /// The globally fastest entry (Algorithm 1's fallback), or `None` on
+    /// an empty set.
+    pub fn fastest(&self) -> Option<usize> {
+        self.by_latency.first().map(|&(_, pos)| pos)
+    }
+
+    /// Full Algorithm 1 in O(log n): satisfier if one exists, else the
+    /// fastest entry.  Agrees with [`select_pos`] on every input.
+    pub fn select(&self, qos_ms: f64) -> Option<usize> {
+        self.satisfier(qos_ms).or_else(|| self.fastest())
+    }
 }
 
 #[cfg(test)]
@@ -83,9 +181,9 @@ mod tests {
             entry(100.0, 60.0, 0.95), // fast but hungry
         ]);
         // QoS 500 ms: the frugal one satisfies it and wins.
-        assert_eq!(select(&e, 500.0).energy_j, 2.0);
+        assert_eq!(select(&e, 500.0).unwrap().energy_j, 2.0);
         // QoS 200 ms: only the fast one satisfies it.
-        assert_eq!(select(&e, 200.0).energy_j, 60.0);
+        assert_eq!(select(&e, 200.0).unwrap().energy_j, 60.0);
     }
 
     #[test]
@@ -96,20 +194,27 @@ mod tests {
             entry(300.0, 30.0, 0.95),
         ]);
         // QoS 50 ms: nothing satisfies it -> fastest (150 ms).
-        assert_eq!(select(&e, 50.0).latency_ms, 150.0);
+        assert_eq!(select(&e, 50.0).unwrap().latency_ms, 150.0);
     }
 
     #[test]
     fn single_entry_set() {
         let e = sorted(vec![entry(100.0, 1.0, 0.9)]);
-        assert_eq!(select(&e, 1.0).latency_ms, 100.0);
-        assert_eq!(select(&e, 1000.0).latency_ms, 100.0);
+        assert_eq!(select(&e, 1.0).unwrap().latency_ms, 100.0);
+        assert_eq!(select(&e, 1000.0).unwrap().latency_ms, 100.0);
     }
 
     #[test]
-    #[should_panic(expected = "empty configuration set")]
-    fn empty_set_panics() {
-        select(&[], 100.0);
+    fn empty_set_returns_none() {
+        // A drained Pareto store must degrade gracefully: the scheduler
+        // rejects the request instead of panicking.
+        assert!(select(&[], 100.0).is_none());
+        assert!(select_pos(&[], 100.0).is_none());
+        let idx = SelectIndex::build(&[]);
+        assert!(idx.is_empty());
+        assert!(idx.select(100.0).is_none());
+        assert!(idx.satisfier(100.0).is_none());
+        assert!(idx.fastest().is_none());
     }
 
     #[test]
@@ -125,7 +230,60 @@ mod tests {
         assert!(e[2].energy_j.is_nan(), "NaN energy sorts last");
         // selection over the poisoned set still terminates and returns a
         // QoS-satisfying entry when one exists
-        assert!(select(&e, 250.0).latency_ms <= 250.0);
+        assert!(select(&e, 250.0).unwrap().latency_ms <= 250.0);
+        // the index agrees even with a NaN *latency* in the set
+        let p = sorted(vec![entry(f64::NAN, 1.0, 0.9), entry(120.0, 2.0, 0.9)]);
+        let idx = SelectIndex::build(&p);
+        assert_eq!(idx.select(200.0), select_pos(&p, 200.0));
+        assert_eq!(idx.select(50.0), select_pos(&p, 50.0));
+    }
+
+    #[test]
+    fn index_matches_scan_on_crafted_ties() {
+        // Equal latencies and equal energies at once: the index must keep
+        // the scan's first-in-energy-order preference.
+        let e = sorted(vec![
+            entry(100.0, 5.0, 0.95),
+            entry(100.0, 5.0, 0.90),
+            entry(100.0, 2.0, 0.80),
+            entry(50.0, 9.0, 0.99),
+        ]);
+        let idx = SelectIndex::build(&e);
+        for qos in [10.0, 50.0, 99.0, 100.0, 101.0, 1e6] {
+            assert_eq!(idx.select(qos), select_pos(&e, qos), "qos {qos}");
+        }
+    }
+
+    #[test]
+    fn index_matches_scan_everywhere() {
+        forall("select index == scan", PropConfig::default(), |rng| {
+            let n = 1 + rng.below(50) as usize;
+            let entries: Vec<ParetoEntry> = (0..n)
+                .map(|_| {
+                    // coarse grids force plenty of exact ties
+                    entry(
+                        (rng.below(20) as f64 + 1.0) * 50.0,
+                        (rng.below(10) as f64 + 1.0) * 3.0,
+                        0.9 + rng.below(10) as f64 * 0.01,
+                    )
+                })
+                .collect();
+            let e = sorted(entries);
+            let idx = SelectIndex::build(&e);
+            for _ in 0..20 {
+                let qos = rng.uniform(10.0, 1500.0);
+                anyhow::ensure!(
+                    idx.select(qos) == select_pos(&e, qos),
+                    "index {:?} != scan {:?} at qos {qos}",
+                    idx.select(qos),
+                    select_pos(&e, qos)
+                );
+            }
+            // boundary QoS exactly on a latency value
+            let qos = e[rng.below(n as u64) as usize].latency_ms;
+            anyhow::ensure!(idx.select(qos) == select_pos(&e, qos), "boundary qos {qos}");
+            Ok(())
+        });
     }
 
     #[test]
@@ -143,7 +301,7 @@ mod tests {
                 .collect();
             let e = sorted(entries);
             let qos = rng.uniform(10.0, 6000.0);
-            let picked = select(&e, qos);
+            let picked = select(&e, qos).expect("non-empty set");
             let satisfiable: Vec<&ParetoEntry> =
                 e.iter().filter(|x| x.latency_ms <= qos).collect();
             if satisfiable.is_empty() {

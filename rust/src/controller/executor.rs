@@ -83,6 +83,35 @@ impl<'tb> Executor for SimExecutor<'tb> {
     }
 }
 
+/// Simulator executor whose outcome depends *only* on the `(request,
+/// config)` pair: each request replays its own seeded stream instead of
+/// drawing from a shared RNG.  This is the execution seam the serving
+/// pipeline's workers use — results are identical under any worker count
+/// or interleaving, which is the invariant the pipeline integration test
+/// asserts against a sequential Algorithm-1 baseline.
+pub struct PerRequestSimExecutor<'tb> {
+    pub testbed: &'tb Testbed,
+    /// RNG stream selector decorrelating execution noise from the
+    /// workload generator's own use of `request.seed`.
+    pub stream: u64,
+}
+
+impl Executor for PerRequestSimExecutor<'_> {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        let mut rng = Pcg32::new(request.seed, self.stream);
+        let t = self
+            .testbed
+            .run_trial_n(config, request.inferences.min(1000), &mut rng);
+        ExecOutcome {
+            latency_ms: t.latency_ms,
+            energy_j: t.energy_j,
+            edge_energy_j: t.edge_energy_j,
+            cloud_energy_j: t.cloud_energy_j,
+            accuracy: t.accuracy,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +161,33 @@ mod tests {
         let oa = a.execute(&request(7), &config());
         let ob = b.execute(&request(7), &config());
         assert_eq!(oa.latency_ms, ob.latency_ms);
+    }
+
+    #[test]
+    fn per_request_executor_is_order_independent() {
+        // Unlike Fresh (shared RNG stream), PerRequestSimExecutor must
+        // give the same outcome for a request no matter what ran before
+        // it — the property multi-worker serving relies on.
+        let tb = Testbed::synthetic();
+        let mut a = PerRequestSimExecutor { testbed: &tb, stream: 5 };
+        let first = a.execute(&request(7), &config());
+        // burn unrelated executions, then repeat
+        for s in 0..13 {
+            a.execute(&request(s), &config());
+        }
+        let again = a.execute(&request(7), &config());
+        assert_eq!(first.latency_ms, again.latency_ms);
+        assert_eq!(first.energy_j, again.energy_j);
+        assert_eq!(first.accuracy, again.accuracy);
+    }
+
+    #[test]
+    fn per_request_executor_stream_decorrelates() {
+        let tb = Testbed::synthetic();
+        let mut a = PerRequestSimExecutor { testbed: &tb, stream: 5 };
+        let mut b = PerRequestSimExecutor { testbed: &tb, stream: 6 };
+        let oa = a.execute(&request(7), &config());
+        let ob = b.execute(&request(7), &config());
+        assert_ne!(oa.latency_ms, ob.latency_ms);
     }
 }

@@ -1,15 +1,18 @@
 //! The DynaSplit *Controller* — the Online Phase (§4.3).
 //!
 //! On startup it loads and sorts the non-dominated configuration set
-//! produced by the Solver; per request it (i) selects the most
-//! energy-efficient configuration meeting the QoS ([`algorithm1`]),
-//! (ii) applies it ([`apply`] — DVFS, TPU power, model loading, cloud
-//! init), and (iii) executes the inference ([`executor`]), recording the
-//! §6.2.2 metrics plus its own overheads (Fig. 15).
+//! produced by the Solver; per request it (i) selects a configuration
+//! through a pluggable [`policy`] (the paper's Algorithm 1 by default,
+//! see [`algorithm1`]), (ii) applies it ([`apply`] — DVFS, TPU power,
+//! model loading, cloud init), and (iii) executes the inference
+//! ([`executor`]), recording the §6.2.2 metrics plus its own overheads
+//! (Fig. 15).  The concurrent multi-worker serving path lives in
+//! [`crate::serve`] and shares the same policy / apply / executor seams.
 
 pub mod algorithm1;
 pub mod apply;
 pub mod executor;
+pub mod policy;
 pub mod real;
 
 use std::time::Instant;
@@ -19,7 +22,11 @@ use crate::solver::ParetoEntry;
 use crate::util::rng::Pcg32;
 use crate::workload::Request;
 
-pub use executor::{ExecOutcome, Executor, SimExecutor};
+pub use executor::{ExecOutcome, Executor, PerRequestSimExecutor, SimExecutor};
+pub use policy::{
+    ConfigSet, EnergyBudgetPolicy, PaperPolicy, PolicyDecision, SchedulingPolicy,
+    StrictDeadlinePolicy,
+};
 
 /// Startup statistics (Fig. 15 / §6.5 "loads and sorts ... only once").
 #[derive(Debug, Clone, Copy)]
@@ -28,25 +35,37 @@ pub struct StartupStats {
     pub config_count: usize,
 }
 
-/// The online-phase controller.
+/// The online-phase controller (sequential reference path).
 pub struct Controller {
-    /// Non-dominated set, sorted by (energy asc, accuracy desc).
-    entries: Vec<ParetoEntry>,
+    /// Non-dominated set, sorted + indexed at startup.
+    set: ConfigSet,
+    policy: Box<dyn SchedulingPolicy>,
     applier: apply::Applier,
     rng: Pcg32,
     pub startup: StartupStats,
 }
 
 impl Controller {
-    /// Startup: sort the non-dominated set once and keep it in memory.
-    pub fn new(mut entries: Vec<ParetoEntry>, seed: u64) -> Controller {
+    /// Startup with the paper's Algorithm-1 policy.
+    pub fn new(entries: Vec<ParetoEntry>, seed: u64) -> Controller {
+        Controller::with_policy(entries, seed, Box::new(PaperPolicy))
+    }
+
+    /// Startup: sort + index the non-dominated set once, keep it in
+    /// memory, and schedule with `policy`.
+    pub fn with_policy(
+        entries: Vec<ParetoEntry>,
+        seed: u64,
+        policy: Box<dyn SchedulingPolicy>,
+    ) -> Controller {
         assert!(!entries.is_empty(), "controller needs a non-empty configuration set");
         let t0 = Instant::now();
-        algorithm1::sort_config_set(&mut entries);
+        let set = ConfigSet::new(entries);
         let load_sort_ms = t0.elapsed().as_secs_f64() * 1000.0;
-        let config_count = entries.len();
+        let config_count = set.len();
         Controller {
-            entries,
+            set,
+            policy,
             applier: apply::Applier::default(),
             rng: Pcg32::new(seed, 7),
             startup: StartupStats { load_sort_ms, config_count },
@@ -54,15 +73,25 @@ impl Controller {
     }
 
     pub fn config_set(&self) -> &[ParetoEntry] {
-        &self.entries
+        self.set.entries()
     }
 
-    /// Handle one request end to end; returns the §6.2.2 record.
-    pub fn handle<E: Executor>(&mut self, request: &Request, executor: &mut E) -> RequestRecord {
+    /// Handle one request end to end; `None` when the policy rejects it
+    /// (the paper policy never rejects on the non-empty set enforced at
+    /// construction).
+    pub fn handle<E: Executor>(
+        &mut self,
+        request: &Request,
+        executor: &mut E,
+    ) -> Option<RequestRecord> {
         // (i) select — measured for Fig. 15a
         let t0 = Instant::now();
-        let entry = algorithm1::select(&self.entries, request.qos_ms).clone();
+        let decision = self.policy.decide(&self.set, request.qos_ms);
         let select_overhead_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let entry = match decision {
+            PolicyDecision::Run(i) => self.set.entries()[i].clone(),
+            PolicyDecision::Reject => return None,
+        };
 
         // (ii) apply — modeled overhead (Fig. 15b)
         let apply_overhead_ms = self.applier.apply(&entry.config, &mut self.rng);
@@ -70,7 +99,7 @@ impl Controller {
         // (iii) execute
         let outcome = executor.execute(request, &entry.config);
 
-        RequestRecord {
+        Some(RequestRecord {
             request_id: request.id,
             qos_ms: request.qos_ms,
             config: entry.config,
@@ -81,17 +110,22 @@ impl Controller {
             accuracy: outcome.accuracy,
             select_overhead_ms,
             apply_overhead_ms,
-        }
+        })
     }
 
-    /// Serve a whole workload; returns the aggregated metric set.
+    /// Serve a whole workload; returns the aggregated metric set over the
+    /// admitted requests (policy rejections are dropped — the serving
+    /// pipeline in [`crate::serve`] accounts them explicitly).
     pub fn serve<E: Executor>(
         &mut self,
         requests: &[Request],
         executor: &mut E,
         strategy_name: &str,
     ) -> MetricSet {
-        let records = requests.iter().map(|r| self.handle(r, executor)).collect();
+        let records = requests
+            .iter()
+            .filter_map(|r| self.handle(r, executor))
+            .collect();
         MetricSet::new(strategy_name, records)
     }
 }
@@ -188,6 +222,30 @@ mod tests {
         let set = controller.config_set();
         assert!(set.windows(2).all(|w| w[0].energy_j <= w[1].energy_j));
         assert_eq!(controller.startup.config_count, set.len());
+    }
+
+    #[test]
+    fn strict_policy_controller_drops_unsatisfiable_requests() {
+        let entries = pareto();
+        let min_lat = entries
+            .iter()
+            .map(|e| e.latency_ms)
+            .fold(f64::INFINITY, f64::min);
+        let tb = Testbed::synthetic();
+        let mut c = Controller::with_policy(entries, 3, Box::new(StrictDeadlinePolicy));
+        let mut ex = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(4) };
+        // a deadline below every configuration's latency: rejected
+        let hopeless = crate::workload::Request {
+            id: 0,
+            net: Network::Vgg16,
+            qos_ms: min_lat / 10.0,
+            inferences: 20,
+            seed: 1,
+        };
+        assert!(c.handle(&hopeless, &mut ex).is_none());
+        // a lenient deadline: admitted
+        let easy = crate::workload::Request { qos_ms: 1e6, ..hopeless };
+        assert!(c.handle(&easy, &mut ex).is_some());
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Pluggable scheduling policies for the online phase.
+//!
+//! Extracted from Algorithm 1 so the controller and the serving pipeline
+//! *select* a policy instead of hard-coding one:
+//!
+//! | policy | satisfiable QoS | unsatisfiable QoS |
+//! |--------|-----------------|-------------------|
+//! | [`PaperPolicy`] | most energy-efficient satisfier | fastest config (admit, minimize violation) |
+//! | [`StrictDeadlinePolicy`] | most energy-efficient satisfier | **reject** (reject-over-admit) |
+//! | [`EnergyBudgetPolicy`] | cheapest satisfier under the cap | fastest config under the cap; reject when nothing fits the cap |
+//!
+//! Policies are pure functions of `(configuration set, QoS)` — they carry
+//! no mutable state — so the serving pipeline's workers can share one
+//! policy instance across threads, and any interleaving of requests
+//! yields the same per-request decision as a sequential run.
+
+use super::algorithm1::{self, SelectIndex};
+use crate::solver::ParetoEntry;
+
+/// The non-dominated configuration set in the controller's working form:
+/// sorted by (energy asc, accuracy desc) with the O(log n)
+/// [`SelectIndex`] built once at startup.
+#[derive(Debug, Clone)]
+pub struct ConfigSet {
+    entries: Vec<ParetoEntry>,
+    index: SelectIndex,
+}
+
+impl ConfigSet {
+    /// Sort the entries per §4.3.1 and build the selection index.
+    /// An empty set is allowed: every policy then rejects, which is the
+    /// graceful degradation the scheduler wants from a drained store.
+    pub fn new(mut entries: Vec<ParetoEntry>) -> ConfigSet {
+        algorithm1::sort_config_set(&mut entries);
+        let index = SelectIndex::build(&entries);
+        ConfigSet { entries, index }
+    }
+
+    /// Entries in (energy asc, accuracy desc) order.
+    pub fn entries(&self) -> &[ParetoEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Algorithm 1 (satisfier, else fastest) in O(log n).
+    pub fn select_paper(&self, qos_ms: f64) -> Option<usize> {
+        self.index.select(qos_ms)
+    }
+
+    /// Most energy-efficient entry meeting the deadline, or `None` when
+    /// the deadline is unsatisfiable.
+    pub fn best_satisfier(&self, qos_ms: f64) -> Option<usize> {
+        self.index.satisfier(qos_ms)
+    }
+
+    /// Length of the prefix whose energy is within `budget_j` (entries
+    /// are energy-sorted, so the under-budget entries are exactly a
+    /// prefix; NaN energies sort last and never pass the cap).
+    pub fn under_budget_len(&self, budget_j: f64) -> usize {
+        self.entries.partition_point(|e| e.energy_j <= budget_j)
+    }
+}
+
+/// Outcome of a scheduling decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyDecision {
+    /// Run the request under `entries()[index]`.
+    Run(usize),
+    /// Do not run the request (unsatisfiable deadline under a strict
+    /// policy, energy cap exceeded, or an empty configuration set).
+    Reject,
+}
+
+/// A scheduling policy: maps a request's QoS level to a configuration
+/// (or a rejection).  `Sync` so one instance serves all pipeline workers.
+pub trait SchedulingPolicy: Sync {
+    fn name(&self) -> &'static str;
+    fn decide(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision;
+}
+
+/// The paper's Algorithm 1: always admits (fastest-config fallback
+/// minimizes the violation when the deadline is unsatisfiable).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PaperPolicy;
+
+impl SchedulingPolicy for PaperPolicy {
+    fn name(&self) -> &'static str {
+        "paper"
+    }
+
+    fn decide(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
+        match set.select_paper(qos_ms) {
+            Some(i) => PolicyDecision::Run(i),
+            None => PolicyDecision::Reject,
+        }
+    }
+}
+
+/// Reject-over-admit: a request whose deadline no configuration can meet
+/// is rejected up front instead of being served late — the behaviour a
+/// latency-SLO deployment wants (a guaranteed-late answer only wastes
+/// energy and worker time).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrictDeadlinePolicy;
+
+impl SchedulingPolicy for StrictDeadlinePolicy {
+    fn name(&self) -> &'static str {
+        "strict"
+    }
+
+    fn decide(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
+        match set.best_satisfier(qos_ms) {
+            Some(i) => PolicyDecision::Run(i),
+            None => PolicyDecision::Reject,
+        }
+    }
+}
+
+/// Hard per-request energy cap: Algorithm 1 restricted to the
+/// under-budget prefix of the energy-sorted set.  The deadline stays
+/// soft inside the cap (paper-style fastest-under-cap fallback), but a
+/// request that cannot be served within the cap at all is rejected.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyBudgetPolicy {
+    /// Maximum predicted energy per request (J).
+    pub budget_j: f64,
+}
+
+impl SchedulingPolicy for EnergyBudgetPolicy {
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+
+    fn decide(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
+        let m = set.under_budget_len(self.budget_j);
+        if m == 0 {
+            return PolicyDecision::Reject;
+        }
+        // O(log n) fast path: the global best satisfier has the lowest
+        // energy-sort position of all satisfiers, so when it sits inside
+        // the under-budget prefix it is also the best *capped* satisfier;
+        // when it does not, no satisfier is under the cap at all.
+        if let Some(i) = set.best_satisfier(qos_ms) {
+            if i < m {
+                return PolicyDecision::Run(i);
+            }
+        }
+        // rare path (no satisfier under the cap): fastest capped entry
+        // minimizes the violation — O(m) scan over the prefix.
+        match algorithm1::select_pos(&set.entries()[..m], qos_ms) {
+            Some(i) => PolicyDecision::Run(i),
+            None => PolicyDecision::Reject,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Config as PropConfig};
+    use crate::space::{Config, Network, TpuMode};
+
+    fn entry(latency: f64, energy: f64, accuracy: f64) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: false,
+                split: 22,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy,
+        }
+    }
+
+    fn set3() -> ConfigSet {
+        ConfigSet::new(vec![
+            entry(400.0, 2.0, 0.95), // frugal, slow
+            entry(200.0, 10.0, 0.95),
+            entry(100.0, 60.0, 0.95), // fast, hungry
+        ])
+    }
+
+    #[test]
+    fn paper_policy_matches_algorithm1() {
+        forall("paper policy == algorithm 1", PropConfig::default(), |rng| {
+            let n = 1 + rng.below(30) as usize;
+            let entries: Vec<ParetoEntry> = (0..n)
+                .map(|_| {
+                    entry(
+                        rng.uniform(50.0, 5000.0),
+                        rng.uniform(1.0, 100.0),
+                        rng.uniform(0.9, 1.0),
+                    )
+                })
+                .collect();
+            let set = ConfigSet::new(entries);
+            let qos = rng.uniform(10.0, 6000.0);
+            let want = algorithm1::select_pos(set.entries(), qos)
+                .map(PolicyDecision::Run)
+                .unwrap_or(PolicyDecision::Reject);
+            anyhow::ensure!(PaperPolicy.decide(&set, qos) == want);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strict_matches_paper_when_satisfiable_rejects_otherwise() {
+        let set = set3();
+        // satisfiable: same pick as the paper policy
+        assert_eq!(
+            StrictDeadlinePolicy.decide(&set, 450.0),
+            PaperPolicy.decide(&set, 450.0)
+        );
+        assert_eq!(
+            StrictDeadlinePolicy.decide(&set, 150.0),
+            PaperPolicy.decide(&set, 150.0)
+        );
+        // unsatisfiable: paper admits the fastest, strict rejects
+        assert!(matches!(PaperPolicy.decide(&set, 50.0), PolicyDecision::Run(_)));
+        assert_eq!(StrictDeadlinePolicy.decide(&set, 50.0), PolicyDecision::Reject);
+    }
+
+    #[test]
+    fn budget_policy_never_exceeds_cap() {
+        let set = set3();
+        let policy = EnergyBudgetPolicy { budget_j: 15.0 };
+        for qos in [50.0, 150.0, 250.0, 450.0, 1e4] {
+            match policy.decide(&set, qos) {
+                PolicyDecision::Run(i) => {
+                    assert!(set.entries()[i].energy_j <= 15.0, "qos {qos}");
+                }
+                PolicyDecision::Reject => {}
+            }
+        }
+        // under the cap, satisfiable deadlines pick the frugal satisfier
+        assert_eq!(policy.decide(&set, 450.0), PolicyDecision::Run(0));
+        // under the cap, unsatisfiable deadlines fall back to the fastest
+        // *capped* entry (200 ms / 10 J), not the 60 J speed demon
+        match policy.decide(&set, 50.0) {
+            PolicyDecision::Run(i) => assert_eq!(set.entries()[i].energy_j, 10.0),
+            PolicyDecision::Reject => panic!("should admit under-cap fallback"),
+        }
+        // cap below every entry: reject
+        let tight = EnergyBudgetPolicy { budget_j: 1.0 };
+        assert_eq!(tight.decide(&set, 1e6), PolicyDecision::Reject);
+    }
+
+    #[test]
+    fn empty_set_rejects_under_every_policy() {
+        let set = ConfigSet::new(Vec::new());
+        assert!(set.is_empty());
+        assert_eq!(set.len(), 0);
+        assert_eq!(PaperPolicy.decide(&set, 100.0), PolicyDecision::Reject);
+        assert_eq!(StrictDeadlinePolicy.decide(&set, 100.0), PolicyDecision::Reject);
+        let b = EnergyBudgetPolicy { budget_j: 100.0 };
+        assert_eq!(b.decide(&set, 100.0), PolicyDecision::Reject);
+    }
+
+    #[test]
+    fn under_budget_len_is_energy_prefix() {
+        let set = set3();
+        assert_eq!(set.under_budget_len(0.5), 0);
+        assert_eq!(set.under_budget_len(2.0), 1);
+        assert_eq!(set.under_budget_len(30.0), 2);
+        assert_eq!(set.under_budget_len(1e9), 3);
+    }
+}

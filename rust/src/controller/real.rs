@@ -9,6 +9,12 @@
 //! Wall-clock is measured, energy is modeled from the measured segment
 //! durations × the calibrated power model (we have no physical meters).
 //!
+//! Cross-request reuse mirrors the serving pipeline's config-reuse
+//! cache: the per-config execution session comes from a
+//! [`SessionCache`], and the transport stream is a [`StreamSession`]
+//! that re-announces metadata only when the configuration changes (§5's
+//! metadata-once semantics).
+//!
 //! Figures are reproduced with the simulator (same cost model at the
 //! paper's hardware scale); this executor is used by `examples/quickstart`
 //! and the runtime integration tests to validate the compute path itself.
@@ -20,12 +26,14 @@ use anyhow::{Context, Result};
 use super::executor::{ExecOutcome, Executor};
 use crate::model::manifest::Manifest;
 use crate::runtime::network::spawn_cloud_node;
+use crate::runtime::session::SessionCache;
 use crate::runtime::{default_backend, NetworkRuntime};
 use crate::simulator::power::{cloud_power, edge_power, EdgeState};
-use crate::space::{Config, Network, TpuMode};
-use crate::transport::channel::{duplex, Endpoint, LinkShaping};
+use crate::space::{Config, Network};
+use crate::transport::channel::{duplex, LinkShaping};
 use crate::transport::cloud::ServeStats;
-use crate::transport::frame::{Frame, StreamMeta};
+use crate::transport::frame::StreamMeta;
+use crate::transport::session::StreamSession;
 use crate::workload::Request;
 
 const RECV_TIMEOUT: Duration = Duration::from_secs(60);
@@ -34,10 +42,11 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(60);
 pub struct RealSplitExecutor {
     vgg: NetworkRuntime,
     vit: NetworkRuntime,
-    endpoint: Endpoint,
+    /// Announce-once transport stream to the cloud node.
+    stream: StreamSession,
     cloud: Option<std::thread::JoinHandle<Result<ServeStats>>>,
-    /// Stream state: (net, split, gpu) last announced to the cloud.
-    announced: Option<(Network, usize, bool)>,
+    /// Per-config execution sessions (head range + quantization).
+    sessions: SessionCache,
     // real eval data served as request payloads
     images: Vec<f32>,
     labels: Vec<u8>,
@@ -65,9 +74,9 @@ impl RealSplitExecutor {
         Ok(RealSplitExecutor {
             vgg,
             vit,
-            endpoint: edge_ep,
+            stream: StreamSession::new(edge_ep),
             cloud: Some(cloud),
-            announced: None,
+            sessions: SessionCache::new(),
             images,
             labels,
             batch: manifest.batch,
@@ -83,11 +92,15 @@ impl RealSplitExecutor {
         })
     }
 
-    fn runtime(&self, net: Network) -> &NetworkRuntime {
-        match net {
-            Network::Vgg16 => &self.vgg,
-            Network::Vit => &self.vit,
-        }
+    /// Stream/session reuse counters: (streams opened, streams reused,
+    /// session cache hits, session cache misses).
+    pub fn reuse_stats(&self) -> (usize, usize, usize, usize) {
+        (
+            self.stream.reopens,
+            self.stream.reuses,
+            self.sessions.hits,
+            self.sessions.misses,
+        )
     }
 
     fn next_batch(&mut self) -> (Vec<f32>, Vec<u8>) {
@@ -105,31 +118,33 @@ impl RealSplitExecutor {
         let (x, y) = self.next_batch();
         let net = config.net;
         let k = config.split;
-        let tpu_on = config.tpu != TpuMode::Off;
+
+        // --- resolve (or reuse) the per-config execution session ---
+        let runtime = match net {
+            Network::Vgg16 => &self.vgg,
+            Network::Vit => &self.vit,
+        };
+        let plan = self.sessions.plan(runtime, config)?;
 
         // --- edge head (real backend execution) ---
         let t0 = Instant::now();
-        let head_out = self.runtime(net).run_head(k, tpu_on, &x)?;
+        let head_out = runtime.run_head(plan.split, plan.quantized, &x)?;
         let edge_s = t0.elapsed().as_secs_f64();
 
         // --- cloud tail over the transport (real tensors) ---
         let (probs, round_s, cloud_est_s) = if config.is_edge_only() {
             (head_out, 0.0, 0.0)
         } else {
-            let announce = (net, k, config.gpu);
-            if self.announced != Some(announce) {
-                // new logical stream: metadata sent once (§5)
-                self.endpoint.send(&Frame::meta(&StreamMeta {
-                    network: net.name().to_string(),
-                    split: k as u32,
-                    gpu: config.gpu,
-                    tensor_len: head_out.len() as u64,
-                }))?;
-                self.announced = Some(announce);
-            }
+            // metadata sent once per logical stream (§5); a same-config
+            // request reuses the open stream
+            self.stream.ensure(&StreamMeta {
+                network: net.name().to_string(),
+                split: k as u32,
+                gpu: config.gpu,
+                tensor_len: head_out.len() as u64,
+            })?;
             let t1 = Instant::now();
-            self.endpoint.send(&Frame::tensor(&head_out))?;
-            let result = self.endpoint.recv(RECV_TIMEOUT)?;
+            let result = self.stream.exchange(&head_out, RECV_TIMEOUT)?;
             let round_s = t1.elapsed().as_secs_f64();
             let sim = match net {
                 Network::Vgg16 => &self.sim_vgg,
@@ -137,7 +152,7 @@ impl RealSplitExecutor {
             };
             // estimated cloud-compute share of the measured round trip
             let cloud_est_s = sim.latency(config).cloud_s.min(round_s);
-            (result.tensor_f32()?, round_s, cloud_est_s)
+            (result, round_s, cloud_est_s)
         };
 
         // --- accuracy over the real batch ---
@@ -145,7 +160,7 @@ impl RealSplitExecutor {
         let hits = preds.iter().zip(&y).filter(|(p, l)| **p == **l as usize).count();
 
         // --- energy: measured durations x calibrated power model ---
-        let busy = if tpu_on { EdgeState::TpuBusy } else { EdgeState::CpuBusy };
+        let busy = if plan.quantized { EdgeState::TpuBusy } else { EdgeState::CpuBusy };
         let edge_energy = edge_power(busy, config) * edge_s
             + edge_power(EdgeState::Idle, config) * round_s;
         let cloud_energy = cloud_power(config) * cloud_est_s;
@@ -162,7 +177,7 @@ impl RealSplitExecutor {
 
     /// Graceful shutdown of the cloud thread.
     pub fn shutdown(mut self) -> Result<ServeStats> {
-        self.endpoint.send(&Frame::shutdown())?;
+        self.stream.shutdown()?;
         match self.cloud.take() {
             Some(h) => h.join().map_err(|_| anyhow::anyhow!("cloud thread panicked"))?,
             None => Ok(ServeStats::default()),

@@ -172,7 +172,9 @@ impl ClusteredController {
             .iter()
             .map(|req| {
                 let floor = self.bucket_floor(req.qos_ms);
-                let optimal = algorithm1::select(&self.entries, floor).clone();
+                let optimal = algorithm1::select(&self.entries, floor)
+                    .expect("non-empty configuration set")
+                    .clone();
                 // hysteresis: stick with the current config when it still
                 // satisfies the *request* and is not wasting > slack
                 // energy vs the bucket-optimal choice

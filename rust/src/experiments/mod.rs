@@ -11,12 +11,14 @@
 //! | [`ablation`]  | Fig. 10 (20% vs ~80% search)         |
 //! | [`simulation`]| Fig. 11–14 (10,000 requests)         |
 //! | [`overhead`]  | Fig. 15 (controller overhead)        |
+//! | [`serving`]   | beyond-paper: serving-pipeline throughput (policies × workers × cache) |
 
 pub mod ablation;
 pub mod extensions;
 pub mod bounds;
 pub mod overhead;
 pub mod prelim;
+pub mod serving;
 pub mod simulation;
 pub mod small_models;
 pub mod testbed_exp;

@@ -1,0 +1,200 @@
+//! Serving-pipeline throughput experiment (beyond-paper; ROADMAP
+//! "production-scale serving" north star).
+//!
+//! Sweeps the three scheduling policies × worker counts over one bursty
+//! open-loop workload and reports the serving headline numbers: QoS
+//! hit-rate, p50/p99 latency, energy per request, reconfigurations
+//! (and how many the config-reuse cache avoided), and throughput.  A
+//! final cache-off row under the paper policy isolates what config
+//! reuse buys.
+
+use crate::controller::{
+    EnergyBudgetPolicy, PaperPolicy, PerRequestSimExecutor, SchedulingPolicy,
+    StrictDeadlinePolicy,
+};
+use crate::controller::policy::ConfigSet;
+use crate::serve::{run_pipeline, PipelineConfig, ServeReport};
+use crate::solver::{Solver, Strategy};
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+use crate::util::table::Table;
+use crate::workload::{timeline, ArrivalProcess, TimedRequest, WorkloadGen};
+
+use super::Ctx;
+
+/// One pipeline run under a (policy, workers, cache) combination.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub policy: &'static str,
+    pub workers: usize,
+    pub reuse: bool,
+    pub report: ServeReport,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServingExperiment {
+    pub net: Network,
+    pub requests: usize,
+    pub rows: Vec<Row>,
+}
+
+/// Executor stream selector shared by every run: outcomes must depend
+/// only on the request so rows are comparable across worker counts.
+const EXEC_STREAM: u64 = 7001;
+
+pub fn run(ctx: &Ctx, net: Network, requests: usize, seed: u64) -> ServingExperiment {
+    // offline phase: a paper-sized 20%-budget search
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = 60;
+    let pareto = solver.run(Strategy::NsgaIII, 120, seed).pareto;
+    let budget_j = stats::median(&pareto.iter().map(|e| e.energy_j).collect::<Vec<_>>());
+    let set = ConfigSet::new(pareto);
+
+    // one shared bursty workload (flash crowds stress the queue)
+    let mut gen = WorkloadGen::paper(net);
+    gen.inferences_per_request = 200;
+    let mut rng = Pcg32::new(seed, 141);
+    let process =
+        ArrivalProcess::Bursty { base_rate_per_s: 100.0, period_s: 1.0, burst_size: 20 };
+    let tl: Vec<TimedRequest> = timeline(&gen, &process, requests, &mut rng);
+
+    let paper = PaperPolicy;
+    let strict = StrictDeadlinePolicy;
+    let budget = EnergyBudgetPolicy { budget_j };
+    let policies: [(&'static str, &dyn SchedulingPolicy); 3] =
+        [("paper", &paper), ("strict", &strict), ("budget", &budget)];
+
+    let mut rows = Vec::new();
+    let mut launch = |policy_name: &'static str,
+                      policy: &dyn SchedulingPolicy,
+                      workers: usize,
+                      reuse: bool| {
+        let cfg = PipelineConfig {
+            workers,
+            queue_capacity: requests.max(64),
+            max_batch: 4,
+            time_scale: 0.0,
+            seed,
+            reuse,
+        };
+        let report = run_pipeline(&set, policy, &tl, &cfg, |_| {
+            Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: EXEC_STREAM })
+        })
+        .expect("serving pipeline run");
+        rows.push(Row { policy: policy_name, workers, reuse, report });
+    };
+    for (name, policy) in policies {
+        for workers in [1, 2, 4] {
+            launch(name, policy, workers, true);
+        }
+    }
+    // cache-off baseline: what does config reuse buy?
+    launch("paper", &paper, 2, false);
+
+    ServingExperiment { net, requests, rows }
+}
+
+pub fn print_report(exp: &ServingExperiment) {
+    println!(
+        "\n== serving pipeline throughput — {} ({} requests, bursty open-loop) ==",
+        exp.net.name(),
+        exp.requests
+    );
+    let mut t = Table::new([
+        "policy", "workers", "cache", "done", "shed", "rejected", "QoS hit", "p50", "p99",
+        "J/req", "reconfigs", "avoided",
+    ]);
+    for row in &exp.rows {
+        let r = &row.report;
+        t.row([
+            row.policy.to_string(),
+            row.workers.to_string(),
+            if row.reuse { "on" } else { "off" }.to_string(),
+            r.completed().to_string(),
+            r.rejected_queue_full().to_string(),
+            r.rejected_by_policy().to_string(),
+            format!("{:.0}%", r.qos_hit_rate() * 100.0),
+            format!("{:.0} ms", r.latency_p50()),
+            format!("{:.0} ms", r.latency_p99()),
+            format!("{:.2}", r.mean_energy_j()),
+            r.cache.reconfigs.to_string(),
+            r.cache.hits.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "per-request results are worker-count invariant (order-independent executors); \
+         the cache-off row shows every request paying reconfiguration."
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn experiment() -> ServingExperiment {
+        run(&Ctx::synthetic(), Network::Vgg16, 60, 17)
+    }
+
+    #[test]
+    fn sweep_covers_policies_workers_and_cache_baseline() {
+        let exp = experiment();
+        assert_eq!(exp.rows.len(), 10, "3 policies x 3 worker counts + cache-off");
+        for row in &exp.rows {
+            assert_eq!(row.report.records.len(), 60, "{}: every request accounted", row.policy);
+        }
+        // the paper policy admits everything (queue sized to the workload)
+        for row in exp.rows.iter().filter(|r| r.policy == "paper") {
+            assert_eq!(row.report.completed(), 60);
+        }
+    }
+
+    #[test]
+    fn paper_rows_agree_across_worker_counts() {
+        let exp = experiment();
+        let paper: Vec<&Row> = exp
+            .rows
+            .iter()
+            .filter(|r| r.policy == "paper" && r.reuse)
+            .collect();
+        assert_eq!(paper.len(), 3);
+        // identical per-request outcomes -> identical energy and QoS rate
+        let e0 = paper[0].report.mean_energy_j();
+        let q0 = paper[0].report.qos_hit_rate();
+        for row in &paper[1..] {
+            assert_eq!(row.report.mean_energy_j(), e0);
+            assert_eq!(row.report.qos_hit_rate(), q0);
+        }
+    }
+
+    #[test]
+    fn cache_accounting_identities_hold() {
+        let exp = experiment();
+        // every activation is either a reconfiguration or an avoided one,
+        // and exactly one activation leads each coalesced batch
+        for row in &exp.rows {
+            let batches = row.report.completed() - row.report.coalesced();
+            assert_eq!(
+                row.report.cache.reconfigs + row.report.cache.hits,
+                batches,
+                "{} w{} cache {}",
+                row.policy,
+                row.workers,
+                row.reuse
+            );
+        }
+        // cache off: every batch pays a reconfiguration, nothing avoided
+        let off = exp.rows.iter().find(|r| !r.reuse).expect("cache-off row");
+        assert_eq!(off.report.cache.hits, 0);
+        assert_eq!(
+            off.report.cache.reconfigs,
+            off.report.completed() - off.report.coalesced()
+        );
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&experiment());
+    }
+}

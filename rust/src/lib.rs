@@ -8,9 +8,11 @@
 //!   (`python/compile/model.py`), AOT-lowered layer-by-layer to HLO text
 //!   by `python/compile/aot.py` into `artifacts/`.
 //! * **L3** — this crate: the DynaSplit *Solver* (offline NSGA-III search
-//!   over the hardware/software configuration space) and *Controller*
+//!   over the hardware/software configuration space), *Controller*
 //!   (online Algorithm-1 scheduling, configuration application, split
-//!   execution over an edge↔cloud streaming transport), plus every
+//!   execution over an edge↔cloud streaming transport), the concurrent
+//!   *serving pipeline* ([`serve`]: bounded admission queue, pluggable
+//!   scheduling policies, config-reuse caching workers), plus every
 //!   substrate the paper's testbed provided physically (DVFS'd edge CPU,
 //!   Coral-style TPU, V100-style cloud GPU, power meters, network link) as
 //!   a calibrated simulator.
@@ -37,6 +39,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod solver;
 pub mod controller;
+pub mod serve;
 pub mod experiments;
 pub mod report; // (modules filled in build order; see DESIGN.md §7)
 

@@ -6,7 +6,8 @@
 //! ```text
 //! dynasplit space                      print Table-1 configuration spaces
 //! dynasplit solve     [--net --trials --strategy --seed --out]
-//! dynasplit serve     [--net --requests --seed]          online phase (sim)
+//! dynasplit serve     [--net --requests --workers --policy --rate ...]
+//! dynasplit throughput [--net --requests]   serving-pipeline experiment
 //! dynasplit prelim                     Fig. 2a-e
 //! dynasplit bounds                     Table 2
 //! dynasplit workload                   Fig. 5
@@ -22,16 +23,20 @@
 
 use anyhow::{bail, Result};
 
-use dynasplit::controller::{Controller, SimExecutor};
+use dynasplit::controller::{
+    ConfigSet, EnergyBudgetPolicy, PaperPolicy, PerRequestSimExecutor, SchedulingPolicy,
+    StrictDeadlinePolicy,
+};
 use dynasplit::experiments::{self, Ctx};
 use dynasplit::model::Manifest;
 use dynasplit::runtime::InferenceBackend;
+use dynasplit::serve::{run_pipeline, PipelineConfig};
 use dynasplit::solver::{Solver, SolverOutput, Strategy};
 use dynasplit::space::{Network, Space};
 use dynasplit::util::cli::ArgSpec;
 use dynasplit::util::rng::Pcg32;
 use dynasplit::util::table::Table;
-use dynasplit::workload::WorkloadGen;
+use dynasplit::workload::{ArrivalProcess, WorkloadGen};
 
 fn main() {
     if let Err(e) = run() {
@@ -54,6 +59,7 @@ fn run() -> Result<()> {
         "space" => cmd_space(),
         "solve" => cmd_solve(),
         "serve" => cmd_serve(),
+        "throughput" => cmd_throughput(),
         "prelim" => cmd_prelim(),
         "bounds" => cmd_bounds(),
         "workload" => cmd_workload(),
@@ -78,7 +84,8 @@ const HELP: &str = "dynasplit — energy-aware split inference (paper reproducti
 subcommands:
   space          print the Table-1 configuration spaces
   solve          offline phase: search the space, save the pareto set
-  serve          online phase over a simulated workload
+  serve          online phase: concurrent serving pipeline (queue, policies, cache)
+  throughput     serving-pipeline throughput experiment (policies x workers x cache)
   prelim         Fig. 2a-e preliminary study
   bounds         Table 2 latency bounds
   workload       Fig. 5 QoS distributions
@@ -158,9 +165,17 @@ fn cmd_solve() -> Result<()> {
 }
 
 fn cmd_serve() -> Result<()> {
-    let a = spec("serve", "online phase over a simulated workload")
+    let a = spec("serve", "online phase: concurrent serving pipeline (simulated workload)")
         .opt("net", "vgg16", "network (vgg16|vit)")
-        .opt("requests", "50", "number of requests")
+        .opt("requests", "200", "number of requests")
+        .opt("workers", "2", "serving workers (each owns an executor + config cache)")
+        .opt("policy", "paper", "scheduling policy (paper|strict|budget)")
+        .opt("budget", "20", "per-request energy cap in J (only --policy budget)")
+        .opt("rate", "100", "mean arrival rate (requests/s)")
+        .opt("burst", "0", "burst size (0 = pure Poisson arrivals)")
+        .opt("queue", "256", "admission queue capacity")
+        .opt("coalesce", "4", "max same-config requests coalesced per activation")
+        .flag("no-reuse", "disable the config-reuse cache (reconfigure every batch)")
         .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh 20% search)")
         .parse_env(2)?;
     let net = Network::parse(a.str("net")?)?;
@@ -174,30 +189,69 @@ fn cmd_serve() -> Result<()> {
             solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto
         }
     };
-    let mut controller = Controller::new(pareto, seed);
+    let t0 = std::time::Instant::now();
+    let set = ConfigSet::new(pareto);
     println!(
-        "[serve] startup: sorted {} configs in {:.3} ms",
-        controller.startup.config_count, controller.startup.load_sort_ms
+        "[serve] startup: sorted + indexed {} configs in {:.3} ms",
+        set.len(),
+        t0.elapsed().as_secs_f64() * 1000.0
     );
+    let policy: Box<dyn SchedulingPolicy> = match a.str("policy")? {
+        "paper" => Box::new(PaperPolicy),
+        "strict" => Box::new(StrictDeadlinePolicy),
+        "budget" => Box::new(EnergyBudgetPolicy { budget_j: a.f64("budget")? }),
+        other => bail!("unknown policy {other:?} (expected paper|strict|budget)"),
+    };
     let gen = WorkloadGen::paper(net);
     let mut rng = Pcg32::new(seed, 91);
-    let requests = gen.generate(a.usize("requests")?, &mut rng);
-    let mut ex = SimExecutor::Fresh { testbed: &ctx.testbed, rng: Pcg32::new(seed, 92) };
-    let metrics = controller.serve(&requests, &mut ex, "dynasplit");
-    let (c, s, e) = metrics.placement_counts();
-    println!(
-        "[serve] {} requests: {c} cloud / {s} split / {e} edge; QoS met {:.0}%; \
-         median latency {:.0} ms; median energy {:.1} J",
-        metrics.len(),
-        metrics.qos_met_fraction() * 100.0,
-        metrics.latency_summary().median,
-        metrics.energy_summary().median
-    );
+    let process = match a.usize("burst")? {
+        0 => ArrivalProcess::Poisson { rate_per_s: a.f64("rate")? },
+        burst_size => ArrivalProcess::Bursty {
+            base_rate_per_s: a.f64("rate")?,
+            period_s: 1.0,
+            burst_size,
+        },
+    };
+    let tl = dynasplit::workload::timeline(&gen, &process, a.usize("requests")?, &mut rng);
+    let cfg = PipelineConfig {
+        workers: a.usize("workers")?,
+        queue_capacity: a.usize("queue")?,
+        max_batch: a.usize("coalesce")?,
+        time_scale: 0.0,
+        seed,
+        reuse: !a.flag("no-reuse"),
+    };
+    let report = run_pipeline(&set, policy.as_ref(), &tl, &cfg, |_| {
+        Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
+    })?;
+    println!("[serve] {} — {}", policy.name(), report.summary_line());
+    let metrics = report.to_metric_set("dynasplit");
+    if !metrics.is_empty() {
+        let (c, s, e) = metrics.placement_counts();
+        println!(
+            "[serve] completed placement: {c} cloud / {s} split / {e} edge; \
+             median latency {:.0} ms; median energy {:.1} J",
+            metrics.latency_summary().median,
+            metrics.energy_summary().median
+        );
+    }
     dynasplit::report::write_csv(
         a.str("artifacts")?,
         &format!("serve_{}", net.name()),
         &dynasplit::report::metric_set_table(&metrics),
     )?;
+    Ok(())
+}
+
+fn cmd_throughput() -> Result<()> {
+    let a = spec("throughput", "serving-pipeline throughput experiment")
+        .opt("net", "vgg16", "network (vgg16|vit)")
+        .opt("requests", "400", "requests per pipeline run")
+        .parse_env(2)?;
+    let net = Network::parse(a.str("net")?)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let exp = experiments::serving::run(&ctx, net, a.usize("requests")?, a.u64("seed")?);
+    experiments::serving::print_report(&exp);
     Ok(())
 }
 

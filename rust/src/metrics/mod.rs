@@ -60,6 +60,34 @@ impl MetricSet {
         Summary::of(&self.records.iter().map(|r| r.latency_ms).collect::<Vec<_>>())
     }
 
+    /// Latency quantile over the run (ms); NaN on an empty set (the
+    /// serving pipeline can complete zero requests under a strict
+    /// policy, which must not panic the reporting).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        stats::quantile(&self.records.iter().map(|r| r.latency_ms).collect::<Vec<_>>(), q)
+    }
+
+    /// Median latency (ms) — the serving report's p50 column.
+    pub fn latency_p50(&self) -> f64 {
+        self.latency_quantile(0.5)
+    }
+
+    /// Tail latency (ms) — the serving report's p99 column.
+    pub fn latency_p99(&self) -> f64 {
+        self.latency_quantile(0.99)
+    }
+
+    /// Mean energy per request (J); NaN on an empty set.
+    pub fn mean_energy_j(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        stats::mean(&self.records.iter().map(|r| r.energy_j).collect::<Vec<_>>())
+    }
+
     pub fn energy_summary(&self) -> Summary {
         Summary::of(&self.records.iter().map(|r| r.energy_j).collect::<Vec<_>>())
     }
@@ -175,5 +203,21 @@ mod tests {
         assert_eq!(m.latency_summary().median, 30.0);
         assert_eq!(m.energy_summary().max, 4.0);
         assert_eq!(m.latency_violin().chars().count(), 24);
+    }
+
+    #[test]
+    fn serving_quantiles_and_energy() {
+        let m = MetricSet::new(
+            "t",
+            (0..100).map(|i| rec(i, 1e6, (i + 1) as f64, 2.0, 3)).collect(),
+        );
+        assert!((m.latency_p50() - 50.5).abs() < 1.0);
+        assert!(m.latency_p99() > 98.0);
+        assert!((m.mean_energy_j() - 2.0).abs() < 1e-12);
+        // empty sets degrade to NaN instead of panicking
+        let empty = MetricSet::new("t", Vec::new());
+        assert!(empty.latency_p50().is_nan());
+        assert!(empty.latency_p99().is_nan());
+        assert!(empty.mean_energy_j().is_nan());
     }
 }

@@ -10,9 +10,10 @@
 //!   (edge head → transport → cloud tail) runs anywhere `cargo test`
 //!   runs.  Numerically self-consistent, *not* faithful to the trained
 //!   models — accuracy-grade experiments need the XLA backend.
-//! * [`crate::runtime::engine::Engine`] (`--features xla`) — the PJRT
-//!   path: compiles the AOT-lowered HLO text artifacts and executes the
-//!   real networks.
+//! * `crate::runtime::engine::Engine` (`--features xla`; the module is
+//!   compiled out otherwise, so this is deliberately not a doc link) —
+//!   the PJRT path: compiles the AOT-lowered HLO text artifacts and
+//!   executes the real networks.
 //!
 //! [`default_backend`] picks one: `DYNASPLIT_BACKEND=reference|xla`
 //! overrides, otherwise XLA when compiled in, else the reference

@@ -12,6 +12,8 @@
 //!   `python/compile/aot.py`;
 //! * [`network`]   — head/tail pipeline execution over a whole network,
 //!   including the int8 (edge-TPU path) variants for VGG16;
+//! * [`session`]   — config-keyed cache of resolved execution sessions,
+//!   so same-config requests reuse the live session (serving pipeline);
 //! * [`evaluate`]  — classify the eval set through the loaded
 //!   executables and produce the measured accuracy table (cross-checked
 //!   against the python oracle's expectations when the XLA backend runs
@@ -25,9 +27,11 @@ pub mod engine;
 pub mod evaluate;
 pub mod network;
 pub mod reference;
+pub mod session;
 
 pub use backend::{default_backend, InferenceBackend, LayerExecutable, LayerSpec};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, LayerExec};
 pub use network::NetworkRuntime;
 pub use reference::ReferenceBackend;
+pub use session::{HeadPlan, SessionCache};

@@ -1,0 +1,147 @@
+//! Per-configuration execution sessions for the online path.
+//!
+//! A serving worker maps each admitted request to a [`crate::space::Config`];
+//! before running it must resolve *how* the loaded [`NetworkRuntime`]
+//! executes that configuration — which head range and whether the int8
+//! (edge-TPU) variants are active — and validate the split against the
+//! runtime's layer count.  [`SessionCache`] memoizes that resolution
+//! keyed by the full configuration, so consecutive requests mapped to
+//! the same `Config` reuse the live session instead of re-deriving and
+//! re-validating it, and the hit/miss counters feed the serving report's
+//! "reconfigurations avoided" column alongside the apply-state cache
+//! ([`crate::serve::cache::ReuseCache`]) and the transport's stream
+//! reuse ([`crate::transport::session::StreamSession`]).
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::network::NetworkRuntime;
+use crate::space::{Config, TpuMode};
+
+/// The resolved execution plan for one configuration's edge side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeadPlan {
+    /// Layers `[0, split)` run on the edge.
+    pub split: usize,
+    /// Whether the head runs the int8 (edge-TPU) variants.
+    pub quantized: bool,
+}
+
+impl HeadPlan {
+    pub fn of(config: &Config) -> HeadPlan {
+        HeadPlan { split: config.split, quantized: config.tpu != TpuMode::Off }
+    }
+}
+
+/// Config-keyed cache of resolved sessions with reuse counters.  The
+/// configuration space is small (|X| < 1000, the non-dominated set
+/// ~12–15 entries, §6.5), so entries are kept for the cache's lifetime.
+#[derive(Debug, Default)]
+pub struct SessionCache {
+    map: HashMap<Config, HeadPlan>,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl SessionCache {
+    pub fn new() -> SessionCache {
+        SessionCache::default()
+    }
+
+    /// Resolve (or reuse) the session for `config` against `runtime`.
+    pub fn plan(&mut self, runtime: &NetworkRuntime, config: &Config) -> Result<HeadPlan> {
+        if let Some(plan) = self.map.get(config) {
+            self.hits += 1;
+            return Ok(*plan);
+        }
+        ensure!(
+            config.net == runtime.net,
+            "config is for {} but the runtime loaded {}",
+            config.net.name(),
+            runtime.net.name()
+        );
+        ensure!(
+            config.split <= runtime.num_layers(),
+            "split {} out of range for {} ({} layers)",
+            config.split,
+            runtime.net.name(),
+            runtime.num_layers()
+        );
+        let plan = HeadPlan::of(config);
+        self.map.insert(*config, plan);
+        self.misses += 1;
+        Ok(plan)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::LayerEntry;
+    use crate::runtime::reference::ReferenceBackend;
+    use crate::space::Network;
+
+    fn tiny_runtime() -> NetworkRuntime {
+        // two dense layers, 4 -> 4 -> 2, enough for plan validation
+        let layer = |index: usize, n_in: usize, n_out: usize| LayerEntry {
+            index,
+            name: format!("l{index}"),
+            kind: "dense".into(),
+            in_shape: vec![n_in],
+            out_shape: vec![n_out],
+            out_bytes: (n_out * 4) as u64,
+            macs: (n_in * n_out) as u64,
+            quantizable: false,
+            fp32: format!("l{index}.hlo"),
+            int8: None,
+        };
+        let layers = vec![layer(0, 4, 4), layer(1, 4, 2)];
+        NetworkRuntime::from_layers(&ReferenceBackend::new(), Network::Vgg16, 1, &layers, None)
+            .expect("reference runtime")
+    }
+
+    fn cfg(split: usize, tpu: TpuMode) -> Config {
+        Config { net: Network::Vgg16, cpu_idx: 6, tpu, gpu: true, split }
+    }
+
+    #[test]
+    fn repeat_config_hits_the_cache() {
+        let rt = tiny_runtime();
+        let mut cache = SessionCache::new();
+        let a = cache.plan(&rt, &cfg(1, TpuMode::Max)).unwrap();
+        assert_eq!(a, HeadPlan { split: 1, quantized: true });
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        let b = cache.plan(&rt, &cfg(1, TpuMode::Max)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_configs_get_distinct_sessions() {
+        let rt = tiny_runtime();
+        let mut cache = SessionCache::new();
+        cache.plan(&rt, &cfg(1, TpuMode::Max)).unwrap();
+        let off = cache.plan(&rt, &cfg(2, TpuMode::Off)).unwrap();
+        assert_eq!(off, HeadPlan { split: 2, quantized: false });
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn out_of_range_split_is_rejected_not_cached() {
+        let rt = tiny_runtime();
+        let mut cache = SessionCache::new();
+        assert!(cache.plan(&rt, &cfg(3, TpuMode::Off)).is_err());
+        assert!(cache.is_empty());
+    }
+}

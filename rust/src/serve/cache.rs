@@ -1,0 +1,143 @@
+//! Config-reuse cache: skip reconfiguration for same-config requests.
+//!
+//! Every worker owns one [`ReuseCache`].  Activating the configuration
+//! that is already live is free — no DVFS write, no TPU toggle, no model
+//! load, no cloud re-init ([`Applier`] would charge at least its check
+//! cost, and the real path would re-announce the stream).  Only when the
+//! requested configuration differs from the live one does the cache fall
+//! through to the incremental [`Applier`], charging the modeled Fig.-15b
+//! overhead.  The hit counter is the serving report's "reconfigurations
+//! avoided" metric.
+
+use crate::controller::apply::Applier;
+use crate::space::Config;
+use crate::util::rng::Pcg32;
+
+/// Counters aggregated across workers into the serving report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Requests that reused the live configuration (reconfigurations
+    /// avoided).
+    pub hits: usize,
+    /// Activations that (re)applied a configuration.
+    pub reconfigs: usize,
+    /// Total modeled apply overhead charged (ms).
+    pub apply_ms_total: f64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.reconfigs += other.reconfigs;
+        self.apply_ms_total += other.apply_ms_total;
+    }
+}
+
+/// Worker-owned activation state: the live configuration plus the
+/// underlying hardware [`Applier`].
+pub struct ReuseCache {
+    applier: Applier,
+    live: Option<Config>,
+    enabled: bool,
+    /// Apply-jitter RNG (per worker; apply overhead is reported, not
+    /// part of the order-independent per-request outcome).
+    rng: Pcg32,
+    pub stats: CacheStats,
+}
+
+impl ReuseCache {
+    pub fn new(rng: Pcg32) -> ReuseCache {
+        ReuseCache {
+            applier: Applier::default(),
+            live: None,
+            enabled: true,
+            rng,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// A cache that never reuses — every activation goes through the
+    /// applier (the "what does the cache buy us" baseline).
+    pub fn disabled(rng: Pcg32) -> ReuseCache {
+        ReuseCache { enabled: false, ..ReuseCache::new(rng) }
+    }
+
+    /// Make `config` the live configuration; returns the modeled apply
+    /// overhead in ms (0 on a cache hit).
+    pub fn activate(&mut self, config: &Config) -> f64 {
+        if self.enabled && self.live.as_ref() == Some(config) {
+            self.stats.hits += 1;
+            return 0.0;
+        }
+        let ms = self.applier.apply(config, &mut self.rng);
+        self.live = Some(*config);
+        self.stats.reconfigs += 1;
+        self.stats.apply_ms_total += ms;
+        ms
+    }
+
+    /// The currently live configuration, if any.
+    pub fn live(&self) -> Option<&Config> {
+        self.live.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{feasible, Network, TpuMode};
+
+    fn cfg(cpu_idx: usize, tpu: TpuMode, split: usize) -> Config {
+        feasible::repair(Config { net: Network::Vgg16, cpu_idx, tpu, gpu: true, split })
+    }
+
+    #[test]
+    fn repeat_activation_is_free_and_counted_as_hit() {
+        let mut c = ReuseCache::new(Pcg32::seeded(1));
+        let a = cfg(3, TpuMode::Max, 7);
+        assert!(c.activate(&a) > 0.0, "cold activation must reconfigure");
+        assert_eq!(c.activate(&a), 0.0);
+        assert_eq!(c.activate(&a), 0.0);
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.reconfigs, 1);
+        assert_eq!(c.live(), Some(&a));
+    }
+
+    #[test]
+    fn config_change_reconfigures() {
+        let mut c = ReuseCache::new(Pcg32::seeded(2));
+        let a = cfg(3, TpuMode::Max, 7);
+        let b = cfg(5, TpuMode::Max, 7);
+        c.activate(&a);
+        assert!(c.activate(&b) > 0.0, "different config must reapply");
+        assert_eq!(c.stats.reconfigs, 2);
+        assert_eq!(c.live(), Some(&b));
+        // and flipping back also reapplies (single-slot cache: the live
+        // hardware can only hold one configuration)
+        assert!(c.activate(&a) > 0.0);
+        assert_eq!(c.stats.reconfigs, 3);
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let mut c = ReuseCache::disabled(Pcg32::seeded(3));
+        let a = cfg(3, TpuMode::Max, 7);
+        c.activate(&a);
+        let repeat = c.activate(&a);
+        // the incremental applier still only charges its check cost, but
+        // it *is* an activation, not an avoided one
+        assert!(repeat > 0.0);
+        assert_eq!(c.stats.hits, 0);
+        assert_eq!(c.stats.reconfigs, 2);
+    }
+
+    #[test]
+    fn stats_merge_sums() {
+        let mut a = CacheStats { hits: 2, reconfigs: 3, apply_ms_total: 10.0 };
+        let b = CacheStats { hits: 5, reconfigs: 1, apply_ms_total: 2.5 };
+        a.merge(&b);
+        assert_eq!(a.hits, 7);
+        assert_eq!(a.reconfigs, 4);
+        assert!((a.apply_ms_total - 12.5).abs() < 1e-12);
+    }
+}

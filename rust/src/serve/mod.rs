@@ -1,0 +1,288 @@
+//! The online-phase serving pipeline (beyond-paper, ROADMAP north star).
+//!
+//! The paper's Online Phase handles one request at a time; this module
+//! turns it into a concurrent, stateful serving system:
+//!
+//! ```text
+//!  arrival generator ──offer──▶ AdmissionQueue (bounded, open-loop)
+//!   (workload::arrival)             │ pop / pop_if
+//!                        ┌──────────┴──────────┐
+//!                   Worker 0   …           Worker N-1
+//!                    │ SchedulingPolicy (shared, stateless)
+//!                    │ ReuseCache (per worker: live config + applier)
+//!                    │ Executor   (per worker: runtime session)
+//!                    └──────────▶ ServeRecord* ──▶ ServeReport
+//! ```
+//!
+//! * [`queue`]  — bounded admission with load shedding;
+//! * [`worker`] — dispatch loop: decide → coalesce → activate → execute;
+//! * [`cache`]  — config-reuse cache (reconfigurations avoided);
+//! * [`report`] — per-request records + aggregated serving metrics.
+//!
+//! Policies decide from `(ConfigSet, qos)` alone and pipeline executors
+//! are order-independent per request, so per-request results equal the
+//! sequential Algorithm-1 baseline for any worker count — asserted by
+//! `rust/tests/serve_pipeline.rs`.
+
+pub mod cache;
+pub mod queue;
+pub mod report;
+pub mod worker;
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::controller::policy::{ConfigSet, SchedulingPolicy};
+use crate::controller::Executor;
+use crate::util::rng::Pcg32;
+use crate::workload::TimedRequest;
+
+pub use cache::{CacheStats, ReuseCache};
+pub use queue::{AdmissionQueue, QueueStats};
+pub use report::{ServeOutcome, ServeRecord, ServeReport};
+pub use worker::Worker;
+
+/// Pipeline shape knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Worker threads; each owns an executor + config-reuse cache.
+    pub workers: usize,
+    /// Admission queue capacity (requests beyond it are shed).
+    pub queue_capacity: usize,
+    /// Maximum same-config requests coalesced into one activation.
+    pub max_batch: usize,
+    /// Replay arrivals in real time scaled by this factor (0 = inject
+    /// as fast as possible — the usual choice for experiments; 1.0 =
+    /// real-time replay of `arrival_ms`).
+    pub time_scale: f64,
+    /// Seed for worker-local noise (apply jitter).
+    pub seed: u64,
+    /// Config-reuse cache on/off (off = every request reconfigures —
+    /// the baseline that shows what the cache buys).
+    pub reuse: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 4,
+            time_scale: 0.0,
+            seed: 42,
+            reuse: true,
+        }
+    }
+}
+
+/// Run the serving pipeline over a timed workload.
+///
+/// `factory` builds one executor per worker *inside* that worker's
+/// thread (real-path executors hold thread-local runtime handles and
+/// are deliberately not `Send`).  For order-independent results the
+/// executor must derive its outcome from the `(request, config)` pair
+/// alone, like [`crate::controller::PerRequestSimExecutor`].
+pub fn run_pipeline<F, E>(
+    set: &ConfigSet,
+    policy: &dyn SchedulingPolicy,
+    timeline: &[TimedRequest],
+    cfg: &PipelineConfig,
+    factory: F,
+) -> Result<ServeReport>
+where
+    F: Fn(usize) -> Result<E> + Sync,
+    E: Executor,
+{
+    ensure!(cfg.workers >= 1, "need at least one worker");
+    ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+    let queue = AdmissionQueue::new(cfg.queue_capacity);
+    let t0 = Instant::now();
+    let mut records: Vec<ServeRecord> = Vec::with_capacity(timeline.len());
+
+    let worker_results = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let queue = &queue;
+            let factory = &factory;
+            handles.push(s.spawn(move || -> Result<(Vec<ServeRecord>, CacheStats)> {
+                let executor = factory(w)?;
+                let rng = Pcg32::new(cfg.seed, 2000 + w as u64);
+                let cache =
+                    if cfg.reuse { ReuseCache::new(rng) } else { ReuseCache::disabled(rng) };
+                let mut worker = Worker {
+                    id: w,
+                    queue,
+                    set,
+                    policy,
+                    max_batch: cfg.max_batch,
+                    cache,
+                    executor,
+                    records: Vec::new(),
+                };
+                worker.run();
+                Ok((worker.records, worker.cache.stats))
+            }));
+        }
+
+        // open-loop feeder: offer at (scaled) arrival times, shed on full
+        for tr in timeline {
+            if cfg.time_scale > 0.0 {
+                let target = t0 + Duration::from_secs_f64(tr.arrival_ms / 1000.0 * cfg.time_scale);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+            }
+            if !queue.offer(tr.clone()) {
+                records.push(ServeRecord::rejected_queue_full(tr));
+            }
+        }
+        queue.close();
+
+        let mut results = Vec::with_capacity(handles.len());
+        for h in handles {
+            results.push(
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("serving worker panicked"))??,
+            );
+        }
+        Ok::<_, anyhow::Error>(results)
+    })?;
+
+    let mut cache = CacheStats::default();
+    for (recs, stats) in worker_results {
+        records.extend(recs);
+        cache.merge(&stats);
+    }
+    records.sort_by_key(|r| r.request_id);
+    Ok(ServeReport {
+        records,
+        cache,
+        queue: queue.stats(),
+        workers: cfg.workers,
+        wall_ms: t0.elapsed().as_secs_f64() * 1000.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{ExecOutcome, PaperPolicy, PolicyDecision};
+    use crate::solver::ParetoEntry;
+    use crate::space::{Config, Network, TpuMode};
+    use crate::workload::Request;
+
+    /// Outcome is a pure function of (request, config): required for the
+    /// order-independence the pipeline guarantees.
+    struct PureExec;
+
+    impl Executor for PureExec {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            ExecOutcome {
+                latency_ms: config.split as f64 * 10.0 + (request.seed % 7) as f64,
+                energy_j: config.cpu_idx as f64 + 0.1 * (request.seed % 5) as f64,
+                edge_energy_j: 1.0,
+                cloud_energy_j: 1.0,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    fn entry(latency: f64, energy: f64, cpu_idx: usize, split: usize) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy: 0.95,
+        }
+    }
+
+    fn tl(n: usize) -> Vec<TimedRequest> {
+        (0..n)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: if i % 3 == 0 { 500.0 } else { 90.0 },
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: i as f64,
+            })
+            .collect()
+    }
+
+    fn set2() -> ConfigSet {
+        ConfigSet::new(vec![entry(400.0, 1.0, 2, 3), entry(80.0, 10.0, 6, 9)])
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_run_for_any_worker_count() {
+        let set = set2();
+        let timeline = tl(40);
+        // sequential baseline
+        let mut ex = PureExec;
+        let baseline: Vec<(usize, Config, f64, f64)> = timeline
+            .iter()
+            .map(|tr| {
+                let idx = match PaperPolicy.decide(&set, tr.request.qos_ms) {
+                    PolicyDecision::Run(i) => i,
+                    PolicyDecision::Reject => panic!("paper policy rejected"),
+                };
+                let e = &set.entries()[idx];
+                let o = ex.execute(&tr.request, &e.config);
+                (tr.request.id, e.config, o.latency_ms, o.energy_j)
+            })
+            .collect();
+        for workers in [1, 2, 4] {
+            let cfg = PipelineConfig {
+                workers,
+                queue_capacity: 64,
+                ..PipelineConfig::default()
+            };
+            let report =
+                run_pipeline(&set, &PaperPolicy, &timeline, &cfg, |_| Ok(PureExec)).unwrap();
+            assert_eq!(report.records.len(), 40, "workers {workers}");
+            assert_eq!(report.queue.rejected, 0);
+            for (rec, want) in report.records.iter().zip(&baseline) {
+                assert_eq!(rec.request_id, want.0);
+                match &rec.outcome {
+                    ServeOutcome::Done { config, latency_ms, energy_j, .. } => {
+                        assert_eq!(*config, want.1);
+                        assert_eq!(*latency_ms, want.2);
+                        assert_eq!(*energy_j, want.3);
+                    }
+                    other => panic!("request {} not completed: {other:?}", want.0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let set = set2();
+        let timeline = tl(4);
+        let cfg = PipelineConfig::default();
+        let err = run_pipeline(&set, &PaperPolicy, &timeline, &cfg, |w| {
+            if w == 0 {
+                anyhow::bail!("no runtime for worker {w}")
+            }
+            Ok(PureExec)
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn zero_workers_is_an_error() {
+        let set = set2();
+        let cfg = PipelineConfig { workers: 0, ..PipelineConfig::default() };
+        assert!(run_pipeline(&set, &PaperPolicy, &tl(4), &cfg, |_| Ok(PureExec)).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Bounded admission queue feeding the serving workers.
+//!
+//! Open-loop semantics: the arrival generator *offers* requests at their
+//! arrival times and never blocks — when the queue is full the request
+//! is rejected (load shedding at admission), counted, and reported as a
+//! QoS miss.  Workers block on [`AdmissionQueue::pop`] until the feeder
+//! closes the queue and it drains empty.  [`AdmissionQueue::pop_if`]
+//! lets a worker opportunistically drain same-config successors for
+//! batch coalescing without committing to whatever comes next.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::workload::TimedRequest;
+
+/// Counters reported by the queue at the end of a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Requests accepted into the queue.
+    pub admitted: usize,
+    /// Requests rejected because the queue was full.
+    pub rejected: usize,
+    /// Largest queue depth observed at admission time.
+    pub peak_depth: usize,
+}
+
+struct Inner {
+    deque: VecDeque<TimedRequest>,
+    closed: bool,
+    stats: QueueStats,
+}
+
+/// Thread-safe bounded MPMC queue (mutex + condvar — the queue is never
+/// the bottleneck next to per-request inference, so simplicity wins).
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        assert!(capacity >= 1, "queue capacity must be >= 1");
+        AdmissionQueue {
+            inner: Mutex::new(Inner {
+                deque: VecDeque::with_capacity(capacity.min(4096)),
+                closed: false,
+                stats: QueueStats::default(),
+            }),
+            available: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking admission: `false` when the queue is full (the
+    /// request is shed) or already closed.
+    pub fn offer(&self, request: TimedRequest) -> bool {
+        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        if inner.closed || inner.deque.len() >= self.capacity {
+            inner.stats.rejected += 1;
+            return false;
+        }
+        inner.deque.push_back(request);
+        inner.stats.admitted += 1;
+        let depth = inner.deque.len();
+        inner.stats.peak_depth = inner.stats.peak_depth.max(depth);
+        drop(inner);
+        self.available.notify_one();
+        true
+    }
+
+    /// Blocking pop: `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<TimedRequest> {
+        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        loop {
+            if let Some(r) = inner.deque.pop_front() {
+                return Some(r);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.available.wait(inner).expect("queue lock poisoned");
+        }
+    }
+
+    /// Non-blocking conditional pop: takes the head only when `pred`
+    /// accepts it (used to coalesce same-config runs).
+    pub fn pop_if<F>(&self, pred: F) -> Option<TimedRequest>
+    where
+        F: FnOnce(&TimedRequest) -> bool,
+    {
+        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        let take = match inner.deque.front() {
+            Some(front) => pred(front),
+            None => false,
+        };
+        if take {
+            inner.deque.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Close the queue: pending requests still drain, new offers fail.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue lock poisoned").closed = true;
+        self.available.notify_all();
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().expect("queue lock poisoned").stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Network;
+    use crate::workload::Request;
+
+    fn tr(id: usize) -> TimedRequest {
+        TimedRequest {
+            request: Request {
+                id,
+                net: Network::Vgg16,
+                qos_ms: 500.0,
+                inferences: 10,
+                seed: id as u64,
+            },
+            arrival_ms: id as f64,
+        }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = AdmissionQueue::new(8);
+        for i in 0..5 {
+            assert!(q.offer(tr(i)));
+        }
+        q.close();
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap().request.id, i);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn rejects_when_full_and_counts() {
+        let q = AdmissionQueue::new(3);
+        assert!(q.offer(tr(0)) && q.offer(tr(1)) && q.offer(tr(2)));
+        assert!(!q.offer(tr(3)), "capacity 3 must shed the 4th offer");
+        assert!(!q.offer(tr(4)));
+        let s = q.stats();
+        assert_eq!((s.admitted, s.rejected, s.peak_depth), (3, 2, 3));
+        // draining frees capacity again
+        q.pop().unwrap();
+        assert!(q.offer(tr(5)));
+    }
+
+    #[test]
+    fn close_rejects_new_offers_but_drains_pending() {
+        let q = AdmissionQueue::new(4);
+        q.offer(tr(0));
+        q.close();
+        assert!(!q.offer(tr(1)));
+        assert_eq!(q.pop().unwrap().request.id, 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_if_only_takes_matching_head() {
+        let q = AdmissionQueue::new(4);
+        q.offer(tr(0));
+        q.offer(tr(1));
+        assert!(q.pop_if(|r| r.request.id == 7).is_none(), "head is 0, not 7");
+        assert_eq!(q.pop_if(|r| r.request.id == 0).unwrap().request.id, 0);
+        assert_eq!(q.pop_if(|r| r.request.id == 1).unwrap().request.id, 1);
+        assert!(q.pop_if(|_| true).is_none(), "empty queue");
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_offer_and_close() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(64));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut seen = 0;
+            while q2.pop().is_some() {
+                seen += 1;
+            }
+            seen
+        });
+        for i in 0..50 {
+            assert!(q.offer(tr(i)));
+        }
+        q.close();
+        assert_eq!(consumer.join().unwrap(), 50);
+    }
+}

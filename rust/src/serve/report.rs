@@ -1,0 +1,304 @@
+//! Per-request records and the aggregated serving report.
+//!
+//! [`ServeRecord`] is the pipeline's superset of the sequential
+//! controller's `RequestRecord`: it additionally captures *where* a
+//! request ended (completed / shed at admission / rejected by policy),
+//! which worker served it, and whether it rode a coalesced same-config
+//! batch.  [`ServeReport`] aggregates a run into the throughput
+//! experiment's headline numbers: QoS hit-rate, p50/p99 latency, energy
+//! per request, and reconfigurations avoided.
+
+use crate::metrics::{MetricSet, RequestRecord};
+use crate::space::Config;
+use crate::workload::TimedRequest;
+
+use super::cache::CacheStats;
+use super::queue::QueueStats;
+
+/// How one request left the pipeline.
+#[derive(Debug, Clone)]
+pub enum ServeOutcome {
+    /// Executed to completion.
+    Done {
+        config: Config,
+        latency_ms: f64,
+        energy_j: f64,
+        edge_energy_j: f64,
+        cloud_energy_j: f64,
+        accuracy: f64,
+        select_overhead_ms: f64,
+        apply_overhead_ms: f64,
+        /// Rode a same-config batch behind its leader (no selection or
+        /// activation charged to it).
+        coalesced: bool,
+    },
+    /// Shed at admission: the bounded queue was full.
+    RejectedQueueFull,
+    /// The scheduling policy declined to run it.
+    RejectedByPolicy,
+}
+
+/// One request's journey through the pipeline.
+#[derive(Debug, Clone)]
+pub struct ServeRecord {
+    pub request_id: usize,
+    pub qos_ms: f64,
+    pub arrival_ms: f64,
+    /// Serving worker (`None` for requests shed at admission).
+    pub worker: Option<usize>,
+    pub outcome: ServeOutcome,
+}
+
+impl ServeRecord {
+    pub fn rejected_queue_full(tr: &TimedRequest) -> ServeRecord {
+        ServeRecord {
+            request_id: tr.request.id,
+            qos_ms: tr.request.qos_ms,
+            arrival_ms: tr.arrival_ms,
+            worker: None,
+            outcome: ServeOutcome::RejectedQueueFull,
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self.outcome, ServeOutcome::Done { .. })
+    }
+
+    /// Completed within the QoS deadline?  (`false` for rejections: a
+    /// shed request by definition missed its service objective.)
+    pub fn qos_met(&self) -> bool {
+        match &self.outcome {
+            ServeOutcome::Done { latency_ms, .. } => *latency_ms <= self.qos_ms,
+            _ => false,
+        }
+    }
+}
+
+/// Aggregated outcome of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// All records, sorted by request id.
+    pub records: Vec<ServeRecord>,
+    /// Config-reuse counters summed over workers.
+    pub cache: CacheStats,
+    pub queue: QueueStats,
+    pub workers: usize,
+    /// Wall-clock duration of the run (ms).
+    pub wall_ms: f64,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.is_completed()).count()
+    }
+
+    pub fn rejected_queue_full(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::RejectedQueueFull))
+            .count()
+    }
+
+    pub fn rejected_by_policy(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::RejectedByPolicy))
+            .count()
+    }
+
+    /// Requests that rode a coalesced same-config batch.
+    pub fn coalesced(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::Done { coalesced: true, .. }))
+            .count()
+    }
+
+    /// Fraction of *all* requests (rejections included) served within
+    /// their deadline.
+    pub fn qos_hit_rate(&self) -> f64 {
+        let hits = self.records.iter().filter(|r| r.qos_met()).count();
+        hits as f64 / self.records.len().max(1) as f64
+    }
+
+    /// Latency quantile over completed requests (ms); NaN when nothing
+    /// completed.  Delegates to [`MetricSet::latency_quantile`] so the
+    /// quantile/NaN convention lives in exactly one place.
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        self.to_metric_set("completed").latency_quantile(q)
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        self.latency_quantile(0.5)
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        self.latency_quantile(0.99)
+    }
+
+    /// Mean energy per completed request (J); NaN when nothing completed.
+    pub fn mean_energy_j(&self) -> f64 {
+        self.to_metric_set("completed").mean_energy_j()
+    }
+
+    /// Completed requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed() as f64 / (self.wall_ms / 1000.0).max(1e-9)
+    }
+
+    /// Project the completed requests into the paper's metric set (so
+    /// the existing violin / violation reporting applies unchanged).
+    pub fn to_metric_set(&self, strategy: &str) -> MetricSet {
+        let records = self
+            .records
+            .iter()
+            .filter_map(|r| match &r.outcome {
+                ServeOutcome::Done {
+                    config,
+                    latency_ms,
+                    energy_j,
+                    edge_energy_j,
+                    cloud_energy_j,
+                    accuracy,
+                    select_overhead_ms,
+                    apply_overhead_ms,
+                    ..
+                } => Some(RequestRecord {
+                    request_id: r.request_id,
+                    qos_ms: r.qos_ms,
+                    config: *config,
+                    latency_ms: *latency_ms,
+                    energy_j: *energy_j,
+                    edge_energy_j: *edge_energy_j,
+                    cloud_energy_j: *cloud_energy_j,
+                    accuracy: *accuracy,
+                    select_overhead_ms: *select_overhead_ms,
+                    apply_overhead_ms: *apply_overhead_ms,
+                }),
+                _ => None,
+            })
+            .collect();
+        MetricSet::new(strategy, records)
+    }
+
+    /// One-line human summary for CLI / experiment output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} done / {} shed / {} policy-rejected on {} workers; QoS hit {:.0}%; \
+             p50 {:.0} ms p99 {:.0} ms; {:.2} J/req; \
+             {} reconfigs, {} avoided ({} coalesced); {:.0} req/s",
+            self.completed(),
+            self.rejected_queue_full(),
+            self.rejected_by_policy(),
+            self.workers,
+            self.qos_hit_rate() * 100.0,
+            self.latency_p50(),
+            self.latency_p99(),
+            self.mean_energy_j(),
+            self.cache.reconfigs,
+            self.cache.hits,
+            self.coalesced(),
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Network, TpuMode};
+
+    fn done(id: usize, qos: f64, lat: f64, energy: f64, coalesced: bool) -> ServeRecord {
+        ServeRecord {
+            request_id: id,
+            qos_ms: qos,
+            arrival_ms: id as f64,
+            worker: Some(id % 2),
+            outcome: ServeOutcome::Done {
+                config: Config {
+                    net: Network::Vgg16,
+                    cpu_idx: 6,
+                    tpu: TpuMode::Off,
+                    gpu: true,
+                    split: 5,
+                },
+                latency_ms: lat,
+                energy_j: energy,
+                edge_energy_j: energy / 2.0,
+                cloud_energy_j: energy / 2.0,
+                accuracy: 0.95,
+                select_overhead_ms: 0.01,
+                apply_overhead_ms: 0.0,
+                coalesced,
+            },
+        }
+    }
+
+    fn shed(id: usize) -> ServeRecord {
+        ServeRecord {
+            request_id: id,
+            qos_ms: 100.0,
+            arrival_ms: id as f64,
+            worker: None,
+            outcome: ServeOutcome::RejectedQueueFull,
+        }
+    }
+
+    fn report(records: Vec<ServeRecord>) -> ServeReport {
+        ServeReport {
+            records,
+            cache: CacheStats { hits: 2, reconfigs: 1, apply_ms_total: 50.0 },
+            queue: QueueStats { admitted: 3, rejected: 1, peak_depth: 2 },
+            workers: 2,
+            wall_ms: 2000.0,
+        }
+    }
+
+    #[test]
+    fn accounting_over_mixed_outcomes() {
+        let r = report(vec![
+            done(0, 100.0, 90.0, 2.0, false),
+            done(1, 100.0, 150.0, 4.0, true), // violated
+            shed(2),
+            ServeRecord {
+                request_id: 3,
+                qos_ms: 10.0,
+                arrival_ms: 3.0,
+                worker: Some(1),
+                outcome: ServeOutcome::RejectedByPolicy,
+            },
+        ]);
+        assert_eq!(r.completed(), 2);
+        assert_eq!(r.rejected_queue_full(), 1);
+        assert_eq!(r.rejected_by_policy(), 1);
+        assert_eq!(r.coalesced(), 1);
+        // 1 of 4 met its deadline
+        assert!((r.qos_hit_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(r.to_metric_set("x").len(), 2);
+        assert!((r.mean_energy_j() - 3.0).abs() < 1e-12);
+        // 2 completed over 2 s of wall clock
+        assert!((r.throughput_rps() - 1.0).abs() < 1e-9);
+        assert!(r.summary_line().contains("2 done"));
+    }
+
+    #[test]
+    fn latency_quantiles_over_completed_only() {
+        let recs = (0..100)
+            .map(|i| done(i, 1e6, (i + 1) as f64, 1.0, false))
+            .chain(std::iter::once(shed(100)))
+            .collect();
+        let r = report(recs);
+        assert!((r.latency_p50() - 50.5).abs() < 1.0);
+        assert!(r.latency_p99() > 98.0);
+    }
+
+    #[test]
+    fn empty_report_yields_nan_not_panic() {
+        let r = report(Vec::new());
+        assert_eq!(r.completed(), 0);
+        assert_eq!(r.qos_hit_rate(), 0.0);
+        assert!(r.latency_p50().is_nan());
+        assert!(r.mean_energy_j().is_nan());
+        assert_eq!(r.to_metric_set("x").len(), 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! The dispatch loop each serving worker runs.
+//!
+//! A worker owns its execution state end to end — the executor (its
+//! runtime session on the real path), the config-reuse cache, and its
+//! slice of the records — and shares only the admission queue, the
+//! configuration set, and the (stateless) scheduling policy.  Per
+//! request it: pops, decides via the policy, coalesces same-config
+//! successors into a small batch, activates the configuration once
+//! through the cache, and executes every request of the batch.
+//!
+//! Decisions are pure functions of `(set, qos)` and executors used by
+//! the pipeline are order-independent per request, so per-request
+//! results match a sequential Algorithm-1 run regardless of worker
+//! count or interleaving — only the overhead attribution (who paid the
+//! apply) depends on scheduling.
+
+use std::time::Instant;
+
+use crate::controller::{Executor, PolicyDecision, SchedulingPolicy};
+use crate::controller::policy::ConfigSet;
+
+use super::cache::ReuseCache;
+use super::queue::AdmissionQueue;
+use super::report::{ServeOutcome, ServeRecord};
+
+/// One serving worker's state for a pipeline run.
+pub struct Worker<'a, E: Executor> {
+    pub id: usize,
+    pub queue: &'a AdmissionQueue,
+    pub set: &'a ConfigSet,
+    pub policy: &'a dyn SchedulingPolicy,
+    /// Maximum same-config requests coalesced into one activation.
+    pub max_batch: usize,
+    pub cache: ReuseCache,
+    pub executor: E,
+    pub records: Vec<ServeRecord>,
+}
+
+impl<'a, E: Executor> Worker<'a, E> {
+    /// Serve until the queue closes and drains.
+    pub fn run(&mut self) {
+        while let Some(first) = self.queue.pop() {
+            let t0 = Instant::now();
+            let decision = self.policy.decide(self.set, first.request.qos_ms);
+            let select_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            let idx = match decision {
+                PolicyDecision::Run(idx) => idx,
+                PolicyDecision::Reject => {
+                    self.records.push(ServeRecord {
+                        request_id: first.request.id,
+                        qos_ms: first.request.qos_ms,
+                        arrival_ms: first.arrival_ms,
+                        worker: Some(self.id),
+                        outcome: ServeOutcome::RejectedByPolicy,
+                    });
+                    continue;
+                }
+            };
+
+            // coalesce queued successors that map to the same config
+            let mut batch = vec![first];
+            while batch.len() < self.max_batch {
+                let same = self.queue.pop_if(|r| {
+                    self.policy.decide(self.set, r.request.qos_ms) == PolicyDecision::Run(idx)
+                });
+                match same {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+
+            // one activation for the whole batch (the config-reuse cache
+            // makes it free when the config is already live)
+            let entry = &self.set.entries()[idx];
+            let apply_ms = self.cache.activate(&entry.config);
+
+            for (i, tr) in batch.iter().enumerate() {
+                let out = self.executor.execute(&tr.request, &entry.config);
+                self.records.push(ServeRecord {
+                    request_id: tr.request.id,
+                    qos_ms: tr.request.qos_ms,
+                    arrival_ms: tr.arrival_ms,
+                    worker: Some(self.id),
+                    outcome: ServeOutcome::Done {
+                        config: entry.config,
+                        latency_ms: out.latency_ms,
+                        energy_j: out.energy_j,
+                        edge_energy_j: out.edge_energy_j,
+                        cloud_energy_j: out.cloud_energy_j,
+                        accuracy: out.accuracy,
+                        select_overhead_ms: if i == 0 { select_ms } else { 0.0 },
+                        apply_overhead_ms: if i == 0 { apply_ms } else { 0.0 },
+                        coalesced: i > 0,
+                    },
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{ExecOutcome, PaperPolicy};
+    use crate::solver::ParetoEntry;
+    use crate::space::{Config, Network, TpuMode};
+    use crate::util::rng::Pcg32;
+    use crate::workload::{Request, TimedRequest};
+
+    /// Deterministic toy executor: latency = config latency estimate,
+    /// energy = request seed (easy to assert on).
+    struct Toy;
+
+    impl Executor for Toy {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            ExecOutcome {
+                latency_ms: config.split as f64,
+                energy_j: request.seed as f64,
+                edge_energy_j: 0.0,
+                cloud_energy_j: 0.0,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    fn entry(latency: f64, energy: f64, split: usize) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy: 0.95,
+        }
+    }
+
+    fn tr(id: usize, qos: f64) -> TimedRequest {
+        TimedRequest {
+            request: Request {
+                id,
+                net: Network::Vgg16,
+                qos_ms: qos,
+                inferences: 1,
+                seed: id as u64,
+            },
+            arrival_ms: id as f64,
+        }
+    }
+
+    #[test]
+    fn worker_coalesces_same_config_runs() {
+        let set = ConfigSet::new(vec![entry(100.0, 1.0, 3), entry(50.0, 10.0, 9)]);
+        let queue = AdmissionQueue::new(64);
+        // 6 identical-QoS requests -> one config -> coalesced batches
+        for i in 0..6 {
+            assert!(queue.offer(tr(i, 500.0)));
+        }
+        queue.close();
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            set: &set,
+            policy: &PaperPolicy,
+            max_batch: 4,
+            cache: ReuseCache::new(Pcg32::seeded(1)),
+            executor: Toy,
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 6);
+        // one activation for the first batch of 4, a free (cached) one
+        // for the trailing batch of 2
+        assert_eq!(w.cache.stats.reconfigs, 1);
+        assert_eq!(w.cache.stats.hits, 1);
+        let coalesced = w
+            .records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::Done { coalesced: true, .. }))
+            .count();
+        assert_eq!(coalesced, 4, "batch followers: 3 in the first, 1 in the second");
+    }
+
+    #[test]
+    fn worker_does_not_coalesce_across_configs() {
+        let set = ConfigSet::new(vec![entry(400.0, 1.0, 3), entry(50.0, 10.0, 9)]);
+        let queue = AdmissionQueue::new(64);
+        // alternating lenient/tight deadlines -> alternating configs
+        for i in 0..4 {
+            let qos = if i % 2 == 0 { 500.0 } else { 60.0 };
+            assert!(queue.offer(tr(i, qos)));
+        }
+        queue.close();
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            set: &set,
+            policy: &PaperPolicy,
+            max_batch: 4,
+            cache: ReuseCache::new(Pcg32::seeded(2)),
+            executor: Toy,
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 4);
+        assert_eq!(w.cache.stats.reconfigs, 4, "every request flips the config");
+        assert_eq!(w.cache.stats.hits, 0);
+    }
+}

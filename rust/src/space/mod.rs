@@ -90,7 +90,11 @@ impl TpuMode {
 }
 
 /// One point of the configuration space X (Table 1).
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// `Eq + Hash` so configurations can key runtime caches (the serving
+/// pipeline's config-reuse cache and the per-config session cache) — all
+/// fields are discrete, so structural equality is exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Config {
     pub net: Network,
     /// Edge CPU frequency index into [`CPU_FREQS_GHZ`].

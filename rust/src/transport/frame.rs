@@ -12,6 +12,12 @@ use anyhow::{bail, Result};
 
 pub const MAGIC: [u8; 4] = *b"DSP1";
 
+/// Upper bound on a frame payload (64 MiB — far above any activation
+/// batch the runtimes produce).  A corrupted length prefix otherwise
+/// masquerades as an enormous incomplete frame and the receiver waits
+/// forever for bytes that never come; with the cap it errors cleanly.
+pub const MAX_PAYLOAD: u64 = 64 * 1024 * 1024;
+
 /// Frame kinds on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kind {
@@ -85,7 +91,14 @@ impl Frame {
             bail!("bad frame magic {:02x?}", &buf[..4]);
         }
         let kind = Kind::from_u8(buf[4])?;
-        let len = u64::from_le_bytes(buf[5..13].try_into().unwrap()) as usize;
+        let len64 = u64::from_le_bytes(buf[5..13].try_into().unwrap());
+        if len64 > MAX_PAYLOAD {
+            bail!(
+                "frame claims a {len64}-byte payload (cap {MAX_PAYLOAD}): \
+                 corrupted length prefix"
+            );
+        }
+        let len = len64 as usize;
         let total = 13 + len + 4;
         if buf.len() < total {
             return Ok(None);
@@ -211,6 +224,59 @@ mod tests {
         let mut bytes = Frame::shutdown().encode();
         bytes[0] = b'X';
         assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn flipped_checksum_bytes_rejected() {
+        // Corruption hitting the *checksum field itself* (not the
+        // payload) must also error cleanly.
+        let clean = Frame::tensor(&[4.0, 5.0]).encode();
+        for i in 0..4 {
+            let mut bytes = clean.clone();
+            let pos = bytes.len() - 1 - i;
+            bytes[pos] ^= 0x01;
+            let err = Frame::decode(&bytes).unwrap_err();
+            assert!(format!("{err}").contains("checksum"), "byte {pos}: {err}");
+        }
+    }
+
+    #[test]
+    fn corrupted_length_prefix_errors_instead_of_waiting() {
+        // Garbage in the 8-byte length field would otherwise look like a
+        // gigantic incomplete frame (decode -> None forever).
+        let mut bytes = Frame::tensor(&[1.0]).encode();
+        for b in &mut bytes[5..13] {
+            *b = 0xFF;
+        }
+        let err = Frame::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("length prefix"), "{err}");
+    }
+
+    #[test]
+    fn truncated_length_prefix_is_incomplete_not_panic() {
+        // Fewer bytes than the fixed header: decode must report "need
+        // more" (None), never slice-panic.
+        let bytes = Frame::tensor(&[1.0, 2.0]).encode();
+        for cut in 0..13 {
+            assert!(Frame::decode(&bytes[..cut]).unwrap().is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn replayed_meta_header_rejected() {
+        // A replayed metadata header (the same encoded meta appearing
+        // twice in one payload) must fail the exact-length check, not
+        // silently decode the first copy or panic on the second.
+        let m = StreamMeta { network: "vgg16".into(), split: 9, gpu: true, tensor_len: 64 };
+        let mut doubled = m.encode();
+        doubled.extend(m.encode());
+        let err = StreamMeta::decode(&doubled).unwrap_err();
+        assert!(format!("{err}").contains("expected"), "{err}");
+        // and the same replay arriving as a framed Meta payload
+        let frame = Frame { kind: Kind::Meta, payload: doubled };
+        let bytes = frame.encode();
+        let (decoded, _) = Frame::decode(&bytes).unwrap().unwrap();
+        assert!(StreamMeta::decode(&decoded.payload).is_err());
     }
 
     #[test]

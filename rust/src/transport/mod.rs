@@ -11,7 +11,9 @@
 //!   model (latency + bandwidth) so transfer time behaves like the WAN
 //!   link of the testbed;
 //! * [`cloud`]  — the cloud-side service loop: receives an init message
-//!   (which tail network, GPU on/off), then serves tensor batches.
+//!   (which tail network, GPU on/off), then serves tensor batches;
+//! * [`session`]— edge-side announce-once stream state, so consecutive
+//!   requests under one configuration reuse the open stream.
 //!
 //! The transport moves *real tensor bytes* (the PJRT head outputs) — it
 //! is on the request path, python is not.
@@ -19,6 +21,8 @@
 pub mod channel;
 pub mod cloud;
 pub mod frame;
+pub mod session;
 
 pub use channel::{duplex, Endpoint, LinkShaping};
 pub use frame::{Frame, StreamMeta};
+pub use session::StreamSession;

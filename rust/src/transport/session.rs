@@ -1,0 +1,137 @@
+//! Edge-side stream session with metadata reuse.
+//!
+//! The paper's gRPC stream sends its metadata exactly once at stream
+//! open (§5); a configuration change opens a new logical stream.  This
+//! module factors that state out of the executors: a [`StreamSession`]
+//! owns the transport endpoint and the last-announced [`StreamMeta`],
+//! re-announcing only when the `(network, split, gpu, tensor_len)` tuple
+//! changes.  Consecutive requests under the same configuration therefore
+//! reuse the open stream — no metadata frame, no cloud-side
+//! re-initialization — which is what the serving pipeline's config-reuse
+//! cache counts as an avoided reconfiguration.
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use super::channel::Endpoint;
+use super::frame::{Frame, Kind, StreamMeta};
+
+/// One edge↔cloud stream with announce-once semantics and reuse counters.
+pub struct StreamSession {
+    endpoint: Endpoint,
+    announced: Option<StreamMeta>,
+    /// Logical streams opened (metadata frames sent).
+    pub reopens: usize,
+    /// Requests that reused the already-open stream.
+    pub reuses: usize,
+}
+
+impl StreamSession {
+    pub fn new(endpoint: Endpoint) -> StreamSession {
+        StreamSession { endpoint, announced: None, reopens: 0, reuses: 0 }
+    }
+
+    /// Make `meta` the live stream: a no-op when it already is (returns
+    /// `false`), otherwise announces it to the peer (returns `true`).
+    pub fn ensure(&mut self, meta: &StreamMeta) -> Result<bool> {
+        if self.announced.as_ref() == Some(meta) {
+            self.reuses += 1;
+            return Ok(false);
+        }
+        self.endpoint.send(&Frame::meta(meta))?;
+        self.announced = Some(meta.clone());
+        self.reopens += 1;
+        Ok(true)
+    }
+
+    /// Send one tensor batch and wait for its result frame.
+    pub fn exchange(&mut self, tensor: &[f32], timeout: Duration) -> Result<Vec<f32>> {
+        ensure!(self.announced.is_some(), "exchange before any stream was announced");
+        self.endpoint.send(&Frame::tensor(tensor))?;
+        let frame = self.endpoint.recv(timeout)?;
+        ensure!(
+            frame.kind == Kind::Result,
+            "protocol violation: expected Result, got {:?}",
+            frame.kind
+        );
+        frame.tensor_f32()
+    }
+
+    /// Tell the peer to shut down (the session stays usable for stats).
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.endpoint.send(&Frame::shutdown())?;
+        self.announced = None;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::channel::duplex;
+    use crate::transport::cloud::{serve, TailExecutor};
+
+    /// Adds one to every element — enough to verify plumbing.
+    struct PlusOne;
+
+    impl TailExecutor for PlusOne {
+        fn execute_tail(
+            &self,
+            _network: &str,
+            _split: usize,
+            _gpu: bool,
+            batch: &[f32],
+        ) -> Result<Vec<f32>> {
+            Ok(batch.iter().map(|x| x + 1.0).collect())
+        }
+    }
+
+    const T: Duration = Duration::from_secs(2);
+
+    fn meta(split: u32, len: u64) -> StreamMeta {
+        StreamMeta { network: "vgg16".into(), split, gpu: false, tensor_len: len }
+    }
+
+    #[test]
+    fn stream_reused_until_meta_changes() {
+        let (edge, cloud) = duplex(None);
+        let server = std::thread::spawn(move || serve(cloud, &PlusOne, T));
+        let mut s = StreamSession::new(edge);
+
+        assert!(s.ensure(&meta(3, 2)).unwrap(), "first ensure opens the stream");
+        assert_eq!(s.exchange(&[1.0, 2.0], T).unwrap(), vec![2.0, 3.0]);
+        // same configuration: stream is reused, no new announce
+        assert!(!s.ensure(&meta(3, 2)).unwrap());
+        assert_eq!(s.exchange(&[5.0, 6.0], T).unwrap(), vec![6.0, 7.0]);
+        assert_eq!((s.reopens, s.reuses), (1, 1));
+        // configuration change: a new logical stream
+        assert!(s.ensure(&meta(7, 1)).unwrap());
+        assert_eq!(s.exchange(&[0.0], T).unwrap(), vec![1.0]);
+        assert_eq!((s.reopens, s.reuses), (2, 1));
+
+        s.shutdown().unwrap();
+        let stats = server.join().unwrap().unwrap();
+        assert_eq!(stats.batches, 3);
+    }
+
+    #[test]
+    fn exchange_without_announce_fails_fast() {
+        let (edge, _cloud) = duplex(None);
+        let mut s = StreamSession::new(edge);
+        let err = s.exchange(&[1.0], T).unwrap_err();
+        assert!(format!("{err}").contains("before any stream"));
+    }
+
+    #[test]
+    fn shutdown_resets_announce_state() {
+        let (edge, cloud) = duplex(None);
+        let server = std::thread::spawn(move || serve(cloud, &PlusOne, T));
+        let mut s = StreamSession::new(edge);
+        s.ensure(&meta(3, 1)).unwrap();
+        s.exchange(&[1.0], T).unwrap();
+        s.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+        assert!(s.exchange(&[1.0], T).is_err(), "stream gone after shutdown");
+    }
+}

@@ -1,0 +1,213 @@
+//! Open-loop arrival processes for the serving pipeline.
+//!
+//! The paper evaluates the controller one request at a time; the serving
+//! pipeline instead feeds a *stream* of requests into a bounded
+//! admission queue at times drawn from an arrival process — open-loop,
+//! i.e. arrivals do not wait for completions (the SplitPlace /
+//! Dynamic-Split-Computing serving setting, see PAPERS.md).  Three
+//! processes cover the interesting traffic shapes:
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless steady load;
+//! * [`ArrivalProcess::Bursty`]  — Poisson base load plus periodic
+//!   back-to-back bursts (flash-crowd pressure on the queue);
+//! * [`ArrivalProcess::Trace`]   — replay of explicit arrival offsets,
+//!   tiled when more requests than trace entries are needed.
+
+use super::{Request, WorkloadGen};
+use crate::util::rng::Pcg32;
+
+/// How request arrival times are generated (all offsets in ms from the
+/// experiment start, nondecreasing).
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Exponential i.i.d. inter-arrivals at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Poisson base traffic at `base_rate_per_s`, plus `burst_size`
+    /// back-to-back arrivals every `period_s` seconds.
+    Bursty { base_rate_per_s: f64, period_s: f64, burst_size: usize },
+    /// Replay explicit arrival offsets (ms, nondecreasing).  Requesting
+    /// more arrivals than the trace holds tiles it end-to-end.
+    Trace { times_ms: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    /// Draw `n` nondecreasing arrival offsets (ms).
+    pub fn times_ms(&self, n: usize, rng: &mut Pcg32) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                assert!(*rate_per_s > 0.0, "Poisson rate must be positive");
+                let mean_gap_ms = 1000.0 / rate_per_s;
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.weibull(1.0, mean_gap_ms);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { base_rate_per_s, period_s, burst_size } => {
+                assert!(*base_rate_per_s > 0.0, "base rate must be positive");
+                assert!(*period_s > 0.0, "burst period must be positive");
+                assert!(*burst_size >= 1, "burst size must be >= 1");
+                assert!(
+                    *burst_size as f64 * 0.1 < period_s * 1000.0,
+                    "burst span must fit within one period"
+                );
+                if n == 0 {
+                    return Vec::new();
+                }
+                // Two sorted streams merged: the base stream alone could
+                // supply all n arrivals, so bursts beyond its n-th
+                // arrival (or beyond n entries) cannot make the cut.
+                let mean_gap_ms = 1000.0 / base_rate_per_s;
+                let mut base = Vec::with_capacity(n);
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.weibull(1.0, mean_gap_ms);
+                    base.push(t);
+                }
+                let horizon = *base.last().expect("n > 0");
+                let mut bursts = Vec::new();
+                let mut k = 1usize; // bursts fire at k * period
+                while bursts.len() < n && k as f64 * period_s * 1000.0 <= horizon {
+                    let burst_ms = k as f64 * period_s * 1000.0;
+                    // back-to-back arrivals, 0.1 ms apart so offsets stay
+                    // strictly ordered within the burst
+                    for j in 0..*burst_size {
+                        bursts.push(burst_ms + j as f64 * 0.1);
+                    }
+                    k += 1;
+                }
+                let mut out = Vec::with_capacity(n);
+                let (mut i, mut j) = (0, 0);
+                while out.len() < n {
+                    let take_base = match (base.get(i), bursts.get(j)) {
+                        (Some(b), Some(u)) => b <= u,
+                        (Some(_), None) => true,
+                        (None, Some(_)) => false,
+                        (None, None) => unreachable!("base holds n arrivals"),
+                    };
+                    if take_base {
+                        out.push(base[i]);
+                        i += 1;
+                    } else {
+                        out.push(bursts[j]);
+                        j += 1;
+                    }
+                }
+                out
+            }
+            ArrivalProcess::Trace { times_ms } => {
+                assert!(!times_ms.is_empty(), "empty arrival trace");
+                let span = times_ms.last().expect("non-empty") + 1.0;
+                (0..n)
+                    .map(|i| times_ms[i % times_ms.len()] + (i / times_ms.len()) as f64 * span)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// One request stamped with its arrival time — what the admission queue
+/// holds.  The QoS deadline travels with the request: by `deadline_ms`
+/// (absolute, experiment clock) the response should be out.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub request: Request,
+    /// Arrival offset from the experiment start (ms).
+    pub arrival_ms: f64,
+}
+
+impl TimedRequest {
+    /// Absolute response deadline: arrival + the request's QoS level.
+    pub fn deadline_ms(&self) -> f64 {
+        self.arrival_ms + self.request.qos_ms
+    }
+}
+
+/// Generate a timed workload: `n` paper-style requests stamped with
+/// arrival times from `process`.
+pub fn timeline(
+    gen: &WorkloadGen,
+    process: &ArrivalProcess,
+    n: usize,
+    rng: &mut Pcg32,
+) -> Vec<TimedRequest> {
+    let requests = gen.generate(n, rng);
+    let times = process.times_ms(n, rng);
+    requests
+        .into_iter()
+        .zip(times)
+        .map(|(request, arrival_ms)| TimedRequest { request, arrival_ms })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Network;
+
+    fn nondecreasing(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    #[test]
+    fn poisson_times_are_ordered_with_matching_mean_rate() {
+        let p = ArrivalProcess::Poisson { rate_per_s: 100.0 };
+        let mut rng = Pcg32::seeded(1);
+        let t = p.times_ms(20_000, &mut rng);
+        assert_eq!(t.len(), 20_000);
+        assert!(nondecreasing(&t));
+        // 100 req/s => mean gap 10 ms => 20k arrivals in ~200 s
+        let mean_gap = t.last().unwrap() / 20_000.0;
+        assert!((9.0..11.0).contains(&mean_gap), "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_contains_bursts_and_base_traffic() {
+        let p = ArrivalProcess::Bursty {
+            base_rate_per_s: 20.0,
+            period_s: 1.0,
+            burst_size: 16,
+        };
+        let mut rng = Pcg32::seeded(2);
+        let t = p.times_ms(400, &mut rng);
+        assert!(nondecreasing(&t));
+        // the first burst lands at exactly 1000 ms: its 16 arrivals (plus
+        // possibly a coinciding base arrival) within 2 ms
+        let in_burst = t.iter().filter(|&&x| (1000.0..1002.0).contains(&x)).count();
+        assert!((16..=18).contains(&in_burst), "{in_burst} arrivals in the burst window");
+        // base traffic exists between bursts
+        let before = t.iter().filter(|&&x| x < 1000.0).count();
+        assert!(before > 5, "only {before} base arrivals in the first second");
+    }
+
+    #[test]
+    fn trace_replays_and_tiles() {
+        let p = ArrivalProcess::Trace { times_ms: vec![0.0, 5.0, 9.0] };
+        let mut rng = Pcg32::seeded(3);
+        let t = p.times_ms(7, &mut rng);
+        assert_eq!(t, vec![0.0, 5.0, 9.0, 10.0, 15.0, 19.0, 20.0]);
+    }
+
+    #[test]
+    fn timeline_pairs_requests_with_times() {
+        let gen = WorkloadGen::paper(Network::Vgg16);
+        let mut rng = Pcg32::seeded(4);
+        let tl = timeline(&gen, &ArrivalProcess::Poisson { rate_per_s: 50.0 }, 64, &mut rng);
+        assert_eq!(tl.len(), 64);
+        for (i, tr) in tl.iter().enumerate() {
+            assert_eq!(tr.request.id, i);
+            assert!(tr.deadline_ms() >= tr.arrival_ms + 90.0, "deadline before arrival");
+        }
+        assert!(nondecreasing(&tl.iter().map(|t| t.arrival_ms).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = ArrivalProcess::Poisson { rate_per_s: 10.0 };
+        let a = p.times_ms(100, &mut Pcg32::seeded(7));
+        let b = p.times_ms(100, &mut Pcg32::seeded(7));
+        assert_eq!(a, b);
+    }
+}

@@ -8,8 +8,12 @@
 //! equals the minimum observed latency and the largest the maximum
 //! observed latency for the network (Table 2).
 
+pub mod arrival;
+
 use crate::space::Network;
 use crate::util::rng::Pcg32;
+
+pub use arrival::{timeline, ArrivalProcess, TimedRequest};
 
 /// Latency bounds used to scale QoS draws (Table 2 defaults; solver runs
 /// can substitute their own measured bounds).

@@ -1,0 +1,232 @@
+//! Artifact-free integration test of the online serving pipeline:
+//! ≥ 200 queued requests through ≥ 2 workers must (a) reproduce the
+//! sequential Algorithm-1 baseline per request, (b) report a QoS
+//! hit-rate, and (c) measurably avoid reconfigurations through the
+//! config-reuse cache on a same-config run.
+
+use std::time::Duration;
+
+use dynasplit::controller::policy::ConfigSet;
+use dynasplit::controller::{
+    ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor, PolicyDecision,
+    SchedulingPolicy, StrictDeadlinePolicy,
+};
+use dynasplit::serve::{run_pipeline, PipelineConfig, ServeOutcome};
+use dynasplit::simulator::Testbed;
+use dynasplit::solver::{ParetoEntry, Solver, Strategy};
+use dynasplit::space::{Config, Network};
+use dynasplit::util::rng::Pcg32;
+use dynasplit::workload::{timeline, ArrivalProcess, Request, TimedRequest, WorkloadGen};
+
+/// A small but real non-dominated set from a synthetic-testbed search.
+fn pareto() -> Vec<ParetoEntry> {
+    let mut tb = Testbed::synthetic();
+    tb.batch_per_trial = 40;
+    let mut s = Solver::new(&tb, Network::Vgg16);
+    s.batch_per_trial = 40;
+    s.run(Strategy::NsgaIII, 120, 11).pareto
+}
+
+fn same_config_timeline(n: usize, qos_ms: f64) -> Vec<TimedRequest> {
+    (0..n)
+        .map(|i| TimedRequest {
+            request: Request {
+                id: i,
+                net: Network::Vgg16,
+                qos_ms,
+                inferences: 50,
+                seed: 1000 + i as u64,
+            },
+            arrival_ms: i as f64,
+        })
+        .collect()
+}
+
+#[test]
+fn pipeline_matches_sequential_algorithm1_baseline() {
+    let tb = Testbed::synthetic();
+    let set = ConfigSet::new(pareto());
+    assert!(!set.is_empty(), "search produced a non-dominated set");
+
+    let mut rng = Pcg32::seeded(2);
+    let mut gen = WorkloadGen::paper(Network::Vgg16);
+    gen.inferences_per_request = 50;
+    let tl = timeline(&gen, &ArrivalProcess::Poisson { rate_per_s: 200.0 }, 220, &mut rng);
+
+    // sequential Algorithm-1 baseline over the same requests
+    let mut ex = PerRequestSimExecutor { testbed: &tb, stream: 31 };
+    let baseline: Vec<(usize, Config, ExecOutcome)> = tl
+        .iter()
+        .map(|tr| {
+            let idx = match PaperPolicy.decide(&set, tr.request.qos_ms) {
+                PolicyDecision::Run(i) => i,
+                PolicyDecision::Reject => unreachable!("paper policy on non-empty set"),
+            };
+            let entry = &set.entries()[idx];
+            let out = ex.execute(&tr.request, &entry.config);
+            (tr.request.id, entry.config, out)
+        })
+        .collect();
+
+    let cfg = PipelineConfig {
+        workers: 3,
+        queue_capacity: 1024,
+        max_batch: 4,
+        time_scale: 0.0,
+        seed: 5,
+        reuse: true,
+    };
+    let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
+        Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
+    })
+    .expect("pipeline run");
+
+    assert_eq!(report.records.len(), 220, "every request accounted for");
+    assert_eq!(report.queue.rejected, 0, "queue sized to the workload");
+    for (record, (id, config, out)) in report.records.iter().zip(&baseline) {
+        assert_eq!(record.request_id, *id);
+        match &record.outcome {
+            ServeOutcome::Done { config: c, latency_ms, energy_j, accuracy, .. } => {
+                assert_eq!(c, config, "request {id}: same config as sequential run");
+                assert_eq!(*latency_ms, out.latency_ms, "request {id}: same latency");
+                assert_eq!(*energy_j, out.energy_j, "request {id}: same energy");
+                assert_eq!(*accuracy, out.accuracy, "request {id}: same accuracy");
+            }
+            other => panic!("request {id} did not complete: {other:?}"),
+        }
+    }
+
+    // the QoS hit-rate is reported and plausible for the paper workload
+    let hit = report.qos_hit_rate();
+    assert!(hit > 0.5 && hit <= 1.0, "QoS hit-rate {hit}");
+    assert!(report.latency_p50().is_finite());
+    assert!(report.latency_p99() >= report.latency_p50());
+    assert!(report.mean_energy_j() > 0.0);
+    assert_eq!(report.completed(), 220);
+}
+
+#[test]
+fn config_reuse_cache_avoids_reconfigurations_on_same_config_run() {
+    let tb = Testbed::synthetic();
+    let set = ConfigSet::new(pareto());
+    // identical lenient deadlines -> Algorithm 1 maps every request to
+    // the same (most energy-efficient satisfying) configuration
+    let tl = same_config_timeline(240, 2000.0);
+    let expect = match PaperPolicy.decide(&set, 2000.0) {
+        PolicyDecision::Run(i) => set.entries()[i].config,
+        PolicyDecision::Reject => unreachable!("non-empty set"),
+    };
+
+    let run = |reuse: bool| {
+        let cfg = PipelineConfig {
+            workers: 2,
+            queue_capacity: 512,
+            max_batch: 4,
+            time_scale: 0.0,
+            seed: 7,
+            reuse,
+        };
+        run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
+            Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
+        })
+        .expect("pipeline run")
+    };
+
+    let with_cache = run(true);
+    assert_eq!(with_cache.completed(), 240);
+    for record in &with_cache.records {
+        match &record.outcome {
+            ServeOutcome::Done { config, .. } => assert_eq!(*config, expect),
+            other => panic!("request {} not completed: {other:?}", record.request_id),
+        }
+    }
+    // each worker reconfigures at most once (first activation), every
+    // later activation reuses the live config
+    assert!(
+        with_cache.cache.reconfigs <= 2,
+        "same-config run reconfigured {} times",
+        with_cache.cache.reconfigs
+    );
+    assert!(with_cache.cache.hits >= 1, "cache never hit");
+    let batches = with_cache.completed() - with_cache.coalesced();
+    assert_eq!(with_cache.cache.reconfigs + with_cache.cache.hits, batches);
+
+    // cache off: every batch pays a reconfiguration
+    let without = run(false);
+    assert_eq!(without.cache.hits, 0);
+    assert_eq!(
+        without.cache.reconfigs,
+        without.completed() - without.coalesced()
+    );
+    assert!(
+        with_cache.cache.reconfigs < without.cache.reconfigs,
+        "cache must measurably reduce reconfigurations: {} vs {}",
+        with_cache.cache.reconfigs,
+        without.cache.reconfigs
+    );
+}
+
+#[test]
+fn strict_policy_rejects_hopeless_deadlines_paper_admits_them() {
+    let set = ConfigSet::new(pareto());
+    let min_latency = set
+        .entries()
+        .iter()
+        .map(|e| e.latency_ms)
+        .fold(f64::INFINITY, f64::min);
+    let tb = Testbed::synthetic();
+    // deadlines far below the fastest configuration
+    let tl = same_config_timeline(50, min_latency / 100.0);
+    let cfg = PipelineConfig { workers: 2, queue_capacity: 64, ..PipelineConfig::default() };
+
+    let strict = run_pipeline(&set, &StrictDeadlinePolicy, &tl, &cfg, |_| {
+        Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
+    })
+    .expect("strict run");
+    assert_eq!(strict.rejected_by_policy(), 50, "reject-over-admit");
+    assert_eq!(strict.completed(), 0);
+    assert_eq!(strict.qos_hit_rate(), 0.0);
+    assert!(strict.latency_p50().is_nan(), "no completions -> NaN, not panic");
+
+    let paper = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
+        Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
+    })
+    .expect("paper run");
+    assert_eq!(paper.completed(), 50, "paper policy admits and minimizes violation");
+}
+
+#[test]
+fn bounded_queue_sheds_load_when_full() {
+    /// Slow executor: holds the worker long enough for the open-loop
+    /// feeder to overrun the tiny queue.
+    struct Slow;
+    impl Executor for Slow {
+        fn execute(&mut self, _request: &Request, _config: &Config) -> ExecOutcome {
+            std::thread::sleep(Duration::from_millis(2));
+            ExecOutcome {
+                latency_ms: 10.0,
+                energy_j: 1.0,
+                edge_energy_j: 0.5,
+                cloud_energy_j: 0.5,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    let set = ConfigSet::new(pareto());
+    let tl = same_config_timeline(64, 2000.0);
+    let cfg = PipelineConfig {
+        workers: 1,
+        queue_capacity: 4,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 9,
+        reuse: true,
+    };
+    let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| Ok(Slow)).expect("run");
+    assert_eq!(report.records.len(), 64, "shed requests are recorded too");
+    assert!(report.queue.rejected > 0, "tiny queue under flood must shed");
+    assert_eq!(report.rejected_queue_full(), report.queue.rejected);
+    assert!(report.qos_hit_rate() < 1.0);
+    assert!(report.queue.peak_depth <= 4);
+}
