@@ -30,6 +30,16 @@ pub struct ExecOutcome {
 /// Executes a request under an applied configuration.
 pub trait Executor {
     fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome;
+
+    /// Execute a coalesced same-config batch, one outcome per request
+    /// (in order).  The default loops [`Executor::execute`] — identical
+    /// results, no amortization.  Tensor-driven executors override it to
+    /// pack the batch into one flat `[batch, …]` activation and run the
+    /// head once ([`crate::serve::BatchRuntimeExecutor`]); the serving
+    /// worker always dispatches through this seam.
+    fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+        requests.iter().map(|r| self.execute(r, config)).collect()
+    }
 }
 
 /// Simulator-backed executor.

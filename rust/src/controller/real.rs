@@ -27,7 +27,7 @@ use super::executor::{ExecOutcome, Executor};
 use crate::model::manifest::Manifest;
 use crate::runtime::network::spawn_cloud_node;
 use crate::runtime::session::SessionCache;
-use crate::runtime::{default_backend, NetworkRuntime};
+use crate::runtime::{default_backend, NetworkRuntime, TensorArena};
 use crate::simulator::power::{cloud_power, edge_power, EdgeState};
 use crate::space::{Config, Network};
 use crate::transport::channel::{duplex, LinkShaping};
@@ -47,6 +47,9 @@ pub struct RealSplitExecutor {
     cloud: Option<std::thread::JoinHandle<Result<ServeStats>>>,
     /// Per-config execution sessions (head range + quantization).
     sessions: SessionCache,
+    /// Ping-pong activation buffers reused across requests: the head
+    /// forward is allocation-free after the first request.
+    arena: TensorArena,
     // real eval data served as request payloads
     images: Vec<f32>,
     labels: Vec<u8>,
@@ -77,6 +80,7 @@ impl RealSplitExecutor {
             stream: StreamSession::new(edge_ep),
             cloud: Some(cloud),
             sessions: SessionCache::new(),
+            arena: TensorArena::new(),
             images,
             labels,
             batch: manifest.batch,
@@ -126,13 +130,14 @@ impl RealSplitExecutor {
         };
         let plan = self.sessions.plan(runtime, config)?;
 
-        // --- edge head (real backend execution) ---
+        // --- edge head (real backend execution, arena-reused buffers) ---
         let t0 = Instant::now();
-        let head_out = runtime.run_head(plan.split, plan.quantized, &x)?;
+        let head_out = runtime.run_head_in(plan.split, plan.quantized, &x, &mut self.arena)?;
         let edge_s = t0.elapsed().as_secs_f64();
 
         // --- cloud tail over the transport (real tensors) ---
-        let (probs, round_s, cloud_est_s) = if config.is_edge_only() {
+        let tail_probs: Vec<f32>;
+        let (probs, round_s, cloud_est_s): (&[f32], f64, f64) = if config.is_edge_only() {
             (head_out, 0.0, 0.0)
         } else {
             // metadata sent once per logical stream (§5); a same-config
@@ -144,7 +149,7 @@ impl RealSplitExecutor {
                 tensor_len: head_out.len() as u64,
             })?;
             let t1 = Instant::now();
-            let result = self.stream.exchange(&head_out, RECV_TIMEOUT)?;
+            tail_probs = self.stream.exchange(head_out, RECV_TIMEOUT)?;
             let round_s = t1.elapsed().as_secs_f64();
             let sim = match net {
                 Network::Vgg16 => &self.sim_vgg,
@@ -152,11 +157,21 @@ impl RealSplitExecutor {
             };
             // estimated cloud-compute share of the measured round trip
             let cloud_est_s = sim.latency(config).cloud_s.min(round_s);
-            (result, round_s, cloud_est_s)
+            (&tail_probs, round_s, cloud_est_s)
         };
 
         // --- accuracy over the real batch ---
-        let preds = NetworkRuntime::classify(&probs, self.classes);
+        // The reference interpreter accepts any image-multiple batch, so
+        // a truncated tensor would otherwise flow through silently; the
+        // accuracy denominator must cover exactly the labels sent.
+        let preds = NetworkRuntime::classify(probs, self.classes);
+        anyhow::ensure!(
+            preds.len() == y.len(),
+            "tail returned {} predictions for {} labels (split {k}, {})",
+            preds.len(),
+            y.len(),
+            net.name()
+        );
         let hits = preds.iter().zip(&y).filter(|(p, l)| **p == **l as usize).count();
 
         // --- energy: measured durations x calibrated power model ---

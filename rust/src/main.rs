@@ -175,6 +175,13 @@ fn cmd_serve() -> Result<()> {
         .opt("burst", "0", "burst size (0 = pure Poisson arrivals)")
         .opt("queue", "256", "admission queue capacity")
         .opt("coalesce", "4", "max same-config requests coalesced per activation")
+        .opt(
+            "time-scale",
+            "0",
+            "0 = inject as fast as possible; >0 = real-time replay, wall-clock per \
+             experiment ms (1 = real time, 2 = half speed, 0.5 = double speed; \
+             wait-aware: budgets shrink with queue wait, expired requests shed)",
+        )
         .flag("no-reuse", "disable the config-reuse cache (reconfigure every batch)")
         .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh 20% search)")
         .parse_env(2)?;
@@ -217,7 +224,7 @@ fn cmd_serve() -> Result<()> {
         workers: a.usize("workers")?,
         queue_capacity: a.usize("queue")?,
         max_batch: a.usize("coalesce")?,
-        time_scale: 0.0,
+        time_scale: a.f64("time-scale")?,
         seed,
         reuse: !a.flag("no-reuse"),
     };

@@ -29,6 +29,27 @@ pub struct LayerEntry {
     pub int8: Option<String>,
 }
 
+impl LayerEntry {
+    /// Synthetic entry for manifest-free runtimes (tests, benches, the
+    /// serving batch executor's fixtures): only the shapes matter to the
+    /// reference backend — artifact paths are dummies, never opened.
+    pub fn synthetic(index: usize, in_shape: Vec<usize>, out_shape: Vec<usize>) -> LayerEntry {
+        let out_bytes = 4 * out_shape.iter().product::<usize>() as u64;
+        LayerEntry {
+            index,
+            name: format!("synthetic_{index:02}"),
+            kind: "synthetic".into(),
+            in_shape,
+            out_shape,
+            out_bytes,
+            macs: 0,
+            quantizable: false,
+            fp32: format!("fp32/layer_{index:02}.hlo.txt"),
+            int8: None,
+        }
+    }
+}
+
 /// Expected accuracies computed by the python oracle path.
 #[derive(Debug, Clone)]
 pub struct ExpectedAccuracy {

@@ -1,0 +1,125 @@
+//! Ping-pong activation buffers for zero-alloc forwards.
+//!
+//! A layer-by-layer forward is a chain `x0 -> x1 -> ... -> xL` where
+//! only two activations are ever live: the current layer's input and its
+//! output.  [`TensorArena`] owns exactly those two buffers and swaps
+//! their roles after every layer, so a whole forward performs **O(1)
+//! allocations after warmup** (the first pass grows each buffer to the
+//! widest activation it sees; later passes only move lengths within the
+//! retained capacity).  Threaded through
+//! [`super::network::NetworkRuntime::run_range_in`] and friends; hot
+//! callers (the real split executor, the serving batch executor, the
+//! forward benches) keep one arena alive across requests.
+
+/// Two reusable activation buffers with a front/back flag.
+#[derive(Debug, Default)]
+pub struct TensorArena {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    /// When set, `b` is the front (current activation) buffer.
+    flip: bool,
+}
+
+impl TensorArena {
+    pub fn new() -> TensorArena {
+        TensorArena::default()
+    }
+
+    /// Pre-size both buffers (skips first-pass growth).
+    pub fn with_capacity(elems: usize) -> TensorArena {
+        TensorArena { a: Vec::with_capacity(elems), b: Vec::with_capacity(elems), flip: false }
+    }
+
+    /// Load `input` into the front buffer (copy; reuses capacity).
+    pub fn load(&mut self, input: &[f32]) {
+        let front = if self.flip { &mut self.b } else { &mut self.a };
+        front.clear();
+        front.extend_from_slice(input);
+    }
+
+    /// Borrow the current activation and the scratch output buffer.
+    pub fn pair(&mut self) -> (&[f32], &mut Vec<f32>) {
+        if self.flip {
+            (self.b.as_slice(), &mut self.a)
+        } else {
+            (self.a.as_slice(), &mut self.b)
+        }
+    }
+
+    /// Make the last-written output the new front buffer.
+    pub fn swap(&mut self) {
+        self.flip = !self.flip;
+    }
+
+    /// The current activation (the result, after a forward completes).
+    pub fn front(&self) -> &[f32] {
+        if self.flip {
+            &self.b
+        } else {
+            &self.a
+        }
+    }
+
+    /// Consume the arena, moving the current activation out.
+    pub fn into_front(self) -> Vec<f32> {
+        if self.flip {
+            self.b
+        } else {
+            self.a
+        }
+    }
+
+    /// Combined capacity of both buffers (warmup telemetry).
+    pub fn capacity(&self) -> usize {
+        self.a.capacity() + self.b.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_pair_swap_round_trip() {
+        let mut arena = TensorArena::new();
+        arena.load(&[1.0, 2.0, 3.0]);
+        assert_eq!(arena.front(), &[1.0, 2.0, 3.0]);
+        {
+            let (input, out) = arena.pair();
+            assert_eq!(input, &[1.0, 2.0, 3.0]);
+            out.clear();
+            out.extend(input.iter().map(|v| v * 2.0));
+        }
+        arena.swap();
+        assert_eq!(arena.front(), &[2.0, 4.0, 6.0]);
+        assert_eq!(arena.into_front(), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn steady_state_does_not_reallocate() {
+        let mut arena = TensorArena::with_capacity(64);
+        // warmup pass over a 3-layer chain of widths 48 -> 64 -> 16
+        let widths = [48usize, 64, 16];
+        for _ in 0..2 {
+            arena.load(&[1.0; 48]);
+            for &wd in &widths {
+                let (_, out) = arena.pair();
+                out.clear();
+                out.resize(wd, 0.5);
+                arena.swap();
+            }
+        }
+        let cap = arena.capacity();
+        for _ in 0..5 {
+            arena.load(&[1.0; 48]);
+            for &wd in &widths {
+                let (_, out) = arena.pair();
+                out.clear();
+                out.resize(wd, 0.5);
+                arena.swap();
+            }
+            assert_eq!(arena.capacity(), cap, "steady state must not grow");
+        }
+        assert_eq!(arena.front().len(), 16);
+    }
+}

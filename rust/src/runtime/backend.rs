@@ -48,7 +48,21 @@ pub struct LayerSpec<'a> {
 /// also the honest topology (the paper's cloud node owns its runtime).
 pub trait LayerExecutable {
     /// Execute the layer on a flat `[batch, *in_shape]` activation.
+    /// Interpreter backends additionally accept any positive multiple of
+    /// one image's elements (variable batch — how the serving pipeline
+    /// runs a coalesced batch through one head call); compiled backends
+    /// may require exactly `in_elems()`.
     fn run(&self, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// Execute into a caller-owned buffer: `out` is cleared and resized
+    /// to the output element count, reusing its capacity — the seam the
+    /// zero-alloc forward path ([`crate::runtime::TensorArena`]) builds
+    /// on.  The default shim delegates to [`LayerExecutable::run`];
+    /// backends with allocation-free interpreters override it.
+    fn run_into(&self, input: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        *out = self.run(input)?;
+        Ok(())
+    }
 
     /// Lowered batch size.
     fn batch(&self) -> usize;
@@ -86,7 +100,7 @@ pub fn default_backend() -> Result<Box<dyn InferenceBackend>> {
     let choice = std::env::var("DYNASPLIT_BACKEND").unwrap_or_default();
     match choice.as_str() {
         "" | "auto" => auto_backend(),
-        "reference" => Ok(Box::new(super::reference::ReferenceBackend::new())),
+        "reference" => Ok(Box::new(super::reference::ReferenceBackend::from_env())),
         #[cfg(feature = "xla")]
         "xla" => Ok(Box::new(super::engine::Engine::cpu()?)),
         other => anyhow::bail!(
@@ -100,7 +114,7 @@ fn auto_backend() -> Result<Box<dyn InferenceBackend>> {
     #[cfg(feature = "xla")]
     return Ok(Box::new(super::engine::Engine::cpu()?));
     #[cfg(not(feature = "xla"))]
-    Ok(Box::new(super::reference::ReferenceBackend::new()))
+    Ok(Box::new(super::reference::ReferenceBackend::from_env()))
 }
 
 #[cfg(test)]

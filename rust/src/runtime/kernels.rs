@@ -1,0 +1,410 @@
+//! Fast f32 kernels for the reference backend's hot path: im2col
+//! packing + cache-blocked, register-tiled GEMM, and an unrolled GEMV.
+//!
+//! Layout contract (shared with [`super::reference`]):
+//!
+//! * conv weights are `[c_out, 3, 3, c_in]` row-major, i.e. each output
+//!   channel is one contiguous row of `K = 9 * c_in` reduction elements;
+//! * [`im2col_3x3`] packs the input `[H, W, C]` image into a patch
+//!   matrix of `M = h_out * w_out` rows with the **same** `[ky][kx][ci]`
+//!   reduction order, so the convolution is exactly `patches · weightsᵀ`;
+//! * [`gemm_bias_relu`] computes `C[M, N] = relu(A[M, K] · B[N, K]ᵀ + b)`
+//!   with `MR x NR` register tiles and the K reduction always walked
+//!   sequentially `0..K` into a single accumulator per output element —
+//!   a **fixed reduction order**, so results are bit-identical from run
+//!   to run and for every thread count (rows are partitioned, never
+//!   split).  The order *differs* from the naive loop's (ky/kx/ci window
+//!   walk skips padding), hence the property-test contract is
+//!   approximate equality (≤ 1e-4 relative) against the [`naive`]
+//!   oracle, plus exact determinism of the fast path itself.
+//!
+//! Mirrors the accelerator-kernel discipline (blocked grids over the
+//! output, packed operands, scratch reuse) at CPU register scale.
+
+use crate::util::parallel::par_rows;
+
+/// Register tile height (rows of C per micro-kernel call).
+pub const MR: usize = 4;
+/// Register tile width (columns of C per micro-kernel call).
+pub const NR: usize = 4;
+
+/// Pack 3×3 same-padded strided patches of `x` (`[h_in, w_in, c_in]`
+/// row-major) into `patches`: `M = h_out * w_out` rows of `K = 9 * c_in`
+/// elements in `[ky][kx][ci]` order, zero-filled where the window hangs
+/// over the border.  `patches` is resized (reused capacity: zero-alloc
+/// after warmup).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_3x3(
+    x: &[f32],
+    h_in: usize,
+    w_in: usize,
+    c_in: usize,
+    h_out: usize,
+    w_out: usize,
+    stride: usize,
+    patches: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), h_in * w_in * c_in);
+    let k = 9 * c_in;
+    patches.clear();
+    patches.resize(h_out * w_out * k, 0.0);
+    for oy in 0..h_out {
+        for ox in 0..w_out {
+            let row = &mut patches[(oy * w_out + ox) * k..(oy * w_out + ox + 1) * k];
+            for ky in 0..3usize {
+                let iy = (oy * stride + ky) as isize - 1;
+                if iy < 0 || iy >= h_in as isize {
+                    // stays zero (padding)
+                    continue;
+                }
+                for kx in 0..3usize {
+                    let ix = (ox * stride + kx) as isize - 1;
+                    if ix < 0 || ix >= w_in as isize {
+                        continue;
+                    }
+                    let src = (iy as usize * w_in + ix as usize) * c_in;
+                    let dst = (ky * 3 + kx) * c_in;
+                    row[dst..dst + c_in].copy_from_slice(&x[src..src + c_in]);
+                }
+            }
+        }
+    }
+}
+
+/// `out[M, N] = relu(A[M, K] · B[N, K]ᵀ + bias[N])`, row-major
+/// everywhere.  Rows of `out` are partitioned across up to `threads`
+/// scoped threads; within a row the K reduction is strictly sequential,
+/// so the result is independent of `threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_relu(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut ctx = vec![(); threads.max(1)];
+    par_rows(threads, out, m, n, &mut ctx, |row0, chunk, _| {
+        gemm_block(a, b, bias, row0, chunk.len() / n.max(1), n, k, chunk);
+    });
+}
+
+/// One thread's contiguous row block: `rows` rows of C starting at
+/// absolute row `row0`, tiled MR x NR.
+#[allow(clippy::too_many_arguments)]
+fn gemm_block(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    row0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    let mut i = 0;
+    while i < rows {
+        let mr = MR.min(rows - i);
+        let mut j = 0;
+        while j < n {
+            let nr = NR.min(n - j);
+            if mr == MR && nr == NR {
+                micro_4x4(a, b, bias, row0 + i, i, j, n, k, c);
+            } else {
+                micro_edge(a, b, bias, row0 + i, i, j, mr, nr, n, k, c);
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// Full MR x NR = 4x4 register tile: 16 accumulators live across the
+/// whole K walk, 8 loads feed 16 FMAs per step.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_4x4(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    ai: usize,
+    ci: usize,
+    j: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    let a0 = &a[ai * k..(ai + 1) * k];
+    let a1 = &a[(ai + 1) * k..(ai + 2) * k];
+    let a2 = &a[(ai + 2) * k..(ai + 3) * k];
+    let a3 = &a[(ai + 3) * k..(ai + 4) * k];
+    let b0 = &b[j * k..(j + 1) * k];
+    let b1 = &b[(j + 1) * k..(j + 2) * k];
+    let b2 = &b[(j + 2) * k..(j + 3) * k];
+    let b3 = &b[(j + 3) * k..(j + 4) * k];
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let av = [a0[kk], a1[kk], a2[kk], a3[kk]];
+        let bv = [b0[kk], b1[kk], b2[kk], b3[kk]];
+        for (accr, &ar) in acc.iter_mut().zip(&av) {
+            for (accs, &bs) in accr.iter_mut().zip(&bv) {
+                *accs += ar * bs;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let row = &mut c[(ci + r) * n + j..(ci + r) * n + j + NR];
+        for (s, (dst, &v)) in row.iter_mut().zip(accr).enumerate() {
+            *dst = (v + bias[j + s]).max(0.0);
+        }
+    }
+}
+
+/// Edge tile (m or n remainder): same fixed K order, scalar accumulators.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_edge(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    ai: usize,
+    ci: usize,
+    j: usize,
+    mr: usize,
+    nr: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    for r in 0..mr {
+        let ar = &a[(ai + r) * k..(ai + r + 1) * k];
+        for s in 0..nr {
+            let br = &b[(j + s) * k..(j + s + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in ar.iter().zip(br) {
+                acc += x * y;
+            }
+            c[(ci + r) * n + j + s] = (acc + bias[j + s]).max(0.0);
+        }
+    }
+}
+
+/// `out[N] = relu(W[N, K] · x[K] + bias[N])` — the dense per-image path.
+/// Four partial accumulators (k ≡ 0..3 mod 4) combined in a fixed order:
+/// deterministic per run and thread count, ~4x the ILP of a serial dot.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_bias_relu(
+    w: &[f32],
+    x: &[f32],
+    bias: &[f32],
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), n);
+    let mut ctx = vec![(); threads.max(1)];
+    par_rows(threads, out, n, 1, &mut ctx, |row0, chunk, _| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let j = row0 + i;
+            let row = &w[j * k..(j + 1) * k];
+            let mut acc = [0.0f32; 4];
+            for (wr, xr) in row.chunks_exact(4).zip(x.chunks_exact(4)) {
+                acc[0] += wr[0] * xr[0];
+                acc[1] += wr[1] * xr[1];
+                acc[2] += wr[2] * xr[2];
+                acc[3] += wr[3] * xr[3];
+            }
+            let mut tail = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            let rem = k - k % 4;
+            for (wi, xi) in row[rem..].iter().zip(&x[rem..]) {
+                tail += wi * xi;
+            }
+            *o = (tail + bias[j]).max(0.0);
+        }
+    });
+}
+
+/// The seed interpreter's loops, kept verbatim as the correctness oracle
+/// for property tests and the `*_naive` bench baselines.
+pub mod naive {
+    /// 3×3 same-padded strided conv + bias + ReLU, the original 6-deep
+    /// `oy/ox/co/ky/kx/ci` loop nest.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        h_in: usize,
+        w_in: usize,
+        c_in: usize,
+        h_out: usize,
+        w_out: usize,
+        c_out: usize,
+        stride: usize,
+        out: &mut [f32],
+    ) {
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                for co in 0..c_out {
+                    let mut acc = b[co];
+                    for ky in 0..3usize {
+                        for kx in 0..3usize {
+                            let iy = (oy * stride + ky) as isize - 1;
+                            let ix = (ox * stride + kx) as isize - 1;
+                            if iy < 0 || ix < 0 || iy >= h_in as isize || ix >= w_in as isize {
+                                continue;
+                            }
+                            let in_base = (iy as usize * w_in + ix as usize) * c_in;
+                            let w_base = (co * 9 + ky * 3 + kx) * c_in;
+                            for ci in 0..c_in {
+                                acc += w[w_base + ci] * x[in_base + ci];
+                            }
+                        }
+                    }
+                    out[(oy * w_out + ox) * c_out + co] = acc.max(0.0);
+                }
+            }
+        }
+    }
+
+    /// Full matmul + bias + ReLU, one serial dot per output.
+    pub fn dense(x: &[f32], w: &[f32], b: &[f32], n_in: usize, n_out: usize, out: &mut [f32]) {
+        for (j, o) in out.iter_mut().enumerate().take(n_out) {
+            let row = &w[j * n_in..(j + 1) * n_in];
+            let mut acc = b[j];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            *o = acc.max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+    }
+
+    fn rel_close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        let scale = a
+            .iter()
+            .chain(b)
+            .fold(1.0f32, |m, &v| m.max(v.abs()));
+        a.iter().zip(b).all(|(p, q)| (p - q).abs() <= tol * scale)
+    }
+
+    #[test]
+    fn gemm_matches_naive_dense_per_row() {
+        // A·Bᵀ with M rows == running naive::dense per row of A
+        let mut rng = Pcg32::seeded(1);
+        for &(m, n, k) in &[(1usize, 5usize, 7usize), (4, 4, 16), (6, 9, 33), (13, 17, 8)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, n * k);
+            let bias = randv(&mut rng, n);
+            let mut fast = vec![0.0f32; m * n];
+            gemm_bias_relu(&a, &b, &bias, m, n, k, &mut fast, 1);
+            let mut want = vec![0.0f32; m * n];
+            for r in 0..m {
+                naive::dense(&a[r * k..(r + 1) * k], &b, &bias, k, n, &mut want[r * n..(r + 1) * n]);
+            }
+            assert!(rel_close(&fast, &want, 1e-5), "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gemm_thread_counts_bit_identical() {
+        let mut rng = Pcg32::seeded(2);
+        // large enough to clear MIN_PAR_ELEMS so threads actually spawn
+        let (m, n, k) = (96, 96, 40);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        let bias = randv(&mut rng, n);
+        let run = |threads| {
+            let mut c = vec![0.0f32; m * n];
+            gemm_bias_relu(&a, &b, &bias, m, n, k, &mut c, threads);
+            c
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(5));
+    }
+
+    #[test]
+    fn gemv_matches_naive_dense() {
+        let mut rng = Pcg32::seeded(3);
+        for &(n, k) in &[(1usize, 1usize), (10, 36), (33, 50), (64, 128)] {
+            let w = randv(&mut rng, n * k);
+            let x = randv(&mut rng, k);
+            let bias = randv(&mut rng, n);
+            let mut fast = vec![0.0f32; n];
+            gemv_bias_relu(&w, &x, &bias, n, k, &mut fast, 1);
+            let mut want = vec![0.0f32; n];
+            naive::dense(&x, &w, &bias, k, n, &mut want);
+            assert!(rel_close(&fast, &want, 1e-5), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn im2col_gemm_matches_naive_conv() {
+        let mut rng = Pcg32::seeded(4);
+        for &(h, wd, ci, co, stride) in
+            &[(5usize, 5usize, 3usize, 4usize, 1usize), (8, 6, 2, 5, 2), (4, 4, 1, 1, 1), (7, 9, 6, 3, 1)]
+        {
+            let (ho, wo) = (h.div_ceil(stride), wd.div_ceil(stride));
+            let x = randv(&mut rng, h * wd * ci);
+            let w = randv(&mut rng, co * 9 * ci);
+            let b = randv(&mut rng, co);
+            let mut want = vec![0.0f32; ho * wo * co];
+            naive::conv3x3(&x, &w, &b, h, wd, ci, ho, wo, co, stride, &mut want);
+            let mut patches = Vec::new();
+            im2col_3x3(&x, h, wd, ci, ho, wo, stride, &mut patches);
+            // patches · wᵀ is [positions, co] — same layout as the output
+            let mut fast = vec![0.0f32; ho * wo * co];
+            gemm_bias_relu(&patches, &w, &b, ho * wo, co, 9 * ci, &mut fast, 1);
+            assert!(rel_close(&fast, &want, 1e-5), "h={h} w={wd} ci={ci} co={co} s={stride}");
+        }
+    }
+
+    #[test]
+    fn im2col_reuses_capacity() {
+        let mut rng = Pcg32::seeded(5);
+        let x = randv(&mut rng, 6 * 6 * 4);
+        let mut patches = Vec::new();
+        im2col_3x3(&x, 6, 6, 4, 6, 6, 1, &mut patches);
+        let cap = patches.capacity();
+        let ptr = patches.as_ptr();
+        im2col_3x3(&x, 6, 6, 4, 6, 6, 1, &mut patches);
+        assert_eq!(patches.capacity(), cap, "repacking must not grow");
+        assert_eq!(patches.as_ptr(), ptr, "repacking must not reallocate");
+    }
+
+    #[test]
+    fn padding_cells_stay_zero() {
+        let x = vec![1.0f32; 3 * 3 * 2];
+        let mut patches = Vec::new();
+        im2col_3x3(&x, 3, 3, 2, 3, 3, 1, &mut patches);
+        // top-left output position: ky=0 and kx=0 taps hang over the
+        // border -> first 3 taps' channels all zero except (ky=1..)
+        let k = 9 * 2;
+        let row0 = &patches[0..k];
+        assert_eq!(&row0[0..2], &[0.0, 0.0], "tap (ky=0, kx=0) padded");
+        // tap index (ky*3 + kx) * c_in: tap 3 = (1,0) padded, tap 4 = (1,1) center
+        assert_eq!(&row0[3 * 2..3 * 2 + 2], &[0.0, 0.0], "tap (ky=1, kx=0) padded");
+        assert_eq!(&row0[4 * 2..4 * 2 + 2], &[1.0, 1.0], "tap (ky=1, kx=1) is real data");
+    }
+}

@@ -7,6 +7,11 @@
 //! * [`reference`] — default pure-Rust dense conv/matmul/relu layer
 //!   interpreter driven by the manifest shapes: the full head/tail split
 //!   path with zero native dependencies;
+//! * [`kernels`]   — the interpreter's hot path: im2col packing +
+//!   register-tiled GEMM/GEMV with a fixed reduction order (plus the
+//!   seed loop nests as the [`kernels::naive`] oracle);
+//! * [`arena`]     — ping-pong activation buffers so a whole forward is
+//!   O(1) allocations after warmup (see DESIGN.md §10);
 //! * [`engine`]    — (`--features xla`) PJRT client + one compiled
 //!   executable per HLO-text layer artifact lowered by
 //!   `python/compile/aot.py`;
@@ -21,14 +26,17 @@
 //!
 //! Python is never involved at run time.
 
+pub mod arena;
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
 pub mod evaluate;
+pub mod kernels;
 pub mod network;
 pub mod reference;
 pub mod session;
 
+pub use arena::TensorArena;
 pub use backend::{default_backend, InferenceBackend, LayerExecutable, LayerSpec};
 #[cfg(feature = "xla")]
 pub use engine::{Engine, LayerExec};

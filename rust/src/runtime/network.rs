@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::arena::TensorArena;
 use super::backend::{InferenceBackend, LayerExecutable, LayerSpec};
 use crate::model::manifest::{LayerEntry, Manifest, NetworkEntry};
 use crate::space::Network;
@@ -88,6 +89,15 @@ impl NetworkRuntime {
         self.fp32.len()
     }
 
+    /// Input elements of a single image at layer 0 (the network's input
+    /// width) — what batch-packing callers multiply by their batch size.
+    pub fn input_elems_per_image(&self) -> usize {
+        self.fp32
+            .first()
+            .map(|l| l.in_elems() / self.batch.max(1))
+            .unwrap_or(0)
+    }
+
     fn layer(&self, i: usize, quantized: bool) -> &dyn LayerExecutable {
         if quantized {
             self.int8[i].as_deref().unwrap_or_else(|| &*self.fp32[i])
@@ -96,8 +106,69 @@ impl NetworkRuntime {
         }
     }
 
-    /// Run layers `[from, to)` sequentially on a flat activation batch.
-    /// `quantized` selects the int8 variants (edge-TPU path).
+    /// Advance the arena's front activation through layers `[from, to)`
+    /// in place (ping-pong between the arena's two buffers: zero
+    /// allocations after warmup).
+    fn advance(&self, from: usize, to: usize, quantized: bool, arena: &mut TensorArena) -> Result<()> {
+        if from > to || to > self.num_layers() {
+            bail!("bad layer range {from}..{to} (L = {})", self.num_layers());
+        }
+        for i in from..to {
+            let (x, out) = arena.pair();
+            self.layer(i, quantized)
+                .run_into(x, out)
+                .with_context(|| format!("{} layer {i}", self.net.name()))?;
+            arena.swap();
+        }
+        Ok(())
+    }
+
+    /// Run layers `[from, to)` sequentially on a flat activation batch,
+    /// reusing `arena`'s buffers for every intermediate activation.
+    /// `quantized` selects the int8 variants (edge-TPU path).  The
+    /// returned slice borrows the arena and stays valid until its next
+    /// use — hot callers keep one arena per session and copy nothing.
+    pub fn run_range_in<'a>(
+        &self,
+        from: usize,
+        to: usize,
+        quantized: bool,
+        input: &[f32],
+        arena: &'a mut TensorArena,
+    ) -> Result<&'a [f32]> {
+        arena.load(input);
+        self.advance(from, to, quantized, arena)?;
+        Ok(arena.front())
+    }
+
+    /// Arena-reusing head segment: layers [0, k).
+    pub fn run_head_in<'a>(
+        &self,
+        k: usize,
+        tpu: bool,
+        input: &[f32],
+        arena: &'a mut TensorArena,
+    ) -> Result<&'a [f32]> {
+        self.run_range_in(0, k, tpu, input, arena)
+    }
+
+    /// Arena-reusing full forward with the head quantized up to
+    /// `quant_upto` — one buffer pair for both segments.
+    pub fn run_full_in<'a>(
+        &self,
+        quant_upto: usize,
+        input: &[f32],
+        arena: &'a mut TensorArena,
+    ) -> Result<&'a [f32]> {
+        arena.load(input);
+        self.advance(0, quant_upto, true, arena)?;
+        self.advance(quant_upto, self.num_layers(), false, arena)?;
+        Ok(arena.front())
+    }
+
+    /// Run layers `[from, to)` on a flat activation batch.  Convenience
+    /// wrapper allocating a fresh arena; loops and serving paths use
+    /// [`NetworkRuntime::run_range_in`] to reuse buffers.
     pub fn run_range(
         &self,
         from: usize,
@@ -105,17 +176,9 @@ impl NetworkRuntime {
         quantized: bool,
         input: &[f32],
     ) -> Result<Vec<f32>> {
-        if from > to || to > self.num_layers() {
-            bail!("bad layer range {from}..{to} (L = {})", self.num_layers());
-        }
-        let mut x = input.to_vec();
-        for i in from..to {
-            x = self
-                .layer(i, quantized)
-                .run(&x)
-                .with_context(|| format!("{} layer {i}", self.net.name()))?;
-        }
-        Ok(x)
+        let mut arena = TensorArena::new();
+        self.run_range_in(from, to, quantized, input, &mut arena)?;
+        Ok(arena.into_front())
     }
 
     /// Head segment: layers [0, k), quantized when the TPU path is active.
@@ -130,8 +193,9 @@ impl NetworkRuntime {
 
     /// Full forward with the head quantized up to `quant_upto`.
     pub fn run_full(&self, quant_upto: usize, input: &[f32]) -> Result<Vec<f32>> {
-        let head = self.run_range(0, quant_upto, true, input)?;
-        self.run_range(quant_upto, self.num_layers(), false, &head)
+        let mut arena = TensorArena::new();
+        self.run_full_in(quant_upto, input, &mut arena)?;
+        Ok(arena.into_front())
     }
 
     /// Argmax class per image of a `[batch, classes]` probability matrix.
@@ -204,6 +268,60 @@ pub fn spawn_cloud_node(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::manifest::LayerEntry;
+    use crate::runtime::reference::ReferenceBackend;
+
+    fn tiny_runtime() -> NetworkRuntime {
+        let layers = vec![
+            LayerEntry::synthetic(0, vec![6, 6, 2], vec![6, 6, 4]),
+            LayerEntry::synthetic(1, vec![6, 6, 4], vec![3, 3, 4]),
+            LayerEntry::synthetic(2, vec![3, 3, 4], vec![10]),
+        ];
+        NetworkRuntime::from_layers(&ReferenceBackend::new(), Network::Vgg16, 2, &layers, None)
+            .expect("reference runtime")
+    }
+
+    #[test]
+    fn arena_forward_matches_allocating_forward() {
+        let rt = tiny_runtime();
+        let x: Vec<f32> = (0..2 * 72).map(|i| (i as f32 * 0.21).cos()).collect();
+        let want = rt.run_range(0, 3, false, &x).unwrap();
+        let mut arena = TensorArena::new();
+        let got = rt.run_range_in(0, 3, false, &x, &mut arena).unwrap();
+        assert_eq!(got, want.as_slice());
+        assert_eq!(rt.run_full(0, &x).unwrap(), want);
+        let mut arena2 = TensorArena::new();
+        assert_eq!(rt.run_full_in(0, &x, &mut arena2).unwrap(), want.as_slice());
+    }
+
+    #[test]
+    fn arena_steady_state_is_zero_alloc() {
+        let rt = tiny_runtime();
+        let x: Vec<f32> = (0..2 * 72).map(|i| (i as f32 * 0.13).sin()).collect();
+        let mut arena = TensorArena::new();
+        // warmup grows the buffers to the widest activation
+        rt.run_range_in(0, 3, false, &x, &mut arena).unwrap();
+        rt.run_range_in(0, 3, false, &x, &mut arena).unwrap();
+        let cap = arena.capacity();
+        for _ in 0..4 {
+            rt.run_range_in(0, 3, false, &x, &mut arena).unwrap();
+            assert_eq!(arena.capacity(), cap, "steady-state forward must not grow the arena");
+        }
+    }
+
+    #[test]
+    fn empty_range_echoes_the_input() {
+        let rt = tiny_runtime();
+        let x: Vec<f32> = (0..2 * 72).map(|i| i as f32).collect();
+        assert_eq!(rt.run_range(1, 1, false, &x).unwrap(), x);
+    }
+
+    #[test]
+    fn bad_range_is_rejected() {
+        let rt = tiny_runtime();
+        assert!(rt.run_range(2, 1, false, &[0.0; 144]).is_err());
+        assert!(rt.run_range(0, 9, false, &[0.0; 144]).is_err());
+    }
 
     #[test]
     fn classify_argmax() {

@@ -22,12 +22,26 @@
 //! * anything else (large flattens, attention blocks) → a strided
 //!   sparse mixing matmul (fixed taps per output), so cost stays linear
 //!   in the output size instead of `O(in × out)`.
+//!
+//! **Hot path**: convs run im2col + the register-tiled GEMM and dense
+//! layers the unrolled GEMV from [`super::kernels`]; the seed
+//! interpreter's loop nests survive as [`super::kernels::naive`] and are
+//! selected by [`ReferenceBackend::naive_oracle`] for property tests and
+//! the `*_naive` bench baselines.  Both paths are deterministic
+//! run-to-run and across thread counts; they differ from *each other*
+//! only by f32 summation order (≤ 1e-4 relative, property-tested).
+//!
+//! Unlike compiled backends, the interpreter accepts any positive
+//! multiple of one image's elements — the serving pipeline exploits this
+//! to run a coalesced batch through one head call.
 
+use std::cell::RefCell;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::backend::{InferenceBackend, LayerExecutable, LayerSpec};
+use super::kernels;
 use crate::util::rng::Pcg32;
 
 /// Dense-ops-per-output cap above which the interpreter switches from a
@@ -38,12 +52,46 @@ const DENSE_WEIGHT_CAP: usize = 1 << 22;
 const MIX_TAPS: usize = 16;
 
 /// The default, dependency-free backend.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct ReferenceBackend;
+#[derive(Debug, Clone, Copy)]
+pub struct ReferenceBackend {
+    /// Worker threads for the data-parallel kernels (GEMM output rows,
+    /// batch images).  `1` = fully sequential; results are bit-identical
+    /// for every value.
+    pub threads: usize,
+    /// Run the seed interpreter loops instead of the im2col/GEMM path
+    /// (the correctness oracle).
+    pub naive: bool,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        ReferenceBackend { threads: 1, naive: false }
+    }
+}
 
 impl ReferenceBackend {
     pub fn new() -> ReferenceBackend {
-        ReferenceBackend
+        ReferenceBackend::default()
+    }
+
+    /// Fast path with up to `threads` kernel threads.
+    pub fn with_threads(threads: usize) -> ReferenceBackend {
+        ReferenceBackend { threads: threads.max(1), naive: false }
+    }
+
+    /// The seed interpreter loops — the oracle the fast path is
+    /// property-tested against.
+    pub fn naive_oracle() -> ReferenceBackend {
+        ReferenceBackend { threads: 1, naive: true }
+    }
+
+    /// Default construction honoring the `DYNASPLIT_THREADS` knob.
+    pub fn from_env() -> ReferenceBackend {
+        let threads = std::env::var("DYNASPLIT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(1);
+        ReferenceBackend::with_threads(threads)
     }
 }
 
@@ -53,7 +101,12 @@ impl InferenceBackend for ReferenceBackend {
     }
 
     fn platform(&self) -> String {
-        "reference-cpu (synthetic weights)".to_string()
+        format!(
+            "reference-cpu (synthetic weights, {} kernel, {} thread{})",
+            if self.naive { "naive" } else { "im2col+gemm" },
+            self.threads,
+            if self.threads == 1 { "" } else { "s" }
+        )
     }
 
     fn load_layer(&self, spec: &LayerSpec) -> Result<Box<dyn LayerExecutable>> {
@@ -64,6 +117,9 @@ impl InferenceBackend for ReferenceBackend {
             in_per_img: spec.entry.in_shape.iter().product(),
             out_per_img: spec.entry.out_shape.iter().product(),
             op,
+            threads: self.threads.max(1),
+            naive: self.naive,
+            scratch: RefCell::new(Vec::new()),
             build_ms: t0.elapsed().as_secs_f64() * 1000.0,
         }))
     }
@@ -75,6 +131,13 @@ struct RefLayer {
     in_per_img: usize,
     out_per_img: usize,
     op: RefOp,
+    threads: usize,
+    naive: bool,
+    /// Reusable im2col patch buffers, one per kernel thread (interior
+    /// mutability: `LayerExecutable` is `&self` and deliberately not
+    /// `Send`, so a `RefCell` is sound and keeps forwards zero-alloc
+    /// after warmup).
+    scratch: RefCell<Vec<Vec<f32>>>,
     build_ms: f64,
 }
 
@@ -101,11 +164,8 @@ enum RefOp {
 /// Deterministic per-layer weight seed: stable across edge and cloud
 /// nodes so separately-constructed runtimes agree bit-for-bit.
 fn layer_seed(spec: &LayerSpec) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for byte in spec.entry.name.bytes() {
-        h = (h ^ byte as u64).wrapping_mul(0x1000_0000_01b3);
-    }
-    h ^ (spec.entry.index as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    crate::util::hash::fnv1a(spec.entry.name.bytes().map(u64::from))
+        ^ (spec.entry.index as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
 }
 
 /// Uniform weights scaled He-style for variance preservation under ReLU;
@@ -166,81 +226,135 @@ impl RefOp {
         })
     }
 
-    /// Execute over one image: `x` has `in_per_img` elements, `out` is
-    /// pre-sized to `out_per_img`.
-    fn forward(&self, x: &[f32], out: &mut [f32]) {
+    /// Seed interpreter loops over one image (the correctness oracle).
+    fn forward_naive(&self, x: &[f32], out: &mut [f32]) {
         match self {
             RefOp::Conv { h_in, w_in, c_in, h_out, w_out, c_out, stride, w, b } => {
-                for oy in 0..*h_out {
-                    for ox in 0..*w_out {
-                        for co in 0..*c_out {
-                            let mut acc = b[co];
-                            for ky in 0..3usize {
-                                for kx in 0..3usize {
-                                    let iy = (oy * stride + ky) as isize - 1;
-                                    let ix = (ox * stride + kx) as isize - 1;
-                                    if iy < 0
-                                        || ix < 0
-                                        || iy >= *h_in as isize
-                                        || ix >= *w_in as isize
-                                    {
-                                        continue;
-                                    }
-                                    let in_base = (iy as usize * w_in + ix as usize) * c_in;
-                                    let w_base = (co * 9 + ky * 3 + kx) * c_in;
-                                    for ci in 0..*c_in {
-                                        acc += w[w_base + ci] * x[in_base + ci];
-                                    }
-                                }
-                            }
-                            out[(oy * w_out + ox) * c_out + co] = acc.max(0.0);
-                        }
-                    }
-                }
+                kernels::naive::conv3x3(
+                    x, w, b, *h_in, *w_in, *c_in, *h_out, *w_out, *c_out, *stride, out,
+                );
             }
             RefOp::Dense { n_in, n_out, w, b } => {
-                for (j, o) in out.iter_mut().enumerate().take(*n_out) {
-                    let row = &w[j * n_in..(j + 1) * n_in];
-                    let mut acc = b[j];
-                    for (wi, xi) in row.iter().zip(x) {
-                        acc += wi * xi;
-                    }
-                    *o = acc.max(0.0);
-                }
+                kernels::naive::dense(x, w, b, *n_in, *n_out, out);
             }
-            RefOp::Mix { n_in, n_out, w, b } => {
-                for (j, o) in out.iter_mut().enumerate().take(*n_out) {
-                    let mut acc = b[j];
-                    for t in 0..MIX_TAPS {
-                        let idx = (j.wrapping_mul(31) + t.wrapping_mul(17)) % n_in;
-                        acc += w[j * MIX_TAPS + t] * x[idx];
-                    }
-                    *o = acc.max(0.0);
-                }
-            }
+            RefOp::Mix { .. } => self.forward_mix(x, out),
         }
+    }
+
+    /// Fast kernels over one image.  `patches` is the reusable im2col
+    /// scratch; `threads` parallelizes GEMM output rows.
+    fn forward_fast(&self, x: &[f32], out: &mut [f32], patches: &mut Vec<f32>, threads: usize) {
+        match self {
+            RefOp::Conv { h_in, w_in, c_in, h_out, w_out, c_out, stride, w, b } => {
+                kernels::im2col_3x3(x, *h_in, *w_in, *c_in, *h_out, *w_out, *stride, patches);
+                kernels::gemm_bias_relu(
+                    patches,
+                    w,
+                    b,
+                    h_out * w_out,
+                    *c_out,
+                    9 * c_in,
+                    out,
+                    threads,
+                );
+            }
+            RefOp::Dense { n_in, n_out, w, b } => {
+                kernels::gemv_bias_relu(w, x, b, *n_out, *n_in, out, threads);
+            }
+            // the mixer is memory-bound (16 gathered taps per output):
+            // the loop *is* the fast path
+            RefOp::Mix { .. } => self.forward_mix(x, out),
+        }
+    }
+
+    fn forward_mix(&self, x: &[f32], out: &mut [f32]) {
+        let RefOp::Mix { n_in, n_out, w, b } = self else {
+            unreachable!("forward_mix on non-mixer op");
+        };
+        for (j, o) in out.iter_mut().enumerate().take(*n_out) {
+            let mut acc = b[j];
+            for t in 0..MIX_TAPS {
+                let idx = (j.wrapping_mul(31) + t.wrapping_mul(17)) % n_in;
+                acc += w[j * MIX_TAPS + t] * x[idx];
+            }
+            *o = acc.max(0.0);
+        }
+    }
+}
+
+impl RefLayer {
+    /// Number of images in `input`; the interpreter accepts any positive
+    /// multiple of one image's elements (variable batch), with the
+    /// lowered `batch` as the nominal size.
+    fn images(&self, input: &[f32]) -> Result<usize> {
+        if input.is_empty() || input.len() % self.in_per_img != 0 {
+            bail!(
+                "layer expects {} input elements (batch {} x {}) or another positive \
+                 multiple of {}, got {}",
+                self.in_elems(),
+                self.batch,
+                self.in_per_img,
+                self.in_per_img,
+                input.len()
+            );
+        }
+        Ok(input.len() / self.in_per_img)
     }
 }
 
 impl LayerExecutable for RefLayer {
     fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
-        if input.len() != self.in_elems() {
-            bail!(
-                "layer expects {} input elements (batch {} x {}), got {}",
-                self.in_elems(),
-                self.batch,
-                self.in_per_img,
-                input.len()
-            );
-        }
-        let mut out = vec![0.0f32; self.out_elems()];
-        for (img_in, img_out) in input
-            .chunks_exact(self.in_per_img)
-            .zip(out.chunks_exact_mut(self.out_per_img))
-        {
-            self.op.forward(img_in, img_out);
-        }
+        let mut out = Vec::new();
+        self.run_into(input, &mut out)?;
         Ok(out)
+    }
+
+    fn run_into(&self, input: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let images = self.images(input)?;
+        out.clear();
+        out.resize(images * self.out_per_img, 0.0);
+        if self.naive {
+            for (img_in, img_out) in input
+                .chunks_exact(self.in_per_img)
+                .zip(out.chunks_exact_mut(self.out_per_img))
+            {
+                self.op.forward_naive(img_in, img_out);
+            }
+            return Ok(());
+        }
+        let mut pool = self.scratch.borrow_mut();
+        if pool.len() < self.threads {
+            pool.resize_with(self.threads, Vec::new);
+        }
+        if self.threads > 1 && images > 1 {
+            // data-parallel over batch images, one scratch per thread;
+            // per-image reduction order is unchanged, so results are
+            // bit-identical to the sequential path
+            let (in_per, out_per) = (self.in_per_img, self.out_per_img);
+            let op = &self.op;
+            crate::util::parallel::par_rows(
+                self.threads,
+                out,
+                images,
+                out_per,
+                pool.as_mut_slice(),
+                |img0, chunk, patches| {
+                    for (i, img_out) in chunk.chunks_exact_mut(out_per).enumerate() {
+                        let img_in = &input[(img0 + i) * in_per..(img0 + i + 1) * in_per];
+                        op.forward_fast(img_in, img_out, patches, 1);
+                    }
+                },
+            );
+        } else {
+            let patches = &mut pool[0];
+            for (img_in, img_out) in input
+                .chunks_exact(self.in_per_img)
+                .zip(out.chunks_exact_mut(self.out_per_img))
+            {
+                self.op.forward_fast(img_in, img_out, patches, self.threads);
+            }
+        }
+        Ok(())
     }
 
     fn batch(&self) -> usize {
@@ -286,10 +400,19 @@ mod tests {
         }
     }
 
-    fn load(entry: &LayerEntry, batch: usize, quantized: bool) -> Box<dyn LayerExecutable> {
-        ReferenceBackend::new()
+    fn load_with(
+        backend: ReferenceBackend,
+        entry: &LayerEntry,
+        batch: usize,
+        quantized: bool,
+    ) -> Box<dyn LayerExecutable> {
+        backend
             .load_layer(&LayerSpec { entry, batch, artifact: None, quantized })
             .unwrap()
+    }
+
+    fn load(entry: &LayerEntry, batch: usize, quantized: bool) -> Box<dyn LayerExecutable> {
+        load_with(ReferenceBackend::new(), entry, batch, quantized)
     }
 
     fn ramp(n: usize) -> Vec<f32> {
@@ -377,8 +500,22 @@ mod tests {
     }
 
     #[test]
+    fn variable_batch_is_a_multiple_of_one_image() {
+        // lowered at batch 2, but 3 images (a coalesced serve batch) run
+        // fine; 0 images and non-multiples stay rejected
+        let e = entry(9, "conv", vec![4, 4, 2], vec![4, 4, 3], false);
+        let layer = load(&e, 2, false);
+        let three = layer.run(&ramp(3 * 32)).unwrap();
+        assert_eq!(three.len(), 3 * 48);
+        let one = layer.run(&ramp(32)).unwrap();
+        assert_eq!(one, three[..48], "batched image 0 == solo image 0");
+        assert!(layer.run(&[]).is_err(), "empty input rejected");
+        assert!(layer.run(&ramp(33)).is_err(), "non-multiple rejected");
+    }
+
+    #[test]
     fn empty_shape_rejected() {
-        let e = entry(9, "fc", vec![0], vec![10], false);
+        let e = entry(10, "fc", vec![0], vec![10], false);
         let r = ReferenceBackend::new().load_layer(&LayerSpec {
             entry: &e,
             batch: 1,
@@ -389,9 +526,59 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_naive_oracle_closely() {
+        for (i, e) in [
+            entry(11, "conv", vec![7, 9, 4], vec![7, 9, 6], false),
+            entry(12, "conv", vec![8, 8, 5], vec![4, 4, 7], false),
+            entry(13, "fc", vec![50], vec![33], false),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let fast = load_with(ReferenceBackend::new(), e, 2, false);
+            let naive = load_with(ReferenceBackend::naive_oracle(), e, 2, false);
+            let x = ramp(fast.in_elems());
+            let a = fast.run(&x).unwrap();
+            let b = naive.run(&x).unwrap();
+            let scale = b.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+            let max_d = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+            assert!(max_d <= 1e-4 * scale, "case {i}: {max_d} vs scale {scale}");
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        // 4 x 24x24x8 = 18432 output elements: above the parallel
+        // executor's inline threshold, so threads really spawn
+        let e = entry(14, "conv", vec![24, 24, 8], vec![24, 24, 8], false);
+        let x = ramp(4 * 24 * 24 * 8);
+        let one = load_with(ReferenceBackend::with_threads(1), &e, 4, false).run(&x).unwrap();
+        let three = load_with(ReferenceBackend::with_threads(3), &e, 4, false).run(&x).unwrap();
+        assert_eq!(one, three, "thread count must not change results");
+    }
+
+    #[test]
+    fn run_into_matches_run_and_reuses_the_buffer() {
+        let e = entry(15, "conv", vec![6, 6, 3], vec![6, 6, 5], false);
+        let layer = load(&e, 2, false);
+        let x = ramp(layer.in_elems());
+        let want = layer.run(&x).unwrap();
+        let mut out = Vec::new();
+        layer.run_into(&x, &mut out).unwrap();
+        assert_eq!(out, want);
+        let ptr = out.as_ptr();
+        let cap = out.capacity();
+        layer.run_into(&x, &mut out).unwrap();
+        assert_eq!(out, want);
+        assert_eq!((out.as_ptr(), out.capacity()), (ptr, cap), "steady state must not realloc");
+    }
+
+    #[test]
     fn backend_identity() {
         let b = ReferenceBackend::new();
         assert_eq!(b.name(), "reference");
         assert!(b.platform().contains("reference"));
+        assert!(ReferenceBackend::naive_oracle().platform().contains("naive"));
+        assert_eq!(ReferenceBackend::from_env().threads.max(1), ReferenceBackend::from_env().threads);
     }
 }

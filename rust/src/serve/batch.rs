@@ -1,0 +1,214 @@
+//! Batch-amortized tensor execution for the serving pipeline.
+//!
+//! The worker coalesces same-config requests and dispatches them through
+//! one [`Executor::execute_batch`] call; this executor makes that
+//! amortization *real*: it packs every request's image into one flat
+//! `[batch, …]` activation, runs the head **once** through a reference
+//! [`NetworkRuntime`] (reusing a [`TensorArena`]: zero steady-state
+//! allocations), and splits the result back into per-request outcomes.
+//! Because the interpreter processes batch images independently, each
+//! request's tensor — and therefore its recorded outcome — is
+//! bit-identical whether it rode a batch or ran alone; the shared
+//! [`BatchLog`] exposes head-run counts and per-request output digests
+//! so the pipeline integration test can assert exactly that, along with
+//! the amortization (fewer head runs than requests).
+//!
+//! Outcomes are deterministic functions of the produced tensor (no wall
+//! clock), so results are order- and batching-independent — the
+//! invariant every pipeline executor must hold.
+
+use std::sync::{Arc, Mutex};
+
+use crate::controller::{ExecOutcome, Executor};
+use crate::runtime::{NetworkRuntime, SessionCache, TensorArena};
+use crate::space::Config;
+use crate::util::rng::Pcg32;
+use crate::workload::Request;
+
+/// Shared telemetry: how often the head ran, for how many requests, and
+/// a digest of every request's head output (identity assertions).
+#[derive(Debug, Clone, Default)]
+pub struct BatchLog {
+    /// `(request id, head-output digest)` per executed request.
+    pub digests: Vec<(usize, u64)>,
+    /// Head forwards executed (executor dispatches).
+    pub head_runs: usize,
+    /// Requests served across all dispatches.
+    pub requests: usize,
+}
+
+/// FNV-1a over the f32 bit patterns: bit-exact output fingerprint.
+pub fn digest_f32(xs: &[f32]) -> u64 {
+    crate::util::hash::fnv1a(xs.iter().map(|x| u64::from(x.to_bits())))
+}
+
+/// Tensor-driven serving executor over a reference-backend runtime.
+pub struct BatchRuntimeExecutor {
+    runtime: NetworkRuntime,
+    sessions: SessionCache,
+    arena: TensorArena,
+    /// Reusable flat `[batch, image]` input buffer.
+    packed: Vec<f32>,
+    /// One image's input elements (layer 0).
+    img_elems: usize,
+    log: Arc<Mutex<BatchLog>>,
+}
+
+impl BatchRuntimeExecutor {
+    /// Wrap a loaded runtime; `log` is shared with the test/report side.
+    pub fn new(runtime: NetworkRuntime, log: Arc<Mutex<BatchLog>>) -> BatchRuntimeExecutor {
+        let img_elems = runtime.input_elems_per_image();
+        BatchRuntimeExecutor {
+            runtime,
+            sessions: SessionCache::new(),
+            arena: TensorArena::new(),
+            packed: Vec::new(),
+            img_elems,
+            log,
+        }
+    }
+
+    /// Deterministic per-request input image (derived from the request
+    /// seed, as the workload generator owns no real eval data).
+    fn pack_image(&mut self, seed: u64) {
+        let mut rng = Pcg32::new(seed, 0xba7c);
+        self.packed
+            .extend((0..self.img_elems).map(|_| rng.uniform(-1.0, 1.0) as f32));
+    }
+
+    fn run_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+        let plan = self
+            .sessions
+            .plan(&self.runtime, config)
+            .expect("serving config resolves against the loaded runtime");
+        self.packed.clear();
+        for r in requests {
+            self.pack_image(r.seed);
+        }
+        // the amortization: one flat [batch, ...] head call per dispatch
+        let head = self
+            .runtime
+            .run_head_in(plan.split, plan.quantized, &self.packed, &mut self.arena)
+            .expect("batched head execution");
+        let per = head.len() / requests.len().max(1);
+        let mut log = self.log.lock().expect("batch log poisoned");
+        log.head_runs += 1;
+        log.requests += requests.len();
+        requests
+            .iter()
+            .zip(head.chunks_exact(per.max(1)))
+            .map(|(r, chunk)| {
+                log.digests.push((r.id, digest_f32(chunk)));
+                // outcome derived from the tensor, not the wall clock:
+                // identical whether the request rode a batch or ran solo
+                let mean_abs =
+                    chunk.iter().map(|v| v.abs() as f64).sum::<f64>() / per.max(1) as f64;
+                ExecOutcome {
+                    latency_ms: plan.split as f64 + mean_abs,
+                    energy_j: 1.0 + mean_abs,
+                    edge_energy_j: (1.0 + mean_abs) / 2.0,
+                    cloud_energy_j: (1.0 + mean_abs) / 2.0,
+                    accuracy: 0.9,
+                }
+            })
+            .collect()
+    }
+}
+
+impl Executor for BatchRuntimeExecutor {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        self.run_batch(&[request], config).remove(0)
+    }
+
+    fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+        if requests.is_empty() {
+            return Vec::new();
+        }
+        self.run_batch(requests, config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::LayerEntry;
+    use crate::runtime::ReferenceBackend;
+    use crate::space::{Network, TpuMode};
+
+    fn tiny_runtime() -> NetworkRuntime {
+        let layers = vec![
+            LayerEntry::synthetic(0, vec![6, 6, 2], vec![6, 6, 4]),
+            LayerEntry::synthetic(1, vec![6, 6, 4], vec![3, 3, 4]),
+            LayerEntry::synthetic(2, vec![3, 3, 4], vec![12]),
+        ];
+        NetworkRuntime::from_layers(&ReferenceBackend::new(), Network::Vgg16, 1, &layers, None)
+            .expect("reference runtime")
+    }
+
+    fn cfg(split: usize) -> Config {
+        Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split }
+    }
+
+    fn req(id: usize) -> Request {
+        Request { id, net: Network::Vgg16, qos_ms: 500.0, inferences: 1, seed: 77 + id as u64 }
+    }
+
+    #[test]
+    fn batched_run_is_bitwise_identical_to_solo_runs() {
+        let log_a = Arc::new(Mutex::new(BatchLog::default()));
+        let mut solo = BatchRuntimeExecutor::new(tiny_runtime(), log_a.clone());
+        let requests = [req(0), req(1), req(2)];
+        let config = cfg(2);
+        let solo_outs: Vec<ExecOutcome> =
+            requests.iter().map(|r| solo.execute(r, &config)).collect();
+
+        let log_b = Arc::new(Mutex::new(BatchLog::default()));
+        let mut batched = BatchRuntimeExecutor::new(tiny_runtime(), log_b.clone());
+        let refs: Vec<&Request> = requests.iter().collect();
+        let batch_outs = batched.execute_batch(&refs, &config);
+
+        for (a, b) in solo_outs.iter().zip(&batch_outs) {
+            assert_eq!(a.latency_ms, b.latency_ms);
+            assert_eq!(a.energy_j, b.energy_j);
+        }
+        let (la, lb) = (log_a.lock().unwrap(), log_b.lock().unwrap());
+        assert_eq!(la.digests, lb.digests, "per-request head tensors identical");
+        assert_eq!((la.head_runs, la.requests), (3, 3), "solo: one head run per request");
+        assert_eq!((lb.head_runs, lb.requests), (1, 3), "batched: one head run total");
+    }
+
+    #[test]
+    fn distinct_requests_produce_distinct_tensors() {
+        let log = Arc::new(Mutex::new(BatchLog::default()));
+        let mut ex = BatchRuntimeExecutor::new(tiny_runtime(), log.clone());
+        let (r0, r1) = (req(0), req(1));
+        ex.execute_batch(&[&r0, &r1], &cfg(3));
+        let l = log.lock().unwrap();
+        assert_ne!(l.digests[0].1, l.digests[1].1, "different seeds, different tensors");
+    }
+
+    #[test]
+    fn steady_state_batches_do_not_allocate_in_the_arena() {
+        let log = Arc::new(Mutex::new(BatchLog::default()));
+        let mut ex = BatchRuntimeExecutor::new(tiny_runtime(), log);
+        let requests = [req(0), req(1)];
+        let refs: Vec<&Request> = requests.iter().collect();
+        ex.execute_batch(&refs, &cfg(2));
+        ex.execute_batch(&refs, &cfg(2));
+        let cap = ex.arena.capacity();
+        let packed_cap = ex.packed.capacity();
+        for _ in 0..4 {
+            ex.execute_batch(&refs, &cfg(2));
+            assert_eq!(ex.arena.capacity(), cap, "arena stable after warmup");
+            assert_eq!(ex.packed.capacity(), packed_cap, "pack buffer stable");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let log = Arc::new(Mutex::new(BatchLog::default()));
+        let mut ex = BatchRuntimeExecutor::new(tiny_runtime(), log.clone());
+        assert!(ex.execute_batch(&[], &cfg(1)).is_empty());
+        assert_eq!(log.lock().unwrap().head_runs, 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Experiment-clock abstraction for wait-aware scheduling.
+//!
+//! Request deadlines are absolute on the *experiment clock* — the
+//! timeline of `arrival_ms` offsets.  The pipeline runs that timeline in
+//! one of two modes, and deadline arithmetic must follow:
+//!
+//! * **virtual time** (`time_scale == 0`, the experiment default):
+//!   requests are injected as fast as possible, queue wait does not
+//!   model real wait, so a request's remaining budget is its raw QoS
+//!   level and nothing ever expires in the queue — exactly the
+//!   sequential Algorithm-1 semantics the baseline-equivalence tests
+//!   pin down;
+//! * **real-time replay** (`time_scale > 0`): wall clock maps onto the
+//!   experiment clock (`now = elapsed / scale`), so a queued request
+//!   burns its budget while it waits — policies then decide on
+//!   `deadline - now` (ROADMAP "wait-aware scheduling") and the worker
+//!   sheds requests whose deadline already passed at pop time.
+
+use std::time::Instant;
+
+use crate::workload::TimedRequest;
+
+/// How the pipeline maps wall clock onto the experiment clock.
+#[derive(Debug, Clone, Copy)]
+pub enum ServeClock {
+    /// As-fast-as-possible injection: budgets equal the raw QoS level,
+    /// queued requests never expire.
+    Virtual,
+    /// Real-time replay: `now_ms = elapsed / scale`.
+    Real { t0: Instant, scale: f64 },
+}
+
+impl ServeClock {
+    /// Build from the pipeline's `time_scale` knob and start instant.
+    pub fn new(t0: Instant, time_scale: f64) -> ServeClock {
+        if time_scale > 0.0 {
+            ServeClock::Real { t0, scale: time_scale }
+        } else {
+            ServeClock::Virtual
+        }
+    }
+
+    /// Current experiment-clock offset (ms); `None` in virtual time.
+    pub fn now_ms(&self) -> Option<f64> {
+        match self {
+            ServeClock::Virtual => None,
+            ServeClock::Real { t0, scale } => {
+                Some(t0.elapsed().as_secs_f64() * 1000.0 / scale)
+            }
+        }
+    }
+
+    /// The request's remaining latency budget at `now` (as returned by
+    /// [`ServeClock::now_ms`]): what a wait-aware policy should decide
+    /// on instead of the raw QoS level.
+    pub fn remaining_ms(&self, tr: &TimedRequest, now: Option<f64>) -> f64 {
+        match now {
+            None => tr.request.qos_ms,
+            Some(now_ms) => tr.deadline_ms() - now_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Network;
+    use crate::workload::Request;
+
+    fn tr(arrival_ms: f64, qos_ms: f64) -> TimedRequest {
+        TimedRequest {
+            request: Request { id: 0, net: Network::Vgg16, qos_ms, inferences: 1, seed: 0 },
+            arrival_ms,
+        }
+    }
+
+    #[test]
+    fn zero_scale_is_virtual_time() {
+        let clock = ServeClock::new(Instant::now(), 0.0);
+        assert!(matches!(clock, ServeClock::Virtual));
+        assert_eq!(clock.now_ms(), None);
+        // raw QoS, unchanged — the baseline-equivalence contract
+        assert_eq!(clock.remaining_ms(&tr(500.0, 90.0), clock.now_ms()), 90.0);
+    }
+
+    #[test]
+    fn real_time_burns_the_budget() {
+        let clock = ServeClock::new(Instant::now(), 1.0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let now = clock.now_ms().expect("real clock");
+        assert!(now >= 5.0, "at least the slept time: {now}");
+        // arrived at 0 with 1000 ms budget: remaining strictly shrinks
+        let rem = clock.remaining_ms(&tr(0.0, 1000.0), Some(now));
+        assert!(rem < 1000.0 && rem > 0.0, "remaining {rem}");
+        // already past its deadline: remaining goes negative
+        assert!(clock.remaining_ms(&tr(0.0, 1.0), Some(now)) < 0.0);
+    }
+
+    #[test]
+    fn time_scale_rescales_now() {
+        // scale 2.0 = half-speed replay: experiment now advances slower
+        let t0 = Instant::now();
+        let fast = ServeClock::new(t0, 1.0);
+        let slow = ServeClock::new(t0, 2.0);
+        std::thread::sleep(std::time::Duration::from_millis(4));
+        let (f, s) = (fast.now_ms().unwrap(), slow.now_ms().unwrap());
+        assert!(s < f, "scaled clock must run slower: {s} vs {f}");
+    }
+}

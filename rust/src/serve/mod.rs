@@ -14,17 +14,26 @@
 //!                    └──────────▶ ServeRecord* ──▶ ServeReport
 //! ```
 //!
-//! * [`queue`]  — bounded admission with load shedding;
-//! * [`worker`] — dispatch loop: decide → coalesce → activate → execute;
+//! * [`queue`]  — bounded admission with load shedding + deadline-aware
+//!   pop (expired requests shed at dispatch);
+//! * [`worker`] — dispatch loop: pop → decide on the *remaining* budget
+//!   → coalesce → activate → one batched executor dispatch;
+//! * [`batch`]  — tensor-driven executor amortizing head compute across
+//!   a coalesced batch (one flat `[batch, …]` head call);
+//! * [`clock`]  — virtual vs real-time experiment clock (wait-aware
+//!   scheduling);
 //! * [`cache`]  — config-reuse cache (reconfigurations avoided);
 //! * [`report`] — per-request records + aggregated serving metrics.
 //!
-//! Policies decide from `(ConfigSet, qos)` alone and pipeline executors
-//! are order-independent per request, so per-request results equal the
+//! In virtual time (`time_scale == 0`) policies decide from
+//! `(ConfigSet, qos)` alone and pipeline executors are
+//! order-independent per request, so per-request results equal the
 //! sequential Algorithm-1 baseline for any worker count — asserted by
 //! `rust/tests/serve_pipeline.rs`.
 
+pub mod batch;
 pub mod cache;
+pub mod clock;
 pub mod queue;
 pub mod report;
 pub mod worker;
@@ -38,7 +47,9 @@ use crate::controller::Executor;
 use crate::util::rng::Pcg32;
 use crate::workload::TimedRequest;
 
+pub use batch::{BatchLog, BatchRuntimeExecutor};
 pub use cache::{CacheStats, ReuseCache};
+pub use clock::ServeClock;
 pub use queue::{AdmissionQueue, QueueStats};
 pub use report::{ServeOutcome, ServeRecord, ServeReport};
 pub use worker::Worker;
@@ -52,9 +63,12 @@ pub struct PipelineConfig {
     pub queue_capacity: usize,
     /// Maximum same-config requests coalesced into one activation.
     pub max_batch: usize,
-    /// Replay arrivals in real time scaled by this factor (0 = inject
-    /// as fast as possible — the usual choice for experiments; 1.0 =
-    /// real-time replay of `arrival_ms`).
+    /// Replay arrivals in real time scaled by this factor: wall-clock
+    /// seconds per experiment second (0 = inject as fast as possible —
+    /// the usual choice for experiments; 1.0 = real-time replay of
+    /// `arrival_ms`; 2.0 = half speed, 0.5 = double speed).  When > 0
+    /// the pipeline is wait-aware: budgets shrink with queue wait and
+    /// expired requests are shed at pop time.
     pub time_scale: f64,
     /// Seed for worker-local noise (apply jitter).
     pub seed: u64,
@@ -98,6 +112,10 @@ where
     ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
     let queue = AdmissionQueue::new(cfg.queue_capacity);
     let t0 = Instant::now();
+    // virtual time for as-fast-as-possible injection, real-time replay
+    // otherwise: workers shed expired requests and hand policies the
+    // *remaining* budget (wait-aware scheduling)
+    let clock = ServeClock::new(t0, cfg.time_scale);
     let mut records: Vec<ServeRecord> = Vec::with_capacity(timeline.len());
 
     let worker_results = std::thread::scope(|s| {
@@ -116,6 +134,7 @@ where
                     set,
                     policy,
                     max_batch: cfg.max_batch,
+                    clock,
                     cache,
                     executor,
                     records: Vec::new(),
@@ -263,6 +282,88 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn real_time_replay_sheds_expired_and_shrinks_budgets() {
+        use std::sync::Mutex;
+
+        /// Policy probe: paper decision, but records every budget it was
+        /// handed so the test can see wait-awareness.
+        struct Probe {
+            budgets: Mutex<Vec<f64>>,
+        }
+        impl SchedulingPolicy for Probe {
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+            fn decide(&self, set: &ConfigSet, qos_ms: f64) -> crate::controller::PolicyDecision {
+                self.budgets.lock().unwrap().push(qos_ms);
+                PaperPolicy.decide(set, qos_ms)
+            }
+        }
+
+        /// Slow executor: each request burns ~10 ms of wall clock, so
+        /// later queued requests' deadlines pass while they wait.
+        struct Slow;
+        impl Executor for Slow {
+            fn execute(
+                &mut self,
+                _request: &crate::workload::Request,
+                config: &Config,
+            ) -> ExecOutcome {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                ExecOutcome {
+                    latency_ms: config.split as f64,
+                    energy_j: 1.0,
+                    edge_energy_j: 0.5,
+                    cloud_energy_j: 0.5,
+                    accuracy: 0.9,
+                }
+            }
+        }
+
+        let set = set2();
+        // all arrive at t=0: the first has an effectively unlimited
+        // budget, the rest expire after 5 ms of experiment time
+        let timeline: Vec<TimedRequest> = (0..8)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: if i == 0 { 1e7 } else { 5.0 },
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: 0.0,
+            })
+            .collect();
+        let cfg = PipelineConfig {
+            workers: 1,
+            queue_capacity: 64,
+            max_batch: 1,
+            time_scale: 1.0, // real-time replay
+            ..PipelineConfig::default()
+        };
+        let probe = Probe { budgets: Mutex::new(Vec::new()) };
+        let report = run_pipeline(&set, &probe, &timeline, &cfg, |_| Ok(Slow)).unwrap();
+        assert_eq!(report.records.len(), 8, "every request accounted for");
+        // request 0 completes (huge budget); by the time its ~10 ms of
+        // service is done, the 5 ms deadlines of later requests passed
+        assert!(report.completed() >= 1, "the unlimited-budget request completes");
+        assert!(report.expired_in_queue() >= 1, "waiters past their deadline are shed");
+        assert_eq!(report.queue.expired, report.expired_in_queue());
+        // wait-awareness: every budget the policy saw was the *remaining*
+        // time, strictly below the raw QoS level (now > 0 by pop time)
+        let budgets = probe.budgets.lock().unwrap();
+        assert!(!budgets.is_empty());
+        assert!(
+            budgets.iter().all(|&b| b < 1e7),
+            "budgets must be remaining time, not raw QoS: {budgets:?}"
+        );
+        // expired requests never reach the policy, so at most the
+        // non-expired ones were decided
+        assert!(budgets.len() <= 8 - report.expired_in_queue());
     }
 
     #[test]

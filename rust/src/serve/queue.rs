@@ -20,6 +20,9 @@ pub struct QueueStats {
     pub admitted: usize,
     /// Requests rejected because the queue was full.
     pub rejected: usize,
+    /// Requests whose deadline had already passed when a worker popped
+    /// them (shed at dispatch — wait-aware mode only).
+    pub expired: usize,
     /// Largest queue depth observed at admission time.
     pub peak_depth: usize,
 }
@@ -71,10 +74,31 @@ impl AdmissionQueue {
 
     /// Blocking pop: `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<TimedRequest> {
+        self.pop_due(|| None).map(|(r, _, _)| r)
+    }
+
+    /// Blocking pop with deadline awareness.  `now_ms` is evaluated
+    /// *after* an item is actually popped — a worker that slept on the
+    /// empty queue judges the request against the time it was handed
+    /// out, not the time the worker went to sleep.  A request whose
+    /// absolute deadline already passed is flagged expired and counted
+    /// — the worker records it as shed instead of executing a
+    /// guaranteed-late answer.  Returns `(request, now, expired)` so
+    /// the caller's budget arithmetic uses the same snapshot; with
+    /// `now = None` (virtual time) nothing ever expires.
+    pub fn pop_due<F>(&self, now_ms: F) -> Option<(TimedRequest, Option<f64>, bool)>
+    where
+        F: Fn() -> Option<f64>,
+    {
         let mut inner = self.inner.lock().expect("queue lock poisoned");
         loop {
             if let Some(r) = inner.deque.pop_front() {
-                return Some(r);
+                let now = now_ms();
+                let expired = matches!(now, Some(n) if r.deadline_ms() <= n);
+                if expired {
+                    inner.stats.expired += 1;
+                }
+                return Some((r, now, expired));
             }
             if inner.closed {
                 return None;
@@ -176,6 +200,49 @@ mod tests {
         assert_eq!(q.pop_if(|r| r.request.id == 0).unwrap().request.id, 0);
         assert_eq!(q.pop_if(|r| r.request.id == 1).unwrap().request.id, 1);
         assert!(q.pop_if(|_| true).is_none(), "empty queue");
+    }
+
+    #[test]
+    fn pop_due_flags_and_counts_expired_requests() {
+        let q = AdmissionQueue::new(8);
+        // arrival 0 + qos 500 -> absolute deadline 500 ms
+        q.offer(tr(0));
+        q.offer(tr(1));
+        q.offer(tr(2));
+        // virtual time: nothing expires
+        let (r0, now, expired) = q.pop_due(|| None).unwrap();
+        assert_eq!((r0.request.id, now, expired), (0, None, false));
+        // now = 100: deadline 501 not yet passed
+        let (r1, now, expired) = q.pop_due(|| Some(100.0)).unwrap();
+        assert_eq!((r1.request.id, now, expired), (1, Some(100.0), false));
+        // now = 1e4: deadline 502 long gone
+        let (r2, _, expired) = q.pop_due(|| Some(1e4)).unwrap();
+        assert_eq!((r2.request.id, expired), (2, true));
+        assert_eq!(q.stats().expired, 1);
+    }
+
+    #[test]
+    fn pop_due_evaluates_now_at_pop_time_not_call_time() {
+        // the clock closure must not run until an item is handed out:
+        // a worker blocking on an empty queue judges against pop time
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let q = std::sync::Arc::new(AdmissionQueue::new(8));
+        let calls = std::sync::Arc::new(AtomicUsize::new(0));
+        let (q2, calls2) = (q.clone(), calls.clone());
+        let consumer = std::thread::spawn(move || {
+            q2.pop_due(|| {
+                calls2.fetch_add(1, Ordering::SeqCst);
+                Some(1e4) // far past the deadline -> expired at pop time
+            })
+        });
+        // while the consumer sleeps on the condvar, the clock closure
+        // has not run yet
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(calls.load(Ordering::SeqCst), 0, "clock read before any pop");
+        q.offer(tr(0));
+        let (r, now, expired) = consumer.join().unwrap().unwrap();
+        assert_eq!((r.request.id, now, expired), (0, Some(1e4), true));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
     }
 
     #[test]

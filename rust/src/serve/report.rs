@@ -31,9 +31,17 @@ pub enum ServeOutcome {
         /// Rode a same-config batch behind its leader (no selection or
         /// activation charged to it).
         coalesced: bool,
+        /// Experiment-clock completion time (real-time replay only;
+        /// `None` in virtual time).  Lets the QoS verdict account for
+        /// queue wait, not just execution latency.
+        finished_ms: Option<f64>,
     },
     /// Shed at admission: the bounded queue was full.
     RejectedQueueFull,
+    /// Shed at dispatch: its deadline had already passed when a worker
+    /// popped it (wait-aware real-time mode — executing it could only
+    /// produce a guaranteed-late answer).
+    ExpiredInQueue,
     /// The scheduling policy declined to run it.
     RejectedByPolicy,
 }
@@ -65,10 +73,16 @@ impl ServeRecord {
     }
 
     /// Completed within the QoS deadline?  (`false` for rejections: a
-    /// shed request by definition missed its service objective.)
+    /// shed request by definition missed its service objective.)  In
+    /// real-time replay the verdict is against the *absolute* deadline
+    /// (queue wait counts); in virtual time, against execution latency
+    /// alone — the sequential Algorithm-1 semantics.
     pub fn qos_met(&self) -> bool {
         match &self.outcome {
-            ServeOutcome::Done { latency_ms, .. } => *latency_ms <= self.qos_ms,
+            ServeOutcome::Done { latency_ms, finished_ms, .. } => match finished_ms {
+                Some(f) => *f <= self.arrival_ms + self.qos_ms,
+                None => *latency_ms <= self.qos_ms,
+            },
             _ => false,
         }
     }
@@ -103,6 +117,15 @@ impl ServeReport {
         self.records
             .iter()
             .filter(|r| matches!(r.outcome, ServeOutcome::RejectedByPolicy))
+            .count()
+    }
+
+    /// Requests shed at dispatch because their deadline passed while
+    /// they waited in the queue.
+    pub fn expired_in_queue(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::ExpiredInQueue))
             .count()
     }
 
@@ -184,11 +207,12 @@ impl ServeReport {
     /// One-line human summary for CLI / experiment output.
     pub fn summary_line(&self) -> String {
         format!(
-            "{} done / {} shed / {} policy-rejected on {} workers; QoS hit {:.0}%; \
-             p50 {:.0} ms p99 {:.0} ms; {:.2} J/req; \
+            "{} done / {} shed / {} expired / {} policy-rejected on {} workers; \
+             QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; {:.2} J/req; \
              {} reconfigs, {} avoided ({} coalesced); {:.0} req/s",
             self.completed(),
             self.rejected_queue_full(),
+            self.expired_in_queue(),
             self.rejected_by_policy(),
             self.workers,
             self.qos_hit_rate() * 100.0,
@@ -230,6 +254,7 @@ mod tests {
                 select_overhead_ms: 0.01,
                 apply_overhead_ms: 0.0,
                 coalesced,
+                finished_ms: None,
             },
         }
     }
@@ -248,7 +273,7 @@ mod tests {
         ServeReport {
             records,
             cache: CacheStats { hits: 2, reconfigs: 1, apply_ms_total: 50.0 },
-            queue: QueueStats { admitted: 3, rejected: 1, peak_depth: 2 },
+            queue: QueueStats { admitted: 3, rejected: 1, expired: 0, peak_depth: 2 },
             workers: 2,
             wall_ms: 2000.0,
         }
@@ -271,6 +296,7 @@ mod tests {
         assert_eq!(r.completed(), 2);
         assert_eq!(r.rejected_queue_full(), 1);
         assert_eq!(r.rejected_by_policy(), 1);
+        assert_eq!(r.expired_in_queue(), 0);
         assert_eq!(r.coalesced(), 1);
         // 1 of 4 met its deadline
         assert!((r.qos_hit_rate() - 0.25).abs() < 1e-12);
@@ -279,6 +305,43 @@ mod tests {
         // 2 completed over 2 s of wall clock
         assert!((r.throughput_rps() - 1.0).abs() < 1e-9);
         assert!(r.summary_line().contains("2 done"));
+    }
+
+    #[test]
+    fn real_time_qos_verdict_counts_queue_wait() {
+        // arrival 0, qos 100, fast 50 ms execution — but finished at
+        // experiment time 140: the absolute deadline was missed even
+        // though execution latency alone would pass
+        let mut rec = done(0, 100.0, 50.0, 1.0, false);
+        rec.arrival_ms = 0.0;
+        assert!(rec.qos_met(), "virtual time judges execution latency only");
+        if let ServeOutcome::Done { finished_ms, .. } = &mut rec.outcome {
+            *finished_ms = Some(140.0);
+        }
+        assert!(!rec.qos_met(), "queue wait pushed completion past the deadline");
+        if let ServeOutcome::Done { finished_ms, .. } = &mut rec.outcome {
+            *finished_ms = Some(90.0);
+        }
+        assert!(rec.qos_met(), "finished inside the absolute deadline");
+    }
+
+    #[test]
+    fn expired_records_count_as_misses_not_completions() {
+        let r = report(vec![
+            done(0, 100.0, 90.0, 2.0, false),
+            ServeRecord {
+                request_id: 1,
+                qos_ms: 100.0,
+                arrival_ms: 1.0,
+                worker: Some(0),
+                outcome: ServeOutcome::ExpiredInQueue,
+            },
+        ]);
+        assert_eq!(r.completed(), 1);
+        assert_eq!(r.expired_in_queue(), 1);
+        assert!(!r.records[1].qos_met(), "expired request missed its objective");
+        assert_eq!(r.to_metric_set("x").len(), 1, "expired excluded from latency metrics");
+        assert!(r.summary_line().contains("1 expired"));
     }
 
     #[test]

@@ -4,22 +4,30 @@
 //! runtime session on the real path), the config-reuse cache, and its
 //! slice of the records — and shares only the admission queue, the
 //! configuration set, and the (stateless) scheduling policy.  Per
-//! request it: pops, decides via the policy, coalesces same-config
-//! successors into a small batch, activates the configuration once
-//! through the cache, and executes every request of the batch.
+//! request it: pops (shedding requests whose deadline already expired
+//! in the queue), decides via the policy on the request's *remaining*
+//! budget, coalesces same-config successors into a small batch,
+//! activates the configuration once through the cache, and dispatches
+//! the whole batch through one [`Executor::execute_batch`] call —
+//! tensor-driven executors amortize head compute across the batch
+//! (one flat `[batch, …]` activation, one head run).
 //!
-//! Decisions are pure functions of `(set, qos)` and executors used by
-//! the pipeline are order-independent per request, so per-request
-//! results match a sequential Algorithm-1 run regardless of worker
-//! count or interleaving — only the overhead attribution (who paid the
-//! apply) depends on scheduling.
+//! Decisions are pure functions of `(set, budget)` and executors used
+//! by the pipeline are order-independent per request; in virtual time
+//! the budget is the raw QoS level, so per-request results match a
+//! sequential Algorithm-1 run regardless of worker count or
+//! interleaving — only the overhead attribution (who paid the apply)
+//! depends on scheduling.  In real-time replay the budget shrinks with
+//! queue wait (ROADMAP "wait-aware scheduling").
 
 use std::time::Instant;
 
-use crate::controller::{Executor, PolicyDecision, SchedulingPolicy};
 use crate::controller::policy::ConfigSet;
+use crate::controller::{Executor, PolicyDecision, SchedulingPolicy};
+use crate::workload::Request;
 
 use super::cache::ReuseCache;
+use super::clock::ServeClock;
 use super::queue::AdmissionQueue;
 use super::report::{ServeOutcome, ServeRecord};
 
@@ -31,6 +39,8 @@ pub struct Worker<'a, E: Executor> {
     pub policy: &'a dyn SchedulingPolicy,
     /// Maximum same-config requests coalesced into one activation.
     pub max_batch: usize,
+    /// Experiment-clock source for deadline arithmetic.
+    pub clock: ServeClock,
     pub cache: ReuseCache,
     pub executor: E,
     pub records: Vec<ServeRecord>,
@@ -39,9 +49,29 @@ pub struct Worker<'a, E: Executor> {
 impl<'a, E: Executor> Worker<'a, E> {
     /// Serve until the queue closes and drains.
     pub fn run(&mut self) {
-        while let Some(first) = self.queue.pop() {
+        // Copy so the pop_due closure doesn't borrow `self` (the clock
+        // is a stateless time source).
+        let clock = self.clock;
+        loop {
+            // `now` is snapshotted by the queue at the instant the
+            // request is handed out (not before the blocking wait), and
+            // the budget and coalesce predicate reuse that snapshot
+            let Some((first, now, expired)) = self.queue.pop_due(|| clock.now_ms()) else {
+                break;
+            };
+            if expired {
+                self.records.push(ServeRecord {
+                    request_id: first.request.id,
+                    qos_ms: first.request.qos_ms,
+                    arrival_ms: first.arrival_ms,
+                    worker: Some(self.id),
+                    outcome: ServeOutcome::ExpiredInQueue,
+                });
+                continue;
+            }
             let t0 = Instant::now();
-            let decision = self.policy.decide(self.set, first.request.qos_ms);
+            let budget_ms = self.clock.remaining_ms(&first, now);
+            let decision = self.policy.decide(self.set, budget_ms);
             let select_ms = t0.elapsed().as_secs_f64() * 1000.0;
             let idx = match decision {
                 PolicyDecision::Run(idx) => idx,
@@ -58,10 +88,14 @@ impl<'a, E: Executor> Worker<'a, E> {
             };
 
             // coalesce queued successors that map to the same config
+            // (an expired successor stays queued: the next pop cycle
+            // sheds and records it)
             let mut batch = vec![first];
             while batch.len() < self.max_batch {
                 let same = self.queue.pop_if(|r| {
-                    self.policy.decide(self.set, r.request.qos_ms) == PolicyDecision::Run(idx)
+                    !matches!(now, Some(n) if r.deadline_ms() <= n)
+                        && self.policy.decide(self.set, self.clock.remaining_ms(r, now))
+                            == PolicyDecision::Run(idx)
                 });
                 match same {
                     Some(r) => batch.push(r),
@@ -69,13 +103,22 @@ impl<'a, E: Executor> Worker<'a, E> {
                 }
             }
 
-            // one activation for the whole batch (the config-reuse cache
-            // makes it free when the config is already live)
+            // one activation + one executor dispatch for the whole batch
+            // (the config-reuse cache makes the activation free when the
+            // config is already live; batch-capable executors amortize
+            // head compute across the flat [batch, ...] tensor)
             let entry = &self.set.entries()[idx];
             let apply_ms = self.cache.activate(&entry.config);
+            let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
+            let outcomes = self.executor.execute_batch(&requests, &entry.config);
+            // hard check: a short outcome vector would silently drop
+            // records for the batch tail via the zip below
+            assert_eq!(outcomes.len(), batch.len(), "one outcome per batched request");
+            // one completion stamp per batch: in real-time replay the
+            // QoS verdict is taken against the absolute deadline
+            let finished_ms = clock.now_ms();
 
-            for (i, tr) in batch.iter().enumerate() {
-                let out = self.executor.execute(&tr.request, &entry.config);
+            for (i, (tr, out)) in batch.iter().zip(outcomes).enumerate() {
                 self.records.push(ServeRecord {
                     request_id: tr.request.id,
                     qos_ms: tr.request.qos_ms,
@@ -91,6 +134,7 @@ impl<'a, E: Executor> Worker<'a, E> {
                         select_overhead_ms: if i == 0 { select_ms } else { 0.0 },
                         apply_overhead_ms: if i == 0 { apply_ms } else { 0.0 },
                         coalesced: i > 0,
+                        finished_ms,
                     },
                 });
             }
@@ -108,8 +152,11 @@ mod tests {
     use crate::workload::{Request, TimedRequest};
 
     /// Deterministic toy executor: latency = config latency estimate,
-    /// energy = request seed (easy to assert on).
-    struct Toy;
+    /// energy = request seed (easy to assert on).  Counts dispatches to
+    /// show batch coalescing reaches the executor as *one* call.
+    struct Toy {
+        dispatches: usize,
+    }
 
     impl Executor for Toy {
         fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
@@ -120,6 +167,11 @@ mod tests {
                 cloud_energy_j: 0.0,
                 accuracy: 0.9,
             }
+        }
+
+        fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+            self.dispatches += 1;
+            requests.iter().map(|r| self.execute(r, config)).collect()
         }
     }
 
@@ -151,6 +203,25 @@ mod tests {
         }
     }
 
+    fn worker<'a>(
+        queue: &'a AdmissionQueue,
+        set: &'a ConfigSet,
+        max_batch: usize,
+        seed: u64,
+    ) -> Worker<'a, Toy> {
+        Worker {
+            id: 0,
+            queue,
+            set,
+            policy: &PaperPolicy,
+            max_batch,
+            clock: ServeClock::Virtual,
+            cache: ReuseCache::new(Pcg32::seeded(seed)),
+            executor: Toy { dispatches: 0 },
+            records: Vec::new(),
+        }
+    }
+
     #[test]
     fn worker_coalesces_same_config_runs() {
         let set = ConfigSet::new(vec![entry(100.0, 1.0, 3), entry(50.0, 10.0, 9)]);
@@ -160,16 +231,7 @@ mod tests {
             assert!(queue.offer(tr(i, 500.0)));
         }
         queue.close();
-        let mut w = Worker {
-            id: 0,
-            queue: &queue,
-            set: &set,
-            policy: &PaperPolicy,
-            max_batch: 4,
-            cache: ReuseCache::new(Pcg32::seeded(1)),
-            executor: Toy,
-            records: Vec::new(),
-        };
+        let mut w = worker(&queue, &set, 4, 1);
         w.run();
         assert_eq!(w.records.len(), 6);
         // one activation for the first batch of 4, a free (cached) one
@@ -182,6 +244,7 @@ mod tests {
             .filter(|r| matches!(r.outcome, ServeOutcome::Done { coalesced: true, .. }))
             .count();
         assert_eq!(coalesced, 4, "batch followers: 3 in the first, 1 in the second");
+        assert_eq!(w.executor.dispatches, 2, "6 requests reach the executor as 2 batch calls");
     }
 
     #[test]
@@ -194,19 +257,36 @@ mod tests {
             assert!(queue.offer(tr(i, qos)));
         }
         queue.close();
-        let mut w = Worker {
-            id: 0,
-            queue: &queue,
-            set: &set,
-            policy: &PaperPolicy,
-            max_batch: 4,
-            cache: ReuseCache::new(Pcg32::seeded(2)),
-            executor: Toy,
-            records: Vec::new(),
-        };
+        let mut w = worker(&queue, &set, 4, 2);
         w.run();
         assert_eq!(w.records.len(), 4);
         assert_eq!(w.cache.stats.reconfigs, 4, "every request flips the config");
         assert_eq!(w.cache.stats.hits, 0);
+        assert_eq!(w.executor.dispatches, 4, "nothing to coalesce");
+    }
+
+    #[test]
+    fn worker_sheds_expired_requests_and_decides_on_remaining_budget() {
+        let set = ConfigSet::new(vec![entry(100.0, 1.0, 3)]);
+        let queue = AdmissionQueue::new(8);
+        // request 0's deadline is its arrival instant (already passed by
+        // pop time); request 1's budget is effectively unlimited
+        for (id, qos) in [(0usize, 0.0), (1, 1e7)] {
+            assert!(queue.offer(tr(id, qos)));
+        }
+        queue.close();
+        let mut w = worker(&queue, &set, 4, 3);
+        w.clock = ServeClock::Real { t0: Instant::now(), scale: 1.0 };
+        w.run();
+        assert_eq!(w.records.len(), 2);
+        assert!(
+            matches!(w.records[0].outcome, ServeOutcome::ExpiredInQueue),
+            "request 0 expired in queue"
+        );
+        assert!(
+            matches!(w.records[1].outcome, ServeOutcome::Done { .. }),
+            "request 1 still inside its budget"
+        );
+        assert_eq!(queue.stats().expired, 1);
     }
 }

@@ -4,9 +4,18 @@
 //! use this: warmup, adaptive iteration count, median/p5/p95 over sample
 //! batches, and a one-line report.  `cargo bench` filters by substring
 //! argument just like criterion does.
+//!
+//! **Machine-readable trajectory**: `--json <path>` (or the
+//! `DYNASPLIT_BENCH_JSON` env var) appends this run's results to a JSON
+//! trajectory file — `BENCH_runtime.json` at the repo root tracks the
+//! runtime hot path across PRs (`cargo bench --bench micro -- --json
+//! BENCH_runtime.json`).  `DYNASPLIT_BENCH_QUICK=1` shrinks
+//! measure/warmup times for CI smoke runs where the harness itself is
+//! under test, not the numbers.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Harness configuration.
@@ -26,6 +35,18 @@ impl Default for BenchConfig {
             measure: Duration::from_millis(800),
             warmup: Duration::from_millis(200),
             samples: 20,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// CI smoke mode (`DYNASPLIT_BENCH_QUICK=1`): exercises every bench
+    /// case and the JSON path in seconds, without statistical ambition.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            measure: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            samples: 5,
         }
     }
 }
@@ -70,16 +91,32 @@ fn fmt_ns(ns: f64) -> String {
 pub struct Bencher {
     config: BenchConfig,
     filter: Option<String>,
+    /// Trajectory file this run's results are appended to on `finish`.
+    json_path: Option<String>,
     pub results: Vec<BenchResult>,
 }
 
 impl Bencher {
-    /// Build from env args (skips the `--bench` flag cargo passes).
+    /// Build from env args (skips the `--bench` flag cargo passes,
+    /// consumes `--json <path>`; `DYNASPLIT_BENCH_JSON` and
+    /// `DYNASPLIT_BENCH_QUICK` env vars are honored too).
     pub fn from_env() -> Self {
-        let filter = std::env::args()
-            .skip(1)
-            .find(|a| !a.starts_with("--") && !a.is_empty());
-        Bencher { config: BenchConfig::default(), filter, results: Vec::new() }
+        let mut filter = None;
+        let mut json_path = std::env::var("DYNASPLIT_BENCH_JSON").ok();
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--json" {
+                json_path = args.next();
+            } else if !a.starts_with("--") && !a.is_empty() && filter.is_none() {
+                filter = Some(a);
+            }
+        }
+        let config = if std::env::var_os("DYNASPLIT_BENCH_QUICK").is_some() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Bencher { config, filter, json_path, results: Vec::new() }
     }
 
     pub fn with_config(mut self, config: BenchConfig) -> Self {
@@ -151,9 +188,86 @@ impl Bencher {
         });
     }
 
-    /// Final summary block (printed at the end of each bench binary).
+    /// This run as a JSON object (config + per-case results).
+    fn run_json(&self) -> Json {
+        Json::obj(vec![
+            ("measure_ms", Json::num(self.config.measure.as_secs_f64() * 1000.0)),
+            ("samples", Json::num(self.config.samples as f64)),
+            (
+                "quick",
+                Json::Bool(self.config.measure < BenchConfig::default().measure),
+            ),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("median_ns", Json::num(r.median_ns)),
+                        ("p5_ns", Json::num(r.p5_ns)),
+                        ("p95_ns", Json::num(r.p95_ns)),
+                        ("iters", Json::num(r.iters as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Append this run to the JSON trajectory at `path` (created with a
+    /// note when missing or malformed).  Each run is one entry in the
+    /// `runs` array, so a file tracked in git records the perf
+    /// trajectory across PRs.
+    pub fn write_json(&self, path: &str) -> anyhow::Result<()> {
+        let fresh = || {
+            Json::obj(vec![
+                (
+                    "note",
+                    Json::str(
+                        "Perf trajectory of the runtime hot path; append runs with \
+                         `cargo bench --bench micro -- --json <this file>`.",
+                    ),
+                ),
+                ("runs", Json::Arr(Vec::new())),
+            ])
+        };
+        let mut doc = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .filter(|j| matches!(j.opt("runs"), Some(Json::Arr(_))))
+            .unwrap_or_else(fresh);
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(runs)) = m.get_mut("runs") {
+                runs.push(self.run_json());
+            }
+        }
+        std::fs::write(path, doc.encode())?;
+        Ok(())
+    }
+
+    /// Ratio of two recorded medians (`a` over `b`), e.g. the
+    /// naive-vs-GEMM speedup; `None` until both cases ran.
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        let median = |name: &str| {
+            self.results
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.median_ns)
+        };
+        match (median(slow), median(fast)) {
+            (Some(s), Some(f)) if f > 0.0 => Some(s / f),
+            _ => None,
+        }
+    }
+
+    /// Final summary block (printed at the end of each bench binary);
+    /// appends to the JSON trajectory when one was requested.
     pub fn finish(&self) {
         println!("\n{} benchmark(s) run", self.results.len());
+        if let Some(path) = &self.json_path {
+            match self.write_json(path) {
+                Ok(()) => println!("bench results appended to {path}"),
+                Err(e) => eprintln!("failed to write bench JSON {path}: {e:#}"),
+            }
+        }
     }
 }
 
@@ -169,9 +283,13 @@ mod tests {
         }
     }
 
+    fn bencher(filter: Option<String>) -> Bencher {
+        Bencher { config: quick(), filter, json_path: None, results: Vec::new() }
+    }
+
     #[test]
     fn bench_measures_something() {
-        let mut b = Bencher { config: quick(), filter: None, results: Vec::new() };
+        let mut b = bencher(None);
         b.bench("noop-ish", || std::hint::black_box(1 + 1));
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].median_ns >= 0.0);
@@ -180,11 +298,7 @@ mod tests {
 
     #[test]
     fn filter_skips() {
-        let mut b = Bencher {
-            config: quick(),
-            filter: Some("match-me".into()),
-            results: Vec::new(),
-        };
+        let mut b = bencher(Some("match-me".into()));
         b.bench("other", || 1);
         assert!(b.results.is_empty());
         b.bench("yes-match-me-yes", || 1);
@@ -193,9 +307,60 @@ mod tests {
 
     #[test]
     fn run_once_records() {
-        let mut b = Bencher { config: quick(), filter: None, results: Vec::new() };
+        let mut b = bencher(None);
         b.run_once("macro", || std::thread::sleep(Duration::from_millis(1)));
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].median_ns >= 1e6);
+    }
+
+    #[test]
+    fn json_trajectory_appends_runs() {
+        let path = std::env::temp_dir().join(format!(
+            "dynasplit_bench_{}_{}.json",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let path_str = path.to_str().unwrap();
+        let mut b = bencher(None);
+        b.bench("case_a", || std::hint::black_box(2 * 2));
+        b.write_json(path_str).unwrap();
+        b.write_json(path_str).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "each write appends one run");
+        let results = runs[0].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "case_a");
+        assert!(results[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(runs[0].get("quick").unwrap().as_bool().unwrap(), "test config is quick");
+        // malformed file is replaced, not crashed on
+        std::fs::write(&path, "not json").unwrap();
+        b.write_json(path_str).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn speedup_is_ratio_of_medians() {
+        let mut b = bencher(None);
+        b.results.push(BenchResult {
+            name: "slow".into(),
+            median_ns: 800.0,
+            p5_ns: 700.0,
+            p95_ns: 900.0,
+            iters: 10,
+        });
+        b.results.push(BenchResult {
+            name: "fast".into(),
+            median_ns: 200.0,
+            p5_ns: 150.0,
+            p95_ns: 260.0,
+            iters: 10,
+        });
+        assert_eq!(b.speedup("slow", "fast"), Some(4.0));
+        assert_eq!(b.speedup("slow", "missing"), None);
     }
 }

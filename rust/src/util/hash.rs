@@ -1,0 +1,26 @@
+//! Tiny FNV-1a (64-bit) fold, shared by the reference backend's weight
+//! seeding and the serving batch executor's tensor digests so the
+//! constants live in one place.
+
+/// FNV-1a over a word stream.
+pub fn fnv1a<I: IntoIterator<Item = u64>>(words: I) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        h = (h ^ w).wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let a = fnv1a([1, 2, 3]);
+        assert_eq!(a, fnv1a([1, 2, 3]));
+        assert_ne!(a, fnv1a([1, 2, 4]));
+        assert_ne!(a, fnv1a([3, 2, 1]), "order matters");
+        assert_ne!(fnv1a([]), fnv1a([0]), "absorbing a zero word still mixes");
+    }
+}

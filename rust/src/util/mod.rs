@@ -7,3 +7,5 @@ pub mod json;
 pub mod cli;
 pub mod table;
 pub mod bench;
+pub mod hash;
+pub mod parallel;

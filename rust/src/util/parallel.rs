@@ -1,0 +1,131 @@
+//! Scoped-thread data-parallel executor for the runtime kernels.
+//!
+//! No external deps (the workspace is offline/vendored-only), so this is
+//! a thin partition-and-scope helper over `std::thread::scope`: an output
+//! buffer of `rows` rows is split into contiguous row ranges, each range
+//! handed to one scoped thread together with a caller-provided mutable
+//! context slot (per-thread scratch).  Threads never share an output
+//! element, so results are **bit-identical for every thread count** as
+//! long as the per-element computation itself is deterministic — the
+//! invariant the reference-backend kernels are property-tested on.
+
+/// Below this many output elements the partitioned work runs inline on
+/// the calling thread: spawn overhead (~tens of µs) would dominate.
+pub const MIN_PAR_ELEMS: usize = 8 * 1024;
+
+/// Split `out` (logically `rows` rows of `row_len` elements) into up to
+/// `threads` contiguous row chunks and run `f(first_row, chunk, ctx)` on
+/// each, in parallel.  `ctx` provides one mutable context slot per chunk
+/// (scratch buffers etc.); it must hold at least `threads.min(rows)`
+/// items when the parallel path is taken, and at least one item always.
+///
+/// Falls back to a single inline call when `threads <= 1`, when there is
+/// only one row, or when the output is too small to amortize spawning.
+pub fn par_rows<C, F>(threads: usize, out: &mut [f32], rows: usize, row_len: usize, ctx: &mut [C], f: F)
+where
+    C: Send,
+    F: Fn(usize, &mut [f32], &mut C) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len, "out must be rows x row_len");
+    let nt = threads.min(rows).max(1);
+    if nt <= 1 || out.len() < MIN_PAR_ELEMS {
+        f(0, out, &mut ctx[0]);
+        return;
+    }
+    assert!(ctx.len() >= nt, "need one context slot per thread");
+    // balanced contiguous partition: the first `extra` chunks get one
+    // additional row
+    let base = rows / nt;
+    let extra = rows % nt;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut ctx_rest = ctx;
+        let mut row0 = 0usize;
+        for t in 0..nt {
+            let take = base + usize::from(t < extra);
+            let (chunk, tail) = rest.split_at_mut(take * row_len);
+            rest = tail;
+            let (slot, ctx_tail) = ctx_rest.split_at_mut(1);
+            ctx_rest = ctx_tail;
+            let first = row0;
+            let fref = &f;
+            let slot0 = &mut slot[0];
+            s.spawn(move || fref(first, chunk, slot0));
+            row0 += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        // rows*row_len above MIN_PAR_ELEMS so the parallel path runs
+        let rows = 130;
+        let row_len = 100;
+        let mut out = vec![0.0f32; rows * row_len];
+        let mut ctx = vec![(); 4];
+        par_rows(4, &mut out, rows, row_len, &mut ctx, |row0, chunk, _| {
+            for (i, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + i) as f32;
+                }
+            }
+        });
+        for (r, row) in out.chunks_exact(row_len).enumerate() {
+            assert!(row.iter().all(|&v| v == r as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn inline_when_single_thread_or_small() {
+        let mut out = vec![0.0f32; 16];
+        let mut ctx = vec![0u32; 1];
+        par_rows(8, &mut out, 4, 4, &mut ctx, |row0, chunk, c| {
+            // small output: must run as one inline call
+            assert_eq!(row0, 0);
+            assert_eq!(chunk.len(), 16);
+            *c += 1;
+        });
+        assert_eq!(ctx[0], 1);
+    }
+
+    #[test]
+    fn identical_across_thread_counts() {
+        let rows = 120;
+        let row_len = 90;
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; rows * row_len];
+            let mut ctx = vec![(); threads.max(1)];
+            par_rows(threads, &mut out, rows, row_len, &mut ctx, |row0, chunk, _| {
+                for (i, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    let r = row0 + i;
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = ((r * 31 + j) as f32 * 0.37).sin();
+                    }
+                }
+            });
+            out
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(3));
+        assert_eq!(one, run(7));
+    }
+
+    #[test]
+    fn per_thread_context_is_private() {
+        let rows = 64;
+        let row_len = 256; // 16k elems -> parallel path
+        let mut out = vec![0.0f32; rows * row_len];
+        let mut ctx: Vec<Vec<usize>> = vec![Vec::new(); 4];
+        par_rows(4, &mut out, rows, row_len, &mut ctx, |row0, chunk, seen| {
+            seen.push(row0);
+            seen.push(chunk.len() / row_len);
+        });
+        let total: usize = ctx.iter().map(|c| c.get(1).copied().unwrap_or(0)).sum();
+        assert_eq!(total, rows, "chunks partition the rows");
+    }
+}

@@ -4,6 +4,7 @@
 //! hit-rate, and (c) measurably avoid reconfigurations through the
 //! config-reuse cache on a same-config run.
 
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use dynasplit::controller::policy::ConfigSet;
@@ -11,10 +12,15 @@ use dynasplit::controller::{
     ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor, PolicyDecision,
     SchedulingPolicy, StrictDeadlinePolicy,
 };
-use dynasplit::serve::{run_pipeline, PipelineConfig, ServeOutcome};
+use dynasplit::model::manifest::LayerEntry;
+use dynasplit::runtime::{NetworkRuntime, ReferenceBackend};
+use dynasplit::serve::{
+    run_pipeline, AdmissionQueue, BatchLog, BatchRuntimeExecutor, PipelineConfig, ReuseCache,
+    ServeClock, ServeOutcome, ServeRecord, Worker,
+};
 use dynasplit::simulator::Testbed;
 use dynasplit::solver::{ParetoEntry, Solver, Strategy};
-use dynasplit::space::{Config, Network};
+use dynasplit::space::{Config, Network, TpuMode};
 use dynasplit::util::rng::Pcg32;
 use dynasplit::workload::{timeline, ArrivalProcess, Request, TimedRequest, WorkloadGen};
 
@@ -193,6 +199,140 @@ fn strict_policy_rejects_hopeless_deadlines_paper_admits_them() {
     })
     .expect("paper run");
     assert_eq!(paper.completed(), 50, "paper policy admits and minimizes violation");
+}
+
+fn serve_layers() -> Vec<LayerEntry> {
+    vec![
+        LayerEntry::synthetic(0, vec![8, 8, 2], vec![8, 8, 6]),
+        LayerEntry::synthetic(1, vec![8, 8, 6], vec![4, 4, 8]),
+        LayerEntry::synthetic(2, vec![4, 4, 8], vec![16]),
+    ]
+}
+
+fn serve_runtime(layers: &[LayerEntry]) -> NetworkRuntime {
+    NetworkRuntime::from_layers(&ReferenceBackend::new(), Network::Vgg16, 1, layers, None)
+        .expect("reference runtime")
+}
+
+/// One-config set whose split is valid for [`serve_layers`].
+fn one_config_set(split: usize) -> ConfigSet {
+    ConfigSet::new(vec![ParetoEntry {
+        config: Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split },
+        latency_ms: 100.0,
+        energy_j: 1.0,
+        accuracy: 0.95,
+    }])
+}
+
+#[test]
+fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
+    let layers = serve_layers();
+    let set = one_config_set(2);
+    let tl = same_config_timeline(60, 2000.0);
+
+    // a full worker dispatch loop over a pre-filled queue: deterministic
+    // coalescing, so executor-invocation counts are exact
+    let run = |max_batch: usize| -> (Vec<ServeRecord>, BatchLog) {
+        let queue = AdmissionQueue::new(128);
+        for tr in &tl {
+            assert!(queue.offer(tr.clone()));
+        }
+        queue.close();
+        let log = Arc::new(Mutex::new(BatchLog::default()));
+        let mut worker = Worker {
+            id: 0,
+            queue: &queue,
+            set: &set,
+            policy: &PaperPolicy,
+            max_batch,
+            clock: ServeClock::Virtual,
+            cache: ReuseCache::new(Pcg32::seeded(3)),
+            executor: BatchRuntimeExecutor::new(serve_runtime(&layers), log.clone()),
+            records: Vec::new(),
+        };
+        worker.run();
+        let snapshot = log.lock().unwrap().clone();
+        (worker.records, snapshot)
+    };
+
+    let (per_records, per_log) = run(1);
+    let (bat_records, bat_log) = run(4);
+
+    // the amortization: 60 requests reach the executor as 15 flat
+    // [4, ...] head calls instead of 60 single-image calls
+    assert_eq!(per_log.head_runs, 60, "per-request baseline: one head run each");
+    assert_eq!(bat_log.head_runs, 15, "coalesced: 60 requests / max_batch 4");
+    assert!(bat_log.head_runs < per_log.head_runs, "fewer executor invocations");
+    assert_eq!((per_log.requests, bat_log.requests), (60, 60));
+
+    // identical outputs: every request's head tensor digest matches
+    // bit-for-bit between batched and per-request execution
+    let by_id = |mut d: Vec<(usize, u64)>| {
+        d.sort_unstable();
+        d
+    };
+    assert_eq!(by_id(per_log.digests), by_id(bat_log.digests), "bitwise-identical tensors");
+
+    // and the recorded outcomes agree (they are tensor-derived)
+    assert_eq!(per_records.len(), bat_records.len());
+    let mut coalesced = 0;
+    for (a, b) in per_records.iter().zip(&bat_records) {
+        assert_eq!(a.request_id, b.request_id, "single worker preserves FIFO order");
+        match (&a.outcome, &b.outcome) {
+            (
+                ServeOutcome::Done { latency_ms: la, energy_j: ea, .. },
+                ServeOutcome::Done { latency_ms: lb, energy_j: eb, coalesced: c, .. },
+            ) => {
+                assert_eq!(la, lb, "request {}", a.request_id);
+                assert_eq!(ea, eb, "request {}", a.request_id);
+                coalesced += usize::from(*c);
+            }
+            other => panic!("request {} did not complete twice: {other:?}", a.request_id),
+        }
+    }
+    assert_eq!(coalesced, 45, "3 followers in each of the 15 batches");
+}
+
+#[test]
+fn pipeline_with_batch_executor_matches_solo_tensor_execution() {
+    let layers = serve_layers();
+    let set = one_config_set(2);
+    let tl = same_config_timeline(48, 2000.0);
+
+    // solo tensor baseline: every request alone through a fresh runtime
+    let solo_log = Arc::new(Mutex::new(BatchLog::default()));
+    let mut solo = BatchRuntimeExecutor::new(serve_runtime(&layers), solo_log.clone());
+    let config = set.entries()[0].config;
+    let baseline: Vec<ExecOutcome> =
+        tl.iter().map(|tr| solo.execute(&tr.request, &config)).collect();
+
+    let log = Arc::new(Mutex::new(BatchLog::default()));
+    let cfg = PipelineConfig {
+        workers: 2,
+        queue_capacity: 128,
+        max_batch: 4,
+        time_scale: 0.0,
+        seed: 9,
+        reuse: true,
+    };
+    let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
+        Ok(BatchRuntimeExecutor::new(serve_runtime(&layers), log.clone()))
+    })
+    .expect("pipeline run");
+
+    assert_eq!(report.completed(), 48);
+    for (record, want) in report.records.iter().zip(&baseline) {
+        match &record.outcome {
+            ServeOutcome::Done { latency_ms, energy_j, .. } => {
+                assert_eq!(*latency_ms, want.latency_ms, "request {}", record.request_id);
+                assert_eq!(*energy_j, want.energy_j, "request {}", record.request_id);
+            }
+            other => panic!("request {} not completed: {other:?}", record.request_id),
+        }
+    }
+    let l = log.lock().unwrap();
+    assert_eq!(l.requests, 48, "every request executed exactly once");
+    assert!(l.head_runs <= 48, "batching can only reduce executor invocations");
 }
 
 #[test]
