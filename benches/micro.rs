@@ -10,7 +10,9 @@
 
 use std::sync::{Arc, Mutex};
 
+use dynasplit::adapt::{ConfigStore, Sample, Telemetry};
 use dynasplit::controller::algorithm1::{self, SelectIndex};
+use dynasplit::controller::policy::ConfigSet;
 use dynasplit::controller::Executor;
 use dynasplit::model::manifest::LayerEntry;
 use dynasplit::model::{Manifest, NetCost};
@@ -236,6 +238,44 @@ fn main() {
         {
             println!("    >> serve-batch head amortization speedup: {s:.2}x");
         }
+    }
+
+    // --- adapt path: store snapshot / hot-swap / telemetry record ---
+    // The snapshot sits on every dispatch batch and the telemetry record
+    // on every completed request — both must stay negligible next to
+    // per-request inference.  The swap (sort + SelectIndex + digest
+    // rebuild on a production-scale set) happens once per online
+    // re-solve; its cost bounds how "live" a hot-swap can be.
+    {
+        let entries: Vec<ParetoEntry> = (0..1_000)
+            .map(|_| ParetoEntry {
+                config: space.sample(&mut rng),
+                latency_ms: rng.uniform(50.0, 5000.0),
+                energy_j: rng.uniform(1.0, 100.0),
+                accuracy: rng.uniform(0.9, 1.0),
+            })
+            .collect();
+        let store = ConfigStore::new(ConfigSet::new(entries.clone()));
+        b.bench("runtime_adapt_store_snapshot", || store.snapshot().epoch());
+        b.bench("runtime_adapt_store_swap_n1000", || {
+            store.swap(ConfigSet::new(entries.clone()))
+        });
+        let telemetry = Telemetry::new(1, 256);
+        let sample = Sample {
+            epoch: 0,
+            config: entries[0].config,
+            predicted_latency_ms: entries[0].latency_ms,
+            predicted_energy_j: entries[0].energy_j,
+            latency_ms: entries[0].latency_ms * 1.1,
+            energy_j: entries[0].energy_j,
+            edge_energy_j: entries[0].energy_j / 2.0,
+            cloud_energy_j: entries[0].energy_j / 2.0,
+            accuracy: 0.95,
+        };
+        b.bench("runtime_adapt_telemetry_record", || {
+            telemetry.record(0, sample);
+            telemetry.recorded()
+        });
     }
 
     // --- NSGA machinery ---

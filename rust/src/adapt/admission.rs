@@ -1,0 +1,127 @@
+//! Closed-loop admission: queue-depth × EWMA-latency backpressure.
+//!
+//! The bounded queue sheds only when *full*; by then every queued
+//! request has already committed a worker to likely-late work.  The
+//! gate moves the shedding decision to admission time using live
+//! telemetry: with `depth` requests queued and an EWMA service latency
+//! `s`, a new arrival expects `s · depth / workers` of *queue wait*
+//! before any worker even looks at it — if that alone already exceeds
+//! its QoS budget (times `slack`), admitting it can only produce a
+//! guaranteed-late answer, so it is shed immediately and reported as
+//! such.  The estimate deliberately excludes the arrival's own service
+//! time: that depends on the configuration the scheduler will pick for
+//! *this* request's budget (a tight deadline gets a fast config), while
+//! the workload-mean EWMA describes the traffic ahead of it — charging
+//! it here would wrongly shed satisfiable tight-deadline requests at an
+//! empty queue.
+//!
+//! The gate stays open until the EWMA has `warmup` observations: cold
+//! estimates must not shed real traffic.  It belongs to wait-aware
+//! (real-time) serving, where queue depth actually costs deadline
+//! budget; `run_closed_loop` only engages it when `time_scale > 0`.
+
+use std::sync::Arc;
+
+use super::telemetry::EwmaCell;
+
+/// Admission backpressure fed by the telemetry EWMA.
+pub struct AdmissionGate {
+    pub service_ewma: Arc<EwmaCell>,
+    pub workers: usize,
+    /// EWMA observations required before the gate acts.
+    pub warmup: u64,
+    /// Admit while `estimated queue wait <= slack × qos`.
+    pub slack: f64,
+}
+
+impl AdmissionGate {
+    pub fn new(service_ewma: Arc<EwmaCell>, workers: usize) -> AdmissionGate {
+        AdmissionGate { service_ewma, workers: workers.max(1), warmup: 16, slack: 1.0 }
+    }
+
+    /// Estimated queue wait for an arrival seeing `depth` queued
+    /// requests (`None` while the EWMA is cold).  Zero at an empty
+    /// queue: the gate never second-guesses the scheduler about the
+    /// arrival's own service time.
+    pub fn estimate_ms(&self, depth: usize) -> Option<f64> {
+        if self.service_ewma.count() < self.warmup {
+            return None;
+        }
+        self.service_ewma
+            .value()
+            .map(|s| s * depth as f64 / self.workers as f64)
+    }
+
+    /// Should an arrival with budget `qos_ms` be admitted at `depth`?
+    pub fn admit(&self, depth: usize, qos_ms: f64) -> bool {
+        match self.estimate_ms(depth) {
+            Some(est) => est <= self.slack * qos_ms,
+            None => true, // cold gate never sheds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warm_gate(service_ms: f64, workers: usize) -> AdmissionGate {
+        let cell = Arc::new(EwmaCell::new(0.2));
+        for _ in 0..32 {
+            cell.observe(service_ms);
+        }
+        AdmissionGate::new(cell, workers)
+    }
+
+    #[test]
+    fn cold_gate_admits_everything() {
+        let gate = AdmissionGate::new(Arc::new(EwmaCell::new(0.2)), 2);
+        assert!(gate.admit(10_000, 0.001), "no observations: wide open");
+        assert_eq!(gate.estimate_ms(5), None);
+        // below warmup it still admits
+        let cell = Arc::new(EwmaCell::new(0.2));
+        for _ in 0..3 {
+            cell.observe(1e6);
+        }
+        assert!(AdmissionGate::new(cell, 1).admit(100, 1.0));
+    }
+
+    #[test]
+    fn empty_queue_never_sheds() {
+        // the arrival's own service time is the scheduler's problem (a
+        // tight budget gets a fast config) — a warm gate with a slow
+        // workload mean must not shed a satisfiable tight request at
+        // depth 0
+        let gate = warm_gate(450.0, 1);
+        assert_eq!(gate.estimate_ms(0), Some(0.0));
+        assert!(gate.admit(0, 120.0), "tight budget, empty queue: scheduler decides");
+        assert!(gate.admit(0, 0.001));
+    }
+
+    #[test]
+    fn deep_queues_shed_tight_deadlines_only() {
+        let gate = warm_gate(10.0, 1);
+        // depth 9: estimated wait = 10 * 9 = 90 ms
+        assert!(gate.admit(9, 150.0));
+        assert!(!gate.admit(9, 80.0));
+        // deeper still sheds a looser budget
+        assert!(!gate.admit(20, 150.0));
+    }
+
+    #[test]
+    fn more_workers_drain_faster() {
+        let one = warm_gate(10.0, 1);
+        let four = warm_gate(10.0, 4);
+        // depth 8, qos 40: estimated wait 80 ms on one worker, 20 on four
+        assert!(!one.admit(8, 40.0));
+        assert!(four.admit(8, 40.0));
+    }
+
+    #[test]
+    fn slack_loosens_the_gate() {
+        let mut gate = warm_gate(10.0, 1);
+        assert!(!gate.admit(9, 80.0));
+        gate.slack = 2.0;
+        assert!(gate.admit(9, 80.0), "2x slack admits the borderline arrival");
+    }
+}

@@ -1,0 +1,451 @@
+//! Drift detection: windowed measured-vs-predicted comparison, and the
+//! calibration extracted from drifted telemetry.
+//!
+//! The adaptation loop seals telemetry into fixed-size windows
+//! ([`WindowStats::of`]), then per configuration compares the window's
+//! mean measured latency/energy against the predictions the scheduler
+//! decided on.  A configuration whose relative error exceeds
+//! `rel_threshold` on either objective for `consecutive_windows`
+//! windows in a row is *drifted* — one flaky window (a burst of jitter)
+//! never triggers a re-solve, a sustained shift does (DESIGN.md §11).
+//!
+//! [`Calibration`] is what the re-solve consumes: per-config
+//! measured/predicted ratios where telemetry observed the config, and
+//! placement-bucketed fallback ratios elsewhere.  Bucketing by
+//! `is_edge_only` matters because the common drift sources act on one
+//! side of the split: a bandwidth collapse inflates every offloading
+//! configuration but leaves edge-only ones untouched, while edge
+//! thermal throttling does the reverse.
+
+use std::collections::BTreeMap;
+
+use crate::space::Config;
+use crate::util::stats;
+
+use super::telemetry::Sample;
+
+/// Per-configuration aggregate over one sealed window.
+#[derive(Debug, Clone)]
+pub struct ConfigWindow {
+    pub config: Config,
+    pub n: usize,
+    pub measured_latency_ms: f64,
+    pub predicted_latency_ms: f64,
+    pub measured_energy_j: f64,
+    pub predicted_energy_j: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+}
+
+impl ConfigWindow {
+    /// measured / predicted latency (NaN-safe: predictions are checked
+    /// positive before the ratio is taken).
+    pub fn latency_ratio(&self) -> f64 {
+        self.measured_latency_ms / self.predicted_latency_ms
+    }
+
+    pub fn energy_ratio(&self) -> f64 {
+        self.measured_energy_j / self.predicted_energy_j
+    }
+}
+
+/// One sealed telemetry window.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    pub n: usize,
+    pub latency_mean_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub energy_mean_j: f64,
+    /// Per-config aggregates, deterministically ordered.
+    pub by_config: Vec<ConfigWindow>,
+}
+
+impl WindowStats {
+    /// Aggregate a window of samples.  Panics on an empty window (the
+    /// loop only seals full windows).
+    pub fn of(samples: &[Sample]) -> WindowStats {
+        assert!(!samples.is_empty(), "WindowStats::of(empty)");
+        let lat: Vec<f64> = samples.iter().map(|s| s.latency_ms).collect();
+        // BTreeMap: grouped *and* deterministically ordered by Config
+        let mut groups: BTreeMap<Config, Vec<&Sample>> = BTreeMap::new();
+        for s in samples {
+            groups.entry(s.config).or_default().push(s);
+        }
+        let by_config: Vec<ConfigWindow> = groups
+            .into_values()
+            .map(|g| {
+                let n = g.len() as f64;
+                let mean = |f: fn(&Sample) -> f64| g.iter().map(|s| f(s)).sum::<f64>() / n;
+                let glat: Vec<f64> = g.iter().map(|s| s.latency_ms).collect();
+                ConfigWindow {
+                    config: g[0].config,
+                    n: g.len(),
+                    measured_latency_ms: mean(|s| s.latency_ms),
+                    predicted_latency_ms: mean(|s| s.predicted_latency_ms),
+                    measured_energy_j: mean(|s| s.energy_j),
+                    predicted_energy_j: mean(|s| s.predicted_energy_j),
+                    latency_p50_ms: stats::quantile(&glat, 0.5),
+                    latency_p95_ms: stats::quantile(&glat, 0.95),
+                }
+            })
+            .collect();
+        WindowStats {
+            n: samples.len(),
+            latency_mean_ms: stats::mean(&lat),
+            latency_p50_ms: stats::quantile(&lat, 0.5),
+            latency_p95_ms: stats::quantile(&lat, 0.95),
+            energy_mean_j: samples.iter().map(|s| s.energy_j).sum::<f64>()
+                / samples.len() as f64,
+            by_config,
+        }
+    }
+}
+
+/// Ratios are only meaningful over positive, finite predictions (a NaN
+/// or ~zero prediction is an upstream bug, not drift).
+fn usable_prediction(cw: &ConfigWindow) -> bool {
+    cw.predicted_latency_ms.is_finite()
+        && cw.predicted_latency_ms > 1e-9
+        && cw.predicted_energy_j.is_finite()
+        && cw.predicted_energy_j > 1e-9
+}
+
+/// Drift-detection thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Relative measured-vs-predicted error that counts as off-model
+    /// (0.25 = 25% — comfortably above the simulator's lognormal
+    /// jitter, well below a bandwidth collapse).
+    pub rel_threshold: f64,
+    /// Consecutive off-model windows before a config is flagged.
+    pub consecutive_windows: usize,
+    /// Minimum samples of a config within a window for its window to
+    /// count at all (small-n means are too noisy to act on).
+    pub min_samples: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig { rel_threshold: 0.25, consecutive_windows: 2, min_samples: 4 }
+    }
+}
+
+/// One drifted configuration with its sustained error ratios.
+#[derive(Debug, Clone)]
+pub struct DriftedConfig {
+    pub config: Config,
+    pub latency_ratio: f64,
+    pub energy_ratio: f64,
+}
+
+/// What a detection event reports to the re-solver.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub drifted: Vec<DriftedConfig>,
+    /// Windows observed when the event fired.
+    pub window: usize,
+}
+
+/// Streak-keeping drift detector.
+pub struct DriftDetector {
+    pub cfg: DriftConfig,
+    streaks: BTreeMap<Config, usize>,
+    windows_seen: usize,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        DriftDetector { cfg, streaks: BTreeMap::new(), windows_seen: 0 }
+    }
+
+    /// Feed one sealed window; returns a report when at least one
+    /// configuration has been off-model for `consecutive_windows`
+    /// windows in a row.
+    ///
+    /// "Consecutive" is literal: a config absent from a window (or
+    /// present below `min_samples`) has its streak cleared, so two
+    /// jitter bursts separated by quiet windows can never add up to a
+    /// detection — only back-to-back measurable off-model windows can.
+    pub fn observe(&mut self, window: &WindowStats) -> Option<DriftReport> {
+        self.windows_seen += 1;
+        let mut drifted = Vec::new();
+        let mut measurable: Vec<Config> = Vec::new();
+        for cw in &window.by_config {
+            if cw.n < self.cfg.min_samples || !usable_prediction(cw) {
+                continue; // too thin or unusable predictions: no verdict
+            }
+            let lat_err = (cw.latency_ratio() - 1.0).abs();
+            let energy_err = (cw.energy_ratio() - 1.0).abs();
+            measurable.push(cw.config);
+            if lat_err > self.cfg.rel_threshold || energy_err > self.cfg.rel_threshold {
+                let streak = self.streaks.entry(cw.config).or_insert(0);
+                *streak += 1;
+                if *streak >= self.cfg.consecutive_windows {
+                    drifted.push(DriftedConfig {
+                        config: cw.config,
+                        latency_ratio: cw.latency_ratio(),
+                        energy_ratio: cw.energy_ratio(),
+                    });
+                }
+            } else {
+                self.streaks.insert(cw.config, 0);
+            }
+        }
+        // a streak only survives windows in which its config stayed
+        // measurably present — absence (or thin presence) breaks it
+        self.streaks.retain(|key, _| measurable.contains(key));
+        if drifted.is_empty() {
+            None
+        } else {
+            Some(DriftReport { drifted, window: self.windows_seen })
+        }
+    }
+
+    /// Forget all streaks — called after a swap, because the new set's
+    /// predictions start fresh.
+    pub fn reset(&mut self) {
+        self.streaks.clear();
+    }
+
+    pub fn windows_seen(&self) -> usize {
+        self.windows_seen
+    }
+}
+
+/// Measured/predicted correction ratios the re-solve applies to the
+/// simulator's objective model.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Fallback ratios for edge-only configurations: (latency, energy).
+    pub edge: (f64, f64),
+    /// Fallback ratios for offloading (split or cloud) configurations.
+    pub offload: (f64, f64),
+    /// Exact ratios for configurations telemetry observed.
+    per_config: BTreeMap<Config, (f64, f64)>,
+}
+
+impl Calibration {
+    /// No correction.
+    pub fn identity() -> Calibration {
+        Calibration { edge: (1.0, 1.0), offload: (1.0, 1.0), per_config: BTreeMap::new() }
+    }
+
+    /// Estimate from raw samples: per observed config the ratio of mean
+    /// measured over mean predicted; per placement bucket the median of
+    /// its configs' ratios (1.0 when a bucket was never observed).
+    pub fn from_samples(samples: &[Sample]) -> Calibration {
+        if samples.is_empty() {
+            return Calibration::identity();
+        }
+        let window = WindowStats::of(samples);
+        let mut per_config = BTreeMap::new();
+        let (mut edge_lat, mut edge_en) = (Vec::new(), Vec::new());
+        let (mut off_lat, mut off_en) = (Vec::new(), Vec::new());
+        for cw in &window.by_config {
+            if !usable_prediction(cw) {
+                continue;
+            }
+            let r = (cw.latency_ratio(), cw.energy_ratio());
+            per_config.insert(cw.config, r);
+            if cw.config.is_edge_only() {
+                edge_lat.push(r.0);
+                edge_en.push(r.1);
+            } else {
+                off_lat.push(r.0);
+                off_en.push(r.1);
+            }
+        }
+        let bucket = |lat: &[f64], en: &[f64]| {
+            if lat.is_empty() {
+                (1.0, 1.0)
+            } else {
+                (stats::median(lat), stats::median(en))
+            }
+        };
+        Calibration {
+            edge: bucket(&edge_lat, &edge_en),
+            offload: bucket(&off_lat, &off_en),
+            per_config,
+        }
+    }
+
+    /// Correct a model prediction for `config`.
+    pub fn correct(&self, config: &Config, latency_ms: f64, energy_j: f64) -> (f64, f64) {
+        let (rl, re) = self
+            .per_config
+            .get(config)
+            .copied()
+            .unwrap_or(if config.is_edge_only() { self.edge } else { self.offload });
+        (latency_ms * rl, energy_j * re)
+    }
+
+    /// Number of configurations with exact measured ratios.
+    pub fn observed_configs(&self) -> usize {
+        self.per_config.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Network, TpuMode};
+
+    fn sample(split: usize, predicted: f64, measured: f64) -> Sample {
+        Sample {
+            epoch: 0,
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            predicted_latency_ms: predicted,
+            predicted_energy_j: 2.0,
+            latency_ms: measured,
+            energy_j: 2.0,
+            edge_energy_j: 1.0,
+            cloud_energy_j: 1.0,
+            accuracy: 0.95,
+        }
+    }
+
+    fn edge_sample(predicted: f64, measured: f64) -> Sample {
+        let mut s = sample(22, predicted, measured); // split == L: edge-only
+        s.config.gpu = false;
+        s
+    }
+
+    fn window(samples: &[Sample]) -> WindowStats {
+        WindowStats::of(samples)
+    }
+
+    #[test]
+    fn window_stats_aggregate_per_config() {
+        let samples: Vec<Sample> = (0..8)
+            .map(|i| sample(if i < 5 { 3 } else { 9 }, 100.0, 100.0 + i as f64))
+            .collect();
+        let w = window(&samples);
+        assert_eq!(w.n, 8);
+        assert_eq!(w.by_config.len(), 2);
+        let c3 = w.by_config.iter().find(|c| c.config.split == 3).unwrap();
+        assert_eq!(c3.n, 5);
+        assert!((c3.measured_latency_ms - 102.0).abs() < 1e-9);
+        assert!((c3.predicted_latency_ms - 100.0).abs() < 1e-9);
+        assert!(c3.latency_p50_ms <= c3.latency_p95_ms);
+        assert!(w.latency_p50_ms <= w.latency_p95_ms);
+    }
+
+    #[test]
+    fn one_bad_window_does_not_flag_two_do() {
+        let mut d = DriftDetector::new(DriftConfig {
+            rel_threshold: 0.25,
+            consecutive_windows: 2,
+            min_samples: 4,
+        });
+        let off: Vec<Sample> = (0..8).map(|_| sample(3, 100.0, 180.0)).collect();
+        let fine: Vec<Sample> = (0..8).map(|_| sample(3, 100.0, 105.0)).collect();
+        assert!(d.observe(&window(&off)).is_none(), "first off-model window: streak only");
+        let report = d.observe(&window(&off)).expect("second consecutive window flags");
+        assert_eq!(report.drifted.len(), 1);
+        assert!((report.drifted[0].latency_ratio - 1.8).abs() < 1e-9);
+        // a clean window resets the streak
+        d.reset();
+        assert!(d.observe(&window(&off)).is_none());
+        assert!(d.observe(&window(&fine)).is_none(), "recovered: streak broken");
+        assert!(d.observe(&window(&off)).is_none(), "streak restarts from zero");
+    }
+
+    #[test]
+    fn separated_bursts_never_add_up_to_a_detection() {
+        // off-model in window 1, then *absent* (or too thin) for many
+        // windows, then off-model again: the streak must have been
+        // cleared in between — two separated jitter bursts are not
+        // "consecutive off-model windows"
+        let mut d = DriftDetector::new(DriftConfig {
+            rel_threshold: 0.25,
+            consecutive_windows: 2,
+            min_samples: 4,
+        });
+        let off: Vec<Sample> = (0..8).map(|_| sample(3, 100.0, 180.0)).collect();
+        let other_config: Vec<Sample> = (0..8).map(|_| sample(9, 100.0, 102.0)).collect();
+        let thin_off: Vec<Sample> = (0..3).map(|_| sample(3, 100.0, 180.0)).collect();
+        assert!(d.observe(&window(&off)).is_none(), "burst one: streak starts");
+        for _ in 0..5 {
+            assert!(d.observe(&window(&other_config)).is_none(), "config absent");
+        }
+        assert!(
+            d.observe(&window(&off)).is_none(),
+            "burst two after absence must restart the streak, not complete it"
+        );
+        // thin presence clears too
+        assert!(d.observe(&window(&thin_off)).is_none());
+        assert!(d.observe(&window(&off)).is_none(), "streak restarted after thin window");
+        // only genuinely consecutive measurable windows flag
+        assert!(d.observe(&window(&off)).is_some());
+    }
+
+    #[test]
+    fn thin_windows_never_flag() {
+        let mut d = DriftDetector::new(DriftConfig {
+            rel_threshold: 0.25,
+            consecutive_windows: 1,
+            min_samples: 4,
+        });
+        let thin: Vec<Sample> = (0..3).map(|_| sample(3, 100.0, 500.0)).collect();
+        assert!(d.observe(&window(&thin)).is_none(), "3 samples < min_samples 4");
+    }
+
+    #[test]
+    fn energy_drift_alone_flags_too() {
+        let mut d = DriftDetector::new(DriftConfig {
+            rel_threshold: 0.25,
+            consecutive_windows: 1,
+            min_samples: 1,
+        });
+        let mut s = sample(3, 100.0, 100.0);
+        s.energy_j = 4.0; // predicted 2.0 -> ratio 2.0
+        let report = d.observe(&window(&[s; 4])).expect("energy drift flags");
+        assert!((report.drifted[0].energy_ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_buckets_by_placement() {
+        // offloading configs measured 2x slow; edge-only configs on-model
+        let mut samples = Vec::new();
+        for _ in 0..6 {
+            samples.push(sample(3, 100.0, 200.0));
+            samples.push(edge_sample(400.0, 404.0));
+        }
+        let c = Calibration::from_samples(&samples);
+        assert_eq!(c.observed_configs(), 2);
+        assert!((c.offload.0 - 2.0).abs() < 1e-9);
+        assert!((c.edge.0 - 1.01).abs() < 1e-9);
+        // observed config: exact ratio
+        let (lat, _) = c.correct(&samples[0].config, 100.0, 2.0);
+        assert!((lat - 200.0).abs() < 1e-9);
+        // unobserved offloading config: bucket fallback
+        let mut other = samples[0].config;
+        other.split = 7;
+        let (lat, _) = c.correct(&other, 50.0, 1.0);
+        assert!((lat - 100.0).abs() < 1e-9);
+        // unobserved edge-only config: edge bucket
+        let mut edge = samples[1].config;
+        edge.cpu_idx = 3;
+        let (lat, _) = c.correct(&edge, 1000.0, 1.0);
+        assert!((lat - 1010.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn identity_calibration_is_a_noop() {
+        let c = Calibration::identity();
+        let cfg = sample(3, 1.0, 1.0).config;
+        assert_eq!(c.correct(&cfg, 123.0, 4.5), (123.0, 4.5));
+        assert_eq!(c.observed_configs(), 0);
+        assert_eq!(
+            Calibration::from_samples(&[]).correct(&cfg, 10.0, 1.0),
+            (10.0, 1.0)
+        );
+    }
+}

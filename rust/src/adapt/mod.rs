@@ -1,0 +1,399 @@
+//! Closed-loop adaptation: telemetry → drift detection → online
+//! re-solve → live Pareto-store hot-swap (DESIGN.md §11).
+//!
+//! The offline/online split of the paper leaves the Pareto store frozen
+//! at solve time; measured latency/energy never feeds back, so model
+//! drift (bandwidth shifts, thermal throttling, calibration error)
+//! silently erodes the deadline-hit rate.  This module closes the loop:
+//!
+//! ```text
+//!  Workers ──record──▶ Telemetry (per-worker rings)
+//!                          │ drain (adaptation thread)
+//!                     window seal ──▶ DriftDetector (K consecutive windows)
+//!                          │ drift                     │
+//!                     EwmaCell ──▶ AdmissionGate   Calibration + ObservationPool
+//!                     (feeder backpressure)            │
+//!                                              resolve (warm-started NSGA-III)
+//!                                                      │
+//!  Workers ◀──snapshot── ConfigStore ◀──swap── fresh ConfigSet (epoch + 1)
+//! ```
+//!
+//! * [`store`]     — epoch/`Arc`-swap [`ConfigStore`] (the ownership
+//!   seam the whole pipeline resolves configs through);
+//! * [`telemetry`] — lock-light per-worker rings + the lock-free EWMA;
+//! * [`drift`]     — windowed measured-vs-predicted comparison with
+//!   K-consecutive-window streaks, and the extracted [`Calibration`];
+//! * [`resolve`]   — warm-started, measurement-calibrated NSGA-III
+//!   re-solve;
+//! * [`admission`] — queue-depth × EWMA-latency admission backpressure;
+//! * [`AdaptiveLoop`] — the background controller tying them together,
+//!   driven concurrently by [`run_closed_loop`] or synchronously via
+//!   [`AdaptiveLoop::step`] (what the deterministic tests use).
+
+pub mod admission;
+pub mod drift;
+pub mod resolve;
+pub mod store;
+pub mod telemetry;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::controller::policy::{ConfigSet, SchedulingPolicy};
+use crate::controller::Executor;
+use crate::serve::{self, PipelineConfig, ServeReport};
+use crate::simulator::Testbed;
+use crate::solver::{Observation, ObservationPool};
+use crate::space::Network;
+use crate::workload::TimedRequest;
+
+pub use admission::AdmissionGate;
+pub use drift::{Calibration, DriftConfig, DriftDetector, DriftReport, WindowStats};
+pub use resolve::{resolve, ResolveConfig};
+pub use store::{ConfigStore, StoreSnapshot};
+pub use telemetry::{EwmaCell, Sample, Telemetry};
+
+/// Knobs of the whole adaptation loop.
+#[derive(Debug, Clone)]
+pub struct AdaptConfig {
+    /// Samples per sealed drift window.
+    pub window: usize,
+    pub drift: DriftConfig,
+    pub resolve: ResolveConfig,
+    /// Background-thread poll cadence (ms) in [`run_closed_loop`].
+    pub poll_ms: u64,
+    /// EWMA smoothing for the admission gate's service estimate.
+    pub ewma_alpha: f64,
+    /// Per-worker telemetry ring capacity.
+    pub telemetry_capacity: usize,
+    /// Recent samples kept for calibration / the measured pool.
+    pub history: usize,
+    /// Safety valve: stop swapping after this many (a runaway loop
+    /// thrashing the store is worse than a stale store).
+    pub max_swaps: usize,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> AdaptConfig {
+        AdaptConfig {
+            window: 32,
+            drift: DriftConfig::default(),
+            resolve: ResolveConfig::default(),
+            poll_ms: 1,
+            ewma_alpha: 0.2,
+            telemetry_capacity: 4096,
+            history: 256,
+            max_swaps: 8,
+        }
+    }
+}
+
+/// Loop bookkeeping, reported after a closed-loop run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaptStats {
+    /// Samples drained from telemetry.
+    pub samples: u64,
+    /// Windows sealed and fed to the detector.
+    pub windows: usize,
+    /// Detection events (some may be suppressed by `max_swaps`).
+    pub drift_events: usize,
+    /// Re-solves run.
+    pub resolves: usize,
+    /// Store hot-swaps performed.
+    pub swaps: usize,
+}
+
+/// The background adaptation controller.  Owns no thread itself:
+/// [`AdaptiveLoop::step`] is synchronous and deterministic given the
+/// drained samples, which is what the integration tests drive directly;
+/// [`run_closed_loop`] wraps it in a polling thread for live serving.
+pub struct AdaptiveLoop<'a> {
+    store: &'a ConfigStore,
+    telemetry: &'a Telemetry,
+    testbed: &'a Testbed,
+    net: Network,
+    cfg: AdaptConfig,
+    /// Shared with the admission gate (lock-free read on the feeder).
+    pub service_ewma: Arc<EwmaCell>,
+    detector: DriftDetector,
+    /// Current-epoch samples awaiting a full window.
+    pending: Vec<Sample>,
+    /// Recent current-epoch samples for calibration + measured pool.
+    recent: VecDeque<Sample>,
+    pub stats: AdaptStats,
+}
+
+impl<'a> AdaptiveLoop<'a> {
+    pub fn new(
+        store: &'a ConfigStore,
+        telemetry: &'a Telemetry,
+        testbed: &'a Testbed,
+        net: Network,
+        cfg: AdaptConfig,
+    ) -> AdaptiveLoop<'a> {
+        AdaptiveLoop {
+            store,
+            telemetry,
+            testbed,
+            net,
+            service_ewma: Arc::new(EwmaCell::new(cfg.ewma_alpha)),
+            detector: DriftDetector::new(cfg.drift),
+            pending: Vec::new(),
+            recent: VecDeque::with_capacity(cfg.history),
+            stats: AdaptStats::default(),
+            cfg,
+        }
+    }
+
+    /// Gate wired to this loop's EWMA, sized for `workers`.
+    pub fn gate(&self, workers: usize) -> AdmissionGate {
+        AdmissionGate::new(self.service_ewma.clone(), workers)
+    }
+
+    /// One synchronous control step: drain telemetry, seal full
+    /// windows, detect drift, re-solve and hot-swap on a sustained
+    /// detection.  Returns `true` if the store was swapped.
+    pub fn step(&mut self) -> bool {
+        let drained = self.telemetry.drain();
+        self.stats.samples += drained.len() as u64;
+        let epoch = self.store.epoch();
+        for s in drained {
+            self.service_ewma.observe(s.latency_ms);
+            // samples recorded against an older epoch carry predictions
+            // the current store no longer makes — they stay out of
+            // drift/calibration (the EWMA above is epoch-agnostic)
+            if s.epoch != epoch {
+                continue;
+            }
+            if self.recent.len() >= self.cfg.history {
+                self.recent.pop_front();
+            }
+            self.recent.push_back(s);
+            self.pending.push(s);
+        }
+        let mut swapped = false;
+        while self.pending.len() >= self.cfg.window {
+            let batch: Vec<Sample> = self.pending.drain(..self.cfg.window).collect();
+            let window = WindowStats::of(&batch);
+            self.stats.windows += 1;
+            if let Some(report) = self.detector.observe(&window) {
+                self.stats.drift_events += 1;
+                if self.stats.swaps < self.cfg.max_swaps && self.resolve_and_swap(&report) {
+                    swapped = true;
+                    break; // remaining pending samples were cleared
+                }
+            }
+        }
+        swapped
+    }
+
+    fn resolve_and_swap(&mut self, _report: &DriftReport) -> bool {
+        let recent: Vec<Sample> = self.recent.iter().copied().collect();
+        let calibration = Calibration::from_samples(&recent);
+        let mut pool = ObservationPool::default();
+        for s in &recent {
+            pool.record_observation(
+                &s.config,
+                Observation {
+                    latency_ms: s.latency_ms,
+                    energy_j: s.energy_j,
+                    edge_energy_j: s.edge_energy_j,
+                    cloud_energy_j: s.cloud_energy_j,
+                    accuracy: s.accuracy,
+                },
+            );
+        }
+        let snapshot = self.store.snapshot();
+        let fresh = resolve(
+            self.testbed,
+            self.net,
+            snapshot.set().entries(),
+            &calibration,
+            &pool,
+            &self.cfg.resolve,
+        );
+        self.stats.resolves += 1;
+        if fresh.is_empty() {
+            return false; // never swap in a drained store
+        }
+        self.store.swap(ConfigSet::new(fresh));
+        self.stats.swaps += 1;
+        // the new epoch invalidates everything measured under the old
+        // predictions: restart streaks and windows cleanly
+        self.detector.reset();
+        self.pending.clear();
+        self.recent.clear();
+        true
+    }
+}
+
+/// Everything a closed-loop run reports.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopReport {
+    pub serve: ServeReport,
+    pub adapt: AdaptStats,
+    /// The store's `(epoch, digest)` registry after the run.
+    pub epochs: Vec<(u64, u64)>,
+}
+
+/// Serve `timeline` through the pipeline while `control` (a pre-built
+/// [`AdaptiveLoop`] — its telemetry must be sized for at least
+/// `pipeline.workers`) runs concurrently: workers record telemetry, the
+/// loop polls every `poll_ms`, and a sustained drift triggers a
+/// re-solve and a live store hot-swap under traffic.  The admission
+/// gate engages only in wait-aware mode (`pipeline.time_scale > 0`),
+/// where queue depth really burns deadline budget.
+pub fn run_closed_loop<F, E>(
+    mut control: AdaptiveLoop<'_>,
+    policy: &dyn SchedulingPolicy,
+    timeline: &[TimedRequest],
+    pipeline: &PipelineConfig,
+    factory: F,
+) -> Result<ClosedLoopReport>
+where
+    F: Fn(usize) -> Result<E> + Sync,
+    E: Executor,
+{
+    let store = control.store;
+    let telemetry = control.telemetry;
+    let poll = Duration::from_millis(control.cfg.poll_ms.max(1));
+    let gate = (pipeline.time_scale > 0.0).then(|| control.gate(pipeline.workers));
+    let stop = AtomicBool::new(false);
+    let (serve_result, adapt) = std::thread::scope(|s| {
+        let stop_ref = &stop;
+        let handle = s.spawn(move || {
+            while !stop_ref.load(Ordering::Relaxed) {
+                control.step();
+                std::thread::sleep(poll);
+            }
+            control.step(); // final drain so stats cover the whole run
+            control.stats
+        });
+        let result = serve::run_pipeline_on(
+            store,
+            policy,
+            timeline,
+            pipeline,
+            Some(telemetry),
+            gate.as_ref(),
+            factory,
+        );
+        stop.store(true, Ordering::Relaxed);
+        let stats = handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("adaptation thread panicked"))?;
+        Ok::<_, anyhow::Error>((result?, stats))
+    })?;
+    Ok(ClosedLoopReport { serve: serve_result, adapt, epochs: store.epochs() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::ParetoEntry;
+    use crate::space::{Config, TpuMode};
+
+    fn entry(split: usize, latency: f64, energy: f64) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy: 0.95,
+        }
+    }
+
+    fn sample_for(e: &ParetoEntry, epoch: u64, measured_ms: f64) -> Sample {
+        Sample {
+            epoch,
+            config: e.config,
+            predicted_latency_ms: e.latency_ms,
+            predicted_energy_j: e.energy_j,
+            latency_ms: measured_ms,
+            energy_j: e.energy_j,
+            edge_energy_j: e.energy_j / 2.0,
+            cloud_energy_j: e.energy_j / 2.0,
+            accuracy: 0.95,
+        }
+    }
+
+    fn small_cfg() -> AdaptConfig {
+        AdaptConfig {
+            window: 8,
+            drift: DriftConfig { rel_threshold: 0.25, consecutive_windows: 2, min_samples: 4 },
+            resolve: ResolveConfig { trials: 40, batch_per_trial: 20, ..Default::default() },
+            history: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn on_model_telemetry_never_swaps() {
+        let tb = Testbed::synthetic();
+        let set = ConfigSet::new(vec![entry(3, 100.0, 2.0), entry(9, 50.0, 10.0)]);
+        let store = ConfigStore::new(set);
+        let telemetry = Telemetry::new(1, 1024);
+        let mut lp = AdaptiveLoop::new(&store, &telemetry, &tb, Network::Vgg16, small_cfg());
+        let e = entry(3, 100.0, 2.0);
+        for _ in 0..64 {
+            telemetry.record(0, sample_for(&e, 0, 104.0)); // 4% off: in-model
+        }
+        assert!(!lp.step());
+        assert_eq!(lp.stats.windows, 8);
+        assert_eq!(lp.stats.swaps, 0);
+        assert_eq!(store.epoch(), 0);
+        assert!(lp.service_ewma.value().is_some());
+    }
+
+    #[test]
+    fn sustained_drift_resolves_and_swaps_once() {
+        let tb = Testbed::synthetic();
+        let set = ConfigSet::new(vec![entry(3, 100.0, 2.0), entry(9, 50.0, 10.0)]);
+        let store = ConfigStore::new(set);
+        let telemetry = Telemetry::new(1, 1024);
+        let mut lp = AdaptiveLoop::new(&store, &telemetry, &tb, Network::Vgg16, small_cfg());
+        let e = entry(3, 100.0, 2.0);
+        for _ in 0..32 {
+            telemetry.record(0, sample_for(&e, 0, 250.0)); // 2.5x off: drift
+        }
+        assert!(lp.step(), "sustained drift must swap");
+        assert_eq!(lp.stats.swaps, 1);
+        assert!(lp.stats.drift_events >= 1);
+        assert_eq!(store.epoch(), 1);
+        assert!(!store.snapshot().set().is_empty());
+        // stale-epoch samples arriving after the swap are ignored by
+        // drift accounting: no second swap from old-world telemetry
+        for _ in 0..32 {
+            telemetry.record(0, sample_for(&e, 0, 250.0));
+        }
+        assert!(!lp.step(), "old-epoch samples must not re-trigger");
+        assert_eq!(store.epoch(), 1);
+    }
+
+    #[test]
+    fn max_swaps_is_a_hard_valve() {
+        let tb = Testbed::synthetic();
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(3, 100.0, 2.0)]));
+        let telemetry = Telemetry::new(1, 4096);
+        let mut cfg = small_cfg();
+        cfg.max_swaps = 0;
+        let mut lp = AdaptiveLoop::new(&store, &telemetry, &tb, Network::Vgg16, cfg);
+        let e = entry(3, 100.0, 2.0);
+        for _ in 0..64 {
+            telemetry.record(0, sample_for(&e, 0, 400.0));
+        }
+        assert!(!lp.step());
+        assert!(lp.stats.drift_events >= 1, "detection still runs");
+        assert_eq!(lp.stats.swaps, 0, "but the valve blocks the swap");
+        assert_eq!(store.epoch(), 0);
+    }
+}

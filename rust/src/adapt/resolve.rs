@@ -1,0 +1,231 @@
+//! Online re-solve: re-run the NSGA-III search against a
+//! measurement-calibrated objective model and produce the replacement
+//! non-dominated set for a hot-swap.
+//!
+//! The offline solver trusts the simulator's objective model; after
+//! drift, that model is known wrong.  The re-solve corrects it two
+//! ways, in preference order:
+//!
+//! 1. **measured truth** — configurations the telemetry pool observed
+//!    at least `min_measured` times are scored by their measured means
+//!    (the paper's §6.2 observation-reuse idea turned online);
+//! 2. **calibrated model** — everything else is scored by the base
+//!    model with the [`Calibration`] ratios applied (per-config where
+//!    observed, placement-bucketed otherwise).
+//!
+//! The search is warm-started from the current front's genomes so the
+//! still-valid region of the old front survives at a fraction of the
+//! exploration budget a cold solve would need.
+
+use crate::nsga::{sort, NsgaConfig, NsgaIII};
+use crate::simulator::Testbed;
+use crate::solver::{ObservationPool, ParetoEntry};
+use crate::space::{feasible, Config, Network, Space};
+use crate::util::rng::Pcg32;
+
+use super::drift::Calibration;
+
+/// Re-solve budget and seeding knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ResolveConfig {
+    /// Evaluation budget (trials) — deliberately far below the offline
+    /// 20% budget: the warm start plus calibration carry most of the
+    /// information.
+    pub trials: usize,
+    /// Inferences averaged per model-backed trial.
+    pub batch_per_trial: usize,
+    /// Pool observations required before measured truth replaces the
+    /// calibrated model for a configuration.
+    pub min_measured: usize,
+    pub seed: u64,
+}
+
+impl Default for ResolveConfig {
+    fn default() -> ResolveConfig {
+        ResolveConfig { trials: 96, batch_per_trial: 40, min_measured: 3, seed: 4242 }
+    }
+}
+
+/// Objectives for one config under the calibrated model (minimization
+/// triple, accuracy quantized like [`crate::simulator::TrialResult`]).
+fn objectives(latency_ms: f64, energy_j: f64, accuracy: f64) -> [f64; 3] {
+    [latency_ms, energy_j, -(accuracy * 1000.0).round() / 1000.0]
+}
+
+/// Run the calibrated re-solve.  Returns the new non-dominated set with
+/// *calibrated* objective values — the predictions the scheduler will
+/// decide on after the swap.
+pub fn resolve(
+    testbed: &Testbed,
+    net: Network,
+    current_front: &[ParetoEntry],
+    calibration: &Calibration,
+    pool: &ObservationPool,
+    cfg: &ResolveConfig,
+) -> Vec<ParetoEntry> {
+    let space = Space::new(net);
+    let mut rng = Pcg32::new(cfg.seed, 171);
+    let mut trial_count = 0usize;
+    let evaluate = |config: &Config| {
+        let obs = pool.observations(config);
+        if obs.len() >= cfg.min_measured {
+            let n = obs.len() as f64;
+            let lat = obs.iter().map(|o| o.latency_ms).sum::<f64>() / n;
+            let energy = obs.iter().map(|o| o.energy_j).sum::<f64>() / n;
+            let acc = obs.iter().map(|o| o.accuracy).sum::<f64>() / n;
+            return objectives(lat, energy, acc);
+        }
+        let mut trial_rng = rng.fork(trial_count as u64);
+        trial_count += 1;
+        let t = testbed.run_trial_n(config, cfg.batch_per_trial, &mut trial_rng);
+        let (lat, energy) = calibration.correct(config, t.latency_ms, t.energy_j);
+        objectives(lat, energy, t.accuracy)
+    };
+    let warm: Vec<[usize; 4]> = current_front
+        .iter()
+        .map(|e| space.encode(&feasible::repair(e.config)))
+        .collect();
+    let mut driver =
+        NsgaIII::new(space, NsgaConfig::default(), evaluate).with_warm_start(warm);
+    let mut search_rng = Pcg32::new(cfg.seed, 172);
+    driver.run(cfg.trials, &mut search_rng);
+    sort::pareto_filter(&driver.history)
+        .iter()
+        .map(|ind| ParetoEntry {
+            config: ind.config,
+            latency_ms: ind.objs[0],
+            energy_j: ind.objs[1],
+            accuracy: -ind.objs[2],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{Observation, Solver, Strategy};
+
+    fn front(tb: &Testbed, seed: u64) -> Vec<ParetoEntry> {
+        let mut s = Solver::new(tb, Network::Vgg16);
+        s.batch_per_trial = 40;
+        s.run(Strategy::NsgaIII, 100, seed).pareto
+    }
+
+    #[test]
+    fn identity_resolve_reproduces_a_plausible_front() {
+        let mut tb = Testbed::synthetic();
+        tb.batch_per_trial = 40;
+        let current = front(&tb, 3);
+        let cfg = ResolveConfig { trials: 80, batch_per_trial: 40, ..Default::default() };
+        let fresh = resolve(
+            &tb,
+            Network::Vgg16,
+            &current,
+            &Calibration::identity(),
+            &ObservationPool::default(),
+            &cfg,
+        );
+        assert!(!fresh.is_empty());
+        // mutually non-dominated
+        for a in &fresh {
+            for b in &fresh {
+                let ad = [a.latency_ms, a.energy_j, -a.accuracy];
+                let bd = [b.latency_ms, b.energy_j, -b.accuracy];
+                assert!(!crate::nsga::dominates(&ad, &bd) || ad == bd);
+            }
+        }
+        // the warm start carries the old front's extremes: the fresh
+        // front must reach comparably fast configs
+        let min = |f: &[ParetoEntry]| {
+            f.iter().map(|e| e.latency_ms).fold(f64::INFINITY, f64::min)
+        };
+        assert!(min(&fresh) <= min(&current) * 1.5, "lost the fast end of the front");
+    }
+
+    #[test]
+    fn calibration_ratios_show_up_in_the_new_front() {
+        let mut tb = Testbed::synthetic();
+        tb.batch_per_trial = 40;
+        let current = front(&tb, 4);
+        let mut cal = Calibration::identity();
+        cal.offload = (3.0, 1.0); // offloading 3x slower than modeled
+        let cfg = ResolveConfig { trials: 80, batch_per_trial: 40, ..Default::default() };
+        let fresh =
+            resolve(&tb, Network::Vgg16, &current, &cal, &ObservationPool::default(), &cfg);
+        // every offloading entry's predicted latency reflects the 3x
+        // penalty: none can undercut the physically impossible old
+        // cloud-speed floor
+        let fast_offload = fresh
+            .iter()
+            .filter(|e| !e.config.is_edge_only())
+            .map(|e| e.latency_ms)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            fast_offload > 200.0,
+            "offload latency floor {fast_offload} ignores the 3x calibration"
+        );
+    }
+
+    #[test]
+    fn measured_observations_override_the_model() {
+        let mut tb = Testbed::synthetic();
+        tb.batch_per_trial = 40;
+        let current = front(&tb, 5);
+        let target = current[0].config;
+        let mut pool = ObservationPool::default();
+        for _ in 0..5 {
+            pool.record_observation(
+                &target,
+                Observation {
+                    latency_ms: 7777.0,
+                    energy_j: 9.0,
+                    edge_energy_j: 4.5,
+                    cloud_energy_j: 4.5,
+                    accuracy: 0.9,
+                },
+            );
+        }
+        let cfg = ResolveConfig { trials: 60, batch_per_trial: 40, ..Default::default() };
+        let fresh =
+            resolve(&tb, Network::Vgg16, &current, &Calibration::identity(), &pool, &cfg);
+        // the warm start guarantees the target config was evaluated; if
+        // it survived to the front its objectives are the measured ones
+        if let Some(e) = fresh.iter().find(|e| e.config == target) {
+            assert!((e.latency_ms - 7777.0).abs() < 1e-9, "measured truth used");
+        }
+        // and nothing on the fresh front claims to dominate the
+        // measured 7777 ms entry while *being* that config
+        assert!(fresh
+            .iter()
+            .all(|e| e.config != target || (e.latency_ms - 7777.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut tb = Testbed::synthetic();
+        tb.batch_per_trial = 40;
+        let current = front(&tb, 6);
+        let cfg = ResolveConfig { trials: 60, batch_per_trial: 40, ..Default::default() };
+        let a = resolve(
+            &tb,
+            Network::Vgg16,
+            &current,
+            &Calibration::identity(),
+            &ObservationPool::default(),
+            &cfg,
+        );
+        let b = resolve(
+            &tb,
+            Network::Vgg16,
+            &current,
+            &Calibration::identity(),
+            &ObservationPool::default(),
+            &cfg,
+        );
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.latency_ms, y.latency_ms);
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Lock-light serving telemetry: per-worker ring buffers of measured
+//! `(config, epoch) → latency/energy` samples, drained and windowed by
+//! the adaptation loop.
+//!
+//! Record path (per served request, benched as
+//! `runtime_adapt_telemetry_record`): lock the worker's *own* slot —
+//! contended only with the aggregator's occasional drain, never with
+//! other workers — and push into a bounded ring (oldest sample dropped
+//! when full, counted).  Every sample carries the *predictions the
+//! decision was made on* (the Pareto entry's objectives at that epoch),
+//! so drift analysis compares measured against exactly what the
+//! scheduler believed, even for samples that survive a hot-swap.
+//!
+//! [`EwmaCell`] is the lock-free side channel: the loop folds every
+//! drained latency into an exponentially weighted moving average that
+//! the admission gate reads on the feeder thread without any lock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::space::Config;
+
+/// One measured serving outcome, stamped with the prediction it was
+/// scheduled under.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Store epoch the decision was made against.
+    pub epoch: u64,
+    pub config: Config,
+    /// The Pareto entry's objectives at decision time.
+    pub predicted_latency_ms: f64,
+    pub predicted_energy_j: f64,
+    /// Measured outcome.
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    pub accuracy: f64,
+}
+
+struct Ring {
+    buf: VecDeque<Sample>,
+    recorded: u64,
+    dropped: u64,
+}
+
+/// Per-worker ring buffers behind one shared handle.
+pub struct Telemetry {
+    slots: Vec<Mutex<Ring>>,
+    capacity: usize,
+}
+
+impl Telemetry {
+    /// `capacity` bounds each worker's ring; a loop that falls behind
+    /// loses the *oldest* samples (drift detection wants fresh ones).
+    pub fn new(workers: usize, capacity: usize) -> Telemetry {
+        assert!(workers >= 1 && capacity >= 1);
+        Telemetry {
+            slots: (0..workers)
+                .map(|_| {
+                    Mutex::new(Ring {
+                        buf: VecDeque::with_capacity(capacity.min(4096)),
+                        recorded: 0,
+                        dropped: 0,
+                    })
+                })
+                .collect(),
+            capacity,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one sample on `worker`'s slot.
+    pub fn record(&self, worker: usize, sample: Sample) {
+        let mut ring = self.slots[worker].lock().expect("telemetry slot poisoned");
+        if ring.buf.len() >= self.capacity {
+            ring.buf.pop_front();
+            ring.dropped += 1;
+        }
+        ring.buf.push_back(sample);
+        ring.recorded += 1;
+    }
+
+    /// Take every buffered sample, worker-slot order (stable: slot 0's
+    /// samples first).  Within a slot, samples come out in record order.
+    pub fn drain(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            let mut ring = slot.lock().expect("telemetry slot poisoned");
+            out.extend(ring.buf.drain(..));
+        }
+        out
+    }
+
+    /// Total samples ever recorded (drained or not).
+    pub fn recorded(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| s.lock().expect("telemetry slot poisoned").recorded)
+            .sum()
+    }
+
+    /// Samples lost to ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| s.lock().expect("telemetry slot poisoned").dropped)
+            .sum()
+    }
+}
+
+/// Lock-free exponentially weighted moving average over f64 samples
+/// (bit-cast into an `AtomicU64`).  Concurrent `observe` calls race
+/// benignly: a lost update skips one fold, which an EWMA tolerates by
+/// construction.
+pub struct EwmaCell {
+    bits: AtomicU64,
+    count: AtomicU64,
+    alpha: f64,
+}
+
+impl EwmaCell {
+    pub fn new(alpha: f64) -> EwmaCell {
+        assert!((0.0..=1.0).contains(&alpha) && alpha > 0.0, "alpha in (0, 1]");
+        EwmaCell { bits: AtomicU64::new(0f64.to_bits()), count: AtomicU64::new(0), alpha }
+    }
+
+    /// Fold `x` into the average.
+    ///
+    /// Seeding writes the sample *before* publishing `count = 1`, so a
+    /// concurrent observer can never fold into the `0.0` placeholder —
+    /// the worst concurrent-seed outcome is one overwritten (skipped)
+    /// sample, which an EWMA tolerates by construction.
+    pub fn observe(&self, x: f64) {
+        loop {
+            if self.count.load(Ordering::Acquire) == 0 {
+                // provisional seed, then try to publish it
+                self.bits.store(x.to_bits(), Ordering::Relaxed);
+                match self.count.compare_exchange(0, 1, Ordering::Release, Ordering::Acquire) {
+                    Ok(_) => return,
+                    Err(_) => continue, // lost the seed race: fold instead
+                }
+            }
+            let mut cur = self.bits.load(Ordering::Relaxed);
+            loop {
+                let old = f64::from_bits(cur);
+                let new = (self.alpha * x + (1.0 - self.alpha) * old).to_bits();
+                match self
+                    .bits
+                    .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+                {
+                    Ok(_) => {
+                        self.count.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    /// Current average; `None` until the first observation.  The
+    /// Acquire load pairs with the seed path's Release publication, so
+    /// a reader that observes `count > 0` also observes the seeded bits
+    /// — never the `0.0` placeholder.
+    pub fn value(&self) -> Option<f64> {
+        (self.count.load(Ordering::Acquire) > 0)
+            .then(|| f64::from_bits(self.bits.load(Ordering::Relaxed)))
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Network, TpuMode};
+
+    pub(crate) fn sample(split: usize, predicted: f64, measured: f64) -> Sample {
+        Sample {
+            epoch: 0,
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            predicted_latency_ms: predicted,
+            predicted_energy_j: 1.0,
+            latency_ms: measured,
+            energy_j: 1.2,
+            edge_energy_j: 0.6,
+            cloud_energy_j: 0.6,
+            accuracy: 0.95,
+        }
+    }
+
+    #[test]
+    fn record_and_drain_preserve_order_within_a_slot() {
+        let t = Telemetry::new(2, 64);
+        for i in 0..5 {
+            t.record(0, sample(i, 100.0, 110.0));
+        }
+        t.record(1, sample(9, 50.0, 55.0));
+        assert_eq!(t.recorded(), 6);
+        let drained = t.drain();
+        assert_eq!(drained.len(), 6);
+        // slot 0 first, in record order; slot 1 after
+        let splits: Vec<usize> = drained.iter().map(|s| s.config.split).collect();
+        assert_eq!(splits, vec![0, 1, 2, 3, 4, 9]);
+        // drained means gone
+        assert!(t.drain().is_empty());
+        assert_eq!(t.recorded(), 6, "recorded counts survive the drain");
+    }
+
+    #[test]
+    fn ring_drops_oldest_when_full() {
+        let t = Telemetry::new(1, 3);
+        for i in 0..5 {
+            t.record(0, sample(i, 100.0, 100.0));
+        }
+        assert_eq!(t.dropped(), 2);
+        let drained = t.drain();
+        let splits: Vec<usize> = drained.iter().map(|s| s.config.split).collect();
+        assert_eq!(splits, vec![2, 3, 4], "oldest samples shed first");
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing_under_capacity() {
+        let t = Telemetry::new(4, 10_000);
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let t = &t;
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        t.record(w, sample(i % 20, 100.0, 100.0));
+                    }
+                });
+            }
+        });
+        assert_eq!(t.recorded(), 4000);
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.drain().len(), 4000);
+    }
+
+    #[test]
+    fn ewma_converges_and_warms_up() {
+        let e = EwmaCell::new(0.5);
+        assert_eq!(e.value(), None);
+        e.observe(100.0);
+        assert_eq!(e.value(), Some(100.0), "first observation seeds the average");
+        for _ in 0..20 {
+            e.observe(10.0);
+        }
+        let v = e.value().unwrap();
+        assert!(v < 11.0 && v >= 10.0, "converged towards 10: {v}");
+        assert_eq!(e.count(), 21);
+    }
+
+    #[test]
+    fn ewma_survives_concurrent_observers() {
+        let e = EwmaCell::new(0.2);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let e = &e;
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        e.observe(42.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(e.count(), 2000);
+        let v = e.value().unwrap();
+        assert!((v - 42.0).abs() < 1e-9, "constant stream converges exactly: {v}");
+    }
+}

@@ -24,8 +24,8 @@ use crate::workload::Request;
 
 pub use executor::{ExecOutcome, Executor, PerRequestSimExecutor, SimExecutor};
 pub use policy::{
-    ConfigSet, EnergyBudgetPolicy, PaperPolicy, PolicyDecision, SchedulingPolicy,
-    StrictDeadlinePolicy,
+    ConfigSet, EnergyBudgetPolicy, HysteresisPolicy, PaperPolicy, PolicyDecision,
+    SchedulingPolicy, StrictDeadlinePolicy,
 };
 
 /// Startup statistics (Fig. 15 / §6.5 "loads and sorts ... only once").
@@ -74,6 +74,19 @@ impl Controller {
 
     pub fn config_set(&self) -> &[ParetoEntry] {
         self.set.entries()
+    }
+
+    /// Replace the non-dominated set mid-run (the sequential-path
+    /// analogue of the serving pipeline's Pareto-store hot-swap): the
+    /// entries are re-sorted and the `SelectIndex` rebuilt, exactly as
+    /// at startup.  `load_sort_ms` accumulates so Fig.-15 overhead
+    /// accounting still covers every (re)build.
+    pub fn adopt(&mut self, entries: Vec<ParetoEntry>) {
+        assert!(!entries.is_empty(), "controller needs a non-empty configuration set");
+        let t0 = Instant::now();
+        self.set = ConfigSet::new(entries);
+        self.startup.load_sort_ms += t0.elapsed().as_secs_f64() * 1000.0;
+        self.startup.config_count = self.set.len();
     }
 
     /// Handle one request end to end; `None` when the policy rejects it
@@ -246,6 +259,38 @@ mod tests {
         // a lenient deadline: admitted
         let easy = crate::workload::Request { qos_ms: 1e6, ..hopeless };
         assert!(c.handle(&easy, &mut ex).is_some());
+    }
+
+    #[test]
+    fn adopt_rebuilds_the_set_and_index_mid_run() {
+        let entries = pareto();
+        let tb = Testbed::synthetic();
+        let mut c = Controller::new(entries.clone(), 5);
+        let mut ex = SimExecutor::Fresh { testbed: &tb, rng: Pcg32::seeded(6) };
+        let req = crate::workload::Request {
+            id: 0,
+            net: Network::Vgg16,
+            qos_ms: 1e6,
+            inferences: 20,
+            seed: 2,
+        };
+        let before = c.handle(&req, &mut ex).expect("served");
+        // adopt a single-entry set: every subsequent pick must be it
+        let only = entries
+            .iter()
+            .min_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms))
+            .unwrap()
+            .clone();
+        c.adopt(vec![only.clone()]);
+        assert_eq!(c.startup.config_count, 1);
+        assert!(c.config_set().len() == 1);
+        let after = c.handle(&req, &mut ex).expect("served after swap");
+        assert_eq!(after.config, only.config);
+        // the pre-swap pick came from the original full set
+        assert!(
+            entries.iter().any(|e| e.config == before.config),
+            "pre-swap decision must resolve against the startup set"
+        );
     }
 
     #[test]

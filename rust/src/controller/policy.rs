@@ -8,22 +8,34 @@
 //! | [`PaperPolicy`] | most energy-efficient satisfier | fastest config (admit, minimize violation) |
 //! | [`StrictDeadlinePolicy`] | most energy-efficient satisfier | **reject** (reject-over-admit) |
 //! | [`EnergyBudgetPolicy`] | cheapest satisfier under the cap | fastest config under the cap; reject when nothing fits the cap |
+//! | [`HysteresisPolicy`] | sticky in-bucket satisfier (energy slack) | fastest config (admit) |
 //!
-//! Policies are pure functions of `(configuration set, QoS)` — they carry
-//! no mutable state — so the serving pipeline's workers can share one
-//! policy instance across threads, and any interleaving of requests
-//! yields the same per-request decision as a sequential run.
+//! The first three are pure functions of `(configuration set, QoS)` —
+//! they carry no mutable state — so the serving pipeline's workers
+//! share one policy instance across threads, and any interleaving of
+//! requests yields the same per-request decision as a sequential run.
+//! [`HysteresisPolicy`] deliberately trades that replay-determinism for
+//! fewer reconfigurations: its sticky state is interior-mutable
+//! (`Sync`, shared across workers) and keyed on [`ConfigSet::digest`]
+//! so a hot-swapped store resets it instead of dangling.
+
+use std::sync::Mutex;
 
 use super::algorithm1::{self, SelectIndex};
 use crate::solver::ParetoEntry;
+use crate::util::hash::fnv1a;
 
 /// The non-dominated configuration set in the controller's working form:
 /// sorted by (energy asc, accuracy desc) with the O(log n)
-/// [`SelectIndex`] built once at startup.
+/// [`SelectIndex`] built once at startup.  Construction is the *only*
+/// way to obtain a `ConfigSet`, so the index is always consistent with
+/// the entries — a hot-swapped store rebuilds the index simply by
+/// constructing the replacement set.
 #[derive(Debug, Clone)]
 pub struct ConfigSet {
     entries: Vec<ParetoEntry>,
     index: SelectIndex,
+    digest: u64,
 }
 
 impl ConfigSet {
@@ -33,12 +45,33 @@ impl ConfigSet {
     pub fn new(mut entries: Vec<ParetoEntry>) -> ConfigSet {
         algorithm1::sort_config_set(&mut entries);
         let index = SelectIndex::build(&entries);
-        ConfigSet { entries, index }
+        let digest = fnv1a(entries.iter().flat_map(|e| {
+            [
+                e.config.net as u64,
+                e.config.cpu_idx as u64,
+                e.config.tpu as u64,
+                e.config.gpu as u64,
+                e.config.split as u64,
+                e.latency_ms.to_bits(),
+                e.energy_j.to_bits(),
+                e.accuracy.to_bits(),
+            ]
+        }));
+        ConfigSet { entries, index, digest }
     }
 
     /// Entries in (energy asc, accuracy desc) order.
     pub fn entries(&self) -> &[ParetoEntry] {
         &self.entries
+    }
+
+    /// Content digest (fnv1a over entries, computed at construction).
+    /// Two sets with the same entries in the same order share a digest;
+    /// the serving pipeline stamps it into every completed record so a
+    /// hot-swap test can prove no request saw a torn store, and stateful
+    /// policies use it to notice that the set under them changed.
+    pub fn digest(&self) -> u64 {
+        self.digest
     }
 
     pub fn len(&self) -> usize {
@@ -83,6 +116,17 @@ pub enum PolicyDecision {
 pub trait SchedulingPolicy: Sync {
     fn name(&self) -> &'static str;
     fn decide(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision;
+
+    /// Side-effect-free preview of [`SchedulingPolicy::decide`]: what
+    /// *would* be decided, without committing.  The serving worker uses
+    /// this to probe queued requests for batch coalescing — probed
+    /// requests may stay queued, so a decision that was never acted on
+    /// must not alter policy state.  The default is correct for
+    /// stateless policies; stateful ones ([`HysteresisPolicy`]) must
+    /// override it.
+    fn probe(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
+        self.decide(set, qos_ms)
+    }
 }
 
 /// The paper's Algorithm 1: always admits (fastest-config fallback
@@ -158,6 +202,116 @@ impl SchedulingPolicy for EnergyBudgetPolicy {
             Some(i) => PolicyDecision::Run(i),
             None => PolicyDecision::Reject,
         }
+    }
+}
+
+/// QoS-clustered sticky scheduling with energy hysteresis — the §6.6
+/// "cluster user requests" proposal as a composable policy (ROADMAP
+/// "policy zoo"; previously only available as the monolithic
+/// `extensions::ClusteredController`, which now delegates here).
+///
+/// QoS levels are bucketed log-spaced over `[min_ms, max_ms]` and the
+/// *bucket floor* drives selection, so every request in a bucket is
+/// satisfiable by the bucket's pick.  The previously-chosen entry is
+/// *kept* while it (a) still satisfies the request's own deadline and
+/// (b) is within `energy_slack ×` the bucket-optimal entry's energy —
+/// so the pipeline only reconfigures when a request actually conflicts
+/// with the live state, instead of re-deriving a configuration per
+/// request.
+///
+/// The sticky state is keyed by [`ConfigSet::digest`]: a hot-swapped
+/// store (new entries, new indices) resets it instead of reusing a
+/// stale position.
+#[derive(Debug)]
+pub struct HysteresisPolicy {
+    pub buckets: usize,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    /// Keep the current entry while its energy is within this factor of
+    /// the bucket-optimal entry's energy.
+    pub energy_slack: f64,
+    /// `(set digest, sticky entry index)` — interior mutability so the
+    /// policy still composes with the `&self` scheduling seam shared
+    /// across workers.
+    state: Mutex<(u64, Option<usize>)>,
+}
+
+impl HysteresisPolicy {
+    pub fn new(buckets: usize, min_ms: f64, max_ms: f64, energy_slack: f64) -> HysteresisPolicy {
+        assert!(buckets >= 1, "need at least one QoS bucket");
+        assert!(min_ms > 0.0 && max_ms > min_ms, "bad QoS bucket range");
+        HysteresisPolicy {
+            buckets,
+            min_ms,
+            max_ms,
+            energy_slack,
+            state: Mutex::new((0, None)),
+        }
+    }
+
+    /// Paper-workload defaults: Table-2 latency bounds, 6 buckets, 3x
+    /// energy slack (the `extensions` ablation's settings).
+    pub fn paper(net: crate::space::Network) -> HysteresisPolicy {
+        let b = crate::workload::LatencyBounds::paper(net);
+        HysteresisPolicy::new(6, b.min_ms, b.max_ms, 3.0)
+    }
+
+    /// Bucket floor: the *lower* edge of the request's log-spaced QoS
+    /// bucket — selecting for the floor keeps every request in the
+    /// bucket satisfiable.
+    pub fn bucket_floor(&self, qos_ms: f64) -> f64 {
+        let lo = self.min_ms.ln();
+        let hi = self.max_ms.ln();
+        let pos = ((qos_ms.max(self.min_ms).ln() - lo) / (hi - lo) * self.buckets as f64)
+            .floor()
+            .min(self.buckets as f64 - 1.0);
+        (lo + pos / self.buckets as f64 * (hi - lo)).exp()
+    }
+
+    /// The shared decision core.  `commit` writes the sticky state
+    /// (`decide`); a probe leaves it untouched so coalescing previews
+    /// of never-activated decisions cannot corrupt it.
+    ///
+    /// The selection target is `min(bucket_floor, qos)`: the floor can
+    /// exceed a budget below `min_ms` (wait-aware serving routinely
+    /// shrinks budgets under queue wait), and selecting past the real
+    /// budget would hand a near-deadline request a guaranteed-late
+    /// config even when a faster satisfier exists.
+    fn choose(&self, set: &ConfigSet, qos_ms: f64, commit: bool) -> PolicyDecision {
+        let floor = self.bucket_floor(qos_ms).min(qos_ms);
+        let optimal = match set.select_paper(floor) {
+            Some(i) => i,
+            None => return PolicyDecision::Reject, // empty set
+        };
+        let mut state = self.state.lock().expect("hysteresis state poisoned");
+        // a digest mismatch means the set under us changed (startup or
+        // store hot-swap): sticky indices from the old set are
+        // meaningless
+        let sticky = if state.0 == set.digest() { state.1 } else { None };
+        let keep = sticky.filter(|&cur| {
+            let c = &set.entries()[cur];
+            let o = &set.entries()[optimal];
+            c.latency_ms <= qos_ms && c.energy_j <= self.energy_slack * o.energy_j
+        });
+        let idx = keep.unwrap_or(optimal);
+        if commit {
+            *state = (set.digest(), Some(idx));
+        }
+        PolicyDecision::Run(idx)
+    }
+}
+
+impl SchedulingPolicy for HysteresisPolicy {
+    fn name(&self) -> &'static str {
+        "hysteresis"
+    }
+
+    fn decide(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
+        self.choose(set, qos_ms, true)
+    }
+
+    fn probe(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
+        self.choose(set, qos_ms, false)
     }
 }
 
@@ -273,5 +427,154 @@ mod tests {
         assert_eq!(set.under_budget_len(2.0), 1);
         assert_eq!(set.under_budget_len(30.0), 2);
         assert_eq!(set.under_budget_len(1e9), 3);
+    }
+
+    #[test]
+    fn digest_is_content_sensitive_and_stable() {
+        let a = set3();
+        let b = set3();
+        assert_eq!(a.digest(), b.digest(), "same content, same digest");
+        let c = ConfigSet::new(vec![entry(400.0, 2.0, 0.95), entry(200.0, 10.0, 0.95)]);
+        assert_ne!(a.digest(), c.digest(), "different entries, different digest");
+        let empty = ConfigSet::new(Vec::new());
+        assert_ne!(empty.digest(), a.digest());
+    }
+
+    /// Oscillating deadlines flip the paper policy between two configs
+    /// every request; the hysteresis policy settles on one in-bucket
+    /// satisfier and sticks with it.
+    #[test]
+    fn hysteresis_reduces_reconfigurations_on_oscillating_workload() {
+        // bucket floor for qos in [400, 500] (6 log buckets over the
+        // VGG16 Table-2 bounds) is ~345.7 ms: B satisfies the floor, A
+        // only the raw deadlines.
+        let set = ConfigSet::new(vec![
+            entry(450.0, 2.0, 0.95), // A: frugal, satisfies 500 only
+            entry(340.0, 4.0, 0.95), // B: satisfies the bucket floor
+            entry(100.0, 60.0, 0.95), // C: fast, hungry
+        ]);
+        let hysteresis = HysteresisPolicy::paper(Network::Vgg16);
+        let qos_seq: Vec<f64> = (0..40).map(|i| if i % 2 == 0 { 400.0 } else { 500.0 }).collect();
+
+        let picks = |policy: &dyn SchedulingPolicy| -> Vec<usize> {
+            qos_seq
+                .iter()
+                .map(|&q| match policy.decide(&set, q) {
+                    PolicyDecision::Run(i) => i,
+                    PolicyDecision::Reject => panic!("non-empty set rejected"),
+                })
+                .collect()
+        };
+        let flips = |p: &[usize]| p.windows(2).filter(|w| w[0] != w[1]).count();
+
+        let paper = picks(&PaperPolicy);
+        let sticky = picks(&hysteresis);
+        assert!(flips(&paper) >= 30, "paper policy oscillates: {} flips", flips(&paper));
+        assert_eq!(flips(&sticky), 0, "hysteresis settles: {sticky:?}");
+        // every sticky pick still satisfies the request's own deadline
+        for (&q, &i) in qos_seq.iter().zip(&sticky) {
+            assert!(set.entries()[i].latency_ms <= q);
+        }
+    }
+
+    #[test]
+    fn hysteresis_reconfigures_when_the_current_pick_conflicts() {
+        let set = ConfigSet::new(vec![
+            entry(450.0, 2.0, 0.95),
+            entry(340.0, 4.0, 0.95),
+            entry(100.0, 60.0, 0.95),
+        ]);
+        let p = HysteresisPolicy::paper(Network::Vgg16);
+        // settle on the mid-bucket satisfier
+        let first = match p.decide(&set, 400.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!(),
+        };
+        assert!(set.entries()[first].latency_ms <= 400.0);
+        // a deadline the sticky pick cannot satisfy forces a switch
+        let tight = match p.decide(&set, 120.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!(),
+        };
+        assert_ne!(tight, first);
+        assert!(set.entries()[tight].latency_ms <= 120.0);
+    }
+
+    #[test]
+    fn hysteresis_state_resets_on_set_digest_change() {
+        // set X: sticky index 2 exists; set Y: only one entry — a stale
+        // sticky index would be out of bounds without the digest guard
+        let x = ConfigSet::new(vec![
+            entry(450.0, 2.0, 0.95),
+            entry(340.0, 4.0, 0.95),
+            entry(100.0, 60.0, 0.95),
+        ]);
+        let y = ConfigSet::new(vec![entry(90.0, 1.0, 0.95)]);
+        let p = HysteresisPolicy::paper(Network::Vgg16);
+        assert!(matches!(p.decide(&x, 120.0), PolicyDecision::Run(_)));
+        // swapped store: decide on the new set must not index with the
+        // old sticky position
+        assert_eq!(p.decide(&y, 120.0), PolicyDecision::Run(0));
+        assert_eq!(p.decide(&y, 5000.0), PolicyDecision::Run(0));
+        // and the empty set still rejects
+        assert_eq!(p.decide(&ConfigSet::new(Vec::new()), 100.0), PolicyDecision::Reject);
+    }
+
+    #[test]
+    fn hysteresis_probe_is_side_effect_free() {
+        let set = ConfigSet::new(vec![
+            entry(450.0, 2.0, 0.95),
+            entry(340.0, 4.0, 0.95),
+            entry(100.0, 60.0, 0.95),
+        ]);
+        let p = HysteresisPolicy::paper(Network::Vgg16);
+        // settle on B via a committed decision
+        let settled = match p.decide(&set, 400.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!(),
+        };
+        // a coalescing probe with a tight budget previews C...
+        let probed = match p.probe(&set, 120.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!(),
+        };
+        assert_ne!(probed, settled);
+        // ...but must not move the sticky state: the next committed
+        // lenient decision still keeps the live config
+        assert_eq!(p.decide(&set, 500.0), PolicyDecision::Run(settled));
+        // and probe agrees with decide on the same input
+        assert_eq!(p.probe(&set, 500.0), PolicyDecision::Run(settled));
+    }
+
+    #[test]
+    fn hysteresis_budget_below_min_bound_still_respects_the_deadline() {
+        // a remaining budget below the workload's min_ms (routine under
+        // wait-aware queue wait) must not select past the real budget:
+        // the 40 ms entry satisfies a 50 ms budget and must win over
+        // the bucket floor's 90.6 ms-satisfier
+        let set = ConfigSet::new(vec![
+            entry(85.0, 1.0, 0.95), // satisfies the 90.6 floor, not 50 ms
+            entry(40.0, 30.0, 0.95), // the only real 50 ms satisfier
+        ]);
+        let p = HysteresisPolicy::paper(Network::Vgg16);
+        match p.decide(&set, 50.0) {
+            PolicyDecision::Run(i) => {
+                assert!(set.entries()[i].latency_ms <= 50.0, "picked a guaranteed-late config")
+            }
+            PolicyDecision::Reject => panic!("non-empty set"),
+        }
+    }
+
+    #[test]
+    fn hysteresis_bucket_floor_is_monotone_and_bounded() {
+        let p = HysteresisPolicy::new(8, 90.6, 5026.8, 3.0);
+        let mut last = 0.0;
+        for q in [90.6, 150.0, 400.0, 1000.0, 3000.0, 5026.8] {
+            let f = p.bucket_floor(q);
+            assert!(f <= q + 1e-9, "floor {f} above qos {q}");
+            assert!(f >= last, "floor not monotone");
+            assert!(f >= 90.6 - 1e-9);
+            last = f;
+        }
     }
 }

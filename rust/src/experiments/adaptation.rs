@@ -1,0 +1,294 @@
+//! Closed-loop adaptation experiment (beyond-paper; ROADMAP "Pareto
+//! store hot-swap" + "closed-loop admission").
+//!
+//! Scenario: the world steps mid-run — the edge↔cloud link loses most
+//! of its bandwidth and the edge thermally throttles — while the
+//! serving pipeline keeps taking traffic.  A **control** run keeps the
+//! offline Pareto store frozen (the paper's online phase): its
+//! scheduler keeps trusting stale predictions, picking offloading
+//! configurations whose real latency now blows the deadline.  The
+//! **adaptive** run serves the same workload through
+//! [`crate::adapt::run_closed_loop`]: telemetry sees measured latency
+//! diverge from the store's predictions, drift detection flags the
+//! sustained error, a calibrated warm-started re-solve produces a
+//! fresh front, and the store hot-swaps under live traffic — QoS
+//! recovers for every deadline the post-shift hardware can still meet.
+
+use std::time::Duration;
+
+use crate::adapt::{
+    run_closed_loop, AdaptConfig, AdaptiveLoop, ClosedLoopReport, ConfigStore, DriftConfig,
+    ResolveConfig, Telemetry,
+};
+use crate::controller::policy::ConfigSet;
+use crate::controller::{ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor};
+use crate::serve::{run_pipeline, PipelineConfig, ServeReport};
+use crate::simulator::Testbed;
+use crate::solver::{Solver, Strategy};
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::{timeline, ArrivalProcess, Request, TimedRequest, WorkloadGen};
+
+use super::Ctx;
+
+/// Fork a drifted world from the calibrated base testbed: the link
+/// keeps a fraction `bandwidth_factor` of its bandwidth at `rtt_factor`
+/// times the RTT, and the edge runs at `edge_throttle` of its rate.
+pub fn shifted_testbed(
+    base: &Testbed,
+    bandwidth_factor: f64,
+    rtt_factor: f64,
+    edge_throttle: f64,
+) -> Testbed {
+    let mut tb = base.clone();
+    tb.link.bytes_per_s *= bandwidth_factor;
+    tb.link.rtt_s *= rtt_factor;
+    tb.vgg.throttle_edge(edge_throttle);
+    tb.vit.throttle_edge(edge_throttle);
+    tb
+}
+
+/// Order-independent executor over a world that steps at request
+/// `shift_at`: requests with `id < shift_at` sample the base testbed,
+/// later ones the shifted testbed.  Keying on the request id keeps
+/// outcomes a pure function of `(request, config)` — the pipeline's
+/// order-independence contract — while modeling a timeline-positioned
+/// shift (ids are arrival-ordered).  `floor` adds a deterministic
+/// wall-clock service floor so the concurrent adaptation loop gets real
+/// time to act mid-run.
+pub struct ShiftExecutor<'tb> {
+    pub base: PerRequestSimExecutor<'tb>,
+    pub shifted: PerRequestSimExecutor<'tb>,
+    pub shift_at: usize,
+    pub floor: Duration,
+}
+
+impl<'tb> ShiftExecutor<'tb> {
+    pub fn new(
+        base: &'tb Testbed,
+        shifted: &'tb Testbed,
+        shift_at: usize,
+        stream: u64,
+        floor: Duration,
+    ) -> ShiftExecutor<'tb> {
+        ShiftExecutor {
+            base: PerRequestSimExecutor { testbed: base, stream },
+            shifted: PerRequestSimExecutor { testbed: shifted, stream },
+            shift_at,
+            floor,
+        }
+    }
+}
+
+impl Executor for ShiftExecutor<'_> {
+    fn execute(&mut self, request: &Request, config: &crate::space::Config) -> ExecOutcome {
+        if !self.floor.is_zero() {
+            std::thread::sleep(self.floor);
+        }
+        if request.id < self.shift_at {
+            self.base.execute(request, config)
+        } else {
+            self.shifted.execute(request, config)
+        }
+    }
+}
+
+/// Post-shift QoS hit rate of a report (the recovery metric: requests
+/// that arrived into the drifted world).
+pub fn post_shift_hit_rate(report: &ServeReport, shift_at: usize) -> f64 {
+    let post: Vec<_> = report.records.iter().filter(|r| r.request_id >= shift_at).collect();
+    let hits = post.iter().filter(|r| r.qos_met()).count();
+    hits as f64 / post.len().max(1) as f64
+}
+
+pub struct AdaptationExperiment {
+    pub net: Network,
+    pub requests: usize,
+    pub shift_at: usize,
+    pub control: ServeReport,
+    pub adaptive: ClosedLoopReport,
+}
+
+impl AdaptationExperiment {
+    pub fn control_post_hit(&self) -> f64 {
+        post_shift_hit_rate(&self.control, self.shift_at)
+    }
+
+    pub fn adaptive_post_hit(&self) -> f64 {
+        post_shift_hit_rate(&self.adaptive.serve, self.shift_at)
+    }
+}
+
+/// Run the mid-run-shift scenario: control (frozen store) vs adaptive
+/// (closed loop) over the same workload, executors, and seed.
+pub fn run(ctx: &Ctx, net: Network, requests: usize, seed: u64) -> AdaptationExperiment {
+    // offline phase on the (still correct) base world
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = 60;
+    let pareto = solver.run(Strategy::NsgaIII, 120, seed).pareto;
+    let set = ConfigSet::new(pareto);
+
+    // the drifted world: 1/8 bandwidth, 4x RTT, 30% edge throttle
+    let shifted = shifted_testbed(&ctx.testbed, 1.0 / 8.0, 4.0, 0.7);
+    let shift_at = requests / 3;
+
+    let mut gen = WorkloadGen::paper(net);
+    gen.inferences_per_request = 200;
+    let mut rng = Pcg32::new(seed, 191);
+    let tl: Vec<TimedRequest> =
+        timeline(&gen, &ArrivalProcess::Poisson { rate_per_s: 200.0 }, requests, &mut rng);
+
+    let pipeline = PipelineConfig {
+        workers: 2,
+        queue_capacity: requests.max(64),
+        max_batch: 4,
+        time_scale: 0.0,
+        seed,
+        reuse: true,
+    };
+    // a small real-time service floor paces virtual-time serving so the
+    // concurrent loop can detect + re-solve while traffic still flows
+    let floor = Duration::from_micros(200);
+    let factory = |_: usize| {
+        Ok::<_, anyhow::Error>(ShiftExecutor::new(&ctx.testbed, &shifted, shift_at, 192, floor))
+    };
+
+    let control =
+        run_pipeline(&set, &PaperPolicy, &tl, &pipeline, factory).expect("control run");
+
+    let adapt_cfg = AdaptConfig {
+        window: 24,
+        drift: DriftConfig { rel_threshold: 0.3, consecutive_windows: 2, min_samples: 3 },
+        resolve: ResolveConfig { trials: 48, batch_per_trial: 16, min_measured: 3, seed },
+        poll_ms: 1,
+        history: 192,
+        max_swaps: 4,
+        ..AdaptConfig::default()
+    };
+    let store = ConfigStore::new(set);
+    let telemetry = Telemetry::new(pipeline.workers, adapt_cfg.telemetry_capacity);
+    let adapt_loop = AdaptiveLoop::new(&store, &telemetry, &ctx.testbed, net, adapt_cfg);
+    let adaptive = run_closed_loop(adapt_loop, &PaperPolicy, &tl, &pipeline, factory)
+        .expect("adaptive run");
+
+    AdaptationExperiment { net, requests, shift_at, control, adaptive }
+}
+
+pub fn print_report(exp: &AdaptationExperiment) {
+    println!(
+        "\n== closed-loop adaptation — {} ({} requests, world steps at request {}: \
+         bandwidth /8, RTT x4, edge throttled to 70%) ==",
+        exp.net.name(),
+        exp.requests,
+        exp.shift_at
+    );
+    let mut t = Table::new(["run", "QoS hit (all)", "QoS hit (post-shift)", "done", "epochs"]);
+    for (name, report, epochs) in [
+        ("control (frozen store)", &exp.control, 1usize),
+        (
+            "adaptive (closed loop)",
+            &exp.adaptive.serve,
+            exp.adaptive.epochs.len(),
+        ),
+    ] {
+        t.row([
+            name.to_string(),
+            format!("{:.0}%", report.qos_hit_rate() * 100.0),
+            format!("{:.0}%", post_shift_hit_rate(report, exp.shift_at) * 100.0),
+            report.completed().to_string(),
+            epochs.to_string(),
+        ]);
+    }
+    t.print();
+    let a = &exp.adaptive.adapt;
+    println!(
+        "adaptation loop: {} samples, {} windows, {} drift events, {} re-solves, {} hot-swaps",
+        a.samples, a.windows, a.drift_events, a.resolves, a.swaps
+    );
+    println!(
+        "recovery: post-shift QoS {:.0}% -> {:.0}% (drift detected from measured-vs-predicted \
+         telemetry; re-solve warm-started from the live front; store swapped under traffic)",
+        exp.control_post_hit() * 100.0,
+        exp.adaptive_post_hit() * 100.0
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeOutcome;
+
+    fn experiment() -> AdaptationExperiment {
+        run(&Ctx::synthetic(), Network::Vgg16, 360, 23)
+    }
+
+    #[test]
+    fn shifted_testbed_slows_offloading_configs() {
+        let base = Testbed::synthetic();
+        let shifted = shifted_testbed(&base, 1.0 / 8.0, 4.0, 0.7);
+        let mut rng_a = Pcg32::seeded(1);
+        let mut rng_b = Pcg32::seeded(1);
+        let space = crate::space::Space::new(Network::Vgg16);
+        let cloudish = crate::space::feasible::repair(space.decode(&[6, 0, 1, 0]));
+        let a = base.run_trial_n(&cloudish, 60, &mut rng_a);
+        let b = shifted.run_trial_n(&cloudish, 60, &mut rng_b);
+        assert!(
+            b.latency_ms > a.latency_ms * 1.5,
+            "bandwidth collapse must slow cloud-only: {} vs {}",
+            b.latency_ms,
+            a.latency_ms
+        );
+        // edge-only also slows (throttle), but far less than offloading
+        let edgeish = crate::space::feasible::repair(space.decode(&[6, 2, 0, 22]));
+        let ea = base.run_trial_n(&edgeish, 60, &mut Pcg32::seeded(2));
+        let eb = shifted.run_trial_n(&edgeish, 60, &mut Pcg32::seeded(2));
+        assert!(eb.latency_ms > ea.latency_ms, "throttle slows the edge");
+        assert!(
+            eb.latency_ms / ea.latency_ms < b.latency_ms / a.latency_ms,
+            "offloading hurts more than edge under a bandwidth collapse"
+        );
+    }
+
+    #[test]
+    fn closed_loop_bookkeeping_and_epoch_coherence_under_live_traffic() {
+        let exp = experiment();
+        // every request accounted for, in both runs
+        assert_eq!(exp.control.records.len(), 360);
+        assert_eq!(exp.adaptive.serve.records.len(), 360);
+        // the loop saw telemetry and sealed windows
+        assert!(exp.adaptive.adapt.samples > 0, "telemetry flowed");
+        assert!(exp.adaptive.adapt.windows > 0, "windows sealed");
+        // epoch coherence: every completed request's (epoch, digest) is
+        // a registered installation — no request saw a torn store
+        let epochs = &exp.adaptive.epochs;
+        for r in &exp.adaptive.serve.records {
+            if let ServeOutcome::Done { epoch, store_digest, .. } = &r.outcome {
+                assert!(
+                    epochs.contains(&(*epoch, *store_digest)),
+                    "request {} stamped unregistered (epoch, digest)",
+                    r.request_id
+                );
+            }
+        }
+        // the sustained shift must be detected and acted on mid-run
+        assert!(
+            exp.adaptive.adapt.swaps >= 1,
+            "drift -> re-solve -> swap never fired: {:?}",
+            exp.adaptive.adapt
+        );
+        assert!(epochs.len() >= 2);
+        // and adaptation never does *worse* than the frozen store
+        assert!(
+            exp.adaptive_post_hit() >= exp.control_post_hit() - 1e-9,
+            "adaptive {} vs control {}",
+            exp.adaptive_post_hit(),
+            exp.control_post_hit()
+        );
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&experiment());
+    }
+}

@@ -11,7 +11,8 @@
 //!    configuration) and measure the apply-overhead reduction vs the
 //!    metric cost.
 
-use crate::controller::{algorithm1, apply::Applier, ExecOutcome, Executor};
+use crate::controller::policy::{ConfigSet, HysteresisPolicy, PolicyDecision, SchedulingPolicy};
+use crate::controller::{apply::Applier, ExecOutcome, Executor};
 use crate::metrics::{MetricSet, RequestRecord};
 use crate::simulator::Testbed;
 use crate::solver::{ParetoEntry, Solver, Strategy};
@@ -120,74 +121,41 @@ pub fn print_cold_start(r: &ColdStartResult) {
 // 2. QoS-clustered scheduling
 // ---------------------------------------------------------------------
 
-/// Clustered (sticky) controller: QoS values are bucketed (log-spaced)
-/// and the currently-applied configuration is *kept* whenever it (a)
-/// satisfies the request's bucket floor and (b) is within an energy
-/// hysteresis band of the bucket-optimal choice — so the controller only
-/// reconfigures when the new request actually conflicts with the current
-/// state, instead of re-deriving a configuration per request.  This is
-/// the §6.6 "clustering user requests" proposal made concrete.
+/// Clustered (sticky) controller — the §6.6 "clustering user requests"
+/// proposal made concrete.  The hysteresis logic itself now lives in
+/// the composable [`HysteresisPolicy`] (ROADMAP "policy zoo"), which
+/// also plugs straight into the concurrent serving pipeline; this
+/// sequential wrapper keeps the ablation's apply-overhead accounting.
 pub struct ClusteredController {
-    entries: Vec<ParetoEntry>,
+    set: ConfigSet,
+    policy: HysteresisPolicy,
     applier: Applier,
     rng: Pcg32,
-    buckets: usize,
-    min_ms: f64,
-    max_ms: f64,
-    /// Energy hysteresis: keep the current config while its energy is
-    /// within this factor of the bucket-optimal config's energy.
-    pub energy_slack: f64,
-    current: Option<ParetoEntry>,
 }
 
 impl ClusteredController {
-    pub fn new(mut entries: Vec<ParetoEntry>, buckets: usize, min_ms: f64, max_ms: f64, seed: u64) -> Self {
-        algorithm1::sort_config_set(&mut entries);
+    pub fn new(entries: Vec<ParetoEntry>, buckets: usize, min_ms: f64, max_ms: f64, seed: u64) -> Self {
         ClusteredController {
-            entries,
+            set: ConfigSet::new(entries),
+            policy: HysteresisPolicy::new(buckets, min_ms, max_ms, 3.0),
             applier: Applier::default(),
             rng: Pcg32::new(seed, 121),
-            buckets,
-            min_ms,
-            max_ms,
-            energy_slack: 3.0,
-            current: None,
         }
     }
 
-    /// Bucket floor: the *lower* edge of the request's log-spaced QoS
-    /// bucket — selecting for the floor keeps every request in the
-    /// bucket satisfiable.
-    fn bucket_floor(&self, qos_ms: f64) -> f64 {
-        let lo = self.min_ms.ln();
-        let hi = self.max_ms.ln();
-        let pos = ((qos_ms.max(self.min_ms).ln() - lo) / (hi - lo) * self.buckets as f64)
-            .floor()
-            .min(self.buckets as f64 - 1.0);
-        (lo + pos / self.buckets as f64 * (hi - lo)).exp()
+    /// Bucket floor of the underlying policy (exposed for tests).
+    pub fn bucket_floor(&self, qos_ms: f64) -> f64 {
+        self.policy.bucket_floor(qos_ms)
     }
 
     pub fn serve<E: Executor>(&mut self, requests: &[Request], ex: &mut E, name: &str) -> MetricSet {
         let records = requests
             .iter()
             .map(|req| {
-                let floor = self.bucket_floor(req.qos_ms);
-                let optimal = algorithm1::select(&self.entries, floor)
-                    .expect("non-empty configuration set")
-                    .clone();
-                // hysteresis: stick with the current config when it still
-                // satisfies the *request* and is not wasting > slack
-                // energy vs the bucket-optimal choice
-                let entry = match &self.current {
-                    Some(cur)
-                        if cur.latency_ms <= req.qos_ms
-                            && cur.energy_j <= self.energy_slack * optimal.energy_j =>
-                    {
-                        cur.clone()
-                    }
-                    _ => optimal,
+                let entry = match self.policy.decide(&self.set, req.qos_ms) {
+                    PolicyDecision::Run(i) => self.set.entries()[i].clone(),
+                    PolicyDecision::Reject => unreachable!("non-empty configuration set"),
                 };
-                self.current = Some(entry.clone());
                 let apply_ms = self.applier.apply(&entry.config, &mut self.rng);
                 let out = ex.execute(req, &entry.config);
                 RequestRecord {

@@ -12,8 +12,10 @@
 //! | [`simulation`]| Fig. 11–14 (10,000 requests)         |
 //! | [`overhead`]  | Fig. 15 (controller overhead)        |
 //! | [`serving`]   | beyond-paper: serving-pipeline throughput (policies × workers × cache) |
+//! | [`adaptation`]| beyond-paper: closed-loop drift → re-solve → hot-swap recovery |
 
 pub mod ablation;
+pub mod adaptation;
 pub mod extensions;
 pub mod bounds;
 pub mod overhead;

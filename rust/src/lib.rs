@@ -12,7 +12,10 @@
 //!   (online Algorithm-1 scheduling, configuration application, split
 //!   execution over an edge↔cloud streaming transport), the concurrent
 //!   *serving pipeline* ([`serve`]: bounded admission queue, pluggable
-//!   scheduling policies, config-reuse caching workers), plus every
+//!   scheduling policies, config-reuse caching workers), the
+//!   *closed-loop adaptation layer* ([`adapt`]: serving telemetry,
+//!   drift detection, online re-solve, live Pareto-store hot-swap,
+//!   EWMA admission backpressure — DESIGN.md §11), plus every
 //!   substrate the paper's testbed provided physically (DVFS'd edge CPU,
 //!   Coral-style TPU, V100-style cloud GPU, power meters, network link) as
 //!   a calibrated simulator.
@@ -39,6 +42,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod solver;
 pub mod controller;
+pub mod adapt;
 pub mod serve;
 pub mod experiments;
 pub mod report; // (modules filled in build order; see DESIGN.md §7)

@@ -6,7 +6,8 @@
 //! ```text
 //! dynasplit space                      print Table-1 configuration spaces
 //! dynasplit solve     [--net --trials --strategy --seed --out]
-//! dynasplit serve     [--net --requests --workers --policy --rate ...]
+//! dynasplit serve     [--net --requests --workers --policy --rate --adapt ...]
+//! dynasplit adapt     [--net --requests]   closed-loop adaptation experiment
 //! dynasplit throughput [--net --requests]   serving-pipeline experiment
 //! dynasplit prelim                     Fig. 2a-e
 //! dynasplit bounds                     Table 2
@@ -23,9 +24,13 @@
 
 use anyhow::{bail, Result};
 
+use dynasplit::adapt::{
+    run_closed_loop, AdaptConfig, AdaptiveLoop, ConfigStore, DriftConfig, ResolveConfig,
+    Telemetry,
+};
 use dynasplit::controller::{
-    ConfigSet, EnergyBudgetPolicy, PaperPolicy, PerRequestSimExecutor, SchedulingPolicy,
-    StrictDeadlinePolicy,
+    ConfigSet, EnergyBudgetPolicy, HysteresisPolicy, PaperPolicy, PerRequestSimExecutor,
+    SchedulingPolicy, StrictDeadlinePolicy,
 };
 use dynasplit::experiments::{self, Ctx};
 use dynasplit::model::Manifest;
@@ -59,6 +64,7 @@ fn run() -> Result<()> {
         "space" => cmd_space(),
         "solve" => cmd_solve(),
         "serve" => cmd_serve(),
+        "adapt" => cmd_adapt(),
         "throughput" => cmd_throughput(),
         "prelim" => cmd_prelim(),
         "bounds" => cmd_bounds(),
@@ -84,7 +90,9 @@ const HELP: &str = "dynasplit — energy-aware split inference (paper reproducti
 subcommands:
   space          print the Table-1 configuration spaces
   solve          offline phase: search the space, save the pareto set
-  serve          online phase: concurrent serving pipeline (queue, policies, cache)
+  serve          online phase: concurrent serving pipeline (queue, policies, cache;
+                 --adapt closes the loop: telemetry -> drift -> re-solve -> hot-swap)
+  adapt          closed-loop adaptation experiment (mid-run world shift + QoS recovery)
   throughput     serving-pipeline throughput experiment (policies x workers x cache)
   prelim         Fig. 2a-e preliminary study
   bounds         Table 2 latency bounds
@@ -169,7 +177,7 @@ fn cmd_serve() -> Result<()> {
         .opt("net", "vgg16", "network (vgg16|vit)")
         .opt("requests", "200", "number of requests")
         .opt("workers", "2", "serving workers (each owns an executor + config cache)")
-        .opt("policy", "paper", "scheduling policy (paper|strict|budget)")
+        .opt("policy", "paper", "scheduling policy (paper|strict|budget|hysteresis)")
         .opt("budget", "20", "per-request energy cap in J (only --policy budget)")
         .opt("rate", "100", "mean arrival rate (requests/s)")
         .opt("burst", "0", "burst size (0 = pure Poisson arrivals)")
@@ -183,6 +191,20 @@ fn cmd_serve() -> Result<()> {
              wait-aware: budgets shrink with queue wait, expired requests shed)",
         )
         .flag("no-reuse", "disable the config-reuse cache (reconfigure every batch)")
+        .flag(
+            "adapt",
+            "close the loop: record telemetry, detect drift, re-solve online, hot-swap \
+             the Pareto store under traffic (and, in real-time mode, apply EWMA \
+             admission backpressure)",
+        )
+        .opt("adapt-window", "32", "telemetry samples per drift window (--adapt)")
+        .opt(
+            "adapt-threshold",
+            "0.25",
+            "relative measured-vs-predicted error that counts as drift (--adapt)",
+        )
+        .opt("adapt-k", "2", "consecutive off-model windows before a re-solve (--adapt)")
+        .opt("adapt-trials", "96", "evaluation budget of the online re-solve (--adapt)")
         .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh 20% search)")
         .parse_env(2)?;
     let net = Network::parse(a.str("net")?)?;
@@ -207,7 +229,8 @@ fn cmd_serve() -> Result<()> {
         "paper" => Box::new(PaperPolicy),
         "strict" => Box::new(StrictDeadlinePolicy),
         "budget" => Box::new(EnergyBudgetPolicy { budget_j: a.f64("budget")? }),
-        other => bail!("unknown policy {other:?} (expected paper|strict|budget)"),
+        "hysteresis" => Box::new(HysteresisPolicy::paper(net)),
+        other => bail!("unknown policy {other:?} (expected paper|strict|budget|hysteresis)"),
     };
     let gen = WorkloadGen::paper(net);
     let mut rng = Pcg32::new(seed, 91);
@@ -228,9 +251,40 @@ fn cmd_serve() -> Result<()> {
         seed,
         reuse: !a.flag("no-reuse"),
     };
-    let report = run_pipeline(&set, policy.as_ref(), &tl, &cfg, |_| {
-        Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
-    })?;
+    let report = if a.flag("adapt") {
+        let adapt_cfg = AdaptConfig {
+            window: a.usize("adapt-window")?,
+            drift: DriftConfig {
+                rel_threshold: a.f64("adapt-threshold")?,
+                consecutive_windows: a.usize("adapt-k")?,
+                ..DriftConfig::default()
+            },
+            resolve: ResolveConfig { trials: a.usize("adapt-trials")?, seed, ..Default::default() },
+            ..AdaptConfig::default()
+        };
+        let store = ConfigStore::new(set);
+        let telemetry = Telemetry::new(cfg.workers, adapt_cfg.telemetry_capacity);
+        let control = AdaptiveLoop::new(&store, &telemetry, &ctx.testbed, net, adapt_cfg);
+        let closed = run_closed_loop(control, policy.as_ref(), &tl, &cfg, |_| {
+            Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
+        })?;
+        let s = closed.adapt;
+        println!(
+            "[serve] adaptation: {} samples, {} windows, {} drift events, {} re-solves, \
+             {} hot-swaps ({} store epochs)",
+            s.samples,
+            s.windows,
+            s.drift_events,
+            s.resolves,
+            s.swaps,
+            closed.epochs.len()
+        );
+        closed.serve
+    } else {
+        run_pipeline(&set, policy.as_ref(), &tl, &cfg, |_| {
+            Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
+        })?
+    };
     println!("[serve] {} — {}", policy.name(), report.summary_line());
     let metrics = report.to_metric_set("dynasplit");
     if !metrics.is_empty() {
@@ -247,6 +301,18 @@ fn cmd_serve() -> Result<()> {
         &format!("serve_{}", net.name()),
         &dynasplit::report::metric_set_table(&metrics),
     )?;
+    Ok(())
+}
+
+fn cmd_adapt() -> Result<()> {
+    let a = spec("adapt", "closed-loop adaptation experiment (mid-run world shift)")
+        .opt("net", "vgg16", "network (vgg16|vit)")
+        .opt("requests", "360", "requests per run (the world steps a third in)")
+        .parse_env(2)?;
+    let net = Network::parse(a.str("net")?)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let exp = experiments::adaptation::run(&ctx, net, a.usize("requests")?, a.u64("seed")?);
+    experiments::adaptation::print_report(&exp);
     Ok(())
 }
 

@@ -86,6 +86,11 @@ pub struct NsgaIII<'a> {
     evaluate: Box<dyn FnMut(&Config) -> [f64; M] + 'a>,
     /// All evaluated individuals, in evaluation order (the trial log).
     pub history: Vec<Individual>,
+    /// Genomes evaluated (and budget-charged) before the random fill of
+    /// the initial population — the warm start an online re-solve seeds
+    /// from the currently-deployed front (ROADMAP "Pareto store
+    /// hot-swap").  Repaired and deduplicated like any other candidate.
+    pub warm_start: Vec<[usize; 4]>,
     seen: std::collections::HashSet<[usize; 4]>,
     ref_points: Vec<[f64; M]>,
 }
@@ -101,9 +106,16 @@ impl<'a> NsgaIII<'a> {
             config,
             evaluate: Box::new(evaluate),
             history: Vec::new(),
+            warm_start: Vec::new(),
             seen: std::collections::HashSet::new(),
             ref_points,
         }
+    }
+
+    /// Seed the initial population with `genes` (builder form).
+    pub fn with_warm_start(mut self, genes: Vec<[usize; 4]>) -> Self {
+        self.warm_start = genes;
+        self
     }
 
     fn eval(&mut self, genes: [usize; 4]) -> Option<Individual> {
@@ -121,8 +133,18 @@ impl<'a> NsgaIII<'a> {
     /// Run until `max_trials` evaluations; returns the final population.
     pub fn run(&mut self, max_trials: usize, rng: &mut Pcg32) -> Vec<Individual> {
         let pop_size = self.config.population.max(4);
-        // --- initial population: random feasible points ---
+        // --- initial population: warm-start genomes first ---
         let mut pop: Vec<Individual> = Vec::with_capacity(pop_size);
+        let warm = std::mem::take(&mut self.warm_start);
+        for genes in warm {
+            if pop.len() >= pop_size.min(max_trials) {
+                break;
+            }
+            if let Some(ind) = self.eval(genes) {
+                pop.push(ind);
+            }
+        }
+        // --- then random feasible points ---
         let mut attempts = 0;
         while pop.len() < pop_size.min(max_trials) && attempts < max_trials * 20 {
             attempts += 1;
@@ -237,6 +259,39 @@ mod tests {
         n.run(feasible_n * 10, &mut rng);
         assert!(n.history.len() <= feasible_n);
         assert!(n.history.len() > feasible_n / 2, "covered too little");
+    }
+
+    #[test]
+    fn warm_start_genomes_are_evaluated_first_and_deduplicated() {
+        let space = Space::new(Network::Vgg16);
+        let mut rng = Pcg32::seeded(5);
+        let seeds: Vec<[usize; 4]> = (0..6)
+            .map(|_| space.encode(&space.sample(&mut rng)))
+            .collect();
+        let mut dup = seeds.clone();
+        dup.extend(seeds.clone()); // duplicates must cost no budget
+        let mut n = NsgaIII::new(space, NsgaConfig::default(), toy_eval).with_warm_start(dup);
+        let mut search_rng = Pcg32::seeded(6);
+        n.run(80, &mut search_rng);
+        // the first evaluations are exactly the (deduplicated, repaired)
+        // warm-start genomes, in order
+        let repaired: Vec<[usize; 4]> = {
+            let mut seen = std::collections::HashSet::new();
+            seeds
+                .iter()
+                .map(|g| space.encode(&crate::space::feasible::repair(space.decode(g))))
+                .filter(|g| seen.insert(*g))
+                .collect()
+        };
+        assert!(n.history.len() >= repaired.len());
+        for (i, g) in repaired.iter().enumerate() {
+            assert_eq!(&n.history[i].genes, g, "warm genome {i} evaluated first");
+        }
+        // and nothing was evaluated twice
+        let mut genes: Vec<_> = n.history.iter().map(|i| i.genes).collect();
+        genes.sort_unstable();
+        genes.dedup();
+        assert_eq!(genes.len(), n.history.len());
     }
 
     #[test]

@@ -97,6 +97,20 @@ mod tests {
     }
 
     #[test]
+    fn zero_remaining_budget_at_the_exact_deadline() {
+        // remaining budget hits exactly zero when now == deadline; the
+        // queue's expiry check (`deadline <= now`) treats that as
+        // expired, so a zero-budget request never reaches a policy
+        let clock = ServeClock::new(Instant::now(), 1.0);
+        let r = tr(100.0, 50.0); // deadline at 150
+        assert_eq!(clock.remaining_ms(&r, Some(150.0)), 0.0);
+        assert!(clock.remaining_ms(&r, Some(149.0)) > 0.0);
+        assert!(clock.remaining_ms(&r, Some(151.0)) < 0.0);
+        // virtual time never reaches this edge: budget stays the raw QoS
+        assert_eq!(ServeClock::Virtual.remaining_ms(&r, None), 50.0);
+    }
+
+    #[test]
     fn time_scale_rescales_now() {
         // scale 2.0 = half-speed replay: experiment now advances slower
         let t0 = Instant::now();

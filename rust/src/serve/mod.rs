@@ -16,14 +16,24 @@
 //!
 //! * [`queue`]  — bounded admission with load shedding + deadline-aware
 //!   pop (expired requests shed at dispatch);
-//! * [`worker`] — dispatch loop: pop → decide on the *remaining* budget
-//!   → coalesce → activate → one batched executor dispatch;
+//! * [`worker`] — dispatch loop: pop → snapshot the store → decide on
+//!   the *remaining* budget → coalesce → activate → one batched
+//!   executor dispatch;
 //! * [`batch`]  — tensor-driven executor amortizing head compute across
 //!   a coalesced batch (one flat `[batch, …]` head call);
 //! * [`clock`]  — virtual vs real-time experiment clock (wait-aware
 //!   scheduling);
 //! * [`cache`]  — config-reuse cache (reconfigurations avoided);
 //! * [`report`] — per-request records + aggregated serving metrics.
+//!
+//! Workers resolve configurations through a hot-swappable
+//! [`crate::adapt::ConfigStore`]: [`run_pipeline`] wraps a fixed set in
+//! a single-epoch store (the open-loop semantics every experiment
+//! keeps), while [`run_pipeline_on`] serves against a live store handle
+//! — the closed-loop entry point (`crate::adapt::run_closed_loop`)
+//! swaps a freshly re-solved set under traffic with no request ever
+//! observing a torn store, and may wire serving telemetry and
+//! EWMA-backed admission backpressure into the same run.
 //!
 //! In virtual time (`time_scale == 0`) policies decide from
 //! `(ConfigSet, qos)` alone and pipeline executors are
@@ -42,6 +52,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
+use crate::adapt::{AdmissionGate, ConfigStore, Telemetry};
 use crate::controller::policy::{ConfigSet, SchedulingPolicy};
 use crate::controller::Executor;
 use crate::util::rng::Pcg32;
@@ -90,7 +101,9 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Run the serving pipeline over a timed workload.
+/// Run the serving pipeline over a timed workload against a fixed
+/// configuration set (wrapped in a single-epoch [`ConfigStore`] — the
+/// open-loop semantics every baseline experiment keeps).
 ///
 /// `factory` builds one executor per worker *inside* that worker's
 /// thread (real-path executors hold thread-local runtime handles and
@@ -108,8 +121,40 @@ where
     F: Fn(usize) -> Result<E> + Sync,
     E: Executor,
 {
+    let store = ConfigStore::new(set.clone());
+    run_pipeline_on(&store, policy, timeline, cfg, None, None, factory)
+}
+
+/// Run the serving pipeline against a live, hot-swappable store handle,
+/// optionally recording adaptation telemetry and applying closed-loop
+/// admission backpressure (`gate`) at the feeder.
+///
+/// Every worker takes one [`crate::adapt::StoreSnapshot`] per dispatch
+/// batch, so a concurrent [`ConfigStore::swap`] moves *subsequent*
+/// batches to the new epoch and never tears an in-flight one.
+pub fn run_pipeline_on<F, E>(
+    store: &ConfigStore,
+    policy: &dyn SchedulingPolicy,
+    timeline: &[TimedRequest],
+    cfg: &PipelineConfig,
+    telemetry: Option<&Telemetry>,
+    gate: Option<&AdmissionGate>,
+    factory: F,
+) -> Result<ServeReport>
+where
+    F: Fn(usize) -> Result<E> + Sync,
+    E: Executor,
+{
     ensure!(cfg.workers >= 1, "need at least one worker");
     ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+    if let Some(t) = telemetry {
+        ensure!(
+            t.workers() >= cfg.workers,
+            "telemetry sized for {} workers, pipeline has {}",
+            t.workers(),
+            cfg.workers
+        );
+    }
     let queue = AdmissionQueue::new(cfg.queue_capacity);
     let t0 = Instant::now();
     // virtual time for as-fast-as-possible injection, real-time replay
@@ -131,12 +176,13 @@ where
                 let mut worker = Worker {
                     id: w,
                     queue,
-                    set,
+                    store,
                     policy,
                     max_batch: cfg.max_batch,
                     clock,
                     cache,
                     executor,
+                    telemetry,
                     records: Vec::new(),
                 };
                 worker.run();
@@ -144,13 +190,21 @@ where
             }));
         }
 
-        // open-loop feeder: offer at (scaled) arrival times, shed on full
+        // open-loop feeder: offer at (scaled) arrival times; shed on a
+        // full queue, or earlier when the admission gate predicts the
+        // queue wait alone already exceeds the request's budget
         for tr in timeline {
             if cfg.time_scale > 0.0 {
                 let target = t0 + Duration::from_secs_f64(tr.arrival_ms / 1000.0 * cfg.time_scale);
                 let now = Instant::now();
                 if target > now {
                     std::thread::sleep(target - now);
+                }
+            }
+            if let Some(gate) = gate {
+                if !gate.admit(queue.depth(), tr.request.qos_ms) {
+                    records.push(ServeRecord::shed_by_admission(tr));
+                    continue;
                 }
             }
             if !queue.offer(tr.clone()) {
@@ -364,6 +418,108 @@ mod tests {
         // expired requests never reach the policy, so at most the
         // non-expired ones were decided
         assert!(budgets.len() <= 8 - report.expired_in_queue());
+    }
+
+    #[test]
+    fn zero_budget_requests_expire_at_pop_under_real_time() {
+        // qos 0: the absolute deadline equals the arrival instant, so by
+        // pop time the remaining budget is already <= 0 — shed at
+        // dispatch and fully accounted (`ExpiredInQueue` satellite).
+        let set = set2();
+        let timeline: Vec<TimedRequest> = (0..4)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: 0.0,
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: 0.0,
+            })
+            .collect();
+        let cfg = PipelineConfig {
+            workers: 1,
+            queue_capacity: 8,
+            time_scale: 1.0,
+            ..PipelineConfig::default()
+        };
+        let report = run_pipeline(&set, &PaperPolicy, &timeline, &cfg, |_| Ok(PureExec)).unwrap();
+        assert_eq!(report.records.len(), 4, "every request accounted for");
+        assert_eq!(report.expired_in_queue(), 4, "zero budget expires at pop");
+        assert_eq!(report.queue.expired, 4, "queue counter agrees with the records");
+        assert_eq!(report.completed(), 0);
+        assert_eq!(report.qos_hit_rate(), 0.0);
+        assert_eq!(report.to_metric_set("x").len(), 0, "expired stay out of latency stats");
+        assert!(report.summary_line().contains("4 expired"));
+    }
+
+    #[test]
+    fn admission_gate_backpressures_before_the_queue_fills() {
+        use crate::adapt::{AdmissionGate, ConfigStore, EwmaCell};
+        use std::sync::Arc;
+
+        /// ~4 ms of wall clock per request: queued requests pile up.
+        struct Slow;
+        impl Executor for Slow {
+            fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+                std::thread::sleep(std::time::Duration::from_millis(4));
+                PureExec.execute(request, config)
+            }
+        }
+
+        let store = ConfigStore::new(set2());
+        // all requests arrive at t=0; request 0 has an unlimited budget
+        // (must survive the gate at depth 0), the rest 10 ms budgets a
+        // 4 ms-per-request single worker cannot honor once queued deep
+        let timeline: Vec<TimedRequest> = (0..24)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: if i == 0 { 1e7 } else { 10.0 },
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: 0.0,
+            })
+            .collect();
+        let cfg = PipelineConfig {
+            workers: 1,
+            queue_capacity: 64, // never fills: the gate acts first
+            max_batch: 1,
+            time_scale: 1.0,
+            ..PipelineConfig::default()
+        };
+        // warm EWMA at the true service time, as the adaptation loop
+        // would have converged to
+        let ewma = Arc::new(EwmaCell::new(0.2));
+        for _ in 0..32 {
+            ewma.observe(4.0);
+        }
+        let gate = AdmissionGate::new(ewma, cfg.workers);
+        let report =
+            run_pipeline_on(&store, &PaperPolicy, &timeline, &cfg, None, Some(&gate), |_| {
+                Ok(Slow)
+            })
+            .unwrap();
+        assert_eq!(report.records.len(), 24, "every request accounted for");
+        assert_eq!(report.queue.rejected, 0, "the bounded queue never filled");
+        assert!(report.completed() >= 1, "the unlimited-budget request completes");
+        assert!(
+            report.shed_by_admission() >= 1,
+            "deep-queue arrivals shed at admission: {}",
+            report.summary_line()
+        );
+        // conservation across all outcome classes
+        assert_eq!(
+            report.completed()
+                + report.shed_by_admission()
+                + report.expired_in_queue()
+                + report.rejected_by_policy()
+                + report.rejected_queue_full(),
+            24
+        );
     }
 
     #[test]

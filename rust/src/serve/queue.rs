@@ -125,6 +125,12 @@ impl AdmissionQueue {
         }
     }
 
+    /// Requests currently queued (the admission gate's backpressure
+    /// signal).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("queue lock poisoned").deque.len()
+    }
+
     /// Close the queue: pending requests still drain, new offers fail.
     pub fn close(&self) {
         self.inner.lock().expect("queue lock poisoned").closed = true;
@@ -219,6 +225,36 @@ mod tests {
         let (r2, _, expired) = q.pop_due(|| Some(1e4)).unwrap();
         assert_eq!((r2.request.id, expired), (2, true));
         assert_eq!(q.stats().expired, 1);
+    }
+
+    #[test]
+    fn pop_due_expiry_is_inclusive_at_the_exact_deadline() {
+        // a request whose remaining budget is exactly zero is expired:
+        // `deadline <= now`, not `<` — executing it could only produce
+        // an answer that is at best exactly late
+        let q = AdmissionQueue::new(8);
+        q.offer(tr(0)); // arrival 0 + qos 500 -> deadline 500
+        q.offer(tr(1)); // arrival 1 + qos 500 -> deadline 501
+        let (r0, now, expired) = q.pop_due(|| Some(500.0)).unwrap();
+        assert_eq!((r0.request.id, expired), (0, true), "zero budget expires");
+        assert_eq!(r0.deadline_ms(), now.unwrap());
+        // one tick before its deadline, request 1 is still serviceable
+        let (r1, _, expired) = q.pop_due(|| Some(500.999)).unwrap();
+        assert_eq!((r1.request.id, expired), (1, false));
+        assert_eq!(q.stats().expired, 1);
+    }
+
+    #[test]
+    fn depth_tracks_queued_requests() {
+        let q = AdmissionQueue::new(8);
+        assert_eq!(q.depth(), 0);
+        q.offer(tr(0));
+        q.offer(tr(1));
+        assert_eq!(q.depth(), 2);
+        q.pop().unwrap();
+        assert_eq!(q.depth(), 1);
+        q.close();
+        assert_eq!(q.depth(), 1, "close does not drop pending requests");
     }
 
     #[test]

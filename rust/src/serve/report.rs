@@ -35,9 +35,22 @@ pub enum ServeOutcome {
         /// `None` in virtual time).  Lets the QoS verdict account for
         /// queue wait, not just execution latency.
         finished_ms: Option<f64>,
+        /// Pareto-store epoch every decision of this request's batch
+        /// was resolved against (0 until the first hot-swap).
+        epoch: u64,
+        /// Digest of that epoch's [`crate::controller::ConfigSet`] —
+        /// together with `epoch`
+        /// this proves the request never observed a torn store (the
+        /// adaptation integration test checks both against the store's
+        /// epoch registry).
+        store_digest: u64,
     },
     /// Shed at admission: the bounded queue was full.
     RejectedQueueFull,
+    /// Shed at admission by closed-loop backpressure: queue depth times
+    /// the EWMA service latency already exceeded the request's budget
+    /// (see [`crate::adapt::AdmissionGate`]).
+    ShedByAdmission,
     /// Shed at dispatch: its deadline had already passed when a worker
     /// popped it (wait-aware real-time mode — executing it could only
     /// produce a guaranteed-late answer).
@@ -65,6 +78,16 @@ impl ServeRecord {
             arrival_ms: tr.arrival_ms,
             worker: None,
             outcome: ServeOutcome::RejectedQueueFull,
+        }
+    }
+
+    pub fn shed_by_admission(tr: &TimedRequest) -> ServeRecord {
+        ServeRecord {
+            request_id: tr.request.id,
+            qos_ms: tr.request.qos_ms,
+            arrival_ms: tr.arrival_ms,
+            worker: None,
+            outcome: ServeOutcome::ShedByAdmission,
         }
     }
 
@@ -127,6 +150,30 @@ impl ServeReport {
             .iter()
             .filter(|r| matches!(r.outcome, ServeOutcome::ExpiredInQueue))
             .count()
+    }
+
+    /// Requests shed by closed-loop admission backpressure.
+    pub fn shed_by_admission(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::ShedByAdmission))
+            .count()
+    }
+
+    /// Distinct Pareto-store epochs the completed requests resolved
+    /// against (one entry until the first mid-run hot-swap).
+    pub fn epochs_observed(&self) -> Vec<u64> {
+        let mut epochs: Vec<u64> = self
+            .records
+            .iter()
+            .filter_map(|r| match &r.outcome {
+                ServeOutcome::Done { epoch, .. } => Some(*epoch),
+                _ => None,
+            })
+            .collect();
+        epochs.sort_unstable();
+        epochs.dedup();
+        epochs
     }
 
     /// Requests that rode a coalesced same-config batch.
@@ -207,11 +254,12 @@ impl ServeReport {
     /// One-line human summary for CLI / experiment output.
     pub fn summary_line(&self) -> String {
         format!(
-            "{} done / {} shed / {} expired / {} policy-rejected on {} workers; \
-             QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; {:.2} J/req; \
-             {} reconfigs, {} avoided ({} coalesced); {:.0} req/s",
+            "{} done / {} shed / {} backpressured / {} expired / {} policy-rejected \
+             on {} workers; QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; {:.2} J/req; \
+             {} reconfigs, {} avoided ({} coalesced); {:.0} req/s; {} store epoch(s)",
             self.completed(),
             self.rejected_queue_full(),
+            self.shed_by_admission(),
             self.expired_in_queue(),
             self.rejected_by_policy(),
             self.workers,
@@ -223,6 +271,7 @@ impl ServeReport {
             self.cache.hits,
             self.coalesced(),
             self.throughput_rps(),
+            self.epochs_observed().len().max(1),
         )
     }
 }
@@ -255,6 +304,8 @@ mod tests {
                 apply_overhead_ms: 0.0,
                 coalesced,
                 finished_ms: None,
+                epoch: 0,
+                store_digest: 0xd1ce,
             },
         }
     }
@@ -342,6 +393,34 @@ mod tests {
         assert!(!r.records[1].qos_met(), "expired request missed its objective");
         assert_eq!(r.to_metric_set("x").len(), 1, "expired excluded from latency metrics");
         assert!(r.summary_line().contains("1 expired"));
+    }
+
+    #[test]
+    fn admission_shed_and_epoch_accounting() {
+        let mut swapped = done(2, 100.0, 90.0, 2.0, false);
+        if let ServeOutcome::Done { epoch, store_digest, .. } = &mut swapped.outcome {
+            *epoch = 1;
+            *store_digest = 0xbeef;
+        }
+        let r = report(vec![
+            done(0, 100.0, 90.0, 2.0, false),
+            ServeRecord {
+                request_id: 1,
+                qos_ms: 50.0,
+                arrival_ms: 1.0,
+                worker: None,
+                outcome: ServeOutcome::ShedByAdmission,
+            },
+            swapped,
+        ]);
+        assert_eq!(r.shed_by_admission(), 1);
+        assert_eq!(r.completed(), 2);
+        assert!(!r.records[1].qos_met(), "backpressured request missed its objective");
+        assert_eq!(r.to_metric_set("x").len(), 2, "shed excluded from latency metrics");
+        assert_eq!(r.epochs_observed(), vec![0, 1], "hot-swap visible in the record set");
+        let line = r.summary_line();
+        assert!(line.contains("1 backpressured"), "{line}");
+        assert!(line.contains("2 store epoch(s)"), "{line}");
     }
 
     #[test]

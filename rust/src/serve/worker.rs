@@ -3,26 +3,40 @@
 //! A worker owns its execution state end to end — the executor (its
 //! runtime session on the real path), the config-reuse cache, and its
 //! slice of the records — and shares only the admission queue, the
-//! configuration set, and the (stateless) scheduling policy.  Per
-//! request it: pops (shedding requests whose deadline already expired
-//! in the queue), decides via the policy on the request's *remaining*
-//! budget, coalesces same-config successors into a small batch,
-//! activates the configuration once through the cache, and dispatches
-//! the whole batch through one [`Executor::execute_batch`] call —
-//! tensor-driven executors amortize head compute across the batch
-//! (one flat `[batch, …]` activation, one head run).
+//! hot-swappable [`ConfigStore`], and the scheduling policy (one
+//! instance across all workers; usually stateless, but
+//! [`crate::controller::HysteresisPolicy`] carries interior-mutable
+//! sticky state).  Per request it: pops (shedding requests whose deadline
+//! already expired in the queue), takes **one store snapshot**, decides
+//! via the policy on the request's *remaining* budget, coalesces
+//! same-config successors into a small batch, activates the
+//! configuration once through the cache, and dispatches the whole
+//! batch through one [`Executor::execute_batch`] call — tensor-driven
+//! executors amortize head compute across the batch (one flat
+//! `[batch, …]` activation, one head run).
 //!
-//! Decisions are pure functions of `(set, budget)` and executors used
-//! by the pipeline are order-independent per request; in virtual time
-//! the budget is the raw QoS level, so per-request results match a
+//! **Epoch coherence**: the snapshot taken at pop time serves the
+//! decision, the coalescing predicate, and the entry lookup of the
+//! whole batch, and its `(epoch, digest)` is stamped into every record
+//! — a concurrent hot-swap can move the *next* batch to the new set,
+//! never tear this one across two sets.  Completed requests optionally
+//! feed the adaptation [`Telemetry`] with `(config, epoch) →
+//! measured/predicted` samples.
+//!
+//! With a *stateless* policy, decisions are pure functions of
+//! `(set, budget)` and pipeline executors are order-independent per
+//! request; in virtual time with a fixed (never-swapped) store the
+//! budget is the raw QoS level, so per-request results match a
 //! sequential Algorithm-1 run regardless of worker count or
 //! interleaving — only the overhead attribution (who paid the apply)
-//! depends on scheduling.  In real-time replay the budget shrinks with
-//! queue wait (ROADMAP "wait-aware scheduling").
+//! depends on scheduling.  A stateful policy (hysteresis) deliberately
+//! trades that replay-determinism for fewer reconfigurations.  In
+//! real-time replay the budget shrinks with queue wait (ROADMAP
+//! "wait-aware scheduling").
 
 use std::time::Instant;
 
-use crate::controller::policy::ConfigSet;
+use crate::adapt::{ConfigStore, Sample, Telemetry};
 use crate::controller::{Executor, PolicyDecision, SchedulingPolicy};
 use crate::workload::Request;
 
@@ -35,7 +49,8 @@ use super::report::{ServeOutcome, ServeRecord};
 pub struct Worker<'a, E: Executor> {
     pub id: usize,
     pub queue: &'a AdmissionQueue,
-    pub set: &'a ConfigSet,
+    /// Hot-swappable Pareto-store handle; snapshotted once per batch.
+    pub store: &'a ConfigStore,
     pub policy: &'a dyn SchedulingPolicy,
     /// Maximum same-config requests coalesced into one activation.
     pub max_batch: usize,
@@ -43,6 +58,8 @@ pub struct Worker<'a, E: Executor> {
     pub clock: ServeClock,
     pub cache: ReuseCache,
     pub executor: E,
+    /// Adaptation telemetry sink (`None` = open-loop serving).
+    pub telemetry: Option<&'a Telemetry>,
     pub records: Vec<ServeRecord>,
 }
 
@@ -69,9 +86,13 @@ impl<'a, E: Executor> Worker<'a, E> {
                 });
                 continue;
             }
+            // one coherent store view for this whole batch: decision,
+            // coalescing, and entry lookup all resolve against it
+            let snapshot = self.store.snapshot();
+            let set = snapshot.set();
             let t0 = Instant::now();
             let budget_ms = self.clock.remaining_ms(&first, now);
-            let decision = self.policy.decide(self.set, budget_ms);
+            let decision = self.policy.decide(set, budget_ms);
             let select_ms = t0.elapsed().as_secs_f64() * 1000.0;
             let idx = match decision {
                 PolicyDecision::Run(idx) => idx,
@@ -88,13 +109,16 @@ impl<'a, E: Executor> Worker<'a, E> {
             };
 
             // coalesce queued successors that map to the same config
-            // (an expired successor stays queued: the next pop cycle
-            // sheds and records it)
+            // under the same snapshot (an expired successor stays
+            // queued: the next pop cycle sheds and records it).  The
+            // probe is side-effect-free: a request that fails it stays
+            // queued, and stateful policies must not remember a
+            // decision that was never activated.
             let mut batch = vec![first];
             while batch.len() < self.max_batch {
                 let same = self.queue.pop_if(|r| {
                     !matches!(now, Some(n) if r.deadline_ms() <= n)
-                        && self.policy.decide(self.set, self.clock.remaining_ms(r, now))
+                        && self.policy.probe(set, self.clock.remaining_ms(r, now))
                             == PolicyDecision::Run(idx)
                 });
                 match same {
@@ -107,7 +131,7 @@ impl<'a, E: Executor> Worker<'a, E> {
             // (the config-reuse cache makes the activation free when the
             // config is already live; batch-capable executors amortize
             // head compute across the flat [batch, ...] tensor)
-            let entry = &self.set.entries()[idx];
+            let entry = &set.entries()[idx];
             let apply_ms = self.cache.activate(&entry.config);
             let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
             let outcomes = self.executor.execute_batch(&requests, &entry.config);
@@ -119,6 +143,22 @@ impl<'a, E: Executor> Worker<'a, E> {
             let finished_ms = clock.now_ms();
 
             for (i, (tr, out)) in batch.iter().zip(outcomes).enumerate() {
+                if let Some(telemetry) = self.telemetry {
+                    telemetry.record(
+                        self.id,
+                        Sample {
+                            epoch: snapshot.epoch(),
+                            config: entry.config,
+                            predicted_latency_ms: entry.latency_ms,
+                            predicted_energy_j: entry.energy_j,
+                            latency_ms: out.latency_ms,
+                            energy_j: out.energy_j,
+                            edge_energy_j: out.edge_energy_j,
+                            cloud_energy_j: out.cloud_energy_j,
+                            accuracy: out.accuracy,
+                        },
+                    );
+                }
                 self.records.push(ServeRecord {
                     request_id: tr.request.id,
                     qos_ms: tr.request.qos_ms,
@@ -135,6 +175,8 @@ impl<'a, E: Executor> Worker<'a, E> {
                         apply_overhead_ms: if i == 0 { apply_ms } else { 0.0 },
                         coalesced: i > 0,
                         finished_ms,
+                        epoch: snapshot.epoch(),
+                        store_digest: snapshot.digest(),
                     },
                 });
             }
@@ -145,6 +187,7 @@ impl<'a, E: Executor> Worker<'a, E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::controller::policy::ConfigSet;
     use crate::controller::{ExecOutcome, PaperPolicy};
     use crate::solver::ParetoEntry;
     use crate::space::{Config, Network, TpuMode};
@@ -205,33 +248,35 @@ mod tests {
 
     fn worker<'a>(
         queue: &'a AdmissionQueue,
-        set: &'a ConfigSet,
+        store: &'a ConfigStore,
         max_batch: usize,
         seed: u64,
     ) -> Worker<'a, Toy> {
         Worker {
             id: 0,
             queue,
-            set,
+            store,
             policy: &PaperPolicy,
             max_batch,
             clock: ServeClock::Virtual,
             cache: ReuseCache::new(Pcg32::seeded(seed)),
             executor: Toy { dispatches: 0 },
+            telemetry: None,
             records: Vec::new(),
         }
     }
 
     #[test]
     fn worker_coalesces_same_config_runs() {
-        let set = ConfigSet::new(vec![entry(100.0, 1.0, 3), entry(50.0, 10.0, 9)]);
+        let store =
+            ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3), entry(50.0, 10.0, 9)]));
         let queue = AdmissionQueue::new(64);
         // 6 identical-QoS requests -> one config -> coalesced batches
         for i in 0..6 {
             assert!(queue.offer(tr(i, 500.0)));
         }
         queue.close();
-        let mut w = worker(&queue, &set, 4, 1);
+        let mut w = worker(&queue, &store, 4, 1);
         w.run();
         assert_eq!(w.records.len(), 6);
         // one activation for the first batch of 4, a free (cached) one
@@ -245,11 +290,22 @@ mod tests {
             .count();
         assert_eq!(coalesced, 4, "batch followers: 3 in the first, 1 in the second");
         assert_eq!(w.executor.dispatches, 2, "6 requests reach the executor as 2 batch calls");
+        // all on the startup epoch, stamped with its digest
+        for r in &w.records {
+            match &r.outcome {
+                ServeOutcome::Done { epoch, store_digest, .. } => {
+                    assert_eq!(*epoch, 0);
+                    assert_eq!(Some(*store_digest), store.digest_of(0));
+                }
+                other => panic!("not completed: {other:?}"),
+            }
+        }
     }
 
     #[test]
     fn worker_does_not_coalesce_across_configs() {
-        let set = ConfigSet::new(vec![entry(400.0, 1.0, 3), entry(50.0, 10.0, 9)]);
+        let store =
+            ConfigStore::new(ConfigSet::new(vec![entry(400.0, 1.0, 3), entry(50.0, 10.0, 9)]));
         let queue = AdmissionQueue::new(64);
         // alternating lenient/tight deadlines -> alternating configs
         for i in 0..4 {
@@ -257,7 +313,7 @@ mod tests {
             assert!(queue.offer(tr(i, qos)));
         }
         queue.close();
-        let mut w = worker(&queue, &set, 4, 2);
+        let mut w = worker(&queue, &store, 4, 2);
         w.run();
         assert_eq!(w.records.len(), 4);
         assert_eq!(w.cache.stats.reconfigs, 4, "every request flips the config");
@@ -267,7 +323,7 @@ mod tests {
 
     #[test]
     fn worker_sheds_expired_requests_and_decides_on_remaining_budget() {
-        let set = ConfigSet::new(vec![entry(100.0, 1.0, 3)]);
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
         let queue = AdmissionQueue::new(8);
         // request 0's deadline is its arrival instant (already passed by
         // pop time); request 1's budget is effectively unlimited
@@ -275,7 +331,7 @@ mod tests {
             assert!(queue.offer(tr(id, qos)));
         }
         queue.close();
-        let mut w = worker(&queue, &set, 4, 3);
+        let mut w = worker(&queue, &store, 4, 3);
         w.clock = ServeClock::Real { t0: Instant::now(), scale: 1.0 };
         w.run();
         assert_eq!(w.records.len(), 2);
@@ -288,5 +344,59 @@ mod tests {
             "request 1 still inside its budget"
         );
         assert_eq!(queue.stats().expired, 1);
+    }
+
+    #[test]
+    fn worker_records_telemetry_with_epoch_and_predictions() {
+        let e = entry(100.0, 1.0, 3);
+        let store = ConfigStore::new(ConfigSet::new(vec![e.clone()]));
+        let telemetry = Telemetry::new(1, 64);
+        let queue = AdmissionQueue::new(8);
+        for i in 0..3 {
+            assert!(queue.offer(tr(i, 500.0)));
+        }
+        queue.close();
+        let mut w = worker(&queue, &store, 1, 4);
+        w.telemetry = Some(&telemetry);
+        w.run();
+        let samples = telemetry.drain();
+        assert_eq!(samples.len(), 3, "one sample per completed request");
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(s.epoch, 0);
+            assert_eq!(s.config, e.config);
+            assert_eq!(s.predicted_latency_ms, e.latency_ms);
+            assert_eq!(s.predicted_energy_j, e.energy_j);
+            assert_eq!(s.latency_ms, e.config.split as f64, "measured from the executor");
+            assert_eq!(s.energy_j, i as f64, "request seed visible in the sample");
+        }
+    }
+
+    #[test]
+    fn batches_after_a_swap_resolve_against_the_new_epoch() {
+        // same store handle across two dispatch runs with a swap in
+        // between: the first batch stays on epoch 0, the next resolves
+        // entirely against epoch 1 (no torn batches)
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let serve_one = |store: &ConfigStore, id: usize| -> ServeRecord {
+            let queue = AdmissionQueue::new(8);
+            assert!(queue.offer(tr(id, 500.0)));
+            queue.close();
+            let mut w = worker(&queue, store, 1, 5);
+            w.run();
+            assert_eq!(w.records.len(), 1);
+            w.records.remove(0)
+        };
+        let before = serve_one(&store, 0);
+        store.swap(ConfigSet::new(vec![entry(40.0, 2.0, 9)]));
+        let after = serve_one(&store, 1);
+        let stamp = |r: &ServeRecord| match &r.outcome {
+            ServeOutcome::Done { epoch, config, store_digest, .. } => {
+                assert_eq!(Some(*store_digest), store.digest_of(*epoch), "digest registered");
+                (*epoch, config.split)
+            }
+            other => panic!("not completed: {other:?}"),
+        };
+        assert_eq!(stamp(&before), (0, 3));
+        assert_eq!(stamp(&after), (1, 9));
     }
 }

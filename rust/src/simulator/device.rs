@@ -57,6 +57,19 @@ impl DeviceModel {
         }
     }
 
+    /// Thermal-throttle the edge: scale the CPU and TPU rates by
+    /// `factor` (< 1 slows the device).  The paper's RPi testbed
+    /// throttles under sustained load; the adaptation experiments step
+    /// a cloned testbed's device model mid-run with this and let the
+    /// closed loop detect the resulting latency/energy drift.
+    pub fn throttle_edge(&mut self, factor: f64) {
+        assert!(factor > 0.0, "throttle factor must be positive");
+        self.edge_cpu_rate_max *= factor;
+        if self.edge_tpu_rate_max.is_finite() {
+            self.edge_tpu_rate_max *= factor;
+        }
+    }
+
     /// Edge CPU rate at the configured DVFS frequency:
     /// rate(f) = rate(f_max) · (f / f_max)^alpha.
     fn edge_cpu_rate(&self, cpu_ghz: f64) -> f64 {
@@ -170,6 +183,19 @@ mod tests {
         let m = model(Network::Vit);
         let b = m.latency(&cfg(Network::Vit, 0, TpuMode::Off, false, 18));
         assert!((9.0..13.0).contains(&b.total_s()), "{}", b.total_s());
+    }
+
+    #[test]
+    fn throttled_edge_is_slower_cloud_untouched() {
+        let mut m = model(Network::Vgg16);
+        let c = cfg(Network::Vgg16, 6, TpuMode::Max, true, 11);
+        let before = m.latency(&c);
+        m.throttle_edge(0.5);
+        let after = m.latency(&c);
+        assert!(after.edge_s > before.edge_s * 1.8, "edge slowed ~2x");
+        assert!(after.edge_tpu_s > before.edge_tpu_s * 1.8, "TPU throttles too");
+        assert_eq!(after.cloud_s, before.cloud_s, "cloud unaffected");
+        assert_eq!(after.net_s, before.net_s);
     }
 
     #[test]

@@ -53,7 +53,10 @@ impl TrialResult {
     }
 }
 
-/// The simulated edge-cloud testbed.
+/// The simulated edge-cloud testbed.  `Clone` so experiments can fork a
+/// *shifted* world (degraded link, throttled edge) from a calibrated
+/// base mid-run — the drift scenarios the adaptation loop closes on.
+#[derive(Clone)]
 pub struct Testbed {
     pub vgg: DeviceModel,
     pub vit: DeviceModel,

@@ -18,7 +18,7 @@ use crate::simulator::{Testbed, TrialResult};
 use crate::space::{Config, Network, Space};
 use crate::util::rng::Pcg32;
 
-pub use store::{ObservationPool, ParetoEntry, SolverOutput};
+pub use store::{Observation, ObservationPool, ParetoEntry, SolverOutput};
 
 /// Search strategy for the offline phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -118,17 +118,15 @@ impl SolverOutput {
     }
 }
 
-/// Key for grouping observations by configuration.
-fn config_key(c: &Config) -> (usize, usize, bool, usize) {
-    (c.cpu_idx, c.tpu as usize, c.gpu, c.split)
-}
-
 /// Pool of repeated observations per configuration — the Simulation
 /// Experiment's data source (§6.2: each simulated request re-samples a
-/// stored observation of its selected configuration, ≥ 5 per config).
+/// stored observation of its selected configuration, ≥ 5 per config)
+/// and the measured-truth source of the online re-solve.  Keyed by the
+/// whole [`Config`] (including the network), so observations of two
+/// networks sharing hardware settings can never pool together.
 #[derive(Debug, Clone, Default)]
 pub struct ObservationPool {
-    by_config: BTreeMap<(usize, usize, bool, usize), Vec<Observation>>,
+    by_config: BTreeMap<Config, Vec<Observation>>,
 }
 
 /// One stored observation of a configuration.
@@ -144,17 +142,27 @@ pub struct Observation {
 impl ObservationPool {
     /// Record an observation from a trial.
     pub fn record(&mut self, t: &TrialResult) {
-        self.by_config.entry(config_key(&t.config)).or_default().push(Observation {
-            latency_ms: t.latency_ms,
-            energy_j: t.energy_j,
-            edge_energy_j: t.edge_energy_j,
-            cloud_energy_j: t.cloud_energy_j,
-            accuracy: t.accuracy,
-        });
+        self.record_observation(
+            &t.config,
+            Observation {
+                latency_ms: t.latency_ms,
+                energy_j: t.energy_j,
+                edge_energy_j: t.edge_energy_j,
+                cloud_energy_j: t.cloud_energy_j,
+                accuracy: t.accuracy,
+            },
+        );
+    }
+
+    /// Record a raw observation for `config` — the seam the adaptation
+    /// loop uses to pool *served-request* measurements so the online
+    /// re-solve can score observed configurations by measured truth.
+    pub fn record_observation(&mut self, config: &Config, obs: Observation) {
+        self.by_config.entry(*config).or_default().push(obs);
     }
 
     pub fn observations(&self, c: &Config) -> &[Observation] {
-        self.by_config.get(&config_key(c)).map(|v| v.as_slice()).unwrap_or(&[])
+        self.by_config.get(c).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn min_observations(&self) -> usize {

@@ -93,8 +93,10 @@ impl TpuMode {
 ///
 /// `Eq + Hash` so configurations can key runtime caches (the serving
 /// pipeline's config-reuse cache and the per-config session cache) — all
-/// fields are discrete, so structural equality is exact.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// fields are discrete, so structural equality is exact, and `Ord` lets
+/// ordered maps (observation pools, drift streaks, calibration tables)
+/// key on the whole configuration with deterministic iteration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Config {
     pub net: Network,
     /// Edge CPU frequency index into [`CPU_FREQS_GHZ`].

@@ -7,6 +7,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use dynasplit::adapt::ConfigStore;
 use dynasplit::controller::policy::ConfigSet;
 use dynasplit::controller::{
     ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor, PolicyDecision,
@@ -232,6 +233,7 @@ fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
 
     // a full worker dispatch loop over a pre-filled queue: deterministic
     // coalescing, so executor-invocation counts are exact
+    let store = ConfigStore::new(set.clone());
     let run = |max_batch: usize| -> (Vec<ServeRecord>, BatchLog) {
         let queue = AdmissionQueue::new(128);
         for tr in &tl {
@@ -242,12 +244,13 @@ fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
         let mut worker = Worker {
             id: 0,
             queue: &queue,
-            set: &set,
+            store: &store,
             policy: &PaperPolicy,
             max_batch,
             clock: ServeClock::Virtual,
             cache: ReuseCache::new(Pcg32::seeded(3)),
             executor: BatchRuntimeExecutor::new(serve_runtime(&layers), log.clone()),
+            telemetry: None,
             records: Vec::new(),
         };
         worker.run();
@@ -333,6 +336,84 @@ fn pipeline_with_batch_executor_matches_solo_tensor_execution() {
     let l = log.lock().unwrap();
     assert_eq!(l.requests, 48, "every request executed exactly once");
     assert!(l.head_runs <= 48, "batching can only reduce executor invocations");
+}
+
+#[test]
+fn hysteresis_policy_composes_with_the_pipeline_and_cuts_reconfigurations() {
+    use dynasplit::controller::HysteresisPolicy;
+    use dynasplit::solver::ParetoEntry;
+
+    let entry = |latency: f64, energy: f64, split: usize| ParetoEntry {
+        config: Config {
+            net: Network::Vgg16,
+            cpu_idx: 6,
+            tpu: TpuMode::Off,
+            gpu: true,
+            split,
+        },
+        latency_ms: latency,
+        energy_j: energy,
+        accuracy: 0.95,
+    };
+    // A satisfies only the lenient deadline, B the oscillation's bucket
+    // floor, C is the fast fallback — the paper policy flips A/B every
+    // request, the hysteresis policy settles on B
+    let set = ConfigSet::new(vec![
+        entry(450.0, 2.0, 3),
+        entry(340.0, 4.0, 9),
+        entry(100.0, 60.0, 15),
+    ]);
+    let tl: Vec<TimedRequest> = (0..40)
+        .map(|i| TimedRequest {
+            request: Request {
+                id: i,
+                net: Network::Vgg16,
+                qos_ms: if i % 2 == 0 { 400.0 } else { 500.0 },
+                inferences: 1,
+                seed: i as u64,
+            },
+            arrival_ms: i as f64,
+        })
+        .collect();
+    let cfg = PipelineConfig {
+        workers: 1, // deterministic reconfiguration counting
+        queue_capacity: 64,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 3,
+        reuse: true,
+    };
+    let tb = Testbed::synthetic();
+    let run = |policy: &dyn SchedulingPolicy| {
+        run_pipeline(&set, policy, &tl, &cfg, |_| {
+            Ok(PerRequestSimExecutor { testbed: &tb, stream: 41 })
+        })
+        .expect("pipeline run")
+    };
+    let paper = run(&PaperPolicy);
+    let hysteresis_policy = HysteresisPolicy::paper(Network::Vgg16);
+    let sticky = run(&hysteresis_policy);
+
+    assert_eq!(paper.completed(), 40);
+    assert_eq!(sticky.completed(), 40);
+    assert!(
+        paper.cache.reconfigs >= 39,
+        "oscillating deadlines flip the paper policy: {} reconfigs",
+        paper.cache.reconfigs
+    );
+    assert_eq!(
+        sticky.cache.reconfigs, 1,
+        "hysteresis settles on one in-bucket config"
+    );
+    assert_eq!(sticky.cache.hits, 39, "every later activation reuses the live config");
+    // stickiness never trades away deadline satisfaction here: the kept
+    // config satisfies both oscillating QoS levels by construction
+    for r in &sticky.records {
+        match &r.outcome {
+            ServeOutcome::Done { config, .. } => assert_eq!(config.split, 9, "settled on B"),
+            other => panic!("request {} not completed: {other:?}", r.request_id),
+        }
+    }
 }
 
 #[test]
