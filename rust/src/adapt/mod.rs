@@ -54,7 +54,7 @@ use crate::workload::TimedRequest;
 pub use admission::AdmissionGate;
 pub use drift::{Calibration, DriftConfig, DriftDetector, DriftReport, WindowStats};
 pub use resolve::{resolve, ResolveConfig};
-pub use store::{ConfigStore, StoreSnapshot};
+pub use store::{ConfigStore, StoreMap, StoreSnapshot};
 pub use telemetry::{EwmaCell, Sample, Telemetry};
 
 /// Knobs of the whole adaptation loop.
@@ -111,6 +111,13 @@ pub struct AdaptStats {
 /// [`AdaptiveLoop::step`] is synchronous and deterministic given the
 /// drained samples, which is what the integration tests drive directly;
 /// [`run_closed_loop`] wraps it in a polling thread for live serving.
+///
+/// One loop adapts **one network's** store: samples from other
+/// networks in a mixed pipeline are excluded from drift windows and
+/// calibration (they carry another store's predictions) but still feed
+/// the queue-wait EWMA.  Because [`Telemetry::drain`] is destructive,
+/// concurrent per-network loops need their own `Telemetry` instances
+/// (a demux for one shared stream is a ROADMAP follow-on).
 pub struct AdaptiveLoop<'a> {
     store: &'a ConfigStore,
     telemetry: &'a Telemetry,
@@ -163,6 +170,14 @@ impl<'a> AdaptiveLoop<'a> {
         let epoch = self.store.epoch();
         for s in drained {
             self.service_ewma.observe(s.latency_ms);
+            // mixed-network pipelines share one queue, so the EWMA (a
+            // queue-wait estimate) folds every network's service time —
+            // but drift windows and calibration pools are per-network:
+            // another network's samples carry another store's
+            // predictions and must never contaminate this loop's model
+            if s.config.net != self.net {
+                continue;
+            }
             // samples recorded against an older epoch carry predictions
             // the current store no longer makes — they stay out of
             // drift/calibration (the EWMA above is epoch-agnostic)
@@ -377,6 +392,28 @@ mod tests {
         }
         assert!(!lp.step(), "old-epoch samples must not re-trigger");
         assert_eq!(store.epoch(), 1);
+    }
+
+    #[test]
+    fn other_network_samples_never_pollute_drift_or_calibration() {
+        // a vgg16 loop draining a mixed pipeline's telemetry: wildly
+        // off-model *vit* samples must seal no windows and trigger no
+        // swap — calibration pools never mix networks — while the
+        // (queue-wait) EWMA still folds every network's service time
+        let tb = Testbed::synthetic();
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(3, 100.0, 2.0)]));
+        let telemetry = Telemetry::new(1, 4096);
+        let mut lp = AdaptiveLoop::new(&store, &telemetry, &tb, Network::Vgg16, small_cfg());
+        let mut vit = entry(3, 100.0, 2.0);
+        vit.config.net = Network::Vit;
+        for _ in 0..64 {
+            telemetry.record(0, sample_for(&vit, 0, 400.0)); // 4x off — but vit
+        }
+        assert!(!lp.step());
+        assert_eq!(lp.stats.windows, 0, "foreign-network samples seal no windows");
+        assert_eq!(lp.stats.swaps, 0);
+        assert_eq!(store.epoch(), 0);
+        assert!(lp.service_ewma.value().is_some(), "EWMA folds every network");
     }
 
     #[test]

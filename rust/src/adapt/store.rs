@@ -27,6 +27,7 @@
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::controller::policy::ConfigSet;
+use crate::space::Network;
 
 /// One coherent view of the store: the set plus its epoch identity.
 /// Cheap to clone (`Arc` + two words).
@@ -53,6 +54,28 @@ impl StoreSnapshot {
 }
 
 /// Shared, hot-swappable handle to the current non-dominated set.
+///
+/// # Example
+///
+/// A snapshot taken before a swap keeps reading the set it was taken
+/// from; the store hands every *later* reader the new epoch:
+///
+/// ```
+/// use dynasplit::adapt::ConfigStore;
+/// use dynasplit::controller::ConfigSet;
+///
+/// let store = ConfigStore::new(ConfigSet::new(Vec::new()));
+/// let before = store.snapshot();
+/// assert_eq!(before.epoch(), 0);
+///
+/// let epoch = store.swap(ConfigSet::new(Vec::new()));
+/// assert_eq!(epoch, 1);
+/// assert_eq!(store.snapshot().epoch(), 1);
+/// // the pre-swap snapshot is still coherent: epoch 0, old set
+/// assert_eq!(before.epoch(), 0);
+/// // every installed (epoch, digest) pair stays in the registry
+/// assert_eq!(store.epochs().len(), 2);
+/// ```
 pub struct ConfigStore {
     current: RwLock<StoreSnapshot>,
     /// Every `(epoch, digest)` ever installed, in epoch order.
@@ -113,6 +136,81 @@ impl ConfigStore {
     }
 }
 
+/// Per-network store registry: the mixed-network serving seam
+/// (DESIGN.md §12).
+///
+/// One serving pipeline can host several networks side by side; each
+/// network resolves against its *own* hot-swappable [`ConfigStore`], so
+/// epochs, digests, and hot-swaps advance independently per network —
+/// an adaptation loop can drift-detect and re-solve vgg16 without ever
+/// touching the vit front.  The map holds *borrowed* handles: the
+/// stores' owners (one per network) stay free to [`ConfigStore::swap`]
+/// them while the pipeline serves.
+///
+/// Lookups are a linear scan over at most [`Network::ALL`] entries —
+/// cheaper than any hashing at this cardinality.
+#[derive(Clone)]
+pub struct StoreMap<'a> {
+    entries: Vec<(Network, &'a ConfigStore)>,
+}
+
+impl<'a> StoreMap<'a> {
+    /// An empty map; fill it with [`StoreMap::insert`].
+    pub fn new() -> StoreMap<'a> {
+        StoreMap { entries: Vec::new() }
+    }
+
+    /// Bind `net` to `store`, replacing any previous binding for `net`.
+    pub fn insert(&mut self, net: Network, store: &'a ConfigStore) {
+        if let Some(slot) = self.entries.iter_mut().find(|(n, _)| *n == net) {
+            slot.1 = store;
+        } else {
+            self.entries.push((net, store));
+        }
+    }
+
+    /// Single-network map.
+    pub fn single(net: Network, store: &'a ConfigStore) -> StoreMap<'a> {
+        StoreMap { entries: vec![(net, store)] }
+    }
+
+    /// Bind **every** network to one shared store — the legacy
+    /// single-store pipeline semantics ([`crate::serve::run_pipeline`] /
+    /// `run_pipeline_on` route all traffic through one set regardless of
+    /// the request's network, which is exactly what single-network
+    /// baselines and the closed-loop experiments rely on).
+    pub fn broadcast(store: &'a ConfigStore) -> StoreMap<'a> {
+        StoreMap { entries: Network::ALL.iter().map(|&n| (n, store)).collect() }
+    }
+
+    /// The store serving `net`, if one is bound.  A request whose
+    /// network has no binding is recorded as
+    /// `ServeOutcome::UnknownNetwork` by the worker instead of being
+    /// misrouted through another network's front.
+    pub fn get(&self, net: Network) -> Option<&'a ConfigStore> {
+        self.entries.iter().find(|(n, _)| *n == net).map(|(_, s)| *s)
+    }
+
+    /// Bound networks, in insertion order.
+    pub fn networks(&self) -> Vec<Network> {
+        self.entries.iter().map(|(n, _)| *n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for StoreMap<'_> {
+    fn default() -> Self {
+        StoreMap::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +265,75 @@ mod tests {
         assert_eq!(store.digest_of(1), Some(d1));
         assert_eq!(store.digest_of(2), Some(d2));
         assert_eq!(store.digest_of(7), None);
+    }
+
+    fn vit_set(split: usize, latency: f64) -> ConfigSet {
+        ConfigSet::new(vec![ParetoEntry {
+            config: Config {
+                net: Network::Vit,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            latency_ms: latency,
+            energy_j: 1.0,
+            accuracy: 0.95,
+        }])
+    }
+
+    #[test]
+    fn store_map_resolves_per_network_and_swaps_independently() {
+        let vgg = ConfigStore::new(set(3, 100.0));
+        let vit = ConfigStore::new(vit_set(9, 200.0));
+        let mut map = StoreMap::new();
+        map.insert(Network::Vgg16, &vgg);
+        map.insert(Network::Vit, &vit);
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.networks(), vec![Network::Vgg16, Network::Vit]);
+        assert_eq!(
+            map.get(Network::Vgg16).unwrap().snapshot().set().entries()[0].config.net,
+            Network::Vgg16
+        );
+        // swapping vit advances only vit's epoch
+        map.get(Network::Vit).unwrap().swap(vit_set(12, 80.0));
+        assert_eq!(map.get(Network::Vit).unwrap().epoch(), 1);
+        assert_eq!(map.get(Network::Vgg16).unwrap().epoch(), 0, "vgg16 untouched");
+    }
+
+    #[test]
+    fn store_map_single_leaves_other_networks_unbound() {
+        let vgg = ConfigStore::new(set(3, 100.0));
+        let map = StoreMap::single(Network::Vgg16, &vgg);
+        assert!(map.get(Network::Vgg16).is_some());
+        assert!(map.get(Network::Vit).is_none(), "no silent misroute");
+        assert!(!map.is_empty());
+    }
+
+    #[test]
+    fn store_map_broadcast_serves_every_network_from_one_store() {
+        let store = ConfigStore::new(set(3, 100.0));
+        let map = StoreMap::broadcast(&store);
+        for net in Network::ALL {
+            let bound = map.get(net).expect("broadcast binds every network");
+            assert_eq!(bound.snapshot().digest(), store.snapshot().digest());
+        }
+        // a swap through the shared handle is visible under every key
+        store.swap(set(9, 50.0));
+        assert_eq!(map.get(Network::Vit).unwrap().epoch(), 1);
+    }
+
+    #[test]
+    fn store_map_insert_replaces_existing_binding() {
+        let a = ConfigStore::new(set(3, 100.0));
+        let b = ConfigStore::new(set(9, 50.0));
+        let mut map = StoreMap::single(Network::Vgg16, &a);
+        map.insert(Network::Vgg16, &b);
+        assert_eq!(map.len(), 1, "rebinding must not duplicate the key");
+        assert_eq!(
+            map.get(Network::Vgg16).unwrap().snapshot().digest(),
+            b.snapshot().digest()
+        );
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Mixed-network serving experiment (beyond-paper; ROADMAP
+//! "mixed-network serving", DESIGN.md §12).
+//!
+//! One pipeline serves interleaved vgg16 + vit traffic against
+//! per-network Pareto stores.  Two questions:
+//!
+//! 1. **Sweep** — mix ratio × workers × policy: per-request results
+//!    stay worker-count invariant (order-independent executors), and
+//!    the per-network breakdowns reconcile with the aggregate report
+//!    under every mix.
+//! 2. **Mix shift** — the traffic composition flips mid-run
+//!    (vgg16-heavy → vit-heavy), the scenario shape PR 4's world-shift
+//!    machinery introduced: the same pipeline absorbs the flip with no
+//!    reconfiguration storm beyond the per-network caches' cold
+//!    activations, and [`post_shift_hit_rate`] reports QoS on the
+//!    post-flip tail per network.
+
+use crate::adapt::{ConfigStore, StoreMap};
+use crate::controller::policy::ConfigSet;
+use crate::controller::{PaperPolicy, PerRequestSimExecutor, SchedulingPolicy, StrictDeadlinePolicy};
+use crate::serve::{run_pipeline_stores, PipelineConfig, ServeReport};
+use crate::solver::{Solver, Strategy};
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::{mixed_timeline, ArrivalProcess, NetworkMix, TimedRequest, WorkloadGen};
+
+use super::adaptation::post_shift_hit_rate;
+use super::Ctx;
+
+/// One pipeline run under a (mix, workers, policy) combination.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub mix_label: &'static str,
+    pub policy: &'static str,
+    pub workers: usize,
+    pub report: ServeReport,
+}
+
+/// The mid-run mix-flip scenario.
+#[derive(Debug, Clone)]
+pub struct MixShift {
+    /// Request id at which the composition flips.
+    pub shift_at: usize,
+    pub report: ServeReport,
+}
+
+pub struct MixedExperiment {
+    pub requests: usize,
+    pub rows: Vec<Row>,
+    pub shift: MixShift,
+}
+
+/// Executor stream selector shared by every run: outcomes depend only
+/// on the request, so rows are comparable across mixes and workers.
+const EXEC_STREAM: u64 = 9001;
+
+/// Shared open-loop arrival rate; the mix-shift scenario derives its
+/// inter-phase pad (one mean interarrival) from the same constant.
+const RATE_PER_S: f64 = 150.0;
+
+fn gen_for(net: Network) -> WorkloadGen {
+    let mut g = WorkloadGen::paper(net);
+    g.inferences_per_request = 200;
+    g
+}
+
+pub fn run(ctx: &Ctx, requests: usize, seed: u64) -> MixedExperiment {
+    // offline phase, once per network: each network gets its own front
+    let mut fronts = Vec::new();
+    for net in Network::ALL {
+        let mut solver = Solver::new(&ctx.testbed, net);
+        solver.batch_per_trial = 60;
+        let pareto = solver.run(Strategy::NsgaIII, 120, seed).pareto;
+        fronts.push((net, ConfigStore::new(ConfigSet::new(pareto))));
+    }
+    let mut stores = StoreMap::new();
+    for (net, store) in &fronts {
+        stores.insert(*net, store);
+    }
+
+    let mixes: [(&'static str, NetworkMix); 3] = [
+        ("vgg16 only", NetworkMix::single(Network::Vgg16)),
+        ("70/30", NetworkMix::parse("vgg16=0.7,vit=0.3").expect("static mix")),
+        ("30/70", NetworkMix::parse("vgg16=0.3,vit=0.7").expect("static mix")),
+    ];
+    let process = ArrivalProcess::Poisson { rate_per_s: RATE_PER_S };
+
+    let paper = PaperPolicy;
+    let strict = StrictDeadlinePolicy;
+    let mut rows = Vec::new();
+    let mut launch = |mix_label: &'static str,
+                      tl: &[TimedRequest],
+                      policy_name: &'static str,
+                      policy: &dyn SchedulingPolicy,
+                      workers: usize| {
+        let cfg = PipelineConfig {
+            workers,
+            queue_capacity: requests.max(64),
+            max_batch: 4,
+            time_scale: 0.0,
+            seed,
+            reuse: true,
+        };
+        let report = run_pipeline_stores(&stores, policy, tl, &cfg, None, None, |_| {
+            Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: EXEC_STREAM })
+        })
+        .expect("mixed pipeline run");
+        rows.push(Row { mix_label, policy: policy_name, workers, report });
+    };
+    for &(label, ref mix) in &mixes {
+        // one shared timeline per mix so rows differ only in pipeline shape
+        let mut rng = Pcg32::new(seed, 231);
+        let tl = mixed_timeline(mix, gen_for, &process, requests, &mut rng);
+        for workers in [1, 2, 4] {
+            launch(label, &tl, "paper", &paper, workers);
+        }
+        launch(label, &tl, "strict", &strict, 2);
+    }
+
+    // mix shift: vgg16-heavy first half, vit-heavy second half, one run
+    let shift_at = requests / 2;
+    let pre = NetworkMix::parse("vgg16=0.8,vit=0.2").expect("static mix");
+    let post = NetworkMix::parse("vgg16=0.2,vit=0.8").expect("static mix");
+    let mut rng = Pcg32::new(seed, 232);
+    let mut tl = mixed_timeline(&pre, gen_for, &process, shift_at, &mut rng);
+    let offset = tl.last().map_or(0.0, |tr| tr.arrival_ms) + 1000.0 / RATE_PER_S;
+    let tail = mixed_timeline(&post, gen_for, &process, requests - shift_at, &mut rng);
+    tl.extend(tail.into_iter().map(|mut tr| {
+        tr.request.id += shift_at;
+        tr.arrival_ms += offset;
+        tr
+    }));
+    let cfg = PipelineConfig {
+        workers: 2,
+        queue_capacity: requests.max(64),
+        max_batch: 4,
+        time_scale: 0.0,
+        seed,
+        reuse: true,
+    };
+    let report = run_pipeline_stores(&stores, &paper, &tl, &cfg, None, None, |_| {
+        Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: EXEC_STREAM })
+    })
+    .expect("mix-shift run");
+
+    MixedExperiment { requests, rows, shift: MixShift { shift_at, report } }
+}
+
+pub fn print_report(exp: &MixedExperiment) {
+    println!(
+        "\n== mixed-network serving — vgg16 + vit in one pipeline ({} requests/run) ==",
+        exp.requests
+    );
+    let mut t = Table::new([
+        "mix", "policy", "workers", "done", "QoS hit", "J/req", "vgg16 done", "vgg16 QoS",
+        "vit done", "vit QoS",
+    ]);
+    for row in &exp.rows {
+        let r = &row.report;
+        let vgg = r.breakdown_for(Network::Vgg16);
+        let vit = r.breakdown_for(Network::Vit);
+        t.row([
+            row.mix_label.to_string(),
+            row.policy.to_string(),
+            row.workers.to_string(),
+            r.completed().to_string(),
+            format!("{:.0}%", r.qos_hit_rate() * 100.0),
+            format!("{:.2}", r.mean_energy_j()),
+            format!("{}/{}", vgg.done, vgg.requests),
+            format!("{:.0}%", vgg.qos_hit_rate() * 100.0),
+            format!("{}/{}", vit.done, vit.requests),
+            format!("{:.0}%", vit.qos_hit_rate() * 100.0),
+        ]);
+    }
+    t.print();
+    let s = &exp.shift;
+    println!(
+        "mix shift at request {}: composition flips vgg16-heavy -> vit-heavy mid-run; \
+         post-shift QoS {:.0}% overall ({} reconfigs, {} avoided across both networks)",
+        s.shift_at,
+        post_shift_hit_rate(&s.report, s.shift_at) * 100.0,
+        s.report.cache.reconfigs,
+        s.report.cache.hits,
+    );
+    println!("per-run summary (shift scenario): {}", s.report.summary_line());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn experiment() -> MixedExperiment {
+        run(&Ctx::synthetic(), 72, 29)
+    }
+
+    #[test]
+    fn sweep_covers_mixes_workers_and_policies() {
+        let exp = experiment();
+        assert_eq!(exp.rows.len(), 12, "3 mixes x (3 paper worker counts + 1 strict)");
+        for row in &exp.rows {
+            assert_eq!(
+                row.report.records.len(),
+                72,
+                "{} {} w{}: every request accounted",
+                row.mix_label,
+                row.policy,
+                row.workers
+            );
+            assert_eq!(row.report.unknown_network(), 0, "both networks bound");
+        }
+        // mixed rows really serve both networks
+        let mixed_row = exp
+            .rows
+            .iter()
+            .find(|r| r.mix_label == "70/30" && r.policy == "paper")
+            .expect("70/30 paper row");
+        assert_eq!(mixed_row.report.networks().len(), 2);
+    }
+
+    #[test]
+    fn paper_rows_are_worker_count_invariant_per_mix() {
+        let exp = experiment();
+        for label in ["vgg16 only", "70/30", "30/70"] {
+            let rows: Vec<&Row> = exp
+                .rows
+                .iter()
+                .filter(|r| r.mix_label == label && r.policy == "paper")
+                .collect();
+            assert_eq!(rows.len(), 3);
+            let (e0, q0) = (rows[0].report.mean_energy_j(), rows[0].report.qos_hit_rate());
+            for row in &rows[1..] {
+                assert_eq!(row.report.mean_energy_j(), e0, "{label}");
+                assert_eq!(row.report.qos_hit_rate(), q0, "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_network_accounting_reconciles_on_mixed_rows() {
+        let exp = experiment();
+        for row in &exp.rows {
+            let parts = row.report.breakdown();
+            assert_eq!(
+                parts.iter().map(|b| b.requests).sum::<usize>(),
+                row.report.records.len()
+            );
+            assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), row.report.completed());
+            let energy: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+            let want = row.report.mean_energy_j() * row.report.completed() as f64;
+            if row.report.completed() > 0 {
+                assert!((energy - want).abs() < 1e-6, "{} {}", row.mix_label, row.policy);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_shift_serves_both_phases_through_one_pipeline() {
+        let exp = experiment();
+        let s = &exp.shift;
+        assert_eq!(s.report.records.len(), 72, "no request lost across the flip");
+        // the flip is visible in the composition: vit dominates the tail
+        let tail: Vec<_> =
+            s.report.records.iter().filter(|r| r.request_id >= s.shift_at).collect();
+        let tail_vit = tail.iter().filter(|r| r.net == Network::Vit).count();
+        assert!(
+            tail_vit * 2 > tail.len(),
+            "post-shift tail should be vit-heavy: {tail_vit}/{}",
+            tail.len()
+        );
+        let head_vit = s
+            .report
+            .records
+            .iter()
+            .filter(|r| r.request_id < s.shift_at && r.net == Network::Vit)
+            .count();
+        assert!(head_vit * 2 < s.shift_at, "pre-shift head should be vgg16-heavy");
+        assert!(post_shift_hit_rate(&s.report, s.shift_at) > 0.0);
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&experiment());
+    }
+}

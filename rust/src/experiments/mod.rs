@@ -13,11 +13,13 @@
 //! | [`overhead`]  | Fig. 15 (controller overhead)        |
 //! | [`serving`]   | beyond-paper: serving-pipeline throughput (policies × workers × cache) |
 //! | [`adaptation`]| beyond-paper: closed-loop drift → re-solve → hot-swap recovery |
+//! | [`mixed`]     | beyond-paper: mixed-network serving (vgg16 + vit, one pipeline) |
 
 pub mod ablation;
 pub mod adaptation;
 pub mod extensions;
 pub mod bounds;
+pub mod mixed;
 pub mod overhead;
 pub mod prelim;
 pub mod serving;

@@ -26,7 +26,7 @@ use anyhow::{bail, Result};
 
 use dynasplit::adapt::{
     run_closed_loop, AdaptConfig, AdaptiveLoop, ConfigStore, DriftConfig, ResolveConfig,
-    Telemetry,
+    StoreMap, Telemetry,
 };
 use dynasplit::controller::{
     ConfigSet, EnergyBudgetPolicy, HysteresisPolicy, PaperPolicy, PerRequestSimExecutor,
@@ -35,13 +35,13 @@ use dynasplit::controller::{
 use dynasplit::experiments::{self, Ctx};
 use dynasplit::model::Manifest;
 use dynasplit::runtime::InferenceBackend;
-use dynasplit::serve::{run_pipeline, PipelineConfig};
+use dynasplit::serve::{run_pipeline, run_pipeline_stores, PipelineConfig};
 use dynasplit::solver::{Solver, SolverOutput, Strategy};
 use dynasplit::space::{Network, Space};
-use dynasplit::util::cli::ArgSpec;
+use dynasplit::util::cli::{ArgSpec, Args};
 use dynasplit::util::rng::Pcg32;
 use dynasplit::util::table::Table;
-use dynasplit::workload::{ArrivalProcess, WorkloadGen};
+use dynasplit::workload::{mixed_timeline, ArrivalProcess, NetworkMix, WorkloadGen};
 
 fn main() {
     if let Err(e) = run() {
@@ -64,6 +64,7 @@ fn run() -> Result<()> {
         "space" => cmd_space(),
         "solve" => cmd_solve(),
         "serve" => cmd_serve(),
+        "mixed" => cmd_mixed(),
         "adapt" => cmd_adapt(),
         "throughput" => cmd_throughput(),
         "prelim" => cmd_prelim(),
@@ -91,7 +92,9 @@ subcommands:
   space          print the Table-1 configuration spaces
   solve          offline phase: search the space, save the pareto set
   serve          online phase: concurrent serving pipeline (queue, policies, cache;
+                 --mix vgg16=0.7,vit=0.3 serves both networks from one pipeline;
                  --adapt closes the loop: telemetry -> drift -> re-solve -> hot-swap)
+  mixed          mixed-network serving experiment (mix x workers x policy + mix shift)
   adapt          closed-loop adaptation experiment (mid-run world shift + QoS recovery)
   throughput     serving-pipeline throughput experiment (policies x workers x cache)
   prelim         Fig. 2a-e preliminary study
@@ -206,10 +209,19 @@ fn cmd_serve() -> Result<()> {
         .opt("adapt-k", "2", "consecutive off-model windows before a re-solve (--adapt)")
         .opt("adapt-trials", "96", "evaluation budget of the online re-solve (--adapt)")
         .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh 20% search)")
+        .opt_maybe(
+            "mix",
+            "serve a network mix from one pipeline, e.g. vgg16=0.7,vit=0.3 \
+             (per-network Pareto stores; ignores --net)",
+        )
         .parse_env(2)?;
-    let net = Network::parse(a.str("net")?)?;
     let ctx = Ctx::load(a.str("artifacts")?);
     let seed = a.u64("seed")?;
+    if let Some(mix) = a.get("mix") {
+        let mix = NetworkMix::parse(mix)?;
+        return serve_mixed(&a, &ctx, seed, &mix);
+    }
+    let net = Network::parse(a.str("net")?)?;
     let pareto = match a.get("pareto") {
         Some(path) => SolverOutput::load_pareto(std::path::Path::new(path))?,
         None => {
@@ -225,23 +237,10 @@ fn cmd_serve() -> Result<()> {
         set.len(),
         t0.elapsed().as_secs_f64() * 1000.0
     );
-    let policy: Box<dyn SchedulingPolicy> = match a.str("policy")? {
-        "paper" => Box::new(PaperPolicy),
-        "strict" => Box::new(StrictDeadlinePolicy),
-        "budget" => Box::new(EnergyBudgetPolicy { budget_j: a.f64("budget")? }),
-        "hysteresis" => Box::new(HysteresisPolicy::paper(net)),
-        other => bail!("unknown policy {other:?} (expected paper|strict|budget|hysteresis)"),
-    };
+    let policy = parse_policy(&a, Some(net))?;
     let gen = WorkloadGen::paper(net);
     let mut rng = Pcg32::new(seed, 91);
-    let process = match a.usize("burst")? {
-        0 => ArrivalProcess::Poisson { rate_per_s: a.f64("rate")? },
-        burst_size => ArrivalProcess::Bursty {
-            base_rate_per_s: a.f64("rate")?,
-            period_s: 1.0,
-            burst_size,
-        },
-    };
+    let process = arrival_process(&a)?;
     let tl = dynasplit::workload::timeline(&gen, &process, a.usize("requests")?, &mut rng);
     let cfg = PipelineConfig {
         workers: a.usize("workers")?,
@@ -301,6 +300,118 @@ fn cmd_serve() -> Result<()> {
         &format!("serve_{}", net.name()),
         &dynasplit::report::metric_set_table(&metrics),
     )?;
+    Ok(())
+}
+
+/// Scheduling policy shared by `serve` and `serve --mix`.
+/// `hysteresis_net` is the network a `hysteresis` policy would be
+/// parameterized for — `None` in mixed mode, where its per-set sticky
+/// state does not compose yet (ROADMAP follow-on).
+fn parse_policy(a: &Args, hysteresis_net: Option<Network>) -> Result<Box<dyn SchedulingPolicy>> {
+    Ok(match a.str("policy")? {
+        "paper" => Box::new(PaperPolicy),
+        "strict" => Box::new(StrictDeadlinePolicy),
+        "budget" => Box::new(EnergyBudgetPolicy { budget_j: a.f64("budget")? }),
+        "hysteresis" => match hysteresis_net {
+            Some(net) => Box::new(HysteresisPolicy::paper(net)),
+            None => bail!(
+                "hysteresis keys its sticky state per configuration set; per-network \
+                 instances under --mix are a ROADMAP follow-on (use paper|strict|budget)"
+            ),
+        },
+        other => bail!("unknown policy {other:?} (expected paper|strict|budget|hysteresis)"),
+    })
+}
+
+/// Arrival process from the shared `--rate`/`--burst` serve flags.
+fn arrival_process(a: &Args) -> Result<ArrivalProcess> {
+    Ok(match a.usize("burst")? {
+        0 => ArrivalProcess::Poisson { rate_per_s: a.f64("rate")? },
+        burst_size => ArrivalProcess::Bursty {
+            base_rate_per_s: a.f64("rate")?,
+            period_s: 1.0,
+            burst_size,
+        },
+    })
+}
+
+/// `dynasplit serve --mix …`: one pipeline, per-network Pareto stores,
+/// an interleaved workload (DESIGN.md §12).
+fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
+    if a.flag("adapt") {
+        bail!(
+            "--adapt is single-network for now (concurrent per-network adaptation \
+             loops need a telemetry demux — ROADMAP follow-on); drop --mix or --adapt"
+        );
+    }
+    if a.get("pareto").is_some() {
+        bail!("--pareto holds one network's front; --mix runs a fresh 20% search per network");
+    }
+    let policy = parse_policy(a, None)?;
+    // offline phase: one 20%-budget search per mixed network — each
+    // network gets its own independently hot-swappable store
+    let mut fronts = Vec::new();
+    for net in mix.networks() {
+        let mut solver = Solver::new(&ctx.testbed, net);
+        solver.batch_per_trial = a.usize("batch")?;
+        let t0 = std::time::Instant::now();
+        let pareto = solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto;
+        let set = ConfigSet::new(pareto);
+        println!(
+            "[serve] {}: sorted + indexed {} configs in {:.3} ms ({:.0}% of traffic)",
+            net.name(),
+            set.len(),
+            t0.elapsed().as_secs_f64() * 1000.0,
+            mix.share(net) * 100.0
+        );
+        fronts.push((net, ConfigStore::new(set)));
+    }
+    let mut stores = StoreMap::new();
+    for (net, store) in &fronts {
+        stores.insert(*net, store);
+    }
+    let mut rng = Pcg32::new(seed, 91);
+    let process = arrival_process(a)?;
+    let tl = mixed_timeline(mix, WorkloadGen::paper, &process, a.usize("requests")?, &mut rng);
+    let cfg = PipelineConfig {
+        workers: a.usize("workers")?,
+        queue_capacity: a.usize("queue")?,
+        max_batch: a.usize("coalesce")?,
+        time_scale: a.f64("time-scale")?,
+        seed,
+        reuse: !a.flag("no-reuse"),
+    };
+    let report = run_pipeline_stores(&stores, policy.as_ref(), &tl, &cfg, None, None, |_| {
+        Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
+    })?;
+    println!("[serve] {} — {}", policy.name(), report.summary_line());
+    for b in report.breakdown() {
+        println!(
+            "[serve]   {:>6}: {}/{} done; QoS hit {:.0}%; {:.2} J/req; store epochs {:?}",
+            b.net.name(),
+            b.done,
+            b.requests,
+            b.qos_hit_rate() * 100.0,
+            b.mean_energy_j(),
+            report.epochs_observed_for(b.net),
+        );
+        let metrics = report.to_metric_set_for(b.net, "dynasplit");
+        dynasplit::report::write_csv(
+            a.str("artifacts")?,
+            &format!("serve_mixed_{}", b.net.name()),
+            &dynasplit::report::metric_set_table(&metrics),
+        )?;
+    }
+    Ok(())
+}
+
+fn cmd_mixed() -> Result<()> {
+    let a = spec("mixed", "mixed-network serving experiment (vgg16 + vit, one pipeline)")
+        .opt("requests", "240", "requests per pipeline run")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let exp = experiments::mixed::run(&ctx, a.usize("requests")?, a.u64("seed")?);
+    experiments::mixed::print_report(&exp);
     Ok(())
 }
 

@@ -1,8 +1,18 @@
 //! Evaluation metrics (§6.2.2): latency, QoS violations, energy, accuracy.
 //!
-//! [`RequestRecord`] captures everything about one served request;
-//! [`MetricSet`] aggregates a run into the quantities the paper reports
-//! per strategy (violin quartiles, violation counts/exceedances, medians).
+//! [`RequestRecord`] captures everything about one served request —
+//! measured objectives, the configuration it ran under, and the
+//! controller overheads (Fig. 15); [`MetricSet`] aggregates a run into
+//! the quantities the paper reports per strategy (violin quartiles,
+//! violation counts/exceedances, medians, placement counts).
+//!
+//! This is the *paper-shaped* view: one row per completed request,
+//! QoS judged against execution latency alone.  The serving pipeline's
+//! [`crate::serve::ServeReport`] is the superset for production-shaped
+//! runs (sheds, expiries, per-network breakdowns, wall-clock
+//! throughput) and projects back into a `MetricSet` via
+//! `ServeReport::to_metric_set` / `to_metric_set_for`, so the violin
+//! and violation reporting below applies unchanged to pipeline runs.
 
 use crate::space::Config;
 use crate::util::stats::{self, Summary};

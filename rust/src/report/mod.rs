@@ -1,5 +1,16 @@
-//! Report emission: CSV data files for EXPERIMENTS.md appendices and a
-//! small markdown section writer.
+//! Report emission: CSV data files and small markdown sections for
+//! experiment write-ups.
+//!
+//! Every `dynasplit` experiment subcommand prints a human table and, for
+//! the request-level runs, also drops one CSV per `(experiment,
+//! network, strategy)` under `<artifacts>/reports/` via [`write_csv`]
+//! (gitignored alongside the artifacts — these are *outputs*, not
+//! fixtures).  [`metric_set_table`] is the shared projection from a
+//! [`MetricSet`] to rows: one line per request with its placement,
+//! measured objectives, violation, and controller overheads, so
+//! downstream plotting needs no rust-side logic.  Mixed-network serving
+//! writes one CSV per network (`serve_mixed_vgg16.csv`,
+//! `serve_mixed_vit.csv`) from the per-network metric-set slices.
 
 use std::path::{Path, PathBuf};
 

@@ -10,7 +10,7 @@
 //! avoided" metric.
 
 use crate::controller::apply::Applier;
-use crate::space::Config;
+use crate::space::{Config, Network};
 use crate::util::rng::Pcg32;
 
 /// Counters aggregated across workers into the serving report.
@@ -82,6 +82,63 @@ impl ReuseCache {
     }
 }
 
+/// Per-network activation caches for one worker (mixed-network serving,
+/// DESIGN.md §12).
+///
+/// A mixed worker keeps one live configuration *per network* — its
+/// loaded vgg16 state survives serving a vit request in between, so an
+/// interleaved workload does not thrash reconfigurations that a
+/// single-slot cache would charge on every network flip.  Stats report
+/// the sum over all networks (the single-network totals, unchanged,
+/// when only one network is served).
+pub struct CacheSet {
+    caches: Vec<(Network, ReuseCache)>,
+}
+
+impl CacheSet {
+    /// One cache per network (`reuse = false` builds pass-through
+    /// caches).  Apply-jitter RNG streams are forked per network so the
+    /// modeled overheads stay deterministic per `(worker, network)`.
+    pub fn new(networks: &[Network], reuse: bool, rng: &mut Pcg32) -> CacheSet {
+        CacheSet {
+            caches: networks
+                .iter()
+                .map(|&net| {
+                    let forked = rng.fork(net as u64);
+                    let cache =
+                        if reuse { ReuseCache::new(forked) } else { ReuseCache::disabled(forked) };
+                    (net, cache)
+                })
+                .collect(),
+        }
+    }
+
+    /// Single-network convenience (the shape every pre-mixed test used).
+    pub fn single(net: Network, cache: ReuseCache) -> CacheSet {
+        CacheSet { caches: vec![(net, cache)] }
+    }
+
+    /// The cache serving `net`.  The worker only activates networks the
+    /// store map binds, and the pipeline builds one cache per bound
+    /// network — a miss here is a pipeline-construction bug.
+    pub fn get_mut(&mut self, net: Network) -> &mut ReuseCache {
+        self.caches
+            .iter_mut()
+            .find(|(n, _)| *n == net)
+            .map(|(_, c)| c)
+            .expect("a ReuseCache exists for every network in the store map")
+    }
+
+    /// Counters summed over all networks.
+    pub fn stats(&self) -> CacheStats {
+        let mut out = CacheStats::default();
+        for (_, c) in &self.caches {
+            out.merge(&c.stats);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +186,39 @@ mod tests {
         assert!(repeat > 0.0);
         assert_eq!(c.stats.hits, 0);
         assert_eq!(c.stats.reconfigs, 2);
+    }
+
+    #[test]
+    fn cache_set_keeps_one_live_config_per_network() {
+        let mut rng = Pcg32::seeded(7);
+        let mut set = CacheSet::new(&[Network::Vgg16, Network::Vit], true, &mut rng);
+        let vgg = cfg(3, TpuMode::Max, 7);
+        let vit = Config { net: Network::Vit, cpu_idx: 5, tpu: TpuMode::Off, gpu: true, split: 4 };
+        assert!(set.get_mut(Network::Vgg16).activate(&vgg) > 0.0, "cold vgg16");
+        assert!(set.get_mut(Network::Vit).activate(&vit) > 0.0, "cold vit");
+        // interleaving networks must not evict the other's live config
+        assert_eq!(set.get_mut(Network::Vgg16).activate(&vgg), 0.0, "vgg16 still live");
+        assert_eq!(set.get_mut(Network::Vit).activate(&vit), 0.0, "vit still live");
+        let s = set.stats();
+        assert_eq!((s.reconfigs, s.hits), (2, 2), "summed across networks");
+    }
+
+    #[test]
+    fn cache_set_disabled_builds_pass_through_caches() {
+        let mut rng = Pcg32::seeded(8);
+        let mut set = CacheSet::new(&[Network::Vgg16], false, &mut rng);
+        let a = cfg(3, TpuMode::Max, 7);
+        set.get_mut(Network::Vgg16).activate(&a);
+        assert!(set.get_mut(Network::Vgg16).activate(&a) > 0.0, "no reuse when disabled");
+        assert_eq!(set.stats().hits, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "a ReuseCache exists")]
+    fn cache_set_panics_on_unbound_network() {
+        let mut rng = Pcg32::seeded(9);
+        let mut set = CacheSet::new(&[Network::Vgg16], true, &mut rng);
+        let _ = set.get_mut(Network::Vit);
     }
 
     #[test]

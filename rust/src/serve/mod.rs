@@ -1,49 +1,62 @@
 //! The online-phase serving pipeline (beyond-paper, ROADMAP north star).
 //!
-//! The paper's Online Phase handles one request at a time; this module
-//! turns it into a concurrent, stateful serving system:
+//! The paper's Online Phase handles one request at a time for one
+//! network; this module turns it into a concurrent, stateful,
+//! **mixed-network** serving system — one pipeline serves interleaved
+//! vgg16 + vit traffic:
 //!
 //! ```text
 //!  arrival generator ──offer──▶ AdmissionQueue (bounded, open-loop)
-//!   (workload::arrival)             │ pop / pop_if
+//!   (workload::arrival / mix)      │ pop / pop_if (same-net coalescing)
 //!                        ┌──────────┴──────────┐
 //!                   Worker 0   …           Worker N-1
-//!                    │ SchedulingPolicy (shared, stateless)
-//!                    │ ReuseCache (per worker: live config + applier)
-//!                    │ Executor   (per worker: runtime session)
+//!                    │ StoreMap: request.net ─▶ ConfigStore (snapshot)
+//!                    │ SchedulingPolicy (shared; decides per network)
+//!                    │ CacheSet  (per worker: live config *per net*)
+//!                    │ Executor  (per worker: runtime session per net)
 //!                    └──────────▶ ServeRecord* ──▶ ServeReport
+//!                                                  (+ per-net breakdown)
 //! ```
 //!
 //! * [`queue`]  — bounded admission with load shedding + deadline-aware
 //!   pop (expired requests shed at dispatch);
-//! * [`worker`] — dispatch loop: pop → snapshot the store → decide on
-//!   the *remaining* budget → coalesce → activate → one batched
+//! * [`worker`] — dispatch loop: pop → resolve the request's network in
+//!   the [`StoreMap`] → snapshot that store → decide on the *remaining*
+//!   budget → coalesce same-network successors → activate → one batched
 //!   executor dispatch;
 //! * [`batch`]  — tensor-driven executor amortizing head compute across
 //!   a coalesced batch (one flat `[batch, …]` head call);
+//! * [`multi`]  — per-network executor routing (one loaded runtime per
+//!   network behind one worker-owned executor);
 //! * [`clock`]  — virtual vs real-time experiment clock (wait-aware
 //!   scheduling);
-//! * [`cache`]  — config-reuse cache (reconfigurations avoided);
-//! * [`report`] — per-request records + aggregated serving metrics.
+//! * [`cache`]  — config-reuse caches, one live config per network;
+//! * [`report`] — per-request records + aggregated serving metrics with
+//!   per-network breakdowns that reconcile with the totals.
 //!
-//! Workers resolve configurations through a hot-swappable
-//! [`crate::adapt::ConfigStore`]: [`run_pipeline`] wraps a fixed set in
-//! a single-epoch store (the open-loop semantics every experiment
-//! keeps), while [`run_pipeline_on`] serves against a live store handle
-//! — the closed-loop entry point (`crate::adapt::run_closed_loop`)
-//! swaps a freshly re-solved set under traffic with no request ever
-//! observing a torn store, and may wire serving telemetry and
-//! EWMA-backed admission backpressure into the same run.
+//! Workers resolve configurations through per-network hot-swappable
+//! [`crate::adapt::ConfigStore`]s collected in a
+//! [`crate::adapt::StoreMap`]: [`run_pipeline_stores`] is the
+//! mixed-network entry point; [`run_pipeline_on`] serves a single live
+//! store handle (broadcast to every network — the legacy semantics the
+//! closed-loop entry point `crate::adapt::run_closed_loop` relies on);
+//! [`run_pipeline`] wraps a fixed set in a single-epoch store (the
+//! open-loop semantics every baseline experiment keeps).  Each
+//! network's store hot-swaps independently: a re-solve of the vit front
+//! moves only vit batches to the new epoch, with no request ever
+//! observing a torn store.
 //!
 //! In virtual time (`time_scale == 0`) policies decide from
 //! `(ConfigSet, qos)` alone and pipeline executors are
 //! order-independent per request, so per-request results equal the
-//! sequential Algorithm-1 baseline for any worker count — asserted by
-//! `rust/tests/serve_pipeline.rs`.
+//! sequential Algorithm-1 baseline — run per network against that
+//! network's set — for any worker count and any interleaving of
+//! networks; asserted by `rust/tests/serve_pipeline.rs`.
 
 pub mod batch;
 pub mod cache;
 pub mod clock;
+pub mod multi;
 pub mod queue;
 pub mod report;
 pub mod worker;
@@ -52,17 +65,18 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
-use crate::adapt::{AdmissionGate, ConfigStore, Telemetry};
+use crate::adapt::{AdmissionGate, ConfigStore, StoreMap, Telemetry};
 use crate::controller::policy::{ConfigSet, SchedulingPolicy};
 use crate::controller::Executor;
 use crate::util::rng::Pcg32;
 use crate::workload::TimedRequest;
 
 pub use batch::{BatchLog, BatchRuntimeExecutor};
-pub use cache::{CacheStats, ReuseCache};
+pub use cache::{CacheSet, CacheStats, ReuseCache};
 pub use clock::ServeClock;
+pub use multi::NetExecutorMap;
 pub use queue::{AdmissionQueue, QueueStats};
-pub use report::{ServeOutcome, ServeRecord, ServeReport};
+pub use report::{NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport};
 pub use worker::Worker;
 
 /// Pipeline shape knobs.
@@ -110,6 +124,40 @@ impl Default for PipelineConfig {
 /// are deliberately not `Send`).  For order-independent results the
 /// executor must derive its outcome from the `(request, config)` pair
 /// alone, like [`crate::controller::PerRequestSimExecutor`].
+///
+/// # Example
+///
+/// Four requests through two workers against a one-config set; in
+/// virtual time the per-request results equal a sequential
+/// Algorithm-1 run:
+///
+/// ```
+/// use dynasplit::controller::{ConfigSet, PaperPolicy, PerRequestSimExecutor};
+/// use dynasplit::serve::{run_pipeline, PipelineConfig};
+/// use dynasplit::simulator::Testbed;
+/// use dynasplit::solver::ParetoEntry;
+/// use dynasplit::space::{Config, Network, TpuMode};
+/// use dynasplit::workload::{Request, TimedRequest};
+///
+/// let set = ConfigSet::new(vec![ParetoEntry {
+///     config: Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split: 5 },
+///     latency_ms: 120.0,
+///     energy_j: 2.0,
+///     accuracy: 0.95,
+/// }]);
+/// let timeline: Vec<TimedRequest> = (0..4)
+///     .map(|i| TimedRequest {
+///         request: Request { id: i, net: Network::Vgg16, qos_ms: 5000.0, inferences: 1, seed: i as u64 },
+///         arrival_ms: i as f64,
+///     })
+///     .collect();
+/// let testbed = Testbed::synthetic();
+/// let report = run_pipeline(&set, &PaperPolicy, &timeline, &PipelineConfig::default(), |_| {
+///     Ok(PerRequestSimExecutor { testbed: &testbed, stream: 7 })
+/// })?;
+/// assert_eq!(report.completed(), 4);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub fn run_pipeline<F, E>(
     set: &ConfigSet,
     policy: &dyn SchedulingPolicy,
@@ -125,9 +173,16 @@ where
     run_pipeline_on(&store, policy, timeline, cfg, None, None, factory)
 }
 
-/// Run the serving pipeline against a live, hot-swappable store handle,
-/// optionally recording adaptation telemetry and applying closed-loop
-/// admission backpressure (`gate`) at the feeder.
+/// Run the serving pipeline against a single live, hot-swappable store
+/// handle, optionally recording adaptation telemetry and applying
+/// closed-loop admission backpressure (`gate`) at the feeder.
+///
+/// The store is **broadcast** to every network
+/// ([`StoreMap::broadcast`]): all traffic resolves against this one
+/// set regardless of the request's network — the single-network
+/// semantics every pre-mixed experiment and the closed-loop entry
+/// point rely on.  Mixed-network serving goes through
+/// [`run_pipeline_stores`] instead.
 ///
 /// Every worker takes one [`crate::adapt::StoreSnapshot`] per dispatch
 /// batch, so a concurrent [`ConfigStore::swap`] moves *subsequent*
@@ -145,6 +200,35 @@ where
     F: Fn(usize) -> Result<E> + Sync,
     E: Executor,
 {
+    let stores = StoreMap::broadcast(store);
+    run_pipeline_stores(&stores, policy, timeline, cfg, telemetry, gate, factory)
+}
+
+/// Run the serving pipeline against a per-network map of live,
+/// hot-swappable stores — the mixed-network entry point (`dynasplit
+/// serve --mix`, DESIGN.md §12).
+///
+/// Each request is scheduled against the store bound to *its* network:
+/// decisions, coalescing (never across networks), config activation
+/// (one [`ReuseCache`] per network per worker), and the
+/// `(epoch, digest)` stamps are all per-network, so each network's
+/// store can hot-swap independently under traffic.  A request whose
+/// network has no binding is recorded as
+/// [`ServeOutcome::UnknownNetwork`].
+pub fn run_pipeline_stores<F, E>(
+    stores: &StoreMap<'_>,
+    policy: &dyn SchedulingPolicy,
+    timeline: &[TimedRequest],
+    cfg: &PipelineConfig,
+    telemetry: Option<&Telemetry>,
+    gate: Option<&AdmissionGate>,
+    factory: F,
+) -> Result<ServeReport>
+where
+    F: Fn(usize) -> Result<E> + Sync,
+    E: Executor,
+{
+    ensure!(!stores.is_empty(), "store map binds no network");
     ensure!(cfg.workers >= 1, "need at least one worker");
     ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
     if let Some(t) = telemetry {
@@ -163,30 +247,32 @@ where
     let clock = ServeClock::new(t0, cfg.time_scale);
     let mut records: Vec<ServeRecord> = Vec::with_capacity(timeline.len());
 
+    let networks = stores.networks();
     let worker_results = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let queue = &queue;
             let factory = &factory;
+            let networks = &networks;
             handles.push(s.spawn(move || -> Result<(Vec<ServeRecord>, CacheStats)> {
                 let executor = factory(w)?;
-                let rng = Pcg32::new(cfg.seed, 2000 + w as u64);
-                let cache =
-                    if cfg.reuse { ReuseCache::new(rng) } else { ReuseCache::disabled(rng) };
+                let mut rng = Pcg32::new(cfg.seed, 2000 + w as u64);
+                let caches = CacheSet::new(networks, cfg.reuse, &mut rng);
                 let mut worker = Worker {
                     id: w,
                     queue,
-                    store,
+                    stores,
                     policy,
                     max_batch: cfg.max_batch,
                     clock,
-                    cache,
+                    caches,
                     executor,
                     telemetry,
                     records: Vec::new(),
                 };
                 worker.run();
-                Ok((worker.records, worker.cache.stats))
+                let stats = worker.caches.stats();
+                Ok((worker.records, stats))
             }));
         }
 
@@ -519,6 +605,106 @@ mod tests {
                 + report.rejected_by_policy()
                 + report.rejected_queue_full(),
             24
+        );
+    }
+
+    #[test]
+    fn mixed_stores_route_each_request_through_its_own_network() {
+        use crate::adapt::{ConfigStore, StoreMap};
+
+        let vgg_store = ConfigStore::new(set2());
+        let vit_store = ConfigStore::new(ConfigSet::new(vec![ParetoEntry {
+            config: Config {
+                net: Network::Vit,
+                cpu_idx: 5,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split: 7,
+            },
+            latency_ms: 150.0,
+            energy_j: 3.0,
+            accuracy: 0.95,
+        }]));
+        let mut stores = StoreMap::new();
+        stores.insert(Network::Vgg16, &vgg_store);
+        stores.insert(Network::Vit, &vit_store);
+        let timeline: Vec<TimedRequest> = (0..12)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: if i % 3 == 0 { Network::Vit } else { Network::Vgg16 },
+                    qos_ms: 500.0,
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: i as f64,
+            })
+            .collect();
+        let cfg = PipelineConfig { workers: 2, queue_capacity: 64, ..PipelineConfig::default() };
+        let report =
+            run_pipeline_stores(&stores, &PaperPolicy, &timeline, &cfg, None, None, |_| {
+                Ok(PureExec)
+            })
+            .unwrap();
+        assert_eq!(report.completed(), 12);
+        for r in &report.records {
+            match &r.outcome {
+                ServeOutcome::Done { config, .. } => {
+                    assert_eq!(config.net, r.net, "request {} crossed networks", r.request_id)
+                }
+                other => panic!("request {} not completed: {other:?}", r.request_id),
+            }
+        }
+        // per-network accounting reconciles
+        let parts = report.breakdown();
+        assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), 12);
+        assert_eq!(report.breakdown_for(Network::Vit).requests, 4);
+        assert_eq!(report.breakdown_for(Network::Vgg16).requests, 8);
+    }
+
+    #[test]
+    fn requests_without_a_store_binding_are_recorded_not_misrouted() {
+        use crate::adapt::{ConfigStore, StoreMap};
+
+        let vgg_store = ConfigStore::new(set2());
+        let stores = StoreMap::single(Network::Vgg16, &vgg_store);
+        let timeline: Vec<TimedRequest> = (0..6)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: if i % 2 == 0 { Network::Vgg16 } else { Network::Vit },
+                    qos_ms: 500.0,
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: i as f64,
+            })
+            .collect();
+        let cfg = PipelineConfig { workers: 1, queue_capacity: 16, ..PipelineConfig::default() };
+        let report =
+            run_pipeline_stores(&stores, &PaperPolicy, &timeline, &cfg, None, None, |_| {
+                Ok(PureExec)
+            })
+            .unwrap();
+        assert_eq!(report.records.len(), 6, "every request accounted for");
+        assert_eq!(report.completed(), 3);
+        assert_eq!(report.unknown_network(), 3, "unbound vit traffic is flagged");
+        assert!(report.summary_line().contains("3 unknown-net"));
+        let vit = report.breakdown_for(Network::Vit);
+        assert_eq!((vit.done, vit.unknown_network), (0, 3));
+    }
+
+    #[test]
+    fn empty_store_map_is_an_error() {
+        use crate::adapt::StoreMap;
+
+        let stores = StoreMap::new();
+        let cfg = PipelineConfig::default();
+        assert!(
+            run_pipeline_stores(&stores, &PaperPolicy, &tl(2), &cfg, None, None, |_| {
+                Ok(PureExec)
+            })
+            .is_err()
         );
     }
 

@@ -1,0 +1,186 @@
+//! Per-network executor routing for mixed-network serving.
+//!
+//! The [`Executor`] seam is network-agnostic — simulator executors read
+//! the network off the config — but *tensor-driven* executors hold one
+//! loaded [`crate::runtime::NetworkRuntime`] each, which serves exactly
+//! one network.  [`NetExecutorMap`] composes several of them into the
+//! one executor a [`super::Worker`] owns: each dispatch is routed to
+//! the inner executor bound to the request's network, so a mixed
+//! worker really does own one runtime (and one session/arena state)
+//! per network while the dispatch loop stays unchanged.
+//!
+//! The worker's coalescing guarantees every `execute_batch` call is
+//! network-homogeneous; this router re-asserts that invariant (a mixed
+//! batch would mean the coalescing predicate regressed) before handing
+//! the whole batch to one inner executor, preserving whatever batch
+//! amortization that executor implements.
+
+use crate::controller::{ExecOutcome, Executor};
+use crate::space::{Config, Network};
+use crate::workload::Request;
+
+/// Routes [`Executor`] calls to one inner executor per network.
+pub struct NetExecutorMap<E> {
+    inner: Vec<(Network, E)>,
+}
+
+impl<E> NetExecutorMap<E> {
+    /// Bind one executor per network.  Duplicate networks are a
+    /// construction bug and panic immediately rather than shadowing.
+    pub fn new(inner: Vec<(Network, E)>) -> NetExecutorMap<E> {
+        for (i, (net, _)) in inner.iter().enumerate() {
+            assert!(
+                inner[..i].iter().all(|(n, _)| n != net),
+                "duplicate executor binding for {net:?}"
+            );
+        }
+        NetExecutorMap { inner }
+    }
+
+    /// Bound networks, in insertion order.
+    pub fn networks(&self) -> Vec<Network> {
+        self.inner.iter().map(|(n, _)| *n).collect()
+    }
+
+    fn for_net(&mut self, net: Network) -> &mut E {
+        self.inner
+            .iter_mut()
+            .find(|(n, _)| *n == net)
+            .map(|(_, e)| e)
+            .expect("an executor exists for every network the store map serves")
+    }
+}
+
+impl<E: Executor> Executor for NetExecutorMap<E> {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        self.for_net(request.net).execute(request, config)
+    }
+
+    fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+        let Some(first) = requests.first() else {
+            return Vec::new();
+        };
+        assert!(
+            requests.iter().all(|r| r.net == first.net),
+            "mixed-network batch reached the executor: the worker's coalescing \
+             predicate must keep batches network-homogeneous"
+        );
+        self.for_net(first.net).execute_batch(requests, config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, Mutex};
+
+    use super::*;
+    use crate::model::manifest::LayerEntry;
+    use crate::runtime::{NetworkRuntime, ReferenceBackend};
+    use crate::serve::{BatchLog, BatchRuntimeExecutor};
+    use crate::space::TpuMode;
+
+    /// Counts executions so routing is observable per network.
+    struct Tally {
+        latency: f64,
+        batches: usize,
+    }
+
+    impl Executor for Tally {
+        fn execute(&mut self, _request: &Request, _config: &Config) -> ExecOutcome {
+            ExecOutcome {
+                latency_ms: self.latency,
+                energy_j: 1.0,
+                edge_energy_j: 0.5,
+                cloud_energy_j: 0.5,
+                accuracy: 0.9,
+            }
+        }
+
+        fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+            self.batches += 1;
+            requests.iter().map(|r| self.execute(r, config)).collect()
+        }
+    }
+
+    fn req(id: usize, net: Network) -> Request {
+        Request { id, net, qos_ms: 500.0, inferences: 1, seed: id as u64 }
+    }
+
+    fn cfg(net: Network) -> Config {
+        Config { net, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split: 2 }
+    }
+
+    #[test]
+    fn dispatch_routes_by_request_network() {
+        let mut map = NetExecutorMap::new(vec![
+            (Network::Vgg16, Tally { latency: 11.0, batches: 0 }),
+            (Network::Vit, Tally { latency: 22.0, batches: 0 }),
+        ]);
+        assert_eq!(map.networks(), vec![Network::Vgg16, Network::Vit]);
+        let a = map.execute(&req(0, Network::Vgg16), &cfg(Network::Vgg16));
+        let b = map.execute(&req(1, Network::Vit), &cfg(Network::Vit));
+        assert_eq!(a.latency_ms, 11.0, "vgg16 executor answered");
+        assert_eq!(b.latency_ms, 22.0, "vit executor answered");
+        let (r2, r3) = (req(2, Network::Vit), req(3, Network::Vit));
+        let outs = map.execute_batch(&[&r2, &r3], &cfg(Network::Vit));
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|o| o.latency_ms == 22.0));
+        assert_eq!(map.inner[1].1.batches, 1, "one batch dispatch reached vit");
+        assert_eq!(map.inner[0].1.batches, 0);
+        assert!(map.execute_batch(&[], &cfg(Network::Vit)).is_empty(), "empty batch no-op");
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed-network batch")]
+    fn mixed_batch_is_rejected_loudly() {
+        let mut map = NetExecutorMap::new(vec![
+            (Network::Vgg16, Tally { latency: 1.0, batches: 0 }),
+            (Network::Vit, Tally { latency: 2.0, batches: 0 }),
+        ]);
+        let (a, b) = (req(0, Network::Vgg16), req(1, Network::Vit));
+        map.execute_batch(&[&a, &b], &cfg(Network::Vgg16));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate executor binding")]
+    fn duplicate_network_binding_panics_at_construction() {
+        NetExecutorMap::new(vec![
+            (Network::Vgg16, Tally { latency: 1.0, batches: 0 }),
+            (Network::Vgg16, Tally { latency: 2.0, batches: 0 }),
+        ]);
+    }
+
+    /// The real composition: one loaded reference runtime per network
+    /// behind one worker-owned executor — "workers own both runtimes".
+    #[test]
+    fn one_tensor_runtime_per_network_behind_one_executor() {
+        let runtime_for = |net: Network| -> NetworkRuntime {
+            let layers = vec![
+                LayerEntry::synthetic(0, vec![6, 6, 2], vec![6, 6, 4]),
+                LayerEntry::synthetic(1, vec![6, 6, 4], vec![3, 3, 4]),
+                LayerEntry::synthetic(2, vec![3, 3, 4], vec![12]),
+            ];
+            NetworkRuntime::from_layers(&ReferenceBackend::new(), net, 1, &layers, None)
+                .expect("reference runtime")
+        };
+        let vgg_log = Arc::new(Mutex::new(BatchLog::default()));
+        let vit_log = Arc::new(Mutex::new(BatchLog::default()));
+        let mut map = NetExecutorMap::new(vec![
+            (
+                Network::Vgg16,
+                BatchRuntimeExecutor::new(runtime_for(Network::Vgg16), vgg_log.clone()),
+            ),
+            (
+                Network::Vit,
+                BatchRuntimeExecutor::new(runtime_for(Network::Vit), vit_log.clone()),
+            ),
+        ]);
+        let (v0, v1) = (req(0, Network::Vgg16), req(1, Network::Vgg16));
+        map.execute_batch(&[&v0, &v1], &cfg(Network::Vgg16));
+        let t0 = req(2, Network::Vit);
+        map.execute_batch(&[&t0], &cfg(Network::Vit));
+        let (vl, tl) = (vgg_log.lock().unwrap(), vit_log.lock().unwrap());
+        assert_eq!((vl.head_runs, vl.requests), (1, 2), "vgg16 runtime ran its batch");
+        assert_eq!((tl.head_runs, tl.requests), (1, 1), "vit runtime ran its request");
+    }
+}

@@ -3,13 +3,15 @@
 //! [`ServeRecord`] is the pipeline's superset of the sequential
 //! controller's `RequestRecord`: it additionally captures *where* a
 //! request ended (completed / shed at admission / rejected by policy),
-//! which worker served it, and whether it rode a coalesced same-config
-//! batch.  [`ServeReport`] aggregates a run into the throughput
-//! experiment's headline numbers: QoS hit-rate, p50/p99 latency, energy
-//! per request, and reconfigurations avoided.
+//! which network and worker served it, and whether it rode a coalesced
+//! same-config batch.  [`ServeReport`] aggregates a run into the
+//! throughput experiment's headline numbers — QoS hit-rate, p50/p99
+//! latency, energy per request, reconfigurations avoided — plus a
+//! per-network [`NetworkBreakdown`] for mixed-network runs, whose sums
+//! reconcile exactly with the aggregate totals.
 
 use crate::metrics::{MetricSet, RequestRecord};
-use crate::space::Config;
+use crate::space::{Config, Network};
 use crate::workload::TimedRequest;
 
 use super::cache::CacheStats;
@@ -57,12 +59,20 @@ pub enum ServeOutcome {
     ExpiredInQueue,
     /// The scheduling policy declined to run it.
     RejectedByPolicy,
+    /// The request's network has no entry in the pipeline's store map —
+    /// there is no front to schedule it against.  Recorded explicitly
+    /// (instead of panicking or silently misrouting it through another
+    /// network's configurations) and counted as a QoS miss.
+    UnknownNetwork,
 }
 
 /// One request's journey through the pipeline.
 #[derive(Debug, Clone)]
 pub struct ServeRecord {
     pub request_id: usize,
+    /// The network the request targeted (mixed-network serving: the
+    /// scheduling, execution, and accounting key).
+    pub net: Network,
     pub qos_ms: f64,
     pub arrival_ms: f64,
     /// Serving worker (`None` for requests shed at admission).
@@ -74,6 +84,7 @@ impl ServeRecord {
     pub fn rejected_queue_full(tr: &TimedRequest) -> ServeRecord {
         ServeRecord {
             request_id: tr.request.id,
+            net: tr.request.net,
             qos_ms: tr.request.qos_ms,
             arrival_ms: tr.arrival_ms,
             worker: None,
@@ -84,6 +95,7 @@ impl ServeRecord {
     pub fn shed_by_admission(tr: &TimedRequest) -> ServeRecord {
         ServeRecord {
             request_id: tr.request.id,
+            net: tr.request.net,
             qos_ms: tr.request.qos_ms,
             arrival_ms: tr.arrival_ms,
             worker: None,
@@ -107,6 +119,42 @@ impl ServeRecord {
                 None => *latency_ms <= self.qos_ms,
             },
             _ => false,
+        }
+    }
+}
+
+/// Per-network slice of a [`ServeReport`] (mixed-network serving).
+/// Fields are plain sums so breakdowns reconcile with aggregates by
+/// addition alone.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkBreakdown {
+    pub net: Network,
+    /// All records targeting this network, every outcome class.
+    pub requests: usize,
+    /// Completed requests.
+    pub done: usize,
+    /// Requests served within their deadline.
+    pub qos_hits: usize,
+    /// Requests with no store-map entry for this network.
+    pub unknown_network: usize,
+    /// Total energy over completed requests (J); divide by `done` for
+    /// the per-network mean.
+    pub energy_sum_j: f64,
+}
+
+impl NetworkBreakdown {
+    /// Fraction of this network's requests served within deadline.
+    pub fn qos_hit_rate(&self) -> f64 {
+        self.qos_hits as f64 / self.requests.max(1) as f64
+    }
+
+    /// Mean energy per completed request (J); NaN when nothing
+    /// completed.
+    pub fn mean_energy_j(&self) -> f64 {
+        if self.done == 0 {
+            f64::NAN
+        } else {
+            self.energy_sum_j / self.done as f64
         }
     }
 }
@@ -160,12 +208,33 @@ impl ServeReport {
             .count()
     }
 
+    /// Requests whose network had no store-map entry.
+    pub fn unknown_network(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::UnknownNetwork))
+            .count()
+    }
+
     /// Distinct Pareto-store epochs the completed requests resolved
-    /// against (one entry until the first mid-run hot-swap).
+    /// against (one entry until the first mid-run hot-swap).  In a
+    /// mixed run epochs advance per network; see
+    /// [`ServeReport::epochs_observed_for`].
     pub fn epochs_observed(&self) -> Vec<u64> {
+        self.epochs_where(|_| true)
+    }
+
+    /// Distinct store epochs observed by `net`'s completed requests —
+    /// each network's store hot-swaps independently.
+    pub fn epochs_observed_for(&self, net: Network) -> Vec<u64> {
+        self.epochs_where(|r| r.net == net)
+    }
+
+    fn epochs_where<P: Fn(&ServeRecord) -> bool>(&self, pred: P) -> Vec<u64> {
         let mut epochs: Vec<u64> = self
             .records
             .iter()
+            .filter(|r| pred(r))
             .filter_map(|r| match &r.outcome {
                 ServeOutcome::Done { epoch, .. } => Some(*epoch),
                 _ => None,
@@ -174,6 +243,50 @@ impl ServeReport {
         epochs.sort_unstable();
         epochs.dedup();
         epochs
+    }
+
+    /// Networks with at least one record, in [`Network::ALL`] order.
+    pub fn networks(&self) -> Vec<Network> {
+        Network::ALL
+            .iter()
+            .copied()
+            .filter(|&n| self.records.iter().any(|r| r.net == n))
+            .collect()
+    }
+
+    /// Per-network accounting ([`NetworkBreakdown`] per served network).
+    /// Summing any field over the breakdowns reproduces the matching
+    /// aggregate exactly — the reconciliation the mixed integration test
+    /// pins down.
+    pub fn breakdown(&self) -> Vec<NetworkBreakdown> {
+        self.networks().into_iter().map(|n| self.breakdown_for(n)).collect()
+    }
+
+    /// [`NetworkBreakdown`] over `net`'s records alone.
+    pub fn breakdown_for(&self, net: Network) -> NetworkBreakdown {
+        let mut b = NetworkBreakdown {
+            net,
+            requests: 0,
+            done: 0,
+            qos_hits: 0,
+            unknown_network: 0,
+            energy_sum_j: 0.0,
+        };
+        for r in self.records.iter().filter(|r| r.net == net) {
+            b.requests += 1;
+            if r.qos_met() {
+                b.qos_hits += 1;
+            }
+            match &r.outcome {
+                ServeOutcome::Done { energy_j, .. } => {
+                    b.done += 1;
+                    b.energy_sum_j += energy_j;
+                }
+                ServeOutcome::UnknownNetwork => b.unknown_network += 1,
+                _ => {}
+            }
+        }
+        b
     }
 
     /// Requests that rode a coalesced same-config batch.
@@ -219,9 +332,22 @@ impl ServeReport {
     /// Project the completed requests into the paper's metric set (so
     /// the existing violin / violation reporting applies unchanged).
     pub fn to_metric_set(&self, strategy: &str) -> MetricSet {
+        self.metric_set_where(strategy, |_| true)
+    }
+
+    /// Metric set over one network's completed requests (mixed runs).
+    pub fn to_metric_set_for(&self, net: Network, strategy: &str) -> MetricSet {
+        self.metric_set_where(strategy, |r| r.net == net)
+    }
+
+    fn metric_set_where<P>(&self, strategy: &str, pred: P) -> MetricSet
+    where
+        P: Fn(&ServeRecord) -> bool,
+    {
         let records = self
             .records
             .iter()
+            .filter(|r| pred(r))
             .filter_map(|r| match &r.outcome {
                 ServeOutcome::Done {
                     config,
@@ -251,17 +377,34 @@ impl ServeReport {
         MetricSet::new(strategy, records)
     }
 
-    /// One-line human summary for CLI / experiment output.
+    /// One-line human summary for CLI / experiment output, including
+    /// the per-network counts (`net done/requests qos%`).
     pub fn summary_line(&self) -> String {
+        let nets = self
+            .breakdown()
+            .iter()
+            .map(|b| {
+                format!(
+                    "{} {}/{} qos {:.0}%",
+                    b.net.name(),
+                    b.done,
+                    b.requests,
+                    b.qos_hit_rate() * 100.0
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
-            "{} done / {} shed / {} backpressured / {} expired / {} policy-rejected \
-             on {} workers; QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; {:.2} J/req; \
-             {} reconfigs, {} avoided ({} coalesced); {:.0} req/s; {} store epoch(s)",
+            "{} done / {} shed / {} backpressured / {} expired / {} policy-rejected / \
+             {} unknown-net on {} workers; QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; \
+             {:.2} J/req; {} reconfigs, {} avoided ({} coalesced); {:.0} req/s; \
+             {} store epoch(s); nets: {}",
             self.completed(),
             self.rejected_queue_full(),
             self.shed_by_admission(),
             self.expired_in_queue(),
             self.rejected_by_policy(),
+            self.unknown_network(),
             self.workers,
             self.qos_hit_rate() * 100.0,
             self.latency_p50(),
@@ -272,6 +415,7 @@ impl ServeReport {
             self.coalesced(),
             self.throughput_rps(),
             self.epochs_observed().len().max(1),
+            if nets.is_empty() { "-".to_string() } else { nets },
         )
     }
 }
@@ -281,20 +425,22 @@ mod tests {
     use super::*;
     use crate::space::{Network, TpuMode};
 
-    fn done(id: usize, qos: f64, lat: f64, energy: f64, coalesced: bool) -> ServeRecord {
+    fn done_net(
+        id: usize,
+        net: Network,
+        qos: f64,
+        lat: f64,
+        energy: f64,
+        coalesced: bool,
+    ) -> ServeRecord {
         ServeRecord {
             request_id: id,
+            net,
             qos_ms: qos,
             arrival_ms: id as f64,
             worker: Some(id % 2),
             outcome: ServeOutcome::Done {
-                config: Config {
-                    net: Network::Vgg16,
-                    cpu_idx: 6,
-                    tpu: TpuMode::Off,
-                    gpu: true,
-                    split: 5,
-                },
+                config: Config { net, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split: 5 },
                 latency_ms: lat,
                 energy_j: energy,
                 edge_energy_j: energy / 2.0,
@@ -310,9 +456,14 @@ mod tests {
         }
     }
 
+    fn done(id: usize, qos: f64, lat: f64, energy: f64, coalesced: bool) -> ServeRecord {
+        done_net(id, Network::Vgg16, qos, lat, energy, coalesced)
+    }
+
     fn shed(id: usize) -> ServeRecord {
         ServeRecord {
             request_id: id,
+            net: Network::Vgg16,
             qos_ms: 100.0,
             arrival_ms: id as f64,
             worker: None,
@@ -338,6 +489,7 @@ mod tests {
             shed(2),
             ServeRecord {
                 request_id: 3,
+                net: Network::Vgg16,
                 qos_ms: 10.0,
                 arrival_ms: 3.0,
                 worker: Some(1),
@@ -382,6 +534,7 @@ mod tests {
             done(0, 100.0, 90.0, 2.0, false),
             ServeRecord {
                 request_id: 1,
+                net: Network::Vgg16,
                 qos_ms: 100.0,
                 arrival_ms: 1.0,
                 worker: Some(0),
@@ -406,6 +559,7 @@ mod tests {
             done(0, 100.0, 90.0, 2.0, false),
             ServeRecord {
                 request_id: 1,
+                net: Network::Vgg16,
                 qos_ms: 50.0,
                 arrival_ms: 1.0,
                 worker: None,
@@ -421,6 +575,72 @@ mod tests {
         let line = r.summary_line();
         assert!(line.contains("1 backpressured"), "{line}");
         assert!(line.contains("2 store epoch(s)"), "{line}");
+    }
+
+    #[test]
+    fn unknown_network_is_counted_and_misses_qos() {
+        let r = report(vec![
+            done(0, 100.0, 90.0, 2.0, false),
+            ServeRecord {
+                request_id: 1,
+                net: Network::Vit,
+                qos_ms: 100.0,
+                arrival_ms: 1.0,
+                worker: Some(0),
+                outcome: ServeOutcome::UnknownNetwork,
+            },
+        ]);
+        assert_eq!(r.unknown_network(), 1);
+        assert_eq!(r.completed(), 1);
+        assert!(!r.records[1].qos_met(), "an unroutable request missed its objective");
+        assert_eq!(r.to_metric_set("x").len(), 1, "excluded from latency metrics");
+        // visible in both the aggregate line and the per-network slice
+        let line = r.summary_line();
+        assert!(line.contains("1 unknown-net"), "{line}");
+        let vit = r.breakdown_for(Network::Vit);
+        assert_eq!((vit.requests, vit.done, vit.unknown_network), (1, 0, 1));
+        assert!(vit.mean_energy_j().is_nan());
+    }
+
+    #[test]
+    fn per_network_breakdown_reconciles_with_aggregates() {
+        let r = report(vec![
+            done_net(0, Network::Vgg16, 100.0, 90.0, 2.0, false),
+            done_net(1, Network::Vgg16, 100.0, 150.0, 4.0, true), // violated
+            done_net(2, Network::Vit, 300.0, 200.0, 8.0, false),
+            ServeRecord {
+                request_id: 3,
+                net: Network::Vit,
+                qos_ms: 100.0,
+                arrival_ms: 3.0,
+                worker: None,
+                outcome: ServeOutcome::RejectedQueueFull,
+            },
+        ]);
+        let parts = r.breakdown();
+        assert_eq!(parts.len(), 2, "both networks present");
+        assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), r.records.len());
+        assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), r.completed());
+        let total_hits: usize = parts.iter().map(|b| b.qos_hits).sum();
+        assert!(
+            (total_hits as f64 / r.records.len() as f64 - r.qos_hit_rate()).abs() < 1e-12
+        );
+        let energy_total: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+        assert!((energy_total - r.mean_energy_j() * r.completed() as f64).abs() < 1e-9);
+        // per-network metric sets partition the aggregate one
+        assert_eq!(
+            r.to_metric_set_for(Network::Vgg16, "x").len()
+                + r.to_metric_set_for(Network::Vit, "x").len(),
+            r.to_metric_set("x").len()
+        );
+        let vgg = r.breakdown_for(Network::Vgg16);
+        assert_eq!((vgg.requests, vgg.done, vgg.qos_hits), (2, 2, 1));
+        assert!((vgg.mean_energy_j() - 3.0).abs() < 1e-12);
+        // both networks named in the summary
+        let line = r.summary_line();
+        assert!(line.contains("vgg16 2/2 qos 50%"), "{line}");
+        assert!(line.contains("vit 1/2 qos 50%"), "{line}");
+        assert_eq!(r.networks(), vec![Network::Vgg16, Network::Vit]);
     }
 
     #[test]

@@ -1,27 +1,39 @@
 //! The dispatch loop each serving worker runs.
 //!
 //! A worker owns its execution state end to end — the executor (its
-//! runtime session on the real path), the config-reuse cache, and its
-//! slice of the records — and shares only the admission queue, the
-//! hot-swappable [`ConfigStore`], and the scheduling policy (one
+//! per-network runtime sessions on the real path), one config-reuse
+//! cache **per network** ([`CacheSet`]), and its slice of the records —
+//! and shares only the admission queue, the per-network map of
+//! hot-swappable stores ([`StoreMap`]), and the scheduling policy (one
 //! instance across all workers; usually stateless, but
 //! [`crate::controller::HysteresisPolicy`] carries interior-mutable
 //! sticky state).  Per request it: pops (shedding requests whose deadline
-//! already expired in the queue), takes **one store snapshot**, decides
-//! via the policy on the request's *remaining* budget, coalesces
-//! same-config successors into a small batch, activates the
-//! configuration once through the cache, and dispatches the whole
-//! batch through one [`Executor::execute_batch`] call — tensor-driven
-//! executors amortize head compute across the batch (one flat
-//! `[batch, …]` activation, one head run).
+//! already expired in the queue), resolves the request's network to its
+//! store (recording [`ServeOutcome::UnknownNetwork`] when the map has no
+//! entry, instead of misrouting it through another network's front),
+//! takes **one store snapshot**, decides via the policy on the request's
+//! *remaining* budget, coalesces **same-network** same-config successors
+//! into a small batch, activates the configuration once through that
+//! network's cache, and dispatches the whole batch through one
+//! [`Executor::execute_batch`] call — tensor-driven executors amortize
+//! head compute across the batch (one flat `[batch, …]` activation, one
+//! head run).
 //!
 //! **Epoch coherence**: the snapshot taken at pop time serves the
 //! decision, the coalescing predicate, and the entry lookup of the
 //! whole batch, and its `(epoch, digest)` is stamped into every record
-//! — a concurrent hot-swap can move the *next* batch to the new set,
-//! never tear this one across two sets.  Completed requests optionally
-//! feed the adaptation [`Telemetry`] with `(config, epoch) →
-//! measured/predicted` samples.
+//! — a concurrent hot-swap of *that network's* store can move the
+//! *next* batch to the new set, never tear this one across two sets;
+//! other networks' stores swap entirely independently.  Completed
+//! requests optionally feed the adaptation [`Telemetry`] with
+//! `(config, epoch) → measured/predicted` samples (the config's `net`
+//! field keys the per-network adaptation loops).
+//!
+//! **Coalescing invariant**: a batch is homogeneous in *(network,
+//! config, snapshot)* — the predicate checks the successor's network
+//! before probing the policy, so a batch can never mix networks even
+//! when two networks' decisions would land on equal-looking
+//! configurations.
 //!
 //! With a *stateless* policy, decisions are pure functions of
 //! `(set, budget)` and pipeline executors are order-independent per
@@ -36,11 +48,11 @@
 
 use std::time::Instant;
 
-use crate::adapt::{ConfigStore, Sample, Telemetry};
+use crate::adapt::{Sample, StoreMap, Telemetry};
 use crate::controller::{Executor, PolicyDecision, SchedulingPolicy};
 use crate::workload::Request;
 
-use super::cache::ReuseCache;
+use super::cache::CacheSet;
 use super::clock::ServeClock;
 use super::queue::AdmissionQueue;
 use super::report::{ServeOutcome, ServeRecord};
@@ -49,14 +61,17 @@ use super::report::{ServeOutcome, ServeRecord};
 pub struct Worker<'a, E: Executor> {
     pub id: usize,
     pub queue: &'a AdmissionQueue,
-    /// Hot-swappable Pareto-store handle; snapshotted once per batch.
-    pub store: &'a ConfigStore,
+    /// Per-network map of hot-swappable Pareto stores; the serving
+    /// network's store is snapshotted once per batch.
+    pub stores: &'a StoreMap<'a>,
     pub policy: &'a dyn SchedulingPolicy,
-    /// Maximum same-config requests coalesced into one activation.
+    /// Maximum same-network same-config requests coalesced into one
+    /// activation.
     pub max_batch: usize,
     /// Experiment-clock source for deadline arithmetic.
     pub clock: ServeClock,
-    pub cache: ReuseCache,
+    /// One config-reuse cache per network the store map binds.
+    pub caches: CacheSet,
     pub executor: E,
     /// Adaptation telemetry sink (`None` = open-loop serving).
     pub telemetry: Option<&'a Telemetry>,
@@ -76,9 +91,11 @@ impl<'a, E: Executor> Worker<'a, E> {
             let Some((first, now, expired)) = self.queue.pop_due(|| clock.now_ms()) else {
                 break;
             };
+            let net = first.request.net;
             if expired {
                 self.records.push(ServeRecord {
                     request_id: first.request.id,
+                    net,
                     qos_ms: first.request.qos_ms,
                     arrival_ms: first.arrival_ms,
                     worker: Some(self.id),
@@ -86,9 +103,22 @@ impl<'a, E: Executor> Worker<'a, E> {
                 });
                 continue;
             }
+            // resolve the request's network to its own store; a request
+            // no store serves is recorded, never misrouted
+            let Some(store) = self.stores.get(net) else {
+                self.records.push(ServeRecord {
+                    request_id: first.request.id,
+                    net,
+                    qos_ms: first.request.qos_ms,
+                    arrival_ms: first.arrival_ms,
+                    worker: Some(self.id),
+                    outcome: ServeOutcome::UnknownNetwork,
+                });
+                continue;
+            };
             // one coherent store view for this whole batch: decision,
             // coalescing, and entry lookup all resolve against it
-            let snapshot = self.store.snapshot();
+            let snapshot = store.snapshot();
             let set = snapshot.set();
             let t0 = Instant::now();
             let budget_ms = self.clock.remaining_ms(&first, now);
@@ -99,6 +129,7 @@ impl<'a, E: Executor> Worker<'a, E> {
                 PolicyDecision::Reject => {
                     self.records.push(ServeRecord {
                         request_id: first.request.id,
+                        net,
                         qos_ms: first.request.qos_ms,
                         arrival_ms: first.arrival_ms,
                         worker: Some(self.id),
@@ -108,16 +139,20 @@ impl<'a, E: Executor> Worker<'a, E> {
                 }
             };
 
-            // coalesce queued successors that map to the same config
-            // under the same snapshot (an expired successor stays
-            // queued: the next pop cycle sheds and records it).  The
-            // probe is side-effect-free: a request that fails it stays
-            // queued, and stateful policies must not remember a
+            // coalesce queued successors of the same network that map to
+            // the same config under the same snapshot (an expired
+            // successor stays queued: the next pop cycle sheds and
+            // records it).  The network check comes first — a batch must
+            // never mix networks, and probing another network's budget
+            // against this network's set would be meaningless anyway.
+            // The probe is side-effect-free: a request that fails it
+            // stays queued, and stateful policies must not remember a
             // decision that was never activated.
             let mut batch = vec![first];
             while batch.len() < self.max_batch {
                 let same = self.queue.pop_if(|r| {
-                    !matches!(now, Some(n) if r.deadline_ms() <= n)
+                    r.request.net == net
+                        && !matches!(now, Some(n) if r.deadline_ms() <= n)
                         && self.policy.probe(set, self.clock.remaining_ms(r, now))
                             == PolicyDecision::Run(idx)
                 });
@@ -128,11 +163,12 @@ impl<'a, E: Executor> Worker<'a, E> {
             }
 
             // one activation + one executor dispatch for the whole batch
-            // (the config-reuse cache makes the activation free when the
-            // config is already live; batch-capable executors amortize
-            // head compute across the flat [batch, ...] tensor)
+            // (the per-network config-reuse cache makes the activation
+            // free when the config is already live; batch-capable
+            // executors amortize head compute across the flat
+            // [batch, ...] tensor)
             let entry = &set.entries()[idx];
-            let apply_ms = self.cache.activate(&entry.config);
+            let apply_ms = self.caches.get_mut(net).activate(&entry.config);
             let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
             let outcomes = self.executor.execute_batch(&requests, &entry.config);
             // hard check: a short outcome vector would silently drop
@@ -161,6 +197,7 @@ impl<'a, E: Executor> Worker<'a, E> {
                 }
                 self.records.push(ServeRecord {
                     request_id: tr.request.id,
+                    net,
                     qos_ms: tr.request.qos_ms,
                     arrival_ms: tr.arrival_ms,
                     worker: Some(self.id),
@@ -187,6 +224,7 @@ impl<'a, E: Executor> Worker<'a, E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adapt::ConfigStore;
     use crate::controller::policy::ConfigSet;
     use crate::controller::{ExecOutcome, PaperPolicy};
     use crate::solver::ParetoEntry;
@@ -234,32 +272,31 @@ mod tests {
     }
 
     fn tr(id: usize, qos: f64) -> TimedRequest {
+        tr_net(id, Network::Vgg16, qos)
+    }
+
+    fn tr_net(id: usize, net: Network, qos: f64) -> TimedRequest {
         TimedRequest {
-            request: Request {
-                id,
-                net: Network::Vgg16,
-                qos_ms: qos,
-                inferences: 1,
-                seed: id as u64,
-            },
+            request: Request { id, net, qos_ms: qos, inferences: 1, seed: id as u64 },
             arrival_ms: id as f64,
         }
     }
 
     fn worker<'a>(
         queue: &'a AdmissionQueue,
-        store: &'a ConfigStore,
+        stores: &'a StoreMap<'a>,
         max_batch: usize,
         seed: u64,
     ) -> Worker<'a, Toy> {
+        let mut rng = Pcg32::seeded(seed);
         Worker {
             id: 0,
             queue,
-            store,
+            stores,
             policy: &PaperPolicy,
             max_batch,
             clock: ServeClock::Virtual,
-            cache: ReuseCache::new(Pcg32::seeded(seed)),
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
             executor: Toy { dispatches: 0 },
             telemetry: None,
             records: Vec::new(),
@@ -270,19 +307,20 @@ mod tests {
     fn worker_coalesces_same_config_runs() {
         let store =
             ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3), entry(50.0, 10.0, 9)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
         let queue = AdmissionQueue::new(64);
         // 6 identical-QoS requests -> one config -> coalesced batches
         for i in 0..6 {
             assert!(queue.offer(tr(i, 500.0)));
         }
         queue.close();
-        let mut w = worker(&queue, &store, 4, 1);
+        let mut w = worker(&queue, &stores, 4, 1);
         w.run();
         assert_eq!(w.records.len(), 6);
         // one activation for the first batch of 4, a free (cached) one
         // for the trailing batch of 2
-        assert_eq!(w.cache.stats.reconfigs, 1);
-        assert_eq!(w.cache.stats.hits, 1);
+        assert_eq!(w.caches.stats().reconfigs, 1);
+        assert_eq!(w.caches.stats().hits, 1);
         let coalesced = w
             .records
             .iter()
@@ -306,6 +344,7 @@ mod tests {
     fn worker_does_not_coalesce_across_configs() {
         let store =
             ConfigStore::new(ConfigSet::new(vec![entry(400.0, 1.0, 3), entry(50.0, 10.0, 9)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
         let queue = AdmissionQueue::new(64);
         // alternating lenient/tight deadlines -> alternating configs
         for i in 0..4 {
@@ -313,17 +352,18 @@ mod tests {
             assert!(queue.offer(tr(i, qos)));
         }
         queue.close();
-        let mut w = worker(&queue, &store, 4, 2);
+        let mut w = worker(&queue, &stores, 4, 2);
         w.run();
         assert_eq!(w.records.len(), 4);
-        assert_eq!(w.cache.stats.reconfigs, 4, "every request flips the config");
-        assert_eq!(w.cache.stats.hits, 0);
+        assert_eq!(w.caches.stats().reconfigs, 4, "every request flips the config");
+        assert_eq!(w.caches.stats().hits, 0);
         assert_eq!(w.executor.dispatches, 4, "nothing to coalesce");
     }
 
     #[test]
     fn worker_sheds_expired_requests_and_decides_on_remaining_budget() {
         let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
         let queue = AdmissionQueue::new(8);
         // request 0's deadline is its arrival instant (already passed by
         // pop time); request 1's budget is effectively unlimited
@@ -331,7 +371,7 @@ mod tests {
             assert!(queue.offer(tr(id, qos)));
         }
         queue.close();
-        let mut w = worker(&queue, &store, 4, 3);
+        let mut w = worker(&queue, &stores, 4, 3);
         w.clock = ServeClock::Real { t0: Instant::now(), scale: 1.0 };
         w.run();
         assert_eq!(w.records.len(), 2);
@@ -350,13 +390,14 @@ mod tests {
     fn worker_records_telemetry_with_epoch_and_predictions() {
         let e = entry(100.0, 1.0, 3);
         let store = ConfigStore::new(ConfigSet::new(vec![e.clone()]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
         let telemetry = Telemetry::new(1, 64);
         let queue = AdmissionQueue::new(8);
         for i in 0..3 {
             assert!(queue.offer(tr(i, 500.0)));
         }
         queue.close();
-        let mut w = worker(&queue, &store, 1, 4);
+        let mut w = worker(&queue, &stores, 1, 4);
         w.telemetry = Some(&telemetry);
         w.run();
         let samples = telemetry.drain();
@@ -371,6 +412,115 @@ mod tests {
         }
     }
 
+    /// Executor spy capturing the exact composition of every dispatched
+    /// batch (the no-mixed-batch invariant is about *dispatches*, not
+    /// records).
+    struct BatchSpy {
+        batches: Vec<Vec<(usize, Network)>>,
+    }
+
+    impl Executor for BatchSpy {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            Toy { dispatches: 0 }.execute(request, config)
+        }
+
+        fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+            self.batches.push(requests.iter().map(|r| (r.id, r.net)).collect());
+            requests.iter().map(|r| self.execute(r, config)).collect()
+        }
+    }
+
+    fn vit_entry(latency: f64, energy: f64, split: usize) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vit,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy: 0.95,
+        }
+    }
+
+    #[test]
+    fn coalesced_batches_never_mix_networks() {
+        // both networks' sets hold one lenient config each, so every
+        // same-network run of queued requests is maximally coalescible —
+        // the only thing breaking batches is the network boundary
+        let vgg = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let vit = ConfigStore::new(ConfigSet::new(vec![vit_entry(100.0, 1.0, 4)]));
+        let mut stores = StoreMap::new();
+        stores.insert(Network::Vgg16, &vgg);
+        stores.insert(Network::Vit, &vit);
+        let queue = AdmissionQueue::new(64);
+        // vgg, vgg, vit, vit, vgg, vgg, ... (12 requests)
+        for i in 0..12 {
+            let net = if (i / 2) % 2 == 0 { Network::Vgg16 } else { Network::Vit };
+            assert!(queue.offer(tr_net(i, net, 500.0)));
+        }
+        queue.close();
+        let mut rng = Pcg32::seeded(6);
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            stores: &stores,
+            policy: &PaperPolicy,
+            max_batch: 4,
+            clock: ServeClock::Virtual,
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
+            executor: BatchSpy { batches: Vec::new() },
+            telemetry: None,
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 12, "every request accounted for");
+        let batches = &w.executor.batches;
+        assert!(!batches.is_empty());
+        for batch in batches {
+            let first = batch[0].1;
+            assert!(
+                batch.iter().all(|&(_, n)| n == first),
+                "mixed-network batch dispatched: {batch:?}"
+            );
+        }
+        // the alternating pattern forces a dispatch per homogeneous run
+        assert_eq!(batches.len(), 6, "2-long same-network runs -> 6 dispatches");
+        // every record ran its own network's config
+        for r in &w.records {
+            match &r.outcome {
+                ServeOutcome::Done { config, .. } => assert_eq!(config.net, r.net),
+                other => panic!("request {} not completed: {other:?}", r.request_id),
+            }
+        }
+        // per-network caches: one cold activation per network, every
+        // later same-network batch reuses the live config
+        assert_eq!(w.caches.stats().reconfigs, 2, "one cold apply per network");
+        assert_eq!(w.caches.stats().hits, 4);
+    }
+
+    #[test]
+    fn unmapped_network_is_recorded_not_misrouted() {
+        let vgg = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let stores = StoreMap::single(Network::Vgg16, &vgg);
+        let queue = AdmissionQueue::new(8);
+        assert!(queue.offer(tr_net(0, Network::Vit, 500.0)));
+        assert!(queue.offer(tr_net(1, Network::Vgg16, 500.0)));
+        queue.close();
+        let mut w = worker(&queue, &stores, 4, 7);
+        w.run();
+        assert_eq!(w.records.len(), 2);
+        assert_eq!(w.records[0].net, Network::Vit);
+        assert!(
+            matches!(w.records[0].outcome, ServeOutcome::UnknownNetwork),
+            "vit has no store: explicit outcome, no panic, no misroute"
+        );
+        assert!(matches!(w.records[1].outcome, ServeOutcome::Done { .. }));
+        assert_eq!(w.caches.stats().reconfigs, 1, "only the routable request activated");
+    }
+
     #[test]
     fn batches_after_a_swap_resolve_against_the_new_epoch() {
         // same store handle across two dispatch runs with a swap in
@@ -378,10 +528,11 @@ mod tests {
         // entirely against epoch 1 (no torn batches)
         let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
         let serve_one = |store: &ConfigStore, id: usize| -> ServeRecord {
+            let stores = StoreMap::single(Network::Vgg16, store);
             let queue = AdmissionQueue::new(8);
             assert!(queue.offer(tr(id, 500.0)));
             queue.close();
-            let mut w = worker(&queue, store, 1, 5);
+            let mut w = worker(&queue, &stores, 1, 5);
             w.run();
             assert_eq!(w.records.len(), 1);
             w.records.remove(0)

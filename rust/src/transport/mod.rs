@@ -17,6 +17,14 @@
 //!
 //! The transport moves *real tensor bytes* (the PJRT head outputs) — it
 //! is on the request path, python is not.
+//!
+//! Failure handling is deliberately loud: frames carry checksums and a
+//! 64 MiB length cap, and the decode path is hardened against flipped
+//! checksum bytes, truncated length prefixes, and replayed metadata
+//! headers (see the `frame` tests).  One [`StreamSession`] per
+//! `(worker, configuration)` announces metadata exactly once and is
+//! reused across requests — the transport-level analogue of the serving
+//! pipeline's config-reuse cache.
 
 pub mod channel;
 pub mod cloud;

@@ -1,5 +1,25 @@
-//! Foundation utilities, hand-rolled because the offline build environment
-//! lacks `rand`/`serde`/`clap`/`criterion` (see Cargo.toml note).
+//! Foundation utilities, hand-rolled because the offline build
+//! environment lacks `rand`/`serde`/`clap`/`criterion` (see the
+//! Cargo.toml note): the workspace must build with **zero registry
+//! access**, so every substitute below is dependency-free and only as
+//! big as the crate actually needs.
+//!
+//! | module | stands in for | used by |
+//! |--------|---------------|---------|
+//! | [`rng`] | `rand` (PCG-32 streams, Weibull/lognormal draws) | workload gen, solver, simulator jitter |
+//! | [`stats`] | quantiles/means/medians | metrics, drift windows, reports |
+//! | [`json`] | `serde_json` (parse + emit) | pareto sets, manifests, bench trajectories |
+//! | [`cli`] | `clap` (declarative flags + `--help`) | `main.rs` subcommands, examples, benches |
+//! | [`table`] | tabular stdout + CSV emission | every experiment report |
+//! | [`bench`] | `criterion` (timed cases, JSON trajectory, enforce floors) | `benches/micro.rs`, CI perf gate |
+//! | [`hash`] | `fnv` (FNV-1a over `u64` streams) | layer seeds, tensor digests, `ConfigSet::digest` |
+//! | [`parallel`] | `rayon`-lite scoped row partitioning | reference-backend GEMM threading |
+//!
+//! Determinism is the common contract: every RNG is an explicit seeded
+//! stream ([`rng::Pcg32::new(seed, stream)`](rng::Pcg32)), so every
+//! workload, search, and simulated trial replays bit-identically given
+//! its seed — the property the serving pipeline's baseline-equivalence
+//! tests and the kernel equivalence suites build on.
 
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,284 @@
+//! Network mixes: one open-loop workload interleaving several networks.
+//!
+//! Mixed-network serving (DESIGN.md §12) feeds one admission queue with
+//! requests targeting different networks.  [`NetworkMix`] holds the
+//! target proportions (`--mix vgg16=0.7,vit=0.3`), and
+//! [`mixed_timeline`] draws one timeline from it: each request's
+//! network is sampled i.i.d. from the mix, its QoS level comes from
+//! **its own network's** generator (so every request's deadline spectrum
+//! matches its network's Table-2 latency bounds — a vit deadline drawn
+//! from vgg16 bounds would be unservable by construction), and arrival
+//! times come from one shared [`ArrivalProcess`] — the networks share
+//! the queue, not just the clock.
+//!
+//! Generation is deterministic given the RNG seed, and request ids are
+//! the global timeline positions — the properties the mixed
+//! baseline-equivalence test relies on.
+
+use anyhow::{bail, Result};
+
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+
+use super::arrival::{ArrivalProcess, TimedRequest};
+use super::{Request, WorkloadGen};
+
+/// Target proportions of each network in a mixed workload.  Weights are
+/// normalized at construction; zero-weight entries are dropped.
+#[derive(Debug, Clone)]
+pub struct NetworkMix {
+    /// `(network, normalized share)`, shares sum to 1.
+    weights: Vec<(Network, f64)>,
+}
+
+impl NetworkMix {
+    /// Validate and normalize `(network, weight)` pairs: weights must be
+    /// finite and non-negative, sum positive, networks distinct.
+    pub fn new(weights: &[(Network, f64)]) -> Result<NetworkMix> {
+        let mut kept: Vec<(Network, f64)> = Vec::new();
+        for &(net, w) in weights {
+            if !w.is_finite() || w < 0.0 {
+                bail!("bad mix weight {w} for {}", net.name());
+            }
+            if kept.iter().any(|(n, _)| *n == net) {
+                bail!("network {} listed twice in the mix", net.name());
+            }
+            if w > 0.0 {
+                kept.push((net, w));
+            }
+        }
+        let total: f64 = kept.iter().map(|(_, w)| w).sum();
+        if kept.is_empty() || total <= 0.0 {
+            bail!("a network mix needs at least one positive weight");
+        }
+        for (_, w) in &mut kept {
+            *w /= total;
+        }
+        Ok(NetworkMix { weights: kept })
+    }
+
+    /// Everything on one network (the degenerate single-network mix).
+    pub fn single(net: Network) -> NetworkMix {
+        NetworkMix { weights: vec![(net, 1.0)] }
+    }
+
+    /// Parse the CLI form `net=weight[,net=weight…]`, e.g.
+    /// `vgg16=0.7,vit=0.3`.
+    pub fn parse(s: &str) -> Result<NetworkMix> {
+        let mut weights = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let Some((name, value)) = part.split_once('=') else {
+                bail!("bad mix component {part:?} (expected net=weight, e.g. vgg16=0.7)");
+            };
+            let Ok(w) = value.trim().parse::<f64>() else {
+                bail!("bad mix weight {value:?} for {name:?}");
+            };
+            weights.push((Network::parse(name.trim())?, w));
+        }
+        NetworkMix::new(&weights)
+    }
+
+    /// Networks with a positive share, in declaration order.
+    pub fn networks(&self) -> Vec<Network> {
+        self.weights.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Normalized share of `net` (0 when absent).
+    pub fn share(&self, net: Network) -> f64 {
+        self.weights.iter().find(|(n, _)| *n == net).map_or(0.0, |(_, w)| *w)
+    }
+
+    /// Draw one network from the mix.
+    pub fn sample(&self, rng: &mut Pcg32) -> Network {
+        let x = rng.uniform(0.0, 1.0);
+        let mut acc = 0.0;
+        for &(net, w) in &self.weights {
+            acc += w;
+            if x < acc {
+                return net;
+            }
+        }
+        // floating-point slack at x ≈ 1.0
+        self.weights.last().expect("non-empty by construction").0
+    }
+}
+
+/// Generate a mixed timed workload: `n` requests whose networks are
+/// drawn from `mix`, QoS levels from each network's own generator
+/// (`gen_for`), and arrival times from one shared `process`.  Request
+/// ids are the global timeline positions (0..n).
+pub fn mixed_timeline<G>(
+    mix: &NetworkMix,
+    gen_for: G,
+    process: &ArrivalProcess,
+    n: usize,
+    rng: &mut Pcg32,
+) -> Vec<TimedRequest>
+where
+    G: Fn(Network) -> WorkloadGen,
+{
+    let assignment: Vec<Network> = (0..n).map(|_| mix.sample(rng)).collect();
+    // per-network request queues: each network's QoS draws are rescaled
+    // over that network's own bounds (WorkloadGen needs ≥ 2 draws to pin
+    // its rescale, so a 1-request network draws 2 and keeps the first)
+    let mut queues: Vec<(Network, std::collections::VecDeque<Request>)> = mix
+        .networks()
+        .into_iter()
+        .map(|net| {
+            let count = assignment.iter().filter(|&&a| a == net).count();
+            let requests = if count == 0 {
+                std::collections::VecDeque::new()
+            } else {
+                gen_for(net).generate(count.max(2), rng).into_iter().take(count).collect()
+            };
+            (net, requests)
+        })
+        .collect();
+    let times = process.times_ms(n, rng);
+    assignment
+        .iter()
+        .zip(times)
+        .enumerate()
+        .map(|(id, (&net, arrival_ms))| {
+            let mut request = queues
+                .iter_mut()
+                .find(|(qn, _)| *qn == net)
+                .and_then(|(_, q)| q.pop_front())
+                .expect("queues sized to the assignment");
+            request.id = id;
+            TimedRequest { request, arrival_ms }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LatencyBounds;
+
+    #[test]
+    fn parse_normalizes_and_orders() {
+        let mix = NetworkMix::parse("vgg16=0.7,vit=0.3").unwrap();
+        assert_eq!(mix.networks(), vec![Network::Vgg16, Network::Vit]);
+        assert!((mix.share(Network::Vgg16) - 0.7).abs() < 1e-12);
+        assert!((mix.share(Network::Vit) - 0.3).abs() < 1e-12);
+        // unnormalized weights normalize
+        let mix = NetworkMix::parse("vgg16=3,vit=1").unwrap();
+        assert!((mix.share(Network::Vgg16) - 0.75).abs() < 1e-12);
+        // zero weights drop out
+        let mix = NetworkMix::parse("vgg16=1,vit=0").unwrap();
+        assert_eq!(mix.networks(), vec![Network::Vgg16]);
+        assert_eq!(mix.share(Network::Vit), 0.0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_mixes() {
+        assert!(NetworkMix::parse("").is_err());
+        assert!(NetworkMix::parse("vgg16").is_err(), "missing =weight");
+        assert!(NetworkMix::parse("vgg16=x").is_err(), "non-numeric weight");
+        assert!(NetworkMix::parse("resnet=1").is_err(), "unknown network");
+        assert!(NetworkMix::parse("vgg16=-1,vit=2").is_err(), "negative weight");
+        assert!(NetworkMix::parse("vgg16=0,vit=0").is_err(), "all-zero mix");
+        assert!(NetworkMix::parse("vgg16=1,vgg16=1").is_err(), "duplicate network");
+    }
+
+    #[test]
+    fn sample_tracks_the_target_shares() {
+        let mix = NetworkMix::parse("vgg16=0.7,vit=0.3").unwrap();
+        let mut rng = Pcg32::seeded(11);
+        let n = 20_000;
+        let vgg = (0..n).filter(|_| mix.sample(&mut rng) == Network::Vgg16).count();
+        let share = vgg as f64 / n as f64;
+        assert!((share - 0.7).abs() < 0.02, "observed vgg16 share {share}");
+    }
+
+    #[test]
+    fn mixed_timeline_ids_are_global_and_qos_respects_each_networks_bounds() {
+        let mix = NetworkMix::parse("vgg16=0.7,vit=0.3").unwrap();
+        let mut rng = Pcg32::seeded(12);
+        let tl = mixed_timeline(
+            &mix,
+            WorkloadGen::paper,
+            &ArrivalProcess::Poisson { rate_per_s: 100.0 },
+            300,
+            &mut rng,
+        );
+        assert_eq!(tl.len(), 300);
+        let mut seen = [0usize; 2];
+        for (i, tr) in tl.iter().enumerate() {
+            assert_eq!(tr.request.id, i, "ids are timeline positions");
+            let b = LatencyBounds::paper(tr.request.net);
+            assert!(
+                tr.request.qos_ms >= b.min_ms - 1e-9 && tr.request.qos_ms <= b.max_ms + 1e-9,
+                "request {i} ({:?}) qos {} outside its network's bounds",
+                tr.request.net,
+                tr.request.qos_ms
+            );
+            seen[(tr.request.net == Network::Vit) as usize] += 1;
+        }
+        assert!(seen[0] > 0 && seen[1] > 0, "both networks present: {seen:?}");
+        assert!(seen[0] > seen[1], "the 70% network dominates");
+        // arrivals nondecreasing (one shared process)
+        assert!(tl.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn mixed_timeline_is_deterministic_given_the_seed() {
+        let mix = NetworkMix::parse("vgg16=0.5,vit=0.5").unwrap();
+        let make = || {
+            let mut rng = Pcg32::seeded(13);
+            mixed_timeline(
+                &mix,
+                WorkloadGen::paper,
+                &ArrivalProcess::Poisson { rate_per_s: 50.0 },
+                64,
+                &mut rng,
+            )
+        };
+        let (a, b) = (make(), make());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.net, y.request.net);
+            assert_eq!(x.request.qos_ms, y.request.qos_ms);
+            assert_eq!(x.request.seed, y.request.seed);
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+        }
+    }
+
+    #[test]
+    fn single_network_mix_reduces_to_one_network() {
+        let mix = NetworkMix::single(Network::Vit);
+        let mut rng = Pcg32::seeded(14);
+        let tl = mixed_timeline(
+            &mix,
+            WorkloadGen::paper,
+            &ArrivalProcess::Poisson { rate_per_s: 100.0 },
+            32,
+            &mut rng,
+        );
+        assert!(tl.iter().all(|tr| tr.request.net == Network::Vit));
+    }
+
+    #[test]
+    fn tiny_mixed_timelines_stay_well_formed() {
+        // the count.max(2) guard: a network assigned exactly one request
+        // still draws a valid (bounds-clamped) QoS level
+        let mix = NetworkMix::parse("vgg16=0.99,vit=0.01").unwrap();
+        for seed in 0..20 {
+            let mut rng = Pcg32::seeded(seed);
+            let tl = mixed_timeline(
+                &mix,
+                WorkloadGen::paper,
+                &ArrivalProcess::Poisson { rate_per_s: 100.0 },
+                8,
+                &mut rng,
+            );
+            assert_eq!(tl.len(), 8);
+            for tr in &tl {
+                let b = LatencyBounds::paper(tr.request.net);
+                assert!(tr.request.qos_ms >= b.min_ms - 1e-9);
+                assert!(tr.request.qos_ms <= b.max_ms + 1e-9);
+            }
+        }
+    }
+}

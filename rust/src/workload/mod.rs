@@ -1,4 +1,4 @@
-//! Workload generation (§6.2.1).
+//! Workload generation (§6.2.1) and open-loop timed workloads.
 //!
 //! Each user request asks for an inference task (a batch of images) with
 //! a QoS level — the maximum acceptable inference latency.  The paper
@@ -7,13 +7,24 @@
 //! latency distribution" [2], and rescales the samples so the smallest
 //! equals the minimum observed latency and the largest the maximum
 //! observed latency for the network (Table 2).
+//!
+//! Layering:
+//!
+//! * [`WorkloadGen`] — per-network QoS draws ([`Request`]s);
+//! * [`arrival`] — arrival processes (Poisson / bursty / trace) stamping
+//!   requests into an open-loop [`TimedRequest`] timeline;
+//! * [`mix`] — mixed-network workloads: one timeline interleaving
+//!   several networks per a [`NetworkMix`] (`--mix vgg16=0.7,vit=0.3`),
+//!   each request's QoS drawn from its own network's bounds.
 
 pub mod arrival;
+pub mod mix;
 
 use crate::space::Network;
 use crate::util::rng::Pcg32;
 
 pub use arrival::{timeline, ArrivalProcess, TimedRequest};
+pub use mix::{mixed_timeline, NetworkMix};
 
 /// Latency bounds used to scale QoS draws (Table 2 defaults; solver runs
 /// can substitute their own measured bounds).

@@ -2,12 +2,17 @@
 //! ≥ 200 queued requests through ≥ 2 workers must (a) reproduce the
 //! sequential Algorithm-1 baseline per request, (b) report a QoS
 //! hit-rate, and (c) measurably avoid reconfigurations through the
-//! config-reuse cache on a same-config run.
+//! config-reuse cache on a same-config run.  The `mixed_*` cases pin
+//! the mixed-network contract (DESIGN.md §12): a 70/30 vgg16/vit run
+//! bitwise-matches per-network sequential baselines, no coalesced
+//! batch ever mixes networks, the per-network report slices reconcile
+//! with the aggregate totals, and each network's store hot-swaps
+//! independently under traffic.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use dynasplit::adapt::ConfigStore;
+use dynasplit::adapt::{ConfigStore, StoreMap};
 use dynasplit::controller::policy::ConfigSet;
 use dynasplit::controller::{
     ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor, PolicyDecision,
@@ -16,14 +21,16 @@ use dynasplit::controller::{
 use dynasplit::model::manifest::LayerEntry;
 use dynasplit::runtime::{NetworkRuntime, ReferenceBackend};
 use dynasplit::serve::{
-    run_pipeline, AdmissionQueue, BatchLog, BatchRuntimeExecutor, PipelineConfig, ReuseCache,
-    ServeClock, ServeOutcome, ServeRecord, Worker,
+    run_pipeline, run_pipeline_stores, AdmissionQueue, BatchLog, BatchRuntimeExecutor,
+    CacheSet, PipelineConfig, ReuseCache, ServeClock, ServeOutcome, ServeRecord, Worker,
 };
 use dynasplit::simulator::Testbed;
 use dynasplit::solver::{ParetoEntry, Solver, Strategy};
 use dynasplit::space::{Config, Network, TpuMode};
 use dynasplit::util::rng::Pcg32;
-use dynasplit::workload::{timeline, ArrivalProcess, Request, TimedRequest, WorkloadGen};
+use dynasplit::workload::{
+    mixed_timeline, timeline, ArrivalProcess, NetworkMix, Request, TimedRequest, WorkloadGen,
+};
 
 /// A small but real non-dominated set from a synthetic-testbed search.
 fn pareto() -> Vec<ParetoEntry> {
@@ -234,6 +241,7 @@ fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
     // a full worker dispatch loop over a pre-filled queue: deterministic
     // coalescing, so executor-invocation counts are exact
     let store = ConfigStore::new(set.clone());
+    let stores = StoreMap::single(Network::Vgg16, &store);
     let run = |max_batch: usize| -> (Vec<ServeRecord>, BatchLog) {
         let queue = AdmissionQueue::new(128);
         for tr in &tl {
@@ -244,11 +252,11 @@ fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
         let mut worker = Worker {
             id: 0,
             queue: &queue,
-            store: &store,
+            stores: &stores,
             policy: &PaperPolicy,
             max_batch,
             clock: ServeClock::Virtual,
-            cache: ReuseCache::new(Pcg32::seeded(3)),
+            caches: CacheSet::single(Network::Vgg16, ReuseCache::new(Pcg32::seeded(3))),
             executor: BatchRuntimeExecutor::new(serve_runtime(&layers), log.clone()),
             telemetry: None,
             records: Vec::new(),
@@ -414,6 +422,332 @@ fn hysteresis_policy_composes_with_the_pipeline_and_cuts_reconfigurations() {
             other => panic!("request {} not completed: {other:?}", r.request_id),
         }
     }
+}
+
+/// Per-network Pareto front from a synthetic-testbed search.
+fn pareto_for(net: Network) -> Vec<ParetoEntry> {
+    let mut tb = Testbed::synthetic();
+    tb.batch_per_trial = 40;
+    let mut s = Solver::new(&tb, net);
+    s.batch_per_trial = 40;
+    s.run(Strategy::NsgaIII, 120, 11).pareto
+}
+
+/// A deterministic 70/30 vgg16/vit open-loop timeline.
+fn mixed_tl(n: usize, seed: u64) -> Vec<TimedRequest> {
+    let mix = NetworkMix::parse("vgg16=0.7,vit=0.3").expect("static mix");
+    let mut rng = Pcg32::seeded(seed);
+    mixed_timeline(
+        &mix,
+        |net| {
+            let mut g = WorkloadGen::paper(net);
+            g.inferences_per_request = 50;
+            g
+        },
+        &ArrivalProcess::Poisson { rate_per_s: 200.0 },
+        n,
+        &mut rng,
+    )
+}
+
+#[test]
+fn mixed_pipeline_matches_per_network_sequential_baselines_and_reconciles() {
+    let tb = Testbed::synthetic();
+    let vgg_set = ConfigSet::new(pareto_for(Network::Vgg16));
+    let vit_set = ConfigSet::new(pareto_for(Network::Vit));
+    assert!(!vgg_set.is_empty() && !vit_set.is_empty());
+    let tl = mixed_tl(200, 41);
+    assert!(tl.iter().any(|tr| tr.request.net == Network::Vit), "mix holds vit traffic");
+    assert!(tl.iter().any(|tr| tr.request.net == Network::Vgg16));
+
+    // (a) sequential Algorithm-1 baseline, run per request against the
+    // request's *own* network's set — two single-network baselines
+    // interleaved in timeline order
+    let mut ex = PerRequestSimExecutor { testbed: &tb, stream: 61 };
+    let set_for = |net: Network| if net == Network::Vgg16 { &vgg_set } else { &vit_set };
+    let baseline: Vec<(usize, Config, ExecOutcome)> = tl
+        .iter()
+        .map(|tr| {
+            let set = set_for(tr.request.net);
+            let idx = match PaperPolicy.decide(set, tr.request.qos_ms) {
+                PolicyDecision::Run(i) => i,
+                PolicyDecision::Reject => unreachable!("paper policy on non-empty set"),
+            };
+            let entry = &set.entries()[idx];
+            (tr.request.id, entry.config, ex.execute(&tr.request, &entry.config))
+        })
+        .collect();
+
+    let vgg_store = ConfigStore::new(vgg_set.clone());
+    let vit_store = ConfigStore::new(vit_set.clone());
+    let mut stores = StoreMap::new();
+    stores.insert(Network::Vgg16, &vgg_store);
+    stores.insert(Network::Vit, &vit_store);
+    let cfg = PipelineConfig {
+        workers: 3,
+        queue_capacity: 1024,
+        max_batch: 4,
+        time_scale: 0.0,
+        seed: 5,
+        reuse: true,
+    };
+    let report = run_pipeline_stores(&stores, &PaperPolicy, &tl, &cfg, None, None, |_| {
+        Ok(PerRequestSimExecutor { testbed: &tb, stream: 61 })
+    })
+    .expect("mixed pipeline run");
+
+    assert_eq!(report.records.len(), 200, "every request accounted for");
+    assert_eq!(report.completed(), 200);
+    assert_eq!(report.unknown_network(), 0);
+    for (record, (id, config, out)) in report.records.iter().zip(&baseline) {
+        assert_eq!(record.request_id, *id);
+        assert_eq!(record.net, config.net, "record keyed by its own network");
+        match &record.outcome {
+            ServeOutcome::Done { config: c, latency_ms, energy_j, accuracy, .. } => {
+                assert_eq!(c, config, "request {id}: same per-network config");
+                assert_eq!(*latency_ms, out.latency_ms, "request {id}: bitwise latency");
+                assert_eq!(*energy_j, out.energy_j, "request {id}: bitwise energy");
+                assert_eq!(*accuracy, out.accuracy, "request {id}: bitwise accuracy");
+            }
+            other => panic!("request {id} did not complete: {other:?}"),
+        }
+    }
+
+    // (c) per-network QoS/energy sums reconcile with the aggregate
+    let parts = report.breakdown();
+    assert_eq!(parts.len(), 2, "both networks served");
+    assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), report.records.len());
+    assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), report.completed());
+    let hits: usize = parts.iter().map(|b| b.qos_hits).sum();
+    assert!(
+        (hits as f64 / report.records.len() as f64 - report.qos_hit_rate()).abs() < 1e-12,
+        "per-network QoS hits must sum to the aggregate rate"
+    );
+    let energy: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+    let total = report.mean_energy_j() * report.completed() as f64;
+    assert!((energy - total).abs() < 1e-6, "per-network energy sums to the total");
+    assert_eq!(
+        report.to_metric_set_for(Network::Vgg16, "x").len()
+            + report.to_metric_set_for(Network::Vit, "x").len(),
+        report.to_metric_set("x").len()
+    );
+}
+
+#[test]
+fn mixed_batches_are_always_network_homogeneous() {
+    /// Wraps the order-independent sim executor, recording the network
+    /// composition of every dispatched batch.
+    struct SpyExec<'tb> {
+        inner: PerRequestSimExecutor<'tb>,
+        batches: Arc<Mutex<Vec<Vec<Network>>>>,
+    }
+    impl Executor for SpyExec<'_> {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            self.inner.execute(request, config)
+        }
+        fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+            self.batches
+                .lock()
+                .unwrap()
+                .push(requests.iter().map(|r| r.net).collect());
+            assert!(
+                requests.iter().all(|r| r.net == config.net),
+                "a request was dispatched under another network's config"
+            );
+            self.inner.execute_batch(requests, config)
+        }
+    }
+
+    let tb = Testbed::synthetic();
+    let vgg_store = ConfigStore::new(ConfigSet::new(pareto_for(Network::Vgg16)));
+    let vit_store = ConfigStore::new(ConfigSet::new(pareto_for(Network::Vit)));
+    let mut stores = StoreMap::new();
+    stores.insert(Network::Vgg16, &vgg_store);
+    stores.insert(Network::Vit, &vit_store);
+
+    // full pipeline: the feeder races the workers, so batch shapes vary —
+    // homogeneity must hold under every interleaving
+    let tl = mixed_tl(160, 43);
+    let batches = Arc::new(Mutex::new(Vec::new()));
+    let cfg = PipelineConfig {
+        workers: 2,
+        queue_capacity: 512,
+        max_batch: 4,
+        time_scale: 0.0,
+        seed: 11,
+        reuse: true,
+    };
+    let report = run_pipeline_stores(&stores, &PaperPolicy, &tl, &cfg, None, None, |_| {
+        Ok(SpyExec {
+            inner: PerRequestSimExecutor { testbed: &tb, stream: 63 },
+            batches: batches.clone(),
+        })
+    })
+    .expect("mixed pipeline run");
+    assert_eq!(report.completed(), 160);
+    for batch in batches.lock().unwrap().iter() {
+        assert!(
+            batch.windows(2).all(|w| w[0] == w[1]),
+            "mixed-network batch dispatched: {batch:?}"
+        );
+    }
+
+    // deterministic worker-level check: interleaved same-QoS runs
+    // coalesce *within* a network and break at every network boundary
+    let queue = AdmissionQueue::new(64);
+    for i in 0..12 {
+        let net = if (i / 3) % 2 == 0 { Network::Vgg16 } else { Network::Vit };
+        let bounds = dynasplit::workload::LatencyBounds::paper(net);
+        assert!(queue.offer(TimedRequest {
+            request: Request {
+                id: i,
+                net,
+                qos_ms: bounds.max_ms, // lenient: one config per network
+                inferences: 50,
+                seed: i as u64,
+            },
+            arrival_ms: i as f64,
+        }));
+    }
+    queue.close();
+    let spy_batches = Arc::new(Mutex::new(Vec::new()));
+    let mut rng = Pcg32::seeded(17);
+    let mut worker = Worker {
+        id: 0,
+        queue: &queue,
+        stores: &stores,
+        policy: &PaperPolicy,
+        max_batch: 4,
+        clock: ServeClock::Virtual,
+        caches: CacheSet::new(&stores.networks(), true, &mut rng),
+        executor: SpyExec {
+            inner: PerRequestSimExecutor { testbed: &tb, stream: 63 },
+            batches: spy_batches.clone(),
+        },
+        telemetry: None,
+        records: Vec::new(),
+    };
+    worker.run();
+    assert_eq!(worker.records.len(), 12);
+    let got = spy_batches.lock().unwrap().clone();
+    assert_eq!(got.len(), 4, "runs of 3 coalesce into one dispatch each: {got:?}");
+    for batch in &got {
+        assert_eq!(batch.len(), 3, "full same-network run coalesced");
+        assert!(batch.windows(2).all(|w| w[0] == w[1]));
+    }
+}
+
+#[test]
+fn mixed_stores_hot_swap_per_network_under_live_traffic() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Executor that swaps the vit store from *inside* the pipeline the
+    /// moment the `threshold`-th vit request executes (exactly one
+    /// worker thread wins the fetch_add race).  The triggering request
+    /// was already decided under its pre-swap snapshot, so the swap is
+    /// guaranteed to land mid-run with vit traffic on both sides of it
+    /// — deterministically, with no wall-clock pacing to flake on a
+    /// loaded runner.
+    struct SwapAt<'a> {
+        vit_done: &'a AtomicUsize,
+        vit_store: &'a ConfigStore,
+        threshold: usize,
+        replacement: &'a ConfigSet,
+    }
+    impl Executor for SwapAt<'_> {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            if request.net == Network::Vit
+                && self.vit_done.fetch_add(1, Ordering::SeqCst) + 1 == self.threshold
+            {
+                self.vit_store.swap(self.replacement.clone());
+            }
+            ExecOutcome {
+                latency_ms: config.split as f64,
+                energy_j: 1.0,
+                edge_energy_j: 0.5,
+                cloud_energy_j: 0.5,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    let entry = |net: Network, split: usize| ParetoEntry {
+        config: Config { net, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split },
+        latency_ms: 100.0,
+        energy_j: 1.0,
+        accuracy: 0.95,
+    };
+    const N: usize = 180;
+    let vgg_store = ConfigStore::new(ConfigSet::new(vec![entry(Network::Vgg16, 3)]));
+    let vit_store = ConfigStore::new(ConfigSet::new(vec![entry(Network::Vit, 5)]));
+    let mut stores = StoreMap::new();
+    stores.insert(Network::Vgg16, &vgg_store);
+    stores.insert(Network::Vit, &vit_store);
+    // alternating traffic so vit requests flow for the whole run
+    let tl: Vec<TimedRequest> = (0..N)
+        .map(|i| TimedRequest {
+            request: Request {
+                id: i,
+                net: if i % 2 == 0 { Network::Vgg16 } else { Network::Vit },
+                qos_ms: 1e9,
+                inferences: 1,
+                seed: i as u64,
+            },
+            arrival_ms: i as f64,
+        })
+        .collect();
+    let cfg = PipelineConfig {
+        workers: 2,
+        queue_capacity: N,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 21,
+        reuse: true,
+    };
+    // swap ONLY the vit store once a third of its traffic executed
+    let vit_done = AtomicUsize::new(0);
+    let replacement = ConfigSet::new(vec![entry(Network::Vit, 9)]);
+    let report = run_pipeline_stores(&stores, &PaperPolicy, &tl, &cfg, None, None, |_| {
+        Ok(SwapAt {
+            vit_done: &vit_done,
+            vit_store: &vit_store,
+            threshold: N / 6,
+            replacement: &replacement,
+        })
+    })
+    .expect("mixed pipeline run");
+
+    assert_eq!(report.completed(), N, "no request lost across the swap");
+    // vgg16 never swapped: every vgg record is epoch 0 with the
+    // registered digest
+    assert_eq!(report.epochs_observed_for(Network::Vgg16), vec![0]);
+    // vit swapped mid-run: both epochs served traffic, and every stamp
+    // is a registered installation of the *vit* store
+    let vit_epochs = report.epochs_observed_for(Network::Vit);
+    assert_eq!(vit_epochs, vec![0, 1], "vit swap landed mid-run");
+    let vit_registry = vit_store.epochs();
+    let vgg_registry = vgg_store.epochs();
+    for r in &report.records {
+        if let ServeOutcome::Done { epoch, store_digest, config, .. } = &r.outcome {
+            let registry =
+                if r.net == Network::Vit { &vit_registry } else { &vgg_registry };
+            assert!(
+                registry.contains(&(*epoch, *store_digest)),
+                "request {} stamped an unregistered (epoch, digest) for {:?}",
+                r.request_id,
+                r.net
+            );
+            assert_eq!(config.net, r.net);
+            if r.net == Network::Vit {
+                let want = if *epoch == 0 { 5 } else { 9 };
+                assert_eq!(config.split, want, "vit config matches its epoch");
+            } else {
+                assert_eq!(config.split, 3, "vgg16 stayed on its only epoch");
+            }
+        }
+    }
+    assert_eq!(vgg_store.epoch(), 0);
+    assert_eq!(vit_store.epoch(), 1);
 }
 
 #[test]
