@@ -27,6 +27,7 @@
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::controller::policy::ConfigSet;
+use crate::util::sync::{lock_clean, read_clean, write_clean};
 use crate::space::Network;
 
 /// One coherent view of the store: the set plus its epoch identity.
@@ -94,7 +95,7 @@ impl ConfigStore {
     /// dispatch batch and resolve decision + entry lookup + coalescing
     /// against it.
     pub fn snapshot(&self) -> StoreSnapshot {
-        self.current.read().expect("config store poisoned").clone()
+        read_clean(&self.current).clone()
     }
 
     /// Atomically install `set` as the next epoch; returns the new
@@ -103,16 +104,16 @@ impl ConfigStore {
     pub fn swap(&self, set: ConfigSet) -> u64 {
         let digest = set.digest();
         let set = Arc::new(set);
-        let mut cur = self.current.write().expect("config store poisoned");
+        let mut cur = write_clean(&self.current);
         let epoch = cur.epoch + 1;
         *cur = StoreSnapshot { epoch, digest, set };
-        self.history.lock().expect("store history poisoned").push((epoch, digest));
+        lock_clean(&self.history).push((epoch, digest));
         epoch
     }
 
     /// Current epoch number (0 until the first swap).
     pub fn epoch(&self) -> u64 {
-        self.current.read().expect("config store poisoned").epoch
+        read_clean(&self.current).epoch
     }
 
     /// Number of swaps performed since startup.
@@ -122,9 +123,7 @@ impl ConfigStore {
 
     /// Digest registered for `epoch`, if that epoch was ever installed.
     pub fn digest_of(&self, epoch: u64) -> Option<u64> {
-        self.history
-            .lock()
-            .expect("store history poisoned")
+        lock_clean(&self.history)
             .iter()
             .find(|(e, _)| *e == epoch)
             .map(|(_, d)| *d)
@@ -132,7 +131,7 @@ impl ConfigStore {
 
     /// The full `(epoch, digest)` registry, in install order.
     pub fn epochs(&self) -> Vec<(u64, u64)> {
-        self.history.lock().expect("store history poisoned").clone()
+        lock_clean(&self.history).clone()
     }
 }
 

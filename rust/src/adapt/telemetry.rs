@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::space::Config;
+use crate::util::sync::lock_clean;
 
 /// One measured serving outcome, stamped with the prediction it was
 /// scheduled under.
@@ -76,7 +77,7 @@ impl Telemetry {
 
     /// Record one sample on `worker`'s slot.
     pub fn record(&self, worker: usize, sample: Sample) {
-        let mut ring = self.slots[worker].lock().expect("telemetry slot poisoned");
+        let mut ring = lock_clean(&self.slots[worker]);
         if ring.buf.len() >= self.capacity {
             ring.buf.pop_front();
             ring.dropped += 1;
@@ -90,7 +91,7 @@ impl Telemetry {
     pub fn drain(&self) -> Vec<Sample> {
         let mut out = Vec::new();
         for slot in &self.slots {
-            let mut ring = slot.lock().expect("telemetry slot poisoned");
+            let mut ring = lock_clean(slot);
             out.extend(ring.buf.drain(..));
         }
         out
@@ -100,7 +101,7 @@ impl Telemetry {
     pub fn recorded(&self) -> u64 {
         self.slots
             .iter()
-            .map(|s| s.lock().expect("telemetry slot poisoned").recorded)
+            .map(|s| lock_clean(s).recorded)
             .sum()
     }
 
@@ -108,7 +109,7 @@ impl Telemetry {
     pub fn dropped(&self) -> u64 {
         self.slots
             .iter()
-            .map(|s| s.lock().expect("telemetry slot poisoned").dropped)
+            .map(|s| lock_clean(s).dropped)
             .sum()
     }
 }

@@ -10,6 +10,8 @@
 //!   over the shaped transport, and measures wall-clock — the end-to-end
 //!   proof that all three layers compose.
 
+use anyhow::Result;
+
 use crate::simulator::Testbed;
 use crate::solver::ObservationPool;
 use crate::space::Config;
@@ -27,6 +29,29 @@ pub struct ExecOutcome {
     pub accuracy: f64,
 }
 
+impl ExecOutcome {
+    /// Sentinel for a failed execution on an *infallible* call path:
+    /// infinite latency (a guaranteed QoS miss), zero energy and
+    /// accuracy.  The serving worker never records this — it dispatches
+    /// through [`Executor::try_execute_batch`] and sheds failed batches
+    /// explicitly — but infallible callers (`execute`/`execute_batch`
+    /// on a fallible executor) degrade to it instead of panicking.
+    pub fn failed() -> ExecOutcome {
+        ExecOutcome {
+            latency_ms: f64::INFINITY,
+            energy_j: 0.0,
+            edge_energy_j: 0.0,
+            cloud_energy_j: 0.0,
+            accuracy: 0.0,
+        }
+    }
+
+    /// Whether this outcome is the [`ExecOutcome::failed`] sentinel.
+    pub fn is_failed(&self) -> bool {
+        self.latency_ms.is_infinite()
+    }
+}
+
 /// Executes a request under an applied configuration.
 pub trait Executor {
     fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome;
@@ -35,10 +60,25 @@ pub trait Executor {
     /// (in order).  The default loops [`Executor::execute`] — identical
     /// results, no amortization.  Tensor-driven executors override it to
     /// pack the batch into one flat `[batch, …]` activation and run the
-    /// head once ([`crate::serve::BatchRuntimeExecutor`]); the serving
-    /// worker always dispatches through this seam.
+    /// head once ([`crate::serve::BatchRuntimeExecutor`]).
     fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
         requests.iter().map(|r| self.execute(r, config)).collect()
+    }
+
+    /// Fallible batch seam — what the serving worker dispatches through.
+    /// On `Err` the worker *sheds* the batch (recorded as
+    /// `ServeOutcome::ExecutorFailed`) instead of crashing the pipeline
+    /// (dslint `no-panic-hot-path`, DESIGN.md §13).  The default wraps
+    /// the infallible [`Executor::execute_batch`]; executors with real
+    /// failure modes (config fails to resolve against the loaded
+    /// runtime, backend error, missing network binding) override this
+    /// and surface the error.
+    fn try_execute_batch(
+        &mut self,
+        requests: &[&Request],
+        config: &Config,
+    ) -> Result<Vec<ExecOutcome>> {
+        Ok(self.execute_batch(requests, config))
     }
 }
 
@@ -189,6 +229,36 @@ mod tests {
         assert_eq!(first.latency_ms, again.latency_ms);
         assert_eq!(first.energy_j, again.energy_j);
         assert_eq!(first.accuracy, again.accuracy);
+    }
+
+    #[test]
+    fn default_try_execute_batch_wraps_the_infallible_path() {
+        let tb = Testbed::synthetic();
+        let mut ex = PerRequestSimExecutor { testbed: &tb, stream: 5 };
+        let (a, b) = (request(1), request(2));
+        let direct = ex.execute_batch(&[&a, &b], &config());
+        let tried = ex.try_execute_batch(&[&a, &b], &config()).expect("infallible default");
+        assert_eq!(direct.len(), tried.len());
+        for (d, t) in direct.iter().zip(&tried) {
+            assert_eq!(d.latency_ms, t.latency_ms);
+            assert_eq!(d.energy_j, t.energy_j);
+        }
+    }
+
+    #[test]
+    fn failed_sentinel_is_a_guaranteed_qos_miss() {
+        let f = ExecOutcome::failed();
+        assert!(f.is_failed());
+        assert!(f.latency_ms.is_infinite(), "never beats any deadline");
+        assert_eq!(f.energy_j, 0.0);
+        let ok = ExecOutcome {
+            latency_ms: 10.0,
+            energy_j: 1.0,
+            edge_energy_j: 0.5,
+            cloud_energy_j: 0.5,
+            accuracy: 0.9,
+        };
+        assert!(!ok.is_failed());
     }
 
     #[test]

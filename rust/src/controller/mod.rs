@@ -15,16 +15,15 @@ pub mod executor;
 pub mod policy;
 pub mod real;
 
-use std::time::Instant;
-
 use crate::metrics::{MetricSet, RequestRecord};
+use crate::serve::clock::Stopwatch;
 use crate::solver::ParetoEntry;
 use crate::util::rng::Pcg32;
 use crate::workload::Request;
 
 pub use executor::{ExecOutcome, Executor, PerRequestSimExecutor, SimExecutor};
 pub use policy::{
-    ConfigSet, EnergyBudgetPolicy, HysteresisPolicy, PaperPolicy, PolicyDecision,
+    ConfigSet, EnergyBudgetPolicy, HysteresisPolicy, PaperPolicy, PolicyDecision, PolicySet,
     SchedulingPolicy, StrictDeadlinePolicy,
 };
 
@@ -59,9 +58,9 @@ impl Controller {
         policy: Box<dyn SchedulingPolicy>,
     ) -> Controller {
         assert!(!entries.is_empty(), "controller needs a non-empty configuration set");
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         let set = ConfigSet::new(entries);
-        let load_sort_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let load_sort_ms = sw.elapsed_ms();
         let config_count = set.len();
         Controller {
             set,
@@ -83,9 +82,9 @@ impl Controller {
     /// accounting still covers every (re)build.
     pub fn adopt(&mut self, entries: Vec<ParetoEntry>) {
         assert!(!entries.is_empty(), "controller needs a non-empty configuration set");
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         self.set = ConfigSet::new(entries);
-        self.startup.load_sort_ms += t0.elapsed().as_secs_f64() * 1000.0;
+        self.startup.load_sort_ms += sw.elapsed_ms();
         self.startup.config_count = self.set.len();
     }
 
@@ -98,9 +97,9 @@ impl Controller {
         executor: &mut E,
     ) -> Option<RequestRecord> {
         // (i) select — measured for Fig. 15a
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         let decision = self.policy.decide(&self.set, request.qos_ms);
-        let select_overhead_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let select_overhead_ms = sw.elapsed_ms();
         let entry = match decision {
             PolicyDecision::Run(i) => self.set.entries()[i].clone(),
             PolicyDecision::Reject => return None,

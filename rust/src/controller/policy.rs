@@ -127,6 +127,66 @@ pub trait SchedulingPolicy: Sync {
     fn probe(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
         self.decide(set, qos_ms)
     }
+
+    /// A fresh, same-parameters *private* instance for one
+    /// `(worker, network)` lane, or `None` when sharing `self` is
+    /// lossless.  Stateless policies return `None` (the default): one
+    /// instance serves every worker and network identically.  Stateful
+    /// policies ([`HysteresisPolicy`]) override this so each network
+    /// gets its own sticky state — a single shared slot is keyed by the
+    /// live set's digest, and mixed-network traffic flips that digest
+    /// on every network switch, resetting the stickiness the policy
+    /// exists to provide (see [`PolicySet`]).
+    fn fork(&self) -> Option<Box<dyn SchedulingPolicy>> {
+        None
+    }
+}
+
+/// Per-network scheduling policies for one worker (mixed-network
+/// serving) — the policy-side mirror of `serve::CacheSet`.
+///
+/// Stateless policies are shared untouched: `for_net` hands back the
+/// one instance for every network, preserving the "any interleaving
+/// equals a sequential run" determinism contract.  Stateful policies
+/// are [`SchedulingPolicy::fork`]ed once per network at construction,
+/// so e.g. [`HysteresisPolicy`] keeps one sticky configuration *per
+/// network* and an interleaved vgg16+vit workload no longer resets the
+/// sticky state on every network flip (each fork only ever sees one
+/// network's set digests).  Networks the map does not bind fall back
+/// to the shared instance — the worker sheds such requests before the
+/// policy matters, but the fallback keeps the lookup total.
+pub struct PolicySet<'a> {
+    shared: &'a dyn SchedulingPolicy,
+    forks: Vec<(crate::space::Network, Box<dyn SchedulingPolicy>)>,
+}
+
+impl<'a> PolicySet<'a> {
+    /// One private fork per network for stateful policies; stateless
+    /// policies build no forks and stay fully shared.
+    pub fn new(shared: &'a dyn SchedulingPolicy, networks: &[crate::space::Network]) -> PolicySet<'a> {
+        PolicySet {
+            shared,
+            forks: networks
+                .iter()
+                .filter_map(|&net| shared.fork().map(|p| (net, p)))
+                .collect(),
+        }
+    }
+
+    /// The policy deciding for `net`: its private fork when one was
+    /// built, the shared instance otherwise.
+    pub fn for_net(&self, net: crate::space::Network) -> &dyn SchedulingPolicy {
+        self.forks
+            .iter()
+            .find(|(n, _)| *n == net)
+            .map(|(_, p)| p.as_ref())
+            .unwrap_or(self.shared)
+    }
+
+    /// Number of private per-network forks (0 for stateless policies).
+    pub fn forks(&self) -> usize {
+        self.forks.len()
+    }
 }
 
 /// The paper's Algorithm 1: always admits (fastest-config fallback
@@ -312,6 +372,19 @@ impl SchedulingPolicy for HysteresisPolicy {
 
     fn probe(&self, set: &ConfigSet, qos_ms: f64) -> PolicyDecision {
         self.choose(set, qos_ms, false)
+    }
+
+    /// Sticky state is per `(worker, network)` lane: a shared slot
+    /// would be reset by every network flip of a mixed workload (the
+    /// digest key changes), thrashing exactly the reconfigurations
+    /// hysteresis is meant to avoid.
+    fn fork(&self) -> Option<Box<dyn SchedulingPolicy>> {
+        Some(Box::new(HysteresisPolicy::new(
+            self.buckets,
+            self.min_ms,
+            self.max_ms,
+            self.energy_slack,
+        )))
     }
 }
 
@@ -563,6 +636,102 @@ mod tests {
             }
             PolicyDecision::Reject => panic!("non-empty set"),
         }
+    }
+
+    #[test]
+    fn stateless_policies_do_not_fork() {
+        assert!(PaperPolicy.fork().is_none());
+        assert!(StrictDeadlinePolicy.fork().is_none());
+        assert!(EnergyBudgetPolicy { budget_j: 5.0 }.fork().is_none());
+    }
+
+    /// With the VGG16 Table-2 bounds, qos 400 lands in the bucket with
+    /// floor ~345.7 (optimal: the 340 ms entry) and qos 1000 in the
+    /// bucket with floor ~676 (optimal: the frugal 450 ms entry) — an
+    /// oscillating 400/1000 workload flips the fresh-state pick, while
+    /// a sticky instance keeps the 340 ms entry (in slack, satisfies
+    /// both deadlines).
+    fn osc_set() -> ConfigSet {
+        ConfigSet::new(vec![
+            entry(450.0, 2.0, 0.95), // frugal: the 676-floor optimum
+            entry(340.0, 4.0, 0.95), // the 345.7-floor optimum
+            entry(100.0, 60.0, 0.95),
+        ])
+    }
+
+    #[test]
+    fn hysteresis_fork_has_independent_sticky_state() {
+        let set = osc_set();
+        let parent = HysteresisPolicy::paper(Network::Vgg16);
+        let fork = parent.fork().expect("hysteresis forks");
+        assert_eq!(fork.name(), "hysteresis");
+        // parent settles on the 340 ms entry via a committed decision
+        let settled = match parent.decide(&set, 400.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!("non-empty set"),
+        };
+        assert_eq!(set.entries()[settled].latency_ms, 340.0);
+        // the fork carries no such stickiness: its fresh decision for
+        // qos 1000 is the bucket-optimal frugal entry, not the parent's
+        // sticky pick
+        let fresh = match fork.decide(&set, 1000.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!("non-empty set"),
+        };
+        assert_eq!(set.entries()[fresh].latency_ms, 450.0, "fork state is private");
+        // ...and the fork's commit must not disturb the parent either
+        assert_eq!(parent.decide(&set, 1000.0), PolicyDecision::Run(settled), "parent sticks");
+    }
+
+    #[test]
+    fn policy_set_forks_stateful_policies_per_network() {
+        let set = osc_set();
+        let shared = HysteresisPolicy::paper(Network::Vgg16);
+        let policies = PolicySet::new(&shared, &[Network::Vgg16, Network::Vit]);
+        assert_eq!(policies.forks(), 2);
+        // settle vgg16's lane on the 340 ms entry
+        let vgg = match policies.for_net(Network::Vgg16).decide(&set, 400.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!("non-empty set"),
+        };
+        assert_eq!(set.entries()[vgg].latency_ms, 340.0);
+        // vit's lane is a different instance: no sticky carry-over
+        let vit = match policies.for_net(Network::Vit).decide(&set, 1000.0) {
+            PolicyDecision::Run(i) => i,
+            PolicyDecision::Reject => panic!("non-empty set"),
+        };
+        assert_eq!(set.entries()[vit].latency_ms, 450.0, "per-network state");
+        // and vgg16's lane kept its pick across the vit decision
+        assert_eq!(
+            policies.for_net(Network::Vgg16).decide(&set, 1000.0),
+            PolicyDecision::Run(vgg),
+            "vit traffic no longer resets vgg16 stickiness"
+        );
+    }
+
+    #[test]
+    fn policy_set_shares_stateless_policies() {
+        let policies = PolicySet::new(&PaperPolicy, &[Network::Vgg16, Network::Vit]);
+        assert_eq!(policies.forks(), 0, "nothing to fork");
+        let set = set3();
+        for net in [Network::Vgg16, Network::Vit] {
+            assert_eq!(
+                policies.for_net(net).decide(&set, 450.0),
+                PaperPolicy.decide(&set, 450.0),
+                "shared instance decides for every network"
+            );
+        }
+    }
+
+    #[test]
+    fn policy_set_falls_back_to_shared_for_unbound_networks() {
+        let shared = HysteresisPolicy::paper(Network::Vgg16);
+        let policies = PolicySet::new(&shared, &[Network::Vgg16]);
+        assert_eq!(policies.forks(), 1);
+        // vit was never bound: the lookup stays total via the shared
+        // instance (the worker sheds unbound traffic before deciding,
+        // but the seam must not panic)
+        assert_eq!(policies.for_net(Network::Vit).name(), "hysteresis");
     }
 
     #[test]

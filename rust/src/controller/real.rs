@@ -19,7 +19,7 @@
 //! paper's hardware scale); this executor is used by `examples/quickstart`
 //! and the runtime integration tests to validate the compute path itself.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -28,6 +28,7 @@ use crate::model::manifest::Manifest;
 use crate::runtime::network::spawn_cloud_node;
 use crate::runtime::session::SessionCache;
 use crate::runtime::{default_backend, NetworkRuntime, TensorArena};
+use crate::serve::clock::Stopwatch;
 use crate::simulator::power::{cloud_power, edge_power, EdgeState};
 use crate::space::{Config, Network};
 use crate::transport::channel::{duplex, LinkShaping};
@@ -131,9 +132,9 @@ impl RealSplitExecutor {
         let plan = self.sessions.plan(runtime, config)?;
 
         // --- edge head (real backend execution, arena-reused buffers) ---
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         let head_out = runtime.run_head_in(plan.split, plan.quantized, &x, &mut self.arena)?;
-        let edge_s = t0.elapsed().as_secs_f64();
+        let edge_s = sw.elapsed().as_secs_f64();
 
         // --- cloud tail over the transport (real tensors) ---
         let tail_probs: Vec<f32>;
@@ -148,9 +149,9 @@ impl RealSplitExecutor {
                 gpu: config.gpu,
                 tensor_len: head_out.len() as u64,
             })?;
-            let t1 = Instant::now();
+            let sw = Stopwatch::start();
             tail_probs = self.stream.exchange(head_out, RECV_TIMEOUT)?;
-            let round_s = t1.elapsed().as_secs_f64();
+            let round_s = sw.elapsed().as_secs_f64();
             let sim = match net {
                 Network::Vgg16 => &self.sim_vgg,
                 Network::Vit => &self.sim_vit,

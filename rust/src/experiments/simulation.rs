@@ -166,9 +166,9 @@ mod tests {
     fn pool_mode_is_fast_for_many_requests() {
         // 2,000 pool-served requests must not require 2,000 fresh trials —
         // wall-clock stays small.
-        let t0 = std::time::Instant::now();
+        let sw = crate::serve::clock::Stopwatch::start();
         let _ = exp(Network::Vit, 2000);
-        assert!(t0.elapsed().as_secs() < 30, "{:?}", t0.elapsed());
+        assert!(sw.elapsed().as_secs() < 30, "{:?}", sw.elapsed());
     }
 
     #[test]

@@ -41,7 +41,7 @@ use dynasplit::space::{Network, Space};
 use dynasplit::util::cli::{ArgSpec, Args};
 use dynasplit::util::rng::Pcg32;
 use dynasplit::util::table::Table;
-use dynasplit::workload::{mixed_timeline, ArrivalProcess, NetworkMix, WorkloadGen};
+use dynasplit::workload::{mixed_timeline, ArrivalProcess, LatencyBounds, NetworkMix, WorkloadGen};
 
 fn main() {
     if let Err(e) = run() {
@@ -149,12 +149,12 @@ fn cmd_solve() -> Result<()> {
         "[solve] {} via {:?}: {} trials x {} inferences (accuracy table: {})",
         net.name(), strategy, trials, solver.batch_per_trial, ctx.accuracy_origin
     );
-    let t0 = std::time::Instant::now();
+    let sw = dynasplit::serve::Stopwatch::start();
     let out = solver.run(strategy, trials, a.u64("seed")?);
     println!(
         "[solve] {} trials in {:.2} s, non-dominated set size {}",
         out.trials.len(),
-        t0.elapsed().as_secs_f64(),
+        sw.elapsed().as_secs_f64(),
         out.pareto.len()
     );
     let default_path = format!("{}/pareto_{}.json", a.str("artifacts")?, net.name());
@@ -230,14 +230,14 @@ fn cmd_serve() -> Result<()> {
             solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto
         }
     };
-    let t0 = std::time::Instant::now();
+    let sw = dynasplit::serve::Stopwatch::start();
     let set = ConfigSet::new(pareto);
     println!(
         "[serve] startup: sorted + indexed {} configs in {:.3} ms",
         set.len(),
-        t0.elapsed().as_secs_f64() * 1000.0
+        sw.elapsed_ms()
     );
-    let policy = parse_policy(&a, Some(net))?;
+    let policy = parse_policy(&a, &[net])?;
     let gen = WorkloadGen::paper(net);
     let mut rng = Pcg32::new(seed, 91);
     let process = arrival_process(&a)?;
@@ -303,22 +303,26 @@ fn cmd_serve() -> Result<()> {
     Ok(())
 }
 
-/// Scheduling policy shared by `serve` and `serve --mix`.
-/// `hysteresis_net` is the network a `hysteresis` policy would be
-/// parameterized for — `None` in mixed mode, where its per-set sticky
-/// state does not compose yet (ROADMAP follow-on).
-fn parse_policy(a: &Args, hysteresis_net: Option<Network>) -> Result<Box<dyn SchedulingPolicy>> {
+/// Scheduling policy shared by `serve` and `serve --mix`.  `nets` are
+/// the networks the policy will schedule for: a `hysteresis` policy
+/// buckets QoS over the union of their Table-2 latency bounds, and the
+/// pipeline forks it per (worker, network) lane (`PolicySet`) so its
+/// sticky state never thrashes across networks under `--mix`.
+fn parse_policy(a: &Args, nets: &[Network]) -> Result<Box<dyn SchedulingPolicy>> {
     Ok(match a.str("policy")? {
         "paper" => Box::new(PaperPolicy),
         "strict" => Box::new(StrictDeadlinePolicy),
         "budget" => Box::new(EnergyBudgetPolicy { budget_j: a.f64("budget")? }),
-        "hysteresis" => match hysteresis_net {
-            Some(net) => Box::new(HysteresisPolicy::paper(net)),
-            None => bail!(
-                "hysteresis keys its sticky state per configuration set; per-network \
-                 instances under --mix are a ROADMAP follow-on (use paper|strict|budget)"
-            ),
-        },
+        "hysteresis" => {
+            let mut min_ms = f64::INFINITY;
+            let mut max_ms = f64::NEG_INFINITY;
+            for &net in nets {
+                let b = LatencyBounds::paper(net);
+                min_ms = min_ms.min(b.min_ms);
+                max_ms = max_ms.max(b.max_ms);
+            }
+            Box::new(HysteresisPolicy::new(6, min_ms, max_ms, 3.0))
+        }
         other => bail!("unknown policy {other:?} (expected paper|strict|budget|hysteresis)"),
     })
 }
@@ -347,21 +351,21 @@ fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
     if a.get("pareto").is_some() {
         bail!("--pareto holds one network's front; --mix runs a fresh 20% search per network");
     }
-    let policy = parse_policy(a, None)?;
+    let policy = parse_policy(a, &mix.networks())?;
     // offline phase: one 20%-budget search per mixed network — each
     // network gets its own independently hot-swappable store
     let mut fronts = Vec::new();
     for net in mix.networks() {
         let mut solver = Solver::new(&ctx.testbed, net);
         solver.batch_per_trial = a.usize("batch")?;
-        let t0 = std::time::Instant::now();
+        let sw = dynasplit::serve::Stopwatch::start();
         let pareto = solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto;
         let set = ConfigSet::new(pareto);
         println!(
             "[serve] {}: sorted + indexed {} configs in {:.3} ms ({:.0}% of traffic)",
             net.name(),
             set.len(),
-            t0.elapsed().as_secs_f64() * 1000.0,
+            sw.elapsed_ms(),
             mix.share(net) * 100.0
         );
         fronts.push((net, ConfigStore::new(set)));
@@ -585,9 +589,9 @@ fn cmd_accuracy() -> Result<()> {
         "[accuracy] runtimes loaded: vgg {:.0} ms, vit {:.0} ms",
         vgg.load_ms, vit.load_ms
     );
-    let t0 = std::time::Instant::now();
+    let sw = dynasplit::serve::Stopwatch::start();
     let measured = dynasplit::runtime::evaluate::measure_cached(&manifest, &vgg, &vit, true)?;
-    println!("[accuracy] measured in {:.1} s", t0.elapsed().as_secs_f64());
+    println!("[accuracy] measured in {:.1} s", sw.elapsed().as_secs_f64());
     // cross-check against the python oracle expectations
     let exp = &manifest.vgg16.expected_accuracy;
     println!(

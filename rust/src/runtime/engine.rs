@@ -13,7 +13,6 @@
 //! against the stub, and the tests below skip themselves in that case.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -39,7 +38,7 @@ impl Engine {
         in_shape: &[usize],
         out_shape: &[usize],
     ) -> Result<LayerExec> {
-        let t0 = Instant::now();
+        let sw = crate::serve::clock::Stopwatch::start();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )
@@ -57,7 +56,7 @@ impl Engine {
             in_dims: std::iter::once(batch as i64)
                 .chain(in_shape.iter().map(|&d| d as i64))
                 .collect(),
-            compile_ms: t0.elapsed().as_secs_f64() * 1000.0,
+            compile_ms: sw.elapsed_ms(),
         })
     }
 }

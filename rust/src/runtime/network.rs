@@ -6,7 +6,6 @@
 //! otherwise — so the same head/tail composition logic serves both.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -49,7 +48,7 @@ impl NetworkRuntime {
         layers: &[LayerEntry],
         artifact_dir: Option<&Path>,
     ) -> Result<NetworkRuntime> {
-        let t0 = Instant::now();
+        let sw = crate::serve::clock::Stopwatch::start();
         let mut fp32: Vec<Box<dyn LayerExecutable>> = Vec::with_capacity(layers.len());
         let mut int8: Vec<Option<Box<dyn LayerExecutable>>> = Vec::with_capacity(layers.len());
         for layer in layers {
@@ -81,7 +80,7 @@ impl NetworkRuntime {
             batch,
             fp32,
             int8,
-            load_ms: t0.elapsed().as_secs_f64() * 1000.0,
+            load_ms: sw.elapsed_ms(),
         })
     }
 
@@ -259,6 +258,9 @@ pub fn spawn_cloud_node(
     endpoint: crate::transport::channel::Endpoint,
     timeout: std::time::Duration,
 ) -> std::thread::JoinHandle<Result<crate::transport::cloud::ServeStats>> {
+    // dslint::allow(no-thread-spawn): the cloud node's lifetime is tied to
+    // the RealSplitExecutor that owns this handle (joined in shutdown()),
+    // not to any lexical scope — see DESIGN.md §13
     std::thread::spawn(move || {
         let executor = RuntimeTailExecutor::load(&manifest)?;
         crate::transport::cloud::serve(endpoint, &executor, timeout)

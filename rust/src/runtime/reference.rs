@@ -36,7 +36,6 @@
 //! to run a coalesced batch through one head call.
 
 use std::cell::RefCell;
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -110,7 +109,7 @@ impl InferenceBackend for ReferenceBackend {
     }
 
     fn load_layer(&self, spec: &LayerSpec) -> Result<Box<dyn LayerExecutable>> {
-        let t0 = Instant::now();
+        let sw = crate::serve::clock::Stopwatch::start();
         let op = RefOp::build(spec)?;
         Ok(Box::new(RefLayer {
             batch: spec.batch,
@@ -119,8 +118,10 @@ impl InferenceBackend for ReferenceBackend {
             op,
             threads: self.threads.max(1),
             naive: self.naive,
-            scratch: RefCell::new(Vec::new()),
-            build_ms: t0.elapsed().as_secs_f64() * 1000.0,
+            // one scratch per kernel thread, built here so the hot
+            // `run_into` path never allocates the pool itself
+            scratch: RefCell::new((0..self.threads.max(1)).map(|_| Vec::new()).collect()),
+            build_ms: sw.elapsed_ms(),
         }))
     }
 }
@@ -323,9 +324,7 @@ impl LayerExecutable for RefLayer {
             return Ok(());
         }
         let mut pool = self.scratch.borrow_mut();
-        if pool.len() < self.threads {
-            pool.resize_with(self.threads, Vec::new);
-        }
+        debug_assert!(pool.len() >= self.threads.max(1), "scratch pool sized at load");
         if self.threads > 1 && images > 1 {
             // data-parallel over batch images, one scratch per thread;
             // per-image reduction order is unchanged, so results are

@@ -19,10 +19,13 @@
 
 use std::sync::{Arc, Mutex};
 
+use anyhow::{Context, Result};
+
 use crate::controller::{ExecOutcome, Executor};
 use crate::runtime::{NetworkRuntime, SessionCache, TensorArena};
 use crate::space::Config;
 use crate::util::rng::Pcg32;
+use crate::util::sync::lock_clean;
 use crate::workload::Request;
 
 /// Shared telemetry: how often the head ran, for how many requests, and
@@ -76,11 +79,11 @@ impl BatchRuntimeExecutor {
             .extend((0..self.img_elems).map(|_| rng.uniform(-1.0, 1.0) as f32));
     }
 
-    fn run_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+    fn run_batch(&mut self, requests: &[&Request], config: &Config) -> Result<Vec<ExecOutcome>> {
         let plan = self
             .sessions
             .plan(&self.runtime, config)
-            .expect("serving config resolves against the loaded runtime");
+            .context("serving config does not resolve against the loaded runtime")?;
         self.packed.clear();
         for r in requests {
             self.pack_image(r.seed);
@@ -89,12 +92,12 @@ impl BatchRuntimeExecutor {
         let head = self
             .runtime
             .run_head_in(plan.split, plan.quantized, &self.packed, &mut self.arena)
-            .expect("batched head execution");
+            .context("batched head execution failed")?;
         let per = head.len() / requests.len().max(1);
-        let mut log = self.log.lock().expect("batch log poisoned");
+        let mut log = lock_clean(&self.log);
         log.head_runs += 1;
         log.requests += requests.len();
-        requests
+        Ok(requests
             .iter()
             .zip(head.chunks_exact(per.max(1)))
             .map(|(r, chunk)| {
@@ -111,18 +114,40 @@ impl BatchRuntimeExecutor {
                     accuracy: 0.9,
                 }
             })
-            .collect()
+            .collect())
     }
 }
 
 impl Executor for BatchRuntimeExecutor {
+    /// Infallible seam: a failed run degrades to the
+    /// [`ExecOutcome::failed`] sentinel (a guaranteed QoS miss) instead
+    /// of panicking.  The serving worker never takes this path — it
+    /// dispatches through [`Executor::try_execute_batch`] and sheds
+    /// failed batches explicitly.
     fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
-        self.run_batch(&[request], config).remove(0)
+        match self.run_batch(&[request], config) {
+            Ok(mut outs) if !outs.is_empty() => outs.remove(0),
+            _ => ExecOutcome::failed(),
+        }
     }
 
     fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
         if requests.is_empty() {
             return Vec::new();
+        }
+        match self.run_batch(requests, config) {
+            Ok(outs) => outs,
+            Err(_) => requests.iter().map(|_| ExecOutcome::failed()).collect(),
+        }
+    }
+
+    fn try_execute_batch(
+        &mut self,
+        requests: &[&Request],
+        config: &Config,
+    ) -> Result<Vec<ExecOutcome>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
         }
         self.run_batch(requests, config)
     }
@@ -202,6 +227,26 @@ mod tests {
             assert_eq!(ex.arena.capacity(), cap, "arena stable after warmup");
             assert_eq!(ex.packed.capacity(), packed_cap, "pack buffer stable");
         }
+    }
+
+    #[test]
+    fn unresolvable_config_errors_instead_of_panicking() {
+        // split 99 is out of range for the 3-layer runtime: plan() fails
+        let log = Arc::new(Mutex::new(BatchLog::default()));
+        let mut ex = BatchRuntimeExecutor::new(tiny_runtime(), log.clone());
+        let r = req(0);
+        let err = ex
+            .try_execute_batch(&[&r], &cfg(99))
+            .expect_err("out-of-range split must not resolve");
+        assert!(format!("{err:#}").contains("does not resolve"), "{err:#}");
+        // the infallible paths degrade to the failed sentinel
+        assert!(ex.execute(&r, &cfg(99)).is_failed());
+        let outs = ex.execute_batch(&[&r], &cfg(99));
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].is_failed());
+        assert_eq!(log.lock().unwrap().head_runs, 0, "no head ever ran");
+        // the executor is still healthy for valid configs afterwards
+        assert!(!ex.execute(&r, &cfg(2)).is_failed());
     }
 
     #[test]

@@ -118,15 +118,17 @@ impl CacheSet {
         CacheSet { caches: vec![(net, cache)] }
     }
 
-    /// The cache serving `net`.  The worker only activates networks the
-    /// store map binds, and the pipeline builds one cache per bound
-    /// network — a miss here is a pipeline-construction bug.
-    pub fn get_mut(&mut self, net: Network) -> &mut ReuseCache {
-        self.caches
-            .iter_mut()
-            .find(|(n, _)| *n == net)
-            .map(|(_, c)| c)
-            .expect("a ReuseCache exists for every network in the store map")
+    /// The cache serving `net`, or `None` when no cache was built for
+    /// it.  The worker only activates networks the store map binds, and
+    /// the pipeline builds one cache per bound network — a miss here is
+    /// a pipeline-construction bug, which the worker surfaces by
+    /// shedding the batch (shed-not-crash, DESIGN.md §13) rather than
+    /// panicking.  Caches are *not* created lazily: the per-network RNG
+    /// fork order at construction is part of the deterministic-replay
+    /// contract, and a lazily forked stream would depend on dispatch
+    /// order.
+    pub fn get_mut(&mut self, net: Network) -> Option<&mut ReuseCache> {
+        self.caches.iter_mut().find(|(n, _)| *n == net).map(|(_, c)| c)
     }
 
     /// Counters summed over all networks.
@@ -194,11 +196,15 @@ mod tests {
         let mut set = CacheSet::new(&[Network::Vgg16, Network::Vit], true, &mut rng);
         let vgg = cfg(3, TpuMode::Max, 7);
         let vit = Config { net: Network::Vit, cpu_idx: 5, tpu: TpuMode::Off, gpu: true, split: 4 };
-        assert!(set.get_mut(Network::Vgg16).activate(&vgg) > 0.0, "cold vgg16");
-        assert!(set.get_mut(Network::Vit).activate(&vit) > 0.0, "cold vit");
+        let c = set.get_mut(Network::Vgg16).expect("vgg16 bound");
+        assert!(c.activate(&vgg) > 0.0, "cold vgg16");
+        let c = set.get_mut(Network::Vit).expect("vit bound");
+        assert!(c.activate(&vit) > 0.0, "cold vit");
         // interleaving networks must not evict the other's live config
-        assert_eq!(set.get_mut(Network::Vgg16).activate(&vgg), 0.0, "vgg16 still live");
-        assert_eq!(set.get_mut(Network::Vit).activate(&vit), 0.0, "vit still live");
+        let c = set.get_mut(Network::Vgg16).expect("vgg16 bound");
+        assert_eq!(c.activate(&vgg), 0.0, "vgg16 still live");
+        let c = set.get_mut(Network::Vit).expect("vit bound");
+        assert_eq!(c.activate(&vit), 0.0, "vit still live");
         let s = set.stats();
         assert_eq!((s.reconfigs, s.hits), (2, 2), "summed across networks");
     }
@@ -208,17 +214,18 @@ mod tests {
         let mut rng = Pcg32::seeded(8);
         let mut set = CacheSet::new(&[Network::Vgg16], false, &mut rng);
         let a = cfg(3, TpuMode::Max, 7);
-        set.get_mut(Network::Vgg16).activate(&a);
-        assert!(set.get_mut(Network::Vgg16).activate(&a) > 0.0, "no reuse when disabled");
+        set.get_mut(Network::Vgg16).expect("bound").activate(&a);
+        let again = set.get_mut(Network::Vgg16).expect("bound").activate(&a);
+        assert!(again > 0.0, "no reuse when disabled");
         assert_eq!(set.stats().hits, 0);
     }
 
     #[test]
-    #[should_panic(expected = "a ReuseCache exists")]
-    fn cache_set_panics_on_unbound_network() {
+    fn cache_set_misses_unbound_network_without_panicking() {
         let mut rng = Pcg32::seeded(9);
         let mut set = CacheSet::new(&[Network::Vgg16], true, &mut rng);
-        let _ = set.get_mut(Network::Vit);
+        assert!(set.get_mut(Network::Vit).is_none(), "vit was never bound");
+        assert!(set.get_mut(Network::Vgg16).is_some());
     }
 
     #[test]

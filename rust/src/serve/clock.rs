@@ -15,8 +15,16 @@
 //!   burns its budget while it waits — policies then decide on
 //!   `deadline - now` (ROADMAP "wait-aware scheduling") and the worker
 //!   sheds requests whose deadline already passed at pop time.
+//!
+//! This module is also the repo's **only sanctioned wall-clock seam**
+//! (dslint `clock-discipline`, DESIGN.md §13): every other module
+//! measures elapsed time through [`Stopwatch`], expresses wall-clock
+//! timeouts through [`WallDeadline`], and takes experiment time from a
+//! [`ServeClock`].  Keeping every `Instant::now()` read behind one
+//! audited file is what lets the virtual-time tests stay deterministic
+//! and the real-time paths stay consistent with each other.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::workload::TimedRequest;
 
@@ -40,6 +48,25 @@ impl ServeClock {
         }
     }
 
+    /// Build from the `time_scale` knob, anchored at the current
+    /// instant — the way every caller outside this module obtains a
+    /// real-time clock (they cannot read `Instant::now()` themselves).
+    pub fn start(time_scale: f64) -> ServeClock {
+        ServeClock::new(Instant::now(), time_scale)
+    }
+
+    /// Sleep until `arrival_ms` on the experiment clock (the open-loop
+    /// feeder's pacing).  No-op in virtual time or when the arrival is
+    /// already due.
+    pub fn pace_to(&self, arrival_ms: f64) {
+        if let ServeClock::Real { t0, scale } = self {
+            let target = *t0 + Duration::from_secs_f64(arrival_ms / 1000.0 * scale);
+            if let Some(wait) = target.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+        }
+    }
+
     /// Current experiment-clock offset (ms); `None` in virtual time.
     pub fn now_ms(&self) -> Option<f64> {
         match self {
@@ -57,6 +84,64 @@ impl ServeClock {
         match now {
             None => tr.request.qos_ms,
             Some(now_ms) => tr.deadline_ms() - now_ms,
+        }
+    }
+}
+
+/// A started monotonic stopwatch — the sanctioned way to measure
+/// elapsed wall time (startup costs, select/apply overheads, report
+/// wall-clock) outside the bench harness.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start measuring now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Elapsed wall time since [`Stopwatch::start`].
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    /// Elapsed wall time in milliseconds (the unit every overhead
+    /// field and report uses).
+    pub fn elapsed_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1000.0
+    }
+}
+
+/// An absolute wall-clock deadline — the sanctioned way to express
+/// "this much real time from now" (transport timeouts, shaped packet
+/// delivery) without holding a raw `Instant`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct WallDeadline {
+    at: Instant,
+}
+
+impl WallDeadline {
+    /// The deadline `d` from now.
+    pub fn after(d: Duration) -> WallDeadline {
+        WallDeadline { at: Instant::now() + d }
+    }
+
+    /// Time left until the deadline; `None` once it has passed.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.checked_duration_since(Instant::now())
+    }
+
+    /// Whether the deadline has passed.
+    pub fn expired(&self) -> bool {
+        self.remaining().is_none()
+    }
+
+    /// Block until the deadline (no-op when already expired).
+    pub fn sleep_until(&self) {
+        if let Some(wait) = self.remaining() {
+            std::thread::sleep(wait);
         }
     }
 }
@@ -108,6 +193,47 @@ mod tests {
         assert!(clock.remaining_ms(&r, Some(151.0)) < 0.0);
         // virtual time never reaches this edge: budget stays the raw QoS
         assert_eq!(ServeClock::Virtual.remaining_ms(&r, None), 50.0);
+    }
+
+    #[test]
+    fn start_matches_the_knob_semantics() {
+        assert!(matches!(ServeClock::start(0.0), ServeClock::Virtual));
+        let clock = ServeClock::start(1.0);
+        assert!(matches!(clock, ServeClock::Real { .. }));
+        assert!(clock.now_ms().expect("real clock") >= 0.0);
+    }
+
+    #[test]
+    fn pace_to_waits_for_future_arrivals_only() {
+        let sw = Stopwatch::start();
+        // virtual time: pacing is a no-op however far out the arrival
+        ServeClock::Virtual.pace_to(1e9);
+        assert!(sw.elapsed_ms() < 100.0, "virtual pacing must not sleep");
+        let clock = ServeClock::start(1.0);
+        clock.pace_to(0.0); // already due: returns immediately
+        let sw = Stopwatch::start();
+        clock.pace_to(5.0); // 5 ms of experiment time at scale 1
+        assert!(sw.elapsed_ms() <= 5.0 + 50.0, "bounded wait: {}", sw.elapsed_ms());
+    }
+
+    #[test]
+    fn stopwatch_measures_elapsed_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(sw.elapsed() >= Duration::from_millis(3));
+        assert!(sw.elapsed_ms() >= 3.0);
+    }
+
+    #[test]
+    fn wall_deadline_expires_and_reports_remaining() {
+        let d = WallDeadline::after(Duration::from_millis(200));
+        assert!(!d.expired());
+        assert!(d.remaining().expect("in the future") <= Duration::from_millis(200));
+        let past = WallDeadline::after(Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(past.expired());
+        assert_eq!(past.remaining(), None);
+        past.sleep_until(); // expired: returns immediately
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!                        ┌──────────┴──────────┐
 //!                   Worker 0   …           Worker N-1
 //!                    │ StoreMap: request.net ─▶ ConfigStore (snapshot)
-//!                    │ SchedulingPolicy (shared; decides per network)
+//!                    │ PolicySet (stateless: shared; stateful: forked
+//!                    │            per worker *per net* — no cross-net
+//!                    │            stickiness thrash)
 //!                    │ CacheSet  (per worker: live config *per net*)
 //!                    │ Executor  (per worker: runtime session per net)
 //!                    └──────────▶ ServeRecord* ──▶ ServeReport
@@ -61,19 +63,17 @@ pub mod queue;
 pub mod report;
 pub mod worker;
 
-use std::time::{Duration, Instant};
-
 use anyhow::{ensure, Result};
 
 use crate::adapt::{AdmissionGate, ConfigStore, StoreMap, Telemetry};
-use crate::controller::policy::{ConfigSet, SchedulingPolicy};
+use crate::controller::policy::{ConfigSet, PolicySet, SchedulingPolicy};
 use crate::controller::Executor;
 use crate::util::rng::Pcg32;
 use crate::workload::TimedRequest;
 
 pub use batch::{BatchLog, BatchRuntimeExecutor};
 pub use cache::{CacheSet, CacheStats, ReuseCache};
-pub use clock::ServeClock;
+pub use clock::{ServeClock, Stopwatch, WallDeadline};
 pub use multi::NetExecutorMap;
 pub use queue::{AdmissionQueue, QueueStats};
 pub use report::{NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport};
@@ -240,11 +240,11 @@ where
         );
     }
     let queue = AdmissionQueue::new(cfg.queue_capacity);
-    let t0 = Instant::now();
+    let wall = clock::Stopwatch::start();
     // virtual time for as-fast-as-possible injection, real-time replay
     // otherwise: workers shed expired requests and hand policies the
     // *remaining* budget (wait-aware scheduling)
-    let clock = ServeClock::new(t0, cfg.time_scale);
+    let clock = ServeClock::start(cfg.time_scale);
     let mut records: Vec<ServeRecord> = Vec::with_capacity(timeline.len());
 
     let networks = stores.networks();
@@ -258,11 +258,14 @@ where
                 let executor = factory(w)?;
                 let mut rng = Pcg32::new(cfg.seed, 2000 + w as u64);
                 let caches = CacheSet::new(networks, cfg.reuse, &mut rng);
+                // stateful policies fork one private lane per network
+                // (stateless ones stay fully shared) — mirrors `caches`
+                let policies = PolicySet::new(policy, networks);
                 let mut worker = Worker {
                     id: w,
                     queue,
                     stores,
-                    policy,
+                    policies,
                     max_batch: cfg.max_batch,
                     clock,
                     caches,
@@ -280,13 +283,7 @@ where
         // full queue, or earlier when the admission gate predicts the
         // queue wait alone already exceeds the request's budget
         for tr in timeline {
-            if cfg.time_scale > 0.0 {
-                let target = t0 + Duration::from_secs_f64(tr.arrival_ms / 1000.0 * cfg.time_scale);
-                let now = Instant::now();
-                if target > now {
-                    std::thread::sleep(target - now);
-                }
-            }
+            clock.pace_to(tr.arrival_ms);
             if let Some(gate) = gate {
                 if !gate.admit(queue.depth(), tr.request.qos_ms) {
                     records.push(ServeRecord::shed_by_admission(tr));
@@ -320,7 +317,7 @@ where
         cache,
         queue: queue.stats(),
         workers: cfg.workers,
-        wall_ms: t0.elapsed().as_secs_f64() * 1000.0,
+        wall_ms: wall.elapsed_ms(),
     })
 }
 

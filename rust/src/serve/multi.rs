@@ -15,6 +15,8 @@
 //! the whole batch to one inner executor, preserving whatever batch
 //! amortization that executor implements.
 
+use anyhow::{bail, Result};
+
 use crate::controller::{ExecOutcome, Executor};
 use crate::space::{Config, Network};
 use crate::workload::Request;
@@ -42,18 +44,25 @@ impl<E> NetExecutorMap<E> {
         self.inner.iter().map(|(n, _)| *n).collect()
     }
 
-    fn for_net(&mut self, net: Network) -> &mut E {
-        self.inner
-            .iter_mut()
-            .find(|(n, _)| *n == net)
-            .map(|(_, e)| e)
-            .expect("an executor exists for every network the store map serves")
+    /// The executor bound to `net`; `None` when the binding is missing
+    /// (the worker routes only networks the store map binds, so a miss
+    /// means the pipeline was constructed with mismatched store and
+    /// executor maps — surfaced as a shed, not a crash).
+    fn for_net(&mut self, net: Network) -> Option<&mut E> {
+        self.inner.iter_mut().find(|(n, _)| *n == net).map(|(_, e)| e)
     }
 }
 
 impl<E: Executor> Executor for NetExecutorMap<E> {
+    /// Infallible seam: a request for an unbound network degrades to
+    /// the [`ExecOutcome::failed`] sentinel; the serving worker
+    /// dispatches through [`Executor::try_execute_batch`] instead and
+    /// sheds such batches explicitly.
     fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
-        self.for_net(request.net).execute(request, config)
+        match self.for_net(request.net) {
+            Some(e) => e.execute(request, config),
+            None => ExecOutcome::failed(),
+        }
     }
 
     fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
@@ -65,7 +74,29 @@ impl<E: Executor> Executor for NetExecutorMap<E> {
             "mixed-network batch reached the executor: the worker's coalescing \
              predicate must keep batches network-homogeneous"
         );
-        self.for_net(first.net).execute_batch(requests, config)
+        match self.for_net(first.net) {
+            Some(e) => e.execute_batch(requests, config),
+            None => requests.iter().map(|_| ExecOutcome::failed()).collect(),
+        }
+    }
+
+    fn try_execute_batch(
+        &mut self,
+        requests: &[&Request],
+        config: &Config,
+    ) -> Result<Vec<ExecOutcome>> {
+        let Some(first) = requests.first() else {
+            return Ok(Vec::new());
+        };
+        assert!(
+            requests.iter().all(|r| r.net == first.net),
+            "mixed-network batch reached the executor: the worker's coalescing \
+             predicate must keep batches network-homogeneous"
+        );
+        match self.for_net(first.net) {
+            Some(e) => e.try_execute_batch(requests, config),
+            None => bail!("no executor bound for network {:?}", first.net),
+        }
     }
 }
 
@@ -128,6 +159,25 @@ mod tests {
         assert_eq!(map.inner[1].1.batches, 1, "one batch dispatch reached vit");
         assert_eq!(map.inner[0].1.batches, 0);
         assert!(map.execute_batch(&[], &cfg(Network::Vit)).is_empty(), "empty batch no-op");
+    }
+
+    #[test]
+    fn unbound_network_sheds_instead_of_panicking() {
+        let mut map =
+            NetExecutorMap::new(vec![(Network::Vgg16, Tally { latency: 1.0, batches: 0 })]);
+        let r = req(0, Network::Vit);
+        let err = map
+            .try_execute_batch(&[&r], &cfg(Network::Vit))
+            .expect_err("no vit binding: the fallible seam must error");
+        assert!(format!("{err:#}").contains("no executor bound"), "{err:#}");
+        // infallible paths degrade to the failed sentinel
+        assert!(map.execute(&r, &cfg(Network::Vit)).is_failed());
+        let outs = map.execute_batch(&[&r], &cfg(Network::Vit));
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].is_failed());
+        // the bound network still serves normally
+        let v = req(1, Network::Vgg16);
+        assert_eq!(map.execute(&v, &cfg(Network::Vgg16)).latency_ms, 1.0);
     }
 
     #[test]

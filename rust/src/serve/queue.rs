@@ -11,6 +11,7 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
+use crate::util::sync::{lock_clean, wait_clean};
 use crate::workload::TimedRequest;
 
 /// Counters reported by the queue at the end of a run.
@@ -58,7 +59,7 @@ impl AdmissionQueue {
     /// Non-blocking admission: `false` when the queue is full (the
     /// request is shed) or already closed.
     pub fn offer(&self, request: TimedRequest) -> bool {
-        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        let mut inner = lock_clean(&self.inner);
         if inner.closed || inner.deque.len() >= self.capacity {
             inner.stats.rejected += 1;
             return false;
@@ -90,7 +91,7 @@ impl AdmissionQueue {
     where
         F: Fn() -> Option<f64>,
     {
-        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        let mut inner = lock_clean(&self.inner);
         loop {
             if let Some(r) = inner.deque.pop_front() {
                 let now = now_ms();
@@ -103,7 +104,7 @@ impl AdmissionQueue {
             if inner.closed {
                 return None;
             }
-            inner = self.available.wait(inner).expect("queue lock poisoned");
+            inner = wait_clean(&self.available, inner);
         }
     }
 
@@ -113,7 +114,7 @@ impl AdmissionQueue {
     where
         F: FnOnce(&TimedRequest) -> bool,
     {
-        let mut inner = self.inner.lock().expect("queue lock poisoned");
+        let mut inner = lock_clean(&self.inner);
         let take = match inner.deque.front() {
             Some(front) => pred(front),
             None => false,
@@ -128,17 +129,17 @@ impl AdmissionQueue {
     /// Requests currently queued (the admission gate's backpressure
     /// signal).
     pub fn depth(&self) -> usize {
-        self.inner.lock().expect("queue lock poisoned").deque.len()
+        lock_clean(&self.inner).deque.len()
     }
 
     /// Close the queue: pending requests still drain, new offers fail.
     pub fn close(&self) {
-        self.inner.lock().expect("queue lock poisoned").closed = true;
+        lock_clean(&self.inner).closed = true;
         self.available.notify_all();
     }
 
     pub fn stats(&self) -> QueueStats {
-        self.inner.lock().expect("queue lock poisoned").stats
+        lock_clean(&self.inner).stats
     }
 }
 

@@ -64,6 +64,13 @@ pub enum ServeOutcome {
     /// (instead of panicking or silently misrouting it through another
     /// network's configurations) and counted as a QoS miss.
     UnknownNetwork,
+    /// The executor reported an error for this request's batch
+    /// ([`crate::controller::Executor::try_execute_batch`] returned
+    /// `Err`): the config didn't resolve, the backend failed, or no
+    /// executor was bound for the network.  The whole batch is shed —
+    /// recorded as a QoS miss, never a crash (shed-not-crash contract,
+    /// DESIGN.md §13).
+    ExecutorFailed,
 }
 
 /// One request's journey through the pipeline.
@@ -213,6 +220,14 @@ impl ServeReport {
         self.records
             .iter()
             .filter(|r| matches!(r.outcome, ServeOutcome::UnknownNetwork))
+            .count()
+    }
+
+    /// Requests shed because their batch's executor reported an error.
+    pub fn executor_failed(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::ExecutorFailed))
             .count()
     }
 
@@ -396,7 +411,8 @@ impl ServeReport {
             .join(", ");
         format!(
             "{} done / {} shed / {} backpressured / {} expired / {} policy-rejected / \
-             {} unknown-net on {} workers; QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; \
+             {} unknown-net / {} exec-failed on {} workers; QoS hit {:.0}%; \
+             p50 {:.0} ms p99 {:.0} ms; \
              {:.2} J/req; {} reconfigs, {} avoided ({} coalesced); {:.0} req/s; \
              {} store epoch(s); nets: {}",
             self.completed(),
@@ -405,6 +421,7 @@ impl ServeReport {
             self.expired_in_queue(),
             self.rejected_by_policy(),
             self.unknown_network(),
+            self.executor_failed(),
             self.workers,
             self.qos_hit_rate() * 100.0,
             self.latency_p50(),
@@ -600,6 +617,29 @@ mod tests {
         let vit = r.breakdown_for(Network::Vit);
         assert_eq!((vit.requests, vit.done, vit.unknown_network), (1, 0, 1));
         assert!(vit.mean_energy_j().is_nan());
+    }
+
+    #[test]
+    fn executor_failed_counts_as_shed_not_completed() {
+        let r = report(vec![
+            done(0, 100.0, 90.0, 2.0, false),
+            ServeRecord {
+                request_id: 1,
+                net: Network::Vgg16,
+                qos_ms: 100.0,
+                arrival_ms: 1.0,
+                worker: Some(0),
+                outcome: ServeOutcome::ExecutorFailed,
+            },
+        ]);
+        assert_eq!(r.executor_failed(), 1);
+        assert_eq!(r.completed(), 1);
+        assert!(!r.records[1].qos_met(), "a shed batch missed its objective");
+        assert_eq!(r.to_metric_set("x").len(), 1, "excluded from latency metrics");
+        let line = r.summary_line();
+        assert!(line.contains("1 exec-failed"), "{line}");
+        let vgg = r.breakdown_for(Network::Vgg16);
+        assert_eq!((vgg.requests, vgg.done), (2, 1));
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //! A worker owns its execution state end to end — the executor (its
 //! per-network runtime sessions on the real path), one config-reuse
 //! cache **per network** ([`CacheSet`]), and its slice of the records —
-//! and shares only the admission queue, the per-network map of
-//! hot-swappable stores ([`StoreMap`]), and the scheduling policy (one
-//! instance across all workers; usually stateless, but
-//! [`crate::controller::HysteresisPolicy`] carries interior-mutable
-//! sticky state).  Per request it: pops (shedding requests whose deadline
+//! and shares only the admission queue and the per-network map of
+//! hot-swappable stores ([`StoreMap`]).  Scheduling goes through a
+//! worker-owned [`PolicySet`]: stateless policies stay one shared
+//! instance across all workers and networks, while stateful ones
+//! ([`crate::controller::HysteresisPolicy`]) are forked per network so
+//! mixed traffic cannot thrash their sticky state (the policy-side
+//! mirror of [`CacheSet`]).  Per request it: pops (shedding requests whose deadline
 //! already expired in the queue), resolves the request's network to its
 //! store (recording [`ServeOutcome::UnknownNetwork`] when the map has no
 //! entry, instead of misrouting it through another network's front),
@@ -46,14 +48,12 @@
 //! real-time replay the budget shrinks with queue wait (ROADMAP
 //! "wait-aware scheduling").
 
-use std::time::Instant;
-
 use crate::adapt::{Sample, StoreMap, Telemetry};
-use crate::controller::{Executor, PolicyDecision, SchedulingPolicy};
+use crate::controller::{Executor, PolicyDecision, PolicySet};
 use crate::workload::Request;
 
 use super::cache::CacheSet;
-use super::clock::ServeClock;
+use super::clock::{ServeClock, Stopwatch};
 use super::queue::AdmissionQueue;
 use super::report::{ServeOutcome, ServeRecord};
 
@@ -64,7 +64,9 @@ pub struct Worker<'a, E: Executor> {
     /// Per-network map of hot-swappable Pareto stores; the serving
     /// network's store is snapshotted once per batch.
     pub stores: &'a StoreMap<'a>,
-    pub policy: &'a dyn SchedulingPolicy,
+    /// Per-network policy lanes: stateless policies shared, stateful
+    /// ones forked per network (mirrors `caches`).
+    pub policies: PolicySet<'a>,
     /// Maximum same-network same-config requests coalesced into one
     /// activation.
     pub max_batch: usize,
@@ -120,10 +122,13 @@ impl<'a, E: Executor> Worker<'a, E> {
             // coalescing, and entry lookup all resolve against it
             let snapshot = store.snapshot();
             let set = snapshot.set();
-            let t0 = Instant::now();
+            // the request's network selects its policy lane (a private
+            // fork for stateful policies, the shared instance otherwise)
+            let policy = self.policies.for_net(net);
+            let sw = Stopwatch::start();
             let budget_ms = self.clock.remaining_ms(&first, now);
-            let decision = self.policy.decide(set, budget_ms);
-            let select_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            let decision = policy.decide(set, budget_ms);
+            let select_ms = sw.elapsed_ms();
             let idx = match decision {
                 PolicyDecision::Run(idx) => idx,
                 PolicyDecision::Reject => {
@@ -153,7 +158,7 @@ impl<'a, E: Executor> Worker<'a, E> {
                 let same = self.queue.pop_if(|r| {
                     r.request.net == net
                         && !matches!(now, Some(n) if r.deadline_ms() <= n)
-                        && self.policy.probe(set, self.clock.remaining_ms(r, now))
+                        && policy.probe(set, clock.remaining_ms(r, now))
                             == PolicyDecision::Run(idx)
                 });
                 match same {
@@ -166,11 +171,24 @@ impl<'a, E: Executor> Worker<'a, E> {
             // (the per-network config-reuse cache makes the activation
             // free when the config is already live; batch-capable
             // executors amortize head compute across the flat
-            // [batch, ...] tensor)
+            // [batch, ...] tensor).  Both the cache lookup and the
+            // dispatch shed the batch on failure instead of panicking
+            // (shed-not-crash, DESIGN.md §13): the pipeline keeps
+            // serving and the report counts the loss.
             let entry = &set.entries()[idx];
-            let apply_ms = self.caches.get_mut(net).activate(&entry.config);
+            let Some(cache) = self.caches.get_mut(net) else {
+                self.shed_failed(&batch);
+                continue;
+            };
+            let apply_ms = cache.activate(&entry.config);
             let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
-            let outcomes = self.executor.execute_batch(&requests, &entry.config);
+            let outcomes = match self.executor.try_execute_batch(&requests, &entry.config) {
+                Ok(outcomes) => outcomes,
+                Err(_) => {
+                    self.shed_failed(&batch);
+                    continue;
+                }
+            };
             // hard check: a short outcome vector would silently drop
             // records for the batch tail via the zip below
             assert_eq!(outcomes.len(), batch.len(), "one outcome per batched request");
@@ -219,6 +237,22 @@ impl<'a, E: Executor> Worker<'a, E> {
             }
         }
     }
+
+    /// Record every request of a batch whose execution failed (missing
+    /// cache binding or executor error) as
+    /// [`ServeOutcome::ExecutorFailed`] — a shed, counted as a QoS miss.
+    fn shed_failed(&mut self, batch: &[crate::workload::TimedRequest]) {
+        for tr in batch {
+            self.records.push(ServeRecord {
+                request_id: tr.request.id,
+                net: tr.request.net,
+                qos_ms: tr.request.qos_ms,
+                arrival_ms: tr.arrival_ms,
+                worker: Some(self.id),
+                outcome: ServeOutcome::ExecutorFailed,
+            });
+        }
+    }
 }
 
 #[cfg(test)]
@@ -226,7 +260,7 @@ mod tests {
     use super::*;
     use crate::adapt::ConfigStore;
     use crate::controller::policy::ConfigSet;
-    use crate::controller::{ExecOutcome, PaperPolicy};
+    use crate::controller::{ExecOutcome, HysteresisPolicy, PaperPolicy};
     use crate::solver::ParetoEntry;
     use crate::space::{Config, Network, TpuMode};
     use crate::util::rng::Pcg32;
@@ -293,7 +327,7 @@ mod tests {
             id: 0,
             queue,
             stores,
-            policy: &PaperPolicy,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
             max_batch,
             clock: ServeClock::Virtual,
             caches: CacheSet::new(&stores.networks(), true, &mut rng),
@@ -372,7 +406,7 @@ mod tests {
         }
         queue.close();
         let mut w = worker(&queue, &stores, 4, 3);
-        w.clock = ServeClock::Real { t0: Instant::now(), scale: 1.0 };
+        w.clock = ServeClock::start(1.0);
         w.run();
         assert_eq!(w.records.len(), 2);
         assert!(
@@ -467,7 +501,7 @@ mod tests {
             id: 0,
             queue: &queue,
             stores: &stores,
-            policy: &PaperPolicy,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
             max_batch: 4,
             clock: ServeClock::Virtual,
             caches: CacheSet::new(&stores.networks(), true, &mut rng),
@@ -519,6 +553,58 @@ mod tests {
         );
         assert!(matches!(w.records[1].outcome, ServeOutcome::Done { .. }));
         assert_eq!(w.caches.stats().reconfigs, 1, "only the routable request activated");
+    }
+
+    /// Executor whose fallible seam errors on every dispatch — the
+    /// worker must shed each batch and keep draining the queue.
+    struct AlwaysFails;
+
+    impl Executor for AlwaysFails {
+        fn execute(&mut self, _request: &Request, _config: &Config) -> ExecOutcome {
+            ExecOutcome::failed()
+        }
+
+        fn try_execute_batch(
+            &mut self,
+            _requests: &[&Request],
+            _config: &Config,
+        ) -> anyhow::Result<Vec<ExecOutcome>> {
+            anyhow::bail!("backend down")
+        }
+    }
+
+    #[test]
+    fn executor_errors_shed_the_batch_and_serving_continues() {
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
+        let queue = AdmissionQueue::new(8);
+        for i in 0..3 {
+            assert!(queue.offer(tr(i, 500.0)));
+        }
+        queue.close();
+        let mut rng = Pcg32::seeded(11);
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            stores: &stores,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
+            max_batch: 2,
+            clock: ServeClock::Virtual,
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
+            executor: AlwaysFails,
+            telemetry: None,
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 3, "every request drained and accounted for");
+        for r in &w.records {
+            assert!(
+                matches!(r.outcome, ServeOutcome::ExecutorFailed),
+                "shed, not crashed: {:?}",
+                r.outcome
+            );
+            assert!(!r.qos_met(), "a shed batch is a QoS miss");
+        }
     }
 
     #[test]

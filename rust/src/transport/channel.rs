@@ -9,11 +9,12 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use super::frame::Frame;
+use crate::serve::clock::WallDeadline;
 
 /// Link shaping parameters (None = loopback, no delay).
 #[derive(Debug, Clone, Copy)]
@@ -36,7 +37,7 @@ impl LinkShaping {
 }
 
 struct Packet {
-    deliver_at: Instant,
+    deliver_at: WallDeadline,
     bytes: Vec<u8>,
 }
 
@@ -68,7 +69,7 @@ impl Endpoint {
             .shaping
             .map(|s| s.delivery_delay(bytes.len()))
             .unwrap_or(Duration::ZERO);
-        let packet = Packet { deliver_at: Instant::now() + delay, bytes };
+        let packet = Packet { deliver_at: WallDeadline::after(delay), bytes };
         if self.tx.send(packet).is_err() {
             bail!("peer endpoint dropped");
         }
@@ -77,7 +78,7 @@ impl Endpoint {
 
     /// Blocking receive of the next frame, honoring shaped delivery times.
     pub fn recv(&mut self, timeout: Duration) -> Result<Frame> {
-        let deadline = Instant::now() + timeout;
+        let deadline = WallDeadline::after(timeout);
         loop {
             // try to decode from the reassembly buffer first
             self.inbox.make_contiguous();
@@ -88,17 +89,13 @@ impl Endpoint {
             if self.closed {
                 bail!("stream closed mid-frame");
             }
-            let now = Instant::now();
-            if now >= deadline {
+            let Some(remaining) = deadline.remaining() else {
                 bail!("transport recv timeout after {timeout:?}");
-            }
-            match self.rx.recv_timeout(deadline - now) {
+            };
+            match self.rx.recv_timeout(remaining) {
                 Ok(packet) => {
                     // honor the shaped delivery time
-                    let now = Instant::now();
-                    if packet.deliver_at > now {
-                        std::thread::sleep(packet.deliver_at - now);
-                    }
+                    packet.deliver_at.sleep_until();
                     self.inbox.extend(packet.bytes);
                 }
                 Err(RecvTimeoutError::Timeout) => {
@@ -160,10 +157,10 @@ mod tests {
             bytes_per_s: 1e9,
         };
         let (a, mut b) = duplex(Some(shaping));
-        let t0 = Instant::now();
+        let sw = crate::serve::clock::Stopwatch::start();
         a.send(&Frame::tensor(&[1.0])).unwrap();
         b.recv(T).unwrap();
-        assert!(t0.elapsed() >= Duration::from_millis(18), "{:?}", t0.elapsed());
+        assert!(sw.elapsed() >= Duration::from_millis(18), "{:?}", sw.elapsed());
     }
 
     #[test]
@@ -174,10 +171,10 @@ mod tests {
         };
         let (a, mut b) = duplex(Some(shaping));
         let big = vec![0f32; 25_000]; // 100 KB
-        let t0 = Instant::now();
+        let sw = crate::serve::clock::Stopwatch::start();
         a.send(&Frame::tensor(&big)).unwrap();
         b.recv(T).unwrap();
-        assert!(t0.elapsed() >= Duration::from_millis(80), "{:?}", t0.elapsed());
+        assert!(sw.elapsed() >= Duration::from_millis(80), "{:?}", sw.elapsed());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! | [`bench`] | `criterion` (timed cases, JSON trajectory, enforce floors) | `benches/micro.rs`, CI perf gate |
 //! | [`hash`] | `fnv` (FNV-1a over `u64` streams) | layer seeds, tensor digests, `ConfigSet::digest` |
 //! | [`parallel`] | `rayon`-lite scoped row partitioning | reference-backend GEMM threading |
+//! | [`sync`] | poison-recovering lock helpers (shed, don't crash) | queue, telemetry, store, batch log |
 //!
 //! Determinism is the common contract: every RNG is an explicit seeded
 //! stream ([`rng::Pcg32::new(seed, stream)`](rng::Pcg32)), so every
@@ -29,3 +30,4 @@ pub mod table;
 pub mod bench;
 pub mod hash;
 pub mod parallel;
+pub mod sync;

@@ -1,0 +1,128 @@
+//! Poison-recovering lock helpers (dslint `no-panic-hot-path`,
+//! DESIGN.md §13).
+//!
+//! The serving stack's contract is *shedding, not crashing*: a worker
+//! that panicked while holding a lock must not cascade into every other
+//! worker panicking on `PoisonError`.  All of the data these locks
+//! protect (queue deques, telemetry rings, store snapshots, batch logs)
+//! is written transactionally — each critical section either completes
+//! its whole update or was a read — so the state behind a poisoned lock
+//! is still coherent and the right recovery is to keep serving with it.
+//! These helpers strip the poison flag and hand back the guard; the
+//! panic that poisoned the lock still surfaces through the pipeline's
+//! `join` handling, so failures are reported, not masked.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard from a poisoned lock.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering the guard from a poisoned lock.
+pub fn read_clean<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering the guard from a poisoned lock.
+pub fn write_clean<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Block on a condvar, recovering the guard from a poisoned lock.
+pub fn wait_clean<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Block on a condvar with a timeout; returns the guard and whether the
+/// wait timed out.
+pub fn wait_timeout_clean<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+    #[test]
+    fn helpers_behave_like_plain_locking_when_unpoisoned() {
+        let m = Mutex::new(1);
+        *lock_clean(&m) += 1;
+        assert_eq!(*lock_clean(&m), 2);
+        let l = RwLock::new(3);
+        assert_eq!(*read_clean(&l), 3);
+        *write_clean(&l) += 1;
+        assert_eq!(*read_clean(&l), 4);
+    }
+
+    #[test]
+    fn poisoned_mutex_recovers_with_coherent_state() {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // the panicking section made no partial write: state is intact
+        assert_eq!(*lock_clean(&m), 7);
+        *lock_clean(&m) += 1;
+        assert_eq!(*lock_clean(&m), 8);
+    }
+
+    #[test]
+    fn poisoned_rwlock_recovers_for_readers_and_writers() {
+        let l = Arc::new(RwLock::new(5));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*read_clean(&l), 5);
+        *write_clean(&l) = 6;
+        assert_eq!(*read_clean(&l), 6);
+    }
+
+    #[test]
+    fn wait_timeout_clean_reports_timeouts() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_clean(&m);
+        let (_g, timed_out) = wait_timeout_clean(&cv, g, Duration::from_millis(5));
+        assert!(timed_out, "nothing ever notifies: the wait must time out");
+    }
+
+    #[test]
+    fn wait_clean_wakes_on_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut ready = lock_clean(m);
+            while !*ready {
+                ready = wait_clean(cv, ready);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock_clean(m) = true;
+            cv.notify_all();
+        }
+        waiter.join().unwrap();
+    }
+}

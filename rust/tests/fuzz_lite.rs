@@ -1,0 +1,371 @@
+//! Fuzz-lite corpus tests for the two parsers that consume bytes from
+//! outside the process: the wire-frame decoder (`transport::frame`) and
+//! the CLI mix parser (`workload::mix`).
+//!
+//! This is not coverage-guided fuzzing — the container has no fuzzer and
+//! the repo takes no dependencies — but the same *contract* enforced
+//! deterministically: a seeded [`Pcg32`] drives structured random
+//! mutations (bit flips, truncations, splices, field-targeted
+//! corruption) over valid seeds, and every mutant must either decode to
+//! a self-consistent value or return a clean `Err` / "need more bytes".
+//! Panics, slice-index aborts, and unbounded allocations are the bugs
+//! this hunts; determinism means a failure reproduces from the seed
+//! printed in the assertion message.
+
+use dynasplit::space::Network;
+use dynasplit::transport::frame::{crc32, Frame, Kind, StreamMeta, MAGIC, MAX_PAYLOAD};
+use dynasplit::util::rng::Pcg32;
+use dynasplit::workload::NetworkMix;
+
+/// Mutation count per corpus entry.  High enough to hit every mutation
+/// class many times, low enough that the whole target runs in seconds.
+const ROUNDS: usize = 400;
+
+// ---------------------------------------------------------------------------
+// byte-level mutators
+// ---------------------------------------------------------------------------
+
+/// Apply one structured mutation to `buf`.  The mutation classes mirror
+/// what a corrupted or adversarial stream actually produces: single-bit
+/// noise, truncated reads, duplicated/spliced segments, and targeted
+/// garbage in the header fields the decoder trusts most.
+fn mutate(buf: &mut Vec<u8>, rng: &mut Pcg32) {
+    match rng.below(8) {
+        // single bit flip anywhere
+        0 if !buf.is_empty() => {
+            let i = rng.below(buf.len() as u64) as usize;
+            buf[i] ^= 1 << rng.below(8);
+        }
+        // overwrite one byte with a random value
+        1 if !buf.is_empty() => {
+            let i = rng.below(buf.len() as u64) as usize;
+            buf[i] = rng.below(256) as u8;
+        }
+        // truncate to a random prefix
+        2 => {
+            let keep = rng.below(buf.len() as u64 + 1) as usize;
+            buf.truncate(keep);
+        }
+        // drop a random interior byte (shift corruption)
+        3 if !buf.is_empty() => {
+            let i = rng.below(buf.len() as u64) as usize;
+            buf.remove(i);
+        }
+        // insert a random byte (shift corruption the other way)
+        4 => {
+            let i = rng.below(buf.len() as u64 + 1) as usize;
+            buf.insert(i, rng.below(256) as u8);
+        }
+        // splice: duplicate a random slice onto the tail (replay)
+        5 if !buf.is_empty() => {
+            let a = rng.below(buf.len() as u64) as usize;
+            let b = a + rng.below((buf.len() - a) as u64 + 1) as usize;
+            let slice = buf[a..b].to_vec();
+            buf.extend_from_slice(&slice);
+        }
+        // header attack: scribble over the length field (bytes 5..13)
+        6 if buf.len() >= 13 => {
+            for byte in &mut buf[5..13] {
+                if rng.chance(0.5) {
+                    *byte = rng.below(256) as u8;
+                }
+            }
+        }
+        // header attack: corrupt magic or kind (bytes 0..5)
+        _ if buf.len() >= 5 => {
+            let i = rng.below(5) as usize;
+            buf[i] = rng.below(256) as u8;
+        }
+        _ => buf.push(rng.below(256) as u8),
+    }
+}
+
+/// Frame corpus: one valid frame of every kind, plus edge payloads.
+fn frame_corpus() -> Vec<Vec<u8>> {
+    let meta = StreamMeta { network: "vgg16".into(), split: 9, gpu: true, tensor_len: 64 };
+    vec![
+        Frame::meta(&meta).encode(),
+        Frame::tensor(&[1.0, -2.5, 3.25, f32::MAX, f32::MIN_POSITIVE]).encode(),
+        Frame::tensor(&[]).encode(),
+        Frame::result(&[0.0; 64]).encode(),
+        Frame::shutdown().encode(),
+    ]
+}
+
+/// The decode contract on *arbitrary* bytes: never panic, and any
+/// accepted frame must be internally consistent and re-encodable.
+fn check_frame_decode(buf: &[u8], seed_note: &str) {
+    match Frame::decode(buf) {
+        Err(_) => {} // clean rejection
+        Ok(None) => {
+            // "need more bytes" is only legal while the buffer really
+            // could be a prefix of a within-cap frame.
+            if buf.len() >= 13 && buf[..4] == MAGIC {
+                let len = u64::from_le_bytes(buf[5..13].try_into().unwrap());
+                assert!(
+                    len <= MAX_PAYLOAD && (buf.len() as u64) < 13 + len + 4,
+                    "{seed_note}: decode said incomplete on a complete buffer"
+                );
+            }
+        }
+        Ok(Some((frame, used))) => {
+            assert!(used <= buf.len(), "{seed_note}: consumed past the buffer");
+            assert!(
+                frame.payload.len() as u64 <= MAX_PAYLOAD,
+                "{seed_note}: accepted an over-cap payload"
+            );
+            // accepted ⇒ checksum held ⇒ re-encode must byte-match the
+            // consumed region and re-decode to the same frame
+            let re = frame.encode();
+            assert_eq!(re.as_slice(), &buf[..used], "{seed_note}: encode(decode(b)) != b");
+            let (again, used2) = Frame::decode(&re).unwrap().expect("re-decode");
+            assert_eq!(again, frame, "{seed_note}: decode unstable under re-encode");
+            assert_eq!(used2, re.len());
+        }
+    }
+}
+
+#[test]
+fn frame_decode_survives_structured_mutation() {
+    let mut rng = Pcg32::new(0xf0a2_2026, 1);
+    for (ci, clean) in frame_corpus().iter().enumerate() {
+        // the unmutated seed must round-trip
+        let (f, used) = Frame::decode(clean).unwrap().expect("corpus entry decodes");
+        assert_eq!(used, clean.len());
+        assert_eq!(f.encode(), *clean);
+        for round in 0..ROUNDS {
+            let mut buf = clean.clone();
+            // stack 1..=3 mutations so shifted corruption composes
+            for _ in 0..rng.range_i64(1, 3) {
+                mutate(&mut buf, &mut rng);
+            }
+            check_frame_decode(&buf, &format!("corpus {ci} round {round}"));
+        }
+    }
+}
+
+#[test]
+fn frame_decode_survives_raw_garbage() {
+    // No valid seed at all: uniformly random buffers of assorted sizes.
+    let mut rng = Pcg32::new(0xf0a2_2026, 2);
+    for round in 0..ROUNDS {
+        let len = rng.below(96) as usize;
+        let mut buf = vec![0u8; len];
+        for b in &mut buf {
+            *b = rng.below(256) as u8;
+        }
+        // bias some rounds toward "almost valid": correct magic + kind
+        if rng.chance(0.5) && buf.len() >= 5 {
+            buf[..4].copy_from_slice(&MAGIC);
+            buf[4] = 1 + rng.below(4) as u8;
+        }
+        check_frame_decode(&buf, &format!("garbage round {round}"));
+    }
+}
+
+#[test]
+fn frame_decode_caps_claimed_length_without_allocating() {
+    // A 13-byte header claiming the cap exactly: legal prefix, decoder
+    // must wait for bytes (Ok(None)) — and crucially it must do so
+    // *without* allocating the claimed 64 MiB (decode only copies the
+    // payload once the bytes are actually present).
+    let mut header = Vec::new();
+    header.extend_from_slice(&MAGIC);
+    header.push(Kind::Tensor as u8);
+    header.extend_from_slice(&MAX_PAYLOAD.to_le_bytes());
+    assert!(Frame::decode(&header).unwrap().is_none());
+
+    // One past the cap: the corrupted-length-prefix guard must fire
+    // instead of waiting forever for 64 MiB that will never arrive.
+    let mut over = Vec::new();
+    over.extend_from_slice(&MAGIC);
+    over.push(Kind::Tensor as u8);
+    over.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    let err = Frame::decode(&over).unwrap_err();
+    assert!(format!("{err}").contains("length prefix"), "{err}");
+
+    // And u64::MAX, the classic all-0xFF corruption
+    let mut max = Vec::new();
+    max.extend_from_slice(&MAGIC);
+    max.push(Kind::Tensor as u8);
+    max.extend_from_slice(&u64::MAX.to_le_bytes());
+    assert!(Frame::decode(&max).is_err());
+}
+
+#[test]
+fn stream_meta_decode_survives_structured_mutation() {
+    let seeds = [
+        StreamMeta { network: "vgg16".into(), split: 9, gpu: true, tensor_len: 64 },
+        StreamMeta { network: "vit".into(), split: 0, gpu: false, tensor_len: u64::MAX },
+        StreamMeta { network: String::new(), split: u32::MAX, gpu: true, tensor_len: 0 },
+    ];
+    let mut rng = Pcg32::new(0xf0a2_2026, 3);
+    for (ci, m) in seeds.iter().enumerate() {
+        let clean = m.encode();
+        assert_eq!(&StreamMeta::decode(&clean).unwrap(), m);
+        for round in 0..ROUNDS {
+            let mut buf = clean.clone();
+            for _ in 0..rng.range_i64(1, 3) {
+                mutate(&mut buf, &mut rng);
+            }
+            // contract: error, or a meta stable under encode∘decode.
+            // (Byte-identity is deliberately NOT required: the decoder
+            // is lenient on the gpu flag — any nonzero byte is `true` —
+            // so a mutant gpu byte of 2 re-encodes as 1.)
+            if let Ok(decoded) = StreamMeta::decode(&buf) {
+                let again = StreamMeta::decode(&decoded.encode())
+                    .expect("re-encoded meta must decode");
+                assert_eq!(again, decoded, "corpus {ci} round {round}: decode unstable");
+            }
+        }
+    }
+}
+
+#[test]
+fn stream_meta_decode_survives_raw_garbage() {
+    let mut rng = Pcg32::new(0xf0a2_2026, 4);
+    for round in 0..ROUNDS {
+        let len = rng.below(64) as usize;
+        let mut buf = vec![0u8; len];
+        for b in &mut buf {
+            *b = rng.below(256) as u8;
+        }
+        // the exact-length check means most garbage is rejected; what is
+        // accepted must be stable under encode∘decode
+        if let Ok(decoded) = StreamMeta::decode(&buf) {
+            let again = StreamMeta::decode(&decoded.encode()).expect("re-decode");
+            assert_eq!(again, decoded, "garbage round {round}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NetworkMix::parse
+// ---------------------------------------------------------------------------
+
+/// Character pool for string mutations: everything the mix grammar uses
+/// plus digits, signs, and separators that stress the number parser.
+const MIX_CHARS: &[char] = &[
+    'v', 'g', 'i', 't', '1', '6', '0', '5', '9', '.', '=', ',', ' ', '-', '+', 'e', 'E', 'n',
+    'a', 'N', 'f', 'x', '_', ';', ':',
+];
+
+fn mutate_str(s: &mut String, rng: &mut Pcg32) {
+    let chars: Vec<char> = s.chars().collect();
+    let mut out = chars.clone();
+    match rng.below(5) {
+        0 if !out.is_empty() => {
+            // replace one char
+            let i = rng.below(out.len() as u64) as usize;
+            out[i] = *rng.choose(MIX_CHARS);
+        }
+        1 if !out.is_empty() => {
+            // delete one char
+            let i = rng.below(out.len() as u64) as usize;
+            out.remove(i);
+        }
+        2 => {
+            // insert one char
+            let i = rng.below(out.len() as u64 + 1) as usize;
+            out.insert(i, *rng.choose(MIX_CHARS));
+        }
+        3 if !out.is_empty() => {
+            // duplicate a random span onto the tail (e.g. repeated nets)
+            let a = rng.below(out.len() as u64) as usize;
+            let b = a + rng.below((out.len() - a) as u64 + 1) as usize;
+            let span: Vec<char> = out[a..b].to_vec();
+            out.extend(span);
+        }
+        _ => {
+            // truncate
+            let keep = rng.below(out.len() as u64 + 1) as usize;
+            out.truncate(keep);
+        }
+    }
+    *s = out.into_iter().collect();
+}
+
+/// The parse contract: never panic, and any accepted mix is normalized —
+/// positive shares over distinct known networks summing to 1.
+fn check_mix(s: &str, seed_note: &str) {
+    if let Ok(mix) = NetworkMix::parse(s) {
+        let nets = mix.networks();
+        assert!(!nets.is_empty(), "{seed_note}: accepted an empty mix from {s:?}");
+        let mut total = 0.0;
+        for (i, &net) in nets.iter().enumerate() {
+            assert!(
+                !nets[..i].contains(&net),
+                "{seed_note}: duplicate network {} from {s:?}",
+                net.name()
+            );
+            let w = mix.share(net);
+            assert!(w > 0.0 && w <= 1.0, "{seed_note}: share {w} for {} from {s:?}", net.name());
+            total += w;
+        }
+        assert!((total - 1.0).abs() < 1e-9, "{seed_note}: shares sum to {total} from {s:?}");
+    }
+}
+
+#[test]
+fn network_mix_parse_survives_structured_mutation() {
+    let corpus = ["vgg16=0.7,vit=0.3", "vit=1", "vgg16=2,vit=6", " vgg16 = 0.5 , vit = 0.5 "];
+    let mut rng = Pcg32::new(0xf0a2_2026, 5);
+    for (ci, clean) in corpus.iter().enumerate() {
+        // unmutated seeds must parse and normalize
+        let mix = NetworkMix::parse(clean).expect("corpus entry parses");
+        let total: f64 = mix.networks().iter().map(|&n| mix.share(n)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        for round in 0..ROUNDS {
+            let mut s = (*clean).to_string();
+            for _ in 0..rng.range_i64(1, 4) {
+                mutate_str(&mut s, &mut rng);
+            }
+            check_mix(&s, &format!("corpus {ci} round {round}"));
+        }
+    }
+}
+
+#[test]
+fn network_mix_parse_survives_random_strings() {
+    let mut rng = Pcg32::new(0xf0a2_2026, 6);
+    for round in 0..ROUNDS {
+        let len = rng.below(40) as usize;
+        let s: String = (0..len).map(|_| *rng.choose(MIX_CHARS)).collect();
+        check_mix(&s, &format!("random round {round}"));
+    }
+}
+
+#[test]
+fn network_mix_parse_rejects_pathological_numbers() {
+    // f64::parse accepts these spellings; NetworkMix::new must still
+    // reject non-finite and negative weights and all-zero mixes.
+    for s in [
+        "vgg16=NaN",
+        "vgg16=inf",
+        "vgg16=-inf,vit=1",
+        "vgg16=-0.5,vit=0.5",
+        "vgg16=0,vit=0",
+        "vgg16=1e400", // overflows to +inf
+    ] {
+        assert!(NetworkMix::parse(s).is_err(), "accepted {s:?}");
+    }
+    // but extreme-yet-finite weights normalize fine
+    let mix = NetworkMix::parse("vgg16=1e300,vit=1e297").expect("finite weights parse");
+    assert!((mix.share(Network::Vgg16) - 1.0 / 1.001).abs() < 1e-6);
+}
+
+#[test]
+fn crc32_mutation_detection_rate() {
+    // Sanity on the integrity primitive itself: every 1-bit payload
+    // corruption must change the CRC (CRC-32 detects all single-bit
+    // errors by construction).
+    let payload: Vec<u8> = (0..64u8).collect();
+    let clean = crc32(&payload);
+    for i in 0..payload.len() {
+        for bit in 0..8 {
+            let mut p = payload.clone();
+            p[i] ^= 1 << bit;
+            assert_ne!(crc32(&p), clean, "byte {i} bit {bit}");
+        }
+    }
+}

@@ -95,8 +95,8 @@ fn vit_front_has_no_tpu_configs() {
 fn controller_scales_to_large_workloads() {
     // 5,000 pool-mode requests in well under a minute (L3 perf floor).
     let ctx = Ctx::synthetic();
-    let t0 = std::time::Instant::now();
+    let sw = dynasplit::serve::Stopwatch::start();
     let exp = dynasplit::experiments::simulation::run(&ctx, Network::Vgg16, 5000, 100, 6);
     assert_eq!(exp.strategies.dynasplit.len(), 5000);
-    assert!(t0.elapsed().as_secs() < 60, "{:?}", t0.elapsed());
+    assert!(sw.elapsed().as_secs() < 60, "{:?}", sw.elapsed());
 }

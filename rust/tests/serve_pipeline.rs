@@ -15,7 +15,7 @@ use std::time::Duration;
 use dynasplit::adapt::{ConfigStore, StoreMap};
 use dynasplit::controller::policy::ConfigSet;
 use dynasplit::controller::{
-    ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor, PolicyDecision,
+    ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor, PolicyDecision, PolicySet,
     SchedulingPolicy, StrictDeadlinePolicy,
 };
 use dynasplit::model::manifest::LayerEntry;
@@ -253,7 +253,7 @@ fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
             id: 0,
             queue: &queue,
             stores: &stores,
-            policy: &PaperPolicy,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
             max_batch,
             clock: ServeClock::Virtual,
             caches: CacheSet::single(Network::Vgg16, ReuseCache::new(Pcg32::seeded(3))),
@@ -422,6 +422,95 @@ fn hysteresis_policy_composes_with_the_pipeline_and_cuts_reconfigurations() {
             other => panic!("request {} not completed: {other:?}", r.request_id),
         }
     }
+}
+
+/// Interleaved two-network traffic with per-network oscillating
+/// deadlines: each network's policy lane settles on its own sticky
+/// config.  Before the per-worker per-network [`PolicySet`], the one
+/// shared hysteresis slot was keyed by the live set's digest, so every
+/// vgg16↔vit flip reset it — and the oscillating deadlines then drove
+/// a reconfiguration on nearly every request, defeating the policy's
+/// whole purpose under `serve --mix`.
+#[test]
+fn hysteresis_keeps_per_network_stickiness_under_interleaved_mix() {
+    use dynasplit::controller::HysteresisPolicy;
+    use dynasplit::solver::ParetoEntry;
+
+    let entry = |net: Network, latency: f64, energy: f64, split: usize| ParetoEntry {
+        config: Config { net, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split },
+        latency_ms: latency,
+        energy_j: energy,
+        accuracy: 0.95,
+    };
+    // per network: A (frugal, the qos-1000 bucket optimum), B (the
+    // qos-400 bucket optimum, in energy slack for both deadlines), C
+    // (fast fallback).  Fresh policy state flips A/B as the deadline
+    // oscillates 400/1000; sticky state keeps B throughout.
+    let front = |net: Network, splits: [usize; 3]| {
+        ConfigSet::new(vec![
+            entry(net, 450.0, 2.0, splits[0]),
+            entry(net, 340.0, 4.0, splits[1]),
+            entry(net, 100.0, 60.0, splits[2]),
+        ])
+    };
+    let vgg_store = ConfigStore::new(front(Network::Vgg16, [3, 9, 15]));
+    let vit_store = ConfigStore::new(front(Network::Vit, [2, 4, 7]));
+    let mut stores = StoreMap::new();
+    stores.insert(Network::Vgg16, &vgg_store);
+    stores.insert(Network::Vit, &vit_store);
+
+    // strict interleave vgg,vit,vgg,vit…; each network sees the
+    // oscillating 400/1000 deadline sequence
+    let tl: Vec<TimedRequest> = (0..40)
+        .map(|i| TimedRequest {
+            request: Request {
+                id: i,
+                net: if i % 2 == 0 { Network::Vgg16 } else { Network::Vit },
+                qos_ms: if (i / 2) % 2 == 0 { 400.0 } else { 1000.0 },
+                inferences: 1,
+                seed: i as u64,
+            },
+            arrival_ms: i as f64,
+        })
+        .collect();
+    let cfg = PipelineConfig {
+        workers: 1, // deterministic reconfiguration counting
+        queue_capacity: 64,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 9,
+        reuse: true,
+    };
+    let tb = Testbed::synthetic();
+    let policy = HysteresisPolicy::paper(Network::Vgg16);
+    let report = run_pipeline_stores(&stores, &policy, &tl, &cfg, None, None, |_| {
+        Ok(PerRequestSimExecutor { testbed: &tb, stream: 29 })
+    })
+    .expect("mixed pipeline run");
+
+    assert_eq!(report.completed(), 40);
+    // one cold activation per network, then every batch reuses the live
+    // config — interleaving networks no longer resets the sticky state
+    assert_eq!(
+        report.cache.reconfigs, 2,
+        "per-network policy lanes settle: {} reconfigs",
+        report.cache.reconfigs
+    );
+    assert_eq!(report.cache.hits, 38, "all later activations are cache hits");
+    // each network settled on *its own* B entry
+    for r in &report.records {
+        match &r.outcome {
+            ServeOutcome::Done { config, .. } => {
+                assert_eq!(config.net, r.net, "no cross-network routing");
+                let want = if r.net == Network::Vgg16 { 9 } else { 4 };
+                assert_eq!(config.split, want, "request {} settled on B", r.request_id);
+            }
+            other => panic!("request {} not completed: {other:?}", r.request_id),
+        }
+    }
+    // per-network accounting reconciles with the interleave
+    assert_eq!(report.breakdown_for(Network::Vgg16).requests, 20);
+    assert_eq!(report.breakdown_for(Network::Vit).requests, 20);
 }
 
 /// Per-network Pareto front from a synthetic-testbed search.
@@ -616,7 +705,7 @@ fn mixed_batches_are_always_network_homogeneous() {
         id: 0,
         queue: &queue,
         stores: &stores,
-        policy: &PaperPolicy,
+        policies: PolicySet::new(&PaperPolicy, &stores.networks()),
         max_batch: 4,
         clock: ServeClock::Virtual,
         caches: CacheSet::new(&stores.networks(), true, &mut rng),

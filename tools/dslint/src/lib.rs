@@ -1,0 +1,1033 @@
+//! dslint — repo-invariant linter for the DynaSplit serving stack.
+//!
+//! A zero-dependency, token-level scanner.  It is *not* a Rust parser:
+//! the lexer blanks comments and string/char literals (so sites inside
+//! them never match), then a tiny tokenizer turns the rest into
+//! ident/punct tokens that the rules pattern-match against.  That is
+//! enough to enforce the repo invariants catalogued in DESIGN.md §13
+//! with rustc-style `file:line:col` diagnostics, without pulling syn or
+//! the clippy toolchain into an offline build.
+//!
+//! Rule scoping keys on *repo-relative* paths (`rust/src/serve/...`),
+//! which is how both the CLI (run from the repo root) and the fixture
+//! tests (virtual paths) feed files in.
+//!
+//! Escape hatch: a violation is suppressed by
+//! `// dslint::allow(rule-name): reason` on the same line or anywhere
+//! in the contiguous `//` comment block directly above it.  The reason
+//! is mandatory — an allow without one (or naming an unknown rule) is
+//! itself a `malformed-allow` violation.
+
+use std::fmt;
+
+/// Every enforced rule, with the one-line summary `--rules` prints.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "no-partial-cmp-unwrap",
+        "float ordering goes through total_cmp, never partial_cmp (NaN panics)",
+    ),
+    (
+        "clock-discipline",
+        "Instant::now/SystemTime::now only in serve/clock.rs and util/bench.rs; \
+         everyone else uses Stopwatch/WallDeadline/ServeClock",
+    ),
+    (
+        "no-panic-hot-path",
+        "no unwrap/expect/panic!/todo!/unimplemented! in non-test code under \
+         serve/, adapt/, runtime/kernels.rs (shed, don't crash)",
+    ),
+    (
+        "deterministic-iteration",
+        "no HashMap/HashSet in modules whose iteration order reaches reports \
+         or digests; use BTreeMap/BTreeSet or Vec",
+    ),
+    (
+        "zero-alloc-hot-path",
+        "no Vec::new/vec!/to_vec/clone/collect inside `*_in`/`*_into` \
+         functions — those signatures promise caller-owned buffers",
+    ),
+    (
+        "guard-across-blocking",
+        "a mutex/rwlock guard must be dropped before send/recv/join/wait on \
+         the same scope's channels or threads",
+    ),
+    (
+        "no-thread-spawn",
+        "std::thread::spawn forbidden; use thread::scope so joins are \
+         structural (documented owner-joined handles may allow-escape)",
+    ),
+    (
+        "bench-determinism",
+        "Pcg32 seeds must be literals or config — never derived from elapsed \
+         time (reruns must replay bit-identically)",
+    ),
+    (
+        "malformed-allow",
+        "dslint::allow(...) escapes must name a known rule and give a reason",
+    ),
+];
+
+/// One violation, rendered rustc-style as `file:line:col: rule: message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}: {}: {}", self.file, self.line, self.col, self.rule, self.message)
+    }
+}
+
+fn rule_name(name: &str) -> Option<&'static str> {
+    RULES.iter().map(|(n, _)| *n).find(|n| *n == name)
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: blank comments and literals, collect allow-escapes.
+// ---------------------------------------------------------------------------
+
+struct Stripped {
+    /// Same byte length as the input, with every comment and string/char
+    /// literal byte (except newlines) replaced by a space, so token
+    /// positions in `code` are positions in the original text.
+    code: Vec<u8>,
+    /// `(byte_pos_of_comment, rule)` for each well-formed allow.
+    allows: Vec<(usize, &'static str)>,
+    /// Byte positions of malformed `dslint::allow` escapes.
+    malformed: Vec<usize>,
+}
+
+/// Parse `dslint::allow(rule): reason` out of one comment's text.
+/// Returns `Ok(Some(rule))` for a well-formed allow, `Ok(None)` when the
+/// comment has no allow at all, `Err(())` when an allow is present but
+/// malformed (unknown rule, or missing `: reason`).
+fn parse_allow(comment: &str) -> Result<Option<&'static str>, ()> {
+    const NEEDLE: &str = "dslint::allow(";
+    let Some(at) = comment.find(NEEDLE) else {
+        return Ok(None);
+    };
+    let rest = &comment[at + NEEDLE.len()..];
+    let Some(close) = rest.find(')') else {
+        return Err(());
+    };
+    let name = rest[..close].trim();
+    if name.is_empty() || !name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-') {
+        return Err(());
+    }
+    let Some(rule) = rule_name(name) else {
+        return Err(());
+    };
+    let tail = rest[close + 1..].trim_start();
+    let Some(reason) = tail.strip_prefix(':') else {
+        return Err(());
+    };
+    if reason.trim().is_empty() {
+        return Err(());
+    }
+    Ok(Some(rule))
+}
+
+fn strip(text: &str) -> Stripped {
+    let b = text.as_bytes();
+    let mut code = b.to_vec();
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    let n = b.len();
+    let mut i = 0;
+
+    // Blank bytes [from, to) except newlines (position-preserving).
+    let blank = |code: &mut [u8], from: usize, to: usize| {
+        for p in from..to {
+            if code[p] != b'\n' {
+                code[p] = b' ';
+            }
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            // Line comment: scan to end of line, parse any allow-escape.
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            let comment = &text[start..i];
+            match parse_allow(comment) {
+                Ok(Some(rule)) => allows.push((start, rule)),
+                Ok(None) => {}
+                Err(()) => malformed.push(start),
+            }
+            blank(&mut code, start, i);
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // Block comment, nesting like rustc.
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut code, start, i);
+        } else if (c == b'r' || c == b'b')
+            && raw_string_open(b, i).is_some()
+        {
+            // Raw string r"...", r#"..."#, br#"..."# — no escapes; closed
+            // by a quote followed by the same number of hashes.
+            let (body_start, hashes) = raw_string_open(b, i).unwrap();
+            let start = i;
+            i = body_start;
+            loop {
+                if i >= n {
+                    break;
+                }
+                if b[i] == b'"' && b[i + 1..].len() >= hashes
+                    && b[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#')
+                {
+                    i += 1 + hashes;
+                    break;
+                }
+                i += 1;
+            }
+            blank(&mut code, start, i);
+        } else if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            // Plain or byte string with backslash escapes.
+            let start = i;
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            let end = i.min(n);
+            blank(&mut code, start, end);
+            i = end;
+        } else if c == b'\'' {
+            // Char literal vs lifetime: '\...' or 'c' (third byte a close
+            // quote) is a literal; anything else is a lifetime, left alone.
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let start = i;
+                i += 2; // skip the backslash'd byte
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                blank(&mut code, start, i);
+            } else if i + 2 < n && b[i + 2] == b'\'' {
+                blank(&mut code, i, i + 3);
+                i += 3;
+            } else {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+
+    Stripped { code, allows, malformed }
+}
+
+/// `Some((body_start, n_hashes))` when position `i` opens a raw string.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn line_col(text: &[u8], pos: usize) -> (usize, usize) {
+    let mut line = 1;
+    let mut col = 1;
+    for &c in &text[..pos.min(text.len())] {
+        if c == b'\n' {
+            line += 1;
+            col = 1;
+        } else {
+            col += 1;
+        }
+    }
+    (line, col)
+}
+
+// ---------------------------------------------------------------------------
+// Tokenizer over blanked code.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct Tok {
+    start: usize,
+    end: usize,
+    /// 0 for an identifier/number token, otherwise the punct byte.
+    punct: u8,
+}
+
+fn tokenize(code: &[u8]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let n = code.len();
+    while i < n {
+        let c = code[i];
+        if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c.is_ascii_alphanumeric() || c == b'_' {
+            let start = i;
+            while i < n && (code[i].is_ascii_alphanumeric() || code[i] == b'_') {
+                i += 1;
+            }
+            toks.push(Tok { start, end: i, punct: 0 });
+        } else {
+            toks.push(Tok { start: i, end: i + 1, punct: c });
+            i += 1;
+        }
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------------
+// Scan context: path scoping, test regions, allow-aware emission.
+// ---------------------------------------------------------------------------
+
+struct Ctx<'a> {
+    rel: &'a str,
+    code: &'a [u8],
+    toks: &'a [Tok],
+    /// 1-indexed: is this raw source line a `//`-comment line (for the
+    /// upward allow walk)?
+    comment_line: Vec<bool>,
+    /// `(line, rule)` of each well-formed allow.
+    allows: Vec<(usize, &'static str)>,
+    /// Byte spans of `#[cfg(test)] mod ... { ... }` regions.
+    test_spans: Vec<(usize, usize)>,
+    diags: Vec<Diagnostic>,
+}
+
+impl<'a> Ctx<'a> {
+    fn ident(&self, i: usize) -> &'a [u8] {
+        match self.toks.get(i) {
+            Some(t) if t.punct == 0 => &self.code[t.start..t.end],
+            _ => b"",
+        }
+    }
+
+    fn is_ident(&self, i: usize, s: &str) -> bool {
+        i < self.toks.len() && self.ident(i) == s.as_bytes()
+    }
+
+    fn is_punct(&self, i: usize, c: u8) -> bool {
+        i < self.toks.len() && self.toks[i].punct == c
+    }
+
+    fn in_test_span(&self, pos: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| pos >= a && pos < b)
+    }
+
+    fn is_test_file(&self) -> bool {
+        self.rel.starts_with("rust/tests/") || self.rel.contains("/fixtures/")
+    }
+
+    /// True when `pos` is exempt from rules that only bind production code.
+    fn is_test_code(&self, pos: usize) -> bool {
+        self.is_test_file() || self.in_test_span(pos)
+    }
+
+    fn allowed_at(&self, line: usize, rule: &str) -> bool {
+        self.allows.iter().any(|&(l, r)| l == line && r == rule)
+    }
+
+    fn emit(&mut self, pos: usize, rule: &'static str, message: String) {
+        let (line, col) = line_col(self.code, pos);
+        // Same-line allow (trailing comment), then walk up through the
+        // contiguous `//` comment block directly above the flagged line.
+        if self.allowed_at(line, rule) {
+            return;
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            if !self.comment_line.get(l).copied().unwrap_or(false) {
+                break;
+            }
+            if self.allowed_at(l, rule) {
+                return;
+            }
+        }
+        self.diags.push(Diagnostic { file: self.rel.to_string(), line, col, rule, message });
+    }
+
+    /// Token index of the `}` matching the `{` at token index `open`.
+    fn match_brace(&self, open: usize) -> usize {
+        let mut depth = 0i64;
+        let mut i = open;
+        while i < self.toks.len() {
+            match self.toks[i].punct {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        self.toks.len() - 1
+    }
+
+    /// Token index of the `)` matching the `(` at token index `open`.
+    fn match_paren(&self, open: usize) -> usize {
+        let mut depth = 0i64;
+        let mut i = open;
+        while i < self.toks.len() {
+            match self.toks[i].punct {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        self.toks.len() - 1
+    }
+}
+
+/// Byte spans of `#[cfg(test)] mod name { ... }` blocks.
+fn test_regions(ctx: &Ctx<'_>) -> Vec<(usize, usize)> {
+    let toks = ctx.toks;
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i + 7 < toks.len() {
+        let hit = ctx.is_punct(i, b'#')
+            && ctx.is_punct(i + 1, b'[')
+            && ctx.is_ident(i + 2, "cfg")
+            && ctx.is_punct(i + 3, b'(')
+            && ctx.is_ident(i + 4, "test")
+            && ctx.is_punct(i + 5, b')')
+            && ctx.is_punct(i + 6, b']');
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7;
+        if ctx.is_ident(j, "pub") {
+            j += 1;
+        }
+        if !(ctx.is_ident(j, "mod") && j + 1 < toks.len() && toks[j + 1].punct == 0) {
+            i += 1;
+            continue;
+        }
+        let mut k = j + 2;
+        while k < toks.len() && toks[k].punct != b'{' {
+            // tolerate nothing between `mod name` and `{` beyond ws
+            break;
+        }
+        if k < toks.len() && toks[k].punct == b'{' {
+            let close = ctx.match_brace(k);
+            spans.push((toks[i].start, toks[close].end));
+            i = close + 1;
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------------
+// Rules.
+// ---------------------------------------------------------------------------
+
+const HOT_PATHS: &[&str] = &["rust/src/serve/", "rust/src/adapt/"];
+const HOT_FILES: &[&str] = &["rust/src/runtime/kernels.rs"];
+const CLOCK_EXEMPT: &[&str] = &["rust/src/serve/clock.rs", "rust/src/util/bench.rs"];
+const DIGEST_MODULES: &[&str] = &[
+    "rust/src/controller/policy.rs",
+    "rust/src/adapt/store.rs",
+    "rust/src/serve/report.rs",
+    "rust/src/metrics/mod.rs",
+    "rust/src/report/mod.rs",
+    "rust/src/util/hash.rs",
+];
+
+fn in_hot_path(rel: &str) -> bool {
+    HOT_PATHS.iter().any(|p| rel.starts_with(p)) || HOT_FILES.contains(&rel)
+}
+
+fn rule_partial_cmp(ctx: &mut Ctx<'_>) {
+    for i in 0..ctx.toks.len() {
+        if ctx.is_ident(i, "partial_cmp") {
+            ctx.emit(
+                ctx.toks[i].start,
+                "no-partial-cmp-unwrap",
+                "float ordering via partial_cmp; use total_cmp (NaN-total, never panics)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn rule_clock(ctx: &mut Ctx<'_>) {
+    if CLOCK_EXEMPT.contains(&ctx.rel) {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        let which = if ctx.is_ident(i, "Instant") {
+            "Instant"
+        } else if ctx.is_ident(i, "SystemTime") {
+            "SystemTime"
+        } else {
+            continue;
+        };
+        if ctx.is_punct(i + 1, b':') && ctx.is_punct(i + 2, b':') && ctx.is_ident(i + 3, "now") {
+            ctx.emit(
+                ctx.toks[i].start,
+                "clock-discipline",
+                format!(
+                    "{which}::now outside serve/clock.rs; use Stopwatch, WallDeadline or \
+                     ServeClock so time is a mockable seam"
+                ),
+            );
+        }
+    }
+}
+
+fn rule_no_panic(ctx: &mut Ctx<'_>) {
+    if !in_hot_path(ctx.rel) {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        let pos = ctx.toks[i].start;
+        if ctx.is_test_code(pos) {
+            continue;
+        }
+        if ctx.is_punct(i, b'.')
+            && (ctx.is_ident(i + 1, "unwrap") || ctx.is_ident(i + 1, "expect"))
+            && ctx.is_punct(i + 2, b'(')
+        {
+            let name = String::from_utf8_lossy(ctx.ident(i + 1)).into_owned();
+            ctx.emit(
+                pos,
+                "no-panic-hot-path",
+                format!(".{name}() in a hot-path module; shed the request or propagate an error"),
+            );
+        } else if (ctx.is_ident(i, "panic")
+            || ctx.is_ident(i, "todo")
+            || ctx.is_ident(i, "unimplemented"))
+            && ctx.is_punct(i + 1, b'!')
+        {
+            let name = String::from_utf8_lossy(ctx.ident(i)).into_owned();
+            ctx.emit(
+                pos,
+                "no-panic-hot-path",
+                format!("{name}! in a hot-path module; shed the request or propagate an error"),
+            );
+        }
+    }
+}
+
+fn rule_deterministic_iteration(ctx: &mut Ctx<'_>) {
+    if !DIGEST_MODULES.contains(&ctx.rel) {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        let which = if ctx.is_ident(i, "HashMap") {
+            "HashMap"
+        } else if ctx.is_ident(i, "HashSet") {
+            "HashSet"
+        } else {
+            continue;
+        };
+        ctx.emit(
+            ctx.toks[i].start,
+            "deterministic-iteration",
+            format!(
+                "{which} in a digest/report module; iteration order feeds reports — use \
+                 BTreeMap/BTreeSet or a Vec"
+            ),
+        );
+    }
+}
+
+fn rule_zero_alloc(ctx: &mut Ctx<'_>) {
+    let toks_len = ctx.toks.len();
+    let mut i = 0;
+    while i < toks_len {
+        if !ctx.is_ident(i, "fn") {
+            i += 1;
+            continue;
+        }
+        let Some(name_tok) = ctx.toks.get(i + 1) else {
+            break;
+        };
+        if name_tok.punct != 0 {
+            i += 1;
+            continue;
+        }
+        let name = String::from_utf8_lossy(&ctx.code[name_tok.start..name_tok.end]).into_owned();
+        let hot_sig = name.ends_with("_in") || name.ends_with("_into");
+        let sig_ok = ctx.is_punct(i + 2, b'(') || ctx.is_punct(i + 2, b'<');
+        if !(hot_sig && sig_ok) {
+            i += 1;
+            continue;
+        }
+        // Find the body: first `{` unless a `;` comes first (trait decl).
+        let mut j = i + 2;
+        let mut open = None;
+        while j < toks_len {
+            match ctx.toks[j].punct {
+                b';' => break,
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                _ => j += 1,
+            }
+        }
+        let Some(open) = open else {
+            i = j + 1;
+            continue;
+        };
+        let close = ctx.match_brace(open);
+        let mut hits = Vec::new();
+        for k in open..close {
+            let pos = ctx.toks[k].start;
+            if ctx.is_test_code(pos) {
+                continue;
+            }
+            if ctx.is_ident(k, "Vec")
+                && ctx.is_punct(k + 1, b':')
+                && ctx.is_punct(k + 2, b':')
+                && ctx.is_ident(k + 3, "new")
+            {
+                hits.push((pos, "Vec::new"));
+            } else if ctx.is_ident(k, "vec") && ctx.is_punct(k + 1, b'!') {
+                hits.push((pos, "vec!"));
+            } else if ctx.is_punct(k, b'.') && ctx.is_ident(k + 1, "to_vec") && ctx.is_punct(k + 2, b'(') {
+                hits.push((pos, ".to_vec()"));
+            } else if ctx.is_punct(k, b'.') && ctx.is_ident(k + 1, "clone") && ctx.is_punct(k + 2, b'(') {
+                hits.push((pos, ".clone()"));
+            } else if ctx.is_punct(k, b'.')
+                && ctx.is_ident(k + 1, "collect")
+                && (ctx.is_punct(k + 2, b'(') || ctx.is_punct(k + 2, b'<') || ctx.is_punct(k + 2, b':'))
+            {
+                hits.push((pos, ".collect()"));
+            }
+        }
+        for (pos, what) in hits {
+            ctx.emit(
+                pos,
+                "zero-alloc-hot-path",
+                format!("{what} inside `{name}`; `*_in`/`*_into` signatures promise the caller \
+                         owns every buffer — reuse scratch instead"),
+            );
+        }
+        i = close + 1;
+    }
+}
+
+const BLOCKING_CALLS: &[&str] = &["send", "recv", "recv_timeout", "join", "wait", "wait_timeout"];
+
+fn rule_guard_across_blocking(ctx: &mut Ctx<'_>) {
+    let toks_len = ctx.toks.len();
+    let mut i = 0;
+    while i < toks_len {
+        if !ctx.is_ident(i, "let") {
+            i += 1;
+            continue;
+        }
+        let pos = ctx.toks[i].start;
+        if ctx.is_test_code(pos) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if ctx.is_ident(j, "mut") {
+            j += 1;
+        }
+        if j >= toks_len || ctx.toks[j].punct != 0 {
+            i += 1;
+            continue;
+        }
+        let name = String::from_utf8_lossy(&ctx.code[ctx.toks[j].start..ctx.toks[j].end]).into_owned();
+        if !ctx.is_punct(j + 1, b'=') {
+            i += 1;
+            continue;
+        }
+        // Initializer: scan flat to the terminating `;`; bail if a `{`
+        // intervenes (block expressions scope the guard themselves).
+        let expr_start = j + 2;
+        let mut k = expr_start;
+        let mut semi = None;
+        while k < toks_len {
+            match ctx.toks[k].punct {
+                b'{' => break,
+                b';' => {
+                    semi = Some(k);
+                    break;
+                }
+                _ => k += 1,
+            }
+        }
+        let Some(semi) = semi else {
+            i += 1;
+            continue;
+        };
+        // Does the initializer take a lock?  (`.lock()` / `.read()` /
+        // `.write()` with empty args — the std sync guard constructors.)
+        let mut is_guard = false;
+        for g in expr_start..semi {
+            if ctx.is_punct(g, b'.')
+                && (ctx.is_ident(g + 1, "lock") || ctx.is_ident(g + 1, "read") || ctx.is_ident(g + 1, "write"))
+                && ctx.is_punct(g + 2, b'(')
+                && ctx.is_punct(g + 3, b')')
+            {
+                is_guard = true;
+                break;
+            }
+        }
+        if !is_guard {
+            i += 1;
+            continue;
+        }
+        // Guard scope: from after the `;` to the enclosing block close,
+        // truncated at an explicit `drop(name)`.
+        let mut depth = 0i64;
+        let mut scope_end = toks_len;
+        let mut m = semi + 1;
+        while m < toks_len {
+            match ctx.toks[m].punct {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        scope_end = m;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            if ctx.is_ident(m, "drop")
+                && ctx.is_punct(m + 1, b'(')
+                && ctx.is_ident(m + 2, &name)
+                && ctx.is_punct(m + 3, b')')
+            {
+                scope_end = m;
+                break;
+            }
+            m += 1;
+        }
+        // Any blocking call in scope that does not *consume* the guard
+        // (condvar waits take the guard as an argument — that hand-off
+        // is the sanctioned pattern).
+        for bidx in (semi + 1)..scope_end {
+            if !ctx.is_punct(bidx, b'.') {
+                continue;
+            }
+            let callee = ctx.ident(bidx + 1);
+            if !BLOCKING_CALLS.iter().any(|c| callee == c.as_bytes()) {
+                continue;
+            }
+            if !ctx.is_punct(bidx + 2, b'(') {
+                continue;
+            }
+            let close = ctx.match_paren(bidx + 2);
+            let consumes_guard =
+                ((bidx + 3)..close).any(|a| ctx.is_ident(a, &name));
+            if consumes_guard {
+                continue;
+            }
+            let callee = String::from_utf8_lossy(callee).into_owned();
+            ctx.emit(
+                ctx.toks[bidx].start,
+                "guard-across-blocking",
+                format!(
+                    "`.{callee}(..)` while lock guard `{name}` is live; drop the guard first \
+                     (holding a lock across a blocking call deadlocks under contention)"
+                ),
+            );
+            break;
+        }
+        i = semi + 1;
+    }
+}
+
+fn rule_no_thread_spawn(ctx: &mut Ctx<'_>) {
+    for i in 0..ctx.toks.len() {
+        let pos = ctx.toks[i].start;
+        if ctx.is_test_code(pos) {
+            continue;
+        }
+        if ctx.is_ident(i, "thread")
+            && ctx.is_punct(i + 1, b':')
+            && ctx.is_punct(i + 2, b':')
+            && ctx.is_ident(i + 3, "spawn")
+        {
+            ctx.emit(
+                pos,
+                "no-thread-spawn",
+                "thread::spawn detaches the join from the spawn; use thread::scope, or \
+                 dslint::allow with the owner that joins the handle"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+const TIME_IDENTS: &[&str] = &["elapsed", "as_nanos", "as_micros", "as_millis", "now"];
+
+fn rule_bench_determinism(ctx: &mut Ctx<'_>) {
+    for i in 0..ctx.toks.len() {
+        if !(ctx.is_ident(i, "Pcg32")
+            && ctx.is_punct(i + 1, b':')
+            && ctx.is_punct(i + 2, b':')
+            && (ctx.is_ident(i + 3, "new") || ctx.is_ident(i + 3, "seeded"))
+            && ctx.is_punct(i + 4, b'('))
+        {
+            continue;
+        }
+        let close = ctx.match_paren(i + 4);
+        let time_seeded = ((i + 5)..close).any(|a| {
+            TIME_IDENTS.iter().any(|t| ctx.is_ident(a, t))
+        });
+        if time_seeded {
+            ctx.emit(
+                ctx.toks[i].start,
+                "bench-determinism",
+                "Pcg32 seeded from wall-clock time; seeds must be literals or config so \
+                 every run replays bit-identically"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points.
+// ---------------------------------------------------------------------------
+
+/// Scan one source file.  `rel` is the repo-relative path (it drives
+/// rule scoping); `text` is the file contents.
+pub fn scan_source(rel: &str, text: &str) -> Vec<Diagnostic> {
+    let stripped = strip(text);
+    let toks = tokenize(&stripped.code);
+
+    // 1-indexed comment-line map from the *raw* text (the allow walk
+    // climbs through `//` lines above a flagged site).
+    let mut comment_line = vec![false; text.lines().count() + 2];
+    for (idx, raw) in text.lines().enumerate() {
+        comment_line[idx + 1] = raw.trim_start().starts_with("//");
+    }
+    let allows = stripped
+        .allows
+        .iter()
+        .map(|&(pos, rule)| (line_col(text.as_bytes(), pos).0, rule))
+        .collect();
+
+    let mut ctx = Ctx {
+        rel,
+        code: &stripped.code,
+        toks: &toks,
+        comment_line,
+        allows,
+        test_spans: Vec::new(),
+        diags: Vec::new(),
+    };
+    ctx.test_spans = test_regions(&ctx);
+
+    rule_partial_cmp(&mut ctx);
+    rule_clock(&mut ctx);
+    rule_no_panic(&mut ctx);
+    rule_deterministic_iteration(&mut ctx);
+    rule_zero_alloc(&mut ctx);
+    rule_guard_across_blocking(&mut ctx);
+    rule_no_thread_spawn(&mut ctx);
+    rule_bench_determinism(&mut ctx);
+
+    for &pos in &stripped.malformed {
+        let (line, col) = line_col(text.as_bytes(), pos);
+        ctx.diags.push(Diagnostic {
+            file: rel.to_string(),
+            line,
+            col,
+            rule: "malformed-allow",
+            message: "dslint::allow must name a known rule and give a reason: \
+                      `// dslint::allow(rule-name): why this site is sanctioned`"
+                .to_string(),
+        });
+    }
+
+    let mut diags = ctx.diags;
+    diags.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(rel: &str, src: &str) -> Vec<&'static str> {
+        scan_source(rel, src).into_iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_never_match() {
+        let src = r###"
+            // Instant::now() in a comment is fine
+            /* and Instant::now() in /* nested */ blocks too */
+            fn f() -> &'static str {
+                let s = "Instant::now() in a string";
+                let r = r#"SystemTime::now() in a raw string"#;
+                let b = b"thread::spawn in bytes";
+                let c = '"'; // char literal must not open a string
+                let t = Instant::now(); // only this one is real
+                s
+            }
+        "###;
+        let diags = scan_source("rust/src/workload/mod.rs", src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, "clock-discipline");
+        assert_eq!(diags[0].line, 9);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        // A lifetime's `'` must not swallow code up to the next quote.
+        let src = "fn f<'a>(x: &'a str) -> &'a str { let t = Instant::now(); x }";
+        assert_eq!(rules_of("rust/src/workload/mod.rs", src), vec!["clock-discipline"]);
+    }
+
+    #[test]
+    fn same_line_allow_suppresses() {
+        let src = "let t = Instant::now(); // dslint::allow(clock-discipline): boot banner only\n";
+        assert!(rules_of("rust/src/workload/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comment_block_above_allows_multi_line_reasons() {
+        let src = "\
+// dslint::allow(no-thread-spawn): the handle is owned and joined by
+// the executor's shutdown() — see DESIGN.md §13
+let h = thread::spawn(move || run());\n";
+        assert!(rules_of("rust/src/workload/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_non_comment_lines() {
+        let src = "\
+// dslint::allow(no-thread-spawn): documented escape
+let a = 1;
+let h = thread::spawn(move || run());\n";
+        assert_eq!(rules_of("rust/src/workload/mod.rs", src), vec!["no-thread-spawn"]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed_and_does_not_suppress() {
+        let src = "\
+// dslint::allow(no-thread-spawn)
+let h = thread::spawn(move || run());\n";
+        let rules = rules_of("rust/src/workload/mod.rs", src);
+        assert!(rules.contains(&"malformed-allow"), "{rules:?}");
+        assert!(rules.contains(&"no-thread-spawn"), "{rules:?}");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_malformed() {
+        let src = "// dslint::allow(no-such-rule): because\nlet a = 1;\n";
+        assert_eq!(rules_of("rust/src/workload/mod.rs", src), vec!["malformed-allow"]);
+    }
+
+    #[test]
+    fn cfg_test_mod_exempts_hot_path_rules_but_not_clock() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn t() {
+        let x = opt.unwrap();
+        let h = thread::spawn(|| 1);
+        let t = Instant::now();
+    }
+}\n";
+        let rules = rules_of("rust/src/serve/foo.rs", src);
+        assert_eq!(rules, vec!["clock-discipline"], "{rules:?}");
+    }
+
+    #[test]
+    fn clock_exempt_files_may_read_the_clock() {
+        let src = "pub fn now() -> Instant { Instant::now() }";
+        assert!(rules_of("rust/src/serve/clock.rs", src).is_empty());
+        assert!(rules_of("rust/src/util/bench.rs", src).is_empty());
+        assert_eq!(rules_of("rust/src/util/rng.rs", src), vec!["clock-discipline"]);
+    }
+
+    #[test]
+    fn trait_method_declarations_have_no_body_to_scan() {
+        let src = "trait Sink { fn write_into(&mut self, out: &mut Vec<f32>); }";
+        assert!(rules_of("rust/src/runtime/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn condvar_wait_consuming_the_guard_is_sanctioned() {
+        let src = "\
+fn pump(q: &Queue) {
+    let mut inner = q.state.lock().ok();
+    inner = q.available.wait(inner);
+}\n";
+        assert!(rules_of("rust/src/transport/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn diagnostic_renders_rustc_style() {
+        let d = Diagnostic {
+            file: "rust/src/a.rs".into(),
+            line: 3,
+            col: 9,
+            rule: "clock-discipline",
+            message: "msg".into(),
+        };
+        assert_eq!(d.to_string(), "rust/src/a.rs:3:9: clock-discipline: msg");
+    }
+
+    #[test]
+    fn every_rule_table_entry_is_unique() {
+        for (i, (a, _)) in RULES.iter().enumerate() {
+            for (b, _) in &RULES[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        assert!(RULES.len() >= 9);
+    }
+}

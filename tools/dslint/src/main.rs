@@ -1,0 +1,80 @@
+//! dslint CLI: `cargo run -p dslint -- rust/src rust/tests`
+//!
+//! Walks the given files/directories (repo-relative, from the repo
+//! root — the paths double as rule-scoping keys), prints rustc-style
+//! diagnostics for every invariant violation, and exits nonzero when
+//! any are found.  `--rules` lists the enforced invariants.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn collect(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let meta = fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(path)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for entry in entries {
+        collect(&entry, out)?;
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--rules") {
+        for (name, summary) in dslint::RULES {
+            println!("{name}: {summary}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<String> = if args.is_empty() {
+        vec!["rust/src".to_string(), "rust/tests".to_string()]
+    } else {
+        args
+    };
+
+    let mut files = Vec::new();
+    for root in &roots {
+        if let Err(err) = collect(Path::new(root), &mut files) {
+            eprintln!("dslint: cannot read {root}: {err}");
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut total = 0usize;
+    for file in &files {
+        // Scoping keys are forward-slash repo-relative paths.
+        let rel = file.to_string_lossy().replace('\\', "/");
+        let text = match fs::read_to_string(file) {
+            Ok(t) => t,
+            Err(err) => {
+                eprintln!("dslint: cannot read {rel}: {err}");
+                return ExitCode::from(2);
+            }
+        };
+        for diag in dslint::scan_source(&rel, &text) {
+            println!("{diag}");
+            total += 1;
+        }
+    }
+
+    if total > 0 {
+        eprintln!(
+            "dslint: {total} violation{} in {} file{} scanned",
+            if total == 1 { "" } else { "s" },
+            files.len(),
+            if files.len() == 1 { "" } else { "s" },
+        );
+        ExitCode::FAILURE
+    } else {
+        eprintln!("dslint: clean ({} files scanned)", files.len());
+        ExitCode::SUCCESS
+    }
+}

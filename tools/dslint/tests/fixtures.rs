@@ -1,0 +1,92 @@
+//! Fixture-driven rule tests.
+//!
+//! Every rule ships at least a positive (`bad.rs`, expected violations)
+//! and a negative (`good.rs`, zero violations) fixture under
+//! `tests/fixtures/<rule>/`.  The first line of each fixture declares
+//! the *virtual* repo-relative path — which drives rule scoping — and
+//! the expected diagnostic count for that rule:
+//!
+//! ```text
+//! // dslint-fixture: rust/src/serve/dispatch.rs expect=3
+//! ```
+//!
+//! Fixtures are scanned, never compiled, so they can encode violations
+//! that would not build (and claim any path in the repo).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn header(path: &Path, text: &str) -> (String, usize) {
+    let line = text.lines().next().unwrap_or("");
+    let rest = line
+        .strip_prefix("// dslint-fixture:")
+        .unwrap_or_else(|| panic!("{}: first line must be a dslint-fixture header", path.display()))
+        .trim();
+    let (virtual_path, expect) = rest
+        .split_once(" expect=")
+        .unwrap_or_else(|| panic!("{}: header needs ` expect=N`", path.display()));
+    let expect = expect
+        .trim()
+        .parse()
+        .unwrap_or_else(|_| panic!("{}: expect= must be a count", path.display()));
+    (virtual_path.trim().to_string(), expect)
+}
+
+fn sorted_entries(dir: &Path) -> Vec<PathBuf> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    entries
+}
+
+#[test]
+fn fixtures_match_expected_counts() {
+    let mut checked = 0usize;
+    for rule_dir in sorted_entries(&fixtures_root()) {
+        let rule = rule_dir.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(
+            dslint::RULES.iter().any(|(n, _)| *n == rule),
+            "fixture dir {rule} does not name a known rule"
+        );
+        for file in sorted_entries(&rule_dir) {
+            if file.extension().and_then(|e| e.to_str()) != Some("rs") {
+                continue;
+            }
+            let text = fs::read_to_string(&file).unwrap();
+            let (virtual_path, expect) = header(&file, &text);
+            let diags = dslint::scan_source(&virtual_path, &text);
+            let hits: Vec<_> = diags.iter().filter(|d| d.rule == rule).collect();
+            assert_eq!(
+                hits.len(),
+                expect,
+                "{} (as {virtual_path}): expected {expect} `{rule}` diagnostics, got {:#?}",
+                file.display(),
+                diags
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 18, "only {checked} fixtures checked — fixture set shrank");
+}
+
+#[test]
+fn every_rule_has_positive_and_negative_fixtures() {
+    let root = fixtures_root();
+    for (rule, _) in dslint::RULES {
+        let dir = root.join(rule);
+        for case in ["bad.rs", "good.rs"] {
+            let path = dir.join(case);
+            assert!(path.is_file(), "rule {rule} is missing its {case} fixture");
+        }
+        // and the positive fixture must actually expect violations
+        let bad = fs::read_to_string(dir.join("bad.rs")).unwrap();
+        let (_, expect) = header(&dir.join("bad.rs"), &bad);
+        assert!(expect >= 1, "rule {rule}: bad.rs must expect at least one violation");
+    }
+}

@@ -1,0 +1,11 @@
+// dslint-fixture: benches/micro.rs expect=1
+use dynasplit::serve::Stopwatch;
+use dynasplit::util::rng::Pcg32;
+
+/// A time-derived seed makes every rerun sample a different stream —
+/// the figure scripts would never replay bit-identically.
+pub fn jitter() -> u64 {
+    let sw = Stopwatch::start();
+    let mut rng = Pcg32::seeded(sw.elapsed().as_nanos() as u64);
+    rng.next_u64()
+}

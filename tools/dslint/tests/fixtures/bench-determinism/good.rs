@@ -1,0 +1,7 @@
+// dslint-fixture: benches/micro.rs expect=0
+use dynasplit::util::rng::Pcg32;
+
+/// Literal base seed plus a structural stream id: replays bit-identically.
+pub fn stream(worker: u64) -> Pcg32 {
+    Pcg32::new(0x5eed_5eed, worker)
+}

@@ -1,0 +1,8 @@
+// dslint-fixture: rust/src/controller/mod.rs expect=2
+use std::time::{Instant, SystemTime};
+
+pub fn overhead_ms() -> f64 {
+    let t0 = Instant::now();
+    let _wall = SystemTime::now();
+    t0.elapsed().as_secs_f64() * 1e3
+}

@@ -1,0 +1,19 @@
+// dslint-fixture: rust/src/serve/clock.rs expect=0
+//
+// serve/clock.rs is the sanctioned wall-clock seam: the only place
+// (plus util/bench.rs) allowed to read Instant::now directly.
+use std::time::Instant;
+
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+}

@@ -1,0 +1,8 @@
+// dslint-fixture: rust/src/serve/report.rs expect=2
+use std::collections::HashMap;
+
+/// Iterating this map to print the per-worker digest would make the
+/// report line ordering depend on the hasher seed.
+pub struct Report {
+    pub per_worker: HashMap<usize, u64>,
+}

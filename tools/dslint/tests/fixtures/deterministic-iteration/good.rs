@@ -1,0 +1,7 @@
+// dslint-fixture: rust/src/serve/report.rs expect=0
+use std::collections::BTreeMap;
+
+/// BTreeMap iterates in key order: the digest is stable run to run.
+pub struct Report {
+    pub per_worker: BTreeMap<usize, u64>,
+}

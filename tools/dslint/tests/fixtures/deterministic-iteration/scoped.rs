@@ -1,0 +1,12 @@
+// dslint-fixture: rust/src/workload/mod.rs expect=0
+use std::collections::HashMap;
+
+/// HashMap is fine outside the digest/report modules — this rule is
+/// path-scoped, not global.
+pub fn histogram(xs: &[u64]) -> HashMap<u64, u64> {
+    let mut h = HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

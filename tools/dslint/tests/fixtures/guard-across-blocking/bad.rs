@@ -1,0 +1,8 @@
+// dslint-fixture: rust/src/transport/link.rs expect=1
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub fn pump(stats: &Mutex<u64>, tx: &Sender<u64>) {
+    let count = stats.lock().ok();
+    tx.send(1).ok();
+}

@@ -1,0 +1,18 @@
+// dslint-fixture: rust/src/transport/link.rs expect=0
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+
+/// Snapshot under the lock, drop the guard, then block.
+pub fn pump(stats: &Mutex<u64>, tx: &Sender<u64>) {
+    let count = stats.lock().ok();
+    let snapshot = count.as_deref().copied().unwrap_or(0);
+    drop(count);
+    tx.send(snapshot).ok();
+}
+
+/// Condvar waits *consume* the guard — that hand-off is the sanctioned
+/// blocking-with-a-guard pattern.
+pub fn drain(q: &Mutex<u64>, cv: &Condvar) {
+    let inner = q.lock().ok();
+    let _woken = cv.wait(inner);
+}

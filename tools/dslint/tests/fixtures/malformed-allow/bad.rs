@@ -1,0 +1,7 @@
+// dslint-fixture: rust/src/workload/mod.rs expect=2
+
+// dslint::allow(no-thread-spawn)
+pub const MISSING_REASON: u32 = 1;
+
+// dslint::allow(not-a-rule): a reason does not rescue an unknown rule
+pub const UNKNOWN_RULE: u32 = 2;

@@ -1,0 +1,5 @@
+// dslint-fixture: rust/src/workload/mod.rs expect=0
+
+// dslint::allow(no-thread-spawn): well-formed escape with a reason;
+// harmless even when nothing below it violates the rule
+pub const SANCTIONED: u32 = 1;

@@ -1,0 +1,10 @@
+// dslint-fixture: rust/src/serve/dispatch.rs expect=3
+
+pub fn dispatch(slot: Option<usize>, outs: &[f64]) -> f64 {
+    let idx = slot.unwrap();
+    let out = outs.get(idx).expect("bound");
+    if out.is_nan() {
+        panic!("nan outcome");
+    }
+    *out
+}

@@ -1,0 +1,17 @@
+// dslint-fixture: rust/src/serve/dispatch.rs expect=0
+
+/// Shed-not-crash: the serving stack degrades a bad dispatch to a shed
+/// outcome instead of panicking the worker.
+pub fn dispatch(slot: Option<usize>, outs: &[f64]) -> Option<f64> {
+    let idx = slot?;
+    outs.get(idx).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_harness_may_unwrap() {
+        let v = super::dispatch(Some(0), &[1.0]).unwrap();
+        assert!((v - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+// dslint-fixture: rust/src/solver/mod.rs expect=1
+
+/// Sorting energies with partial_cmp panics the moment a NaN reaches
+/// the comparator (the PR-2 solver crash this rule memorializes).
+pub fn best(xs: &[f64]) -> f64 {
+    let mut v: Vec<f64> = xs.into();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[0]
+}

@@ -1,0 +1,11 @@
+// dslint-fixture: rust/src/solver/mod.rs expect=0
+
+/// total_cmp is a total order over every f64 bit pattern — NaN sorts,
+/// nothing panics.  The lexer must also ignore "a.partial_cmp(b)" here
+/// (comment) and below (string literal).
+pub fn best(xs: &[f64]) -> f64 {
+    let mut v: Vec<f64> = xs.into();
+    v.sort_by(|a, b| a.total_cmp(b));
+    debug_assert!(!v.is_empty(), "never sort via partial_cmp");
+    v[0]
+}

@@ -1,0 +1,6 @@
+// dslint-fixture: rust/src/runtime/pool.rs expect=1
+use std::thread;
+
+pub fn start() -> thread::JoinHandle<()> {
+    thread::spawn(|| {})
+}

@@ -1,0 +1,17 @@
+// dslint-fixture: rust/src/runtime/pool.rs expect=0
+use std::thread;
+
+/// Scoped threads join structurally — the sanctioned default.
+pub fn fan_out(xs: &mut [u64]) {
+    thread::scope(|scope| {
+        for x in xs.iter_mut() {
+            scope.spawn(move || *x += 1);
+        }
+    });
+}
+
+pub fn detached() -> thread::JoinHandle<()> {
+    // dslint::allow(no-thread-spawn): the handle is owned by the caller,
+    // which joins it in shutdown() — see DESIGN.md §13
+    thread::spawn(|| {})
+}

@@ -1,0 +1,11 @@
+// dslint-fixture: rust/src/runtime/kernels.rs expect=2
+
+/// The `_into` suffix promises the caller owns every buffer — yet this
+/// body allocates a scratch Vec and clones the input on the hot path.
+pub fn gemm_into(a: &[f32], out: &mut [f32]) {
+    let mut scratch = Vec::new();
+    scratch.extend_from_slice(a);
+    let copy = a.to_vec();
+    let n = copy.len().min(out.len());
+    out[..n].copy_from_slice(&copy[..n]);
+}

@@ -1,0 +1,14 @@
+// dslint-fixture: rust/src/runtime/kernels.rs expect=0
+
+/// Allocation-free: every buffer, scratch included, is caller-owned.
+pub fn gemm_into(a: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+    let n = a.len().min(scratch.len()).min(out.len());
+    scratch[..n].copy_from_slice(&a[..n]);
+    out[..n].copy_from_slice(&scratch[..n]);
+}
+
+/// Allocating helpers are fine outside `*_in`/`*_into` names — the rule
+/// binds the signature's promise, not the whole module.
+pub fn gemm(a: &[f32]) -> Vec<f32> {
+    a.to_vec()
+}
