@@ -278,6 +278,52 @@ fn main() {
         });
     }
 
+    // --- sharded admission (DESIGN.md §14) ---
+    // Routing cost, full offer->drain cycles through 1 vs 4 shards, and
+    // the lock-free counter polling the admission gate + adapt loop
+    // lean on.  The sharded drain uses the same work-stealing pop the
+    // serving workers use.
+    {
+        use dynasplit::serve::{route_shard, ShardedQueue};
+        use dynasplit::workload::TimedRequest;
+        let tr = |id: usize| TimedRequest {
+            request: Request {
+                id,
+                net: Network::Vgg16,
+                qos_ms: 500.0,
+                inferences: 1,
+                seed: id as u64,
+            },
+            arrival_ms: id as f64,
+        };
+        let mut rid = 0usize;
+        b.bench("runtime_scale_route_shard_8", || {
+            rid = rid.wrapping_add(1);
+            route_shard(rid, 8)
+        });
+        for shards in [1usize, 4] {
+            b.bench(&format!("runtime_scale_offer_drain256_s{shards}"), || {
+                let q = ShardedQueue::new(shards, 256);
+                for id in 0..256 {
+                    q.offer(tr(id));
+                }
+                q.close();
+                let mut drained = 0;
+                while q.pop_due_from(0, || None).is_some() {
+                    drained += 1;
+                }
+                drained
+            });
+        }
+        let polled = ShardedQueue::new(4, 256);
+        for id in 0..64 {
+            polled.offer(tr(id));
+        }
+        b.bench("runtime_scale_stats_poll_s4", || {
+            polled.stats().admitted + polled.depth()
+        });
+    }
+
     // --- NSGA machinery ---
     let objs: Vec<[f64; 3]> = (0..200)
         .map(|_| [rng.f64() * 1000.0, rng.f64() * 100.0, -rng.f64()])

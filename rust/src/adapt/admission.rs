@@ -19,6 +19,15 @@
 //! estimates must not shed real traffic.  It belongs to wait-aware
 //! (real-time) serving, where queue depth actually costs deadline
 //! budget; `run_closed_loop` only engages it when `time_scale > 0`.
+//!
+//! Under sharded admission (`PipelineConfig::shards > 1`, DESIGN.md
+//! §14) one gate is shared by every shard feeder, but each feeder
+//! passes its *own shard's* depth (`ShardedQueue::depth_of`): with
+//! workers homed one-per-shard and stealing only when idle, a shard's
+//! backlog is what an arrival routed there actually waits behind —
+//! gating on the global depth would let one hot shard shed traffic on
+//! every cold one.  The gate itself is depth-agnostic; only the `admit`
+//! call site chooses the scope.
 
 use std::sync::Arc;
 

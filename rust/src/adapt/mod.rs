@@ -20,12 +20,15 @@
 //!
 //! * [`store`]     — epoch/`Arc`-swap [`ConfigStore`] (the ownership
 //!   seam the whole pipeline resolves configs through);
-//! * [`telemetry`] — lock-light per-worker rings + the lock-free EWMA;
+//! * [`telemetry`] — lock-light per-worker rings + the lock-free EWMA
+//!   (`recorded()`/`dropped()` polling reads atomic mirrors, never a
+//!   ring mutex);
 //! * [`drift`]     — windowed measured-vs-predicted comparison with
 //!   K-consecutive-window streaks, and the extracted [`Calibration`];
 //! * [`resolve`]   — warm-started, measurement-calibrated NSGA-III
 //!   re-solve;
-//! * [`admission`] — queue-depth × EWMA-latency admission backpressure;
+//! * [`admission`] — queue-depth × EWMA-latency admission backpressure
+//!   (per-shard depth under sharded admission, DESIGN.md §14);
 //! * [`AdaptiveLoop`] — the background controller tying them together,
 //!   driven concurrently by [`run_closed_loop`] or synchronously via
 //!   [`AdaptiveLoop::step`] (what the deterministic tests use).

@@ -40,15 +40,21 @@ pub struct Sample {
     pub accuracy: f64,
 }
 
-struct Ring {
-    buf: VecDeque<Sample>,
-    recorded: u64,
-    dropped: u64,
+/// One worker's slot: the sample ring behind its mutex, plus counter
+/// mirrors *outside* it.  The counters are written with relaxed RMWs
+/// while the recording worker holds the ring lock (so they are exact,
+/// not sampled) but read lock-free — `recorded()`/`dropped()` polling
+/// from the adapt loop or a report pass never contends with the
+/// record path.
+struct Slot {
+    ring: Mutex<VecDeque<Sample>>,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
 }
 
 /// Per-worker ring buffers behind one shared handle.
 pub struct Telemetry {
-    slots: Vec<Mutex<Ring>>,
+    slots: Vec<Slot>,
     capacity: usize,
 }
 
@@ -59,12 +65,10 @@ impl Telemetry {
         assert!(workers >= 1 && capacity >= 1);
         Telemetry {
             slots: (0..workers)
-                .map(|_| {
-                    Mutex::new(Ring {
-                        buf: VecDeque::with_capacity(capacity.min(4096)),
-                        recorded: 0,
-                        dropped: 0,
-                    })
+                .map(|_| Slot {
+                    ring: Mutex::new(VecDeque::with_capacity(capacity.min(4096))),
+                    recorded: AtomicU64::new(0),
+                    dropped: AtomicU64::new(0),
                 })
                 .collect(),
             capacity,
@@ -77,13 +81,14 @@ impl Telemetry {
 
     /// Record one sample on `worker`'s slot.
     pub fn record(&self, worker: usize, sample: Sample) {
-        let mut ring = lock_clean(&self.slots[worker]);
-        if ring.buf.len() >= self.capacity {
-            ring.buf.pop_front();
-            ring.dropped += 1;
+        let slot = &self.slots[worker];
+        let mut ring = lock_clean(&slot.ring);
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            slot.dropped.fetch_add(1, Ordering::Relaxed);
         }
-        ring.buf.push_back(sample);
-        ring.recorded += 1;
+        ring.push_back(sample);
+        slot.recorded.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Take every buffered sample, worker-slot order (stable: slot 0's
@@ -91,26 +96,23 @@ impl Telemetry {
     pub fn drain(&self) -> Vec<Sample> {
         let mut out = Vec::new();
         for slot in &self.slots {
-            let mut ring = lock_clean(slot);
-            out.extend(ring.buf.drain(..));
+            let mut ring = lock_clean(&slot.ring);
+            out.extend(ring.drain(..));
         }
         out
     }
 
-    /// Total samples ever recorded (drained or not).
+    /// Total samples ever recorded (drained or not).  Lock-free: sums
+    /// the per-slot counter mirrors without touching any ring mutex.
     pub fn recorded(&self) -> u64 {
-        self.slots
-            .iter()
-            .map(|s| lock_clean(s).recorded)
-            .sum()
+        self.slots.iter().map(|s| s.recorded.load(Ordering::Relaxed)).sum()
     }
 
-    /// Samples lost to ring overflow.
+    /// Samples lost to ring overflow.  Lock-free, like [`recorded`].
+    ///
+    /// [`recorded`]: Telemetry::recorded
     pub fn dropped(&self) -> u64 {
-        self.slots
-            .iter()
-            .map(|s| lock_clean(s).dropped)
-            .sum()
+        self.slots.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -249,6 +251,27 @@ mod tests {
         assert_eq!(t.recorded(), 4000);
         assert_eq!(t.dropped(), 0);
         assert_eq!(t.drain().len(), 4000);
+    }
+
+    #[test]
+    fn counter_polling_never_takes_a_ring_mutex() {
+        use crate::serve::Stopwatch;
+        // hostage thread parks on slot 0's ring mutex; counter polls
+        // must still return immediately (they read the atomic mirrors,
+        // not the ring)
+        let t = Telemetry::new(2, 8);
+        t.record(0, sample(1, 100.0, 100.0));
+        t.record(1, sample(2, 100.0, 100.0));
+        let hostage = lock_clean(&t.slots[0].ring);
+        let sw = Stopwatch::start();
+        assert_eq!(t.recorded(), 2);
+        assert_eq!(t.dropped(), 0);
+        assert!(
+            sw.elapsed_ms() < 40.0,
+            "polling stalled behind a held ring lock: {} ms",
+            sw.elapsed_ms()
+        );
+        drop(hostage);
     }
 
     #[test]

@@ -146,6 +146,7 @@ pub fn run(ctx: &Ctx, net: Network, requests: usize, seed: u64) -> AdaptationExp
         time_scale: 0.0,
         seed,
         reuse: true,
+        ..PipelineConfig::default()
     };
     // a small real-time service floor paces virtual-time serving so the
     // concurrent loop can detect + re-solve while traffic still flows

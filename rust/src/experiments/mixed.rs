@@ -101,6 +101,7 @@ pub fn run(ctx: &Ctx, requests: usize, seed: u64) -> MixedExperiment {
             time_scale: 0.0,
             seed,
             reuse: true,
+            ..PipelineConfig::default()
         };
         let report = run_pipeline_stores(&stores, policy, tl, &cfg, None, None, |_| {
             Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: EXEC_STREAM })
@@ -138,6 +139,7 @@ pub fn run(ctx: &Ctx, requests: usize, seed: u64) -> MixedExperiment {
         time_scale: 0.0,
         seed,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let report = run_pipeline_stores(&stores, &paper, &tl, &cfg, None, None, |_| {
         Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: EXEC_STREAM })

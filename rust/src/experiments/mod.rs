@@ -14,6 +14,7 @@
 //! | [`serving`]   | beyond-paper: serving-pipeline throughput (policies × workers × cache) |
 //! | [`adaptation`]| beyond-paper: closed-loop drift → re-solve → hot-swap recovery |
 //! | [`mixed`]     | beyond-paper: mixed-network serving (vgg16 + vit, one pipeline) |
+//! | [`scale`]     | beyond-paper: fleet-scale sweep (shards × workers, discrete-event clock) |
 
 pub mod ablation;
 pub mod adaptation;
@@ -22,6 +23,7 @@ pub mod bounds;
 pub mod mixed;
 pub mod overhead;
 pub mod prelim;
+pub mod scale;
 pub mod serving;
 pub mod simulation;
 pub mod small_models;

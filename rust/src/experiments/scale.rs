@@ -1,0 +1,358 @@
+//! Fleet-scale serving experiment (beyond-paper; ROADMAP
+//! "million-user scale", DESIGN.md §14).
+//!
+//! Sweeps admission-queue shards × workers over one heterogeneous
+//! device-fleet workload (diurnal nonhomogeneous Poisson arrivals plus
+//! deterministic flash crowds, three device classes with distinct edge
+//! speeds and QoS envelopes) under the **discrete-event clock**: batch
+//! completions advance simulated time, so a multi-hour trace replays
+//! in seconds of wall clock while keeping real-time queueing, expiry,
+//! and shedding semantics.  The fleet deliberately offers more load
+//! than the workers can absorb — the sweep reports each cell's
+//! throughput ceiling, tail latency, and shed/expired counts, and the
+//! per-shard report slices are asserted to reconcile exactly with the
+//! aggregates.  A final cell hot-swaps the Pareto store mid-replay
+//! under the largest shard count and verifies every completion's
+//! `(epoch, digest)` stamp against the store registry: sharded
+//! admission and work stealing never expose a torn store.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::adapt::{ConfigStore, StoreMap};
+use crate::controller::policy::ConfigSet;
+use crate::controller::{ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor};
+use crate::serve::{run_pipeline, run_pipeline_stores, PipelineConfig, ServeOutcome, ServeReport};
+use crate::simulator::Testbed;
+use crate::solver::{Solver, Strategy};
+use crate::space::{Config, Network};
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+use crate::workload::{FleetSpec, Request, TimedRequest};
+
+use super::Ctx;
+
+/// Executor stream selector shared by every cell: outcomes depend only
+/// on the request, so cells are comparable across shard/worker counts.
+const EXEC_STREAM: u64 = 7777;
+
+/// Mean fleet arrival rate.  Deliberately above what the smaller cells
+/// can serve — the sweep is about the throughput ceiling, not a
+/// comfortably provisioned pipeline.
+const RATE_PER_S: f64 = 12.0;
+
+/// Per-shard admission queue capacity for every cell.
+const QUEUE_PER_SHARD: usize = 2048;
+
+/// Routes each request to the testbed of its device class: the class
+/// is carried in the request seed ([`FleetSpec::class_of`]), so the
+/// outcome stays a pure function of `(request, config)` — the
+/// pipeline's order-independence contract — while the fleet stays
+/// heterogeneous.
+pub struct FleetExecutor<'a> {
+    pub spec: &'a FleetSpec,
+    pub worlds: &'a [Testbed],
+    pub stream: u64,
+}
+
+impl Executor for FleetExecutor<'_> {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        let class = self.spec.class_of(request.seed);
+        let mut ex = PerRequestSimExecutor { testbed: &self.worlds[class], stream: self.stream };
+        ex.execute(request, config)
+    }
+}
+
+/// One forked testbed per device class: the class's `edge_speed`
+/// throttles both networks' edge models (1.0 = the reference device).
+pub fn class_worlds(base: &Testbed, spec: &FleetSpec) -> Vec<Testbed> {
+    spec.classes
+        .iter()
+        .map(|c| {
+            let mut tb = base.clone();
+            tb.vgg.throttle_edge(c.edge_speed);
+            tb.vit.throttle_edge(c.edge_speed);
+            tb
+        })
+        .collect()
+}
+
+/// One pipeline replay under a (shards, workers) combination.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub shards: usize,
+    pub workers: usize,
+    pub report: ServeReport,
+}
+
+impl Cell {
+    /// Completed requests per wall-clock second (the replay ceiling).
+    pub fn wall_throughput(&self) -> f64 {
+        self.report.completed() as f64 / (self.report.wall_ms / 1000.0).max(1e-9)
+    }
+}
+
+pub struct ScaleExperiment {
+    pub net: Network,
+    pub requests: usize,
+    pub devices: usize,
+    /// Simulated arrival horizon of the fleet trace (last arrival).
+    pub horizon_ms: f64,
+    pub cells: Vec<Cell>,
+    /// Store epochs observed by completions in the hot-swap cell.
+    pub epochs_observed: Vec<u64>,
+    /// Every `(epoch, digest)` stamp in the hot-swap cell was a
+    /// registered installation (asserted during the run).
+    pub epochs_torn_free: bool,
+}
+
+/// The fixed sweep grid: shards × workers, small cells first so the
+/// throughput ceiling is visible as workers (and shards) grow.
+const GRID: [(usize, usize); 5] = [(1, 4), (4, 4), (8, 4), (4, 16), (8, 16)];
+
+pub fn run(ctx: &Ctx, requests: usize, devices: usize, seed: u64) -> ScaleExperiment {
+    let net = Network::Vgg16;
+    // offline phase: one 20%-style search shared by every cell
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = 60;
+    let pareto = solver.run(Strategy::NsgaIII, 120, seed).pareto;
+    let set = ConfigSet::new(pareto);
+
+    // the fleet: heterogeneous device classes, diurnal + flash arrivals
+    let spec = FleetSpec::synthetic(net, devices, RATE_PER_S);
+    let worlds = class_worlds(&ctx.testbed, &spec);
+    let mut rng = Pcg32::new(seed, 271);
+    let tl = spec.timeline(requests, &mut rng);
+    let horizon_ms = tl.last().map_or(0.0, |tr| tr.arrival_ms);
+
+    let mut cells = Vec::new();
+    for (shards, workers) in GRID {
+        let cfg = PipelineConfig {
+            workers,
+            queue_capacity: QUEUE_PER_SHARD,
+            max_batch: 4,
+            time_scale: 0.0,
+            seed,
+            reuse: true,
+            shards,
+            discrete: true,
+        };
+        let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
+            Ok(FleetExecutor { spec: &spec, worlds: &worlds, stream: EXEC_STREAM })
+        })
+        .expect("scale cell run");
+        assert_eq!(report.records.len(), requests, "s{shards} w{workers}: request conservation");
+        reconcile(&report);
+        cells.push(Cell { shards, workers, report });
+    }
+
+    // hot-swap cell: the Pareto store swaps mid-replay under the
+    // largest shard count; every completion must stamp a registered
+    // (epoch, digest) — per-shard feeders and work stealing included
+    let (epochs_observed, epochs_torn_free) =
+        swap_cell(ctx, &set, &spec, &worlds, &tl, seed);
+
+    ScaleExperiment { net, requests, devices, horizon_ms, cells, epochs_observed, epochs_torn_free }
+}
+
+/// Per-shard slices must reconcile exactly with the aggregates — the
+/// contention-free counters and the record partition agree bitwise.
+fn reconcile(report: &ServeReport) {
+    let parts = report.shard_breakdown();
+    assert_eq!(parts.len(), report.shards.max(1));
+    assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), report.records.len());
+    assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), report.completed());
+    assert_eq!(parts.iter().map(|b| b.expired).sum::<usize>(), report.expired_in_queue());
+    assert_eq!(
+        parts.iter().map(|b| b.rejected_queue_full).sum::<usize>(),
+        report.rejected_queue_full()
+    );
+    let energy: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+    let total = report.mean_energy_j() * report.completed() as f64;
+    if report.completed() > 0 {
+        assert!((energy - total).abs() < 1e-6, "per-shard energy reconciles");
+    }
+}
+
+/// Executor that hot-swaps the store after `at` completions, then
+/// keeps routing through the fleet executor.
+struct SwapOnce<'a> {
+    inner: FleetExecutor<'a>,
+    executed: &'a AtomicUsize,
+    at: usize,
+    store: &'a ConfigStore,
+    replacement: &'a ConfigSet,
+}
+
+impl Executor for SwapOnce<'_> {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        if self.executed.fetch_add(1, Ordering::SeqCst) + 1 == self.at {
+            self.store.swap(self.replacement.clone());
+        }
+        self.inner.execute(request, config)
+    }
+}
+
+fn swap_cell(
+    ctx: &Ctx,
+    set: &ConfigSet,
+    spec: &FleetSpec,
+    worlds: &[Testbed],
+    tl: &[TimedRequest],
+    seed: u64,
+) -> (Vec<u64>, bool) {
+    let net = Network::Vgg16;
+    let n = tl.len().min(20_000);
+    let tl = &tl[..n];
+    // a second search gives the replacement front a distinct identity
+    let mut solver = Solver::new(&ctx.testbed, net);
+    solver.batch_per_trial = 60;
+    let replacement = ConfigSet::new(solver.run(Strategy::NsgaIII, 120, seed + 1).pareto);
+
+    let store = ConfigStore::new(set.clone());
+    let stores = StoreMap::single(net, &store);
+    let cfg = PipelineConfig {
+        workers: 4,
+        queue_capacity: QUEUE_PER_SHARD,
+        max_batch: 4,
+        time_scale: 0.0,
+        seed,
+        reuse: true,
+        shards: 8,
+        discrete: true,
+    };
+    let executed = AtomicUsize::new(0);
+    let at = (n / 20).max(10);
+    let report = run_pipeline_stores(&stores, &PaperPolicy, tl, &cfg, None, None, |_| {
+        Ok(SwapOnce {
+            inner: FleetExecutor { spec, worlds, stream: EXEC_STREAM },
+            executed: &executed,
+            at,
+            store: &store,
+            replacement: &replacement,
+        })
+    })
+    .expect("scale swap cell");
+
+    assert_eq!(report.records.len(), n, "swap cell: request conservation");
+    reconcile(&report);
+    let registry = store.epochs();
+    for r in &report.records {
+        if let ServeOutcome::Done { epoch, store_digest, .. } = &r.outcome {
+            assert!(
+                registry.contains(&(*epoch, *store_digest)),
+                "request {} stamped an unregistered (epoch, digest) — torn store",
+                r.request_id
+            );
+        }
+    }
+    let epochs = report.epochs_observed();
+    assert_eq!(epochs, vec![0, 1], "the swap landed mid-replay");
+    (epochs, true)
+}
+
+pub fn print_report(exp: &ScaleExperiment) {
+    println!(
+        "\n== fleet-scale serving — {} ({} requests, {} devices, {:.0} s simulated, \
+         discrete-event clock) ==",
+        exp.net.name(),
+        exp.requests,
+        exp.devices,
+        exp.horizon_ms / 1000.0
+    );
+    let mut t = Table::new([
+        "shards", "workers", "done", "expired", "shed", "QoS hit", "p50", "p99", "peak q",
+        "wall", "req/s (wall)", "speedup",
+    ]);
+    for cell in &exp.cells {
+        let r = &cell.report;
+        t.row([
+            cell.shards.to_string(),
+            cell.workers.to_string(),
+            r.completed().to_string(),
+            r.expired_in_queue().to_string(),
+            r.rejected_queue_full().to_string(),
+            format!("{:.0}%", r.qos_hit_rate() * 100.0),
+            format!("{:.0} ms", r.latency_p50()),
+            format!("{:.0} ms", r.latency_p99()),
+            r.queue.peak_depth.to_string(),
+            format!("{:.2} s", r.wall_ms / 1000.0),
+            format!("{:.0}", cell.wall_throughput()),
+            format!("{:.0}x", exp.horizon_ms / r.wall_ms.max(1e-9)),
+        ]);
+    }
+    t.print();
+    println!(
+        "per-shard slices reconcile exactly with the aggregates in every cell \
+         (asserted during the run); speedup = simulated horizon / wall clock."
+    );
+    println!(
+        "hot-swap cell (8 shards): store epochs observed {:?}; every completion's \
+         (epoch, digest) stamp was a registered installation — torn-free: {}",
+        exp.epochs_observed, exp.epochs_torn_free
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn experiment() -> ScaleExperiment {
+        run(&Ctx::synthetic(), 600, 96, 17)
+    }
+
+    #[test]
+    fn sweep_conserves_every_request_in_every_cell() {
+        let exp = experiment();
+        assert_eq!(exp.cells.len(), GRID.len());
+        for cell in &exp.cells {
+            assert_eq!(cell.report.records.len(), 600, "s{} w{}", cell.shards, cell.workers);
+            assert_eq!(cell.report.shards, cell.shards);
+            reconcile(&cell.report); // idempotent re-check outside run()
+            assert!(cell.report.completed() > 0, "overload never starves completions");
+        }
+    }
+
+    #[test]
+    fn sharded_cells_actually_partition_traffic() {
+        let exp = experiment();
+        for cell in exp.cells.iter().filter(|c| c.shards > 1) {
+            let populated = cell
+                .report
+                .shard_breakdown()
+                .iter()
+                .filter(|b| b.requests > 0)
+                .count();
+            assert!(populated > 1, "s{}: routing left every request on one shard", cell.shards);
+        }
+    }
+
+    #[test]
+    fn discrete_clock_replays_faster_than_real_time() {
+        let exp = experiment();
+        // ~600 requests at ~12/s ≈ 50 simulated seconds; the replay
+        // must beat the trace horizon by a wide margin
+        assert!(exp.horizon_ms > 10_000.0, "trace spans real seconds: {}", exp.horizon_ms);
+        for cell in &exp.cells {
+            assert!(
+                cell.report.wall_ms < exp.horizon_ms,
+                "s{} w{}: replay slower than real time ({} ms wall vs {} ms simulated)",
+                cell.shards,
+                cell.workers,
+                cell.report.wall_ms,
+                exp.horizon_ms
+            );
+        }
+    }
+
+    #[test]
+    fn hot_swap_under_sharded_replay_is_torn_free() {
+        let exp = experiment();
+        assert!(exp.epochs_torn_free);
+        assert_eq!(exp.epochs_observed, vec![0, 1]);
+    }
+
+    #[test]
+    fn report_prints() {
+        print_report(&experiment());
+    }
+}

@@ -77,6 +77,7 @@ pub fn run(ctx: &Ctx, net: Network, requests: usize, seed: u64) -> ServingExperi
             time_scale: 0.0,
             seed,
             reuse,
+            ..PipelineConfig::default()
         };
         let report = run_pipeline(&set, policy, &tl, &cfg, |_| {
             Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: EXEC_STREAM })

@@ -9,6 +9,7 @@
 //! dynasplit serve     [--net --requests --workers --policy --rate --adapt ...]
 //! dynasplit adapt     [--net --requests]   closed-loop adaptation experiment
 //! dynasplit throughput [--net --requests]   serving-pipeline experiment
+//! dynasplit scale     [--requests --devices]  fleet-scale sweep (DESIGN.md §14)
 //! dynasplit prelim                     Fig. 2a-e
 //! dynasplit bounds                     Table 2
 //! dynasplit workload                   Fig. 5
@@ -67,6 +68,7 @@ fn run() -> Result<()> {
         "mixed" => cmd_mixed(),
         "adapt" => cmd_adapt(),
         "throughput" => cmd_throughput(),
+        "scale" => cmd_scale(),
         "prelim" => cmd_prelim(),
         "bounds" => cmd_bounds(),
         "workload" => cmd_workload(),
@@ -97,6 +99,8 @@ subcommands:
   mixed          mixed-network serving experiment (mix x workers x policy + mix shift)
   adapt          closed-loop adaptation experiment (mid-run world shift + QoS recovery)
   throughput     serving-pipeline throughput experiment (policies x workers x cache)
+  scale          fleet-scale sweep: sharded admission x workers under a discrete-event
+                 clock (heterogeneous device fleet, diurnal + flash-crowd arrivals)
   prelim         Fig. 2a-e preliminary study
   bounds         Table 2 latency bounds
   workload       Fig. 5 QoS distributions
@@ -184,7 +188,8 @@ fn cmd_serve() -> Result<()> {
         .opt("budget", "20", "per-request energy cap in J (only --policy budget)")
         .opt("rate", "100", "mean arrival rate (requests/s)")
         .opt("burst", "0", "burst size (0 = pure Poisson arrivals)")
-        .opt("queue", "256", "admission queue capacity")
+        .opt("queue", "256", "admission queue capacity (per shard)")
+        .opt("shards", "1", "admission queue shards (1 = the classic single queue)")
         .opt("coalesce", "4", "max same-config requests coalesced per activation")
         .opt(
             "time-scale",
@@ -194,6 +199,11 @@ fn cmd_serve() -> Result<()> {
              wait-aware: budgets shrink with queue wait, expired requests shed)",
         )
         .flag("no-reuse", "disable the config-reuse cache (reconfigure every batch)")
+        .flag(
+            "discrete",
+            "discrete-event clock: batch completions advance simulated time, the run \
+             replays at full speed with real-time queueing/expiry semantics (DESIGN.md §14)",
+        )
         .flag(
             "adapt",
             "close the loop: record telemetry, detect drift, re-solve online, hot-swap \
@@ -249,6 +259,8 @@ fn cmd_serve() -> Result<()> {
         time_scale: a.f64("time-scale")?,
         seed,
         reuse: !a.flag("no-reuse"),
+        shards: a.usize("shards")?,
+        discrete: a.flag("discrete"),
     };
     let report = if a.flag("adapt") {
         let adapt_cfg = AdaptConfig {
@@ -384,6 +396,8 @@ fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
         time_scale: a.f64("time-scale")?,
         seed,
         reuse: !a.flag("no-reuse"),
+        shards: a.usize("shards")?,
+        discrete: a.flag("discrete"),
     };
     let report = run_pipeline_stores(&stores, policy.as_ref(), &tl, &cfg, None, None, |_| {
         Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
@@ -440,6 +454,22 @@ fn cmd_throughput() -> Result<()> {
     let ctx = Ctx::load(a.str("artifacts")?);
     let exp = experiments::serving::run(&ctx, net, a.usize("requests")?, a.u64("seed")?);
     experiments::serving::print_report(&exp);
+    Ok(())
+}
+
+fn cmd_scale() -> Result<()> {
+    let a = spec("scale", "fleet-scale sweep: sharded admission under a discrete-event clock")
+        .opt("requests", "100000", "fleet requests per sweep cell")
+        .opt("devices", "5000", "devices in the simulated fleet")
+        .parse_env(2)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let exp = experiments::scale::run(
+        &ctx,
+        a.usize("requests")?,
+        a.usize("devices")?,
+        a.u64("seed")?,
+    );
+    experiments::scale::print_report(&exp);
     Ok(())
 }
 

@@ -2,7 +2,7 @@
 //!
 //! Request deadlines are absolute on the *experiment clock* — the
 //! timeline of `arrival_ms` offsets.  The pipeline runs that timeline in
-//! one of two modes, and deadline arithmetic must follow:
+//! one of three modes, and deadline arithmetic must follow:
 //!
 //! * **virtual time** (`time_scale == 0`, the experiment default):
 //!   requests are injected as fast as possible, queue wait does not
@@ -14,7 +14,15 @@
 //!   experiment clock (`now = elapsed / scale`), so a queued request
 //!   burns its budget while it waits — policies then decide on
 //!   `deadline - now` (ROADMAP "wait-aware scheduling") and the worker
-//!   sheds requests whose deadline already passed at pop time.
+//!   sheds requests whose deadline already passed at pop time;
+//! * **discrete-event** ([`ServeClock::discrete`], the fleet-scale
+//!   mode, DESIGN.md §14): experiment "now" is a shared monotone
+//!   [`EventClock`] advanced only by *completion events* — a batch that
+//!   starts at `max(now, arrival)` and takes the simulated service time
+//!   pushes the clock to its completion stamp.  Nothing sleeps, so
+//!   10^5–10^6 request timelines replay faster than real time, while
+//!   queued requests still burn budget and expire whenever the backlog
+//!   outruns their deadlines.
 //!
 //! This module is also the repo's **only sanctioned wall-clock seam**
 //! (dslint `clock-discipline`, DESIGN.md §13): every other module
@@ -24,18 +32,62 @@
 //! audited file is what lets the virtual-time tests stay deterministic
 //! and the real-time paths stay consistent with each other.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::workload::TimedRequest;
 
+/// A shared monotone simulation clock for the discrete-event mode:
+/// milliseconds of experiment time as `f64` bits in one atomic.
+/// `advance_to` is a `fetch_max`, so concurrent workers completing
+/// batches "out of order" still yield a non-decreasing global now —
+/// overlapping services advance the clock by their max, not their sum,
+/// which is what models M workers serving in parallel.
+///
+/// All accesses are relaxed: the clock is a scalar approximation read
+/// for expiry/budget decisions, never a synchronization edge (the queue
+/// mutexes provide those).  Non-negative `f64` bit patterns order the
+/// same as the values, which is what lets `fetch_max` on the raw bits
+/// implement a numeric max.
+#[derive(Debug, Default)]
+pub struct EventClock {
+    now_bits: AtomicU64,
+}
+
+impl EventClock {
+    /// A clock at experiment time 0.
+    pub fn new() -> EventClock {
+        EventClock { now_bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    /// Current simulated now (ms).
+    pub fn now_ms(&self) -> f64 {
+        f64::from_bits(self.now_bits.load(Ordering::Relaxed))
+    }
+
+    /// Advance the clock to `t_ms` if that is later than now (monotone
+    /// — a stale completion never rewinds time).  Returns the clock
+    /// value after the advance.
+    pub fn advance_to(&self, t_ms: f64) -> f64 {
+        let t = t_ms.max(0.0);
+        let prev = self.now_bits.fetch_max(t.to_bits(), Ordering::Relaxed);
+        f64::from_bits(prev).max(t)
+    }
+}
+
 /// How the pipeline maps wall clock onto the experiment clock.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum ServeClock {
     /// As-fast-as-possible injection: budgets equal the raw QoS level,
     /// queued requests never expire.
     Virtual,
     /// Real-time replay: `now_ms = elapsed / scale`.
     Real { t0: Instant, scale: f64 },
+    /// Discrete-event simulation: shared monotone now advanced by
+    /// completion events, no sleeping anywhere.  Clones share the same
+    /// underlying clock.
+    Discrete { now: Arc<EventClock> },
 }
 
 impl ServeClock {
@@ -55,9 +107,20 @@ impl ServeClock {
         ServeClock::new(Instant::now(), time_scale)
     }
 
+    /// A fresh discrete-event clock at experiment time 0.  Clone it
+    /// into every worker and feeder of one pipeline run — the clones
+    /// share the underlying [`EventClock`].
+    pub fn discrete() -> ServeClock {
+        ServeClock::Discrete { now: Arc::new(EventClock::new()) }
+    }
+
     /// Sleep until `arrival_ms` on the experiment clock (the open-loop
     /// feeder's pacing).  No-op in virtual time or when the arrival is
-    /// already due.
+    /// already due.  Also a no-op in discrete-event mode: arrivals are
+    /// injected at full speed and take effect through the
+    /// `max(now, arrival)` service-start rule in
+    /// [`ServeClock::complete_batch`], so a lightly-loaded fleet's
+    /// clock still tracks its arrival timeline without ever sleeping.
     pub fn pace_to(&self, arrival_ms: f64) {
         if let ServeClock::Real { t0, scale } = self {
             let target = *t0 + Duration::from_secs_f64(arrival_ms / 1000.0 * scale);
@@ -74,6 +137,7 @@ impl ServeClock {
             ServeClock::Real { t0, scale } => {
                 Some(t0.elapsed().as_secs_f64() * 1000.0 / scale)
             }
+            ServeClock::Discrete { now } => Some(now.now_ms()),
         }
     }
 
@@ -84,6 +148,39 @@ impl ServeClock {
         match now {
             None => tr.request.qos_ms,
             Some(now_ms) => tr.deadline_ms() - now_ms,
+        }
+    }
+
+    /// The completion stamp for a batch the worker just executed, and —
+    /// in discrete-event mode — the completion *event* that advances
+    /// simulated time.
+    ///
+    /// * virtual time: `None` (no experiment clock, the
+    ///   baseline-equivalence semantics);
+    /// * real time: the wall-derived now, exactly what the worker
+    ///   previously stamped;
+    /// * discrete-event: the batch starts at `max(now-at-pop, latest
+    ///   arrival in the batch)` — a request cannot start before it
+    ///   arrives, and a backlogged worker cannot start before the
+    ///   backlog's clock — and completes `service_ms` later (the
+    ///   slowest member of the batch; coalesced members ride along).
+    ///   The global clock advances to that completion, which is how
+    ///   time passes at all in this mode.
+    pub fn complete_batch(
+        &self,
+        now: Option<f64>,
+        arrival_ms: f64,
+        service_ms: f64,
+    ) -> Option<f64> {
+        match self {
+            ServeClock::Virtual => None,
+            ServeClock::Real { .. } => self.now_ms(),
+            ServeClock::Discrete { now: clock } => {
+                let start = now.unwrap_or(0.0).max(arrival_ms);
+                let done = start + service_ms.max(0.0);
+                clock.advance_to(done);
+                Some(done)
+            }
         }
     }
 }
@@ -234,6 +331,60 @@ mod tests {
         assert!(past.expired());
         assert_eq!(past.remaining(), None);
         past.sleep_until(); // expired: returns immediately
+    }
+
+    #[test]
+    fn event_clock_is_monotone_under_out_of_order_completions() {
+        let c = EventClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        assert_eq!(c.advance_to(50.0), 50.0);
+        // a stale completion never rewinds simulated time
+        assert_eq!(c.advance_to(10.0), 50.0);
+        assert_eq!(c.now_ms(), 50.0);
+        assert_eq!(c.advance_to(75.5), 75.5);
+        // negative stamps clamp to zero and cannot move the clock
+        assert_eq!(c.advance_to(-1.0), 75.5);
+    }
+
+    #[test]
+    fn discrete_mode_advances_on_completions_without_sleeping() {
+        let sw = Stopwatch::start();
+        let clock = ServeClock::discrete();
+        assert_eq!(clock.now_ms(), Some(0.0));
+        clock.pace_to(1e9); // far-future arrival: must not sleep
+        assert_eq!(clock.now_ms(), Some(0.0), "arrivals do not advance time");
+        // a 200 ms service starting at arrival 100 completes at 300
+        let done = clock.complete_batch(clock.now_ms(), 100.0, 200.0);
+        assert_eq!(done, Some(300.0));
+        assert_eq!(clock.now_ms(), Some(300.0));
+        // clones share the same underlying clock
+        let twin = clock.clone();
+        assert_eq!(twin.now_ms(), Some(300.0));
+        // backlogged start: now (300) > arrival (150) -> starts at 300
+        assert_eq!(twin.complete_batch(twin.now_ms(), 150.0, 50.0), Some(350.0));
+        assert_eq!(clock.now_ms(), Some(350.0));
+        assert!(sw.elapsed_ms() < 100.0, "discrete mode must not sleep");
+    }
+
+    #[test]
+    fn discrete_mode_expires_queued_requests_when_backlog_outruns_deadlines() {
+        let clock = ServeClock::discrete();
+        let r = tr(0.0, 50.0); // deadline at 50
+        // still serviceable at time 0
+        assert!(clock.remaining_ms(&r, clock.now_ms()) > 0.0);
+        // a long completion pushes now past the deadline
+        clock.complete_batch(clock.now_ms(), 0.0, 200.0);
+        assert!(clock.remaining_ms(&r, clock.now_ms()) < 0.0, "budget burned");
+    }
+
+    #[test]
+    fn complete_batch_matches_per_mode_now_semantics() {
+        // virtual: no stamp, the bitwise-baseline contract
+        assert_eq!(ServeClock::Virtual.complete_batch(None, 0.0, 10.0), None);
+        // real time: the wall-derived now, service args ignored
+        let clock = ServeClock::start(1.0);
+        let stamped = clock.complete_batch(clock.now_ms(), 0.0, 1e9).expect("real");
+        assert!(stamped < 1e6, "wall now, not arrival+service");
     }
 
     #[test]

@@ -73,10 +73,10 @@ use crate::workload::TimedRequest;
 
 pub use batch::{BatchLog, BatchRuntimeExecutor};
 pub use cache::{CacheSet, CacheStats, ReuseCache};
-pub use clock::{ServeClock, Stopwatch, WallDeadline};
+pub use clock::{EventClock, ServeClock, Stopwatch, WallDeadline};
 pub use multi::NetExecutorMap;
-pub use queue::{AdmissionQueue, QueueStats};
-pub use report::{NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport};
+pub use queue::{route_shard, AdmissionQueue, QueueStats, RequestSource, ShardWorkerView, ShardedQueue};
+pub use report::{NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport, ShardBreakdown};
 pub use worker::Worker;
 
 /// Pipeline shape knobs.
@@ -84,7 +84,9 @@ pub use worker::Worker;
 pub struct PipelineConfig {
     /// Worker threads; each owns an executor + config-reuse cache.
     pub workers: usize,
-    /// Admission queue capacity (requests beyond it are shed).
+    /// Admission queue capacity *per shard* (requests beyond it are
+    /// shed).  With `shards == 1` this is exactly the old total
+    /// capacity.
     pub queue_capacity: usize,
     /// Maximum same-config requests coalesced into one activation.
     pub max_batch: usize,
@@ -100,6 +102,20 @@ pub struct PipelineConfig {
     /// Config-reuse cache on/off (off = every request reconfigures —
     /// the baseline that shows what the cache buys).
     pub reuse: bool,
+    /// Admission-queue shards ([`ShardedQueue`], DESIGN.md §14): each
+    /// shard gets its own feeder thread pacing the rendezvous-routed
+    /// slice of the timeline, workers pop home-shard-first with work
+    /// stealing, and coalescing never crosses shards.  `1` (the
+    /// default) is the identity configuration — one queue, the
+    /// caller-thread feeder, today's pipeline verbatim — which is what
+    /// keeps the PR 2–6 bitwise baselines standing.
+    pub shards: usize,
+    /// Discrete-event clock ([`ServeClock::discrete`]): simulated time
+    /// advances on batch-completion events instead of wall sleeps, so
+    /// 10^5+-request fleet timelines replay faster than real time while
+    /// queued requests still burn budget and expire.  Overrides
+    /// `time_scale` when set.
+    pub discrete: bool,
 }
 
 impl Default for PipelineConfig {
@@ -111,6 +127,8 @@ impl Default for PipelineConfig {
             time_scale: 0.0,
             seed: 42,
             reuse: true,
+            shards: 1,
+            discrete: false,
         }
     }
 }
@@ -231,6 +249,7 @@ where
     ensure!(!stores.is_empty(), "store map binds no network");
     ensure!(cfg.workers >= 1, "need at least one worker");
     ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+    ensure!(cfg.shards >= 1, "need at least one queue shard");
     if let Some(t) = telemetry {
         ensure!(
             t.workers() >= cfg.workers,
@@ -239,12 +258,17 @@ where
             cfg.workers
         );
     }
-    let queue = AdmissionQueue::new(cfg.queue_capacity);
+    let queue = ShardedQueue::new(cfg.shards, cfg.queue_capacity);
     let wall = clock::Stopwatch::start();
     // virtual time for as-fast-as-possible injection, real-time replay
-    // otherwise: workers shed expired requests and hand policies the
-    // *remaining* budget (wait-aware scheduling)
-    let clock = ServeClock::start(cfg.time_scale);
+    // or discrete-event simulation otherwise: workers shed expired
+    // requests and hand policies the *remaining* budget (wait-aware
+    // scheduling)
+    let clock = if cfg.discrete {
+        ServeClock::discrete()
+    } else {
+        ServeClock::start(cfg.time_scale)
+    };
     let mut records: Vec<ServeRecord> = Vec::with_capacity(timeline.len());
 
     let networks = stores.networks();
@@ -254,7 +278,13 @@ where
             let queue = &queue;
             let factory = &factory;
             let networks = &networks;
+            let clock = clock.clone();
             handles.push(s.spawn(move || -> Result<(Vec<ServeRecord>, CacheStats)> {
+                // the worker's shard view: home shard by worker id,
+                // work-stealing pops, coalescing pinned to the shard
+                // the batch leader came from.  With shards == 1 every
+                // call delegates verbatim to the single queue.
+                let view = queue::ShardWorkerView::new(queue, w);
                 let executor = factory(w)?;
                 let mut rng = Pcg32::new(cfg.seed, 2000 + w as u64);
                 let caches = CacheSet::new(networks, cfg.reuse, &mut rng);
@@ -263,7 +293,7 @@ where
                 let policies = PolicySet::new(policy, networks);
                 let mut worker = Worker {
                     id: w,
-                    queue,
+                    queue: &view,
                     stores,
                     policies,
                     max_batch: cfg.max_batch,
@@ -279,19 +309,57 @@ where
             }));
         }
 
-        // open-loop feeder: offer at (scaled) arrival times; shed on a
-        // full queue, or earlier when the admission gate predicts the
-        // queue wait alone already exceeds the request's budget
-        for tr in timeline {
-            clock.pace_to(tr.arrival_ms);
-            if let Some(gate) = gate {
-                if !gate.admit(queue.depth(), tr.request.qos_ms) {
-                    records.push(ServeRecord::shed_by_admission(tr));
-                    continue;
+        // open-loop feeders: offer at (scaled) arrival times; shed on a
+        // full shard, or earlier when the admission gate predicts the
+        // queue wait alone already exceeds the request's budget.  With
+        // one shard the caller thread feeds (today's pipeline); with
+        // N shards each shard gets its own feeder thread pacing the
+        // rendezvous-routed slice of the timeline.
+        if cfg.shards == 1 {
+            for tr in timeline {
+                clock.pace_to(tr.arrival_ms);
+                if let Some(gate) = gate {
+                    if !gate.admit(queue.depth(), tr.request.qos_ms) {
+                        records.push(ServeRecord::shed_by_admission(tr));
+                        continue;
+                    }
+                }
+                if !queue.offer(tr.clone()) {
+                    records.push(ServeRecord::rejected_queue_full(tr));
                 }
             }
-            if !queue.offer(tr.clone()) {
-                records.push(ServeRecord::rejected_queue_full(tr));
+        } else {
+            let mut feeders = Vec::with_capacity(cfg.shards);
+            for shard in 0..cfg.shards {
+                let queue = &queue;
+                let clock = clock.clone();
+                feeders.push(s.spawn(move || -> Vec<ServeRecord> {
+                    let mut shed = Vec::new();
+                    for tr in timeline {
+                        if queue.route(tr.request.id) != shard {
+                            continue;
+                        }
+                        clock.pace_to(tr.arrival_ms);
+                        if let Some(gate) = gate {
+                            // per-shard backpressure: the gate judges
+                            // this shard's own backlog
+                            if !gate.admit(queue.depth_of(shard), tr.request.qos_ms) {
+                                shed.push(ServeRecord::shed_by_admission(tr));
+                                continue;
+                            }
+                        }
+                        if !queue.offer_to(shard, tr.clone()) {
+                            shed.push(ServeRecord::rejected_queue_full(tr));
+                        }
+                    }
+                    shed
+                }));
+            }
+            for f in feeders {
+                records.extend(
+                    f.join()
+                        .map_err(|_| anyhow::anyhow!("shard feeder panicked"))?,
+                );
             }
         }
         queue.close();
@@ -317,6 +385,7 @@ where
         cache,
         queue: queue.stats(),
         workers: cfg.workers,
+        shards: cfg.shards,
         wall_ms: wall.elapsed_ms(),
     })
 }
@@ -419,6 +488,141 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_run_for_any_shard_count() {
+        // virtual time + stateless policy + order-independent executor:
+        // shard routing and work stealing must not change any
+        // per-request result — only who served it
+        let set = set2();
+        let timeline = tl(40);
+        let baseline =
+            run_pipeline(&set, &PaperPolicy, &timeline, &PipelineConfig::default(), |_| {
+                Ok(PureExec)
+            })
+            .unwrap();
+        for shards in [1, 2, 4] {
+            let cfg = PipelineConfig {
+                workers: 3,
+                queue_capacity: 64,
+                shards,
+                ..PipelineConfig::default()
+            };
+            let report =
+                run_pipeline(&set, &PaperPolicy, &timeline, &cfg, |_| Ok(PureExec)).unwrap();
+            assert_eq!(report.records.len(), 40, "shards {shards}");
+            assert_eq!(report.shards, shards);
+            assert_eq!(report.queue.admitted, 40);
+            assert_eq!(report.queue.rejected, 0);
+            for (rec, want) in report.records.iter().zip(&baseline.records) {
+                assert_eq!(rec.request_id, want.request_id);
+                match (&rec.outcome, &want.outcome) {
+                    (
+                        ServeOutcome::Done { config, latency_ms, energy_j, accuracy, .. },
+                        ServeOutcome::Done {
+                            config: c0,
+                            latency_ms: l0,
+                            energy_j: e0,
+                            accuracy: a0,
+                            ..
+                        },
+                    ) => {
+                        assert_eq!(config, c0, "shards {shards}");
+                        assert_eq!(latency_ms, l0);
+                        assert_eq!(energy_j, e0);
+                        assert_eq!(accuracy, a0);
+                    }
+                    (got, want) => panic!("shards {shards}: {got:?} vs {want:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_shards_is_an_error() {
+        let set = set2();
+        let cfg = PipelineConfig { shards: 0, ..PipelineConfig::default() };
+        assert!(run_pipeline(&set, &PaperPolicy, &tl(4), &cfg, |_| Ok(PureExec)).is_err());
+    }
+
+    #[test]
+    fn discrete_clock_replays_fast_and_sheds_when_backlog_outruns_deadlines() {
+        // 24 requests, all arriving at t=0 with 100 ms budgets, one
+        // worker, ~90 ms simulated service each: the first completes
+        // inside its budget, and once the simulated backlog passes
+        // 100 ms the remaining deadlines start expiring — all without a
+        // single wall-clock sleep
+        let set = set2();
+        let timeline: Vec<TimedRequest> = (0..24)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: 100.0,
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: 0.0,
+            })
+            .collect();
+        let cfg = PipelineConfig {
+            workers: 1,
+            queue_capacity: 64,
+            max_batch: 1,
+            discrete: true,
+            ..PipelineConfig::default()
+        };
+        let wall = Stopwatch::start();
+        let report = run_pipeline(&set, &PaperPolicy, &timeline, &cfg, |_| Ok(PureExec)).unwrap();
+        assert!(wall.elapsed_ms() < 5000.0, "discrete mode must not sleep");
+        assert_eq!(report.records.len(), 24, "every request accounted for");
+        assert!(report.completed() >= 1, "{}", report.summary_line());
+        assert!(report.expired_in_queue() >= 1, "{}", report.summary_line());
+        assert_eq!(report.queue.expired, report.expired_in_queue());
+        assert_eq!(report.completed() + report.expired_in_queue(), 24);
+        // completion stamps are simulated time: monotone consistent
+        // with arrival + service, never wall-clock
+        for r in &report.records {
+            if let ServeOutcome::Done { finished_ms, latency_ms, .. } = &r.outcome {
+                let f = finished_ms.expect("discrete mode stamps finishes");
+                assert!(
+                    f >= r.arrival_ms + latency_ms - 1e-9,
+                    "finish {f} before arrival+service for request {}",
+                    r.request_id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn discrete_clock_tracks_arrival_times_under_light_load() {
+        // widely spaced arrivals with ample budgets: nothing expires,
+        // and every finish stamp lands on its own arrival + service
+        // (the max(now, arrival) service-start rule)
+        let set = set2();
+        let timeline: Vec<TimedRequest> = (0..12)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: 500.0,
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: i as f64 * 1000.0,
+            })
+            .collect();
+        let cfg = PipelineConfig {
+            workers: 2,
+            queue_capacity: 64,
+            max_batch: 1,
+            discrete: true,
+            ..PipelineConfig::default()
+        };
+        let report = run_pipeline(&set, &PaperPolicy, &timeline, &cfg, |_| Ok(PureExec)).unwrap();
+        assert_eq!(report.completed(), 12, "{}", report.summary_line());
+        assert_eq!(report.qos_hit_rate(), 1.0, "{}", report.summary_line());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Bounded admission queue feeding the serving workers.
+//! Bounded admission queues feeding the serving workers.
 //!
 //! Open-loop semantics: the arrival generator *offers* requests at their
 //! arrival times and never blocks — when the queue is full the request
@@ -7,10 +7,27 @@
 //! closes the queue and it drains empty.  [`AdmissionQueue::pop_if`]
 //! lets a worker opportunistically drain same-config successors for
 //! batch coalescing without committing to whatever comes next.
+//!
+//! Two scale seams live here (DESIGN.md §14):
+//!
+//! * **Contention-free accounting**: the counters behind
+//!   [`AdmissionQueue::stats`] and [`AdmissionQueue::depth`] are relaxed
+//!   atomics updated inside the existing critical sections, so the
+//!   admission gate and the adapt loop can poll them at any rate
+//!   without ever taking the queue mutex — polling cannot stall feeders
+//!   or workers.
+//! * **Sharding**: [`ShardedQueue`] composes N independent
+//!   [`AdmissionQueue`] shards behind rendezvous-hash routing
+//!   ([`route_shard`]) with work-stealing pops.  `shards = 1` delegates
+//!   every operation verbatim to the single underlying queue, which is
+//!   what keeps the PR 2–6 bitwise baselines standing.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
+use crate::util::hash::fnv1a;
 use crate::util::sync::{lock_clean, wait_clean};
 use crate::workload::TimedRequest;
 
@@ -31,15 +48,26 @@ pub struct QueueStats {
 struct Inner {
     deque: VecDeque<TimedRequest>,
     closed: bool,
-    stats: QueueStats,
 }
 
 /// Thread-safe bounded MPMC queue (mutex + condvar — the queue is never
 /// the bottleneck next to per-request inference, so simplicity wins).
+///
+/// The deque itself stays behind the mutex; every *counter* is a
+/// relaxed atomic written inside the critical section and read without
+/// it, so [`AdmissionQueue::depth`]/[`AdmissionQueue::stats`] polling
+/// never contends with the hot path.  Counter reads taken mid-run are
+/// instantaneous snapshots; reads taken after `close()` + worker join
+/// are exact (the joins establish the happens-before edge).
 pub struct AdmissionQueue {
     inner: Mutex<Inner>,
     available: Condvar,
     capacity: usize,
+    depth: AtomicUsize,
+    admitted: AtomicUsize,
+    rejected: AtomicUsize,
+    expired: AtomicUsize,
+    peak_depth: AtomicUsize,
 }
 
 impl AdmissionQueue {
@@ -49,10 +77,14 @@ impl AdmissionQueue {
             inner: Mutex::new(Inner {
                 deque: VecDeque::with_capacity(capacity.min(4096)),
                 closed: false,
-                stats: QueueStats::default(),
             }),
             available: Condvar::new(),
             capacity,
+            depth: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+            peak_depth: AtomicUsize::new(0),
         }
     }
 
@@ -61,13 +93,14 @@ impl AdmissionQueue {
     pub fn offer(&self, request: TimedRequest) -> bool {
         let mut inner = lock_clean(&self.inner);
         if inner.closed || inner.deque.len() >= self.capacity {
-            inner.stats.rejected += 1;
+            self.rejected.fetch_add(1, Ordering::Relaxed);
             return false;
         }
         inner.deque.push_back(request);
-        inner.stats.admitted += 1;
         let depth = inner.deque.len();
-        inner.stats.peak_depth = inner.stats.peak_depth.max(depth);
+        self.depth.store(depth, Ordering::Relaxed);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.peak_depth.fetch_max(depth, Ordering::Relaxed);
         drop(inner);
         self.available.notify_one();
         true
@@ -76,6 +109,21 @@ impl AdmissionQueue {
     /// Blocking pop: `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<TimedRequest> {
         self.pop_due(|| None).map(|(r, _, _)| r)
+    }
+
+    /// Pop accounting shared by the blocking and non-blocking paths:
+    /// update the depth mirror, stamp `now`, and count expiry.
+    fn account_pop<F>(&self, inner: &mut Inner, r: TimedRequest, now_ms: &F) -> (TimedRequest, Option<f64>, bool)
+    where
+        F: Fn() -> Option<f64>,
+    {
+        self.depth.store(inner.deque.len(), Ordering::Relaxed);
+        let now = now_ms();
+        let expired = matches!(now, Some(n) if r.deadline_ms() <= n);
+        if expired {
+            self.expired.fetch_add(1, Ordering::Relaxed);
+        }
+        (r, now, expired)
     }
 
     /// Blocking pop with deadline awareness.  `now_ms` is evaluated
@@ -94,18 +142,26 @@ impl AdmissionQueue {
         let mut inner = lock_clean(&self.inner);
         loop {
             if let Some(r) = inner.deque.pop_front() {
-                let now = now_ms();
-                let expired = matches!(now, Some(n) if r.deadline_ms() <= n);
-                if expired {
-                    inner.stats.expired += 1;
-                }
-                return Some((r, now, expired));
+                return Some(self.account_pop(&mut inner, r, &now_ms));
             }
             if inner.closed {
                 return None;
             }
             inner = wait_clean(&self.available, inner);
         }
+    }
+
+    /// Non-blocking [`AdmissionQueue::pop_due`]: returns `None`
+    /// immediately when the queue is currently empty (whether or not it
+    /// is closed).  The work-stealing scan uses this so an idle worker
+    /// never parks on a shard that is not its home.
+    pub fn try_pop_due<F>(&self, now_ms: F) -> Option<(TimedRequest, Option<f64>, bool)>
+    where
+        F: Fn() -> Option<f64>,
+    {
+        let mut inner = lock_clean(&self.inner);
+        let r = inner.deque.pop_front()?;
+        Some(self.account_pop(&mut inner, r, &now_ms))
     }
 
     /// Non-blocking conditional pop: takes the head only when `pred`
@@ -120,16 +176,19 @@ impl AdmissionQueue {
             None => false,
         };
         if take {
-            inner.deque.pop_front()
+            let r = inner.deque.pop_front();
+            self.depth.store(inner.deque.len(), Ordering::Relaxed);
+            r
         } else {
             None
         }
     }
 
     /// Requests currently queued (the admission gate's backpressure
-    /// signal).
+    /// signal).  Lock-free: a relaxed read of the depth mirror — cheap
+    /// enough to poll every request without stalling the hot path.
     pub fn depth(&self) -> usize {
-        lock_clean(&self.inner).deque.len()
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Close the queue: pending requests still drain, new offers fail.
@@ -138,8 +197,274 @@ impl AdmissionQueue {
         self.available.notify_all();
     }
 
+    /// Whether the queue is closed *and* fully drained — the sharded
+    /// scan's termination test.  Takes the mutex so the answer is
+    /// authoritative (the lock-free mirrors may be mutually stale).
+    fn is_closed_and_empty(&self) -> bool {
+        let inner = lock_clean(&self.inner);
+        inner.closed && inner.deque.is_empty()
+    }
+
+    /// Counter snapshot.  Lock-free (relaxed atomics); exact once the
+    /// feeders have closed the queue and the workers have been joined.
     pub fn stats(&self) -> QueueStats {
-        lock_clean(&self.inner).stats
+        QueueStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            peak_depth: self.peak_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Rendezvous-hash (highest-random-weight) shard routing: every
+/// producer and consumer agrees on the home shard of a request id
+/// without coordination, and the assignment stays uniform for any
+/// shard count.  `shards = 1` trivially routes everything to shard 0.
+pub fn route_shard(request_id: usize, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut best = 0usize;
+    let mut best_weight = fnv1a([request_id as u64, 0]);
+    for s in 1..shards {
+        let w = fnv1a([request_id as u64, s as u64]);
+        if w > best_weight {
+            best_weight = w;
+            best = s;
+        }
+    }
+    best
+}
+
+/// N independent [`AdmissionQueue`] shards behind one facade.
+///
+/// * **Routing** — [`route_shard`] on the request id; per-shard feeders
+///   pace disjoint slices of the timeline, so no two producers contend
+///   on the same shard mutex.
+/// * **Work stealing** — [`ShardedQueue::pop_due_from`] drains the
+///   caller's home shard first, then scans the other shards
+///   non-blockingly in ring order.  Idle workers therefore help any
+///   backlogged shard, but a batch never spans shards (coalescing via
+///   [`ShardedQueue::pop_if_at`] stays within the shard the batch
+///   leader came from).
+/// * **Sleep/wake** — a worker that finds every shard empty parks on a
+///   shared eventcount (`seq`/`changed`): it re-reads the sequence
+///   number, rescans, and only sleeps if nothing changed since the scan
+///   began, so offers and closes can never be lost between scan and
+///   sleep.
+/// * **`shards = 1`** — every operation delegates verbatim to the
+///   single underlying queue (blocking pops use the shard's own
+///   condvar, no eventcount involved), which is the identity
+///   configuration the bitwise baseline-equivalence tests pin down.
+pub struct ShardedQueue {
+    shards: Vec<AdmissionQueue>,
+    seq: Mutex<u64>,
+    changed: Condvar,
+}
+
+impl ShardedQueue {
+    /// `shards` independent queues of `capacity_per_shard` each.
+    pub fn new(shards: usize, capacity_per_shard: usize) -> ShardedQueue {
+        assert!(shards >= 1, "shard count must be >= 1");
+        let mut qs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            qs.push(AdmissionQueue::new(capacity_per_shard));
+        }
+        ShardedQueue { shards: qs, seq: Mutex::new(0), changed: Condvar::new() }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct access to one shard (per-shard feeders, per-shard stats).
+    pub fn shard(&self, i: usize) -> &AdmissionQueue {
+        &self.shards[i]
+    }
+
+    /// The home shard of a request id under this queue's shard count.
+    pub fn route(&self, request_id: usize) -> usize {
+        route_shard(request_id, self.shards.len())
+    }
+
+    /// Offer to the request's home shard.
+    pub fn offer(&self, request: TimedRequest) -> bool {
+        let shard = self.route(request.request.id);
+        self.offer_to(shard, request)
+    }
+
+    /// Offer to an explicit shard (the per-shard feeders already know
+    /// the route of every request in their slice).
+    pub fn offer_to(&self, shard: usize, request: TimedRequest) -> bool {
+        let accepted = self.shards[shard].offer(request);
+        if accepted && self.shards.len() > 1 {
+            self.bump();
+        }
+        accepted
+    }
+
+    /// Close every shard; pending requests still drain.
+    pub fn close(&self) {
+        for q in &self.shards {
+            q.close();
+        }
+        if self.shards.len() > 1 {
+            self.bump();
+        }
+    }
+
+    /// Total queued requests across shards (lock-free).
+    pub fn depth(&self) -> usize {
+        self.shards.iter().map(|q| q.depth()).sum()
+    }
+
+    /// Queued requests on one shard (the per-shard feeders' gate
+    /// signal; lock-free).
+    pub fn depth_of(&self, shard: usize) -> usize {
+        self.shards[shard].depth()
+    }
+
+    /// Per-shard counter snapshot (lock-free).
+    pub fn stats_of(&self, shard: usize) -> QueueStats {
+        self.shards[shard].stats()
+    }
+
+    /// Aggregate counters: admitted/rejected/expired sum exactly across
+    /// shards (each event is counted on exactly one shard); the
+    /// aggregate `peak_depth` is the max over per-shard peaks (depths
+    /// on different shards are not simultaneous, so summing them would
+    /// overstate the backlog).
+    pub fn stats(&self) -> QueueStats {
+        let mut total = QueueStats::default();
+        for q in &self.shards {
+            let s = q.stats();
+            total.admitted += s.admitted;
+            total.rejected += s.rejected;
+            total.expired += s.expired;
+            total.peak_depth = total.peak_depth.max(s.peak_depth);
+        }
+        total
+    }
+
+    /// Blocking pop with deadline awareness and work stealing: home
+    /// shard first, then the other shards in ring order; parks on the
+    /// eventcount only after a full scan observed nothing.  Returns the
+    /// shard the request actually came from so the caller can keep
+    /// coalescing within it.  `None` once every shard is closed and
+    /// drained.
+    pub fn pop_due_from<F>(&self, home: usize, now_ms: F) -> Option<(TimedRequest, usize, Option<f64>, bool)>
+    where
+        F: Fn() -> Option<f64>,
+    {
+        let n = self.shards.len();
+        if n == 1 {
+            // identity configuration: today's single-queue behavior,
+            // same blocking pop on the shard's own condvar
+            return self.shards[0].pop_due(now_ms).map(|(r, now, e)| (r, 0, now, e));
+        }
+        loop {
+            let observed = *lock_clean(&self.seq);
+            for k in 0..n {
+                let s = (home + k) % n;
+                if let Some((r, now, e)) = self.shards[s].try_pop_due(&now_ms) {
+                    return Some((r, s, now, e));
+                }
+            }
+            if self.shards.iter().all(AdmissionQueue::is_closed_and_empty) {
+                return None;
+            }
+            let mut seq = lock_clean(&self.seq);
+            while *seq == observed {
+                seq = wait_clean(&self.changed, seq);
+            }
+        }
+    }
+
+    /// Conditional pop pinned to one shard — batch coalescing never
+    /// crosses shards, so per-shard report slices attribute every batch
+    /// to exactly one shard.
+    pub fn pop_if_at<F>(&self, shard: usize, pred: F) -> Option<TimedRequest>
+    where
+        F: FnOnce(&TimedRequest) -> bool,
+    {
+        self.shards[shard].pop_if(pred)
+    }
+
+    /// Advance the eventcount and wake every parked worker (new item or
+    /// close on some shard).
+    fn bump(&self) {
+        let mut seq = lock_clean(&self.seq);
+        *seq = seq.wrapping_add(1);
+        drop(seq);
+        self.changed.notify_all();
+    }
+}
+
+/// What a serving worker needs from its request source — implemented by
+/// the plain [`AdmissionQueue`] (unsharded pipeline, direct unit tests)
+/// and by [`ShardWorkerView`] (sharded pipeline).
+pub trait RequestSource {
+    /// Blocking deadline-aware pop; see [`AdmissionQueue::pop_due`].
+    fn pop_due<F>(&self, now_ms: F) -> Option<(TimedRequest, Option<f64>, bool)>
+    where
+        F: Fn() -> Option<f64>;
+
+    /// Conditional head pop for batch coalescing; see
+    /// [`AdmissionQueue::pop_if`].
+    fn pop_if<F>(&self, pred: F) -> Option<TimedRequest>
+    where
+        F: FnOnce(&TimedRequest) -> bool;
+}
+
+impl RequestSource for AdmissionQueue {
+    fn pop_due<F>(&self, now_ms: F) -> Option<(TimedRequest, Option<f64>, bool)>
+    where
+        F: Fn() -> Option<f64>,
+    {
+        AdmissionQueue::pop_due(self, now_ms)
+    }
+
+    fn pop_if<F>(&self, pred: F) -> Option<TimedRequest>
+    where
+        F: FnOnce(&TimedRequest) -> bool,
+    {
+        AdmissionQueue::pop_if(self, pred)
+    }
+}
+
+/// One worker's view of a [`ShardedQueue`]: a home shard for locality
+/// plus a cursor remembering which shard the last popped request came
+/// from, so coalescing (`pop_if`) stays within that shard.  Built
+/// inside the worker thread — not shared.
+pub struct ShardWorkerView<'q> {
+    queue: &'q ShardedQueue,
+    home: usize,
+    last: Cell<usize>,
+}
+
+impl<'q> ShardWorkerView<'q> {
+    pub fn new(queue: &'q ShardedQueue, worker: usize) -> ShardWorkerView<'q> {
+        let home = worker % queue.shard_count();
+        ShardWorkerView { queue, home, last: Cell::new(home) }
+    }
+}
+
+impl RequestSource for ShardWorkerView<'_> {
+    fn pop_due<F>(&self, now_ms: F) -> Option<(TimedRequest, Option<f64>, bool)>
+    where
+        F: Fn() -> Option<f64>,
+    {
+        let (r, shard, now, expired) = self.queue.pop_due_from(self.home, now_ms)?;
+        self.last.set(shard);
+        Some((r, now, expired))
+    }
+
+    fn pop_if<F>(&self, pred: F) -> Option<TimedRequest>
+    where
+        F: FnOnce(&TimedRequest) -> bool,
+    {
+        self.queue.pop_if_at(self.last.get(), pred)
     }
 }
 
@@ -259,6 +584,38 @@ mod tests {
     }
 
     #[test]
+    fn depth_and_stats_never_take_the_queue_mutex() {
+        // hold the queue mutex hostage from another thread; lock-free
+        // polling must still return instantly
+        let q = std::sync::Arc::new(AdmissionQueue::new(8));
+        q.offer(tr(0));
+        let q2 = q.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let hostage = std::thread::spawn(move || {
+            let _guard = lock_clean(&q2.inner);
+            tx.send(()).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        rx.recv().unwrap(); // mutex is now held by the hostage thread
+        let sw = crate::serve::clock::Stopwatch::start();
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.stats().admitted, 1);
+        assert!(sw.elapsed_ms() < 40.0, "polling blocked on the queue mutex");
+        hostage.join().unwrap();
+    }
+
+    #[test]
+    fn try_pop_due_never_blocks() {
+        let q = AdmissionQueue::new(8);
+        assert!(q.try_pop_due(|| None).is_none(), "empty, open queue");
+        q.offer(tr(0));
+        let (r, _, expired) = q.try_pop_due(|| None).unwrap();
+        assert_eq!((r.request.id, expired), (0, false));
+        q.close();
+        assert!(q.try_pop_due(|| None).is_none(), "empty, closed queue");
+    }
+
+    #[test]
     fn pop_due_evaluates_now_at_pop_time_not_call_time() {
         // the clock closure must not run until an item is handed out:
         // a worker blocking on an empty queue judges against pop time
@@ -298,5 +655,125 @@ mod tests {
         }
         q.close();
         assert_eq!(consumer.join().unwrap(), 50);
+    }
+
+    #[test]
+    fn route_shard_is_deterministic_uniform_and_total() {
+        assert_eq!(route_shard(123, 1), 0, "one shard routes everything to 0");
+        let shards = 4;
+        let mut counts = vec![0usize; shards];
+        for id in 0..4000 {
+            let s = route_shard(id, shards);
+            assert_eq!(s, route_shard(id, shards), "stable per id");
+            assert!(s < shards);
+            counts[s] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            // uniform-ish: each shard sees 25% +/- 10 points of 4000 ids
+            assert!((600..=1400).contains(&c), "shard {s} got {c} of 4000");
+        }
+    }
+
+    #[test]
+    fn sharded_routing_partitions_ids_across_shards() {
+        let q = ShardedQueue::new(4, 64);
+        for id in 0..64 {
+            assert!(q.offer(tr(id)));
+        }
+        let mut by_shard = 0;
+        for s in 0..4 {
+            assert_eq!(q.stats_of(s).admitted, q.depth_of(s));
+            by_shard += q.depth_of(s);
+        }
+        assert_eq!(by_shard, 64);
+        assert_eq!(q.depth(), 64);
+        assert_eq!(q.stats().admitted, 64);
+        // every queued request sits on its routed home shard
+        q.close();
+        for s in 0..4 {
+            while let Some((r, from, _, _)) = q.pop_due_from(s, || None) {
+                if from != s {
+                    continue; // stolen — still fine, checked below via route
+                }
+                assert_eq!(q.route(r.request.id), from);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_pop_steals_from_backlogged_shards() {
+        let q = ShardedQueue::new(2, 64);
+        // load only shard 1; a worker homed on shard 0 must steal
+        for id in 0..8 {
+            let shard = q.route(id);
+            if shard == 1 {
+                assert!(q.offer_to(1, tr(id)));
+            }
+        }
+        let loaded = q.depth_of(1);
+        assert!(loaded > 0, "some ids must route to shard 1");
+        q.close();
+        let mut stolen = 0;
+        while let Some((_, from, _, _)) = q.pop_due_from(0, || None) {
+            assert_eq!(from, 1, "the only stocked shard");
+            stolen += 1;
+        }
+        assert_eq!(stolen, loaded);
+    }
+
+    #[test]
+    fn sharded_single_shard_is_the_identity_configuration() {
+        let q = ShardedQueue::new(1, 3);
+        assert_eq!(q.route(7), 0);
+        assert!(q.offer(tr(0)) && q.offer(tr(1)) && q.offer(tr(2)));
+        assert!(!q.offer(tr(3)), "per-shard capacity still bounds");
+        assert_eq!(q.stats(), q.stats_of(0), "aggregate == the one shard");
+        q.close();
+        let (r, from, _, _) = q.pop_due_from(0, || None).unwrap();
+        assert_eq!((r.request.id, from), (0, 0));
+    }
+
+    #[test]
+    fn sharded_blocking_pop_wakes_on_offers_to_any_shard() {
+        let q = std::sync::Arc::new(ShardedQueue::new(4, 64));
+        let total = 200;
+        let mut consumers = Vec::new();
+        for w in 0..3 {
+            let q2 = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut seen = 0;
+                while q2.pop_due_from(w, || None).is_some() {
+                    seen += 1;
+                }
+                seen
+            }));
+        }
+        for id in 0..total {
+            assert!(q.offer(tr(id)));
+        }
+        q.close();
+        let seen: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(seen, total);
+        assert_eq!(q.stats().admitted, total);
+    }
+
+    #[test]
+    fn shard_worker_view_coalesces_within_the_popped_shard() {
+        let q = ShardedQueue::new(2, 64);
+        // find two ids homed on different shards
+        let id_a = (0..).find(|&i| route_shard(i, 2) == 0).unwrap();
+        let id_b = (0..).find(|&i| route_shard(i, 2) == 1).unwrap();
+        q.offer(tr(id_a));
+        q.offer(tr(id_b));
+        q.close();
+        let view = ShardWorkerView::new(&q, 0);
+        let (r, _, _) = RequestSource::pop_due(&view, || None).unwrap();
+        assert_eq!(r.request.id, id_a, "home shard first");
+        // coalescing is pinned to shard 0 (now empty), so the request
+        // sitting on shard 1 must NOT be offered to pop_if
+        assert!(RequestSource::pop_if(&view, |_| true).is_none());
+        // the next blocking pop steals it, and the cursor follows
+        let (r, _, _) = RequestSource::pop_due(&view, || None).unwrap();
+        assert_eq!(r.request.id, id_b);
     }
 }

@@ -15,7 +15,7 @@ use crate::space::{Config, Network};
 use crate::workload::TimedRequest;
 
 use super::cache::CacheStats;
-use super::queue::QueueStats;
+use super::queue::{route_shard, QueueStats};
 
 /// How one request left the pipeline.
 #[derive(Debug, Clone)]
@@ -166,6 +166,49 @@ impl NetworkBreakdown {
     }
 }
 
+/// Per-shard slice of a [`ServeReport`] (sharded admission).  Like
+/// [`NetworkBreakdown`], every field is a plain sum so the slices
+/// reconcile with the aggregate totals by addition alone — the
+/// invariant the scale integration test pins down.  Records are
+/// partitioned by re-deriving each request's home shard from its id
+/// via [`route_shard`], so the breakdown needs no extra per-record
+/// state and stays valid even for requests shed before admission.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardBreakdown {
+    pub shard: usize,
+    /// All records routed to this shard, every outcome class.
+    pub requests: usize,
+    /// Completed requests.
+    pub done: usize,
+    /// Requests served within their deadline.
+    pub qos_hits: usize,
+    /// Requests whose deadline passed while queued on this shard.
+    pub expired: usize,
+    /// Requests shed because this shard's bounded queue was full.
+    pub rejected_queue_full: usize,
+    /// Requests shed by this shard's admission backpressure.
+    pub shed_by_admission: usize,
+    /// Total energy over completed requests (J).
+    pub energy_sum_j: f64,
+}
+
+impl ShardBreakdown {
+    /// Fraction of this shard's requests served within deadline.
+    pub fn qos_hit_rate(&self) -> f64 {
+        self.qos_hits as f64 / self.requests.max(1) as f64
+    }
+
+    /// Mean energy per completed request (J); NaN when nothing
+    /// completed.
+    pub fn mean_energy_j(&self) -> f64 {
+        if self.done == 0 {
+            f64::NAN
+        } else {
+            self.energy_sum_j / self.done as f64
+        }
+    }
+}
+
 /// Aggregated outcome of one pipeline run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -173,8 +216,13 @@ pub struct ServeReport {
     pub records: Vec<ServeRecord>,
     /// Config-reuse counters summed over workers.
     pub cache: CacheStats,
+    /// Queue counters summed over shards (peak depth is the max shard
+    /// peak, not a sum — a depth is an instantaneous gauge).
     pub queue: QueueStats,
     pub workers: usize,
+    /// Admission-queue shards the run was partitioned over (1 = the
+    /// unsharded identity configuration).
+    pub shards: usize,
     /// Wall-clock duration of the run (ms).
     pub wall_ms: f64,
 }
@@ -304,6 +352,51 @@ impl ServeReport {
         b
     }
 
+    /// Per-shard accounting: one [`ShardBreakdown`] per admission
+    /// shard, indexed by shard (empty shards included so the vector's
+    /// shape is `self.shards` regardless of traffic).  Summing any
+    /// field over the slices reproduces the matching aggregate
+    /// exactly.
+    pub fn shard_breakdown(&self) -> Vec<ShardBreakdown> {
+        let shards = self.shards.max(1);
+        let mut parts: Vec<ShardBreakdown> = (0..shards)
+            .map(|shard| ShardBreakdown {
+                shard,
+                requests: 0,
+                done: 0,
+                qos_hits: 0,
+                expired: 0,
+                rejected_queue_full: 0,
+                shed_by_admission: 0,
+                energy_sum_j: 0.0,
+            })
+            .collect();
+        for r in &self.records {
+            let b = &mut parts[route_shard(r.request_id, shards)];
+            b.requests += 1;
+            if r.qos_met() {
+                b.qos_hits += 1;
+            }
+            match &r.outcome {
+                ServeOutcome::Done { energy_j, .. } => {
+                    b.done += 1;
+                    b.energy_sum_j += energy_j;
+                }
+                ServeOutcome::ExpiredInQueue => b.expired += 1,
+                ServeOutcome::RejectedQueueFull => b.rejected_queue_full += 1,
+                ServeOutcome::ShedByAdmission => b.shed_by_admission += 1,
+                _ => {}
+            }
+        }
+        parts
+    }
+
+    /// [`ShardBreakdown`] for one shard (panics if `shard` is out of
+    /// range — shard indices come from the run's own configuration).
+    pub fn shard_breakdown_for(&self, shard: usize) -> ShardBreakdown {
+        self.shard_breakdown()[shard]
+    }
+
     /// Requests that rode a coalesced same-config batch.
     pub fn coalesced(&self) -> usize {
         self.records
@@ -409,12 +502,26 @@ impl ServeReport {
             })
             .collect::<Vec<_>>()
             .join(", ");
+        // Per-shard suffix only when actually sharded: the shards=1
+        // line must stay byte-identical to the pre-sharding pipeline
+        // (the scale equivalence test compares it verbatim).
+        let shard_suffix = if self.shards > 1 {
+            let per = self
+                .shard_breakdown()
+                .iter()
+                .map(|b| format!("s{} {}/{}", b.shard, b.done, b.requests))
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!("; shards: {per}")
+        } else {
+            String::new()
+        };
         format!(
             "{} done / {} shed / {} backpressured / {} expired / {} policy-rejected / \
              {} unknown-net / {} exec-failed on {} workers; QoS hit {:.0}%; \
              p50 {:.0} ms p99 {:.0} ms; \
              {:.2} J/req; {} reconfigs, {} avoided ({} coalesced); {:.0} req/s; \
-             {} store epoch(s); nets: {}",
+             {} store epoch(s); nets: {}{}",
             self.completed(),
             self.rejected_queue_full(),
             self.shed_by_admission(),
@@ -433,6 +540,7 @@ impl ServeReport {
             self.throughput_rps(),
             self.epochs_observed().len().max(1),
             if nets.is_empty() { "-".to_string() } else { nets },
+            shard_suffix,
         )
     }
 }
@@ -488,14 +596,19 @@ mod tests {
         }
     }
 
-    fn report(records: Vec<ServeRecord>) -> ServeReport {
+    fn report_sharded(records: Vec<ServeRecord>, shards: usize) -> ServeReport {
         ServeReport {
             records,
             cache: CacheStats { hits: 2, reconfigs: 1, apply_ms_total: 50.0 },
             queue: QueueStats { admitted: 3, rejected: 1, expired: 0, peak_depth: 2 },
             workers: 2,
+            shards,
             wall_ms: 2000.0,
         }
+    }
+
+    fn report(records: Vec<ServeRecord>) -> ServeReport {
+        report_sharded(records, 1)
     }
 
     #[test]
@@ -681,6 +794,80 @@ mod tests {
         assert!(line.contains("vgg16 2/2 qos 50%"), "{line}");
         assert!(line.contains("vit 1/2 qos 50%"), "{line}");
         assert_eq!(r.networks(), vec![Network::Vgg16, Network::Vit]);
+    }
+
+    #[test]
+    fn per_shard_breakdown_reconciles_with_aggregates() {
+        let mut records: Vec<ServeRecord> = (0..40)
+            .map(|i| done(i, 100.0, if i % 5 == 0 { 150.0 } else { 90.0 }, 2.0, false))
+            .collect();
+        records.push(shed(40));
+        records.push(ServeRecord {
+            request_id: 41,
+            net: Network::Vgg16,
+            qos_ms: 100.0,
+            arrival_ms: 41.0,
+            worker: Some(0),
+            outcome: ServeOutcome::ExpiredInQueue,
+        });
+        records.push(ServeRecord {
+            request_id: 42,
+            net: Network::Vgg16,
+            qos_ms: 50.0,
+            arrival_ms: 42.0,
+            worker: None,
+            outcome: ServeOutcome::ShedByAdmission,
+        });
+        let r = report_sharded(records, 4);
+        let parts = r.shard_breakdown();
+        assert_eq!(parts.len(), 4, "one slice per shard, empty or not");
+        for (i, b) in parts.iter().enumerate() {
+            assert_eq!(b.shard, i);
+        }
+        // every record lands on exactly one shard, and that shard is
+        // the one the router would have picked for its id
+        assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), r.records.len());
+        for rec in &r.records {
+            let home = route_shard(rec.request_id, 4);
+            assert!(parts[home].requests > 0);
+        }
+        // sums of every outcome class reproduce the aggregates exactly
+        assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), r.completed());
+        assert_eq!(parts.iter().map(|b| b.expired).sum::<usize>(), r.expired_in_queue());
+        assert_eq!(
+            parts.iter().map(|b| b.rejected_queue_full).sum::<usize>(),
+            r.rejected_queue_full()
+        );
+        assert_eq!(
+            parts.iter().map(|b| b.shed_by_admission).sum::<usize>(),
+            r.shed_by_admission()
+        );
+        let total_hits: usize = parts.iter().map(|b| b.qos_hits).sum();
+        assert!(
+            (total_hits as f64 / r.records.len() as f64 - r.qos_hit_rate()).abs() < 1e-12
+        );
+        let energy_total: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+        assert!((energy_total - r.mean_energy_j() * r.completed() as f64).abs() < 1e-9);
+        // sharded runs name their shards in the summary
+        let line = r.summary_line();
+        assert!(line.contains("shards: s0"), "{line}");
+        assert_eq!(r.shard_breakdown_for(2).shard, 2);
+    }
+
+    #[test]
+    fn single_shard_summary_is_byte_identical_to_unsharded() {
+        let records =
+            vec![done(0, 100.0, 90.0, 2.0, false), done(1, 100.0, 95.0, 2.0, true), shed(2)];
+        let unsharded = report(records.clone());
+        let sharded = report_sharded(records, 1);
+        assert_eq!(unsharded.summary_line(), sharded.summary_line());
+        assert!(!unsharded.summary_line().contains("shards:"));
+        // shards=1 collapses the breakdown to one all-inclusive slice
+        let parts = sharded.shard_breakdown();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].requests, 3);
+        assert_eq!(parts[0].done, 2);
+        assert_eq!(parts[0].rejected_queue_full, 1);
     }
 
     #[test]

@@ -54,13 +54,18 @@ use crate::workload::Request;
 
 use super::cache::CacheSet;
 use super::clock::{ServeClock, Stopwatch};
-use super::queue::AdmissionQueue;
+use super::queue::{AdmissionQueue, RequestSource};
 use super::report::{ServeOutcome, ServeRecord};
 
 /// One serving worker's state for a pipeline run.
-pub struct Worker<'a, E: Executor> {
+///
+/// Generic over its request source `Q`: the plain [`AdmissionQueue`]
+/// (unsharded pipeline, unit tests) or a
+/// [`super::queue::ShardWorkerView`] (sharded pipeline — home shard
+/// plus work stealing, coalescing pinned to the popped shard).
+pub struct Worker<'a, E: Executor, Q: RequestSource = AdmissionQueue> {
     pub id: usize,
-    pub queue: &'a AdmissionQueue,
+    pub queue: &'a Q,
     /// Per-network map of hot-swappable Pareto stores; the serving
     /// network's store is snapshotted once per batch.
     pub stores: &'a StoreMap<'a>,
@@ -80,12 +85,13 @@ pub struct Worker<'a, E: Executor> {
     pub records: Vec<ServeRecord>,
 }
 
-impl<'a, E: Executor> Worker<'a, E> {
+impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
     /// Serve until the queue closes and drains.
     pub fn run(&mut self) {
-        // Copy so the pop_due closure doesn't borrow `self` (the clock
-        // is a stateless time source).
-        let clock = self.clock;
+        // Clone so the pop_due closure doesn't borrow `self` (discrete
+        // clones share the underlying event clock; the other modes are
+        // stateless time sources).
+        let clock = self.clock.clone();
         loop {
             // `now` is snapshotted by the queue at the instant the
             // request is handed out (not before the blocking wait), and
@@ -193,8 +199,13 @@ impl<'a, E: Executor> Worker<'a, E> {
             // records for the batch tail via the zip below
             assert_eq!(outcomes.len(), batch.len(), "one outcome per batched request");
             // one completion stamp per batch: in real-time replay the
-            // QoS verdict is taken against the absolute deadline
-            let finished_ms = clock.now_ms();
+            // QoS verdict is taken against the absolute deadline; in
+            // discrete-event mode the batch's simulated service time
+            // (its slowest member) is the completion event that
+            // advances the shared clock
+            let service_ms = outcomes.iter().fold(0.0f64, |m, o| m.max(o.latency_ms));
+            let batch_arrival_ms = batch.iter().fold(0.0f64, |m, tr| m.max(tr.arrival_ms));
+            let finished_ms = clock.complete_batch(now, batch_arrival_ms, service_ms);
 
             for (i, (tr, out)) in batch.iter().zip(outcomes).enumerate() {
                 if let Some(telemetry) = self.telemetry {

@@ -1,0 +1,319 @@
+//! Fleet-scale workloads: heterogeneous edge-device populations under
+//! diurnal + flash-crowd arrival traces (ROADMAP north star; the
+//! multi-tier deployment setting of PAPERS.md, arxiv 2404.08060).
+//!
+//! The paper's workload model is one device class at one steady rate;
+//! a fleet of thousands of edge devices is neither.  A [`FleetSpec`]
+//! describes the population as weighted [`DeviceClass`]es (each a
+//! relative edge speed + QoS-budget scale — a throttled Jetson asks
+//! looser deadlines than a reference board) and the traffic as a
+//! nonhomogeneous Poisson process: a sinusoidal diurnal rate sampled
+//! by *thinning* (draw candidates at the peak rate, accept with
+//! probability `rate(t) / peak`), merged with deterministic
+//! flash-crowd bursts every `flash_every_s` seconds.
+//!
+//! The device class rides inside the request's own `seed` field so the
+//! `Request` struct (and everything downstream of it) stays untouched:
+//! `seed = noise * K + class` for a fleet of `K` classes, recovered by
+//! [`FleetSpec::class_of`].  The scale experiment maps each class to a
+//! [`crate::simulator::DeviceModel`]-throttled testbed, so one pipeline
+//! run serves the whole heterogeneous population.
+
+use super::{timeline, ArrivalProcess, TimedRequest, WorkloadGen};
+use crate::space::Network;
+use crate::util::rng::Pcg32;
+
+/// One class of edge devices in the fleet.
+#[derive(Debug, Clone)]
+pub struct DeviceClass {
+    pub name: &'static str,
+    /// Relative share of the fleet (normalized over all classes).
+    pub weight: f64,
+    /// Edge-speed factor vs the reference testbed (1.0 = the paper's
+    /// hardware; 0.5 = a half-speed edge board).  Consumed by the scale
+    /// experiment via [`crate::simulator::DeviceModel::throttle_edge`].
+    pub edge_speed: f64,
+    /// QoS budgets scale by this: slower devices negotiate looser
+    /// deadlines, keeping the per-class workload satisfiable.
+    pub qos_scale: f64,
+}
+
+/// A heterogeneous fleet plus its arrival trace shape.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub net: Network,
+    /// Device classes; must be non-empty with positive weights.
+    pub classes: Vec<DeviceClass>,
+    /// Simulated devices in the fleet (each request is pinned to one
+    /// via [`FleetSpec::device_of`]).
+    pub devices: usize,
+    /// Mean aggregate arrival rate over the whole trace (req/s).
+    pub mean_rate_per_s: f64,
+    /// Diurnal modulation depth in `[0, 1)`:
+    /// `rate(t) = mean · (1 + depth · sin(2πt / period))`.
+    pub diurnal_depth: f64,
+    /// Diurnal period (s).
+    pub period_s: f64,
+    /// A flash crowd of `flash_size` back-to-back arrivals fires every
+    /// `flash_every_s` seconds (0 size disables them).
+    pub flash_every_s: f64,
+    pub flash_size: usize,
+    /// Inferences per request (the scale experiment uses small values;
+    /// the paper's batch is 1000).
+    pub inferences_per_request: usize,
+}
+
+impl FleetSpec {
+    /// A three-class synthetic fleet: reference boards, throttled
+    /// mid-tier devices, and slow low-power stragglers, under a
+    /// 60-second diurnal cycle with periodic flash crowds.
+    pub fn synthetic(net: Network, devices: usize, mean_rate_per_s: f64) -> FleetSpec {
+        FleetSpec {
+            net,
+            classes: vec![
+                DeviceClass { name: "reference", weight: 0.5, edge_speed: 1.0, qos_scale: 1.0 },
+                DeviceClass { name: "throttled", weight: 0.3, edge_speed: 0.6, qos_scale: 1.5 },
+                DeviceClass { name: "low-power", weight: 0.2, edge_speed: 0.35, qos_scale: 2.5 },
+            ],
+            devices: devices.max(1),
+            mean_rate_per_s,
+            diurnal_depth: 0.6,
+            period_s: 60.0,
+            flash_every_s: 20.0,
+            flash_size: 64,
+            inferences_per_request: 1,
+        }
+    }
+
+    /// Number of device classes (the `K` of the seed encoding).
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Recover the device class encoded in a request seed.
+    pub fn class_of(&self, seed: u64) -> usize {
+        (seed % self.classes.len() as u64) as usize
+    }
+
+    /// Stable simulated-device id for a request seed (uniform over the
+    /// fleet — the class encoding occupies the low bits, the device
+    /// draw the rest).
+    pub fn device_of(&self, seed: u64) -> usize {
+        ((seed / self.classes.len() as u64) % self.devices as u64) as usize
+    }
+
+    /// Draw `n` nondecreasing arrival offsets (ms) from the diurnal
+    /// process by thinning, then merge the deterministic flash crowds
+    /// that land inside the base horizon (exactly `n` offsets total,
+    /// like [`ArrivalProcess::Bursty`]).
+    pub fn arrival_times_ms(&self, n: usize, rng: &mut Pcg32) -> Vec<f64> {
+        assert!(self.mean_rate_per_s > 0.0, "fleet rate must be positive");
+        assert!(
+            (0.0..1.0).contains(&self.diurnal_depth),
+            "diurnal depth must be in [0, 1)"
+        );
+        assert!(self.period_s > 0.0, "diurnal period must be positive");
+        if n == 0 {
+            return Vec::new();
+        }
+        // thinning: candidates at the peak rate, accepted with
+        // probability rate(t) / peak — the standard exact sampler for a
+        // nonhomogeneous Poisson process
+        let peak = self.mean_rate_per_s * (1.0 + self.diurnal_depth);
+        let mean_gap_ms = 1000.0 / peak;
+        let omega = 2.0 * std::f64::consts::PI / (self.period_s * 1000.0);
+        let mut base = Vec::with_capacity(n);
+        let mut t = 0.0;
+        while base.len() < n {
+            t += rng.weibull(1.0, mean_gap_ms);
+            let rate = self.mean_rate_per_s * (1.0 + self.diurnal_depth * (omega * t).sin());
+            if rng.chance(rate / peak) {
+                base.push(t);
+            }
+        }
+        if self.flash_size == 0 {
+            return base;
+        }
+        assert!(self.flash_every_s > 0.0, "flash period must be positive");
+        let horizon = *base.last().expect("n > 0");
+        let mut bursts = Vec::new();
+        let mut k = 1usize;
+        while bursts.len() < n && k as f64 * self.flash_every_s * 1000.0 <= horizon {
+            let burst_ms = k as f64 * self.flash_every_s * 1000.0;
+            // 0.1 ms apart so offsets stay strictly ordered in a burst
+            for j in 0..self.flash_size {
+                bursts.push(burst_ms + j as f64 * 0.1);
+            }
+            k += 1;
+        }
+        let mut out = Vec::with_capacity(n);
+        let (mut i, mut j) = (0, 0);
+        while out.len() < n {
+            let take_base = match (base.get(i), bursts.get(j)) {
+                (Some(b), Some(u)) => b <= u,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => unreachable!("base holds n arrivals"),
+            };
+            if take_base {
+                out.push(base[i]);
+                i += 1;
+            } else {
+                out.push(bursts[j]);
+                j += 1;
+            }
+        }
+        out
+    }
+
+    /// Generate the fleet timeline: `n` paper-style QoS draws, each
+    /// assigned a weighted device class (budget scaled by the class,
+    /// class id encoded into the seed) and stamped with a diurnal +
+    /// flash-crowd arrival time.
+    pub fn timeline(&self, n: usize, rng: &mut Pcg32) -> Vec<TimedRequest> {
+        assert!(!self.classes.is_empty(), "fleet needs at least one device class");
+        assert!(
+            self.classes.iter().all(|c| c.weight > 0.0),
+            "class weights must be positive"
+        );
+        let mut gen = WorkloadGen::paper(self.net);
+        gen.inferences_per_request = self.inferences_per_request;
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let k = self.classes.len() as u64;
+        let mut tl = timeline(
+            &gen,
+            &ArrivalProcess::Trace { times_ms: self.arrival_times_ms(n, rng) },
+            n,
+            rng,
+        );
+        for tr in &mut tl {
+            // weighted class draw, then fold the class into the seed's
+            // low bits: seed = noise·K + class, so class_of(seed) is
+            // exact and the remaining bits stay per-request noise
+            let mut x = rng.f64() * total;
+            let mut class = self.classes.len() - 1;
+            for (c, spec) in self.classes.iter().enumerate() {
+                if x < spec.weight {
+                    class = c;
+                    break;
+                }
+                x -= spec.weight;
+            }
+            tr.request.qos_ms *= self.classes[class].qos_scale;
+            tr.request.seed = (tr.request.seed / k) * k + class as u64;
+        }
+        tl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FleetSpec {
+        FleetSpec::synthetic(Network::Vgg16, 1000, 200.0)
+    }
+
+    fn nondecreasing(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    #[test]
+    fn timeline_is_deterministic_and_seed_sensitive() {
+        let s = spec();
+        let a = s.timeline(500, &mut Pcg32::seeded(9));
+        let b = s.timeline(500, &mut Pcg32::seeded(9));
+        let c = s.timeline(500, &mut Pcg32::seeded(10));
+        let key =
+            |tl: &[TimedRequest]| tl.iter().map(|t| (t.arrival_ms, t.request.seed)).collect::<Vec<_>>();
+        assert_eq!(key(&a), key(&b));
+        assert_ne!(key(&a), key(&c));
+        assert_eq!(a.len(), 500);
+        assert!(nondecreasing(&a.iter().map(|t| t.arrival_ms).collect::<Vec<_>>()));
+        for (i, tr) in a.iter().enumerate() {
+            assert_eq!(tr.request.id, i);
+        }
+    }
+
+    #[test]
+    fn class_encoding_roundtrips_and_matches_weights() {
+        let s = spec();
+        let tl = s.timeline(4000, &mut Pcg32::seeded(3));
+        let mut counts = vec![0usize; s.class_count()];
+        for tr in &tl {
+            counts[s.class_of(tr.request.seed)] += 1;
+        }
+        // 0.5 / 0.3 / 0.2 within generous sampling tolerance
+        assert!((1700..=2300).contains(&counts[0]), "reference {counts:?}");
+        assert!((900..=1500).contains(&counts[1]), "throttled {counts:?}");
+        assert!((500..=1100).contains(&counts[2]), "low-power {counts:?}");
+        // device ids stay within the fleet
+        assert!(tl.iter().all(|t| s.device_of(t.request.seed) < s.devices));
+    }
+
+    #[test]
+    fn slower_classes_get_looser_deadlines() {
+        let s = spec();
+        let tl = s.timeline(4000, &mut Pcg32::seeded(5));
+        let mean_qos = |class: usize| {
+            let qs: Vec<f64> = tl
+                .iter()
+                .filter(|t| s.class_of(t.request.seed) == class)
+                .map(|t| t.request.qos_ms)
+                .collect();
+            qs.iter().sum::<f64>() / qs.len().max(1) as f64
+        };
+        let (fast, slow) = (mean_qos(0), mean_qos(2));
+        assert!(
+            slow > fast * 1.5,
+            "low-power budgets must be looser: {fast} vs {slow}"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_modulates_arrival_density() {
+        let mut s = spec();
+        s.flash_size = 0; // isolate the diurnal shape
+        let times = s.arrival_times_ms(20_000, &mut Pcg32::seeded(7));
+        assert!(nondecreasing(&times));
+        // first quarter-period (sin > 0: above mean rate) vs the third
+        // (sin < 0: below): the peak window must hold clearly more
+        let period_ms = s.period_s * 1000.0;
+        let quarter = period_ms / 4.0;
+        let in_window = |lo: f64, hi: f64| times.iter().filter(|&&t| t >= lo && t < hi).count();
+        let peak = in_window(0.0, quarter) + in_window(period_ms, period_ms + quarter);
+        let trough =
+            in_window(2.0 * quarter, 3.0 * quarter) + in_window(period_ms + 2.0 * quarter, period_ms + 3.0 * quarter);
+        assert!(
+            peak as f64 > trough as f64 * 1.5,
+            "peak {peak} vs trough {trough}"
+        );
+    }
+
+    #[test]
+    fn flash_crowds_fire_on_schedule() {
+        let s = spec();
+        let times = s.arrival_times_ms(20_000, &mut Pcg32::seeded(11));
+        assert!(nondecreasing(&times));
+        let burst_ms = s.flash_every_s * 1000.0;
+        let in_burst = times
+            .iter()
+            .filter(|&&t| (burst_ms..burst_ms + s.flash_size as f64 * 0.1 + 1.0).contains(&t))
+            .count();
+        assert!(
+            in_burst >= s.flash_size,
+            "flash crowd missing at {burst_ms} ms: {in_burst} arrivals"
+        );
+    }
+
+    #[test]
+    fn zero_depth_reduces_to_steady_poisson() {
+        let mut s = spec();
+        s.diurnal_depth = 0.0;
+        s.flash_size = 0;
+        let times = s.arrival_times_ms(20_000, &mut Pcg32::seeded(13));
+        // 200 req/s => mean gap 5 ms => 20k arrivals in ~100 s
+        let mean_gap = times.last().unwrap() / 20_000.0;
+        assert!((4.5..5.5).contains(&mean_gap), "mean gap {mean_gap}");
+    }
+}

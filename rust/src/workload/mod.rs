@@ -15,15 +15,20 @@
 //!   requests into an open-loop [`TimedRequest`] timeline;
 //! * [`mix`] — mixed-network workloads: one timeline interleaving
 //!   several networks per a [`NetworkMix`] (`--mix vgg16=0.7,vit=0.3`),
-//!   each request's QoS drawn from its own network's bounds.
+//!   each request's QoS drawn from its own network's bounds;
+//! * [`fleet`] — fleet-scale workloads: weighted heterogeneous device
+//!   classes under diurnal + flash-crowd arrival traces (`dynasplit
+//!   scale`).
 
 pub mod arrival;
+pub mod fleet;
 pub mod mix;
 
 use crate::space::Network;
 use crate::util::rng::Pcg32;
 
 pub use arrival::{timeline, ArrivalProcess, TimedRequest};
+pub use fleet::{DeviceClass, FleetSpec};
 pub use mix::{mixed_timeline, NetworkMix};
 
 /// Latency bounds used to scale QoS draws (Table 2 defaults; solver runs

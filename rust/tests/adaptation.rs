@@ -95,6 +95,7 @@ fn hot_swap_under_live_load_loses_and_tears_nothing() {
         time_scale: 0.0,
         seed: 9,
         reuse: true,
+        ..PipelineConfig::default()
     };
 
     let report = std::thread::scope(|s| {
@@ -176,6 +177,7 @@ fn drift_detection_resolve_and_swap_recover_qos_after_a_world_shift() {
         time_scale: 0.0,
         seed: 15,
         reuse: true,
+        ..PipelineConfig::default()
     };
 
     // control: the frozen offline store keeps serving the shifted world

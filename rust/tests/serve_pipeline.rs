@@ -89,6 +89,7 @@ fn pipeline_matches_sequential_algorithm1_baseline() {
         time_scale: 0.0,
         seed: 5,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
         Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
@@ -139,6 +140,7 @@ fn config_reuse_cache_avoids_reconfigurations_on_same_config_run() {
             time_scale: 0.0,
             seed: 7,
             reuse,
+            ..PipelineConfig::default()
         };
         run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
             Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
@@ -325,6 +327,7 @@ fn pipeline_with_batch_executor_matches_solo_tensor_execution() {
         time_scale: 0.0,
         seed: 9,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
         Ok(BatchRuntimeExecutor::new(serve_runtime(&layers), log.clone()))
@@ -390,6 +393,7 @@ fn hysteresis_policy_composes_with_the_pipeline_and_cuts_reconfigurations() {
         time_scale: 0.0,
         seed: 3,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let tb = Testbed::synthetic();
     let run = |policy: &dyn SchedulingPolicy| {
@@ -480,6 +484,7 @@ fn hysteresis_keeps_per_network_stickiness_under_interleaved_mix() {
         time_scale: 0.0,
         seed: 9,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let tb = Testbed::synthetic();
     let policy = HysteresisPolicy::paper(Network::Vgg16);
@@ -579,6 +584,7 @@ fn mixed_pipeline_matches_per_network_sequential_baselines_and_reconciles() {
         time_scale: 0.0,
         seed: 5,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let report = run_pipeline_stores(&stores, &PaperPolicy, &tl, &cfg, None, None, |_| {
         Ok(PerRequestSimExecutor { testbed: &tb, stream: 61 })
@@ -665,6 +671,7 @@ fn mixed_batches_are_always_network_homogeneous() {
         time_scale: 0.0,
         seed: 11,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let report = run_pipeline_stores(&stores, &PaperPolicy, &tl, &cfg, None, None, |_| {
         Ok(SpyExec {
@@ -792,6 +799,7 @@ fn mixed_stores_hot_swap_per_network_under_live_traffic() {
         time_scale: 0.0,
         seed: 21,
         reuse: true,
+        ..PipelineConfig::default()
     };
     // swap ONLY the vit store once a third of its traffic executed
     let vit_done = AtomicUsize::new(0);
@@ -839,6 +847,233 @@ fn mixed_stores_hot_swap_per_network_under_live_traffic() {
     assert_eq!(vit_store.epoch(), 1);
 }
 
+/// Sharded admission, satellite of DESIGN.md §14: shards=1 must keep
+/// the 220-request Algorithm-1 baseline bitwise (the identity
+/// configuration takes the same code path as every PR 2–6 run), and
+/// shards>1 must change only *who served a request* — never its
+/// config, latency, energy, or accuracy — while the per-shard report
+/// slices reconcile exactly with the aggregates.
+#[test]
+fn sharded_runs_reproduce_the_unsharded_baseline_and_reconcile() {
+    let tb = Testbed::synthetic();
+    let set = ConfigSet::new(pareto());
+    let mut rng = Pcg32::seeded(2);
+    let mut gen = WorkloadGen::paper(Network::Vgg16);
+    gen.inferences_per_request = 50;
+    let tl = timeline(&gen, &ArrivalProcess::Poisson { rate_per_s: 200.0 }, 220, &mut rng);
+
+    // the sequential Algorithm-1 baseline of the 220-request test
+    let mut ex = PerRequestSimExecutor { testbed: &tb, stream: 31 };
+    let baseline: Vec<(usize, Config, ExecOutcome)> = tl
+        .iter()
+        .map(|tr| {
+            let idx = match PaperPolicy.decide(&set, tr.request.qos_ms) {
+                PolicyDecision::Run(i) => i,
+                PolicyDecision::Reject => unreachable!("paper policy on non-empty set"),
+            };
+            let entry = &set.entries()[idx];
+            (tr.request.id, entry.config, ex.execute(&tr.request, &entry.config))
+        })
+        .collect();
+
+    for shards in [1, 2, 4] {
+        let cfg = PipelineConfig {
+            workers: 3,
+            queue_capacity: 1024,
+            max_batch: 4,
+            time_scale: 0.0,
+            seed: 5,
+            reuse: true,
+            shards,
+            ..PipelineConfig::default()
+        };
+        let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| {
+            Ok(PerRequestSimExecutor { testbed: &tb, stream: 31 })
+        })
+        .expect("sharded pipeline run");
+        assert_eq!(report.records.len(), 220, "shards {shards}: every request accounted");
+        assert_eq!(report.shards, shards);
+        assert_eq!(report.queue.admitted, 220, "shards {shards}: queue sized per shard");
+        assert_eq!(report.queue.rejected, 0);
+        for (record, (id, config, out)) in report.records.iter().zip(&baseline) {
+            assert_eq!(record.request_id, *id);
+            match &record.outcome {
+                ServeOutcome::Done { config: c, latency_ms, energy_j, accuracy, .. } => {
+                    assert_eq!(c, config, "shards {shards}, request {id}: same config");
+                    assert_eq!(*latency_ms, out.latency_ms, "request {id}: bitwise latency");
+                    assert_eq!(*energy_j, out.energy_j, "request {id}: bitwise energy");
+                    assert_eq!(*accuracy, out.accuracy, "request {id}: bitwise accuracy");
+                }
+                other => panic!("shards {shards}, request {id} did not complete: {other:?}"),
+            }
+        }
+        // per-shard slices reconcile exactly with the aggregates
+        // (mirror of the per-network breakdown reconciliation)
+        let parts = report.shard_breakdown();
+        assert_eq!(parts.len(), shards);
+        assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), 220);
+        assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), report.completed());
+        let hits: usize = parts.iter().map(|b| b.qos_hits).sum();
+        assert!(
+            (hits as f64 / 220.0 - report.qos_hit_rate()).abs() < 1e-12,
+            "shards {shards}: per-shard QoS hits sum to the aggregate rate"
+        );
+        let energy: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+        let total = report.mean_energy_j() * report.completed() as f64;
+        assert!((energy - total).abs() < 1e-6, "shards {shards}: energy sums to the total");
+        if shards > 1 {
+            let populated = parts.iter().filter(|b| b.requests > 0).count();
+            assert!(populated > 1, "rendezvous routing left all traffic on one shard");
+            assert!(report.summary_line().contains("shards: s0"));
+        } else {
+            assert!(!report.summary_line().contains("shards:"));
+        }
+    }
+}
+
+/// Overloaded shards shed at admission per shard; the shed records
+/// must land on the shard that rejected them so the per-shard slices
+/// still reconcile exactly with the aggregate queue counters.
+#[test]
+fn per_shard_queue_full_sheds_reconcile_with_aggregates() {
+    /// Slow executor: holds workers long enough for the per-shard
+    /// feeders to overrun the tiny per-shard queues.
+    struct Slow;
+    impl Executor for Slow {
+        fn execute(&mut self, _request: &Request, _config: &Config) -> ExecOutcome {
+            std::thread::sleep(Duration::from_millis(2));
+            ExecOutcome {
+                latency_ms: 10.0,
+                energy_j: 1.0,
+                edge_energy_j: 0.5,
+                cloud_energy_j: 0.5,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    let set = ConfigSet::new(pareto());
+    let tl = same_config_timeline(96, 2000.0);
+    let cfg = PipelineConfig {
+        workers: 2,
+        queue_capacity: 2, // per shard — floods under virtual-time injection
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 13,
+        reuse: true,
+        shards: 2,
+        ..PipelineConfig::default()
+    };
+    let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| Ok(Slow)).expect("run");
+    assert_eq!(report.records.len(), 96, "shed requests are recorded too");
+    assert!(report.queue.rejected > 0, "tiny shards under flood must shed");
+    assert_eq!(report.rejected_queue_full(), report.queue.rejected);
+    let parts = report.shard_breakdown();
+    assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), 96);
+    assert_eq!(
+        parts.iter().map(|b| b.rejected_queue_full).sum::<usize>(),
+        report.queue.rejected,
+        "per-shard shed counts sum to the aggregate"
+    );
+    assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), report.completed());
+    assert_eq!(report.completed() + report.rejected_queue_full(), 96);
+    // peak depth is a per-shard gauge, bounded by the shard capacity
+    assert!(report.queue.peak_depth <= 2);
+}
+
+/// A mid-run store hot-swap under sharded admission: every completed
+/// request's `(epoch, digest)` stamp must be a registered installation
+/// — work stealing and per-shard feeders never expose a torn store.
+#[test]
+fn sharded_pipeline_keeps_epoch_stamps_torn_free_across_a_hot_swap() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Swaps the store from inside the pipeline once `threshold`
+    /// requests executed (exactly one worker wins the fetch_add race).
+    struct SwapAt<'a> {
+        done: &'a AtomicUsize,
+        store: &'a ConfigStore,
+        threshold: usize,
+        replacement: &'a ConfigSet,
+    }
+    impl Executor for SwapAt<'_> {
+        fn execute(&mut self, _request: &Request, config: &Config) -> ExecOutcome {
+            if self.done.fetch_add(1, Ordering::SeqCst) + 1 == self.threshold {
+                self.store.swap(self.replacement.clone());
+            }
+            ExecOutcome {
+                latency_ms: config.split as f64,
+                energy_j: 1.0,
+                edge_energy_j: 0.5,
+                cloud_energy_j: 0.5,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    let entry = |split: usize| ParetoEntry {
+        config: Config {
+            net: Network::Vgg16,
+            cpu_idx: 6,
+            tpu: TpuMode::Off,
+            gpu: true,
+            split,
+        },
+        latency_ms: 100.0,
+        energy_j: 1.0,
+        accuracy: 0.95,
+    };
+    const N: usize = 160;
+    let store = ConfigStore::new(ConfigSet::new(vec![entry(5)]));
+    let stores = StoreMap::single(Network::Vgg16, &store);
+    let tl: Vec<TimedRequest> = (0..N)
+        .map(|i| TimedRequest {
+            request: Request {
+                id: i,
+                net: Network::Vgg16,
+                qos_ms: 1e9,
+                inferences: 1,
+                seed: i as u64,
+            },
+            arrival_ms: i as f64,
+        })
+        .collect();
+    let cfg = PipelineConfig {
+        workers: 2,
+        queue_capacity: N,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 23,
+        reuse: true,
+        shards: 4,
+        ..PipelineConfig::default()
+    };
+    let done = AtomicUsize::new(0);
+    let replacement = ConfigSet::new(vec![entry(9)]);
+    let report = run_pipeline_stores(&stores, &PaperPolicy, &tl, &cfg, None, None, |_| {
+        Ok(SwapAt { done: &done, store: &store, threshold: N / 4, replacement: &replacement })
+    })
+    .expect("sharded swap run");
+
+    assert_eq!(report.completed(), N, "no request lost across the swap");
+    assert_eq!(report.epochs_observed(), vec![0, 1], "swap landed mid-run");
+    let registry = store.epochs();
+    for r in &report.records {
+        if let ServeOutcome::Done { epoch, store_digest, config, .. } = &r.outcome {
+            assert!(
+                registry.contains(&(*epoch, *store_digest)),
+                "request {} stamped an unregistered (epoch, digest) — torn store",
+                r.request_id
+            );
+            let want = if *epoch == 0 { 5 } else { 9 };
+            assert_eq!(config.split, want, "request {} config matches its epoch", r.request_id);
+        }
+    }
+    // every shard that completed traffic saw only registered epochs
+    let parts = report.shard_breakdown();
+    assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), N);
+}
+
 #[test]
 fn bounded_queue_sheds_load_when_full() {
     /// Slow executor: holds the worker long enough for the open-loop
@@ -866,6 +1101,7 @@ fn bounded_queue_sheds_load_when_full() {
         time_scale: 0.0,
         seed: 9,
         reuse: true,
+        ..PipelineConfig::default()
     };
     let report = run_pipeline(&set, &PaperPolicy, &tl, &cfg, |_| Ok(Slow)).expect("run");
     assert_eq!(report.records.len(), 64, "shed requests are recorded too");
