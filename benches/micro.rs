@@ -324,6 +324,45 @@ fn main() {
         });
     }
 
+    // --- fault path (DESIGN.md §15) ---
+    // `FaultPlan::decide` runs on every dispatch attempt of a chaos
+    // run, and the breaker's route/verdict pair brackets every batch in
+    // a resilient pipeline — both must stay noise next to inference.
+    {
+        use dynasplit::fault::{CircuitBreaker, FaultClass, FaultPlan};
+        let plan = FaultPlan {
+            loss_p: 0.1,
+            stall_p: 0.05,
+            ..FaultPlan::link_flap(11, 1.0, 60.0, 20.0, 1000.0)
+        };
+        let cfg =
+            Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split: 3 };
+        let mut fid = 0usize;
+        b.bench("runtime_fault_plan_decide", || {
+            fid = fid.wrapping_add(1);
+            let r = Request {
+                id: fid % 1000,
+                net: Network::Vgg16,
+                qos_ms: 500.0,
+                inferences: 1,
+                seed: fid as u64,
+            };
+            plan.decide(&r, &cfg, 1).is_some()
+        });
+        let mut brk = CircuitBreaker::new(3, 8);
+        let mut flip = false;
+        b.bench("runtime_fault_breaker_route_verdict", || {
+            flip = !flip;
+            let route = brk.route();
+            if flip {
+                brk.on_failure(route, FaultClass::CloudLink);
+            } else {
+                brk.on_success(route, true);
+            }
+            brk.state()
+        });
+    }
+
     // --- NSGA machinery ---
     let objs: Vec<[f64; 3]> = (0..200)
         .map(|_| [rng.f64() * 1000.0, rng.f64() * 100.0, -rng.f64()])

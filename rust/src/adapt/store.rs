@@ -52,6 +52,21 @@ impl StoreSnapshot {
     pub fn set(&self) -> &ConfigSet {
         &self.set
     }
+
+    /// The degraded (edge-only) view of this snapshot: same epoch, same
+    /// digest stamps, but scheduling sees only configs with no cloud
+    /// offload ([`ConfigSet::edge_only`]).  Keeping the *parent's*
+    /// epoch and digest is deliberate — records served degraded still
+    /// audit against the registered `(epoch, digest)` pair they were
+    /// restricted *from*, so hot-swap coherence proofs keep working;
+    /// the report marks degradation separately (`degraded_served`).
+    pub fn degraded(&self) -> StoreSnapshot {
+        StoreSnapshot {
+            epoch: self.epoch,
+            digest: self.digest,
+            set: Arc::new(self.set.edge_only()),
+        }
+    }
 }
 
 /// Shared, hot-swappable handle to the current non-dominated set.
@@ -229,6 +244,39 @@ mod tests {
             energy_j: 1.0,
             accuracy: 0.95,
         }])
+    }
+
+    #[test]
+    fn degraded_view_keeps_the_parent_identity_but_restricts_the_set() {
+        let mixed = ConfigSet::new(
+            [3, 22, 9, 22]
+                .iter()
+                .enumerate()
+                .map(|(i, &split)| ParetoEntry {
+                    config: Config {
+                        net: Network::Vgg16,
+                        cpu_idx: 6,
+                        tpu: TpuMode::Off,
+                        gpu: true,
+                        split,
+                    },
+                    latency_ms: 100.0 + i as f64,
+                    energy_j: 1.0 + i as f64,
+                    accuracy: 0.95,
+                })
+                .collect(),
+        );
+        let store = ConfigStore::new(mixed);
+        store.swap(set(22, 50.0)); // an extra epoch so identity is non-trivial
+        let fresh = store.snapshot();
+        let degraded = fresh.degraded();
+        // identity stamps survive: degraded records still audit against
+        // the registered (epoch, digest) pair of the parent snapshot
+        assert_eq!(degraded.epoch(), fresh.epoch());
+        assert_eq!(degraded.digest(), fresh.digest());
+        assert_eq!(store.digest_of(degraded.epoch()), Some(degraded.digest()));
+        // but scheduling only sees edge-only configs
+        assert!(degraded.set().entries().iter().all(|e| e.config.is_edge_only()));
     }
 
     #[test]

@@ -74,6 +74,20 @@ impl ConfigSet {
         self.digest
     }
 
+    /// The edge-only restriction of this set: entries whose split layer
+    /// implies no cloud offload ([`Config::is_edge_only`]), rebuilt as a
+    /// full `ConfigSet` (own sort order, [`SelectIndex`], digest) so
+    /// degradation is an ordinary policy input, not a special-cased
+    /// path.  May be empty — every policy then rejects, which is the
+    /// correct behavior for a store with no edge-capable fallback.
+    /// This is the scheduling restriction the circuit breaker applies
+    /// while the cloud link is considered down (DESIGN.md §15).
+    pub fn edge_only(&self) -> ConfigSet {
+        ConfigSet::new(
+            self.entries.iter().filter(|e| e.config.is_edge_only()).cloned().collect(),
+        )
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -415,6 +429,33 @@ mod tests {
             entry(200.0, 10.0, 0.95),
             entry(100.0, 60.0, 0.95), // fast, hungry
         ])
+    }
+
+    #[test]
+    fn edge_only_restriction_is_a_real_config_set() {
+        let with_split = |split: usize, energy: f64| {
+            let mut e = entry(100.0, energy, 0.9);
+            e.config.split = split;
+            e
+        };
+        let full = ConfigSet::new(vec![
+            with_split(3, 1.0),  // cloud-offloading
+            with_split(22, 5.0), // edge-only (split == last layer)
+            with_split(9, 2.0),  // cloud-offloading
+            with_split(22, 7.0), // edge-only
+        ]);
+        let degraded = full.edge_only();
+        assert_eq!(degraded.len(), 2);
+        assert!(degraded.entries().iter().all(|e| e.config.is_edge_only()));
+        assert_ne!(degraded.digest(), full.digest(), "a restriction is a different set");
+        // the restriction is selectable like any other set
+        let pick = degraded.select_paper(1e9).expect("non-empty set selects");
+        assert!(degraded.entries()[pick].config.is_edge_only());
+        // and a set with no edge-capable entry degrades to empty (reject-all)
+        let cloud_only = ConfigSet::new(vec![with_split(3, 1.0)]);
+        assert!(cloud_only.edge_only().is_empty());
+        // idempotent: restricting a restriction changes nothing
+        assert_eq!(degraded.edge_only().digest(), degraded.digest());
     }
 
     #[test]

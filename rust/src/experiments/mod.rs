@@ -15,9 +15,11 @@
 //! | [`adaptation`]| beyond-paper: closed-loop drift → re-solve → hot-swap recovery |
 //! | [`mixed`]     | beyond-paper: mixed-network serving (vgg16 + vit, one pipeline) |
 //! | [`scale`]     | beyond-paper: fleet-scale sweep (shards × workers, discrete-event clock) |
+//! | [`chaos`]     | beyond-paper: chaos serving (fault injection × recovery modes, DESIGN.md §15) |
 
 pub mod ablation;
 pub mod adaptation;
+pub mod chaos;
 pub mod extensions;
 pub mod bounds;
 pub mod mixed;

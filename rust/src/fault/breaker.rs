@@ -1,0 +1,322 @@
+//! Per-(network, link) circuit breaker driving edge-only degradation.
+//!
+//! Classic three-state breaker (closed → open → half-open), adapted to
+//! the deterministic serving pipeline:
+//!
+//! * **Closed** — scheduling is unrestricted.  Each batch whose *final*
+//!   verdict (after all retries) is a cloud-link failure increments a
+//!   consecutive-failure counter; reaching the threshold opens the
+//!   breaker.  Any final success resets it.
+//! * **Open** — scheduling is restricted to the degraded edge-only view
+//!   of the live store ([`crate::adapt::StoreSnapshot::degraded`]).
+//!   Instead of a wall-clock cooldown (which would break virtual-clock
+//!   reproducibility), the breaker counts *dispatches routed while
+//!   open*; after `cooldown` of them it transitions to half-open.
+//! * **Half-open** — exactly one in-flight **probe** batch is allowed
+//!   through at full (cloud-capable) scheduling; everyone else stays
+//!   degraded.  A probe that completes on a cloud config closes the
+//!   breaker; a probe that ends in a cloud-link failure re-opens it.
+//!
+//! The breaker only ever hears a batch's **final verdict** — the retry
+//! loop reports once per batch, after its last attempt — so transient
+//! faults absorbed by retries never open it.  Local failures
+//! ([`crate::fault::FaultClass::Local`]) never count either: degrading
+//! to edge-only cannot dodge a brownout, so opening would only cost
+//! accuracy/energy for nothing.  See DESIGN.md §15.
+
+use std::sync::Mutex;
+
+use crate::fault::plan::FaultClass;
+use crate::space::Network;
+use crate::util::sync::lock_clean;
+
+/// Breaker state (DESIGN.md §15 state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// How a dispatch was routed by [`CircuitBreaker::route`].  The worker
+/// must echo this value back in `on_success`/`on_failure`/`abort_probe`
+/// so the breaker can keep its probe bookkeeping coherent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerRoute {
+    /// Unrestricted scheduling over the full store view.
+    Full,
+    /// The one half-open probe: full view, but its outcome decides the
+    /// breaker's next state.
+    Probe,
+    /// Breaker open (or probe slot taken): schedule from the degraded
+    /// edge-only view.
+    Degraded,
+}
+
+/// Per-network breaker over the edge→cloud link.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    /// Consecutive final cloud-link failures while closed.
+    consecutive: u32,
+    /// Failures needed to open.
+    threshold: u32,
+    /// Dispatches to serve degraded before half-opening.
+    cooldown: u32,
+    /// Countdown while open.
+    remaining: u32,
+    /// Half-open: is the single probe slot taken?
+    probe_in_flight: bool,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown: u32) -> CircuitBreaker {
+        assert!(threshold > 0 && cooldown > 0, "degenerate breaker");
+        CircuitBreaker {
+            state: BreakerState::Closed,
+            consecutive: 0,
+            threshold,
+            cooldown,
+            remaining: 0,
+            probe_in_flight: false,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Route the next dispatch.  Counts down the open-state cooldown and
+    /// claims the half-open probe slot as a side effect.
+    pub fn route(&mut self) -> BreakerRoute {
+        match self.state {
+            BreakerState::Closed => BreakerRoute::Full,
+            BreakerState::Open => {
+                self.remaining = self.remaining.saturating_sub(1);
+                if self.remaining == 0 {
+                    // cooldown elapsed: this very dispatch becomes the probe
+                    self.state = BreakerState::HalfOpen;
+                    self.probe_in_flight = true;
+                    BreakerRoute::Probe
+                } else {
+                    BreakerRoute::Degraded
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probe_in_flight {
+                    BreakerRoute::Degraded
+                } else {
+                    self.probe_in_flight = true;
+                    BreakerRoute::Probe
+                }
+            }
+        }
+    }
+
+    /// Final success verdict for a batch routed as `route`.  `cloud`
+    /// says whether the served config actually exercised the link — an
+    /// edge-only success proves nothing about the cloud path, so a
+    /// probe that happened to select an edge-only config releases the
+    /// slot and stays half-open rather than closing.
+    pub fn on_success(&mut self, route: BreakerRoute, cloud: bool) {
+        match route {
+            BreakerRoute::Probe => {
+                self.probe_in_flight = false;
+                if cloud {
+                    self.state = BreakerState::Closed;
+                    self.consecutive = 0;
+                }
+            }
+            BreakerRoute::Full => {
+                self.consecutive = 0;
+            }
+            BreakerRoute::Degraded => {}
+        }
+    }
+
+    /// Final failure verdict for a batch routed as `route`.
+    pub fn on_failure(&mut self, route: BreakerRoute, class: FaultClass) {
+        match (route, class) {
+            (BreakerRoute::Probe, FaultClass::CloudLink) => {
+                // the link is still bad: re-open for another cooldown
+                self.probe_in_flight = false;
+                self.state = BreakerState::Open;
+                self.remaining = self.cooldown;
+            }
+            (BreakerRoute::Probe, FaultClass::Local) => {
+                // inconclusive probe — release the slot, stay half-open
+                self.probe_in_flight = false;
+            }
+            (BreakerRoute::Full, FaultClass::CloudLink) => {
+                self.consecutive += 1;
+                if self.consecutive >= self.threshold {
+                    self.state = BreakerState::Open;
+                    self.remaining = self.cooldown;
+                    self.consecutive = 0;
+                }
+            }
+            (BreakerRoute::Full, FaultClass::Local) => {}
+            (BreakerRoute::Degraded, _) => {}
+        }
+    }
+
+    /// A routed dispatch never reached execution (policy reject, cache
+    /// miss): release any probe slot it held so half-open cannot wedge.
+    pub fn abort_probe(&mut self, route: BreakerRoute) {
+        if route == BreakerRoute::Probe {
+            self.probe_in_flight = false;
+        }
+    }
+}
+
+/// One breaker per network, shared across workers.  A flat `Vec` keyed
+/// by linear scan — the network count is tiny (2) and this keeps the
+/// digest-bearing modules `HashMap`-free by construction.
+#[derive(Debug)]
+pub struct BreakerMap {
+    slots: Vec<(Network, Mutex<CircuitBreaker>)>,
+}
+
+impl BreakerMap {
+    pub fn new(networks: &[Network], threshold: u32, cooldown: u32) -> BreakerMap {
+        BreakerMap {
+            slots: networks
+                .iter()
+                .map(|&net| (net, Mutex::new(CircuitBreaker::new(threshold, cooldown))))
+                .collect(),
+        }
+    }
+
+    /// Run `f` under the breaker for `net`; `None` if the network has
+    /// no breaker (treated as always-closed by callers).
+    pub fn with<R>(&self, net: Network, f: impl FnOnce(&mut CircuitBreaker) -> R) -> Option<R> {
+        self.slots
+            .iter()
+            .find(|(n, _)| *n == net)
+            .map(|(_, slot)| f(&mut lock_clean(slot)))
+    }
+
+    /// Current state for `net` (telemetry/tests).
+    pub fn state(&self, net: Network) -> Option<BreakerState> {
+        self.with(net, |b| b.state())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker() -> CircuitBreaker {
+        CircuitBreaker::new(3, 2)
+    }
+
+    #[test]
+    fn closed_until_threshold_consecutive_cloud_failures() {
+        let mut b = breaker();
+        for _ in 0..2 {
+            assert_eq!(b.route(), BreakerRoute::Full);
+            b.on_failure(BreakerRoute::Full, FaultClass::CloudLink);
+            assert_eq!(b.state(), BreakerState::Closed);
+        }
+        // a success in between resets the streak
+        b.on_success(BreakerRoute::Full, true);
+        for _ in 0..2 {
+            b.on_failure(BreakerRoute::Full, FaultClass::CloudLink);
+        }
+        assert_eq!(b.state(), BreakerState::Closed, "streak was reset");
+        b.on_failure(BreakerRoute::Full, FaultClass::CloudLink);
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn local_failures_never_open_the_breaker() {
+        let mut b = breaker();
+        for _ in 0..20 {
+            assert_eq!(b.route(), BreakerRoute::Full);
+            b.on_failure(BreakerRoute::Full, FaultClass::Local);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn open_serves_degraded_then_probes_after_cooldown() {
+        let mut b = breaker();
+        for _ in 0..3 {
+            b.on_failure(BreakerRoute::Full, FaultClass::CloudLink);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // cooldown = 2: one degraded dispatch, then the probe
+        assert_eq!(b.route(), BreakerRoute::Degraded);
+        assert_eq!(b.route(), BreakerRoute::Probe);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // while the probe is out, everyone else stays degraded
+        assert_eq!(b.route(), BreakerRoute::Degraded);
+    }
+
+    fn opened_and_probing() -> (CircuitBreaker, BreakerRoute) {
+        let mut b = breaker();
+        for _ in 0..3 {
+            b.on_failure(BreakerRoute::Full, FaultClass::CloudLink);
+        }
+        b.route(); // degraded (cooldown 2 -> 1)
+        let probe = b.route();
+        assert_eq!(probe, BreakerRoute::Probe);
+        (b, probe)
+    }
+
+    #[test]
+    fn cloud_probe_success_closes() {
+        let (mut b, probe) = opened_and_probing();
+        b.on_success(probe, true);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.route(), BreakerRoute::Full);
+    }
+
+    #[test]
+    fn edge_only_probe_success_is_inconclusive() {
+        let (mut b, probe) = opened_and_probing();
+        b.on_success(probe, false);
+        assert_eq!(b.state(), BreakerState::HalfOpen, "edge success proves nothing");
+        // the slot was released: the next dispatch probes again
+        assert_eq!(b.route(), BreakerRoute::Probe);
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_another_cooldown() {
+        let (mut b, probe) = opened_and_probing();
+        b.on_failure(probe, FaultClass::CloudLink);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.route(), BreakerRoute::Degraded);
+        assert_eq!(b.route(), BreakerRoute::Probe, "cooldown counts dispatches, not time");
+    }
+
+    #[test]
+    fn local_probe_failure_releases_the_slot() {
+        let (mut b, probe) = opened_and_probing();
+        b.on_failure(probe, FaultClass::Local);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.route(), BreakerRoute::Probe);
+    }
+
+    #[test]
+    fn aborted_probe_cannot_wedge_half_open() {
+        let (mut b, probe) = opened_and_probing();
+        b.abort_probe(probe);
+        assert_eq!(b.route(), BreakerRoute::Probe, "slot released");
+        // aborting a non-probe route is a no-op
+        b.abort_probe(BreakerRoute::Degraded);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn map_routes_per_network_and_reports_state() {
+        use crate::space::Network;
+        let map = BreakerMap::new(&[Network::Vgg16], 1, 1);
+        assert_eq!(map.state(Network::Vgg16), Some(BreakerState::Closed));
+        assert_eq!(map.state(Network::Vit), None, "unregistered network");
+        map.with(Network::Vgg16, |b| {
+            b.on_failure(BreakerRoute::Full, FaultClass::CloudLink);
+        });
+        assert_eq!(map.state(Network::Vgg16), Some(BreakerState::Open));
+    }
+}

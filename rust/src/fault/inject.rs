@@ -1,0 +1,275 @@
+//! Fault injection wrappers: any [`Executor`] and any transport
+//! [`Endpoint`] can be wrapped without the wrapped component knowing.
+//!
+//! [`FaultInjector`] intercepts the *fallible* dispatch seam
+//! ([`Executor::try_execute_batch`]) — the only path the serving worker
+//! uses — and consults its [`FaultPlan`] before delegating.  It keeps a
+//! per-leader attempt counter (a `BTreeMap`, keeping iteration and
+//! therefore `Debug` output deterministic) so the plan's transient
+//! coins are attempt-keyed: a retried batch re-flips them, which is
+//! exactly what deadline-budgeted retries are designed to exploit.
+//!
+//! [`FaultyEndpoint`] degrades a transport endpoint at frame
+//! granularity: each received frame independently may be dropped
+//! (surfacing as the same typed [`TransportError::Timeout`] a real
+//! lost frame causes) or corrupted ([`TransportError::CorruptFrame`]),
+//! keyed on a frame counter so the byte stream itself stays valid and
+//! the fault sequence is reproducible.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::controller::executor::{ExecOutcome, Executor};
+use crate::fault::plan::{FaultError, FaultPlan};
+use crate::space::Config;
+use crate::transport::{Endpoint, Frame, TransportError};
+use crate::util::hash::fnv1a;
+use crate::util::rng::Pcg32;
+use crate::workload::Request;
+
+/// RNG stream for per-frame link faults (disjoint from the plan's
+/// per-request stream so wrapping both never correlates them).
+const LINK_STREAM: u64 = 0xfa18;
+
+/// Wraps any executor with a deterministic fault schedule.
+pub struct FaultInjector<E> {
+    inner: E,
+    plan: FaultPlan,
+    /// Dispatch attempts seen per batch-leader id (1-based after the
+    /// first dispatch).  `BTreeMap` by repo invariant — deterministic
+    /// iteration everywhere near the serving path.
+    attempts: BTreeMap<usize, u32>,
+}
+
+impl<E> FaultInjector<E> {
+    pub fn new(inner: E, plan: FaultPlan) -> FaultInjector<E> {
+        FaultInjector { inner, plan, attempts: BTreeMap::new() }
+    }
+
+    /// Attempts dispatched so far for the batch led by `leader_id`.
+    pub fn attempts_for(&self, leader_id: usize) -> u32 {
+        self.attempts.get(&leader_id).copied().unwrap_or(0)
+    }
+}
+
+impl<E: Executor> Executor for FaultInjector<E> {
+    /// Infallible paths bypass injection: faults model dispatch/link
+    /// failures, and the worker only dispatches through
+    /// [`Executor::try_execute_batch`].
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        self.inner.execute(request, config)
+    }
+
+    fn execute_batch(&mut self, requests: &[&Request], config: &Config) -> Vec<ExecOutcome> {
+        self.inner.execute_batch(requests, config)
+    }
+
+    fn try_execute_batch(
+        &mut self,
+        requests: &[&Request],
+        config: &Config,
+    ) -> Result<Vec<ExecOutcome>> {
+        let Some(leader) = requests.first() else {
+            return self.inner.try_execute_batch(requests, config);
+        };
+        let counter = self.attempts.entry(leader.id).or_insert(0);
+        *counter += 1;
+        let attempt = *counter;
+        if let Some(kind) = self.plan.decide(leader, config, attempt) {
+            return Err(FaultError { kind, request_id: leader.id, attempt }.into());
+        }
+        self.inner.try_execute_batch(requests, config)
+    }
+}
+
+/// Wraps a transport endpoint with per-frame loss and corruption.
+pub struct FaultyEndpoint {
+    inner: Endpoint,
+    seed: u64,
+    loss_p: f64,
+    corrupt_p: f64,
+    /// Frames attempted so far — the fault coin's key.
+    frames: u64,
+}
+
+impl FaultyEndpoint {
+    pub fn new(inner: Endpoint, seed: u64, loss_p: f64, corrupt_p: f64) -> FaultyEndpoint {
+        FaultyEndpoint { inner, seed, loss_p, corrupt_p, frames: 0 }
+    }
+
+    /// Sends are never degraded (the model puts both directions' faults
+    /// on the receive side, where the typed errors already live).
+    pub fn send(&self, frame: &Frame) -> Result<Duration> {
+        self.inner.send(frame)
+    }
+
+    /// Receive the next frame, possibly injecting a fault for it.  A
+    /// "lost" frame is consumed off the stream and surfaced as the same
+    /// [`TransportError::Timeout`] a real in-flight loss causes, so
+    /// callers cannot tell injected faults from organic ones.
+    pub fn recv(&mut self, timeout: Duration) -> Result<Frame> {
+        let n = self.frames;
+        self.frames += 1;
+        let mut rng = Pcg32::new(fnv1a([self.seed, n]), LINK_STREAM);
+        // draw both coins in a fixed order so enabling one probability
+        // never perturbs the other's stream
+        let lose = rng.chance(self.loss_p);
+        let corrupt = rng.chance(self.corrupt_p);
+        let frame = self.inner.recv(timeout)?;
+        if lose {
+            drop(frame);
+            return Err(anyhow::Error::new(TransportError::Timeout { after: timeout }))
+                .context("injected frame loss");
+        }
+        if corrupt {
+            return Err(anyhow::Error::new(TransportError::CorruptFrame))
+                .context("injected frame corruption");
+        }
+        Ok(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::plan::FaultKind;
+    use crate::space::{Network, TpuMode};
+    use crate::transport::duplex;
+
+    /// Fixed-outcome executor that counts how often it actually ran.
+    struct Fixed {
+        runs: usize,
+    }
+
+    impl Executor for Fixed {
+        fn execute(&mut self, _r: &Request, _c: &Config) -> ExecOutcome {
+            self.runs += 1;
+            ExecOutcome {
+                latency_ms: 10.0,
+                energy_j: 1.0,
+                edge_energy_j: 0.5,
+                cloud_energy_j: 0.5,
+                accuracy: 0.9,
+            }
+        }
+    }
+
+    fn req(id: usize) -> Request {
+        Request { id, net: Network::Vgg16, qos_ms: 200.0, inferences: 1, seed: id as u64 }
+    }
+
+    fn cloud() -> Config {
+        Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split: 3 }
+    }
+
+    #[test]
+    fn empty_plan_is_a_transparent_wrapper() {
+        let mut inj = FaultInjector::new(Fixed { runs: 0 }, FaultPlan::none());
+        let r = req(0);
+        let out = inj.try_execute_batch(&[&r], &cloud()).expect("no faults scheduled");
+        assert_eq!(out.len(), 1);
+        assert_eq!(inj.inner.runs, 1);
+        assert_eq!(inj.attempts_for(0), 1, "attempts are still counted");
+    }
+
+    #[test]
+    fn window_fault_surfaces_a_typed_error_and_counts_attempts() {
+        let plan = FaultPlan { id_ms: 1.0, link_down: vec![(0.0, 100.0)], ..FaultPlan::none() };
+        let mut inj = FaultInjector::new(Fixed { runs: 0 }, plan);
+        let r = req(5);
+        for expected_attempt in 1..=3u32 {
+            let err = inj.try_execute_batch(&[&r], &cloud()).unwrap_err();
+            let fault = err.downcast_ref::<FaultError>().expect("typed root");
+            assert_eq!(fault.kind, FaultKind::LinkDown);
+            assert_eq!(fault.request_id, 5);
+            assert_eq!(fault.attempt, expected_attempt);
+        }
+        assert_eq!(inj.inner.runs, 0, "faulted dispatches never reach the executor");
+        assert_eq!(inj.attempts_for(5), 3);
+    }
+
+    #[test]
+    fn transient_faults_can_clear_on_retry() {
+        // stall_p = 0.5: some request must fault on attempt 1 and clear
+        // on attempt 2 — the property retries exploit
+        let plan = FaultPlan { seed: 9, stall_p: 0.5, ..FaultPlan::none() };
+        let mut inj = FaultInjector::new(Fixed { runs: 0 }, plan);
+        let cleared = (0..100).any(|id| {
+            let r = req(id);
+            let first = inj.try_execute_batch(&[&r], &cloud());
+            let second = inj.try_execute_batch(&[&r], &cloud());
+            first.is_err() && second.is_ok()
+        });
+        assert!(cleared, "a transient stall must clear on some retry");
+    }
+
+    #[test]
+    fn infallible_paths_bypass_injection() {
+        let plan = FaultPlan { id_ms: 1.0, link_down: vec![(0.0, 100.0)], ..FaultPlan::none() };
+        let mut inj = FaultInjector::new(Fixed { runs: 0 }, plan);
+        let r = req(1);
+        inj.execute(&r, &cloud());
+        inj.execute_batch(&[&r], &cloud());
+        assert_eq!(inj.inner.runs, 2, "faults only gate the fallible dispatch seam");
+    }
+
+    #[test]
+    fn empty_batch_delegates_without_counting() {
+        let mut inj = FaultInjector::new(Fixed { runs: 0 }, FaultPlan::none());
+        let out = inj.try_execute_batch(&[], &cloud()).expect("empty batch is a no-op");
+        assert!(out.is_empty());
+    }
+
+    const T: Duration = Duration::from_millis(200);
+
+    #[test]
+    fn faultless_endpoint_passes_frames_through() {
+        let (a, b) = duplex(None);
+        let mut faulty = FaultyEndpoint::new(b, 1, 0.0, 0.0);
+        a.send(&Frame::tensor(&[1.0, 2.0])).unwrap();
+        let f = faulty.recv(T).unwrap();
+        assert_eq!(f.tensor_f32().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn certain_loss_surfaces_as_typed_timeout_and_consumes_the_frame() {
+        let (a, b) = duplex(None);
+        let mut faulty = FaultyEndpoint::new(b, 2, 1.0, 0.0);
+        a.send(&Frame::tensor(&[1.0])).unwrap();
+        let err = faulty.recv(T).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<TransportError>(),
+            Some(&TransportError::Timeout { after: T })
+        );
+        // the lost frame was consumed: the stream is not wedged behind it
+        a.send(&Frame::tensor(&[2.0])).unwrap();
+        assert!(faulty.recv(T).is_err(), "loss_p = 1 loses every frame");
+    }
+
+    #[test]
+    fn certain_corruption_is_a_typed_corrupt_frame() {
+        let (a, b) = duplex(None);
+        let mut faulty = FaultyEndpoint::new(b, 3, 0.0, 1.0);
+        a.send(&Frame::tensor(&[1.0])).unwrap();
+        let err = faulty.recv(T).unwrap_err();
+        assert_eq!(err.downcast_ref::<TransportError>(), Some(&TransportError::CorruptFrame));
+    }
+
+    #[test]
+    fn frame_fault_sequence_is_seed_deterministic() {
+        let verdicts = |seed: u64| -> Vec<bool> {
+            let (a, b) = duplex(None);
+            let mut faulty = FaultyEndpoint::new(b, seed, 0.4, 0.0);
+            (0..32)
+                .map(|i| {
+                    a.send(&Frame::tensor(&[i as f32])).unwrap();
+                    faulty.recv(T).is_ok()
+                })
+                .collect()
+        };
+        assert_eq!(verdicts(7), verdicts(7), "same seed, same fault sequence");
+        assert_ne!(verdicts(7), verdicts(8), "different seeds decorrelate");
+    }
+}

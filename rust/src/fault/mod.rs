@@ -1,0 +1,35 @@
+//! Deterministic fault injection and recovery (DESIGN.md §15).
+//!
+//! DynaSplit's online phase spans two machines and a WAN link, yet the
+//! original pipeline had exactly one failure seam: a failed
+//! `try_execute_batch` shed the batch and moved on.  This module makes
+//! failure a first-class, *testable* input:
+//!
+//! * [`plan`] — the fault taxonomy ([`FaultKind`]) and the seeded,
+//!   clock-free schedule ([`FaultPlan`]): link-drop windows, brownouts,
+//!   correlated shard outages in nominal id-time, plus per-attempt
+//!   loss/corruption/stall coins.  [`classify`] maps any execution
+//!   error to the breaker's coarse [`FaultClass`] via typed downcast —
+//!   no string matching.
+//! * [`inject`] — [`FaultInjector`] wraps any `Executor` at the
+//!   fallible dispatch seam; [`FaultyEndpoint`] degrades a transport
+//!   endpoint at frame granularity.  Both are bit-reproducible under
+//!   any clock and worker interleaving.
+//! * [`breaker`] — the per-network [`CircuitBreaker`] (closed → open →
+//!   half-open with single-probe semantics) whose open state restricts
+//!   scheduling to the edge-only *degraded view* of the live store
+//!   ([`crate::adapt::StoreSnapshot::degraded`]).
+//!
+//! Recovery itself lives in the serving worker
+//! ([`crate::serve::Resilience`]): deadline-budgeted retries bounded by
+//! each request's remaining QoS budget, with the breaker fed one final
+//! verdict per batch.  `dynasplit chaos` drives the whole stack through
+//! scripted fault storms.
+
+pub mod breaker;
+pub mod inject;
+pub mod plan;
+
+pub use breaker::{BreakerMap, BreakerRoute, BreakerState, CircuitBreaker};
+pub use inject::{FaultInjector, FaultyEndpoint};
+pub use plan::{classify, FaultClass, FaultError, FaultKind, FaultPlan, ShardOutage};

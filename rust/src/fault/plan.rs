@@ -1,0 +1,389 @@
+//! Fault taxonomy and the seeded, deterministic fault schedule.
+//!
+//! A [`FaultPlan`] describes *when* and *how* the serving path fails —
+//! cloud-link drop windows, per-attempt frame loss/corruption
+//! probabilities, executor stalls, device brownouts, and correlated
+//! shard outages — in a form that is **bit-reproducible** under any
+//! experiment clock and any worker interleaving:
+//!
+//! * **Window faults** (link drops, brownouts, shard outages) key on a
+//!   request's *nominal time* `id × id_ms`, never on the live clock.
+//!   The shared clock races across workers; request ids are assigned in
+//!   arrival order, so nominal time is a worker-count-independent proxy
+//!   for "when this request hits the backend".
+//! * **Probabilistic faults** (loss, corruption, stalls) key a private
+//!   PRNG on `(plan seed, request id, attempt)` — order-independent and
+//!   attempt-sensitive, so a retry of the same batch re-flips the coin
+//!   (transient faults can clear) while two identically-seeded runs
+//!   always flip it the same way.
+//!
+//! Persistence is part of the taxonomy: a [`FaultKind::LinkDown`]
+//! window holds for every attempt of a request inside it (retries never
+//! help — only the circuit breaker's edge-only degradation does), while
+//! loss/corruption/stalls are per-attempt transients that deadline-
+//! budgeted retries are designed to absorb.  See DESIGN.md §15.
+
+use std::fmt;
+
+use crate::space::Config;
+use crate::transport::TransportError;
+use crate::util::hash::fnv1a;
+use crate::util::rng::Pcg32;
+use crate::workload::Request;
+
+/// RNG stream for fault coin flips (workload/simulator/serving streams
+/// stay disjoint; see the stream registry note in `util::rng`).
+const FAULT_STREAM: u64 = 0xfa17;
+
+/// What failed, per the fault taxonomy (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The edge–cloud link is inside a scheduled drop window.
+    /// **Persistent** for every request whose nominal time falls in the
+    /// window and **cloud-class**: edge-only configs never see it.
+    LinkDown,
+    /// A frame was lost in flight (surfaces as a recv timeout).
+    /// **Transient** (per-attempt) and cloud-class.
+    FrameLoss,
+    /// A frame arrived corrupted (checksum mismatch).  **Transient**
+    /// and cloud-class.
+    FrameCorrupt,
+    /// The executor stalled past its dispatch deadline.  **Transient**
+    /// and local: edge-only configs stall too.
+    Stall,
+    /// The serving device browned out.  **Persistent** within its
+    /// window and local — degrading to edge-only cannot dodge it.
+    Brownout,
+    /// The request's home admission shard is down (correlated
+    /// failure).  **Persistent** within its window and local.
+    ShardDown,
+}
+
+/// Coarse failure class the [`crate::fault::CircuitBreaker`] acts on:
+/// only cloud-link failures justify restricting scheduling to the
+/// degraded edge-only store view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// The edge–cloud link (or the cloud tail behind it) failed; an
+    /// edge-only config would have been immune.
+    CloudLink,
+    /// Everything else — device-local faults, unknown errors.  Local
+    /// failures never trip the link breaker: degradation would not
+    /// help, and a conservative classifier must not open the breaker
+    /// on e.g. a configuration bug.
+    Local,
+}
+
+/// The typed error a [`crate::fault::FaultInjector`] raises, carried as
+/// the `anyhow::Error` root so [`classify`] needs no string matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultError {
+    pub kind: FaultKind,
+    /// Batch leader the fault decision was keyed on.
+    pub request_id: usize,
+    /// 1-based dispatch attempt the fault hit.
+    pub attempt: u32,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected fault {:?} (request {}, attempt {})",
+            self.kind, self.request_id, self.attempt
+        )
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Classify an execution error for the circuit breaker: typed
+/// [`FaultError`] / [`TransportError`] roots map by taxonomy, anything
+/// untyped is conservatively local.
+pub fn classify(err: &anyhow::Error) -> FaultClass {
+    if let Some(fault) = err.downcast_ref::<FaultError>() {
+        return match fault.kind {
+            FaultKind::LinkDown | FaultKind::FrameLoss | FaultKind::FrameCorrupt => {
+                FaultClass::CloudLink
+            }
+            FaultKind::Stall | FaultKind::Brownout | FaultKind::ShardDown => FaultClass::Local,
+        };
+    }
+    if err.downcast_ref::<TransportError>().is_some() {
+        // every transport failure (timeout, disconnect, corrupt frame)
+        // is link-side by construction — the transport *is* the link
+        return FaultClass::CloudLink;
+    }
+    FaultClass::Local
+}
+
+/// A correlated outage of one admission shard: every request whose id
+/// routes to `shard` (under `shards`-way rendezvous routing) fails
+/// while its nominal time is inside `window`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardOutage {
+    pub shard: usize,
+    /// Shard count the router hashes against (must match the
+    /// pipeline's `shards` for the correlation to be meaningful).
+    pub shards: usize,
+    /// `[start_ms, end_ms)` in nominal time.
+    pub window: (f64, f64),
+}
+
+/// Seeded, clock-free fault schedule.  `decide` is a pure function of
+/// `(plan, batch leader, config, attempt)` — the determinism contract
+/// every chaos experiment and test relies on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed for the per-(request, attempt) fault coins.
+    pub seed: u64,
+    /// Nominal inter-arrival gap (ms): request `id`'s nominal time is
+    /// `id * id_ms`.  Window faults are expressed in this time base.
+    pub id_ms: f64,
+    /// Cloud-link drop windows `[start_ms, end_ms)` in nominal time.
+    pub link_down: Vec<(f64, f64)>,
+    /// Device brownout windows `[start_ms, end_ms)` in nominal time.
+    pub brownout: Vec<(f64, f64)>,
+    /// Optional correlated shard outage.
+    pub shard_down: Option<ShardOutage>,
+    /// Per-attempt frame-loss probability (cloud configs only).
+    pub loss_p: f64,
+    /// Per-attempt frame-corruption probability (cloud configs only).
+    pub corrupt_p: f64,
+    /// Per-attempt executor-stall probability (every config).
+    pub stall_p: f64,
+}
+
+impl FaultPlan {
+    /// The empty schedule: no faults, ever.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            id_ms: 1.0,
+            link_down: Vec::new(),
+            brownout: Vec::new(),
+            shard_down: None,
+            loss_p: 0.0,
+            corrupt_p: 0.0,
+            stall_p: 0.0,
+        }
+    }
+
+    /// A flapping link: the cloud link drops for `down_ms` every
+    /// `period_ms`, starting at the first period boundary (the run
+    /// opens healthy), out to `horizon_ms` of nominal time.
+    pub fn link_flap(
+        seed: u64,
+        id_ms: f64,
+        period_ms: f64,
+        down_ms: f64,
+        horizon_ms: f64,
+    ) -> FaultPlan {
+        assert!(period_ms > 0.0 && down_ms > 0.0, "degenerate flap schedule");
+        let mut windows = Vec::new();
+        let mut t = period_ms;
+        while t < horizon_ms {
+            windows.push((t, t + down_ms));
+            t += period_ms;
+        }
+        FaultPlan { seed, id_ms, link_down: windows, ..FaultPlan::none() }
+    }
+
+    /// Request `id`'s nominal time (ms): the clock-free time base every
+    /// window fault keys on.
+    pub fn nominal_ms(&self, id: usize) -> f64 {
+        id as f64 * self.id_ms
+    }
+
+    fn in_window(windows: &[(f64, f64)], t: f64) -> bool {
+        windows.iter().any(|&(start, end)| t >= start && t < end)
+    }
+
+    /// Is the cloud link down at nominal time `t`?
+    pub fn link_down_at(&self, t: f64) -> bool {
+        Self::in_window(&self.link_down, t)
+    }
+
+    /// Decide deterministically whether dispatch `attempt` (1-based) of
+    /// the batch led by `leader` under `config` faults, and how.
+    /// Persistent window faults are checked first (they hold across
+    /// attempts); transient coins are keyed on
+    /// `(seed, leader id, attempt)` so a retry re-flips them.
+    pub fn decide(&self, leader: &Request, config: &Config, attempt: u32) -> Option<FaultKind> {
+        let t = self.nominal_ms(leader.id);
+        let edge_only = config.is_edge_only();
+        if !edge_only && Self::in_window(&self.link_down, t) {
+            return Some(FaultKind::LinkDown);
+        }
+        if Self::in_window(&self.brownout, t) {
+            return Some(FaultKind::Brownout);
+        }
+        if let Some(outage) = &self.shard_down {
+            let (start, end) = outage.window;
+            if t >= start
+                && t < end
+                && crate::serve::route_shard(leader.id, outage.shards) == outage.shard
+            {
+                return Some(FaultKind::ShardDown);
+            }
+        }
+        if self.loss_p <= 0.0 && self.corrupt_p <= 0.0 && self.stall_p <= 0.0 {
+            return None;
+        }
+        let mut rng = Pcg32::new(
+            fnv1a([self.seed, leader.id as u64, attempt as u64]),
+            FAULT_STREAM,
+        );
+        // one coin per fault family, always drawn in the same order so
+        // enabling one probability never perturbs another's stream
+        let loss = rng.chance(self.loss_p);
+        let corrupt = rng.chance(self.corrupt_p);
+        let stall = rng.chance(self.stall_p);
+        if !edge_only && loss {
+            return Some(FaultKind::FrameLoss);
+        }
+        if !edge_only && corrupt {
+            return Some(FaultKind::FrameCorrupt);
+        }
+        if stall {
+            return Some(FaultKind::Stall);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Network, TpuMode};
+
+    fn req(id: usize) -> Request {
+        Request { id, net: Network::Vgg16, qos_ms: 200.0, inferences: 1, seed: id as u64 }
+    }
+
+    fn cfg(split: usize) -> Config {
+        Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split }
+    }
+
+    fn cloud() -> Config {
+        cfg(3)
+    }
+
+    fn edge() -> Config {
+        cfg(Network::Vgg16.num_layers())
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_attempt_sensitive() {
+        let plan = FaultPlan { seed: 7, loss_p: 0.5, stall_p: 0.2, ..FaultPlan::none() };
+        for id in 0..50 {
+            for attempt in 1..=4 {
+                let a = plan.decide(&req(id), &cloud(), attempt);
+                let b = plan.decide(&req(id), &cloud(), attempt);
+                assert_eq!(a, b, "same inputs, same verdict");
+            }
+        }
+        // across attempts the transient coins re-flip: some request
+        // must fault on one attempt and clear on another
+        let flips = (0..200).any(|id| {
+            let first = plan.decide(&req(id), &cloud(), 1);
+            let second = plan.decide(&req(id), &cloud(), 2);
+            first.is_some() != second.is_some()
+        });
+        assert!(flips, "transient faults must be attempt-keyed");
+    }
+
+    #[test]
+    fn link_windows_are_persistent_and_cloud_only() {
+        let plan = FaultPlan { id_ms: 1.0, link_down: vec![(10.0, 20.0)], ..FaultPlan::none() };
+        assert!(plan.link_down_at(10.0) && plan.link_down_at(19.9));
+        assert!(!plan.link_down_at(20.0), "window end is exclusive");
+        for attempt in 1..=5 {
+            assert_eq!(
+                plan.decide(&req(15), &cloud(), attempt),
+                Some(FaultKind::LinkDown),
+                "retries never dodge a link window"
+            );
+            assert_eq!(plan.decide(&req(15), &edge(), attempt), None, "edge-only is immune");
+        }
+        assert_eq!(plan.decide(&req(5), &cloud(), 1), None, "outside the window");
+    }
+
+    #[test]
+    fn brownouts_hit_edge_only_configs_too() {
+        let plan = FaultPlan { id_ms: 1.0, brownout: vec![(0.0, 5.0)], ..FaultPlan::none() };
+        assert_eq!(plan.decide(&req(2), &edge(), 1), Some(FaultKind::Brownout));
+        assert_eq!(plan.decide(&req(2), &cloud(), 3), Some(FaultKind::Brownout));
+        assert_eq!(plan.decide(&req(9), &edge(), 1), None);
+    }
+
+    #[test]
+    fn shard_outage_only_fails_the_routed_shard() {
+        let outage = ShardOutage { shard: 1, shards: 4, window: (0.0, 1e6) };
+        let plan = FaultPlan { id_ms: 1.0, shard_down: Some(outage), ..FaultPlan::none() };
+        let mut hit = 0;
+        for id in 0..64 {
+            let verdict = plan.decide(&req(id), &cloud(), 1);
+            if crate::serve::route_shard(id, 4) == 1 {
+                assert_eq!(verdict, Some(FaultKind::ShardDown), "request {id}");
+                hit += 1;
+            } else {
+                assert_eq!(verdict, None, "request {id}");
+            }
+        }
+        assert!(hit > 0, "the outage must route to somebody");
+    }
+
+    #[test]
+    fn edge_only_configs_never_see_frame_faults() {
+        let plan = FaultPlan { seed: 3, loss_p: 0.9, corrupt_p: 0.9, ..FaultPlan::none() };
+        for id in 0..100 {
+            assert_eq!(plan.decide(&req(id), &edge(), 1), None, "no frames, no frame faults");
+        }
+        let cloud_hits = (0..100).filter(|&id| plan.decide(&req(id), &cloud(), 1).is_some()).count();
+        assert!(cloud_hits > 50, "cloud configs see the loss rate: {cloud_hits}");
+    }
+
+    #[test]
+    fn stalls_are_local_and_config_blind() {
+        let plan = FaultPlan { seed: 11, stall_p: 1.0, ..FaultPlan::none() };
+        assert_eq!(plan.decide(&req(0), &edge(), 1), Some(FaultKind::Stall));
+        assert_eq!(plan.decide(&req(0), &cloud(), 1), Some(FaultKind::Stall));
+    }
+
+    #[test]
+    fn link_flap_builder_opens_healthy_and_flaps_periodically() {
+        let plan = FaultPlan::link_flap(1, 1.0, 100.0, 25.0, 350.0);
+        assert_eq!(plan.link_down, vec![(100.0, 125.0), (200.0, 225.0), (300.0, 325.0)]);
+        assert!(!plan.link_down_at(0.0));
+        assert!(plan.link_down_at(110.0));
+        assert!(!plan.link_down_at(150.0));
+    }
+
+    #[test]
+    fn classify_maps_taxonomy_to_breaker_classes() {
+        let cloud_kinds = [FaultKind::LinkDown, FaultKind::FrameLoss, FaultKind::FrameCorrupt];
+        for kind in cloud_kinds {
+            let err: anyhow::Error =
+                FaultError { kind, request_id: 1, attempt: 1 }.into();
+            assert_eq!(classify(&err), FaultClass::CloudLink, "{kind:?}");
+        }
+        let local_kinds = [FaultKind::Stall, FaultKind::Brownout, FaultKind::ShardDown];
+        for kind in local_kinds {
+            let err: anyhow::Error =
+                FaultError { kind, request_id: 1, attempt: 1 }.into();
+            assert_eq!(classify(&err), FaultClass::Local, "{kind:?}");
+        }
+        // transport failures are link-side; untyped errors stay local
+        let transport: anyhow::Error = TransportError::Disconnected.into();
+        assert_eq!(classify(&transport), FaultClass::CloudLink);
+        assert_eq!(classify(&anyhow::anyhow!("config bug")), FaultClass::Local);
+    }
+
+    #[test]
+    fn fault_error_displays_its_identity() {
+        let err = FaultError { kind: FaultKind::LinkDown, request_id: 42, attempt: 2 };
+        let text = format!("{err}");
+        assert!(text.contains("LinkDown") && text.contains("42"), "{text}");
+    }
+}

@@ -43,6 +43,7 @@ pub mod runtime;
 pub mod solver;
 pub mod controller;
 pub mod adapt;
+pub mod fault;
 pub mod serve;
 pub mod experiments;
 pub mod report; // (modules filled in build order; see DESIGN.md §7)

@@ -10,6 +10,7 @@
 //! dynasplit adapt     [--net --requests]   closed-loop adaptation experiment
 //! dynasplit throughput [--net --requests]   serving-pipeline experiment
 //! dynasplit scale     [--requests --devices]  fleet-scale sweep (DESIGN.md §14)
+//! dynasplit chaos     [--requests]         fault injection × recovery (DESIGN.md §15)
 //! dynasplit prelim                     Fig. 2a-e
 //! dynasplit bounds                     Table 2
 //! dynasplit workload                   Fig. 5
@@ -69,6 +70,7 @@ fn run() -> Result<()> {
         "adapt" => cmd_adapt(),
         "throughput" => cmd_throughput(),
         "scale" => cmd_scale(),
+        "chaos" => cmd_chaos(),
         "prelim" => cmd_prelim(),
         "bounds" => cmd_bounds(),
         "workload" => cmd_workload(),
@@ -101,6 +103,8 @@ subcommands:
   throughput     serving-pipeline throughput experiment (policies x workers x cache)
   scale          fleet-scale sweep: sharded admission x workers under a discrete-event
                  clock (heterogeneous device fleet, diurnal + flash-crowd arrivals)
+  chaos          chaos serving: seeded fault scenarios (link flap, brownout, shard
+                 outage) x recovery modes (none | retry | retry+breaker)
   prelim         Fig. 2a-e preliminary study
   bounds         Table 2 latency bounds
   workload       Fig. 5 QoS distributions
@@ -470,6 +474,15 @@ fn cmd_scale() -> Result<()> {
         a.u64("seed")?,
     );
     experiments::scale::print_report(&exp);
+    Ok(())
+}
+
+fn cmd_chaos() -> Result<()> {
+    let a = spec("chaos", "chaos serving: fault scenarios x recovery modes")
+        .opt("requests", "240", "requests per cell")
+        .parse_env(2)?;
+    let exp = experiments::chaos::run(a.usize("requests")?, a.u64("seed")?);
+    experiments::chaos::print_report(&exp);
     Ok(())
 }
 

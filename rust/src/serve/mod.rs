@@ -36,6 +36,12 @@
 //! * [`report`] — per-request records + aggregated serving metrics with
 //!   per-network breakdowns that reconcile with the totals.
 //!
+//! Under injected faults ([`crate::fault`], DESIGN.md §15),
+//! [`run_pipeline_resilient`] adds per-worker recovery: deadline-
+//! budgeted retries ([`RetryPolicy`]) and shared per-network circuit
+//! breakers whose open state degrades scheduling to the edge-only view
+//! of the live store ([`crate::adapt::StoreSnapshot::degraded`]).
+//!
 //! Workers resolve configurations through per-network hot-swappable
 //! [`crate::adapt::ConfigStore`]s collected in a
 //! [`crate::adapt::StoreMap`]: [`run_pipeline_stores`] is the
@@ -68,6 +74,7 @@ use anyhow::{ensure, Result};
 use crate::adapt::{AdmissionGate, ConfigStore, StoreMap, Telemetry};
 use crate::controller::policy::{ConfigSet, PolicySet, SchedulingPolicy};
 use crate::controller::Executor;
+use crate::fault::BreakerMap;
 use crate::util::rng::Pcg32;
 use crate::workload::TimedRequest;
 
@@ -76,8 +83,10 @@ pub use cache::{CacheSet, CacheStats, ReuseCache};
 pub use clock::{EventClock, ServeClock, Stopwatch, WallDeadline};
 pub use multi::NetExecutorMap;
 pub use queue::{route_shard, AdmissionQueue, QueueStats, RequestSource, ShardWorkerView, ShardedQueue};
-pub use report::{NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport, ShardBreakdown};
-pub use worker::Worker;
+pub use report::{
+    CompletionView, NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport, ShardBreakdown,
+};
+pub use worker::{Resilience, RetryPolicy, Worker};
 
 /// Pipeline shape knobs.
 #[derive(Debug, Clone, Copy)]
@@ -246,7 +255,48 @@ where
     F: Fn(usize) -> Result<E> + Sync,
     E: Executor,
 {
+    run_pipeline_resilient(
+        stores,
+        policy,
+        timeline,
+        cfg,
+        telemetry,
+        gate,
+        RetryPolicy::none(),
+        None,
+        factory,
+    )
+}
+
+/// [`run_pipeline_stores`] plus recovery: every worker retries failed
+/// dispatches under `retry` (deadline-budgeted, never sleeping — see
+/// [`RetryPolicy`]), and, when `breaker` is given, routes each dispatch
+/// through its network's shared [`crate::fault::CircuitBreaker`] —
+/// an open breaker restricts scheduling to the *degraded* (edge-only)
+/// view of the live store until a half-open probe proves the cloud
+/// link back (DESIGN.md §15).
+///
+/// `run_pipeline_stores` is exactly this function with
+/// [`RetryPolicy::none`] and no breakers, so every pre-fault baseline
+/// is bitwise unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline_resilient<F, E>(
+    stores: &StoreMap<'_>,
+    policy: &dyn SchedulingPolicy,
+    timeline: &[TimedRequest],
+    cfg: &PipelineConfig,
+    telemetry: Option<&Telemetry>,
+    gate: Option<&AdmissionGate>,
+    retry: RetryPolicy,
+    breaker: Option<&BreakerMap>,
+    factory: F,
+) -> Result<ServeReport>
+where
+    F: Fn(usize) -> Result<E> + Sync,
+    E: Executor,
+{
     ensure!(!stores.is_empty(), "store map binds no network");
+    ensure!(retry.max_attempts >= 1, "retry budget needs at least one attempt");
     ensure!(cfg.workers >= 1, "need at least one worker");
     ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
     ensure!(cfg.shards >= 1, "need at least one queue shard");
@@ -301,6 +351,7 @@ where
                     caches,
                     executor,
                     telemetry,
+                    resilience: Resilience::new(retry, breaker),
                     records: Vec::new(),
                 };
                 worker.run();

@@ -46,6 +46,34 @@ pub enum ServeOutcome {
         /// adaptation integration test checks both against the store's
         /// epoch registry).
         store_digest: u64,
+        /// Served from the degraded (edge-only) restriction of the
+        /// store while this network's circuit breaker was open
+        /// (DESIGN.md §15).  `epoch`/`store_digest` still identify the
+        /// parent snapshot the restriction was taken from.
+        degraded: bool,
+    },
+    /// Executed to completion, but only after one or more failed
+    /// dispatch attempts were absorbed by deadline-budgeted retries.
+    /// Carries the same completion payload as [`ServeOutcome::Done`];
+    /// `latency_ms` already includes the deterministic backoff
+    /// penalties charged by the retry loop, so the QoS verdict sees
+    /// the honest (slower) service time.
+    RetriedDone {
+        /// Total dispatch attempts (≥ 2; 1 would be a plain `Done`).
+        attempts: u32,
+        config: Config,
+        latency_ms: f64,
+        energy_j: f64,
+        edge_energy_j: f64,
+        cloud_energy_j: f64,
+        accuracy: f64,
+        select_overhead_ms: f64,
+        apply_overhead_ms: f64,
+        coalesced: bool,
+        finished_ms: Option<f64>,
+        epoch: u64,
+        store_digest: u64,
+        degraded: bool,
     },
     /// Shed at admission: the bounded queue was full.
     RejectedQueueFull,
@@ -69,8 +97,112 @@ pub enum ServeOutcome {
     /// `Err`): the config didn't resolve, the backend failed, or no
     /// executor was bound for the network.  The whole batch is shed —
     /// recorded as a QoS miss, never a crash (shed-not-crash contract,
-    /// DESIGN.md §13).
+    /// DESIGN.md §13).  This is the *one-shot* failure outcome
+    /// ([`crate::serve::RetryPolicy::none`]); pipelines with retries
+    /// enabled record [`ServeOutcome::FailedAfterRetry`] instead.
     ExecutorFailed,
+    /// Every dispatch attempt the request's remaining QoS budget could
+    /// pay for failed (or the attempt cap was reached): shed after
+    /// `attempts` dispatches, counted as a QoS miss.
+    FailedAfterRetry {
+        /// Dispatch attempts experienced before the request was dropped.
+        attempts: u32,
+    },
+}
+
+/// Uniform borrow of a completion's payload, whether it finished first
+/// try ([`ServeOutcome::Done`], `attempts == 1`) or after retries
+/// ([`ServeOutcome::RetriedDone`]).  Every aggregation in this module
+/// goes through [`ServeOutcome::completion`] so the two variants can
+/// never drift apart in the accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct CompletionView<'a> {
+    pub config: &'a Config,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    pub accuracy: f64,
+    pub select_overhead_ms: f64,
+    pub apply_overhead_ms: f64,
+    pub coalesced: bool,
+    pub finished_ms: Option<f64>,
+    pub epoch: u64,
+    pub store_digest: u64,
+    pub degraded: bool,
+    /// Total dispatch attempts (1 = first-try completion).
+    pub attempts: u32,
+}
+
+impl ServeOutcome {
+    /// The completion payload, if this outcome represents a served
+    /// request (`Done` or `RetriedDone`); `None` for every shed class.
+    pub fn completion(&self) -> Option<CompletionView<'_>> {
+        match self {
+            ServeOutcome::Done {
+                config,
+                latency_ms,
+                energy_j,
+                edge_energy_j,
+                cloud_energy_j,
+                accuracy,
+                select_overhead_ms,
+                apply_overhead_ms,
+                coalesced,
+                finished_ms,
+                epoch,
+                store_digest,
+                degraded,
+            } => Some(CompletionView {
+                config,
+                latency_ms: *latency_ms,
+                energy_j: *energy_j,
+                edge_energy_j: *edge_energy_j,
+                cloud_energy_j: *cloud_energy_j,
+                accuracy: *accuracy,
+                select_overhead_ms: *select_overhead_ms,
+                apply_overhead_ms: *apply_overhead_ms,
+                coalesced: *coalesced,
+                finished_ms: *finished_ms,
+                epoch: *epoch,
+                store_digest: *store_digest,
+                degraded: *degraded,
+                attempts: 1,
+            }),
+            ServeOutcome::RetriedDone {
+                attempts,
+                config,
+                latency_ms,
+                energy_j,
+                edge_energy_j,
+                cloud_energy_j,
+                accuracy,
+                select_overhead_ms,
+                apply_overhead_ms,
+                coalesced,
+                finished_ms,
+                epoch,
+                store_digest,
+                degraded,
+            } => Some(CompletionView {
+                config,
+                latency_ms: *latency_ms,
+                energy_j: *energy_j,
+                edge_energy_j: *edge_energy_j,
+                cloud_energy_j: *cloud_energy_j,
+                accuracy: *accuracy,
+                select_overhead_ms: *select_overhead_ms,
+                apply_overhead_ms: *apply_overhead_ms,
+                coalesced: *coalesced,
+                finished_ms: *finished_ms,
+                epoch: *epoch,
+                store_digest: *store_digest,
+                degraded: *degraded,
+                attempts: *attempts,
+            }),
+            _ => None,
+        }
+    }
 }
 
 /// One request's journey through the pipeline.
@@ -111,21 +243,22 @@ impl ServeRecord {
     }
 
     pub fn is_completed(&self) -> bool {
-        matches!(self.outcome, ServeOutcome::Done { .. })
+        self.outcome.completion().is_some()
     }
 
     /// Completed within the QoS deadline?  (`false` for rejections: a
     /// shed request by definition missed its service objective.)  In
     /// real-time replay the verdict is against the *absolute* deadline
     /// (queue wait counts); in virtual time, against execution latency
-    /// alone — the sequential Algorithm-1 semantics.
+    /// alone — the sequential Algorithm-1 semantics.  Retried
+    /// completions are judged on their penalty-inclusive latency.
     pub fn qos_met(&self) -> bool {
-        match &self.outcome {
-            ServeOutcome::Done { latency_ms, finished_ms, .. } => match finished_ms {
-                Some(f) => *f <= self.arrival_ms + self.qos_ms,
-                None => *latency_ms <= self.qos_ms,
+        match self.outcome.completion() {
+            Some(c) => match c.finished_ms {
+                Some(f) => f <= self.arrival_ms + self.qos_ms,
+                None => c.latency_ms <= self.qos_ms,
             },
-            _ => false,
+            None => false,
         }
     }
 }
@@ -144,6 +277,16 @@ pub struct NetworkBreakdown {
     pub qos_hits: usize,
     /// Requests with no store-map entry for this network.
     pub unknown_network: usize,
+    /// Requests shed on a failed dispatch: one-shot
+    /// [`ServeOutcome::ExecutorFailed`] plus post-retry
+    /// [`ServeOutcome::FailedAfterRetry`].
+    pub executor_failed: usize,
+    /// Completions that needed more than one dispatch attempt
+    /// ([`ServeOutcome::RetriedDone`]); a subset of `done`.
+    pub retried: usize,
+    /// Completions served from the degraded edge-only restriction
+    /// while the breaker was open; a subset of `done`.
+    pub degraded_served: usize,
     /// Total energy over completed requests (J); divide by `done` for
     /// the per-network mean.
     pub energy_sum_j: f64,
@@ -271,11 +414,42 @@ impl ServeReport {
             .count()
     }
 
-    /// Requests shed because their batch's executor reported an error.
+    /// Requests shed because their batch's executor reported an error
+    /// (the one-shot path, no retries configured).
     pub fn executor_failed(&self) -> usize {
         self.records
             .iter()
             .filter(|r| matches!(r.outcome, ServeOutcome::ExecutorFailed))
+            .count()
+    }
+
+    /// Requests dropped after their retry budget ran out
+    /// ([`ServeOutcome::FailedAfterRetry`]).
+    pub fn retry_failed(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.outcome, ServeOutcome::FailedAfterRetry { .. }))
+            .count()
+    }
+
+    /// Completions that needed more than one dispatch attempt; a subset
+    /// of [`ServeReport::completed`].
+    pub fn retried(&self) -> usize {
+        self.records
+            .iter()
+            .filter_map(|r| r.outcome.completion())
+            .filter(|c| c.attempts > 1)
+            .count()
+    }
+
+    /// Completions served from the degraded edge-only restriction while
+    /// their network's breaker was open; a subset of
+    /// [`ServeReport::completed`].
+    pub fn degraded_served(&self) -> usize {
+        self.records
+            .iter()
+            .filter_map(|r| r.outcome.completion())
+            .filter(|c| c.degraded)
             .count()
     }
 
@@ -298,10 +472,7 @@ impl ServeReport {
             .records
             .iter()
             .filter(|r| pred(r))
-            .filter_map(|r| match &r.outcome {
-                ServeOutcome::Done { epoch, .. } => Some(*epoch),
-                _ => None,
-            })
+            .filter_map(|r| r.outcome.completion().map(|c| c.epoch))
             .collect();
         epochs.sort_unstable();
         epochs.dedup();
@@ -333,6 +504,9 @@ impl ServeReport {
             done: 0,
             qos_hits: 0,
             unknown_network: 0,
+            executor_failed: 0,
+            retried: 0,
+            degraded_served: 0,
             energy_sum_j: 0.0,
         };
         for r in self.records.iter().filter(|r| r.net == net) {
@@ -340,12 +514,22 @@ impl ServeReport {
             if r.qos_met() {
                 b.qos_hits += 1;
             }
-            match &r.outcome {
-                ServeOutcome::Done { energy_j, .. } => {
-                    b.done += 1;
-                    b.energy_sum_j += energy_j;
+            if let Some(c) = r.outcome.completion() {
+                b.done += 1;
+                b.energy_sum_j += c.energy_j;
+                if c.attempts > 1 {
+                    b.retried += 1;
                 }
+                if c.degraded {
+                    b.degraded_served += 1;
+                }
+                continue;
+            }
+            match &r.outcome {
                 ServeOutcome::UnknownNetwork => b.unknown_network += 1,
+                ServeOutcome::ExecutorFailed | ServeOutcome::FailedAfterRetry { .. } => {
+                    b.executor_failed += 1
+                }
                 _ => {}
             }
         }
@@ -377,11 +561,12 @@ impl ServeReport {
             if r.qos_met() {
                 b.qos_hits += 1;
             }
+            if let Some(c) = r.outcome.completion() {
+                b.done += 1;
+                b.energy_sum_j += c.energy_j;
+                continue;
+            }
             match &r.outcome {
-                ServeOutcome::Done { energy_j, .. } => {
-                    b.done += 1;
-                    b.energy_sum_j += energy_j;
-                }
                 ServeOutcome::ExpiredInQueue => b.expired += 1,
                 ServeOutcome::RejectedQueueFull => b.rejected_queue_full += 1,
                 ServeOutcome::ShedByAdmission => b.shed_by_admission += 1,
@@ -401,7 +586,8 @@ impl ServeReport {
     pub fn coalesced(&self) -> usize {
         self.records
             .iter()
-            .filter(|r| matches!(r.outcome, ServeOutcome::Done { coalesced: true, .. }))
+            .filter_map(|r| r.outcome.completion())
+            .filter(|c| c.coalesced)
             .count()
     }
 
@@ -456,30 +642,20 @@ impl ServeReport {
             .records
             .iter()
             .filter(|r| pred(r))
-            .filter_map(|r| match &r.outcome {
-                ServeOutcome::Done {
-                    config,
-                    latency_ms,
-                    energy_j,
-                    edge_energy_j,
-                    cloud_energy_j,
-                    accuracy,
-                    select_overhead_ms,
-                    apply_overhead_ms,
-                    ..
-                } => Some(RequestRecord {
+            .filter_map(|r| {
+                let c = r.outcome.completion()?;
+                Some(RequestRecord {
                     request_id: r.request_id,
                     qos_ms: r.qos_ms,
-                    config: *config,
-                    latency_ms: *latency_ms,
-                    energy_j: *energy_j,
-                    edge_energy_j: *edge_energy_j,
-                    cloud_energy_j: *cloud_energy_j,
-                    accuracy: *accuracy,
-                    select_overhead_ms: *select_overhead_ms,
-                    apply_overhead_ms: *apply_overhead_ms,
-                }),
-                _ => None,
+                    config: *c.config,
+                    latency_ms: c.latency_ms,
+                    energy_j: c.energy_j,
+                    edge_energy_j: c.edge_energy_j,
+                    cloud_energy_j: c.cloud_energy_j,
+                    accuracy: c.accuracy,
+                    select_overhead_ms: c.select_overhead_ms,
+                    apply_overhead_ms: c.apply_overhead_ms,
+                })
             })
             .collect();
         MetricSet::new(strategy, records)
@@ -518,9 +694,10 @@ impl ServeReport {
         };
         format!(
             "{} done / {} shed / {} backpressured / {} expired / {} policy-rejected / \
-             {} unknown-net / {} exec-failed on {} workers; QoS hit {:.0}%; \
-             p50 {:.0} ms p99 {:.0} ms; \
-             {:.2} J/req; {} reconfigs, {} avoided ({} coalesced); {:.0} req/s; \
+             {} unknown-net / {} exec-failed / {} retry-failed on {} workers; \
+             QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; \
+             {:.2} J/req; {} reconfigs, {} avoided ({} coalesced); \
+             {} retried, {} degraded-served; {:.0} req/s; \
              {} store epoch(s); nets: {}{}",
             self.completed(),
             self.rejected_queue_full(),
@@ -529,6 +706,7 @@ impl ServeReport {
             self.rejected_by_policy(),
             self.unknown_network(),
             self.executor_failed(),
+            self.retry_failed(),
             self.workers,
             self.qos_hit_rate() * 100.0,
             self.latency_p50(),
@@ -537,6 +715,8 @@ impl ServeReport {
             self.cache.reconfigs,
             self.cache.hits,
             self.coalesced(),
+            self.retried(),
+            self.degraded_served(),
             self.throughput_rps(),
             self.epochs_observed().len().max(1),
             if nets.is_empty() { "-".to_string() } else { nets },
@@ -577,7 +757,54 @@ mod tests {
                 finished_ms: None,
                 epoch: 0,
                 store_digest: 0xd1ce,
+                degraded: false,
             },
+        }
+    }
+
+    /// A completion that survived `attempts` dispatches, optionally
+    /// served from the degraded edge-only restriction.
+    fn retried(id: usize, qos: f64, lat: f64, attempts: u32, degraded: bool) -> ServeRecord {
+        let net = Network::Vgg16;
+        ServeRecord {
+            request_id: id,
+            net,
+            qos_ms: qos,
+            arrival_ms: id as f64,
+            worker: Some(id % 2),
+            outcome: ServeOutcome::RetriedDone {
+                attempts,
+                config: Config {
+                    net,
+                    cpu_idx: 6,
+                    tpu: TpuMode::Off,
+                    gpu: true,
+                    split: if degraded { 22 } else { 5 },
+                },
+                latency_ms: lat,
+                energy_j: 3.0,
+                edge_energy_j: 1.5,
+                cloud_energy_j: 1.5,
+                accuracy: 0.95,
+                select_overhead_ms: 0.01,
+                apply_overhead_ms: 0.0,
+                coalesced: false,
+                finished_ms: None,
+                epoch: 0,
+                store_digest: 0xd1ce,
+                degraded,
+            },
+        }
+    }
+
+    fn failed_after_retry(id: usize, attempts: u32) -> ServeRecord {
+        ServeRecord {
+            request_id: id,
+            net: Network::Vgg16,
+            qos_ms: 100.0,
+            arrival_ms: id as f64,
+            worker: Some(0),
+            outcome: ServeOutcome::FailedAfterRetry { attempts },
         }
     }
 
@@ -889,5 +1116,87 @@ mod tests {
         assert!(r.latency_p50().is_nan());
         assert!(r.mean_energy_j().is_nan());
         assert_eq!(r.to_metric_set("x").len(), 0);
+        assert_eq!((r.retried(), r.retry_failed(), r.degraded_served()), (0, 0, 0));
+    }
+
+    #[test]
+    fn retried_completions_are_done_and_feed_every_aggregate() {
+        let r = report(vec![
+            done(0, 100.0, 90.0, 2.0, false),
+            retried(1, 100.0, 95.0, 3, false),
+            retried(2, 100.0, 150.0, 2, true), // violated after penalties
+        ]);
+        assert_eq!(r.completed(), 3, "retried completions are completions");
+        assert_eq!(r.retried(), 2);
+        assert_eq!(r.degraded_served(), 1);
+        assert!(r.records[1].qos_met(), "penalty-inclusive 95 ms beats 100 ms");
+        assert!(!r.records[2].qos_met(), "penalties pushed it past the deadline");
+        assert_eq!(r.to_metric_set("x").len(), 3, "metrics see retried completions");
+        assert_eq!(r.epochs_observed(), vec![0], "retried records stamp epochs too");
+        let line = r.summary_line();
+        assert!(line.contains("3 done"), "{line}");
+        assert!(line.contains("2 retried, 1 degraded-served"), "{line}");
+    }
+
+    #[test]
+    fn failed_after_retry_is_a_shed_class() {
+        let r = report(vec![done(0, 100.0, 90.0, 2.0, false), failed_after_retry(1, 3)]);
+        assert_eq!(r.retry_failed(), 1);
+        assert_eq!(r.executor_failed(), 0, "one-shot and post-retry sheds stay distinct");
+        assert_eq!(r.completed(), 1);
+        assert!(!r.records[1].qos_met());
+        assert_eq!(r.to_metric_set("x").len(), 1, "excluded from latency metrics");
+        let line = r.summary_line();
+        assert!(line.contains("1 retry-failed"), "{line}");
+        match &r.records[1].outcome {
+            ServeOutcome::FailedAfterRetry { attempts } => assert_eq!(*attempts, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn recovery_columns_reconcile_exactly_with_aggregates() {
+        let r = report(vec![
+            done_net(0, Network::Vgg16, 100.0, 90.0, 2.0, false),
+            retried(1, 100.0, 95.0, 2, false),
+            retried(2, 100.0, 96.0, 4, true),
+            failed_after_retry(3, 4),
+            ServeRecord {
+                request_id: 4,
+                net: Network::Vit,
+                qos_ms: 100.0,
+                arrival_ms: 4.0,
+                worker: Some(0),
+                outcome: ServeOutcome::ExecutorFailed,
+            },
+            done_net(5, Network::Vit, 300.0, 200.0, 8.0, false),
+        ]);
+        let parts = r.breakdown();
+        // the new columns sum to the matching aggregates, exactly
+        assert_eq!(parts.iter().map(|b| b.retried).sum::<usize>(), r.retried());
+        assert_eq!(
+            parts.iter().map(|b| b.degraded_served).sum::<usize>(),
+            r.degraded_served()
+        );
+        assert_eq!(
+            parts.iter().map(|b| b.executor_failed).sum::<usize>(),
+            r.executor_failed() + r.retry_failed(),
+            "the per-network failure column folds both shed classes"
+        );
+        // and the old reconciliations still hold with retried records
+        assert_eq!(parts.iter().map(|b| b.requests).sum::<usize>(), r.records.len());
+        assert_eq!(parts.iter().map(|b| b.done).sum::<usize>(), r.completed());
+        let energy_total: f64 = parts.iter().map(|b| b.energy_sum_j).sum();
+        assert!((energy_total - r.mean_energy_j() * r.completed() as f64).abs() < 1e-9);
+        let vgg = r.breakdown_for(Network::Vgg16);
+        assert_eq!(
+            (vgg.requests, vgg.done, vgg.retried, vgg.degraded_served, vgg.executor_failed),
+            (4, 3, 2, 1, 1)
+        );
+        let vit = r.breakdown_for(Network::Vit);
+        assert_eq!((vit.requests, vit.done, vit.retried, vit.executor_failed), (2, 1, 0, 1));
+        // shard slices count retried completions as done too
+        let shard = r.shard_breakdown();
+        assert_eq!(shard.iter().map(|b| b.done).sum::<usize>(), r.completed());
     }
 }

@@ -48,14 +48,117 @@
 //! real-time replay the budget shrinks with queue wait (ROADMAP
 //! "wait-aware scheduling").
 
-use crate::adapt::{Sample, StoreMap, Telemetry};
+use crate::adapt::{Sample, StoreMap, StoreSnapshot, Telemetry};
 use crate::controller::{Executor, PolicyDecision, PolicySet};
+use crate::fault::{classify, BreakerMap, BreakerRoute, FaultClass};
+use crate::space::Network;
 use crate::workload::Request;
 
 use super::cache::CacheSet;
 use super::clock::{ServeClock, Stopwatch};
 use super::queue::{AdmissionQueue, RequestSource};
 use super::report::{ServeOutcome, ServeRecord};
+
+/// Deadline-budgeted retry parameters (DESIGN.md §15).
+///
+/// Retries never sleep: the k-th failed attempt charges a deterministic
+/// exponential penalty `backoff_ms · 2^(k-1)` against every batched
+/// request's *remaining QoS budget* (computed from the `pop_due` time
+/// snapshot, never re-read), and requests whose budget can no longer
+/// cover the penalty plus the entry's predicted latency are dropped
+/// from the batch as [`ServeOutcome::FailedAfterRetry`] before the next
+/// attempt — the surviving sub-batch is re-dispatched as-is.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total dispatch attempts per batch (1 = the legacy one-shot shed).
+    pub max_attempts: u32,
+    /// Base backoff charged after the first failed attempt (ms).
+    pub backoff_ms: f64,
+}
+
+impl RetryPolicy {
+    /// Legacy behavior: one attempt, failure sheds the batch.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, backoff_ms: 0.0 }
+    }
+
+    /// Default budgeted retries: up to 4 attempts, 4 ms base backoff.
+    pub fn budgeted() -> RetryPolicy {
+        RetryPolicy { max_attempts: 4, backoff_ms: 4.0 }
+    }
+}
+
+/// A worker's recovery configuration: retry policy, optional shared
+/// circuit breakers, and a per-worker memo of degraded store views so
+/// an open breaker does not rebuild the edge-only `ConfigSet` (sort +
+/// index + digest) on every pop.
+pub struct Resilience<'a> {
+    pub retry: RetryPolicy,
+    /// Shared per-network breakers (`None` = breakers disabled, every
+    /// dispatch routes [`BreakerRoute::Full`]).
+    pub breaker: Option<&'a BreakerMap>,
+    /// Memoized `(net, parent epoch, degraded view)` — rebuilt only
+    /// when the parent store's epoch moves, so degradation stays
+    /// coherent with hot-swap.
+    degraded_memo: Vec<(Network, u64, StoreSnapshot)>,
+}
+
+impl Resilience<'_> {
+    /// No recovery at all: one-shot dispatch, no breakers — exactly the
+    /// legacy pipeline behavior.
+    pub fn none() -> Resilience<'static> {
+        Resilience::new(RetryPolicy::none(), None)
+    }
+}
+
+impl<'a> Resilience<'a> {
+    pub fn new(retry: RetryPolicy, breaker: Option<&'a BreakerMap>) -> Resilience<'a> {
+        Resilience { retry, breaker, degraded_memo: Vec::new() }
+    }
+
+    /// Route the next dispatch for `net` through its breaker (if any).
+    fn route(&self, net: Network) -> BreakerRoute {
+        self.breaker
+            .and_then(|map| map.with(net, |b| b.route()))
+            .unwrap_or(BreakerRoute::Full)
+    }
+
+    /// The degraded view of `fresh`, memoized per (net, epoch).
+    fn degraded_view(&mut self, net: Network, fresh: &StoreSnapshot) -> StoreSnapshot {
+        if let Some(slot) = self.degraded_memo.iter_mut().find(|(n, _, _)| *n == net) {
+            if slot.1 != fresh.epoch() {
+                *slot = (net, fresh.epoch(), fresh.degraded());
+            }
+            return slot.2.clone();
+        }
+        let view = fresh.degraded();
+        self.degraded_memo.push((net, fresh.epoch(), view.clone()));
+        view
+    }
+
+    /// Report a batch's final success verdict; `cloud` says whether the
+    /// served config actually exercised the edge→cloud link.
+    fn on_success(&self, net: Network, route: BreakerRoute, cloud: bool) {
+        if let Some(map) = self.breaker {
+            map.with(net, |b| b.on_success(route, cloud));
+        }
+    }
+
+    /// Report a batch's final failure verdict.
+    fn on_failure(&self, net: Network, route: BreakerRoute, class: FaultClass) {
+        if let Some(map) = self.breaker {
+            map.with(net, |b| b.on_failure(route, class));
+        }
+    }
+
+    /// A routed dispatch never reached execution (policy reject, cache
+    /// miss): release any probe slot it held.
+    fn abort(&self, net: Network, route: BreakerRoute) {
+        if let Some(map) = self.breaker {
+            map.with(net, |b| b.abort_probe(route));
+        }
+    }
+}
 
 /// One serving worker's state for a pipeline run.
 ///
@@ -82,6 +185,9 @@ pub struct Worker<'a, E: Executor, Q: RequestSource = AdmissionQueue> {
     pub executor: E,
     /// Adaptation telemetry sink (`None` = open-loop serving).
     pub telemetry: Option<&'a Telemetry>,
+    /// Recovery configuration: deadline-budgeted retries plus optional
+    /// circuit breakers ([`Resilience::none`] = legacy one-shot shed).
+    pub resilience: Resilience<'a>,
     pub records: Vec<ServeRecord>,
 }
 
@@ -125,8 +231,19 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                 continue;
             };
             // one coherent store view for this whole batch: decision,
-            // coalescing, and entry lookup all resolve against it
-            let snapshot = store.snapshot();
+            // coalescing, and entry lookup all resolve against it.
+            // The breaker routes *before* the decision: while open, the
+            // batch schedules against the degraded (edge-only) view of
+            // the same snapshot — a policy restriction, not a separate
+            // code path, so epoch coherence is untouched.
+            let fresh = store.snapshot();
+            let route = self.resilience.route(net);
+            let degraded = route == BreakerRoute::Degraded;
+            let snapshot = if degraded {
+                self.resilience.degraded_view(net, &fresh)
+            } else {
+                fresh
+            };
             let set = snapshot.set();
             // the request's network selects its policy lane (a private
             // fork for stateful policies, the shared instance otherwise)
@@ -138,6 +255,7 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             let idx = match decision {
                 PolicyDecision::Run(idx) => idx,
                 PolicyDecision::Reject => {
+                    self.resilience.abort(net, route);
                     self.records.push(ServeRecord {
                         request_id: first.request.id,
                         net,
@@ -183,18 +301,86 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             // serving and the report counts the loss.
             let entry = &set.entries()[idx];
             let Some(cache) = self.caches.get_mut(net) else {
+                self.resilience.abort(net, route);
                 self.shed_failed(&batch);
                 continue;
             };
             let apply_ms = cache.activate(&entry.config);
-            let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
-            let outcomes = match self.executor.try_execute_batch(&requests, &entry.config) {
-                Ok(outcomes) => outcomes,
-                Err(_) => {
-                    self.shed_failed(&batch);
-                    continue;
+            // deadline-budgeted retry loop (DESIGN.md §15): each failed
+            // attempt classifies the error, charges a deterministic
+            // exponential backoff penalty against the batch's remaining
+            // QoS budgets (taken from the pop_due snapshot — no sleeps,
+            // no wall-clock reads), drops requests the penalty has
+            // priced out, and re-dispatches the survivors.  The breaker
+            // hears one *final* verdict per batch, after the loop.
+            let max_attempts = self.resilience.retry.max_attempts.max(1);
+            let backoff_ms = self.resilience.retry.backoff_ms;
+            let mut attempt = 0u32;
+            let mut penalty_ms = 0.0f64;
+            let mut last_class = FaultClass::Local;
+            let outcomes = loop {
+                attempt += 1;
+                let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
+                match self.executor.try_execute_batch(&requests, &entry.config) {
+                    Ok(outcomes) => break Some(outcomes),
+                    Err(err) => {
+                        last_class = classify(&err);
+                        if attempt >= max_attempts {
+                            break None;
+                        }
+                        penalty_ms += backoff_ms * ((1u64 << (attempt - 1).min(20)) as f64);
+                        // survivors must still afford the accumulated
+                        // penalty plus the entry's predicted latency
+                        // out of their remaining budget
+                        let mut survivors = Vec::with_capacity(batch.len());
+                        for tr in batch.drain(..) {
+                            let remaining = clock.remaining_ms(&tr, now);
+                            if remaining - penalty_ms - entry.latency_ms >= 0.0 {
+                                survivors.push(tr);
+                            } else {
+                                self.records.push(ServeRecord {
+                                    request_id: tr.request.id,
+                                    net,
+                                    qos_ms: tr.request.qos_ms,
+                                    arrival_ms: tr.arrival_ms,
+                                    worker: Some(self.id),
+                                    outcome: ServeOutcome::FailedAfterRetry {
+                                        attempts: attempt,
+                                    },
+                                });
+                            }
+                        }
+                        batch = survivors;
+                        if batch.is_empty() {
+                            break None;
+                        }
+                    }
                 }
             };
+            let Some(outcomes) = outcomes else {
+                // final verdict: failure — the breaker only ever hears
+                // the post-retry outcome, so transient faults absorbed
+                // by retries never open it
+                self.resilience.on_failure(net, route, last_class);
+                if max_attempts == 1 {
+                    // legacy one-shot path, bit-identical to pre-retry
+                    // pipelines: shed as ExecutorFailed
+                    self.shed_failed(&batch);
+                } else {
+                    for tr in &batch {
+                        self.records.push(ServeRecord {
+                            request_id: tr.request.id,
+                            net,
+                            qos_ms: tr.request.qos_ms,
+                            arrival_ms: tr.arrival_ms,
+                            worker: Some(self.id),
+                            outcome: ServeOutcome::FailedAfterRetry { attempts: attempt },
+                        });
+                    }
+                }
+                continue;
+            };
+            self.resilience.on_success(net, route, !entry.config.is_edge_only());
             // hard check: a short outcome vector would silently drop
             // records for the batch tail via the zip below
             assert_eq!(outcomes.len(), batch.len(), "one outcome per batched request");
@@ -203,9 +389,12 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             // discrete-event mode the batch's simulated service time
             // (its slowest member) is the completion event that
             // advances the shared clock
+            // retry penalties are part of the batch's service time: the
+            // completion event (and every member's charged latency)
+            // includes them, so a retried batch is honestly slower
             let service_ms = outcomes.iter().fold(0.0f64, |m, o| m.max(o.latency_ms));
             let batch_arrival_ms = batch.iter().fold(0.0f64, |m, tr| m.max(tr.arrival_ms));
-            let finished_ms = clock.complete_batch(now, batch_arrival_ms, service_ms);
+            let finished_ms = clock.complete_batch(now, batch_arrival_ms, service_ms + penalty_ms);
 
             for (i, (tr, out)) in batch.iter().zip(outcomes).enumerate() {
                 if let Some(telemetry) = self.telemetry {
@@ -224,13 +413,8 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                         },
                     );
                 }
-                self.records.push(ServeRecord {
-                    request_id: tr.request.id,
-                    net,
-                    qos_ms: tr.request.qos_ms,
-                    arrival_ms: tr.arrival_ms,
-                    worker: Some(self.id),
-                    outcome: ServeOutcome::Done {
+                let outcome = if attempt == 1 {
+                    ServeOutcome::Done {
                         config: entry.config,
                         latency_ms: out.latency_ms,
                         energy_j: out.energy_j,
@@ -243,7 +427,36 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                         finished_ms,
                         epoch: snapshot.epoch(),
                         store_digest: snapshot.digest(),
-                    },
+                        degraded,
+                    }
+                } else {
+                    ServeOutcome::RetriedDone {
+                        attempts: attempt,
+                        config: entry.config,
+                        // the charged latency includes the accumulated
+                        // backoff penalty — retried work is slower and
+                        // the QoS verdict must see that
+                        latency_ms: out.latency_ms + penalty_ms,
+                        energy_j: out.energy_j,
+                        edge_energy_j: out.edge_energy_j,
+                        cloud_energy_j: out.cloud_energy_j,
+                        accuracy: out.accuracy,
+                        select_overhead_ms: if i == 0 { select_ms } else { 0.0 },
+                        apply_overhead_ms: if i == 0 { apply_ms } else { 0.0 },
+                        coalesced: i > 0,
+                        finished_ms,
+                        epoch: snapshot.epoch(),
+                        store_digest: snapshot.digest(),
+                        degraded,
+                    }
+                };
+                self.records.push(ServeRecord {
+                    request_id: tr.request.id,
+                    net,
+                    qos_ms: tr.request.qos_ms,
+                    arrival_ms: tr.arrival_ms,
+                    worker: Some(self.id),
+                    outcome,
                 });
             }
         }
@@ -344,6 +557,7 @@ mod tests {
             caches: CacheSet::new(&stores.networks(), true, &mut rng),
             executor: Toy { dispatches: 0 },
             telemetry: None,
+            resilience: Resilience::none(),
             records: Vec::new(),
         }
     }
@@ -518,6 +732,7 @@ mod tests {
             caches: CacheSet::new(&stores.networks(), true, &mut rng),
             executor: BatchSpy { batches: Vec::new() },
             telemetry: None,
+            resilience: Resilience::none(),
             records: Vec::new(),
         };
         w.run();
@@ -604,6 +819,7 @@ mod tests {
             caches: CacheSet::new(&stores.networks(), true, &mut rng),
             executor: AlwaysFails,
             telemetry: None,
+            resilience: Resilience::none(),
             records: Vec::new(),
         };
         w.run();
@@ -646,5 +862,280 @@ mod tests {
         };
         assert_eq!(stamp(&before), (0, 3));
         assert_eq!(stamp(&after), (1, 9));
+    }
+
+    use crate::fault::{BreakerState, FaultError, FaultKind};
+
+    /// Fails its first `fails` dispatches with a transient typed fault,
+    /// then behaves like [`Toy`].
+    struct FlakyToy {
+        fails: u32,
+        seen: u32,
+    }
+
+    impl Executor for FlakyToy {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            Toy { dispatches: 0 }.execute(request, config)
+        }
+
+        fn try_execute_batch(
+            &mut self,
+            requests: &[&Request],
+            config: &Config,
+        ) -> anyhow::Result<Vec<ExecOutcome>> {
+            self.seen += 1;
+            if self.seen <= self.fails {
+                return Err(FaultError {
+                    kind: FaultKind::Stall,
+                    request_id: requests[0].id,
+                    attempt: self.seen,
+                }
+                .into());
+            }
+            Ok(self.execute_batch(requests, config))
+        }
+    }
+
+    #[test]
+    fn budgeted_retries_absorb_transient_faults() {
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
+        let queue = AdmissionQueue::new(8);
+        assert!(queue.offer(tr(0, 500.0)));
+        queue.close();
+        let mut rng = Pcg32::seeded(21);
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            stores: &stores,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
+            max_batch: 1,
+            clock: ServeClock::Virtual,
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
+            executor: FlakyToy { fails: 2, seen: 0 },
+            telemetry: None,
+            resilience: Resilience::new(RetryPolicy::budgeted(), None),
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 1);
+        match &w.records[0].outcome {
+            ServeOutcome::RetriedDone { attempts, latency_ms, degraded, .. } => {
+                assert_eq!(*attempts, 3, "two faults absorbed, third attempt served");
+                // toy latency (split 3) plus the 4 + 8 ms backoff penalties
+                assert_eq!(*latency_ms, 3.0 + 4.0 + 8.0);
+                assert!(!degraded);
+            }
+            other => panic!("expected RetriedDone: {other:?}"),
+        }
+        assert!(w.records[0].qos_met(), "well within the 500 ms budget");
+    }
+
+    #[test]
+    fn retries_respect_the_remaining_qos_budget() {
+        // the entry predicts 100 ms; a 102 ms QoS leaves no room for
+        // even one 4 ms backoff — the request must be dropped after the
+        // first failed attempt instead of retried into a guaranteed miss
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
+        let queue = AdmissionQueue::new(8);
+        assert!(queue.offer(tr(0, 102.0)));
+        queue.close();
+        let mut rng = Pcg32::seeded(22);
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            stores: &stores,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
+            max_batch: 1,
+            clock: ServeClock::Virtual,
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
+            executor: AlwaysFails,
+            telemetry: None,
+            resilience: Resilience::new(RetryPolicy::budgeted(), None),
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 1);
+        match &w.records[0].outcome {
+            ServeOutcome::FailedAfterRetry { attempts } => {
+                assert_eq!(*attempts, 1, "budget priced out every retry");
+            }
+            other => panic!("expected FailedAfterRetry: {other:?}"),
+        }
+        assert!(!w.records[0].qos_met());
+    }
+
+    #[test]
+    fn exhausted_attempts_end_in_failed_after_retry() {
+        let store = ConfigStore::new(ConfigSet::new(vec![entry(100.0, 1.0, 3)]));
+        let stores = StoreMap::single(Network::Vgg16, &store);
+        let queue = AdmissionQueue::new(8);
+        assert!(queue.offer(tr(0, 1e6)));
+        queue.close();
+        let mut rng = Pcg32::seeded(24);
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            stores: &stores,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
+            max_batch: 1,
+            clock: ServeClock::Virtual,
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
+            executor: FlakyToy { fails: 99, seen: 0 },
+            telemetry: None,
+            resilience: Resilience::new(RetryPolicy::budgeted(), None),
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 1);
+        assert!(matches!(
+            w.records[0].outcome,
+            ServeOutcome::FailedAfterRetry { attempts: 4 }
+        ));
+        assert_eq!(w.executor.seen, 4, "exactly max_attempts dispatches");
+    }
+
+    /// Succeeds only on edge-only configs; any cloud-offloading
+    /// dispatch fails with a link fault — "the WAN is down".
+    struct CloudDown;
+
+    impl Executor for CloudDown {
+        fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+            Toy { dispatches: 0 }.execute(request, config)
+        }
+
+        fn try_execute_batch(
+            &mut self,
+            requests: &[&Request],
+            config: &Config,
+        ) -> anyhow::Result<Vec<ExecOutcome>> {
+            if config.is_edge_only() {
+                Ok(self.execute_batch(requests, config))
+            } else {
+                Err(FaultError {
+                    kind: FaultKind::LinkDown,
+                    request_id: requests[0].id,
+                    attempt: 1,
+                }
+                .into())
+            }
+        }
+    }
+
+    fn mixed_set() -> ConfigSet {
+        ConfigSet::new(vec![
+            entry(50.0, 1.0, 3),  // cloud-offloading, energy-preferred
+            entry(80.0, 5.0, 22), // edge-only fallback
+        ])
+    }
+
+    #[test]
+    fn open_breaker_degrades_to_edge_only_and_probes() {
+        let store = ConfigStore::new(mixed_set());
+        let stores = StoreMap::single(Network::Vgg16, &store);
+        let breakers = BreakerMap::new(&[Network::Vgg16], 2, 2);
+        let queue = AdmissionQueue::new(8);
+        for i in 0..5 {
+            assert!(queue.offer(tr(i, 500.0)));
+        }
+        queue.close();
+        let mut rng = Pcg32::seeded(23);
+        let mut w = Worker {
+            id: 0,
+            queue: &queue,
+            stores: &stores,
+            policies: PolicySet::new(&PaperPolicy, &stores.networks()),
+            max_batch: 1,
+            clock: ServeClock::Virtual,
+            caches: CacheSet::new(&stores.networks(), true, &mut rng),
+            executor: CloudDown,
+            telemetry: None,
+            resilience: Resilience::new(RetryPolicy::none(), Some(&breakers)),
+            records: Vec::new(),
+        };
+        w.run();
+        assert_eq!(w.records.len(), 5);
+        // requests 0, 1: full-route link failures trip the breaker
+        assert!(matches!(w.records[0].outcome, ServeOutcome::ExecutorFailed));
+        assert!(matches!(w.records[1].outcome, ServeOutcome::ExecutorFailed));
+        // request 2: served from the degraded edge-only restriction,
+        // stamped with the registered (epoch, digest) of the parent
+        match &w.records[2].outcome {
+            ServeOutcome::Done { config, degraded, epoch, store_digest, .. } => {
+                assert!(*degraded, "breaker open: restriction in force");
+                assert!(config.is_edge_only());
+                assert_eq!(*epoch, 0);
+                assert_eq!(Some(*store_digest), store.digest_of(0));
+            }
+            other => panic!("expected degraded Done: {other:?}"),
+        }
+        // request 3: cooldown elapsed -> full-view probe -> link still
+        // down -> breaker re-opens
+        assert!(matches!(w.records[3].outcome, ServeOutcome::ExecutorFailed));
+        // request 4: back to degraded service
+        assert!(matches!(w.records[4].outcome, ServeOutcome::Done { degraded: true, .. }));
+        assert_eq!(breakers.state(Network::Vgg16), Some(BreakerState::Open));
+    }
+
+    #[test]
+    fn degraded_memo_invalidates_on_epoch_change() {
+        let store = ConfigStore::new(mixed_set());
+        let mut res = Resilience::new(RetryPolicy::none(), None);
+        let v0 = res.degraded_view(Network::Vgg16, &store.snapshot());
+        assert_eq!(v0.epoch(), 0);
+        assert_eq!(res.degraded_memo.len(), 1);
+        let v0_again = res.degraded_view(Network::Vgg16, &store.snapshot());
+        assert_eq!(v0_again.set().digest(), v0.set().digest(), "memo hit, no rebuild");
+        store.swap(ConfigSet::new(vec![entry(60.0, 1.0, 9), entry(70.0, 4.0, 22)]));
+        let v1 = res.degraded_view(Network::Vgg16, &store.snapshot());
+        assert_eq!(v1.epoch(), 1, "stale memo replaced after the swap");
+        assert_eq!(res.degraded_memo.len(), 1, "replaced in place, not appended");
+        assert!(v1.set().entries().iter().all(|e| e.config.is_edge_only()));
+    }
+
+    #[test]
+    fn degraded_service_follows_a_live_hot_swap() {
+        let store = ConfigStore::new(mixed_set());
+        let breakers = BreakerMap::new(&[Network::Vgg16], 2, 100);
+        let serve = |ids: std::ops::Range<usize>, store: &ConfigStore| -> Vec<ServeRecord> {
+            let stores = StoreMap::single(Network::Vgg16, store);
+            let queue = AdmissionQueue::new(8);
+            for i in ids {
+                assert!(queue.offer(tr(i, 500.0)));
+            }
+            queue.close();
+            let mut rng = Pcg32::seeded(29);
+            let mut w = Worker {
+                id: 0,
+                queue: &queue,
+                stores: &stores,
+                policies: PolicySet::new(&PaperPolicy, &stores.networks()),
+                max_batch: 1,
+                clock: ServeClock::Virtual,
+                caches: CacheSet::new(&stores.networks(), true, &mut rng),
+                executor: CloudDown,
+                telemetry: None,
+                resilience: Resilience::new(RetryPolicy::none(), Some(&breakers)),
+                records: Vec::new(),
+            };
+            w.run();
+            w.records
+        };
+        // two failures open the breaker; the third request is degraded
+        let first = serve(0..3, &store);
+        assert!(matches!(first[2].outcome, ServeOutcome::Done { degraded: true, epoch: 0, .. }));
+        // hot-swap while the breaker stays open: later degraded service
+        // must restrict the *new* epoch's set and stamp its identity
+        store.swap(ConfigSet::new(vec![entry(60.0, 1.0, 9), entry(70.0, 4.0, 22)]));
+        let second = serve(3..4, &store);
+        match &second[0].outcome {
+            ServeOutcome::Done { degraded: true, epoch, store_digest, config, .. } => {
+                assert_eq!(*epoch, 1);
+                assert_eq!(Some(*store_digest), store.digest_of(1));
+                assert!(config.is_edge_only());
+            }
+            other => panic!("expected degraded Done on epoch 1: {other:?}"),
+        }
     }
 }

@@ -8,13 +8,45 @@
 //! uses.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{Context, Result};
 
 use super::frame::Frame;
 use crate::serve::clock::WallDeadline;
+
+/// Structured transport failure classes.  Recovery logic (the serving
+/// retry loop and the per-link circuit breaker, DESIGN.md §15) must
+/// classify failures without string matching, so every error the
+/// endpoint produces carries one of these as its typed root — reachable
+/// through any context layers via `anyhow::Error::downcast_ref`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportError {
+    /// No complete frame arrived within the receive deadline.
+    Timeout { after: Duration },
+    /// The peer endpoint was dropped (stream closed, possibly
+    /// mid-frame).
+    Disconnected,
+    /// The byte stream held a frame that failed checksum/shape
+    /// validation.
+    CorruptFrame,
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Timeout { after } => {
+                write!(f, "transport recv timeout after {after:?}")
+            }
+            TransportError::Disconnected => write!(f, "transport peer disconnected"),
+            TransportError::CorruptFrame => write!(f, "transport frame corrupt"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// Link shaping parameters (None = loopback, no delay).
 #[derive(Debug, Clone, Copy)]
@@ -71,26 +103,37 @@ impl Endpoint {
             .unwrap_or(Duration::ZERO);
         let packet = Packet { deliver_at: WallDeadline::after(delay), bytes };
         if self.tx.send(packet).is_err() {
-            bail!("peer endpoint dropped");
+            return Err(anyhow::Error::new(TransportError::Disconnected))
+                .context("peer endpoint dropped");
         }
         Ok(delay)
     }
 
-    /// Blocking receive of the next frame, honoring shaped delivery times.
+    /// Blocking receive of the next frame, honoring shaped delivery
+    /// times.  Every failure carries a typed [`TransportError`] root so
+    /// retry/breaker logic classifies it without string matching.
     pub fn recv(&mut self, timeout: Duration) -> Result<Frame> {
         let deadline = WallDeadline::after(timeout);
         loop {
             // try to decode from the reassembly buffer first
             self.inbox.make_contiguous();
-            if let Some((frame, used)) = Frame::decode(self.inbox.as_slices().0)? {
+            let decoded = match Frame::decode(self.inbox.as_slices().0) {
+                Ok(d) => d,
+                Err(err) => {
+                    return Err(anyhow::Error::new(TransportError::CorruptFrame))
+                        .with_context(|| format!("{err:#}"));
+                }
+            };
+            if let Some((frame, used)) = decoded {
                 self.inbox.drain(..used);
                 return Ok(frame);
             }
             if self.closed {
-                bail!("stream closed mid-frame");
+                return Err(anyhow::Error::new(TransportError::Disconnected))
+                    .context("stream closed mid-frame");
             }
             let Some(remaining) = deadline.remaining() else {
-                bail!("transport recv timeout after {timeout:?}");
+                return Err(TransportError::Timeout { after: timeout }.into());
             };
             match self.rx.recv_timeout(remaining) {
                 Ok(packet) => {
@@ -99,7 +142,7 @@ impl Endpoint {
                     self.inbox.extend(packet.bytes);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    bail!("transport recv timeout after {timeout:?}")
+                    return Err(TransportError::Timeout { after: timeout }.into());
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     self.closed = true;
@@ -182,13 +225,43 @@ mod tests {
         let (_a, mut b) = duplex(None);
         let err = b.recv(Duration::from_millis(30)).unwrap_err();
         assert!(format!("{err}").contains("timeout"));
+        // structured kind, no string matching needed
+        assert_eq!(
+            err.downcast_ref::<TransportError>(),
+            Some(&TransportError::Timeout { after: Duration::from_millis(30) })
+        );
     }
 
     #[test]
     fn dropped_peer_detected() {
         let (a, mut b) = duplex(None);
         drop(a);
-        assert!(b.recv(Duration::from_millis(50)).is_err());
+        let err = b.recv(Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err.downcast_ref::<TransportError>(), Some(&TransportError::Disconnected));
+    }
+
+    #[test]
+    fn send_to_dropped_peer_is_a_disconnect() {
+        let (a, b) = duplex(None);
+        drop(b);
+        let err = a.send(&Frame::tensor(&[1.0])).unwrap_err();
+        assert_eq!(err.downcast_ref::<TransportError>(), Some(&TransportError::Disconnected));
+        assert!(format!("{err}").contains("peer endpoint dropped"));
+    }
+
+    #[test]
+    fn corrupt_stream_is_classified_not_stringly_typed() {
+        // the Endpoint API only sends valid frames, so splice the
+        // corruption in at the reassembly buffer: flip a byte so the
+        // frame checksum fails — the decode error must surface as a
+        // typed CorruptFrame, not a bare string
+        let (_a, mut b) = duplex(None);
+        let mut bytes = Frame::tensor(&[1.0, 2.0]).encode();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        b.inbox.extend(bytes);
+        let err = b.recv(Duration::from_millis(30)).unwrap_err();
+        assert_eq!(err.downcast_ref::<TransportError>(), Some(&TransportError::CorruptFrame));
     }
 
     #[test]

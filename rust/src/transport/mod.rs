@@ -31,6 +31,6 @@ pub mod cloud;
 pub mod frame;
 pub mod session;
 
-pub use channel::{duplex, Endpoint, LinkShaping};
+pub use channel::{duplex, Endpoint, LinkShaping, TransportError};
 pub use frame::{Frame, StreamMeta};
 pub use session::StreamSession;

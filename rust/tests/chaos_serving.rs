@@ -1,0 +1,252 @@
+//! Chaos-serving integration tests (DESIGN.md §15, PR 8 acceptance).
+//!
+//! Drives the full pipeline — admission queue, policy, coalescing,
+//! retries, circuit breaker, degraded store view — through a seeded
+//! [`FaultPlan`] and asserts the recovery contract end to end:
+//!
+//! 1. retry+breaker *strictly* beats no-recovery on QoS hit rate under
+//!    a cloud-link outage;
+//! 2. zero requests are lost: every admitted request ends in exactly
+//!    one terminal [`ServeOutcome`];
+//! 3. every request served while the breaker was open used an
+//!    edge-only config resolved from a registered `(epoch, digest)`
+//!    snapshot of the live store;
+//! 4. two identically-seeded runs produce bitwise-identical reports
+//!    (wall-clock duration aside), under the virtual *and* the
+//!    discrete-event clock.
+
+use dynasplit::adapt::{ConfigStore, StoreMap};
+use dynasplit::controller::{ConfigSet, ExecOutcome, Executor, PaperPolicy};
+use dynasplit::fault::{BreakerMap, FaultInjector, FaultPlan};
+use dynasplit::serve::{
+    run_pipeline_resilient, PipelineConfig, RetryPolicy, ServeOutcome, ServeReport,
+};
+use dynasplit::solver::ParetoEntry;
+use dynasplit::space::{Config, Network, TpuMode};
+use dynasplit::workload::{Request, TimedRequest};
+
+const NET: Network = Network::Vgg16;
+const REQUESTS: usize = 60;
+const QOS_MS: f64 = 200.0;
+
+/// Cloud-preferred front with an edge-only fallback.
+fn front() -> ConfigSet {
+    let entry = |split: usize, latency_ms: f64, energy_j: f64| ParetoEntry {
+        config: Config { net: NET, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split },
+        latency_ms,
+        energy_j,
+        accuracy: 0.95,
+    };
+    ConfigSet::new(vec![entry(3, 45.0, 1.5), entry(NET.num_layers(), 80.0, 5.0)])
+}
+
+/// Outcome is a pure function of `(request, config)`.
+struct SplitExec;
+
+impl Executor for SplitExec {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        let edge_only = config.split >= NET.num_layers();
+        ExecOutcome {
+            latency_ms: if edge_only { 80.0 } else { 45.0 } + (request.seed % 7) as f64,
+            energy_j: if edge_only { 5.0 } else { 1.5 },
+            edge_energy_j: if edge_only { 5.0 } else { 0.5 },
+            cloud_energy_j: if edge_only { 0.0 } else { 1.0 },
+            accuracy: 0.95,
+        }
+    }
+}
+
+fn timeline() -> Vec<TimedRequest> {
+    (0..REQUESTS)
+        .map(|i| TimedRequest {
+            request: Request { id: i, net: NET, qos_ms: QOS_MS, inferences: 1, seed: i as u64 },
+            // 100 ms gaps keep the discrete-clock runs queue-wait-free,
+            // so both clocks measure fault impact alone
+            arrival_ms: i as f64 * 100.0,
+        })
+        .collect()
+}
+
+/// The outage: requests 20..40 hit a down cloud link (nominal id-time,
+/// `id_ms = 1`), persisting across every retry attempt.
+fn outage_plan(seed: u64) -> FaultPlan {
+    FaultPlan { seed, id_ms: 1.0, link_down: vec![(20.0, 40.0)], ..FaultPlan::none() }
+}
+
+struct Run {
+    report: ServeReport,
+    /// Registered `(epoch, digest)` installations of the live store.
+    registry: Vec<(u64, u64)>,
+}
+
+fn run(plan: &FaultPlan, retry: RetryPolicy, with_breaker: bool, discrete: bool) -> Run {
+    let set = front();
+    let store = ConfigStore::new(set);
+    let stores = StoreMap::single(NET, &store);
+    let tl = timeline();
+    let cfg = PipelineConfig {
+        workers: 1,
+        queue_capacity: REQUESTS,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 7,
+        reuse: true,
+        shards: 1,
+        discrete,
+    };
+    let breakers = with_breaker.then(|| BreakerMap::new(&[NET], 3, 8));
+    let report = run_pipeline_resilient(
+        &stores,
+        &PaperPolicy,
+        &tl,
+        &cfg,
+        None,
+        None,
+        retry,
+        breakers.as_ref(),
+        |_| Ok(FaultInjector::new(SplitExec, plan.clone())),
+    )
+    .expect("chaos pipeline run");
+    Run { report, registry: store.epochs() }
+}
+
+/// Everything a report contains except the wall-clock-dependent fields
+/// (`wall_ms`, and the queue's peak depth, which depends on how far the
+/// feeder ran ahead of the worker) — the bitwise-determinism witness.
+fn fingerprint(r: &ServeReport) -> String {
+    format!(
+        "{:?}|{:?}|{}/{}/{}|{}|{}|{}|{}|{}|{}",
+        r.records,
+        r.cache,
+        r.queue.admitted,
+        r.queue.rejected,
+        r.queue.expired,
+        r.workers,
+        r.shards,
+        r.completed(),
+        r.retried(),
+        r.degraded_served(),
+        r.qos_hit_rate().to_bits(),
+    )
+}
+
+#[test]
+fn retry_plus_breaker_strictly_beats_no_recovery_under_a_link_outage() {
+    let plan = outage_plan(3);
+    for discrete in [false, true] {
+        let none = run(&plan, RetryPolicy::none(), false, discrete);
+        let recovered = run(&plan, RetryPolicy::budgeted(), true, discrete);
+        assert!(
+            recovered.report.qos_hit_rate() > none.report.qos_hit_rate(),
+            "discrete={discrete}: recovery must strictly improve QoS: {} vs {}",
+            recovered.report.qos_hit_rate(),
+            none.report.qos_hit_rate()
+        );
+        // the outage window sheds exactly its span without recovery
+        assert_eq!(none.report.executor_failed(), 20, "discrete={discrete}");
+        // the breaker converts most of the window into degraded service
+        assert!(
+            recovered.report.degraded_served() >= 10,
+            "discrete={discrete}: open breaker serves the window edge-only: {}",
+            recovered.report.degraded_served()
+        );
+    }
+}
+
+#[test]
+fn no_request_is_lost_every_id_gets_exactly_one_terminal_outcome() {
+    let plan = outage_plan(3);
+    for (retry, breaker) in [
+        (RetryPolicy::none(), false),
+        (RetryPolicy::budgeted(), false),
+        (RetryPolicy::budgeted(), true),
+    ] {
+        let r = run(&plan, retry, breaker, false);
+        assert_eq!(r.report.records.len(), REQUESTS, "one record per request");
+        for (i, rec) in r.report.records.iter().enumerate() {
+            assert_eq!(rec.request_id, i, "sorted, gapless, duplicate-free");
+        }
+        // conservation across every outcome class
+        assert_eq!(
+            r.report.completed()
+                + r.report.rejected_queue_full()
+                + r.report.shed_by_admission()
+                + r.report.expired_in_queue()
+                + r.report.rejected_by_policy()
+                + r.report.unknown_network()
+                + r.report.executor_failed()
+                + r.report.retry_failed(),
+            REQUESTS
+        );
+    }
+}
+
+#[test]
+fn degraded_service_is_edge_only_and_from_a_registered_snapshot() {
+    let run = run(&outage_plan(3), RetryPolicy::budgeted(), true, false);
+    let mut degraded = 0;
+    for rec in &run.report.records {
+        if let Some(c) = rec.outcome.completion() {
+            assert!(
+                run.registry.contains(&(c.epoch, c.store_digest)),
+                "request {} stamped an unregistered (epoch, digest)",
+                rec.request_id
+            );
+            if c.degraded {
+                degraded += 1;
+                assert!(
+                    c.config.is_edge_only(),
+                    "request {} was served degraded on a cloud config {:?}",
+                    rec.request_id,
+                    c.config
+                );
+            }
+        }
+    }
+    assert!(degraded > 0, "the outage must produce degraded service");
+    assert_eq!(degraded, run.report.degraded_served(), "counter reconciles with records");
+}
+
+#[test]
+fn identically_seeded_runs_are_bitwise_identical() {
+    // transient faults layered on the outage exercise the retry RNG too
+    let mut plan = outage_plan(5);
+    plan.loss_p = 0.25;
+    for discrete in [false, true] {
+        let a = run(&plan, RetryPolicy::budgeted(), true, discrete);
+        let b = run(&plan, RetryPolicy::budgeted(), true, discrete);
+        assert!(a.report.retried() > 0, "discrete={discrete}: transients must retry");
+        assert_eq!(
+            fingerprint(&a.report),
+            fingerprint(&b.report),
+            "discrete={discrete}: identically-seeded chaos runs must replay bitwise"
+        );
+    }
+}
+
+#[test]
+fn retries_alone_absorb_transient_loss_but_not_the_outage_window() {
+    let mut plan = outage_plan(9);
+    plan.loss_p = 0.3;
+    let none = run(&plan, RetryPolicy::none(), false, false);
+    let retry = run(&plan, RetryPolicy::budgeted(), false, false);
+    // retries recover the coin-flip losses...
+    assert!(
+        retry.report.qos_hit_rate() > none.report.qos_hit_rate(),
+        "{} vs {}",
+        retry.report.qos_hit_rate(),
+        none.report.qos_hit_rate()
+    );
+    assert!(retry.report.retried() > 0);
+    // ...but the persistent window defeats them: all 20 window requests
+    // still fail, now as FailedAfterRetry with the attempt count
+    let window_failures = retry
+        .report
+        .records
+        .iter()
+        .filter(|r| (20..40).contains(&r.request_id))
+        .filter(|r| matches!(r.outcome, ServeOutcome::FailedAfterRetry { attempts } if attempts > 1))
+        .count();
+    assert_eq!(window_failures, 20, "persistent link windows defeat pure retries");
+    assert_eq!(retry.report.degraded_served(), 0, "no breaker, no degradation");
+}

@@ -1,6 +1,8 @@
-//! Fuzz-lite corpus tests for the two parsers that consume bytes from
-//! outside the process: the wire-frame decoder (`transport::frame`) and
-//! the CLI mix parser (`workload::mix`).
+//! Fuzz-lite corpus tests for the parsers that consume bytes from
+//! outside the process: the wire-frame decoder (`transport::frame`),
+//! the CLI mix parser (`workload::mix`), and the artifact-manifest
+//! loader (`model::manifest` — build-time Python writes it, run-time
+//! rust trusts it).
 //!
 //! This is not coverage-guided fuzzing — the container has no fuzzer and
 //! the repo takes no dependencies — but the same *contract* enforced
@@ -352,6 +354,133 @@ fn network_mix_parse_rejects_pathological_numbers() {
     // but extreme-yet-finite weights normalize fine
     let mix = NetworkMix::parse("vgg16=1e300,vit=1e297").expect("finite weights parse");
     assert!((mix.share(Network::Vgg16) - 1.0 / 1.001).abs() < 1e-6);
+}
+
+// ---------------------------------------------------------------------------
+// Manifest::load
+// ---------------------------------------------------------------------------
+
+use dynasplit::model::Manifest;
+
+/// A miniature but schema-complete manifest: version 1, both networks
+/// at their Table-1 layer counts, chained shapes, an int8 prefix table
+/// for vgg16 — everything `Manifest::load` validates.
+fn manifest_seed() -> String {
+    let layer = |i: usize, net: &str, int8: bool| {
+        let int8_field = if int8 {
+            format!(r#","int8":"{net}/int8/layer_{i:02}.hlo.txt""#)
+        } else {
+            String::new()
+        };
+        format!(
+            r#"{{"index":{i},"name":"l{i}","kind":"conv","in_shape":[4],"out_shape":[4],"out_bytes":16,"macs":100,"quantizable":{int8}{int8_field},"fp32":"{net}/fp32/layer_{i:02}.hlo.txt"}}"#
+        )
+    };
+    let vgg_layers: Vec<String> = (0..22).map(|i| layer(i, "vgg16", true)).collect();
+    let vit_layers: Vec<String> = (0..19).map(|i| layer(i, "vit", false)).collect();
+    let prefix: Vec<String> = (0..=22).map(|_| "0.9".to_string()).collect();
+    format!(
+        r#"{{"version":1,"batch":16,"img":32,"classes":10,"eval":{{"images":"eval_images.bin","labels":"eval_labels.bin","count":4}},"networks":{{"vgg16":{{"num_layers":22,"layers":[{}],"expected_accuracy":{{"fp32":0.95,"int8_prefix":[{}]}}}},"vit":{{"num_layers":19,"layers":[{}],"expected_accuracy":{{"fp32":0.93}}}}}}}}"#,
+        vgg_layers.join(","),
+        prefix.join(","),
+        vit_layers.join(",")
+    )
+}
+
+/// Fresh scratch dir for one fuzz target (rewritten every round).
+fn manifest_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("dynasplit_fuzz_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("scratch dir");
+    d
+}
+
+/// The load contract on an arbitrary manifest file: clean `Err` or a
+/// manifest that honors every invariant `validate` promises — never a
+/// panic, never a half-parsed value.
+fn check_manifest_load(dir: &std::path::Path, bytes: &[u8], seed_note: &str) {
+    std::fs::write(dir.join("manifest.json"), bytes).expect("write mutant");
+    if let Ok(m) = Manifest::load(dir) {
+        assert_eq!(m.vgg16.layers.len(), 22, "{seed_note}: accepted a short vgg16");
+        assert_eq!(m.vit.layers.len(), 19, "{seed_note}: accepted a short vit");
+        for net in [&m.vgg16, &m.vit] {
+            assert_eq!(net.layers.len(), net.num_layers, "{seed_note}");
+            for (i, l) in net.layers.iter().enumerate() {
+                assert_eq!(l.index, i, "{seed_note}: unsorted layer indices");
+            }
+            if let Some(p) = &net.expected_accuracy.int8_prefix {
+                assert_eq!(p.len(), net.num_layers + 1, "{seed_note}: ragged prefix table");
+            }
+        }
+    }
+}
+
+#[test]
+fn manifest_load_survives_structured_mutation() {
+    let dir = manifest_dir("mutation");
+    let clean = manifest_seed().into_bytes();
+    // the unmutated seed must load
+    check_manifest_load(&dir, &clean, "seed");
+    std::fs::write(dir.join("manifest.json"), &clean).unwrap();
+    assert!(Manifest::load(&dir).is_ok(), "corpus seed must be valid");
+    let mut rng = Pcg32::new(0xf0a2_2026, 7);
+    for round in 0..ROUNDS {
+        let mut buf = clean.clone();
+        for _ in 0..rng.range_i64(1, 3) {
+            mutate(&mut buf, &mut rng);
+        }
+        check_manifest_load(&dir, &buf, &format!("mutation round {round}"));
+    }
+}
+
+#[test]
+fn manifest_load_survives_field_targeted_corruption() {
+    // Token-level attacks on the fields the loader trusts most: counts,
+    // indices, version, and the numbers feeding `as_usize` — the values
+    // a buggy or adversarial `aot.py` could actually emit.
+    let dir = manifest_dir("targeted");
+    let clean = manifest_seed();
+    let needles = [
+        "\"version\":1",
+        "\"num_layers\":22",
+        "\"num_layers\":19",
+        "\"index\":0",
+        "\"count\":4",
+        "\"batch\":16",
+        "\"out_bytes\":16",
+        "\"fp32\":0.95",
+    ];
+    let poisons = [
+        "-1", "0", "1e400", "18446744073709551616", "null", "\"NaN\"", "[1,2]", "1.5",
+        "9999999999",
+    ];
+    let mut rng = Pcg32::new(0xf0a2_2026, 8);
+    for round in 0..ROUNDS {
+        let needle = *rng.choose(&needles);
+        let poison = *rng.choose(&poisons);
+        let (key, _) = needle.split_once(':').unwrap();
+        let mutant = match rng.below(3) {
+            // replace the field's value with a poisoned literal
+            0 => clean.replacen(needle, &format!("{key}:{poison}"), 1),
+            // delete the field entirely (dangling comma and all)
+            1 => clean.replacen(needle, "", 1),
+            // duplicate the key with a conflicting value appended
+            _ => clean.replacen(needle, &format!("{needle},{key}:{poison}"), 1),
+        };
+        check_manifest_load(&dir, mutant.as_bytes(), &format!("targeted round {round}"));
+    }
+    // and a few deterministic classics
+    for text in [
+        "",
+        "{}",
+        "null",
+        "[1,2,3]",
+        "{\"version\":1}",
+        &clean.replace("\"vit\"", "\"vgg16\""),
+        &clean[..clean.len() / 2],
+    ] {
+        check_manifest_load(&dir, text.as_bytes(), "classic");
+    }
 }
 
 #[test]

@@ -22,7 +22,8 @@ use dynasplit::model::manifest::LayerEntry;
 use dynasplit::runtime::{NetworkRuntime, ReferenceBackend};
 use dynasplit::serve::{
     run_pipeline, run_pipeline_stores, AdmissionQueue, BatchLog, BatchRuntimeExecutor,
-    CacheSet, PipelineConfig, ReuseCache, ServeClock, ServeOutcome, ServeRecord, Worker,
+    CacheSet, PipelineConfig, Resilience, ReuseCache, ServeClock, ServeOutcome, ServeRecord,
+    Worker,
 };
 use dynasplit::simulator::Testbed;
 use dynasplit::solver::{ParetoEntry, Solver, Strategy};
@@ -261,6 +262,7 @@ fn coalesced_batches_run_one_flat_head_call_with_identical_outputs() {
             caches: CacheSet::single(Network::Vgg16, ReuseCache::new(Pcg32::seeded(3))),
             executor: BatchRuntimeExecutor::new(serve_runtime(&layers), log.clone()),
             telemetry: None,
+            resilience: Resilience::none(),
             records: Vec::new(),
         };
         worker.run();
@@ -721,6 +723,7 @@ fn mixed_batches_are_always_network_homogeneous() {
             batches: spy_batches.clone(),
         },
         telemetry: None,
+        resilience: Resilience::none(),
         records: Vec::new(),
     };
     worker.run();

@@ -4,7 +4,9 @@
 //! access**, so this path dependency re-implements exactly the surface
 //! the DynaSplit crate uses — nothing more:
 //!
-//! * [`Error`]: an opaque, `Send + Sync` error with a context *chain*;
+//! * [`Error`]: an opaque, `Send + Sync` error with a context *chain*
+//!   and a typed root payload reachable via [`Error::downcast_ref`]
+//!   (the fault/breaker classification seam relies on it);
 //! * [`Result<T>`]: alias with `Error` as the default error type;
 //! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
 //!   `Option`;
@@ -25,17 +27,34 @@ use std::fmt::{self, Debug, Display};
 /// `Result<T, anyhow::Error>` with the error type defaulted.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// Opaque error: a chain of context messages, outermost first.
+/// Opaque error: a chain of context messages, outermost first, plus the
+/// typed root error (when one was wrapped) for classification.
 pub struct Error {
     /// `chain[0]` is the most recently attached context; the tail holds
     /// every wrapped cause down to the root.
     chain: Vec<String>,
+    /// The concrete root error, kept for [`Error::downcast_ref`].
+    /// `None` for ad-hoc message errors ([`anyhow!`] / [`bail!`]).
+    root: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Create an ad-hoc error from any displayable message.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], root: None }
+    }
+
+    /// Wrap a concrete `std` error, keeping its type reachable via
+    /// [`Error::downcast_ref`] (anyhow's `Error::new`).
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Error {
+        Error::from(err)
+    }
+
+    /// The typed root error, if the chain was built from one and it is
+    /// an `E` — context layers do not hide it (matches anyhow's
+    /// root-cause downcast, the surface the fault classifier uses).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.root.as_ref()?.downcast_ref::<E>()
     }
 
     /// Attach another layer of context (used by [`Context`]).
@@ -52,15 +71,15 @@ impl Error {
 
 impl<E: StdError + Send + Sync + 'static> From<E> for Error {
     fn from(err: E) -> Error {
-        // Capture the full source chain eagerly; the repo only formats
-        // errors (no downcasting), so owned strings are sufficient.
+        // Capture the full source chain as strings for formatting, then
+        // keep the concrete root for downcast-based classification.
         let mut chain = vec![err.to_string()];
         let mut source = err.source();
         while let Some(s) = source {
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, root: Some(Box::new(err)) }
     }
 }
 
@@ -246,6 +265,16 @@ mod tests {
         assert!(format!("{:#}", f(-1).unwrap_err()).contains("Condition failed"));
         assert!(format!("{:#}", f(12).unwrap_err()).contains("too big: 12"));
         assert!(format!("{:#}", f(5).unwrap_err()).contains("five"));
+    }
+
+    #[test]
+    fn downcast_ref_reaches_the_typed_root_through_context() {
+        let e: Error = Err::<(), _>(io_error()).context("reading manifest").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("root type preserved");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none(), "wrong type");
+        // ad-hoc message errors have no typed root
+        assert!(anyhow!("plain message").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]

@@ -62,6 +62,12 @@ pub const RULES: &[(&str, &str)] = &[
          time (reruns must replay bit-identically)",
     ),
     (
+        "bounded-retry",
+        "loops that re-dispatch (try_execute_batch/recv/recv_timeout) must \
+         reference a deadline/budget/attempt symbol — unbounded retry loops \
+         spin forever when the fault is persistent",
+    ),
+    (
         "malformed-allow",
         "dslint::allow(...) escapes must name a known rule and give a reason",
     ),
@@ -835,6 +841,103 @@ fn rule_bench_determinism(ctx: &mut Ctx<'_>) {
     }
 }
 
+/// Calls whose presence makes a loop a *retry loop*: they re-dispatch
+/// work that already failed (executor batches) or block on a peer that
+/// may never answer (transport receives).
+const RETRY_CALLS: &[&str] = &["try_execute_batch", "recv", "recv_timeout"];
+
+/// Identifiers that witness a bound on the loop: a deadline or budget
+/// being consumed, an attempt counter being compared, or an expiry
+/// check.  Token-exact matches — `recv_timeout` the *call* does not
+/// satisfy the rule, but a `timeout` variable fed to it does.
+const BUDGET_IDENTS: &[&str] = &[
+    "deadline",
+    "budget",
+    "remaining",
+    "remaining_ms",
+    "timeout",
+    "attempt",
+    "attempts",
+    "max_attempts",
+    "tries",
+    "max_tries",
+    "expired",
+];
+
+fn rule_bounded_retry(ctx: &mut Ctx<'_>) {
+    let toks_len = ctx.toks.len();
+    let mut i = 0;
+    while i < toks_len {
+        let is_loop = ctx.is_ident(i, "loop");
+        let is_headed = ctx.is_ident(i, "while") || ctx.is_ident(i, "for");
+        if !(is_loop || is_headed) {
+            i += 1;
+            continue;
+        }
+        let kw_pos = ctx.toks[i].start;
+        if ctx.is_test_code(kw_pos) {
+            i += 1;
+            continue;
+        }
+        // Find the body `{`.  For `while`/`for`, scan past the header,
+        // skipping parenthesized groups so closure bodies inside call
+        // arguments (`while xs.any(|x| { .. })`) don't open the loop
+        // early.  A `;` before any `{` means this wasn't a loop header.
+        let mut j = i + 1;
+        let mut open = None;
+        while j < toks_len {
+            match ctx.toks[j].punct {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b'(' => j = ctx.match_paren(j) + 1,
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let Some(open) = open else {
+            i += 1;
+            continue;
+        };
+        let close = ctx.match_brace(open);
+        // A retry loop is one whose span (header + body) method-calls a
+        // re-dispatch primitive.  The `.` requirement keeps `fn recv(`
+        // definitions from matching.
+        let mut retry_at = None;
+        for k in i..close {
+            if ctx.is_punct(k, b'.')
+                && RETRY_CALLS.iter().any(|c| ctx.ident(k + 1) == c.as_bytes())
+                && ctx.is_punct(k + 2, b'(')
+            {
+                retry_at = Some((ctx.toks[k].start, k + 1));
+                break;
+            }
+        }
+        let Some((pos, callee_idx)) = retry_at else {
+            i += 1;
+            continue;
+        };
+        let bounded = (i..close).any(|k| {
+            ctx.toks[k].punct == 0
+                && BUDGET_IDENTS.iter().any(|b| ctx.ident(k) == b.as_bytes())
+        });
+        if !bounded {
+            let callee = String::from_utf8_lossy(ctx.ident(callee_idx)).into_owned();
+            ctx.emit(
+                pos,
+                "bounded-retry",
+                format!(
+                    "`.{callee}(..)` inside a loop with no deadline/budget/attempt bound; \
+                     a persistent fault spins this forever — charge a deadline, check \
+                     remaining budget, or cap attempts (DESIGN.md §15)"
+                ),
+            );
+        }
+        i += 1;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Entry points.
 // ---------------------------------------------------------------------------
@@ -876,6 +979,7 @@ pub fn scan_source(rel: &str, text: &str) -> Vec<Diagnostic> {
     rule_guard_across_blocking(&mut ctx);
     rule_no_thread_spawn(&mut ctx);
     rule_bench_determinism(&mut ctx);
+    rule_bounded_retry(&mut ctx);
 
     for &pos in &stripped.malformed {
         let (line, col) = line_col(text.as_bytes(), pos);
@@ -1019,6 +1123,72 @@ fn pump(q: &Queue) {
             message: "msg".into(),
         };
         assert_eq!(d.to_string(), "rust/src/a.rs:3:9: clock-discipline: msg");
+    }
+
+    #[test]
+    fn unbounded_recv_loop_is_flagged() {
+        let src = "\
+fn pump(rx: &Receiver<Frame>) {
+    loop {
+        let f = rx.recv();
+        handle(f);
+    }
+}\n";
+        assert_eq!(rules_of("rust/src/transport/pump.rs", src), vec!["bounded-retry"]);
+    }
+
+    #[test]
+    fn deadline_budgeted_retry_loop_is_sanctioned() {
+        let src = "\
+fn dispatch(ex: &mut E) {
+    let mut attempt = 0;
+    loop {
+        attempt += 1;
+        match ex.try_execute_batch(&reqs, &cfg) {
+            Ok(out) => break,
+            Err(_) if attempt >= max_attempts => break,
+            Err(_) => continue,
+        }
+    }
+}\n";
+        assert!(rules_of("rust/src/serve/dispatch.rs", src).is_empty());
+    }
+
+    #[test]
+    fn while_header_recv_counts_and_timeout_var_bounds_it() {
+        let flagged = "fn f(rx: &R) { while let Ok(x) = rx.recv() { eat(x); } }";
+        assert_eq!(rules_of("rust/src/transport/x.rs", flagged), vec!["bounded-retry"]);
+        let bounded = "fn f(rx: &R) { while let Ok(x) = rx.recv_timeout(timeout) { eat(x); } }";
+        assert!(rules_of("rust/src/transport/x.rs", bounded).is_empty());
+    }
+
+    #[test]
+    fn loops_without_retry_calls_and_test_loops_are_exempt() {
+        let plain = "fn f(xs: &[u32]) { for x in xs { push(x); } }";
+        assert!(rules_of("rust/src/serve/x.rs", plain).is_empty());
+        let test_loop = "\
+#[cfg(test)]
+mod tests {
+    fn t(rx: &R) {
+        loop {
+            rx.recv().unwrap();
+        }
+    }
+}\n";
+        assert!(rules_of("rust/src/transport/x.rs", test_loop).is_empty());
+    }
+
+    #[test]
+    fn closure_braces_in_a_while_header_do_not_open_the_loop_body() {
+        // the `{` inside `.any(|f| { .. })` must not be taken as the loop
+        // body — the real body's recv is still in the loop span
+        let src = "\
+fn f(rx: &R, fs: &[F]) {
+    while fs.iter().any(|f| { f.live() }) {
+        rx.recv();
+    }
+}\n";
+        assert_eq!(rules_of("rust/src/transport/y.rs", src), vec!["bounded-retry"]);
     }
 
     #[test]

@@ -1,0 +1,24 @@
+// dslint-fixture: rust/src/transport/relay.rs expect=2
+//
+// Two unbounded retry loops: a bare `loop` that re-dispatches a failed
+// batch forever, and a `while let` that drains a channel with no
+// deadline.  Both spin forever under a persistent fault — the exact
+// failure mode DESIGN.md §15's taxonomy calls LinkDown.
+
+fn redispatch(ex: &mut dyn Executor, reqs: &[&Request], cfg: &Config) -> Vec<ExecOutcome> {
+    loop {
+        match ex.try_execute_batch(reqs, cfg) {
+            Ok(outs) => return outs,
+            Err(_) => continue, // no attempt cap, no budget charge
+        }
+    }
+}
+
+fn drain(rx: &Receiver<Frame>) -> usize {
+    let mut n = 0;
+    while let Ok(frame) = rx.recv() {
+        consume(frame);
+        n += 1;
+    }
+    n
+}

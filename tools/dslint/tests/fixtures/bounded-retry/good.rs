@@ -1,0 +1,40 @@
+// dslint-fixture: rust/src/transport/relay.rs expect=0
+//
+// The sanctioned shapes: an attempt-capped retry loop that charges a
+// backoff penalty against the remaining QoS budget, a receive loop
+// driven by a deadline, and a loop with no re-dispatch call at all.
+
+fn redispatch(ex: &mut dyn Executor, reqs: &[&Request], cfg: &Config) -> Option<Vec<ExecOutcome>> {
+    let max_attempts = 4;
+    let mut attempt = 0;
+    loop {
+        attempt += 1;
+        match ex.try_execute_batch(reqs, cfg) {
+            Ok(outs) => return Some(outs),
+            Err(_) if attempt >= max_attempts => return None,
+            Err(_) => continue,
+        }
+    }
+}
+
+fn drain(rx: &Receiver<Frame>, deadline: WallDeadline) -> usize {
+    let mut n = 0;
+    while let Some(remaining) = deadline.remaining() {
+        match rx.recv_timeout(remaining) {
+            Ok(frame) => {
+                consume(frame);
+                n += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    n
+}
+
+fn no_dispatch(xs: &[u32]) -> u32 {
+    let mut sum = 0;
+    for x in xs {
+        sum += x; // loops without re-dispatch calls are out of scope
+    }
+    sum
+}
