@@ -363,6 +363,110 @@ fn main() {
         });
     }
 
+    // --- flight recorder (DESIGN.md §16) ---
+    // One full pipeline run per iteration, recorder off vs live: the
+    // observability tax on the serving hot path.  The off arm is the
+    // unwired pipeline bit-for-bit (static-dispatch no-op); the on arm
+    // must stay within the <5% acceptance budget, enforced in CI via
+    // DYNASPLIT_BENCH_ENFORCE_OBS=<max on/off ratio>.
+    {
+        use dynasplit::adapt::StoreMap;
+        use dynasplit::controller::{ExecOutcome, PaperPolicy};
+        use dynasplit::obs::Recorder;
+        use dynasplit::serve::{run_pipeline_resilient, PipelineConfig, RetryPolicy};
+        use dynasplit::workload::TimedRequest;
+
+        struct FixedExec;
+        impl Executor for FixedExec {
+            fn execute(&mut self, request: &Request, _config: &Config) -> ExecOutcome {
+                ExecOutcome {
+                    latency_ms: 40.0 + (request.seed % 5) as f64,
+                    energy_j: 1.5,
+                    edge_energy_j: 0.5,
+                    cloud_energy_j: 1.0,
+                    accuracy: 0.95,
+                }
+            }
+        }
+
+        let cfg_of = |split: usize| Config {
+            net: Network::Vgg16,
+            cpu_idx: 6,
+            tpu: TpuMode::Off,
+            gpu: true,
+            split,
+        };
+        let store = ConfigStore::new(ConfigSet::new(vec![
+            ParetoEntry { config: cfg_of(3), latency_ms: 45.0, energy_j: 1.5, accuracy: 0.95 },
+            ParetoEntry { config: cfg_of(22), latency_ms: 80.0, energy_j: 5.0, accuracy: 0.95 },
+        ]));
+        let tl: Vec<TimedRequest> = (0..256)
+            .map(|i| TimedRequest {
+                request: Request {
+                    id: i,
+                    net: Network::Vgg16,
+                    qos_ms: 500.0,
+                    inferences: 1,
+                    seed: i as u64,
+                },
+                arrival_ms: i as f64,
+            })
+            .collect();
+        let cfg = PipelineConfig {
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 4,
+            time_scale: 0.0,
+            seed: 7,
+            reuse: true,
+            shards: 1,
+            discrete: false,
+        };
+        let run = |recorder: &Recorder| {
+            let stores = StoreMap::broadcast(&store);
+            run_pipeline_resilient(
+                &stores,
+                &PaperPolicy,
+                &tl,
+                &cfg,
+                None,
+                None,
+                RetryPolicy::none(),
+                None,
+                recorder,
+                |_| Ok(FixedExec),
+            )
+            .expect("obs bench run")
+            .completed()
+        };
+        b.bench("runtime_obs_pipeline_off", || run(&dynasplit::obs::OFF));
+        b.bench("runtime_obs_pipeline_on", || {
+            let recorder = Recorder::flight(cfg.workers, cfg.shards, 1 << 12);
+            let done = run(&recorder);
+            done + recorder.take().map_or(0, |t| t.len())
+        });
+        let ratio = b.speedup("runtime_obs_pipeline_on", "runtime_obs_pipeline_off");
+        if let Some(r) = ratio {
+            println!(
+                "    >> flight-recorder on/off overhead: {:+.1}% (target < 5%)",
+                (r - 1.0) * 100.0
+            );
+        }
+        if let Ok(ceiling) = std::env::var("DYNASPLIT_BENCH_ENFORCE_OBS") {
+            let ceiling: f64 =
+                ceiling.parse().expect("DYNASPLIT_BENCH_ENFORCE_OBS must be a number");
+            let r = ratio.expect(
+                "DYNASPLIT_BENCH_ENFORCE_OBS needs both runtime_obs_pipeline_* cases \
+                 (check the filter)",
+            );
+            assert!(
+                r <= ceiling,
+                "recorder on/off ratio {r:.3} above enforced ceiling {ceiling}"
+            );
+            println!("    >> enforced: {r:.3} <= {ceiling}");
+        }
+    }
+
     // --- NSGA machinery ---
     let objs: Vec<[f64; 3]> = (0..200)
         .map(|_| [rng.f64() * 1000.0, rng.f64() * 100.0, -rng.f64()])

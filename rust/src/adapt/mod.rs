@@ -48,6 +48,7 @@ use anyhow::Result;
 
 use crate::controller::policy::{ConfigSet, SchedulingPolicy};
 use crate::controller::Executor;
+use crate::obs::{EventKind, Recorder};
 use crate::serve::{self, PipelineConfig, ServeReport};
 use crate::simulator::Testbed;
 use crate::solver::{Observation, ObservationPool};
@@ -134,6 +135,11 @@ pub struct AdaptiveLoop<'a> {
     pending: Vec<Sample>,
     /// Recent current-epoch samples for calibration + measured pool.
     recent: VecDeque<Sample>,
+    /// Flight-recorder handle for control-plane events (drift
+    /// detections, re-solves, swap installs — DESIGN.md §16).  The
+    /// adaptation thread has no experiment-clock handle, so its events
+    /// carry no timestamp; their control-lane order is the record.
+    recorder: &'a Recorder,
     pub stats: AdaptStats,
 }
 
@@ -154,9 +160,19 @@ impl<'a> AdaptiveLoop<'a> {
             detector: DriftDetector::new(cfg.drift),
             pending: Vec::new(),
             recent: VecDeque::with_capacity(cfg.history),
+            recorder: &crate::obs::OFF,
             stats: AdaptStats::default(),
             cfg,
         }
+    }
+
+    /// Wire a flight recorder: control-plane events (drift, re-solve,
+    /// swap install) land on its control lane.  The default is
+    /// [`crate::obs::OFF`], which keeps every step bitwise-identical to
+    /// an unwired loop.
+    pub fn with_recorder(mut self, recorder: &'a Recorder) -> AdaptiveLoop<'a> {
+        self.recorder = recorder;
+        self
     }
 
     /// Gate wired to this loop's EWMA, sized for `workers`.
@@ -200,6 +216,8 @@ impl<'a> AdaptiveLoop<'a> {
             self.stats.windows += 1;
             if let Some(report) = self.detector.observe(&window) {
                 self.stats.drift_events += 1;
+                self.recorder
+                    .emit_control(None, EventKind::DriftDetected { windows: self.stats.windows });
                 if self.stats.swaps < self.cfg.max_swaps && self.resolve_and_swap(&report) {
                     swapped = true;
                     break; // remaining pending samples were cleared
@@ -226,6 +244,7 @@ impl<'a> AdaptiveLoop<'a> {
             );
         }
         let snapshot = self.store.snapshot();
+        self.recorder.emit_control(None, EventKind::ReSolve { epoch: snapshot.epoch() });
         let fresh = resolve(
             self.testbed,
             self.net,
@@ -240,6 +259,9 @@ impl<'a> AdaptiveLoop<'a> {
         }
         self.store.swap(ConfigSet::new(fresh));
         self.stats.swaps += 1;
+        if let Some(&(epoch, digest)) = self.store.epochs().last() {
+            self.recorder.emit_control(None, EventKind::SwapInstalled { epoch, digest });
+        }
         // the new epoch invalidates everything measured under the old
         // predictions: restart streaks and windows cleanly
         self.detector.reset();
@@ -278,6 +300,10 @@ where
 {
     let store = control.store;
     let telemetry = control.telemetry;
+    // the recorder rides both planes: the serving pipeline stamps
+    // data-plane events while the control thread (which keeps `control`)
+    // lands drift/re-solve/swap events on the control lane
+    let recorder = control.recorder;
     let poll = Duration::from_millis(control.cfg.poll_ms.max(1));
     let gate = (pipeline.time_scale > 0.0).then(|| control.gate(pipeline.workers));
     let stop = AtomicBool::new(false);
@@ -291,13 +317,17 @@ where
             control.step(); // final drain so stats cover the whole run
             control.stats
         });
-        let result = serve::run_pipeline_on(
-            store,
+        let stores = StoreMap::broadcast(store);
+        let result = serve::run_pipeline_resilient(
+            &stores,
             policy,
             timeline,
             pipeline,
             Some(telemetry),
             gate.as_ref(),
+            serve::RetryPolicy::none(),
+            None,
+            recorder,
             factory,
         );
         stop.store(true, Ordering::Relaxed);

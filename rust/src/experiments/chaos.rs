@@ -213,6 +213,7 @@ fn run_cell(
         None,
         retry,
         breakers.as_ref(),
+        &crate::obs::OFF,
         |_| Ok(FaultInjector::new(SplitExec { net }, plan.clone())),
     )
     .expect("chaos cell run");

@@ -45,6 +45,7 @@ pub mod controller;
 pub mod adapt;
 pub mod fault;
 pub mod serve;
+pub mod obs;
 pub mod experiments;
 pub mod report; // (modules filled in build order; see DESIGN.md §7)
 

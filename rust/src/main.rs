@@ -6,7 +6,9 @@
 //! ```text
 //! dynasplit space                      print Table-1 configuration spaces
 //! dynasplit solve     [--net --trials --strategy --seed --out]
-//! dynasplit serve     [--net --requests --workers --policy --rate --adapt ...]
+//! dynasplit serve     [--net --requests --workers --policy --rate --adapt
+//!                       --trace --metrics --report-json ...]
+//! dynasplit trace     [--file --top]       replay a recorded flight-recorder trace
 //! dynasplit adapt     [--net --requests]   closed-loop adaptation experiment
 //! dynasplit throughput [--net --requests]   serving-pipeline experiment
 //! dynasplit scale     [--requests --devices]  fleet-scale sweep (DESIGN.md §14)
@@ -36,11 +38,13 @@ use dynasplit::controller::{
 };
 use dynasplit::experiments::{self, Ctx};
 use dynasplit::model::Manifest;
+use dynasplit::obs::{chrome, expose, FlightRecorder, Recorder};
 use dynasplit::runtime::InferenceBackend;
-use dynasplit::serve::{run_pipeline, run_pipeline_stores, PipelineConfig};
+use dynasplit::serve::{run_pipeline_resilient, PipelineConfig, RetryPolicy, ServeReport};
 use dynasplit::solver::{Solver, SolverOutput, Strategy};
 use dynasplit::space::{Network, Space};
 use dynasplit::util::cli::{ArgSpec, Args};
+use dynasplit::util::json::Json;
 use dynasplit::util::rng::Pcg32;
 use dynasplit::util::table::Table;
 use dynasplit::workload::{mixed_timeline, ArrivalProcess, LatencyBounds, NetworkMix, WorkloadGen};
@@ -66,6 +70,7 @@ fn run() -> Result<()> {
         "space" => cmd_space(),
         "solve" => cmd_solve(),
         "serve" => cmd_serve(),
+        "trace" => cmd_trace(),
         "mixed" => cmd_mixed(),
         "adapt" => cmd_adapt(),
         "throughput" => cmd_throughput(),
@@ -97,7 +102,11 @@ subcommands:
   solve          offline phase: search the space, save the pareto set
   serve          online phase: concurrent serving pipeline (queue, policies, cache;
                  --mix vgg16=0.7,vit=0.3 serves both networks from one pipeline;
-                 --adapt closes the loop: telemetry -> drift -> re-solve -> hot-swap)
+                 --adapt closes the loop: telemetry -> drift -> re-solve -> hot-swap;
+                 --trace/--metrics/--report-json record the run: Chrome trace JSON,
+                 Prometheus-style metrics text, machine-readable report)
+  trace          replay a `serve --trace` recording: per-request waterfall +
+                 span-stat table (DESIGN.md §16)
   mixed          mixed-network serving experiment (mix x workers x policy + mix shift)
   adapt          closed-loop adaptation experiment (mid-run world shift + QoS recovery)
   throughput     serving-pipeline throughput experiment (policies x workers x cache)
@@ -222,6 +231,9 @@ fn cmd_serve() -> Result<()> {
         )
         .opt("adapt-k", "2", "consecutive off-model windows before a re-solve (--adapt)")
         .opt("adapt-trials", "96", "evaluation budget of the online re-solve (--adapt)")
+        .opt_maybe("trace", "record a flight-recorder trace to this path (Chrome trace JSON)")
+        .opt_maybe("metrics", "write Prometheus-style metrics exposition text to this path")
+        .opt_maybe("report-json", "write the full serve report as JSON to this path")
         .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh 20% search)")
         .opt_maybe(
             "mix",
@@ -266,6 +278,7 @@ fn cmd_serve() -> Result<()> {
         shards: a.usize("shards")?,
         discrete: a.flag("discrete"),
     };
+    let recorder = serve_recorder(&a, &cfg);
     let report = if a.flag("adapt") {
         let adapt_cfg = AdaptConfig {
             window: a.usize("adapt-window")?,
@@ -279,7 +292,8 @@ fn cmd_serve() -> Result<()> {
         };
         let store = ConfigStore::new(set);
         let telemetry = Telemetry::new(cfg.workers, adapt_cfg.telemetry_capacity);
-        let control = AdaptiveLoop::new(&store, &telemetry, &ctx.testbed, net, adapt_cfg);
+        let control = AdaptiveLoop::new(&store, &telemetry, &ctx.testbed, net, adapt_cfg)
+            .with_recorder(&recorder);
         let closed = run_closed_loop(control, policy.as_ref(), &tl, &cfg, |_| {
             Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
         })?;
@@ -296,11 +310,25 @@ fn cmd_serve() -> Result<()> {
         );
         closed.serve
     } else {
-        run_pipeline(&set, policy.as_ref(), &tl, &cfg, |_| {
-            Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
-        })?
+        // equivalent to `run_pipeline` (broadcast store, no retry, no
+        // breakers) with the flight recorder threaded through
+        let store = ConfigStore::new(set);
+        let stores = StoreMap::broadcast(&store);
+        run_pipeline_resilient(
+            &stores,
+            policy.as_ref(),
+            &tl,
+            &cfg,
+            None,
+            None,
+            RetryPolicy::none(),
+            None,
+            &recorder,
+            |_| Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 }),
+        )?
     };
     println!("[serve] {} — {}", policy.name(), report.summary_line());
+    write_serve_artifacts(&a, &recorder, &report)?;
     let metrics = report.to_metric_set("dynasplit");
     if !metrics.is_empty() {
         let (c, s, e) = metrics.placement_counts();
@@ -355,6 +383,143 @@ fn arrival_process(a: &Args) -> Result<ArrivalProcess> {
     })
 }
 
+/// Flight recorder for `serve`: live when `--trace` or `--metrics`
+/// asks for an artifact, the single-branch no-op otherwise (so plain
+/// runs stay bitwise-identical to an unwired pipeline, DESIGN.md §16).
+fn serve_recorder(a: &Args, cfg: &PipelineConfig) -> Recorder {
+    if a.get("trace").is_some() || a.get("metrics").is_some() {
+        Recorder::flight(cfg.workers, cfg.shards, FlightRecorder::DEFAULT_CAPACITY)
+    } else {
+        Recorder::Off
+    }
+}
+
+/// Write the `--trace` / `--metrics` / `--report-json` serve artifacts.
+fn write_serve_artifacts(a: &Args, recorder: &Recorder, report: &ServeReport) -> Result<()> {
+    let trace = recorder.take();
+    if let Some(path) = a.get("trace") {
+        let trace = trace.as_ref().expect("recorder is live whenever --trace is given");
+        std::fs::write(path, chrome::chrome_trace(trace).encode())?;
+        println!(
+            "[serve] trace: {} events, {} spans ({} dropped) -> {path} \
+             (open in chrome://tracing or Perfetto)",
+            trace.len(),
+            trace.spans().len(),
+            trace.dropped
+        );
+    }
+    if let Some(path) = a.get("metrics") {
+        std::fs::write(path, expose::exposition(report, trace.as_ref()))?;
+        println!("[serve] metrics exposition -> {path}");
+    }
+    if let Some(path) = a.get("report-json") {
+        std::fs::write(path, report.to_json().encode())?;
+        println!("[serve] report json -> {path}");
+    }
+    Ok(())
+}
+
+/// `dynasplit trace --file out.json`: replay a recorded trace into a
+/// per-request waterfall and a span-stat table (DESIGN.md §16).
+fn cmd_trace() -> Result<()> {
+    let a = ArgSpec::new(
+        "dynasplit trace".to_string(),
+        "replay a recorded flight-recorder trace (from `serve --trace`)",
+    )
+    .opt_maybe("file", "trace JSON written by `serve --trace` (required)")
+    .opt("top", "25", "request spans shown in the waterfall")
+    .parse_env(2)?;
+    let path = a.str("file")?;
+    let doc = Json::parse_file(std::path::Path::new(path))?;
+    let trace = chrome::parse_trace(&doc)?;
+    println!(
+        "[trace] {path}: {} events across {} lanes ({} workers, {} shards, 1 control; \
+         {} dropped)",
+        trace.len(),
+        trace.lanes.len(),
+        trace.workers,
+        trace.shards,
+        trace.dropped
+    );
+
+    let spans = trace.spans();
+    // the waterfall scale spans the stamped events; virtual-clock
+    // traces carry no timestamps and fall back to the lifecycle path
+    let bounds: Vec<(f64, f64)> = spans.iter().filter_map(|s| s.bounds_ms()).collect();
+    let t0 = bounds.iter().map(|b| b.0).fold(f64::INFINITY, f64::min);
+    let t1 = bounds.iter().map(|b| b.1).fold(f64::NEG_INFINITY, f64::max);
+    let top = a.usize("top")?;
+    let mut t = Table::new(["request", "shard", "worker", "attempts", "terminal", "span"]);
+    for s in spans.iter().take(top) {
+        let cell = |v: Option<usize>| v.map_or("-".to_string(), |x| x.to_string());
+        let span_cell = match s.bounds_ms() {
+            Some((first, last)) => format!(
+                "{:>7.1}..{:<7.1} |{}|",
+                first,
+                last,
+                waterfall_bar(first, last, t0, t1, 32)
+            ),
+            None => {
+                let names: Vec<&str> = s.events.iter().map(|e| e.kind.name()).collect();
+                names.join(" > ")
+            }
+        };
+        t.row([
+            s.id.to_string(),
+            cell(s.shard()),
+            cell(s.worker()),
+            s.attempts().to_string(),
+            s.terminal().map_or("-", |e| e.kind.name()).to_string(),
+            span_cell,
+        ]);
+    }
+    t.print();
+    if spans.len() > top {
+        println!("[trace] ... {} more spans (raise --top to see them)", spans.len() - top);
+    }
+
+    let c = trace.span_counts();
+    let mut t = Table::new(["outcome", "spans"]);
+    for (name, n) in [
+        ("admitted", c.admitted),
+        ("done", c.done),
+        ("done, retried", c.retried),
+        ("done, degraded", c.degraded_served),
+        ("failed_retry", c.failed_retry),
+        ("exec_failed", c.exec_failed),
+        ("rejected_policy", c.rejected_policy),
+        ("rejected_full", c.rejected_full),
+        ("shed", c.shed),
+        ("expired", c.expired),
+        ("unknown_net", c.unknown_net),
+        ("terminal total", c.terminals()),
+    ] {
+        t.row([name.to_string(), n.to_string()]);
+    }
+    t.print();
+
+    let control = trace.control_events();
+    if !control.is_empty() {
+        println!("\n[trace] control plane ({} events):", control.len());
+        for ev in control {
+            match ev.at_ms {
+                Some(at) => println!("  @{at:>10.1} ms  {:?}", ev.kind),
+                None => println!("  @       -     {:?}", ev.kind),
+            }
+        }
+    }
+    println!("\n[trace] digest {:016x}", trace.digest());
+    Ok(())
+}
+
+/// Fixed-width `#` bar spanning `[first, last]` on a `[t0, t1]` scale.
+fn waterfall_bar(first: f64, last: f64, t0: f64, t1: f64, width: usize) -> String {
+    let scale = (t1 - t0).max(f64::EPSILON);
+    let start = (((first - t0) / scale) * width as f64).floor() as usize;
+    let end = ((((last - t0) / scale) * width as f64).ceil() as usize).clamp(start + 1, width);
+    (0..width).map(|i| if i >= start.min(width - 1) && i < end { '#' } else { '.' }).collect()
+}
+
 /// `dynasplit serve --mix …`: one pipeline, per-network Pareto stores,
 /// an interleaved workload (DESIGN.md §12).
 fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
@@ -403,10 +568,21 @@ fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
         shards: a.usize("shards")?,
         discrete: a.flag("discrete"),
     };
-    let report = run_pipeline_stores(&stores, policy.as_ref(), &tl, &cfg, None, None, |_| {
-        Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
-    })?;
+    let recorder = serve_recorder(a, &cfg);
+    let report = run_pipeline_resilient(
+        &stores,
+        policy.as_ref(),
+        &tl,
+        &cfg,
+        None,
+        None,
+        RetryPolicy::none(),
+        None,
+        &recorder,
+        |_| Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 }),
+    )?;
     println!("[serve] {} — {}", policy.name(), report.summary_line());
+    write_serve_artifacts(a, &recorder, &report)?;
     for b in report.breakdown() {
         println!(
             "[serve]   {:>6}: {}/{} done; QoS hit {:.0}%; {:.2} J/req; store epochs {:?}",

@@ -1,0 +1,393 @@
+//! Trace exporters: Chrome `trace_event` JSON and a JSONL event log,
+//! plus the parser `dynasplit trace` replays from (DESIGN.md §16).
+//!
+//! [`chrome_trace`] renders the object-format Chrome trace
+//! (`{"traceEvents": [...]}`) that loads directly in `chrome://tracing`
+//! or Perfetto: one named track per lane, an instant event per recorded
+//! [`TraceEvent`], and a complete (`"X"`) slice per request whose span
+//! has timestamps, so the per-request waterfall is visible without any
+//! post-processing.  Under the virtual clock nothing carries a
+//! timestamp, so instants fall back to their lane sequence index as a
+//! synthetic microsecond axis — ordering is preserved, durations are
+//! meaningless, and the same fallback is documented in §16.
+//!
+//! The same file carries two extra top-level keys Chrome ignores:
+//! `dynasplitMeta` (lane layout + overflow counter) and
+//! `dynasplitEvents` (the raw events, lane-tagged).  [`parse_trace`]
+//! rebuilds a bit-identical [`Trace`] from them — `digest()` survives
+//! the round trip — which is what `dynasplit trace <file>` loads.
+//! [`jsonl`] renders the same raw events one JSON object per line for
+//! log shippers.
+
+use anyhow::{bail, Context, Result};
+
+use crate::fault::BreakerState;
+use crate::space::Network;
+use crate::util::json::Json;
+
+use super::event::{EventKind, TraceEvent};
+use super::span::Trace;
+
+fn breaker_name(state: BreakerState) -> &'static str {
+    match state {
+        BreakerState::Closed => "closed",
+        BreakerState::Open => "open",
+        BreakerState::HalfOpen => "half_open",
+    }
+}
+
+fn parse_breaker(name: &str) -> Result<BreakerState> {
+    Ok(match name {
+        "closed" => BreakerState::Closed,
+        "open" => BreakerState::Open,
+        "half_open" => BreakerState::HalfOpen,
+        other => bail!("unknown breaker state {other:?}"),
+    })
+}
+
+/// One raw event as a flat, lane-tagged JSON object (JSONL line and
+/// `dynasplitEvents` element).  64-bit digests ride as hex strings —
+/// `Json::Num` is an `f64` and would round them.
+fn event_json(lane: usize, ev: &TraceEvent) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("lane", Json::num(lane as f64)),
+        (
+            "at_ms",
+            match ev.at_ms {
+                Some(t) => Json::num(t),
+                None => Json::Null,
+            },
+        ),
+        ("kind", Json::str(ev.kind.name())),
+    ];
+    match ev.kind {
+        EventKind::Admitted { id }
+        | EventKind::Shed { id }
+        | EventKind::RejectedFull { id }
+        | EventKind::ExecFailed { id }
+        | EventKind::RejectedPolicy { id }
+        | EventKind::Expired { id }
+        | EventKind::UnknownNet { id } => pairs.push(("id", Json::num(id as f64))),
+        EventKind::Queued { id, shard } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("shard", Json::num(shard as f64)));
+        }
+        EventKind::Dispatched { id, worker, batch } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("worker", Json::num(worker as f64)));
+            pairs.push(("batch", Json::num(batch as f64)));
+        }
+        EventKind::Attempt { id, attempt } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("attempt", Json::num(attempt as f64)));
+        }
+        EventKind::Backoff { id, attempt, charged_ms } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("attempt", Json::num(attempt as f64)));
+            pairs.push(("charged_ms", Json::num(charged_ms)));
+        }
+        EventKind::Done { id, attempts, degraded } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("attempts", Json::num(attempts as f64)));
+            pairs.push(("degraded", Json::Bool(degraded)));
+        }
+        EventKind::FailedRetry { id, attempts } => {
+            pairs.push(("id", Json::num(id as f64)));
+            pairs.push(("attempts", Json::num(attempts as f64)));
+        }
+        EventKind::SwapInstalled { epoch, digest } => {
+            pairs.push(("epoch", Json::num(epoch as f64)));
+            pairs.push(("digest", Json::str(format!("{digest:016x}"))));
+        }
+        EventKind::BreakerTransition { net, from, to } => {
+            pairs.push(("net", Json::str(net.name())));
+            pairs.push(("from", Json::str(breaker_name(from))));
+            pairs.push(("to", Json::str(breaker_name(to))));
+        }
+        EventKind::DriftDetected { windows } => pairs.push(("windows", Json::num(windows as f64))),
+        EventKind::ReSolve { epoch } => pairs.push(("epoch", Json::num(epoch as f64))),
+    }
+    Json::obj(pairs)
+}
+
+fn parse_event(v: &Json) -> Result<(usize, TraceEvent)> {
+    let lane = v.get("lane")?.as_usize()?;
+    let at_ms = match v.get("at_ms")? {
+        Json::Null => None,
+        t => Some(t.as_f64()?),
+    };
+    let id = || -> Result<usize> { v.get("id")?.as_usize() };
+    let kind = match v.get("kind")?.as_str()? {
+        "admitted" => EventKind::Admitted { id: id()? },
+        "queued" => EventKind::Queued { id: id()?, shard: v.get("shard")?.as_usize()? },
+        "shed" => EventKind::Shed { id: id()? },
+        "rejected_full" => EventKind::RejectedFull { id: id()? },
+        "dispatched" => EventKind::Dispatched {
+            id: id()?,
+            worker: v.get("worker")?.as_usize()?,
+            batch: v.get("batch")?.as_usize()?,
+        },
+        "attempt" => EventKind::Attempt { id: id()?, attempt: v.get("attempt")?.as_usize()? as u32 },
+        "backoff" => EventKind::Backoff {
+            id: id()?,
+            attempt: v.get("attempt")?.as_usize()? as u32,
+            charged_ms: v.get("charged_ms")?.as_f64()?,
+        },
+        "done" => EventKind::Done {
+            id: id()?,
+            attempts: v.get("attempts")?.as_usize()? as u32,
+            degraded: v.get("degraded")?.as_bool()?,
+        },
+        "failed_retry" => {
+            EventKind::FailedRetry { id: id()?, attempts: v.get("attempts")?.as_usize()? as u32 }
+        }
+        "exec_failed" => EventKind::ExecFailed { id: id()? },
+        "rejected_policy" => EventKind::RejectedPolicy { id: id()? },
+        "expired" => EventKind::Expired { id: id()? },
+        "unknown_net" => EventKind::UnknownNet { id: id()? },
+        "swap_installed" => EventKind::SwapInstalled {
+            epoch: v.get("epoch")?.as_usize()? as u64,
+            digest: u64::from_str_radix(v.get("digest")?.as_str()?, 16)
+                .context("swap digest is not a hex u64")?,
+        },
+        "breaker_transition" => EventKind::BreakerTransition {
+            net: Network::parse(v.get("net")?.as_str()?)?,
+            from: parse_breaker(v.get("from")?.as_str()?)?,
+            to: parse_breaker(v.get("to")?.as_str()?)?,
+        },
+        "drift_detected" => EventKind::DriftDetected { windows: v.get("windows")?.as_usize()? },
+        "resolve" => EventKind::ReSolve { epoch: v.get("epoch")?.as_usize()? as u64 },
+        other => bail!("unknown event kind {other:?}"),
+    };
+    Ok((lane, TraceEvent { at_ms, kind }))
+}
+
+fn lane_label(trace: &Trace, lane: usize) -> String {
+    if lane < trace.workers {
+        format!("worker {lane}")
+    } else if lane < trace.workers + trace.shards {
+        format!("feeder shard {}", lane - trace.workers)
+    } else {
+        "control plane".to_string()
+    }
+}
+
+/// Render the full Chrome `trace_event` object (plus the raw-event
+/// sidecar keys the [`parse_trace`] round trip uses).
+pub fn chrome_trace(trace: &Trace) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    // named tracks: one metadata event per lane
+    for lane in 0..trace.lanes.len() {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(lane as f64)),
+            ("args", Json::obj(vec![("name", Json::str(lane_label(trace, lane)))])),
+        ]));
+    }
+    // an instant per event; virtual-clock events use the lane sequence
+    // index as a synthetic timestamp so ordering survives the export
+    for (lane, lane_events) in trace.lanes.iter().enumerate() {
+        for (seq, ev) in lane_events.iter().enumerate() {
+            let ts_us = match ev.at_ms {
+                Some(t) => t * 1000.0,
+                None => seq as f64,
+            };
+            let mut args = vec![("event", event_json(lane, ev))];
+            if ev.at_ms.is_none() {
+                args.push(("synthetic_ts", Json::Bool(true)));
+            }
+            let name = match ev.kind.request_id() {
+                Some(id) => format!("{} r{id}", ev.kind.name()),
+                None => ev.kind.name().to_string(),
+            };
+            events.push(Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("name", Json::str(name)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(lane as f64)),
+                ("ts", Json::num(ts_us)),
+                ("args", Json::obj(args)),
+            ]));
+        }
+    }
+    // a complete slice per request whose span is time-bounded
+    for span in trace.spans() {
+        if let Some((start, end)) = span.bounds_ms() {
+            let tid = span.worker().unwrap_or_else(|| {
+                trace.workers + span.shard().unwrap_or(trace.shards.saturating_sub(1))
+            });
+            let terminal =
+                span.terminal().map(|e| e.kind.name()).unwrap_or("open").to_string();
+            events.push(Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("name", Json::str(format!("req {}", span.id))),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("ts", Json::num(start * 1000.0)),
+                ("dur", Json::num((end - start) * 1000.0)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("attempts", Json::num(span.attempts() as f64)),
+                        ("terminal", Json::str(terminal)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    let raw: Vec<Json> = trace
+        .lanes
+        .iter()
+        .enumerate()
+        .flat_map(|(lane, evs)| evs.iter().map(move |ev| event_json(lane, ev)))
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(events)),
+        (
+            "dynasplitMeta",
+            Json::obj(vec![
+                ("workers", Json::num(trace.workers as f64)),
+                ("shards", Json::num(trace.shards as f64)),
+                ("dropped", Json::num(trace.dropped as f64)),
+            ]),
+        ),
+        ("dynasplitEvents", Json::Arr(raw)),
+    ])
+}
+
+/// The raw events as JSONL: one lane-tagged JSON object per line, lane
+/// order then ring order (same order the digest folds).
+pub fn jsonl(trace: &Trace) -> String {
+    let mut out = String::new();
+    for (lane, evs) in trace.lanes.iter().enumerate() {
+        for ev in evs {
+            out.push_str(&event_json(lane, ev).encode());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Rebuild a [`Trace`] from a [`chrome_trace`] document.  The result is
+/// bit-identical to the exported trace: `digest()` survives the round
+/// trip.
+pub fn parse_trace(doc: &Json) -> Result<Trace> {
+    let meta = doc.get("dynasplitMeta").context("not a dynasplit trace (missing meta)")?;
+    let workers = meta.get("workers")?.as_usize()?;
+    let shards = meta.get("shards")?.as_usize()?;
+    let dropped = meta.get("dropped")?.as_usize()? as u64;
+    let mut lanes: Vec<Vec<TraceEvent>> = vec![Vec::new(); workers + shards + 1];
+    for v in doc.get("dynasplitEvents")?.as_arr()? {
+        let (lane, ev) = parse_event(v)?;
+        if lane >= lanes.len() {
+            bail!("event lane {lane} out of range for {} lanes", lanes.len());
+        }
+        lanes[lane].push(ev);
+    }
+    Ok(Trace { workers, shards, lanes, dropped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let worker = vec![
+            TraceEvent {
+                at_ms: Some(3.0),
+                kind: EventKind::Dispatched { id: 0, worker: 0, batch: 2 },
+            },
+            TraceEvent { at_ms: Some(3.0), kind: EventKind::Attempt { id: 0, attempt: 1 } },
+            TraceEvent {
+                at_ms: Some(9.5),
+                kind: EventKind::Done { id: 0, attempts: 1, degraded: true },
+            },
+        ];
+        let feeder = vec![
+            TraceEvent { at_ms: Some(1.0), kind: EventKind::Admitted { id: 0 } },
+            TraceEvent { at_ms: Some(1.0), kind: EventKind::Queued { id: 0, shard: 0 } },
+            TraceEvent { at_ms: Some(2.0), kind: EventKind::RejectedFull { id: 1 } },
+        ];
+        let control = vec![
+            TraceEvent {
+                at_ms: None,
+                kind: EventKind::SwapInstalled { epoch: 2, digest: 0xdead_beef_dead_beef },
+            },
+            TraceEvent {
+                at_ms: None,
+                kind: EventKind::BreakerTransition {
+                    net: Network::Vit,
+                    from: BreakerState::Closed,
+                    to: BreakerState::Open,
+                },
+            },
+        ];
+        Trace { workers: 1, shards: 1, lanes: vec![worker, feeder, control], dropped: 0 }
+    }
+
+    #[test]
+    fn chrome_document_has_the_expected_shape() {
+        let doc = chrome_trace(&sample());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread-name metadata + 8 instants + 1 request slice
+        assert_eq!(events.len(), 12);
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 3);
+        assert_eq!(phases.iter().filter(|p| **p == "i").count(), 8);
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 1);
+        let slice = events.iter().find(|e| e.get("ph").unwrap().as_str().unwrap() == "X").unwrap();
+        assert_eq!(slice.get("ts").unwrap().as_f64().unwrap(), 1000.0, "span starts at 1 ms");
+        assert_eq!(slice.get("dur").unwrap().as_f64().unwrap(), 8500.0, "1 ms -> 9.5 ms");
+        // the encoded document is valid JSON and re-parses
+        assert!(Json::parse(&doc.encode()).is_ok());
+    }
+
+    #[test]
+    fn round_trip_preserves_the_digest() {
+        let trace = sample();
+        let doc = chrome_trace(&trace);
+        let reparsed = parse_trace(&Json::parse(&doc.encode()).unwrap()).unwrap();
+        assert_eq!(reparsed.workers, trace.workers);
+        assert_eq!(reparsed.shards, trace.shards);
+        assert_eq!(reparsed.digest(), trace.digest(), "export/import is lossless");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back_individually() {
+        let trace = sample();
+        let text = jsonl(&trace);
+        assert_eq!(text.lines().count(), trace.len());
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            parse_event(&v).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_kinds_and_bad_lanes_error_cleanly() {
+        let v = Json::obj(vec![
+            ("lane", Json::num(0.0)),
+            ("at_ms", Json::Null),
+            ("kind", Json::str("warp_drive")),
+        ]);
+        assert!(parse_event(&v).is_err());
+        let mut doc = chrome_trace(&sample());
+        if let Json::Obj(m) = &mut doc {
+            m.insert(
+                "dynasplitEvents".to_string(),
+                Json::Arr(vec![Json::obj(vec![
+                    ("lane", Json::num(99.0)),
+                    ("at_ms", Json::Null),
+                    ("kind", Json::str("admitted")),
+                    ("id", Json::num(0.0)),
+                ])]),
+            );
+        }
+        assert!(parse_trace(&doc).is_err(), "out-of-range lane is rejected");
+    }
+}

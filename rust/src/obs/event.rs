@@ -1,0 +1,281 @@
+//! Typed flight-recorder events and the trace digest (DESIGN.md §16).
+//!
+//! One [`TraceEvent`] is one thing the pipeline did to (or decided
+//! about) exactly one request — or one control-plane action.  The
+//! variants mirror [`crate::serve::ServeOutcome`] one-to-one on the
+//! terminal side so a trace always reconciles with the report that was
+//! aggregated from the same run: every record's outcome class appears
+//! in the trace as exactly one terminal event for that request id.
+//!
+//! Timestamps come from [`crate::serve::ServeClock`] and nowhere else
+//! (the dslint clock-discipline rule): `at_ms = None` under the virtual
+//! clock, deterministic simulated milliseconds under the discrete
+//! clock, wall milliseconds under real-time replay.  The digest folds
+//! `f64` timestamps via [`f64::to_bits`], so "bitwise-reproducible" is
+//! literal — twin-seeded deterministic runs produce equal digests, and
+//! any divergence in either ordering or timing changes the value.
+
+use crate::fault::BreakerState;
+use crate::space::Network;
+use crate::util::hash::fnv1a;
+
+/// One recorded pipeline or control-plane event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Experiment-clock timestamp (`None` in virtual time).
+    pub at_ms: Option<f64>,
+    pub kind: EventKind,
+}
+
+/// What happened.  Request-scoped variants carry the request id (span
+/// key); control-plane variants describe the adaptation/fault planes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    // --- request lifecycle (data plane) ---
+    /// Accepted into the admission queue.
+    Admitted { id: usize },
+    /// Enqueued on its home shard (same instant as `Admitted`; kept
+    /// separate so the span shows *where* the request waited).
+    Queued { id: usize, shard: usize },
+    /// Shed by closed-loop admission backpressure (never enqueued).
+    Shed { id: usize },
+    /// Shed because the bounded queue was full (never enqueued).
+    RejectedFull { id: usize },
+    /// Popped by a worker into a batch of `batch` members.
+    Dispatched { id: usize, worker: usize, batch: usize },
+    /// One dispatch attempt of this request's batch (1-based).
+    Attempt { id: usize, attempt: u32 },
+    /// Survived a failed attempt; `charged_ms` of deterministic backoff
+    /// was charged against its remaining QoS budget before the next.
+    Backoff { id: usize, attempt: u32, charged_ms: f64 },
+    /// Completed (`attempts == 1` ⇔ a plain `Done` record).
+    Done { id: usize, attempts: u32, degraded: bool },
+    /// Dropped after exhausting its retry budget.
+    FailedRetry { id: usize, attempts: u32 },
+    /// Batch shed on a one-shot executor error.
+    ExecFailed { id: usize },
+    /// The scheduling policy declined it.
+    RejectedPolicy { id: usize },
+    /// Deadline passed while queued (wait-aware modes).
+    Expired { id: usize },
+    /// No store-map entry for its network.
+    UnknownNet { id: usize },
+    // --- control plane ---
+    /// The adaptation loop hot-swapped a fresh Pareto set in.
+    SwapInstalled { epoch: u64, digest: u64 },
+    /// A circuit breaker changed state.
+    BreakerTransition { net: Network, from: BreakerState, to: BreakerState },
+    /// The drift detector confirmed a sustained off-model streak.
+    DriftDetected { windows: usize },
+    /// An online re-solve ran against the store at `epoch`.
+    ReSolve { epoch: u64 },
+}
+
+impl EventKind {
+    /// Request id for request-scoped events; `None` for control-plane.
+    pub fn request_id(&self) -> Option<usize> {
+        match *self {
+            EventKind::Admitted { id }
+            | EventKind::Queued { id, .. }
+            | EventKind::Shed { id }
+            | EventKind::RejectedFull { id }
+            | EventKind::Dispatched { id, .. }
+            | EventKind::Attempt { id, .. }
+            | EventKind::Backoff { id, .. }
+            | EventKind::Done { id, .. }
+            | EventKind::FailedRetry { id, .. }
+            | EventKind::ExecFailed { id }
+            | EventKind::RejectedPolicy { id }
+            | EventKind::Expired { id }
+            | EventKind::UnknownNet { id } => Some(id),
+            EventKind::SwapInstalled { .. }
+            | EventKind::BreakerTransition { .. }
+            | EventKind::DriftDetected { .. }
+            | EventKind::ReSolve { .. } => None,
+        }
+    }
+
+    /// Stable wire/display name (exporters, JSONL round-trip, digest).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Queued { .. } => "queued",
+            EventKind::Shed { .. } => "shed",
+            EventKind::RejectedFull { .. } => "rejected_full",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::Attempt { .. } => "attempt",
+            EventKind::Backoff { .. } => "backoff",
+            EventKind::Done { .. } => "done",
+            EventKind::FailedRetry { .. } => "failed_retry",
+            EventKind::ExecFailed { .. } => "exec_failed",
+            EventKind::RejectedPolicy { .. } => "rejected_policy",
+            EventKind::Expired { .. } => "expired",
+            EventKind::UnknownNet { .. } => "unknown_net",
+            EventKind::SwapInstalled { .. } => "swap_installed",
+            EventKind::BreakerTransition { .. } => "breaker_transition",
+            EventKind::DriftDetected { .. } => "drift_detected",
+            EventKind::ReSolve { .. } => "resolve",
+        }
+    }
+
+    /// Is this a terminal (span-closing) request event?
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Shed { .. }
+                | EventKind::RejectedFull { .. }
+                | EventKind::Done { .. }
+                | EventKind::FailedRetry { .. }
+                | EventKind::ExecFailed { .. }
+                | EventKind::RejectedPolicy { .. }
+                | EventKind::Expired { .. }
+                | EventKind::UnknownNet { .. }
+        )
+    }
+
+    /// Ordering rank within a request span (timestamps may be `None`
+    /// under virtual time, so span reconstruction orders by phase).
+    pub fn phase_rank(&self) -> u32 {
+        match self {
+            EventKind::Admitted { .. } => 0,
+            EventKind::Queued { .. } => 1,
+            EventKind::Dispatched { .. } => 2,
+            EventKind::Attempt { .. } => 3,
+            EventKind::Backoff { .. } => 4,
+            _ => 9, // terminals (and control events, which never span)
+        }
+    }
+
+    /// Fold this event's full payload into `words` for the digest.
+    fn digest_words(&self, words: &mut Vec<u64>) {
+        match *self {
+            EventKind::Admitted { id } => words.extend([1, id as u64]),
+            EventKind::Queued { id, shard } => words.extend([2, id as u64, shard as u64]),
+            EventKind::Shed { id } => words.extend([3, id as u64]),
+            EventKind::RejectedFull { id } => words.extend([4, id as u64]),
+            EventKind::Dispatched { id, worker, batch } => {
+                words.extend([5, id as u64, worker as u64, batch as u64])
+            }
+            EventKind::Attempt { id, attempt } => words.extend([6, id as u64, attempt as u64]),
+            EventKind::Backoff { id, attempt, charged_ms } => {
+                words.extend([7, id as u64, attempt as u64, charged_ms.to_bits()])
+            }
+            EventKind::Done { id, attempts, degraded } => {
+                words.extend([8, id as u64, attempts as u64, degraded as u64])
+            }
+            EventKind::FailedRetry { id, attempts } => {
+                words.extend([9, id as u64, attempts as u64])
+            }
+            EventKind::ExecFailed { id } => words.extend([10, id as u64]),
+            EventKind::RejectedPolicy { id } => words.extend([11, id as u64]),
+            EventKind::Expired { id } => words.extend([12, id as u64]),
+            EventKind::UnknownNet { id } => words.extend([13, id as u64]),
+            EventKind::SwapInstalled { epoch, digest } => words.extend([14, epoch, digest]),
+            EventKind::BreakerTransition { net, from, to } => {
+                words.extend([15, net_code(net), breaker_code(from), breaker_code(to)])
+            }
+            EventKind::DriftDetected { windows } => words.extend([16, windows as u64]),
+            EventKind::ReSolve { epoch } => words.extend([17, epoch]),
+        }
+    }
+}
+
+/// Stable numeric code for a network (digest + exporters).
+pub fn net_code(net: Network) -> u64 {
+    Network::ALL.iter().position(|&n| n == net).unwrap_or(usize::MAX) as u64
+}
+
+/// Stable numeric code for a breaker state (digest + exposition gauge:
+/// 0 = closed, 1 = open, 2 = half-open).
+pub fn breaker_code(state: BreakerState) -> u64 {
+    match state {
+        BreakerState::Closed => 0,
+        BreakerState::Open => 1,
+        BreakerState::HalfOpen => 2,
+    }
+}
+
+/// FNV-1a fold of an event stream, lane by lane.  `lanes` must iterate
+/// in lane order with each lane's events in ring order — the recorder's
+/// drain already yields exactly that — so equal digests mean equal
+/// traces, timestamps included (`None` and `Some(t)` fold differently,
+/// and `t` folds bitwise).
+pub fn trace_digest<'a, L>(lanes: L) -> u64
+where
+    L: IntoIterator<Item = &'a [TraceEvent]>,
+{
+    let mut words = Vec::new();
+    for (lane, events) in lanes.into_iter().enumerate() {
+        words.extend([0xbeef, lane as u64, events.len() as u64]);
+        for ev in events {
+            match ev.at_ms {
+                Some(t) => words.extend([1, t.to_bits()]),
+                None => words.push(0),
+            }
+            ev.kind.digest_words(&mut words);
+        }
+    }
+    fnv1a(words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind) -> TraceEvent {
+        TraceEvent { at_ms: None, kind }
+    }
+
+    #[test]
+    fn request_ids_and_terminals_classify() {
+        assert_eq!(EventKind::Admitted { id: 7 }.request_id(), Some(7));
+        assert_eq!(EventKind::ReSolve { epoch: 1 }.request_id(), None);
+        assert!(EventKind::Done { id: 1, attempts: 1, degraded: false }.is_terminal());
+        assert!(!EventKind::Attempt { id: 1, attempt: 2 }.is_terminal());
+        assert!(!EventKind::SwapInstalled { epoch: 1, digest: 2 }.is_terminal());
+    }
+
+    #[test]
+    fn phase_ranks_order_a_span_without_timestamps() {
+        let admitted = EventKind::Admitted { id: 0 };
+        let queued = EventKind::Queued { id: 0, shard: 0 };
+        let dispatched = EventKind::Dispatched { id: 0, worker: 0, batch: 1 };
+        let attempt = EventKind::Attempt { id: 0, attempt: 1 };
+        let done = EventKind::Done { id: 0, attempts: 1, degraded: false };
+        let ranks: Vec<u32> =
+            [admitted, queued, dispatched, attempt, done].iter().map(|k| k.phase_rank()).collect();
+        let mut sorted = ranks.clone();
+        sorted.sort_unstable();
+        assert_eq!(ranks, sorted, "lifecycle order is monotone in phase rank");
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_sensitive() {
+        let a = vec![
+            ev(EventKind::Admitted { id: 0 }),
+            ev(EventKind::Done { id: 0, attempts: 1, degraded: false }),
+        ];
+        let b = vec![ev(EventKind::Admitted { id: 1 })];
+        let d1 = trace_digest([a.as_slice(), b.as_slice()]);
+        let d2 = trace_digest([a.as_slice(), b.as_slice()]);
+        assert_eq!(d1, d2, "same trace, same digest");
+        // lane assignment matters
+        assert_ne!(d1, trace_digest([b.as_slice(), a.as_slice()]));
+        // payloads matter
+        let mut a2 = a.clone();
+        a2[1].kind = EventKind::Done { id: 0, attempts: 2, degraded: false };
+        assert_ne!(d1, trace_digest([a2.as_slice(), b.as_slice()]));
+        // timestamps matter bitwise
+        let mut a3 = a.clone();
+        a3[0].at_ms = Some(0.0);
+        assert_ne!(d1, trace_digest([a3.as_slice(), b.as_slice()]));
+    }
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        assert_eq!(breaker_code(BreakerState::Closed), 0);
+        assert_eq!(breaker_code(BreakerState::Open), 1);
+        assert_eq!(breaker_code(BreakerState::HalfOpen), 2);
+        assert_ne!(net_code(Network::Vgg16), net_code(Network::Vit));
+    }
+}

@@ -1,0 +1,326 @@
+//! Prometheus-style text exposition of a serving run (DESIGN.md §16).
+//!
+//! Renders a [`ServeReport`] (and optionally the run's [`Trace`], which
+//! contributes breaker-state gauges and recorder meta-counters) into
+//! the Prometheus text format: `# HELP` / `# TYPE` headers, one sample
+//! per line, labels in `{}`.  Everything is derived from `Vec`s and
+//! fixed match arms — no `HashMap` anywhere (DESIGN.md §13), so the
+//! output is byte-deterministic for a deterministic run: families in
+//! fixed order, label values in `Network::ALL` / shard-index /
+//! bucket-boundary order.
+//!
+//! The outcome counter family partitions every request into exactly one
+//! class (the same eight-way split as
+//! [`ServeReport::summary_line`]), so
+//! `sum(dynasplit_requests_total)` equals the run's request count;
+//! `retried`/`degraded`/`coalesced` overlap `done` and are exposed as
+//! separate families instead of extra `outcome` labels.
+
+use crate::serve::{ServeOutcome, ServeReport};
+
+use super::event::{breaker_code, EventKind};
+use super::span::Trace;
+
+/// Fixed log2 latency-bucket upper bounds (ms).  Powers of two from
+/// 1 ms to ~16 s; the exposition appends the implicit `+Inf` bucket.
+pub const LATENCY_BUCKETS_MS: [f64; 15] = [
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0,
+    16384.0,
+];
+
+fn family(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn sample(out: &mut String, name: &str, labels: &str, value: impl std::fmt::Display) {
+    if labels.is_empty() {
+        out.push_str(&format!("{name} {value}\n"));
+    } else {
+        out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+    }
+}
+
+/// Render `report` (+ optional `trace`) as Prometheus exposition text.
+pub fn exposition(report: &ServeReport, trace: Option<&Trace>) -> String {
+    let mut out = String::new();
+
+    // --- outcome partition (sums to the request count) ---
+    family(
+        &mut out,
+        "dynasplit_requests_total",
+        "Requests by final outcome (classes are disjoint and exhaustive)",
+        "counter",
+    );
+    let outcomes: [(&str, usize); 8] = [
+        ("done", report.completed()),
+        ("queue_full", report.rejected_queue_full()),
+        ("backpressured", report.shed_by_admission()),
+        ("expired", report.expired_in_queue()),
+        ("policy_rejected", report.rejected_by_policy()),
+        ("unknown_network", report.unknown_network()),
+        ("exec_failed", report.executor_failed()),
+        ("retry_failed", report.retry_failed()),
+    ];
+    for (class, n) in outcomes {
+        sample(&mut out, "dynasplit_requests_total", &format!("outcome=\"{class}\""), n);
+    }
+
+    // --- completion refinements (overlap `done`) ---
+    family(
+        &mut out,
+        "dynasplit_retried_total",
+        "Completions that needed more than one dispatch attempt",
+        "counter",
+    );
+    sample(&mut out, "dynasplit_retried_total", "", report.retried());
+    family(
+        &mut out,
+        "dynasplit_degraded_served_total",
+        "Completions served from the degraded edge-only store view",
+        "counter",
+    );
+    sample(&mut out, "dynasplit_degraded_served_total", "", report.degraded_served());
+    family(
+        &mut out,
+        "dynasplit_coalesced_total",
+        "Completions that rode a coalesced same-config batch",
+        "counter",
+    );
+    sample(&mut out, "dynasplit_coalesced_total", "", report.coalesced());
+
+    // --- QoS ---
+    family(
+        &mut out,
+        "dynasplit_qos_hit_rate",
+        "Fraction of requests served within deadline (per network and overall)",
+        "gauge",
+    );
+    sample(&mut out, "dynasplit_qos_hit_rate", "", report.qos_hit_rate());
+    for b in report.breakdown() {
+        sample(
+            &mut out,
+            "dynasplit_qos_hit_rate",
+            &format!("net=\"{}\"", b.net.name()),
+            b.qos_hit_rate(),
+        );
+    }
+
+    // --- queue / shards ---
+    family(
+        &mut out,
+        "dynasplit_queue_peak_depth",
+        "Largest queue depth observed at admission (per shard; aggregate is the max)",
+        "gauge",
+    );
+    sample(&mut out, "dynasplit_queue_peak_depth", "", report.queue.peak_depth);
+    for (shard, q) in report.shard_queue.iter().enumerate() {
+        sample(
+            &mut out,
+            "dynasplit_queue_peak_depth",
+            &format!("shard=\"{shard}\""),
+            q.peak_depth,
+        );
+    }
+    family(
+        &mut out,
+        "dynasplit_shard_requests_total",
+        "Requests by home shard and coarse disposition",
+        "counter",
+    );
+    for b in report.shard_breakdown() {
+        for (class, n) in [
+            ("done", b.done),
+            ("expired", b.expired),
+            ("queue_full", b.rejected_queue_full),
+            ("backpressured", b.shed_by_admission),
+        ] {
+            sample(
+                &mut out,
+                "dynasplit_shard_requests_total",
+                &format!("shard=\"{}\",class=\"{class}\"", b.shard),
+                n,
+            );
+        }
+    }
+
+    // --- latency histogram over completions ---
+    family(
+        &mut out,
+        "dynasplit_latency_ms",
+        "Completion latency (ms; retried completions include charged backoff)",
+        "histogram",
+    );
+    let latencies: Vec<f64> = report
+        .records
+        .iter()
+        .filter_map(|r| r.outcome.completion().map(|c| c.latency_ms))
+        .collect();
+    for le in LATENCY_BUCKETS_MS {
+        let cumulative = latencies.iter().filter(|&&l| l <= le).count();
+        sample(&mut out, "dynasplit_latency_ms_bucket", &format!("le=\"{le}\""), cumulative);
+    }
+    sample(&mut out, "dynasplit_latency_ms_bucket", "le=\"+Inf\"", latencies.len());
+    sample(&mut out, "dynasplit_latency_ms_sum", "", latencies.iter().sum::<f64>());
+    sample(&mut out, "dynasplit_latency_ms_count", "", latencies.len());
+
+    // --- energy / adaptation ---
+    family(
+        &mut out,
+        "dynasplit_energy_joules_sum",
+        "Total energy over completed requests",
+        "counter",
+    );
+    let energy: f64 = report
+        .records
+        .iter()
+        .filter_map(|r| r.outcome.completion().map(|c| c.energy_j))
+        .sum();
+    sample(&mut out, "dynasplit_energy_joules_sum", "", energy);
+    family(
+        &mut out,
+        "dynasplit_store_epochs",
+        "Distinct Pareto-store epochs observed by completions",
+        "gauge",
+    );
+    sample(&mut out, "dynasplit_store_epochs", "", report.epochs_observed().len().max(1));
+
+    // --- trace-derived families (flight recorder enabled only) ---
+    if let Some(trace) = trace {
+        family(
+            &mut out,
+            "dynasplit_breaker_state",
+            "Final circuit-breaker state per network (0=closed 1=open 2=half-open)",
+            "gauge",
+        );
+        for (net, state) in trace.breaker_states() {
+            sample(
+                &mut out,
+                "dynasplit_breaker_state",
+                &format!("net=\"{}\"", net.name()),
+                breaker_code(state),
+            );
+        }
+        family(
+            &mut out,
+            "dynasplit_retry_attempts_total",
+            "Dispatch attempts beyond each request's first",
+            "counter",
+        );
+        let extra_attempts = trace
+            .events()
+            .filter(|e| matches!(e.kind, EventKind::Attempt { attempt, .. } if attempt > 1))
+            .count();
+        sample(&mut out, "dynasplit_retry_attempts_total", "", extra_attempts);
+        family(
+            &mut out,
+            "dynasplit_trace_events",
+            "Flight-recorder events in the drained trace",
+            "gauge",
+        );
+        sample(&mut out, "dynasplit_trace_events", "", trace.len());
+        family(
+            &mut out,
+            "dynasplit_trace_dropped_total",
+            "Events evicted by full recorder rings (0 = complete trace)",
+            "counter",
+        );
+        sample(&mut out, "dynasplit_trace_dropped_total", "", trace.dropped);
+    }
+    out
+}
+
+/// Cross-check the exposition against the report it was rendered from:
+/// the eight outcome samples must sum to the record count.  Used by the
+/// reconciliation test; cheap enough to assert in experiments too.
+pub fn outcome_partition_total(report: &ServeReport) -> usize {
+    report.completed()
+        + report.rejected_queue_full()
+        + report.shed_by_admission()
+        + report.expired_in_queue()
+        + report.rejected_by_policy()
+        + report.unknown_network()
+        + report.executor_failed()
+        + report.retry_failed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeRecord;
+    use crate::space::Network;
+    use crate::workload::{Request, TimedRequest};
+
+    fn report_with(records: Vec<ServeRecord>) -> ServeReport {
+        ServeReport {
+            records,
+            cache: Default::default(),
+            queue: Default::default(),
+            shard_queue: vec![Default::default()],
+            workers: 1,
+            shards: 1,
+            wall_ms: 10.0,
+        }
+    }
+
+    fn shed(id: usize) -> ServeRecord {
+        let tr = TimedRequest {
+            request: Request { id, net: Network::Vgg16, qos_ms: 100.0, inferences: 1, seed: 1 },
+            arrival_ms: 0.0,
+        };
+        ServeRecord::shed_by_admission(&tr)
+    }
+
+    #[test]
+    fn exposition_is_deterministic_and_well_formed() {
+        let report = report_with(vec![shed(0), shed(1)]);
+        let a = exposition(&report, None);
+        let b = exposition(&report, None);
+        assert_eq!(a, b, "byte-deterministic");
+        assert!(a.contains("# TYPE dynasplit_requests_total counter"));
+        assert!(a.contains("dynasplit_requests_total{outcome=\"backpressured\"} 2"));
+        assert!(a.contains("dynasplit_latency_ms_bucket{le=\"+Inf\"} 0"));
+        assert!(a.contains("dynasplit_queue_peak_depth{shard=\"0\"} 0"));
+        assert!(!a.contains("dynasplit_breaker_state"), "trace families need a trace");
+        // every non-comment line is `name{labels} value` with a numeric value
+        for line in a.lines().filter(|l| !l.starts_with('#')) {
+            let value = line.rsplit(' ').next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable sample: {line}");
+        }
+    }
+
+    #[test]
+    fn outcome_partition_sums_to_record_count() {
+        let report = report_with(vec![shed(0), shed(1), shed(2)]);
+        assert_eq!(outcome_partition_total(&report), report.records.len());
+    }
+
+    #[test]
+    fn trace_families_render_when_a_trace_is_supplied() {
+        use crate::fault::BreakerState;
+        use crate::obs::event::TraceEvent;
+        let trace = Trace {
+            workers: 1,
+            shards: 1,
+            dropped: 0,
+            lanes: vec![
+                vec![
+                    TraceEvent { at_ms: None, kind: EventKind::Attempt { id: 0, attempt: 1 } },
+                    TraceEvent { at_ms: None, kind: EventKind::Attempt { id: 0, attempt: 2 } },
+                ],
+                vec![],
+                vec![TraceEvent {
+                    at_ms: None,
+                    kind: EventKind::BreakerTransition {
+                        net: Network::Vgg16,
+                        from: BreakerState::Closed,
+                        to: BreakerState::Open,
+                    },
+                }],
+            ],
+        };
+        let text = exposition(&report_with(vec![]), Some(&trace));
+        assert!(text.contains("dynasplit_breaker_state{net=\"vgg16\"} 1"));
+        assert!(text.contains("dynasplit_retry_attempts_total 1"));
+        assert!(text.contains("dynasplit_trace_events 3"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Deterministic observability: flight recorder, trace exporters,
+//! metrics exposition (DESIGN.md §16).
+//!
+//! The serving pipeline aggregates each run into a
+//! [`crate::serve::ServeReport`] — a *post-hoc* summary.  This module
+//! adds the in-flight view: a **flight recorder** capturing a typed
+//! event per step of every request's lifecycle across all three planes
+//! (data: admission→queue→dispatch→attempts→terminal; control:
+//! hot-swaps, drift, re-solves; fault: breaker transitions), stored in
+//! per-lane bounded rings ([`ring::EventRing`], same lock-light
+//! discipline as `adapt::Telemetry`).
+//!
+//! Three invariants make the recorder deterministic and safe to leave
+//! wired into production paths:
+//!
+//! * **Clock sourcing** — every timestamp comes from the pipeline's
+//!   [`crate::serve::ServeClock`] (`None` under the virtual clock), so
+//!   traces are bitwise-reproducible under virtual and discrete clocks:
+//!   twin-seeded runs produce identical [`Trace::digest`] values.
+//! * **Static dispatch** — [`Recorder`] is an enum, not a trait object:
+//!   the disabled arm is a branch on a matched variant that inlines to
+//!   nothing, so the off path stays bitwise-identical to an unwired
+//!   pipeline (pinned by the serve baselines) and the on path costs
+//!   <5% (enforced by the `runtime_obs_pipeline_*` bench gate).
+//! * **Bounded rings** — full lanes evict oldest-first and count the
+//!   loss ([`Trace::dropped`]); recording can never stall serving.
+//!
+//! Exporters: [`chrome`] (Chrome `trace_event` JSON for
+//! `chrome://tracing` / Perfetto, plus a JSONL event log) and
+//! [`expose`] (Prometheus-style text metrics).  `dynasplit serve
+//! --trace/--metrics` writes them; `dynasplit trace` replays a saved
+//! trace into a per-request waterfall.
+
+pub mod chrome;
+pub mod event;
+pub mod expose;
+pub mod ring;
+pub mod span;
+
+pub use event::{breaker_code, net_code, trace_digest, EventKind, TraceEvent};
+pub use ring::EventRing;
+pub use span::{RequestSpan, SpanCounts, Trace};
+
+/// The always-available disabled recorder.  A `static` (not a `const`
+/// borrowed in place) because `&Recorder::Off` in argument position
+/// would be a dangling temporary: the `On` variant's box gives the enum
+/// drop glue, which blocks const promotion.
+pub static OFF: Recorder = Recorder::Off;
+
+/// Recorder handle threaded through the pipeline.  Enum, not `dyn`:
+/// the off arm must compile to a predictable branch the optimizer can
+/// sink, keeping the disabled pipeline bitwise-identical to PR 8.
+pub enum Recorder {
+    /// No-op: every emit is a single discriminant test.
+    Off,
+    /// Live flight recorder (boxed: the handle stays one word + tag).
+    On(Box<FlightRecorder>),
+}
+
+impl Recorder {
+    /// A live recorder laned for a pipeline of `workers` workers and
+    /// `shards` feeder shards, `capacity` events per lane.
+    pub fn flight(workers: usize, shards: usize, capacity: usize) -> Recorder {
+        Recorder::On(Box::new(FlightRecorder::new(workers, shards, capacity)))
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(self, Recorder::On(_))
+    }
+
+    /// Record a data-plane event from worker `worker`.
+    #[inline]
+    pub fn emit_worker(&self, worker: usize, at_ms: Option<f64>, kind: EventKind) {
+        if let Recorder::On(fr) = self {
+            fr.ring.record(worker, TraceEvent { at_ms, kind });
+        }
+    }
+
+    /// Record an admission event from the feeder of `shard`.
+    #[inline]
+    pub fn emit_feeder(&self, shard: usize, at_ms: Option<f64>, kind: EventKind) {
+        if let Recorder::On(fr) = self {
+            fr.ring.record(fr.workers + shard, TraceEvent { at_ms, kind });
+        }
+    }
+
+    /// Record a control-plane event (swap, drift, re-solve, breaker).
+    #[inline]
+    pub fn emit_control(&self, at_ms: Option<f64>, kind: EventKind) {
+        if let Recorder::On(fr) = self {
+            fr.ring.record(fr.workers + fr.shards, TraceEvent { at_ms, kind });
+        }
+    }
+
+    /// Drain the recording into a [`Trace`] (`None` when disabled).
+    /// Call after the pipeline's workers have joined so the lane
+    /// contents are exact.
+    pub fn take(&self) -> Option<Trace> {
+        match self {
+            Recorder::Off => None,
+            Recorder::On(fr) => Some(Trace {
+                workers: fr.workers,
+                shards: fr.shards,
+                dropped: fr.ring.dropped(),
+                lanes: fr.ring.drain(),
+            }),
+        }
+    }
+}
+
+/// The live recorder: a lane per worker, then a lane per feeder shard,
+/// then one control lane — writers on different lanes never contend.
+pub struct FlightRecorder {
+    ring: EventRing,
+    workers: usize,
+    shards: usize,
+}
+
+impl FlightRecorder {
+    /// Default per-lane capacity: enough for every event of a
+    /// 10^4-request run on one lane, small enough to stay cache-light.
+    pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+    pub fn new(workers: usize, shards: usize, capacity: usize) -> FlightRecorder {
+        assert!(workers >= 1, "need at least one worker lane");
+        assert!(shards >= 1, "need at least one feeder lane");
+        FlightRecorder { ring: EventRing::new(workers + shards + 1, capacity), workers, shards }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_recorder_is_disabled_and_yields_no_trace() {
+        assert!(!OFF.enabled());
+        OFF.emit_worker(0, None, EventKind::Admitted { id: 0 });
+        OFF.emit_feeder(0, None, EventKind::Shed { id: 1 });
+        OFF.emit_control(None, EventKind::ReSolve { epoch: 0 });
+        assert!(OFF.take().is_none());
+    }
+
+    #[test]
+    fn lanes_route_workers_feeders_and_control_disjointly() {
+        let r = Recorder::flight(2, 2, 64);
+        assert!(r.enabled());
+        r.emit_worker(1, Some(5.0), EventKind::Dispatched { id: 3, worker: 1, batch: 1 });
+        r.emit_feeder(0, Some(1.0), EventKind::Admitted { id: 3 });
+        r.emit_feeder(1, Some(2.0), EventKind::Admitted { id: 4 });
+        r.emit_control(None, EventKind::SwapInstalled { epoch: 1, digest: 9 });
+        let trace = r.take().unwrap();
+        assert_eq!((trace.workers, trace.shards), (2, 2));
+        assert_eq!(trace.lanes.len(), 5, "workers + shards + control");
+        assert!(trace.lanes[0].is_empty());
+        assert_eq!(trace.lanes[1].len(), 1, "worker 1");
+        assert_eq!(trace.lanes[2].len(), 1, "feeder shard 0");
+        assert_eq!(trace.lanes[3].len(), 1, "feeder shard 1");
+        assert_eq!(trace.lanes[4].len(), 1, "control");
+        assert_eq!(trace.dropped, 0);
+        // take() drains: a second take yields an empty trace
+        assert!(r.take().unwrap().is_empty());
+    }
+
+    #[test]
+    fn twin_recordings_digest_identically() {
+        let record = |r: &Recorder| {
+            r.emit_feeder(0, None, EventKind::Admitted { id: 0 });
+            r.emit_feeder(0, None, EventKind::Queued { id: 0, shard: 0 });
+            r.emit_worker(0, None, EventKind::Dispatched { id: 0, worker: 0, batch: 1 });
+            r.emit_worker(0, None, EventKind::Done { id: 0, attempts: 1, degraded: false });
+        };
+        let (a, b) = (Recorder::flight(1, 1, 64), Recorder::flight(1, 1, 64));
+        record(&a);
+        record(&b);
+        assert_eq!(a.take().unwrap().digest(), b.take().unwrap().digest());
+    }
+}

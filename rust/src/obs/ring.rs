@@ -1,0 +1,146 @@
+//! Per-lane bounded event rings — the flight recorder's storage.
+//!
+//! Same lock-light discipline as [`crate::adapt::Telemetry`]
+//! (DESIGN.md §11/§16): one mutex-protected `VecDeque` per *lane* (a
+//! worker, a feeder shard, or the control plane), so recording an event
+//! contends only with drains of the same lane, never with other lanes.
+//! Rings are bounded: when a lane is full the **oldest** event is
+//! dropped and counted — a slow exporter can lose history, never stall
+//! serving and never grow without bound.  `recorded()`/`dropped()` are
+//! relaxed-atomic mirrors, pollable without touching any ring mutex.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::sync::lock_clean;
+
+use super::event::TraceEvent;
+
+struct Lane {
+    ring: Mutex<VecDeque<TraceEvent>>,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Fixed set of bounded event lanes.
+pub struct EventRing {
+    lanes: Vec<Lane>,
+    capacity: usize,
+}
+
+impl EventRing {
+    /// `lanes` rings of `capacity` events each.
+    pub fn new(lanes: usize, capacity: usize) -> EventRing {
+        assert!(lanes >= 1, "need at least one lane");
+        assert!(capacity >= 1, "ring capacity must be >= 1");
+        EventRing {
+            lanes: (0..lanes)
+                .map(|_| Lane {
+                    ring: Mutex::new(VecDeque::with_capacity(capacity.min(4096))),
+                    recorded: AtomicU64::new(0),
+                    dropped: AtomicU64::new(0),
+                })
+                .collect(),
+            capacity,
+        }
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Append `event` to `lane`, evicting the oldest event if full.
+    pub fn record(&self, lane: usize, event: TraceEvent) {
+        let slot = &self.lanes[lane];
+        let mut ring = lock_clean(&slot.ring);
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            slot.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(event);
+        slot.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drain every lane in lane order, each lane in ring (FIFO) order.
+    pub fn drain(&self) -> Vec<Vec<TraceEvent>> {
+        self.lanes
+            .iter()
+            .map(|slot| lock_clean(&slot.ring).drain(..).collect())
+            .collect()
+    }
+
+    /// Events recorded so far (lock-free; exact after workers join).
+    pub fn recorded(&self) -> u64 {
+        self.lanes.iter().map(|s| s.recorded.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Events evicted by full rings so far (lock-free).
+    pub fn dropped(&self) -> u64 {
+        self.lanes.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventKind;
+
+    fn ev(id: usize) -> TraceEvent {
+        TraceEvent { at_ms: None, kind: EventKind::Admitted { id } }
+    }
+
+    #[test]
+    fn lanes_drain_in_order_and_independently() {
+        let ring = EventRing::new(3, 8);
+        ring.record(0, ev(0));
+        ring.record(2, ev(2));
+        ring.record(0, ev(1));
+        let lanes = ring.drain();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(
+            lanes[0].iter().map(|e| e.kind.request_id().unwrap()).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        assert!(lanes[1].is_empty());
+        assert_eq!(lanes[2].len(), 1);
+        assert_eq!(ring.recorded(), 3);
+        // drain is destructive
+        assert!(ring.drain().iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn full_ring_drops_oldest_and_counts() {
+        let ring = EventRing::new(1, 2);
+        for id in 0..5 {
+            ring.record(0, ev(id));
+        }
+        assert_eq!(ring.recorded(), 5);
+        assert_eq!(ring.dropped(), 3);
+        let lanes = ring.drain();
+        assert_eq!(
+            lanes[0].iter().map(|e| e.kind.request_id().unwrap()).collect::<Vec<_>>(),
+            vec![3, 4],
+            "newest events survive"
+        );
+    }
+
+    #[test]
+    fn counters_poll_lock_free_while_a_ring_is_held() {
+        let ring = std::sync::Arc::new(EventRing::new(1, 8));
+        ring.record(0, ev(0));
+        let r2 = ring.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let hostage = std::thread::spawn(move || {
+            let _guard = lock_clean(&r2.lanes[0].ring);
+            tx.send(()).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        rx.recv().unwrap();
+        let sw = crate::serve::clock::Stopwatch::start();
+        assert_eq!(ring.recorded(), 1);
+        assert_eq!(ring.dropped(), 0);
+        assert!(sw.elapsed_ms() < 40.0, "counter polling blocked on a ring mutex");
+        hostage.join().unwrap();
+    }
+}

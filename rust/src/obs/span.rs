@@ -1,0 +1,331 @@
+//! Span reconstruction: drained lanes → per-request spans + counts.
+//!
+//! A drained trace is a set of per-lane event streams; one request's
+//! events may be split across a feeder lane (`Admitted`/`Queued`) and a
+//! worker lane (everything else).  [`Trace::spans`] regroups them by
+//! request id and orders each span by
+//! [`crate::obs::event::EventKind::phase_rank`] (then attempt number) —
+//! timestamps may be absent under the virtual clock, and the lifecycle
+//! order is already total without them.  [`Trace::span_counts`] reduces
+//! the spans to the outcome histogram the trace↔report reconciliation
+//! test compares against every [`crate::serve::ServeReport`] counter.
+
+use crate::fault::BreakerState;
+use crate::space::Network;
+
+use super::event::{trace_digest, EventKind, TraceEvent};
+
+/// A drained flight recording: per-lane event streams plus the lane
+/// layout (`workers` worker lanes, then `shards` feeder lanes, then one
+/// control lane) and the recorder's overflow counter.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub workers: usize,
+    pub shards: usize,
+    /// `workers + shards + 1` lanes, each in ring (FIFO) order.
+    pub lanes: Vec<Vec<TraceEvent>>,
+    /// Events evicted by full rings before the drain (the trace is
+    /// complete iff this is 0).
+    pub dropped: u64,
+}
+
+/// One request's reconstructed lifecycle.
+#[derive(Debug, Clone)]
+pub struct RequestSpan {
+    pub id: usize,
+    /// Phase-ordered events (admission → queue → dispatch → attempts →
+    /// terminal).
+    pub events: Vec<TraceEvent>,
+}
+
+impl RequestSpan {
+    /// The span-closing event, if the trace captured one.
+    pub fn terminal(&self) -> Option<&TraceEvent> {
+        self.events.iter().find(|e| e.kind.is_terminal())
+    }
+
+    /// Dispatch attempts this request experienced (from its terminal
+    /// when present — `Done`/`FailedRetry` carry the authoritative
+    /// count — else the highest `Attempt` event seen; 0 before any
+    /// dispatch).
+    pub fn attempts(&self) -> u32 {
+        match self.terminal().map(|e| e.kind) {
+            Some(EventKind::Done { attempts, .. })
+            | Some(EventKind::FailedRetry { attempts, .. }) => attempts,
+            _ => self
+                .events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    EventKind::Attempt { attempt, .. } => Some(attempt),
+                    _ => None,
+                })
+                .max()
+                .unwrap_or(0),
+        }
+    }
+
+    /// Worker that dispatched it (`None` if it never left the queue).
+    pub fn worker(&self) -> Option<usize> {
+        self.events.iter().find_map(|e| match e.kind {
+            EventKind::Dispatched { worker, .. } => Some(worker),
+            _ => None,
+        })
+    }
+
+    /// Home shard it queued on (`None` if shed before admission).
+    pub fn shard(&self) -> Option<usize> {
+        self.events.iter().find_map(|e| match e.kind {
+            EventKind::Queued { shard, .. } => Some(shard),
+            _ => None,
+        })
+    }
+
+    /// `(first, last)` timestamps over the span's stamped events
+    /// (`None` under the virtual clock).
+    pub fn bounds_ms(&self) -> Option<(f64, f64)> {
+        let stamped: Vec<f64> = self.events.iter().filter_map(|e| e.at_ms).collect();
+        let first = stamped.iter().copied().fold(f64::INFINITY, f64::min);
+        let last = stamped.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if stamped.is_empty() {
+            None
+        } else {
+            Some((first, last))
+        }
+    }
+}
+
+/// Per-outcome span histogram; field names follow the
+/// [`crate::serve::ServeReport`] counters they reconcile with.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanCounts {
+    /// Spans with an `Admitted` event.
+    pub admitted: usize,
+    /// Terminal `Done` (first-try and retried alike).
+    pub done: usize,
+    /// Terminal `Done` with `attempts > 1` (subset of `done`).
+    pub retried: usize,
+    /// Terminal `Done` with `degraded` (subset of `done`).
+    pub degraded_served: usize,
+    pub failed_retry: usize,
+    pub exec_failed: usize,
+    pub rejected_policy: usize,
+    pub rejected_full: usize,
+    pub shed: usize,
+    pub expired: usize,
+    pub unknown_net: usize,
+}
+
+impl SpanCounts {
+    /// Terminal events of every class (should equal the total request
+    /// count: the zero-lost-requests conservation check).
+    pub fn terminals(&self) -> usize {
+        self.done
+            + self.failed_retry
+            + self.exec_failed
+            + self.rejected_policy
+            + self.rejected_full
+            + self.shed
+            + self.expired
+            + self.unknown_net
+    }
+}
+
+impl Trace {
+    /// FNV-1a digest over lanes in order, events in ring order,
+    /// timestamps folded bitwise (see [`trace_digest`]).
+    pub fn digest(&self) -> u64 {
+        trace_digest(self.lanes.iter().map(Vec::as_slice))
+    }
+
+    /// All events across lanes, in lane order.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.lanes.iter().flatten()
+    }
+
+    /// Total recorded events still in the trace.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reconstruct per-request spans, sorted by request id, each span
+    /// phase-ordered (stable within a phase: attempt number breaks
+    /// `Attempt`/`Backoff` ties, ring order the rest).
+    pub fn spans(&self) -> Vec<RequestSpan> {
+        let mut ids: Vec<usize> = self.events().filter_map(|e| e.kind.request_id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.into_iter()
+            .map(|id| {
+                let mut events: Vec<TraceEvent> = self
+                    .events()
+                    .filter(|e| e.kind.request_id() == Some(id))
+                    .copied()
+                    .collect();
+                events.sort_by_key(|e| {
+                    let attempt = match e.kind {
+                        EventKind::Attempt { attempt, .. }
+                        | EventKind::Backoff { attempt, .. } => attempt,
+                        _ => 0,
+                    };
+                    (e.kind.phase_rank(), attempt)
+                });
+                RequestSpan { id, events }
+            })
+            .collect()
+    }
+
+    /// Outcome histogram over the reconstructed spans.
+    pub fn span_counts(&self) -> SpanCounts {
+        let mut c = SpanCounts::default();
+        for span in self.spans() {
+            if span.events.iter().any(|e| matches!(e.kind, EventKind::Admitted { .. })) {
+                c.admitted += 1;
+            }
+            match span.terminal().map(|e| e.kind) {
+                Some(EventKind::Done { attempts, degraded, .. }) => {
+                    c.done += 1;
+                    if attempts > 1 {
+                        c.retried += 1;
+                    }
+                    if degraded {
+                        c.degraded_served += 1;
+                    }
+                }
+                Some(EventKind::FailedRetry { .. }) => c.failed_retry += 1,
+                Some(EventKind::ExecFailed { .. }) => c.exec_failed += 1,
+                Some(EventKind::RejectedPolicy { .. }) => c.rejected_policy += 1,
+                Some(EventKind::RejectedFull { .. }) => c.rejected_full += 1,
+                Some(EventKind::Shed { .. }) => c.shed += 1,
+                Some(EventKind::Expired { .. }) => c.expired += 1,
+                Some(EventKind::UnknownNet { .. }) => c.unknown_net += 1,
+                _ => {}
+            }
+        }
+        c
+    }
+
+    /// Final breaker state per network (from the last
+    /// `BreakerTransition` on the control lane), in control-lane order.
+    pub fn breaker_states(&self) -> Vec<(Network, BreakerState)> {
+        let mut last: Vec<(Network, BreakerState)> = Vec::new();
+        for ev in self.events() {
+            if let EventKind::BreakerTransition { net, to, .. } = ev.kind {
+                match last.iter_mut().find(|(n, _)| *n == net) {
+                    Some(slot) => slot.1 = to,
+                    None => last.push((net, to)),
+                }
+            }
+        }
+        last
+    }
+
+    /// Control-plane events (swap/breaker/drift/re-solve) in lane order.
+    pub fn control_events(&self) -> Vec<&TraceEvent> {
+        self.events().filter(|e| e.kind.request_id().is_none()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind) -> TraceEvent {
+        TraceEvent { at_ms: None, kind }
+    }
+
+    fn at(t: f64, kind: EventKind) -> TraceEvent {
+        TraceEvent { at_ms: Some(t), kind }
+    }
+
+    /// One worker, one feeder shard, one control lane; request 0 done
+    /// after a retry, request 1 shed at admission, plus a hot-swap.
+    fn sample_trace() -> Trace {
+        let worker = vec![
+            ev(EventKind::Dispatched { id: 0, worker: 0, batch: 1 }),
+            ev(EventKind::Attempt { id: 0, attempt: 1 }),
+            ev(EventKind::Backoff { id: 0, attempt: 1, charged_ms: 20.0 }),
+            ev(EventKind::Attempt { id: 0, attempt: 2 }),
+            ev(EventKind::Done { id: 0, attempts: 2, degraded: false }),
+        ];
+        let feeder = vec![
+            ev(EventKind::Admitted { id: 0 }),
+            ev(EventKind::Queued { id: 0, shard: 0 }),
+            ev(EventKind::Shed { id: 1 }),
+        ];
+        let control = vec![ev(EventKind::SwapInstalled { epoch: 1, digest: 42 })];
+        Trace { workers: 1, shards: 1, lanes: vec![worker, feeder, control], dropped: 0 }
+    }
+
+    #[test]
+    fn spans_regroup_across_lanes_in_phase_order() {
+        let trace = sample_trace();
+        let spans = trace.spans();
+        assert_eq!(spans.len(), 2);
+        let s0 = &spans[0];
+        assert_eq!(s0.id, 0);
+        let names: Vec<&str> = s0.events.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(
+            names,
+            vec!["admitted", "queued", "dispatched", "attempt", "attempt", "backoff", "done"]
+        );
+        assert_eq!(s0.attempts(), 2);
+        assert_eq!(s0.worker(), Some(0));
+        assert_eq!(s0.shard(), Some(0));
+        assert_eq!(spans[1].terminal().unwrap().kind.name(), "shed");
+        assert_eq!(spans[1].worker(), None);
+    }
+
+    #[test]
+    fn span_counts_reconcile_and_conserve() {
+        let c = sample_trace().span_counts();
+        assert_eq!(c.admitted, 1);
+        assert_eq!(c.done, 1);
+        assert_eq!(c.retried, 1);
+        assert_eq!(c.shed, 1);
+        assert_eq!(c.terminals(), 2, "every request reaches exactly one terminal");
+    }
+
+    #[test]
+    fn twin_traces_share_a_digest_and_divergent_ones_do_not() {
+        let a = sample_trace();
+        let b = sample_trace();
+        assert_eq!(a.digest(), b.digest());
+        let mut c = sample_trace();
+        c.lanes[0].pop();
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn breaker_states_keep_the_last_transition_per_net() {
+        let mut trace = sample_trace();
+        trace.lanes[2].push(ev(EventKind::BreakerTransition {
+            net: Network::Vgg16,
+            from: BreakerState::Closed,
+            to: BreakerState::Open,
+        }));
+        trace.lanes[2].push(ev(EventKind::BreakerTransition {
+            net: Network::Vgg16,
+            from: BreakerState::Open,
+            to: BreakerState::HalfOpen,
+        }));
+        assert_eq!(trace.breaker_states(), vec![(Network::Vgg16, BreakerState::HalfOpen)]);
+        assert_eq!(trace.control_events().len(), 3);
+    }
+
+    #[test]
+    fn bounds_use_stamped_events_only() {
+        let lanes = vec![vec![
+            at(10.0, EventKind::Admitted { id: 3 }),
+            ev(EventKind::Queued { id: 3, shard: 0 }),
+            at(35.5, EventKind::Done { id: 3, attempts: 1, degraded: false }),
+        ]];
+        let trace = Trace { workers: 1, shards: 0, lanes, dropped: 0 };
+        let spans = trace.spans();
+        assert_eq!(spans[0].bounds_ms(), Some((10.0, 35.5)));
+        assert_eq!(sample_trace().spans()[0].bounds_ms(), None, "virtual clock: no bounds");
+    }
+}

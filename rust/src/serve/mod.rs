@@ -75,6 +75,7 @@ use crate::adapt::{AdmissionGate, ConfigStore, StoreMap, Telemetry};
 use crate::controller::policy::{ConfigSet, PolicySet, SchedulingPolicy};
 use crate::controller::Executor;
 use crate::fault::BreakerMap;
+use crate::obs::{EventKind, Recorder};
 use crate::util::rng::Pcg32;
 use crate::workload::TimedRequest;
 
@@ -264,6 +265,7 @@ where
         gate,
         RetryPolicy::none(),
         None,
+        &crate::obs::OFF,
         factory,
     )
 }
@@ -279,6 +281,16 @@ where
 /// `run_pipeline_stores` is exactly this function with
 /// [`RetryPolicy::none`] and no breakers, so every pre-fault baseline
 /// is bitwise unchanged.
+///
+/// `recorder` is the flight-recorder handle (DESIGN.md §16):
+/// [`crate::obs::OFF`] keeps the pipeline bitwise-identical to an
+/// unwired one; [`Recorder::flight`] captures every request's lifecycle
+/// into per-lane bounded rings — drain it with [`Recorder::take`] after
+/// this returns.  Feeder admission events are stamped at the request's
+/// *arrival* time (the open-loop feeder's logical admission instant,
+/// deterministic under the discrete clock where `pace_to` is a no-op
+/// and feeder-side `now` reads would race worker completion advances);
+/// worker events are stamped at the experiment clock's now.
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline_resilient<F, E>(
     stores: &StoreMap<'_>,
@@ -289,6 +301,7 @@ pub fn run_pipeline_resilient<F, E>(
     gate: Option<&AdmissionGate>,
     retry: RetryPolicy,
     breaker: Option<&BreakerMap>,
+    recorder: &Recorder,
     factory: F,
 ) -> Result<ServeReport>
 where
@@ -352,6 +365,7 @@ where
                     executor,
                     telemetry,
                     resilience: Resilience::new(retry, breaker),
+                    recorder,
                     records: Vec::new(),
                 };
                 worker.run();
@@ -369,13 +383,21 @@ where
         if cfg.shards == 1 {
             for tr in timeline {
                 clock.pace_to(tr.arrival_ms);
+                // admission stamps: arrival time under real/discrete
+                // clocks (see the function doc), None in virtual time
+                let at = clock.now_ms().map(|_| tr.arrival_ms);
                 if let Some(gate) = gate {
                     if !gate.admit(queue.depth(), tr.request.qos_ms) {
+                        recorder.emit_feeder(0, at, EventKind::Shed { id: tr.request.id });
                         records.push(ServeRecord::shed_by_admission(tr));
                         continue;
                     }
                 }
-                if !queue.offer(tr.clone()) {
+                if queue.offer(tr.clone()) {
+                    recorder.emit_feeder(0, at, EventKind::Admitted { id: tr.request.id });
+                    recorder.emit_feeder(0, at, EventKind::Queued { id: tr.request.id, shard: 0 });
+                } else {
+                    recorder.emit_feeder(0, at, EventKind::RejectedFull { id: tr.request.id });
                     records.push(ServeRecord::rejected_queue_full(tr));
                 }
             }
@@ -391,15 +413,31 @@ where
                             continue;
                         }
                         clock.pace_to(tr.arrival_ms);
+                        let at = clock.now_ms().map(|_| tr.arrival_ms);
                         if let Some(gate) = gate {
                             // per-shard backpressure: the gate judges
                             // this shard's own backlog
                             if !gate.admit(queue.depth_of(shard), tr.request.qos_ms) {
+                                recorder
+                                    .emit_feeder(shard, at, EventKind::Shed { id: tr.request.id });
                                 shed.push(ServeRecord::shed_by_admission(tr));
                                 continue;
                             }
                         }
-                        if !queue.offer_to(shard, tr.clone()) {
+                        if queue.offer_to(shard, tr.clone()) {
+                            recorder
+                                .emit_feeder(shard, at, EventKind::Admitted { id: tr.request.id });
+                            recorder.emit_feeder(
+                                shard,
+                                at,
+                                EventKind::Queued { id: tr.request.id, shard },
+                            );
+                        } else {
+                            recorder.emit_feeder(
+                                shard,
+                                at,
+                                EventKind::RejectedFull { id: tr.request.id },
+                            );
                             shed.push(ServeRecord::rejected_queue_full(tr));
                         }
                     }
@@ -435,6 +473,7 @@ where
         records,
         cache,
         queue: queue.stats(),
+        shard_queue: (0..cfg.shards).map(|s| queue.stats_of(s)).collect(),
         workers: cfg.workers,
         shards: cfg.shards,
         wall_ms: wall.elapsed_ms(),

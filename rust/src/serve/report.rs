@@ -12,6 +12,7 @@
 
 use crate::metrics::{MetricSet, RequestRecord};
 use crate::space::{Config, Network};
+use crate::util::json::Json;
 use crate::workload::TimedRequest;
 
 use super::cache::CacheStats;
@@ -362,6 +363,10 @@ pub struct ServeReport {
     /// Queue counters summed over shards (peak depth is the max shard
     /// peak, not a sum — a depth is an instantaneous gauge).
     pub queue: QueueStats,
+    /// Per-shard queue counters in shard order (`shards` entries; the
+    /// aggregate above is their sum / max).  Lets the metrics
+    /// exposition report peak depth per shard without re-running.
+    pub shard_queue: Vec<QueueStats>,
     pub workers: usize,
     /// Admission-queue shards the run was partitioned over (1 = the
     /// unsharded identity configuration).
@@ -723,6 +728,97 @@ impl ServeReport {
             shard_suffix,
         )
     }
+
+    /// Machine-readable counterpart of [`ServeReport::summary_line`]:
+    /// every count in the JSON comes from the same accessor the summary
+    /// line prints, so the two always reconcile (`dynasplit serve
+    /// --report-json` writes this; the obs reconciliation test checks
+    /// it against the flight recorder's span counts).
+    pub fn to_json(&self) -> Json {
+        let n = |x: usize| Json::num(x as f64);
+        let queue_json = |q: &QueueStats| {
+            Json::obj(vec![
+                ("admitted", n(q.admitted)),
+                ("rejected", n(q.rejected)),
+                ("expired", n(q.expired)),
+                ("peak_depth", n(q.peak_depth)),
+            ])
+        };
+        let nets = self
+            .breakdown()
+            .into_iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("net", Json::str(b.net.name())),
+                    ("requests", n(b.requests)),
+                    ("done", n(b.done)),
+                    ("qos_hits", n(b.qos_hits)),
+                    ("unknown_network", n(b.unknown_network)),
+                    ("executor_failed", n(b.executor_failed)),
+                    ("retried", n(b.retried)),
+                    ("degraded_served", n(b.degraded_served)),
+                    ("energy_sum_j", Json::num(b.energy_sum_j)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        let shard_rows = self
+            .shard_breakdown()
+            .into_iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("shard", n(b.shard)),
+                    ("requests", n(b.requests)),
+                    ("done", n(b.done)),
+                    ("qos_hits", n(b.qos_hits)),
+                    ("expired", n(b.expired)),
+                    ("rejected_queue_full", n(b.rejected_queue_full)),
+                    ("shed_by_admission", n(b.shed_by_admission)),
+                    ("energy_sum_j", Json::num(b.energy_sum_j)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("requests", n(self.records.len())),
+            ("workers", n(self.workers)),
+            ("shards", n(self.shards)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            (
+                "counts",
+                Json::obj(vec![
+                    ("done", n(self.completed())),
+                    ("rejected_queue_full", n(self.rejected_queue_full())),
+                    ("shed_by_admission", n(self.shed_by_admission())),
+                    ("expired_in_queue", n(self.expired_in_queue())),
+                    ("rejected_by_policy", n(self.rejected_by_policy())),
+                    ("unknown_network", n(self.unknown_network())),
+                    ("executor_failed", n(self.executor_failed())),
+                    ("retry_failed", n(self.retry_failed())),
+                    ("retried", n(self.retried())),
+                    ("degraded_served", n(self.degraded_served())),
+                    ("coalesced", n(self.coalesced())),
+                ]),
+            ),
+            ("qos_hit_rate", Json::num(self.qos_hit_rate())),
+            ("latency_p50_ms", Json::num(self.latency_p50())),
+            ("latency_p99_ms", Json::num(self.latency_p99())),
+            ("mean_energy_j", Json::num(self.mean_energy_j())),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+            ("store_epochs", n(self.epochs_observed().len().max(1))),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", n(self.cache.hits)),
+                    ("reconfigs", n(self.cache.reconfigs)),
+                    ("apply_ms_total", Json::num(self.cache.apply_ms_total)),
+                ]),
+            ),
+            ("queue", queue_json(&self.queue)),
+            ("shard_queue", Json::Arr(self.shard_queue.iter().map(queue_json).collect())),
+            ("nets", Json::Arr(nets)),
+            ("shard_breakdown", Json::Arr(shard_rows)),
+            ("summary", Json::str(self.summary_line())),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -828,6 +924,7 @@ mod tests {
             records,
             cache: CacheStats { hits: 2, reconfigs: 1, apply_ms_total: 50.0 },
             queue: QueueStats { admitted: 3, rejected: 1, expired: 0, peak_depth: 2 },
+            shard_queue: vec![QueueStats::default(); shards],
             workers: 2,
             shards,
             wall_ms: 2000.0,
@@ -836,6 +933,24 @@ mod tests {
 
     fn report(records: Vec<ServeRecord>) -> ServeReport {
         report_sharded(records, 1)
+    }
+
+    #[test]
+    fn to_json_reconciles_with_summary_counts() {
+        let r = report(vec![done(0, 100.0, 90.0, 2.0, false), shed(1), shed(2)]);
+        let j = r.to_json();
+        let counts = j.get("counts").unwrap();
+        assert_eq!(counts.get("done").unwrap().as_usize().unwrap(), r.completed());
+        assert_eq!(
+            counts.get("rejected_queue_full").unwrap().as_usize().unwrap(),
+            r.rejected_queue_full()
+        );
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), r.records.len());
+        assert_eq!(j.get("shard_queue").unwrap().as_arr().unwrap().len(), r.shard_queue.len());
+        assert_eq!(j.get("summary").unwrap().as_str().unwrap(), r.summary_line());
+        // the document round-trips through the encoder
+        let back = Json::parse(&j.encode()).unwrap();
+        assert_eq!(back.get("counts").unwrap().get("done").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

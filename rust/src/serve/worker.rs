@@ -50,7 +50,8 @@
 
 use crate::adapt::{Sample, StoreMap, StoreSnapshot, Telemetry};
 use crate::controller::{Executor, PolicyDecision, PolicySet};
-use crate::fault::{classify, BreakerMap, BreakerRoute, FaultClass};
+use crate::fault::{classify, BreakerMap, BreakerRoute, BreakerState, FaultClass};
+use crate::obs::{EventKind, Recorder};
 use crate::space::Network;
 use crate::workload::Request;
 
@@ -158,6 +159,14 @@ impl<'a> Resilience<'a> {
             map.with(net, |b| b.abort_probe(route));
         }
     }
+
+    /// Current breaker state for `net` (`None` when breakers are
+    /// disabled or the net is unmapped).  Read-only: the flight
+    /// recorder samples it around every breaker interaction to emit
+    /// [`EventKind::BreakerTransition`] control events.
+    pub fn breaker_state(&self, net: Network) -> Option<BreakerState> {
+        self.breaker.and_then(|map| map.state(net))
+    }
 }
 
 /// One serving worker's state for a pipeline run.
@@ -188,6 +197,9 @@ pub struct Worker<'a, E: Executor, Q: RequestSource = AdmissionQueue> {
     /// Recovery configuration: deadline-budgeted retries plus optional
     /// circuit breakers ([`Resilience::none`] = legacy one-shot shed).
     pub resilience: Resilience<'a>,
+    /// Flight-recorder handle ([`crate::obs::OFF`] = tracing disabled;
+    /// every emit below is then a single discriminant test).
+    pub recorder: &'a Recorder,
     pub records: Vec<ServeRecord>,
 }
 
@@ -207,6 +219,11 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             };
             let net = first.request.net;
             if expired {
+                self.recorder.emit_worker(
+                    self.id,
+                    now,
+                    EventKind::Expired { id: first.request.id },
+                );
                 self.records.push(ServeRecord {
                     request_id: first.request.id,
                     net,
@@ -220,6 +237,11 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             // resolve the request's network to its own store; a request
             // no store serves is recorded, never misrouted
             let Some(store) = self.stores.get(net) else {
+                self.recorder.emit_worker(
+                    self.id,
+                    now,
+                    EventKind::UnknownNet { id: first.request.id },
+                );
                 self.records.push(ServeRecord {
                     request_id: first.request.id,
                     net,
@@ -237,7 +259,9 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             // the same snapshot — a policy restriction, not a separate
             // code path, so epoch coherence is untouched.
             let fresh = store.snapshot();
+            let breaker_before = self.breaker_probe(net);
             let route = self.resilience.route(net);
+            self.note_breaker(net, breaker_before, now);
             let degraded = route == BreakerRoute::Degraded;
             let snapshot = if degraded {
                 self.resilience.degraded_view(net, &fresh)
@@ -255,7 +279,14 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             let idx = match decision {
                 PolicyDecision::Run(idx) => idx,
                 PolicyDecision::Reject => {
+                    let before = self.breaker_probe(net);
                     self.resilience.abort(net, route);
+                    self.note_breaker(net, before, now);
+                    self.recorder.emit_worker(
+                        self.id,
+                        now,
+                        EventKind::RejectedPolicy { id: first.request.id },
+                    );
                     self.records.push(ServeRecord {
                         request_id: first.request.id,
                         net,
@@ -299,10 +330,25 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             // dispatch shed the batch on failure instead of panicking
             // (shed-not-crash, DESIGN.md §13): the pipeline keeps
             // serving and the report counts the loss.
+            // the batch is final: one dispatch event per member, with
+            // the coalesced batch size every member shares
+            for tr in &batch {
+                self.recorder.emit_worker(
+                    self.id,
+                    now,
+                    EventKind::Dispatched {
+                        id: tr.request.id,
+                        worker: self.id,
+                        batch: batch.len(),
+                    },
+                );
+            }
             let entry = &set.entries()[idx];
             let Some(cache) = self.caches.get_mut(net) else {
+                let before = self.breaker_probe(net);
                 self.resilience.abort(net, route);
-                self.shed_failed(&batch);
+                self.note_breaker(net, before, now);
+                self.shed_failed(&batch, now);
                 continue;
             };
             let apply_ms = cache.activate(&entry.config);
@@ -320,6 +366,13 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
             let mut last_class = FaultClass::Local;
             let outcomes = loop {
                 attempt += 1;
+                for tr in &batch {
+                    self.recorder.emit_worker(
+                        self.id,
+                        now,
+                        EventKind::Attempt { id: tr.request.id, attempt },
+                    );
+                }
                 let requests: Vec<&Request> = batch.iter().map(|tr| &tr.request).collect();
                 match self.executor.try_execute_batch(&requests, &entry.config) {
                     Ok(outcomes) => break Some(outcomes),
@@ -336,8 +389,25 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                         for tr in batch.drain(..) {
                             let remaining = clock.remaining_ms(&tr, now);
                             if remaining - penalty_ms - entry.latency_ms >= 0.0 {
+                                self.recorder.emit_worker(
+                                    self.id,
+                                    now,
+                                    EventKind::Backoff {
+                                        id: tr.request.id,
+                                        attempt,
+                                        charged_ms: penalty_ms,
+                                    },
+                                );
                                 survivors.push(tr);
                             } else {
+                                self.recorder.emit_worker(
+                                    self.id,
+                                    now,
+                                    EventKind::FailedRetry {
+                                        id: tr.request.id,
+                                        attempts: attempt,
+                                    },
+                                );
                                 self.records.push(ServeRecord {
                                     request_id: tr.request.id,
                                     net,
@@ -361,13 +431,20 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                 // final verdict: failure — the breaker only ever hears
                 // the post-retry outcome, so transient faults absorbed
                 // by retries never open it
+                let before = self.breaker_probe(net);
                 self.resilience.on_failure(net, route, last_class);
+                self.note_breaker(net, before, now);
                 if max_attempts == 1 {
                     // legacy one-shot path, bit-identical to pre-retry
                     // pipelines: shed as ExecutorFailed
-                    self.shed_failed(&batch);
+                    self.shed_failed(&batch, now);
                 } else {
                     for tr in &batch {
+                        self.recorder.emit_worker(
+                            self.id,
+                            now,
+                            EventKind::FailedRetry { id: tr.request.id, attempts: attempt },
+                        );
                         self.records.push(ServeRecord {
                             request_id: tr.request.id,
                             net,
@@ -380,7 +457,9 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                 }
                 continue;
             };
+            let before = self.breaker_probe(net);
             self.resilience.on_success(net, route, !entry.config.is_edge_only());
+            self.note_breaker(net, before, now);
             // hard check: a short outcome vector would silently drop
             // records for the batch tail via the zip below
             assert_eq!(outcomes.len(), batch.len(), "one outcome per batched request");
@@ -450,6 +529,13 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
                         degraded,
                     }
                 };
+                // completion stamp: the batch's simulated/real finish
+                // when the clock provides one, else the pop snapshot
+                self.recorder.emit_worker(
+                    self.id,
+                    finished_ms.or(now),
+                    EventKind::Done { id: tr.request.id, attempts: attempt, degraded },
+                );
                 self.records.push(ServeRecord {
                     request_id: tr.request.id,
                     net,
@@ -462,11 +548,36 @@ impl<'a, E: Executor, Q: RequestSource> Worker<'a, E, Q> {
         }
     }
 
+    /// Sample the breaker state ahead of a breaker interaction — only
+    /// when tracing is on, so the off path never takes the extra
+    /// breaker lock.
+    fn breaker_probe(&self, net: Network) -> Option<BreakerState> {
+        if self.recorder.enabled() {
+            self.resilience.breaker_state(net)
+        } else {
+            None
+        }
+    }
+
+    /// Emit a [`EventKind::BreakerTransition`] control event if the
+    /// breaker moved across the interaction that `before` was sampled
+    /// ahead of (via [`Worker::breaker_probe`]).
+    fn note_breaker(&self, net: Network, before: Option<BreakerState>, now: Option<f64>) {
+        if let (Some(from), Some(to)) = (before, self.resilience.breaker_state(net)) {
+            if from != to {
+                self.recorder
+                    .emit_control(now, EventKind::BreakerTransition { net, from, to });
+            }
+        }
+    }
+
     /// Record every request of a batch whose execution failed (missing
     /// cache binding or executor error) as
     /// [`ServeOutcome::ExecutorFailed`] — a shed, counted as a QoS miss.
-    fn shed_failed(&mut self, batch: &[crate::workload::TimedRequest]) {
+    fn shed_failed(&mut self, batch: &[crate::workload::TimedRequest], now: Option<f64>) {
         for tr in batch {
+            self.recorder
+                .emit_worker(self.id, now, EventKind::ExecFailed { id: tr.request.id });
             self.records.push(ServeRecord {
                 request_id: tr.request.id,
                 net: tr.request.net,
@@ -558,6 +669,7 @@ mod tests {
             executor: Toy { dispatches: 0 },
             telemetry: None,
             resilience: Resilience::none(),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         }
     }
@@ -733,6 +845,7 @@ mod tests {
             executor: BatchSpy { batches: Vec::new() },
             telemetry: None,
             resilience: Resilience::none(),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         };
         w.run();
@@ -820,6 +933,7 @@ mod tests {
             executor: AlwaysFails,
             telemetry: None,
             resilience: Resilience::none(),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         };
         w.run();
@@ -915,6 +1029,7 @@ mod tests {
             executor: FlakyToy { fails: 2, seen: 0 },
             telemetry: None,
             resilience: Resilience::new(RetryPolicy::budgeted(), None),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         };
         w.run();
@@ -953,6 +1068,7 @@ mod tests {
             executor: AlwaysFails,
             telemetry: None,
             resilience: Resilience::new(RetryPolicy::budgeted(), None),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         };
         w.run();
@@ -985,6 +1101,7 @@ mod tests {
             executor: FlakyToy { fails: 99, seen: 0 },
             telemetry: None,
             resilience: Resilience::new(RetryPolicy::budgeted(), None),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         };
         w.run();
@@ -1052,6 +1169,7 @@ mod tests {
             executor: CloudDown,
             telemetry: None,
             resilience: Resilience::new(RetryPolicy::none(), Some(&breakers)),
+            recorder: &crate::obs::OFF,
             records: Vec::new(),
         };
         w.run();
@@ -1117,6 +1235,7 @@ mod tests {
                 executor: CloudDown,
                 telemetry: None,
                 resilience: Resilience::new(RetryPolicy::none(), Some(&breakers)),
+                recorder: &crate::obs::OFF,
                 records: Vec::new(),
             };
             w.run();

@@ -104,6 +104,7 @@ fn run(plan: &FaultPlan, retry: RetryPolicy, with_breaker: bool, discrete: bool)
         None,
         retry,
         breakers.as_ref(),
+        &dynasplit::obs::OFF,
         |_| Ok(FaultInjector::new(SplitExec, plan.clone())),
     )
     .expect("chaos pipeline run");

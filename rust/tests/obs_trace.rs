@@ -1,0 +1,268 @@
+//! Flight-recorder integration tests (DESIGN.md §16, PR 9 acceptance).
+//!
+//! Drives the resilient pipeline through a seeded chaos scenario with
+//! the recorder live and asserts the observability contract end to end:
+//!
+//! 1. **Reconciliation** — span counts reconstructed from the trace
+//!    equal every [`ServeReport`] outcome counter, and the terminal
+//!    total conserves the request count (no request untraced, none
+//!    double-traced);
+//! 2. **Twin determinism** — identically-seeded runs produce
+//!    byte-identical trace digests (and JSONL exports) under the
+//!    virtual *and* the discrete-event clock;
+//! 3. **Non-interference** — the traced run's records are bitwise
+//!    equal to an untraced twin's, so wiring the recorder never
+//!    perturbs serving;
+//! 4. **Round-trip** — the Chrome `trace_event` export parses back to
+//!    a trace with the same digest.
+//!
+//! Determinism scoping: the twin-digest assertions pin `workers = 1`,
+//! `max_batch = 1`, `shards = 1`.  With more workers (or coalescing)
+//! the *report* stays deterministic but event interleaving across
+//! lanes — and, under the discrete clock, the feeder/worker
+//! composition race — may reorder ring contents between runs.
+
+use dynasplit::adapt::{ConfigStore, StoreMap};
+use dynasplit::controller::{ConfigSet, ExecOutcome, Executor, PaperPolicy};
+use dynasplit::fault::{BreakerMap, FaultInjector, FaultPlan};
+use dynasplit::obs::{chrome, EventKind, Recorder, SpanCounts, Trace};
+use dynasplit::serve::{run_pipeline_resilient, PipelineConfig, RetryPolicy, ServeReport};
+use dynasplit::solver::ParetoEntry;
+use dynasplit::space::{Config, Network, TpuMode};
+use dynasplit::workload::{Request, TimedRequest};
+
+const NET: Network = Network::Vgg16;
+const REQUESTS: usize = 60;
+const QOS_MS: f64 = 200.0;
+
+/// Cloud-preferred front with an edge-only fallback (same shape as the
+/// chaos_serving suite, so the scenario exercises retries, breaker
+/// transitions, and degraded completions).
+fn front() -> ConfigSet {
+    let entry = |split: usize, latency_ms: f64, energy_j: f64| ParetoEntry {
+        config: Config { net: NET, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split },
+        latency_ms,
+        energy_j,
+        accuracy: 0.95,
+    };
+    ConfigSet::new(vec![entry(3, 45.0, 1.5), entry(NET.num_layers(), 80.0, 5.0)])
+}
+
+struct SplitExec;
+
+impl Executor for SplitExec {
+    fn execute(&mut self, request: &Request, config: &Config) -> ExecOutcome {
+        let edge_only = config.split >= NET.num_layers();
+        ExecOutcome {
+            latency_ms: if edge_only { 80.0 } else { 45.0 } + (request.seed % 7) as f64,
+            energy_j: if edge_only { 5.0 } else { 1.5 },
+            edge_energy_j: if edge_only { 5.0 } else { 0.5 },
+            cloud_energy_j: if edge_only { 0.0 } else { 1.0 },
+            accuracy: 0.95,
+        }
+    }
+}
+
+fn timeline() -> Vec<TimedRequest> {
+    (0..REQUESTS)
+        .map(|i| TimedRequest {
+            request: Request { id: i, net: NET, qos_ms: QOS_MS, inferences: 1, seed: i as u64 },
+            arrival_ms: i as f64 * 100.0,
+        })
+        .collect()
+}
+
+/// Cloud-link outage over nominal ids 20..40 — enough sustained
+/// failure to trip the breaker and force degraded (edge-only) serving.
+fn outage_plan(seed: u64) -> FaultPlan {
+    FaultPlan { seed, id_ms: 1.0, link_down: vec![(20.0, 40.0)], ..FaultPlan::none() }
+}
+
+/// One traced chaos run: retry + breaker, recorder live.
+fn traced_run(discrete: bool) -> (ServeReport, Trace) {
+    let store = ConfigStore::new(front());
+    let stores = StoreMap::single(NET, &store);
+    let tl = timeline();
+    let cfg = PipelineConfig {
+        workers: 1,
+        queue_capacity: REQUESTS,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 7,
+        reuse: true,
+        shards: 1,
+        discrete,
+    };
+    let breakers = BreakerMap::new(&[NET], 3, 8);
+    let recorder = Recorder::flight(cfg.workers, cfg.shards, 1 << 12);
+    let plan = outage_plan(11);
+    let report = run_pipeline_resilient(
+        &stores,
+        &PaperPolicy,
+        &tl,
+        &cfg,
+        None,
+        None,
+        RetryPolicy::budgeted(),
+        Some(&breakers),
+        &recorder,
+        |_| Ok(FaultInjector::new(SplitExec, plan.clone())),
+    )
+    .expect("traced chaos run");
+    let trace = recorder.take().expect("live recorder drains a trace");
+    (report, trace)
+}
+
+/// Same run with the recorder off — the non-interference baseline.
+fn untraced_run(discrete: bool) -> ServeReport {
+    let store = ConfigStore::new(front());
+    let stores = StoreMap::single(NET, &store);
+    let tl = timeline();
+    let cfg = PipelineConfig {
+        workers: 1,
+        queue_capacity: REQUESTS,
+        max_batch: 1,
+        time_scale: 0.0,
+        seed: 7,
+        reuse: true,
+        shards: 1,
+        discrete,
+    };
+    let breakers = BreakerMap::new(&[NET], 3, 8);
+    let plan = outage_plan(11);
+    run_pipeline_resilient(
+        &stores,
+        &PaperPolicy,
+        &tl,
+        &cfg,
+        None,
+        None,
+        RetryPolicy::budgeted(),
+        Some(&breakers),
+        &dynasplit::obs::OFF,
+        |_| Ok(FaultInjector::new(SplitExec, plan.clone())),
+    )
+    .expect("untraced chaos run")
+}
+
+/// Every `ServeReport` outcome counter must equal its span-count twin.
+fn assert_reconciles(report: &ServeReport, counts: &SpanCounts) {
+    assert_eq!(counts.done, report.completed(), "done");
+    assert_eq!(counts.retried, report.retried(), "retried");
+    assert_eq!(counts.degraded_served, report.degraded_served(), "degraded");
+    assert_eq!(counts.failed_retry, report.retry_failed(), "retry_failed");
+    assert_eq!(counts.exec_failed, report.executor_failed(), "executor_failed");
+    assert_eq!(counts.rejected_policy, report.rejected_by_policy(), "rejected_by_policy");
+    assert_eq!(counts.rejected_full, report.rejected_queue_full(), "rejected_queue_full");
+    assert_eq!(counts.shed, report.shed_by_admission(), "shed_by_admission");
+    assert_eq!(counts.expired, report.expired_in_queue(), "expired_in_queue");
+    assert_eq!(counts.unknown_net, report.unknown_network(), "unknown_network");
+    assert_eq!(
+        counts.terminals(),
+        report.records.len(),
+        "every request reaches exactly one traced terminal"
+    );
+    assert_eq!(
+        counts.admitted,
+        report.records.len() - report.shed_by_admission() - report.rejected_queue_full(),
+        "admitted spans are exactly the queue-accepted requests"
+    );
+}
+
+#[test]
+fn trace_reconciles_with_report_under_virtual_clock() {
+    let (report, trace) = traced_run(false);
+    assert_eq!(trace.dropped, 0, "ring sized for the run: complete trace");
+    assert!(report.completed() > 0, "scenario serves traffic");
+    assert!(report.retried() > 0, "scenario exercises retries");
+    assert_reconciles(&report, &trace.span_counts());
+    // virtual clock: no event carries a timestamp
+    assert!(trace.events().all(|e| e.at_ms.is_none()));
+}
+
+#[test]
+fn trace_reconciles_with_report_under_discrete_clock() {
+    let (report, trace) = traced_run(true);
+    assert_eq!(trace.dropped, 0);
+    assert_reconciles(&report, &trace.span_counts());
+    // discrete clock: feeder admissions are stamped at arrival time,
+    // worker terminals at the event clock's now (DESIGN.md §16)
+    let stamped = trace.events().filter(|e| e.at_ms.is_some()).count();
+    assert!(stamped > 0, "discrete clock stamps events");
+    for ev in trace.events() {
+        if let (EventKind::Admitted { id }, Some(at)) = (ev.kind, ev.at_ms) {
+            assert_eq!(at, id as f64 * 100.0, "admission stamped at arrival");
+        }
+    }
+}
+
+#[test]
+fn twin_seeded_runs_digest_identically_under_both_clocks() {
+    for discrete in [false, true] {
+        let (ra, ta) = traced_run(discrete);
+        let (rb, tb) = traced_run(discrete);
+        assert_eq!(
+            ta.digest(),
+            tb.digest(),
+            "twin digests diverged (discrete = {discrete})"
+        );
+        assert_eq!(chrome::jsonl(&ta), chrome::jsonl(&tb), "byte-identical event logs");
+        assert_eq!(format!("{:?}", ra.records), format!("{:?}", rb.records));
+    }
+}
+
+#[test]
+fn recorder_never_perturbs_serving() {
+    for discrete in [false, true] {
+        let (traced, _) = traced_run(discrete);
+        let untraced = untraced_run(discrete);
+        assert_eq!(
+            format!("{:?}", traced.records),
+            format!("{:?}", untraced.records),
+            "traced and untraced twins must serve identically (discrete = {discrete})"
+        );
+        assert_eq!(traced.summary_line(), untraced.summary_line());
+    }
+}
+
+#[test]
+fn chrome_export_round_trips_the_digest() {
+    let (_, trace) = traced_run(true);
+    let doc = chrome::chrome_trace(&trace);
+    let back = chrome::parse_trace(&doc).expect("export parses back");
+    assert_eq!(back.digest(), trace.digest());
+    assert_eq!(back.span_counts(), trace.span_counts());
+}
+
+#[test]
+fn breaker_transitions_land_on_the_control_lane() {
+    let (report, trace) = traced_run(false);
+    // the outage trips the breaker: transitions recorded, and the run
+    // serves degraded traffic while it is open
+    assert!(report.degraded_served() > 0, "outage forces degraded serving");
+    let transitions = trace
+        .control_events()
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::BreakerTransition { .. }))
+        .count();
+    assert!(transitions >= 2, "breaker opens and recovers");
+    assert!(!trace.breaker_states().is_empty());
+}
+
+#[test]
+fn to_json_report_reconciles_with_trace() {
+    let (report, trace) = traced_run(false);
+    let doc = report.to_json();
+    let counts = trace.span_counts();
+    let get = |k: &str| {
+        doc.get("counts")
+            .and_then(|c| c.get(k))
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|e| panic!("counts.{k}: {e}"))
+    };
+    assert_eq!(get("done"), counts.done);
+    assert_eq!(get("retried"), counts.retried);
+    assert_eq!(get("degraded_served"), counts.degraded_served);
+    assert_eq!(get("shed_by_admission"), counts.shed);
+    assert_eq!(get("expired_in_queue"), counts.expired);
+}

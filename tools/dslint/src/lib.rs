@@ -68,6 +68,12 @@ pub const RULES: &[(&str, &str)] = &[
          spin forever when the fault is persistent",
     ),
     (
+        "no-print-hot-path",
+        "println!/eprintln!/print!/eprint!/dbg! banned in non-test serve/, adapt/, \
+         fault/, obs/ code; the flight recorder and reports are the observability \
+         channels, stdout belongs to the CLI",
+    ),
+    (
         "malformed-allow",
         "dslint::allow(...) escapes must name a known rule and give a reason",
     ),
@@ -487,6 +493,10 @@ const DIGEST_MODULES: &[&str] = &[
     "rust/src/metrics/mod.rs",
     "rust/src/report/mod.rs",
     "rust/src/util/hash.rs",
+    "rust/src/obs/event.rs",
+    "rust/src/obs/span.rs",
+    "rust/src/obs/expose.rs",
+    "rust/src/obs/chrome.rs",
 ];
 
 fn in_hot_path(rel: &str) -> bool {
@@ -938,6 +948,50 @@ fn rule_bounded_retry(ctx: &mut Ctx<'_>) {
     }
 }
 
+/// Modules whose non-test code must stay print-free: the serving data
+/// plane, the adaptation loop, the fault layer, and the observability
+/// layer itself.  A stray `println!` there corrupts exposition output
+/// piped to stdout, breaks twin-run byte-comparisons, and hides state
+/// from the flight recorder, which is the sanctioned channel.
+const PRINT_QUIET_PATHS: &[&str] =
+    &["rust/src/serve/", "rust/src/adapt/", "rust/src/fault/", "rust/src/obs/"];
+
+fn rule_no_print(ctx: &mut Ctx<'_>) {
+    if !PRINT_QUIET_PATHS.iter().any(|p| ctx.rel.starts_with(p)) {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        let pos = ctx.toks[i].start;
+        if ctx.is_test_code(pos) {
+            continue;
+        }
+        let which = if ctx.is_ident(i, "println") {
+            "println"
+        } else if ctx.is_ident(i, "eprintln") {
+            "eprintln"
+        } else if ctx.is_ident(i, "print") {
+            "print"
+        } else if ctx.is_ident(i, "eprint") {
+            "eprint"
+        } else if ctx.is_ident(i, "dbg") {
+            "dbg"
+        } else {
+            continue;
+        };
+        if ctx.is_punct(i + 1, b'!') {
+            ctx.emit(
+                pos,
+                "no-print-hot-path",
+                format!(
+                    "{which}! in a serving-stack module; record a TraceEvent through the \
+                     Recorder (crate::obs) or return data to the caller — stdout is the \
+                     CLI's channel, not the pipeline's"
+                ),
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Entry points.
 // ---------------------------------------------------------------------------
@@ -980,6 +1034,7 @@ pub fn scan_source(rel: &str, text: &str) -> Vec<Diagnostic> {
     rule_no_thread_spawn(&mut ctx);
     rule_bench_determinism(&mut ctx);
     rule_bounded_retry(&mut ctx);
+    rule_no_print(&mut ctx);
 
     for &pos in &stripped.malformed {
         let (line, col) = line_col(text.as_bytes(), pos);
@@ -1189,6 +1244,41 @@ fn f(rx: &R, fs: &[F]) {
     }
 }\n";
         assert_eq!(rules_of("rust/src/transport/y.rs", src), vec!["bounded-retry"]);
+    }
+
+    #[test]
+    fn prints_are_flagged_in_serving_stack_modules_only() {
+        let src = "fn f(x: u32) -> u32 { println!(\"{x}\"); dbg!(x) }";
+        for rel in [
+            "rust/src/serve/worker.rs",
+            "rust/src/adapt/mod.rs",
+            "rust/src/fault/breaker.rs",
+            "rust/src/obs/ring.rs",
+        ] {
+            assert_eq!(
+                rules_of(rel, src),
+                vec!["no-print-hot-path", "no-print-hot-path"],
+                "{rel}"
+            );
+        }
+        // the CLI and experiment harnesses own stdout
+        assert!(rules_of("rust/src/main.rs", src).is_empty());
+        assert!(rules_of("rust/src/experiments/chaos.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_code_and_allow_escapes_may_print() {
+        let test_src = "\
+#[cfg(test)]
+mod tests {
+    fn t() {
+        println!(\"debugging a fixture\");
+    }
+}\n";
+        assert!(rules_of("rust/src/serve/worker.rs", test_src).is_empty());
+        let allowed =
+            "eprintln!(\"boot\"); // dslint::allow(no-print-hot-path): startup banner\n";
+        assert!(rules_of("rust/src/serve/mod.rs", allowed).is_empty());
     }
 
     #[test]

@@ -1,0 +1,9 @@
+// dslint-fixture: rust/src/serve/worker.rs expect=3
+
+pub fn dispatch(id: usize, depth: usize) -> usize {
+    println!("dispatching request {id}");
+    if depth > 100 {
+        eprintln!("queue deep: {depth}");
+    }
+    dbg!(id + depth)
+}

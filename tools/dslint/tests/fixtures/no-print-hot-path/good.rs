@@ -1,0 +1,18 @@
+// dslint-fixture: rust/src/serve/worker.rs expect=0
+
+/// The sanctioned channels: record a TraceEvent for in-flight state,
+/// return data for post-hoc state — never write to stdout from the
+/// serving stack ("println" inside a string is not a call).
+pub fn dispatch(recorder: &Recorder, id: usize, now: Option<f64>) -> &'static str {
+    recorder.emit_worker(0, now, EventKind::Dispatched { id, worker: 0, batch: 1 });
+    "println"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_print() {
+        println!("fixture debugging output is fine here");
+        eprintln!("and on stderr too");
+    }
+}
