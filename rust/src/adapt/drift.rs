@@ -284,6 +284,22 @@ impl Calibration {
     pub fn observed_configs(&self) -> usize {
         self.per_config.len()
     }
+
+    /// The exact per-config ratios in deterministic (`BTreeMap`) order —
+    /// the export surface of the persistence layer (DESIGN.md §17).
+    pub fn per_config_ratios(&self) -> Vec<(Config, (f64, f64))> {
+        self.per_config.iter().map(|(c, r)| (*c, *r)).collect()
+    }
+
+    /// Rebuild from persisted parts (the §17 import path).  Ratio
+    /// validation (finite, positive) is the importer's job.
+    pub fn from_parts(
+        edge: (f64, f64),
+        offload: (f64, f64),
+        per_config: Vec<(Config, (f64, f64))>,
+    ) -> Calibration {
+        Calibration { edge, offload, per_config: per_config.into_iter().collect() }
+    }
 }
 
 #[cfg(test)]

@@ -35,6 +35,7 @@
 
 pub mod admission;
 pub mod drift;
+pub mod persist;
 pub mod resolve;
 pub mod store;
 pub mod telemetry;
@@ -57,6 +58,9 @@ use crate::workload::TimedRequest;
 
 pub use admission::AdmissionGate;
 pub use drift::{Calibration, DriftConfig, DriftDetector, DriftReport, WindowStats};
+pub use persist::{
+    JsonStoreCodec, NetworkState, PersistError, StoreCodec, StoreDocument, SummaryRow, WarmState,
+};
 pub use resolve::{resolve, ResolveConfig};
 pub use store::{ConfigStore, StoreMap, StoreSnapshot};
 pub use telemetry::{EwmaCell, Sample, Telemetry};
@@ -180,6 +184,42 @@ impl<'a> AdaptiveLoop<'a> {
         AdmissionGate::new(self.service_ewma.clone(), workers)
     }
 
+    /// Warm-start from a persisted [`persist::WarmState`]'s
+    /// re-materialized samples (DESIGN.md §17): foreign-network samples
+    /// are dropped, epochs are re-stamped to the restored store's
+    /// current epoch, and everything lands in the calibration/measured-
+    /// pool history only — **not** in `pending`, because historical
+    /// samples must never seal fresh drift windows (the previous
+    /// process already reacted to them).  The EWMA is seeded once, and
+    /// only if this loop never observed a live sample.
+    pub fn warm_start(&mut self, samples: &[Sample], ewma: Option<(f64, u64)>) {
+        let epoch = self.store.epoch();
+        for s in samples {
+            if s.config.net != self.net {
+                continue;
+            }
+            let mut s = *s;
+            s.epoch = epoch;
+            if self.recent.len() >= self.cfg.history {
+                self.recent.pop_front();
+            }
+            self.recent.push_back(s);
+        }
+        if let Some((value, _)) = ewma {
+            if self.service_ewma.count() == 0 {
+                self.service_ewma.observe(value);
+            }
+        }
+    }
+
+    /// Export this loop's live history as a persistable
+    /// [`persist::WarmState`] (what `serve --store-out` writes).
+    pub fn warm_state(&self) -> persist::WarmState {
+        let recent: Vec<Sample> = self.recent.iter().copied().collect();
+        let ewma = self.service_ewma.value().map(|v| (v, self.service_ewma.count()));
+        persist::WarmState::from_samples(&recent, ewma)
+    }
+
     /// One synchronous control step: drain telemetry, seal full
     /// windows, detect drift, re-solve and hot-swap on a sustained
     /// detection.  Returns `true` if the store was swapped.
@@ -278,6 +318,9 @@ pub struct ClosedLoopReport {
     pub adapt: AdaptStats,
     /// The store's `(epoch, digest)` registry after the run.
     pub epochs: Vec<(u64, u64)>,
+    /// The loop's final calibration/telemetry summaries, ready for
+    /// `serve --store-out` (DESIGN.md §17).
+    pub warm: persist::WarmState,
 }
 
 /// Serve `timeline` through the pipeline while `control` (a pre-built
@@ -307,7 +350,7 @@ where
     let poll = Duration::from_millis(control.cfg.poll_ms.max(1));
     let gate = (pipeline.time_scale > 0.0).then(|| control.gate(pipeline.workers));
     let stop = AtomicBool::new(false);
-    let (serve_result, adapt) = std::thread::scope(|s| {
+    let (serve_result, adapt, warm) = std::thread::scope(|s| {
         let stop_ref = &stop;
         let handle = s.spawn(move || {
             while !stop_ref.load(Ordering::Relaxed) {
@@ -315,7 +358,8 @@ where
                 std::thread::sleep(poll);
             }
             control.step(); // final drain so stats cover the whole run
-            control.stats
+            let warm = control.warm_state();
+            (control.stats, warm)
         });
         let stores = StoreMap::broadcast(store);
         let result = serve::run_pipeline_resilient(
@@ -331,12 +375,12 @@ where
             factory,
         );
         stop.store(true, Ordering::Relaxed);
-        let stats = handle
+        let (stats, warm) = handle
             .join()
             .map_err(|_| anyhow::anyhow!("adaptation thread panicked"))?;
-        Ok::<_, anyhow::Error>((result?, stats))
+        Ok::<_, anyhow::Error>((result?, stats, warm))
     })?;
-    Ok(ClosedLoopReport { serve: serve_result, adapt, epochs: store.epochs() })
+    Ok(ClosedLoopReport { serve: serve_result, adapt, epochs: store.epochs(), warm })
 }
 
 #[cfg(test)]

@@ -1,0 +1,1140 @@
+//! Warm-restart persistence: versioned export/import of serving state
+//! (DESIGN.md §17).
+//!
+//! The Offline Phase spends minutes of NSGA-III solving to produce the
+//! Pareto fronts the Online Phase schedules from, and until now that
+//! state died with the process: every restart re-paid the solve before
+//! a single request could be served.  This module serializes a
+//! [`ConfigStore`]'s full warm state — the front, its `(epoch, digest)`
+//! registry, the placement-bucketed [`Calibration`], and windowed
+//! telemetry summaries (per-config [`WindowStats`] aggregates plus the
+//! admission EWMA seed) — to a self-describing, zero-dependency JSON
+//! document, and validates it strictly on the way back in.
+//!
+//! Document shape (schema version 1; top-level keys are canonical):
+//!
+//! ```text
+//! { "schema": "dynasplit-store", "version": 1,
+//!   "digest": "<16 lowercase hex: fnv1a over the canonical encoding
+//!              of the networks value>",
+//!   "networks": [ { "net": "vgg16",
+//!                   "front":    [ <pareto entry>... ],
+//!                   "registry": [ {"epoch": 0, "digest": "<hex>"}... ],
+//!                   "calibration": { "edge": [l, e], "offload": [l, e],
+//!                                    "per_config": [...] },
+//!                   "telemetry": { "ewma": null | {"value", "count"},
+//!                                  "rows": [ <summary row>... ] } } ] }
+//! ```
+//!
+//! Import is error-or-validate, never panic: unknown schema/version,
+//! digest mismatch, non-normalized fronts, non-finite objectives,
+//! duplicate configs, and malformed registries all map to a typed
+//! [`PersistError`].  Unknown *keys* are ignored (forward compatibility
+//! within a version; the content digest still pins the `networks`
+//! payload byte-for-byte because the encoder is canonical).
+//!
+//! The [`StoreCodec`] seam (shape borrowed from remoc's `CodecT`)
+//! decouples the document model from its wire format so a future
+//! binary codec can slot in without touching callers.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::drift::{Calibration, WindowStats};
+use super::store::ConfigStore;
+use super::telemetry::Sample;
+use crate::controller::policy::ConfigSet;
+use crate::solver::ParetoEntry;
+use crate::space::{feasible, Config, Network, TpuMode, CPU_FREQS_GHZ};
+use crate::util::hash::fnv1a;
+use crate::util::json::Json;
+
+/// Self-description tag every document carries.
+pub const SCHEMA: &str = "dynasplit-store";
+/// The document version this build reads and writes.
+pub const SCHEMA_VERSION: u64 = 1;
+/// Ceiling on a persisted summary row's sample count: warm-start
+/// materializes `n` samples per row, so an unbounded `n` in a forged
+/// document would be an allocation bomb.
+pub const MAX_ROW_SAMPLES: u64 = 1_000_000;
+
+/// Typed import/export failures.  Import never panics: every corrupt,
+/// unknown-version, or digest-mismatched document lands on exactly one
+/// of these.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PersistError {
+    /// Filesystem trouble reading or writing a document.
+    Io { path: String, detail: String },
+    /// The text is not well-formed JSON.
+    Syntax(String),
+    /// The `schema` tag is not [`SCHEMA`].
+    UnknownSchema(String),
+    /// The `version` field names a version this build does not read.
+    UnknownVersion(u64),
+    /// The stamped content digest does not match the `networks` payload.
+    DigestMismatch { expected: u64, found: u64 },
+    /// A front is not in canonical Algorithm-1 (§4.3.1) order.
+    NonNormalizedFront(Network),
+    /// A front lists the same configuration twice.
+    DuplicateConfig(Network),
+    /// Two sections claim the same network.
+    DuplicateNetwork(Network),
+    /// The `(epoch, digest)` registry is malformed or contradicts the
+    /// front it accompanies.
+    BadRegistry(String),
+    /// A latency/energy/accuracy objective is NaN or infinite.
+    NonFiniteObjective(String),
+    /// Any other field-level validation failure.
+    InvalidField(String),
+    /// The document carries no network sections.
+    EmptyDocument,
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io { path, detail } => write!(f, "store io error at {path}: {detail}"),
+            PersistError::Syntax(detail) => write!(f, "store document is not valid JSON: {detail}"),
+            PersistError::UnknownSchema(s) => {
+                write!(f, "unknown store schema {s:?} (expected {SCHEMA:?})")
+            }
+            PersistError::UnknownVersion(v) => {
+                write!(f, "unknown store schema version {v} (this build reads {SCHEMA_VERSION})")
+            }
+            PersistError::DigestMismatch { expected, found } => write!(
+                f,
+                "store content digest mismatch: document says {expected:016x}, \
+                 content hashes to {found:016x}"
+            ),
+            PersistError::NonNormalizedFront(net) => {
+                write!(f, "{}: pareto front is not in canonical Algorithm-1 order", net.name())
+            }
+            PersistError::DuplicateConfig(net) => {
+                write!(f, "{}: duplicate config in pareto front", net.name())
+            }
+            PersistError::DuplicateNetwork(net) => {
+                write!(f, "duplicate network section {}", net.name())
+            }
+            PersistError::BadRegistry(detail) => {
+                write!(f, "bad (epoch, digest) registry: {detail}")
+            }
+            PersistError::NonFiniteObjective(detail) => write!(f, "non-finite value: {detail}"),
+            PersistError::InvalidField(detail) => write!(f, "invalid field: {detail}"),
+            PersistError::EmptyDocument => write!(f, "store document has no network sections"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+/// Wire-format seam for store documents, following the shape of
+/// remoc's `CodecT`: a named codec that (de)serializes one document
+/// type over byte streams.  Generic methods keep it a zero-cost static
+/// seam (it is not object-safe, and does not need to be: callers pick
+/// a codec at compile time).
+pub trait StoreCodec: Send + Sync {
+    /// Short identifier, e.g. `"json"`.
+    fn name(&self) -> &'static str;
+    /// Serialize `doc` to `writer` in this codec's wire format.
+    fn serialize<W: Write>(&self, writer: W, doc: &StoreDocument) -> Result<(), PersistError>;
+    /// Deserialize and fully validate a document from `reader`.
+    fn deserialize<R: Read>(&self, reader: R) -> Result<StoreDocument, PersistError>;
+}
+
+/// The built-in codec: canonical, zero-dep JSON (`util::json`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JsonStoreCodec;
+
+impl StoreCodec for JsonStoreCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn serialize<W: Write>(&self, mut writer: W, doc: &StoreDocument) -> Result<(), PersistError> {
+        let text = doc.encode();
+        writer
+            .write_all(text.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .map_err(|e| PersistError::Io { path: "<writer>".into(), detail: e.to_string() })
+    }
+
+    fn deserialize<R: Read>(&self, mut reader: R) -> Result<StoreDocument, PersistError> {
+        let mut text = String::new();
+        reader
+            .read_to_string(&mut text)
+            .map_err(|e| PersistError::Io { path: "<reader>".into(), detail: e.to_string() })?;
+        StoreDocument::parse(&text)
+    }
+}
+
+/// One persisted summary row: a per-config [`WindowStats`] aggregate
+/// over the `n` most recent samples of that config, plus the energy
+/// split and accuracy means the drift window does not carry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummaryRow {
+    pub config: Config,
+    /// Samples aggregated into this row (warm-start re-materializes
+    /// `n` mean-samples so calibration ratios survive the round trip).
+    pub n: usize,
+    pub predicted_latency_ms: f64,
+    pub predicted_energy_j: f64,
+    pub latency_ms: f64,
+    pub energy_j: f64,
+    pub edge_energy_j: f64,
+    pub cloud_energy_j: f64,
+    pub accuracy: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+}
+
+/// Everything an [`super::AdaptiveLoop`] needs to resume where a
+/// previous process left off: calibration, the admission-EWMA seed,
+/// and the windowed telemetry summaries its measured pool rebuilds
+/// from.
+#[derive(Debug, Clone)]
+pub struct WarmState {
+    pub calibration: Calibration,
+    /// `(value, count)` of the service-time EWMA at export, if it ever
+    /// observed a sample.
+    pub ewma: Option<(f64, u64)>,
+    pub rows: Vec<SummaryRow>,
+}
+
+impl WarmState {
+    /// The cold state: identity calibration, no EWMA seed, no rows.
+    pub fn identity() -> WarmState {
+        WarmState { calibration: Calibration::identity(), ewma: None, rows: Vec::new() }
+    }
+
+    /// Summarize live samples (the adaptation loop's `recent` history)
+    /// into persistable form.  Empty input yields the identity state
+    /// (with the EWMA seed preserved).
+    pub fn from_samples(samples: &[Sample], ewma: Option<(f64, u64)>) -> WarmState {
+        if samples.is_empty() {
+            let mut w = WarmState::identity();
+            w.ewma = ewma;
+            return w;
+        }
+        let window = WindowStats::of(samples);
+        // the drift window aggregates latency/energy but not the
+        // edge/cloud split or accuracy: fold those here, keyed the same
+        // way (BTreeMap ⇒ deterministic row order)
+        let mut extra: BTreeMap<Config, (f64, f64, f64)> = BTreeMap::new();
+        for s in samples {
+            let slot = extra.entry(s.config).or_insert((0.0, 0.0, 0.0));
+            slot.0 += s.edge_energy_j;
+            slot.1 += s.cloud_energy_j;
+            slot.2 += s.accuracy;
+        }
+        let rows = window
+            .by_config
+            .iter()
+            .map(|cw| {
+                let (edge_sum, cloud_sum, acc_sum) =
+                    extra.get(&cw.config).copied().unwrap_or((0.0, 0.0, 0.0));
+                let n = cw.n.max(1) as f64;
+                SummaryRow {
+                    config: cw.config,
+                    n: cw.n,
+                    predicted_latency_ms: cw.predicted_latency_ms,
+                    predicted_energy_j: cw.predicted_energy_j,
+                    latency_ms: cw.measured_latency_ms,
+                    energy_j: cw.measured_energy_j,
+                    edge_energy_j: edge_sum / n,
+                    cloud_energy_j: cloud_sum / n,
+                    accuracy: acc_sum / n,
+                    latency_p50_ms: cw.latency_p50_ms,
+                    latency_p95_ms: cw.latency_p95_ms,
+                }
+            })
+            .collect();
+        WarmState { calibration: Calibration::from_samples(samples), ewma, rows }
+    }
+
+    /// Re-materialize the summaries as samples: `n` copies of each
+    /// row's mean sample.  Per-config calibration ratios are means of
+    /// means, so they survive this round trip; epochs are stamped `0`
+    /// and re-stamped by [`super::AdaptiveLoop::warm_start`].
+    pub fn samples(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for row in &self.rows {
+            let s = Sample {
+                epoch: 0,
+                config: row.config,
+                predicted_latency_ms: row.predicted_latency_ms,
+                predicted_energy_j: row.predicted_energy_j,
+                latency_ms: row.latency_ms,
+                energy_j: row.energy_j,
+                edge_energy_j: row.edge_energy_j,
+                cloud_energy_j: row.cloud_energy_j,
+                accuracy: row.accuracy,
+            };
+            out.extend(std::iter::repeat_n(s, row.n));
+        }
+        out
+    }
+
+    /// Whether this state carries anything beyond the identity.
+    pub fn is_warm(&self) -> bool {
+        !self.rows.is_empty() || self.ewma.is_some()
+    }
+}
+
+/// One network's persisted serving state.
+#[derive(Debug, Clone)]
+pub struct NetworkState {
+    pub net: Network,
+    /// The live front, in canonical Algorithm-1 order.
+    pub front: Vec<ParetoEntry>,
+    /// Every `(epoch, digest)` ever installed, epoch order; the last
+    /// digest is the front's.
+    pub registry: Vec<(u64, u64)>,
+    pub warm: WarmState,
+}
+
+impl NetworkState {
+    /// Capture `store`'s current front + registry with a cold warm
+    /// state (use [`NetworkState::with_warm`] to attach one).
+    pub fn capture(net: Network, store: &ConfigStore) -> NetworkState {
+        let snapshot = store.snapshot();
+        NetworkState {
+            net,
+            front: snapshot.set().entries().to_vec(),
+            registry: store.epochs(),
+            warm: WarmState::identity(),
+        }
+    }
+
+    pub fn with_warm(mut self, warm: WarmState) -> NetworkState {
+        self.warm = warm;
+        self
+    }
+
+    /// Rebuild a live [`ConfigStore`] at the persisted epoch, with the
+    /// persisted registry as its history.
+    pub fn restore(&self) -> Result<ConfigStore, PersistError> {
+        ConfigStore::restore(ConfigSet::new(self.front.clone()), self.registry.clone())
+            .map_err(|e| PersistError::BadRegistry(format!("{e:#}")))
+    }
+
+    /// The registered head epoch (0 for a malformed empty registry,
+    /// which [`StoreDocument::parse`] rejects anyway).
+    pub fn epoch(&self) -> u64 {
+        self.registry.last().map(|&(epoch, _)| epoch).unwrap_or(0)
+    }
+}
+
+/// A parsed-and-validated store document: one [`NetworkState`] per
+/// network, composing under `--mix` via [`super::StoreMap`].
+#[derive(Debug, Clone)]
+pub struct StoreDocument {
+    pub networks: Vec<NetworkState>,
+}
+
+impl StoreDocument {
+    pub fn new(networks: Vec<NetworkState>) -> StoreDocument {
+        StoreDocument { networks }
+    }
+
+    pub fn single(state: NetworkState) -> StoreDocument {
+        StoreDocument { networks: vec![state] }
+    }
+
+    /// The section for `net`, if present.
+    pub fn state(&self, net: Network) -> Option<&NetworkState> {
+        self.networks.iter().find(|s| s.net == net)
+    }
+
+    /// Total configs across all fronts (CLI summaries).
+    pub fn total_configs(&self) -> usize {
+        self.networks.iter().map(|s| s.front.len()).sum()
+    }
+
+    /// Merge per-network documents into one; duplicate networks are a
+    /// typed error (two documents disagreeing about one net is not a
+    /// resolvable conflict).
+    pub fn merge(docs: Vec<StoreDocument>) -> Result<StoreDocument, PersistError> {
+        let mut seen = BTreeSet::new();
+        let mut networks = Vec::new();
+        for doc in docs {
+            for state in doc.networks {
+                if !seen.insert(state.net) {
+                    return Err(PersistError::DuplicateNetwork(state.net));
+                }
+                networks.push(state);
+            }
+        }
+        Ok(StoreDocument { networks })
+    }
+
+    fn networks_json(&self) -> Json {
+        Json::arr(self.networks.iter().map(network_to_json).collect())
+    }
+
+    /// Content digest: FNV-1a over the canonical encoding of the
+    /// `networks` value.  Sound because the encoder is deterministic
+    /// (sorted keys, shortest-round-trip floats), so
+    /// `encode ∘ parse ∘ encode = encode`.
+    pub fn digest(&self) -> u64 {
+        content_digest(&self.networks_json())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let networks = self.networks_json();
+        let digest = content_digest(&networks);
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("version", Json::num(SCHEMA_VERSION as f64)),
+            ("digest", Json::str(format!("{digest:016x}"))),
+            ("networks", networks),
+        ])
+    }
+
+    /// Canonical single-line encoding of the full document.
+    pub fn encode(&self) -> String {
+        self.to_json().encode()
+    }
+
+    /// Parse **and strictly validate** a document.  Every failure is a
+    /// typed [`PersistError`]; this function never panics on any input.
+    pub fn parse(text: &str) -> Result<StoreDocument, PersistError> {
+        let root = Json::parse(text).map_err(|e| PersistError::Syntax(format!("{e:#}")))?;
+        let schema = str_field(&root, "schema", "document")?;
+        if schema != SCHEMA {
+            return Err(PersistError::UnknownSchema(schema.to_string()));
+        }
+        let version = u64_field(&root, "version", "document")?;
+        if version != SCHEMA_VERSION {
+            return Err(PersistError::UnknownVersion(version));
+        }
+        let expected = parse_digest(str_field(&root, "digest", "document")?, "document.digest")?;
+        let networks_json = field(&root, "networks", "document")?;
+        let found = content_digest(networks_json);
+        if found != expected {
+            return Err(PersistError::DigestMismatch { expected, found });
+        }
+        let sections = networks_json.as_arr().map_err(|e| invalid("document.networks", &e))?;
+        if sections.is_empty() {
+            return Err(PersistError::EmptyDocument);
+        }
+        let mut seen = BTreeSet::new();
+        let mut networks = Vec::with_capacity(sections.len());
+        for section in sections {
+            let state = network_from_json(section)?;
+            if !seen.insert(state.net) {
+                return Err(PersistError::DuplicateNetwork(state.net));
+            }
+            networks.push(state);
+        }
+        Ok(StoreDocument { networks })
+    }
+
+    /// Read and validate a document file.
+    pub fn load(path: &Path) -> Result<StoreDocument, PersistError> {
+        let text = std::fs::read_to_string(path).map_err(|e| PersistError::Io {
+            path: path.display().to_string(),
+            detail: e.to_string(),
+        })?;
+        StoreDocument::parse(&text)
+    }
+
+    /// Write the canonical encoding through the [`JsonStoreCodec`].
+    pub fn save(&self, path: &Path) -> Result<(), PersistError> {
+        let file = std::fs::File::create(path).map_err(|e| PersistError::Io {
+            path: path.display().to_string(),
+            detail: e.to_string(),
+        })?;
+        JsonStoreCodec.serialize(file, self).map_err(|e| match e {
+            PersistError::Io { detail, .. } => {
+                PersistError::Io { path: path.display().to_string(), detail }
+            }
+            other => other,
+        })
+    }
+}
+
+fn content_digest(networks: &Json) -> u64 {
+    fnv1a(networks.encode().bytes().map(u64::from))
+}
+
+// ---------------------------------------------------------------- encode
+
+fn config_to_json(c: &Config) -> Json {
+    Json::obj(vec![
+        ("net", Json::str(c.net.name())),
+        ("cpu_idx", Json::num(c.cpu_idx as f64)),
+        ("tpu", Json::str(c.tpu.label())),
+        ("gpu", Json::Bool(c.gpu)),
+        ("split", Json::num(c.split as f64)),
+    ])
+}
+
+fn entry_to_json(e: &ParetoEntry) -> Json {
+    Json::obj(vec![
+        ("config", config_to_json(&e.config)),
+        ("latency_ms", Json::num(e.latency_ms)),
+        ("energy_j", Json::num(e.energy_j)),
+        ("accuracy", Json::num(e.accuracy)),
+    ])
+}
+
+fn calibration_to_json(c: &Calibration) -> Json {
+    let pair = |(l, e): (f64, f64)| Json::arr(vec![Json::num(l), Json::num(e)]);
+    let per_config = c
+        .per_config_ratios()
+        .into_iter()
+        .map(|(config, (l, e))| {
+            Json::obj(vec![
+                ("config", config_to_json(&config)),
+                ("latency_ratio", Json::num(l)),
+                ("energy_ratio", Json::num(e)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("edge", pair(c.edge)),
+        ("offload", pair(c.offload)),
+        ("per_config", Json::arr(per_config)),
+    ])
+}
+
+fn row_to_json(r: &SummaryRow) -> Json {
+    Json::obj(vec![
+        ("config", config_to_json(&r.config)),
+        ("n", Json::num(r.n as f64)),
+        ("predicted_latency_ms", Json::num(r.predicted_latency_ms)),
+        ("predicted_energy_j", Json::num(r.predicted_energy_j)),
+        ("latency_ms", Json::num(r.latency_ms)),
+        ("energy_j", Json::num(r.energy_j)),
+        ("edge_energy_j", Json::num(r.edge_energy_j)),
+        ("cloud_energy_j", Json::num(r.cloud_energy_j)),
+        ("accuracy", Json::num(r.accuracy)),
+        ("latency_p50_ms", Json::num(r.latency_p50_ms)),
+        ("latency_p95_ms", Json::num(r.latency_p95_ms)),
+    ])
+}
+
+fn warm_to_json(w: &WarmState) -> Json {
+    let ewma = match w.ewma {
+        Some((value, count)) => Json::obj(vec![
+            ("value", Json::num(value)),
+            ("count", Json::num(count as f64)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("ewma", ewma),
+        ("rows", Json::arr(w.rows.iter().map(row_to_json).collect())),
+    ])
+}
+
+fn network_to_json(s: &NetworkState) -> Json {
+    let registry = s
+        .registry
+        .iter()
+        .map(|&(epoch, digest)| {
+            Json::obj(vec![
+                ("epoch", Json::num(epoch as f64)),
+                ("digest", Json::str(format!("{digest:016x}"))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("net", Json::str(s.net.name())),
+        ("front", Json::arr(s.front.iter().map(entry_to_json).collect())),
+        ("registry", Json::arr(registry)),
+        ("calibration", calibration_to_json(&s.warm.calibration)),
+        ("telemetry", warm_to_json(&s.warm)),
+    ])
+}
+
+// ----------------------------------------------------------------- parse
+
+fn invalid(what: &str, e: &anyhow::Error) -> PersistError {
+    PersistError::InvalidField(format!("{what}: {e:#}"))
+}
+
+fn field<'a>(v: &'a Json, key: &str, what: &str) -> Result<&'a Json, PersistError> {
+    v.get(key).map_err(|e| invalid(what, &e))
+}
+
+fn str_field<'a>(v: &'a Json, key: &str, what: &str) -> Result<&'a str, PersistError> {
+    let label = format!("{what}.{key}");
+    field(v, key, what)?.as_str().map_err(|e| invalid(&label, &e))
+}
+
+fn f64_field(v: &Json, key: &str, what: &str) -> Result<f64, PersistError> {
+    let label = format!("{what}.{key}");
+    field(v, key, what)?.as_f64().map_err(|e| invalid(&label, &e))
+}
+
+/// A non-negative integral number small enough for exact f64 carriage.
+fn u64_field(v: &Json, key: &str, what: &str) -> Result<u64, PersistError> {
+    let x = f64_field(v, key, what)?;
+    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 || x >= 9.0e15 {
+        return Err(PersistError::InvalidField(format!("{what}.{key}: not an integer: {x}")));
+    }
+    Ok(x as u64)
+}
+
+fn parse_digest(s: &str, what: &str) -> Result<u64, PersistError> {
+    let well_formed = s.len() == 16 && s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'));
+    if !well_formed {
+        return Err(PersistError::InvalidField(format!(
+            "{what}: digest must be 16 lowercase hex chars, got {s:?}"
+        )));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| PersistError::InvalidField(format!("{what}: {e}")))
+}
+
+/// A measured/predicted objective: finite, else a typed rejection
+/// (`1e400` parses to `+inf`, NaN literals already fail as syntax).
+fn finite(v: f64, what: &str) -> Result<f64, PersistError> {
+    if !v.is_finite() {
+        return Err(PersistError::NonFiniteObjective(format!("{what}: {v}")));
+    }
+    Ok(v)
+}
+
+fn finite_pos(v: f64, what: &str) -> Result<f64, PersistError> {
+    let v = finite(v, what)?;
+    if v <= 0.0 {
+        return Err(PersistError::InvalidField(format!("{what}: must be > 0, got {v}")));
+    }
+    Ok(v)
+}
+
+fn finite_nonneg(v: f64, what: &str) -> Result<f64, PersistError> {
+    let v = finite(v, what)?;
+    if v < 0.0 {
+        return Err(PersistError::InvalidField(format!("{what}: must be >= 0, got {v}")));
+    }
+    Ok(v)
+}
+
+fn config_from_json(v: &Json, what: &str) -> Result<Config, PersistError> {
+    let net = Network::parse(str_field(v, "net", what)?)
+        .map_err(|e| invalid(&format!("{what}.net"), &e))?;
+    let cpu_idx = u64_field(v, "cpu_idx", what)? as usize;
+    if cpu_idx >= CPU_FREQS_GHZ.len() {
+        return Err(PersistError::InvalidField(format!("{what}.cpu_idx: out of range: {cpu_idx}")));
+    }
+    let tpu = match str_field(v, "tpu", what)? {
+        "off" => TpuMode::Off,
+        "std" => TpuMode::Std,
+        "max" => TpuMode::Max,
+        other => {
+            return Err(PersistError::InvalidField(format!("{what}.tpu: unknown mode {other:?}")))
+        }
+    };
+    let gpu_label = format!("{what}.gpu");
+    let gpu = field(v, "gpu", what)?.as_bool().map_err(|e| invalid(&gpu_label, &e))?;
+    let split = u64_field(v, "split", what)? as usize;
+    if split > net.num_layers() {
+        return Err(PersistError::InvalidField(format!(
+            "{what}.split: {split} exceeds {} layers of {}",
+            net.num_layers(),
+            net.name()
+        )));
+    }
+    let config = Config { net, cpu_idx, tpu, gpu, split };
+    if !feasible::is_feasible(&config) {
+        return Err(PersistError::InvalidField(format!(
+            "{what}: infeasible config {}",
+            config.describe()
+        )));
+    }
+    Ok(config)
+}
+
+fn entry_from_json(v: &Json, net: Network, what: &str) -> Result<ParetoEntry, PersistError> {
+    let config = config_from_json(field(v, "config", what)?, &format!("{what}.config"))?;
+    if config.net != net {
+        return Err(PersistError::InvalidField(format!(
+            "{what}: config for {} inside the {} section",
+            config.net.name(),
+            net.name()
+        )));
+    }
+    Ok(ParetoEntry {
+        config,
+        latency_ms: finite_pos(f64_field(v, "latency_ms", what)?, &format!("{what}.latency_ms"))?,
+        energy_j: finite_pos(f64_field(v, "energy_j", what)?, &format!("{what}.energy_j"))?,
+        accuracy: finite(f64_field(v, "accuracy", what)?, &format!("{what}.accuracy"))?,
+    })
+}
+
+fn pair_from_json(v: &Json, what: &str) -> Result<(f64, f64), PersistError> {
+    let xs = v.as_f64_vec().map_err(|e| invalid(what, &e))?;
+    if xs.len() != 2 {
+        return Err(PersistError::InvalidField(format!(
+            "{what}: expected [latency_ratio, energy_ratio], got {} values",
+            xs.len()
+        )));
+    }
+    Ok((
+        finite_pos(xs[0], &format!("{what}[0]"))?,
+        finite_pos(xs[1], &format!("{what}[1]"))?,
+    ))
+}
+
+fn calibration_from_json(v: &Json, net: Network, what: &str) -> Result<Calibration, PersistError> {
+    let edge = pair_from_json(field(v, "edge", what)?, &format!("{what}.edge"))?;
+    let offload = pair_from_json(field(v, "offload", what)?, &format!("{what}.offload"))?;
+    let items = field(v, "per_config", what)?
+        .as_arr()
+        .map_err(|e| invalid(&format!("{what}.per_config"), &e))?;
+    let mut per_config = Vec::with_capacity(items.len());
+    let mut seen = BTreeSet::new();
+    for (i, item) in items.iter().enumerate() {
+        let w = format!("{what}.per_config[{i}]");
+        let config = config_from_json(field(item, "config", &w)?, &format!("{w}.config"))?;
+        if config.net != net {
+            return Err(PersistError::InvalidField(format!(
+                "{w}: config for {} inside the {} section",
+                config.net.name(),
+                net.name()
+            )));
+        }
+        if !seen.insert(config) {
+            return Err(PersistError::DuplicateConfig(net));
+        }
+        let l = finite_pos(f64_field(item, "latency_ratio", &w)?, &format!("{w}.latency_ratio"))?;
+        let e = finite_pos(f64_field(item, "energy_ratio", &w)?, &format!("{w}.energy_ratio"))?;
+        per_config.push((config, (l, e)));
+    }
+    Ok(Calibration::from_parts(edge, offload, per_config))
+}
+
+fn row_from_json(v: &Json, net: Network, what: &str) -> Result<SummaryRow, PersistError> {
+    let config = config_from_json(field(v, "config", what)?, &format!("{what}.config"))?;
+    if config.net != net {
+        return Err(PersistError::InvalidField(format!(
+            "{what}: config for {} inside the {} section",
+            config.net.name(),
+            net.name()
+        )));
+    }
+    let n = u64_field(v, "n", what)?;
+    if n == 0 || n > MAX_ROW_SAMPLES {
+        return Err(PersistError::InvalidField(format!(
+            "{what}.n: must be in 1..={MAX_ROW_SAMPLES}, got {n}"
+        )));
+    }
+    Ok(SummaryRow {
+        config,
+        n: n as usize,
+        predicted_latency_ms: finite_pos(
+            f64_field(v, "predicted_latency_ms", what)?,
+            &format!("{what}.predicted_latency_ms"),
+        )?,
+        predicted_energy_j: finite_pos(
+            f64_field(v, "predicted_energy_j", what)?,
+            &format!("{what}.predicted_energy_j"),
+        )?,
+        latency_ms: finite_pos(f64_field(v, "latency_ms", what)?, &format!("{what}.latency_ms"))?,
+        energy_j: finite_nonneg(f64_field(v, "energy_j", what)?, &format!("{what}.energy_j"))?,
+        edge_energy_j: finite_nonneg(
+            f64_field(v, "edge_energy_j", what)?,
+            &format!("{what}.edge_energy_j"),
+        )?,
+        cloud_energy_j: finite_nonneg(
+            f64_field(v, "cloud_energy_j", what)?,
+            &format!("{what}.cloud_energy_j"),
+        )?,
+        accuracy: finite(f64_field(v, "accuracy", what)?, &format!("{what}.accuracy"))?,
+        latency_p50_ms: finite_nonneg(
+            f64_field(v, "latency_p50_ms", what)?,
+            &format!("{what}.latency_p50_ms"),
+        )?,
+        latency_p95_ms: finite_nonneg(
+            f64_field(v, "latency_p95_ms", what)?,
+            &format!("{what}.latency_p95_ms"),
+        )?,
+    })
+}
+
+fn warm_from_json(v: &Json, net: Network, what: &str) -> Result<WarmState, PersistError> {
+    let ewma_json = field(v, "ewma", what)?;
+    let ewma = match ewma_json {
+        Json::Null => None,
+        other => {
+            let w = format!("{what}.ewma");
+            let value = finite_nonneg(f64_field(other, "value", &w)?, &format!("{w}.value"))?;
+            let count = u64_field(other, "count", &w)?;
+            if count == 0 {
+                return Err(PersistError::InvalidField(format!(
+                    "{w}.count: a seeded EWMA has count >= 1"
+                )));
+            }
+            Some((value, count))
+        }
+    };
+    let rows_label = format!("{what}.rows");
+    let items = field(v, "rows", what)?.as_arr().map_err(|e| invalid(&rows_label, &e))?;
+    let mut rows = Vec::with_capacity(items.len());
+    let mut seen = BTreeSet::new();
+    for (i, item) in items.iter().enumerate() {
+        let row = row_from_json(item, net, &format!("{what}.rows[{i}]"))?;
+        if !seen.insert(row.config) {
+            return Err(PersistError::DuplicateConfig(net));
+        }
+        rows.push(row);
+    }
+    Ok(WarmState { calibration: Calibration::identity(), ewma, rows })
+}
+
+fn network_from_json(v: &Json) -> Result<NetworkState, PersistError> {
+    let net = Network::parse(str_field(v, "net", "network")?)
+        .map_err(|e| invalid("network.net", &e))?;
+    let what = net.name();
+
+    // front: valid entries, no duplicates, canonical order
+    let front_label = format!("{what}.front");
+    let items = field(v, "front", what)?.as_arr().map_err(|e| invalid(&front_label, &e))?;
+    let mut front = Vec::with_capacity(items.len());
+    let mut seen = BTreeSet::new();
+    for (i, item) in items.iter().enumerate() {
+        let entry = entry_from_json(item, net, &format!("{what}.front[{i}]"))?;
+        if !seen.insert(entry.config) {
+            return Err(PersistError::DuplicateConfig(net));
+        }
+        front.push(entry);
+    }
+    let set = ConfigSet::new(front.clone());
+    if set.entries() != front.as_slice() {
+        return Err(PersistError::NonNormalizedFront(net));
+    }
+
+    // registry: sequential epochs from 0; head digest matches the front
+    let items = field(v, "registry", what)?
+        .as_arr()
+        .map_err(|e| invalid(&format!("{what}.registry"), &e))?;
+    if items.is_empty() {
+        return Err(PersistError::BadRegistry(format!("{what}: empty registry")));
+    }
+    let mut registry = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let w = format!("{what}.registry[{i}]");
+        let epoch = u64_field(item, "epoch", &w)?;
+        if epoch != i as u64 {
+            return Err(PersistError::BadRegistry(format!(
+                "{w}: epoch {epoch} at position {i} (epochs are sequential from 0)"
+            )));
+        }
+        let digest = parse_digest(str_field(item, "digest", &w)?, &format!("{w}.digest"))?;
+        registry.push((epoch, digest));
+    }
+    match registry.last() {
+        Some(&(_, head)) if head == set.digest() => {}
+        Some(&(epoch, head)) => {
+            return Err(PersistError::BadRegistry(format!(
+                "{what}: head digest {head:016x} at epoch {epoch} does not match the \
+                 front ({:016x})",
+                set.digest()
+            )));
+        }
+        None => return Err(PersistError::BadRegistry(format!("{what}: empty registry"))),
+    }
+
+    let mut warm = warm_from_json(field(v, "telemetry", what)?, net, what)?;
+    warm.calibration =
+        calibration_from_json(field(v, "calibration", what)?, net, &format!("{what}.calibration"))?;
+    Ok(NetworkState { net, front, registry, warm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::telemetry::Sample;
+
+    fn entry(split: usize, latency: f64, energy: f64) -> ParetoEntry {
+        ParetoEntry {
+            config: Config {
+                net: Network::Vgg16,
+                cpu_idx: 6,
+                tpu: TpuMode::Off,
+                gpu: true,
+                split,
+            },
+            latency_ms: latency,
+            energy_j: energy,
+            accuracy: 0.95,
+        }
+    }
+
+    fn sample_for(e: &ParetoEntry, measured_ms: f64) -> Sample {
+        Sample {
+            epoch: 0,
+            config: e.config,
+            predicted_latency_ms: e.latency_ms,
+            predicted_energy_j: e.energy_j,
+            latency_ms: measured_ms,
+            energy_j: e.energy_j,
+            edge_energy_j: e.energy_j / 4.0,
+            cloud_energy_j: 3.0 * e.energy_j / 4.0,
+            accuracy: 0.94,
+        }
+    }
+
+    fn seeded_store() -> ConfigStore {
+        let store =
+            ConfigStore::new(ConfigSet::new(vec![entry(3, 100.0, 2.0), entry(9, 50.0, 10.0)]));
+        store.swap(ConfigSet::new(vec![
+            entry(3, 100.0, 2.0),
+            entry(9, 50.0, 10.0),
+            entry(12, 40.0, 14.0),
+        ]));
+        store
+    }
+
+    fn seeded_doc() -> StoreDocument {
+        let store = seeded_store();
+        let samples: Vec<Sample> = (0..6)
+            .map(|i| sample_for(&entry(3, 100.0, 2.0), 100.0 + i as f64))
+            .chain((0..2).map(|_| sample_for(&entry(9, 50.0, 10.0), 55.0)))
+            .collect();
+        let warm = WarmState::from_samples(&samples, Some((61.25, 8)));
+        StoreDocument::single(NetworkState::capture(Network::Vgg16, &store).with_warm(warm))
+    }
+
+    /// Re-stamp the digest after a test mutation so deep validators
+    /// (not the digest gate) are what rejects the poisoned field.
+    fn restamp(text: &str) -> String {
+        let root = match Json::parse(text) {
+            Ok(v) => v,
+            Err(_) => return text.to_string(),
+        };
+        let networks = match root.get("networks") {
+            Ok(v) => v.clone(),
+            Err(_) => return text.to_string(),
+        };
+        let digest = content_digest(&networks);
+        let mut obj = match root {
+            Json::Obj(map) => map,
+            _ => return text.to_string(),
+        };
+        obj.insert("digest".to_string(), Json::Str(format!("{digest:016x}")));
+        Json::Obj(obj).encode()
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let doc = seeded_doc();
+        let text = doc.encode();
+        let back = StoreDocument::parse(&text).unwrap();
+        assert_eq!(back.networks.len(), 1);
+        let (a, b) = (&doc.networks[0], &back.networks[0]);
+        assert_eq!(a.net, b.net);
+        assert_eq!(a.front, b.front);
+        assert_eq!(a.registry, b.registry);
+        assert_eq!(a.warm.ewma, b.warm.ewma);
+        assert_eq!(a.warm.rows, b.warm.rows);
+        assert_eq!(a.warm.calibration.edge, b.warm.calibration.edge);
+        assert_eq!(a.warm.calibration.offload, b.warm.calibration.offload);
+        assert_eq!(a.warm.calibration.per_config_ratios(), b.warm.calibration.per_config_ratios());
+        // canonical encoder: second encode is byte-identical
+        assert_eq!(text, back.encode());
+    }
+
+    #[test]
+    fn restore_rebuilds_the_registry() {
+        let doc = seeded_doc();
+        let back = StoreDocument::parse(&doc.encode()).unwrap();
+        let store = back.networks[0].restore().unwrap();
+        assert_eq!(store.epoch(), 1);
+        assert_eq!(store.epochs(), doc.networks[0].registry);
+        assert_eq!(store.snapshot().set().entries(), doc.networks[0].front.as_slice());
+    }
+
+    #[test]
+    fn warm_samples_survive_a_round_trip() {
+        let doc = seeded_doc();
+        let warm = &doc.networks[0].warm;
+        let rebuilt = WarmState::from_samples(&warm.samples(), warm.ewma);
+        assert_eq!(rebuilt.rows.len(), warm.rows.len());
+        for (a, b) in rebuilt.rows.iter().zip(&warm.rows) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.n, b.n);
+            assert!((a.latency_ms - b.latency_ms).abs() < 1e-9);
+            assert!((a.energy_j - b.energy_j).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn codec_seam_round_trips() {
+        let doc = seeded_doc();
+        let mut buf = Vec::new();
+        JsonStoreCodec.serialize(&mut buf, &doc).unwrap();
+        let back = JsonStoreCodec.deserialize(buf.as_slice()).unwrap();
+        assert_eq!(back.encode(), doc.encode());
+        assert_eq!(JsonStoreCodec.name(), "json");
+    }
+
+    #[test]
+    fn unknown_schema_is_typed() {
+        let text = seeded_doc().encode().replace(SCHEMA, "dynasplit-settings");
+        match StoreDocument::parse(&restamp(&text)) {
+            Err(PersistError::UnknownSchema(s)) => assert_eq!(s, "dynasplit-settings"),
+            other => panic!("expected UnknownSchema, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_typed() {
+        let text = seeded_doc().encode().replacen("\"version\":1", "\"version\":99", 1);
+        match StoreDocument::parse(&text) {
+            Err(PersistError::UnknownVersion(99)) => {}
+            other => panic!("expected UnknownVersion(99), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn digest_flip_is_typed() {
+        let doc = seeded_doc();
+        let stamped = format!("{:016x}", doc.digest());
+        let flipped = if stamped.starts_with('0') {
+            format!("1{}", &stamped[1..])
+        } else {
+            format!("0{}", &stamped[1..])
+        };
+        let text = doc.encode().replacen(&stamped, &flipped, 1);
+        match StoreDocument::parse(&text) {
+            Err(PersistError::DigestMismatch { .. }) => {}
+            other => panic!("expected DigestMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_normalized_front_is_typed() {
+        let doc = seeded_doc();
+        let root = Json::parse(&doc.encode()).unwrap();
+        let mut obj = match root {
+            Json::Obj(map) => map,
+            _ => unreachable!(),
+        };
+        let networks = obj.get_mut("networks").unwrap();
+        if let Json::Arr(sections) = networks {
+            if let Json::Obj(section) = &mut sections[0] {
+                if let Some(Json::Arr(front)) = section.get_mut("front") {
+                    front.reverse();
+                }
+            }
+        }
+        match StoreDocument::parse(&restamp(&Json::Obj(obj).encode())) {
+            Err(PersistError::NonNormalizedFront(Network::Vgg16)) => {}
+            other => panic!("expected NonNormalizedFront, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_finite_objective_is_typed() {
+        // 1e400 overflows f64 to +inf in the parser: the objective
+        // validator, not the syntax layer, must catch it
+        let doc = seeded_doc();
+        let needle = "\"latency_ms\":100";
+        let text = doc.encode().replacen(needle, "\"latency_ms\":1e400", 1);
+        assert_ne!(text, doc.encode(), "needle must exist");
+        match StoreDocument::parse(&restamp(&text)) {
+            Err(PersistError::NonFiniteObjective(_)) => {}
+            other => panic!("expected NonFiniteObjective, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_config_is_typed() {
+        let doc = seeded_doc();
+        let root = Json::parse(&doc.encode()).unwrap();
+        let mut obj = match root {
+            Json::Obj(map) => map,
+            _ => unreachable!(),
+        };
+        if let Some(Json::Arr(sections)) = obj.get_mut("networks") {
+            if let Json::Obj(section) = &mut sections[0] {
+                if let Some(Json::Arr(front)) = section.get_mut("front") {
+                    let dup = front[0].clone();
+                    front.push(dup);
+                }
+            }
+        }
+        match StoreDocument::parse(&restamp(&Json::Obj(obj).encode())) {
+            Err(PersistError::DuplicateConfig(Network::Vgg16)) => {}
+            other => panic!("expected DuplicateConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_registry_is_typed() {
+        let doc = seeded_doc();
+        let text = doc.encode().replacen("\"epoch\":1", "\"epoch\":7", 1);
+        assert_ne!(text, doc.encode());
+        match StoreDocument::parse(&restamp(&text)) {
+            Err(PersistError::BadRegistry(_)) => {}
+            other => panic!("expected BadRegistry, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_front_contradicts_the_registry() {
+        // dropping a front entry keeps the JSON valid; the registry's
+        // head digest no longer matches the rebuilt set
+        let doc = seeded_doc();
+        let root = Json::parse(&doc.encode()).unwrap();
+        let mut obj = match root {
+            Json::Obj(map) => map,
+            _ => unreachable!(),
+        };
+        if let Some(Json::Arr(sections)) = obj.get_mut("networks") {
+            if let Json::Obj(section) = &mut sections[0] {
+                if let Some(Json::Arr(front)) = section.get_mut("front") {
+                    front.pop();
+                }
+            }
+        }
+        match StoreDocument::parse(&restamp(&Json::Obj(obj).encode())) {
+            Err(PersistError::BadRegistry(_)) => {}
+            other => panic!("expected BadRegistry, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_and_duplicate_network_documents_are_typed() {
+        let empty = "{\"digest\":\"290d544120f9e37c\",\"networks\":[],\
+                     \"schema\":\"dynasplit-store\",\"version\":1}";
+        match StoreDocument::parse(&restamp(empty)) {
+            Err(PersistError::EmptyDocument) => {}
+            other => panic!("expected EmptyDocument, got {other:?}"),
+        }
+        let one = seeded_doc();
+        let two = StoreDocument::new(vec![one.networks[0].clone(), one.networks[0].clone()]);
+        match StoreDocument::parse(&restamp(&two.encode())) {
+            Err(PersistError::DuplicateNetwork(Network::Vgg16)) => {}
+            other => panic!("expected DuplicateNetwork, got {other:?}"),
+        }
+        assert!(StoreDocument::merge(vec![one.clone(), one]).is_err());
+    }
+
+    #[test]
+    fn garbage_is_syntax_not_panic() {
+        for text in ["", "{", "nope", "[1,2,3", "{\"schema\":}"] {
+            match StoreDocument::parse(text) {
+                Err(PersistError::Syntax(_)) | Err(PersistError::InvalidField(_)) => {}
+                other => panic!("expected a typed error for {text:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn errors_render_and_are_std_errors() {
+        let errors: Vec<Box<dyn std::error::Error>> = vec![
+            Box::new(PersistError::UnknownVersion(9)),
+            Box::new(PersistError::DigestMismatch { expected: 1, found: 2 }),
+            Box::new(PersistError::NonNormalizedFront(Network::Vit)),
+            Box::new(PersistError::EmptyDocument),
+        ];
+        for e in errors {
+            assert!(!e.to_string().is_empty());
+        }
+    }
+}

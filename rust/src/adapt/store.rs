@@ -106,6 +106,35 @@ impl ConfigStore {
         ConfigStore { current: RwLock::new(snapshot), history }
     }
 
+    /// Re-install a persisted store at its exported epoch: `set`
+    /// becomes the current snapshot, `history` the registry, so a
+    /// warm-restarted process audits exactly like the one that exported
+    /// it (DESIGN.md §17).  The registry must be sequential from epoch
+    /// 0 and its head digest must match `set` — persistence validates
+    /// this too, but the invariant is the store's to own.
+    pub fn restore(set: ConfigSet, history: Vec<(u64, u64)>) -> anyhow::Result<ConfigStore> {
+        anyhow::ensure!(!history.is_empty(), "registry must record at least epoch 0");
+        for (i, &(epoch, _)) in history.iter().enumerate() {
+            anyhow::ensure!(
+                epoch == i as u64,
+                "registry epoch {epoch} at position {i}: epochs are sequential from 0"
+            );
+        }
+        let digest = set.digest();
+        match history.last() {
+            Some(&(epoch, head)) => {
+                anyhow::ensure!(
+                    head == digest,
+                    "registry head digest {head:016x} at epoch {epoch} does not match \
+                     the set ({digest:016x})"
+                );
+                let snapshot = StoreSnapshot { epoch, digest, set: Arc::new(set) };
+                Ok(ConfigStore { current: RwLock::new(snapshot), history: Mutex::new(history) })
+            }
+            None => anyhow::bail!("registry must record at least epoch 0"),
+        }
+    }
+
     /// The current coherent view.  Workers take one snapshot per
     /// dispatch batch and resolve decision + entry lookup + coalescing
     /// against it.

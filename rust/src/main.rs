@@ -6,6 +6,7 @@
 //! ```text
 //! dynasplit space                      print Table-1 configuration spaces
 //! dynasplit solve     [--net --trials --strategy --seed --out]
+//! dynasplit store     export|import        versioned warm-restart store documents (§17)
 //! dynasplit serve     [--net --requests --workers --policy --rate --adapt
 //!                       --trace --metrics --report-json ...]
 //! dynasplit trace     [--file --top]       replay a recorded flight-recorder trace
@@ -29,8 +30,8 @@
 use anyhow::{bail, Result};
 
 use dynasplit::adapt::{
-    run_closed_loop, AdaptConfig, AdaptiveLoop, ConfigStore, DriftConfig, ResolveConfig,
-    StoreMap, Telemetry,
+    run_closed_loop, AdaptConfig, AdaptiveLoop, ConfigStore, DriftConfig, NetworkState,
+    ResolveConfig, StoreDocument, StoreMap, Telemetry, WarmState,
 };
 use dynasplit::controller::{
     ConfigSet, EnergyBudgetPolicy, HysteresisPolicy, PaperPolicy, PerRequestSimExecutor,
@@ -40,7 +41,9 @@ use dynasplit::experiments::{self, Ctx};
 use dynasplit::model::Manifest;
 use dynasplit::obs::{chrome, expose, FlightRecorder, Recorder};
 use dynasplit::runtime::InferenceBackend;
-use dynasplit::serve::{run_pipeline_resilient, PipelineConfig, RetryPolicy, ServeReport};
+use dynasplit::serve::{
+    run_pipeline_resilient, PipelineConfig, RetryPolicy, ServeReport, StoreSource,
+};
 use dynasplit::solver::{Solver, SolverOutput, Strategy};
 use dynasplit::space::{Network, Space};
 use dynasplit::util::cli::{ArgSpec, Args};
@@ -69,6 +72,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "space" => cmd_space(),
         "solve" => cmd_solve(),
+        "store" => cmd_store(),
         "serve" => cmd_serve(),
         "trace" => cmd_trace(),
         "mixed" => cmd_mixed(),
@@ -100,6 +104,9 @@ const HELP: &str = "dynasplit — energy-aware split inference (paper reproducti
 subcommands:
   space          print the Table-1 configuration spaces
   solve          offline phase: search the space, save the pareto set
+  store          warm-restart persistence (DESIGN.md §17): export/import versioned
+                 store documents (fronts + epoch registry + calibration + telemetry;
+                 `serve --store-in` then boots with zero offline solves)
   serve          online phase: concurrent serving pipeline (queue, policies, cache;
                  --mix vgg16=0.7,vit=0.3 serves both networks from one pipeline;
                  --adapt closes the loop: telemetry -> drift -> re-solve -> hot-swap;
@@ -192,6 +199,130 @@ fn cmd_solve() -> Result<()> {
     Ok(())
 }
 
+const STORE_HELP: &str = "dynasplit store — warm-restart persistence (DESIGN.md §17)
+
+subcommands:
+  export    solve (or load) Pareto fronts and write a versioned store document
+  import    validate a store document and print what a restart would restore
+
+a store document is self-describing JSON: schema + version + content digest,
+plus per-network sections carrying the Pareto front, its (epoch, digest)
+registry, placement-bucketed calibration, and windowed telemetry summaries.
+`serve --store-in <doc>` boots from one with zero offline solves;
+`serve --store-out <path>` writes one on clean shutdown.
+
+run `dynasplit store export --help` / `dynasplit store import --help` for options.";
+
+fn cmd_store() -> Result<()> {
+    match std::env::args().nth(2).as_deref() {
+        Some("export") => cmd_store_export(),
+        Some("import") => cmd_store_import(),
+        None | Some("help" | "--help" | "-h") => {
+            println!("{STORE_HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown store subcommand {other:?}\n\n{STORE_HELP}"),
+    }
+}
+
+fn cmd_store_export() -> Result<()> {
+    let a = spec("store export", "write a versioned warm-restart store document (§17)")
+        .opt("net", "vgg16", "network (vgg16|vit; ignored with --mix)")
+        .opt("trials", "60", "evaluation budget per solved front")
+        .opt_maybe("pareto", "pareto JSON from `solve` (default: run a fresh search)")
+        .opt_maybe("mix", "export every network of a mix, e.g. vgg16=0.7,vit=0.3")
+        .opt_maybe("out", "output path (default artifacts/store_<net>.json)")
+        .parse_env(3)?;
+    let ctx = Ctx::load(a.str("artifacts")?);
+    let seed = a.u64("seed")?;
+    if a.get("pareto").is_some() && a.get("mix").is_some() {
+        bail!("--pareto holds one network's front; --mix solves per network");
+    }
+    let nets = match a.get("mix") {
+        Some(mix) => NetworkMix::parse(mix)?.networks(),
+        None => vec![Network::parse(a.str("net")?)?],
+    };
+    let mut states = Vec::new();
+    for net in &nets {
+        let pareto = match a.get("pareto") {
+            Some(path) => SolverOutput::load_pareto(std::path::Path::new(path))?,
+            None => {
+                let mut solver = Solver::new(&ctx.testbed, *net);
+                solver.batch_per_trial = a.usize("batch")?;
+                solver.run(Strategy::NsgaIII, a.usize("trials")?, seed).pareto
+            }
+        };
+        let store = ConfigStore::new(ConfigSet::new(pareto));
+        let state = NetworkState::capture(*net, &store);
+        println!(
+            "[store] {}: captured {} configs at epoch {}",
+            net.name(),
+            state.front.len(),
+            state.epoch()
+        );
+        states.push(state);
+    }
+    let doc = StoreDocument::new(states);
+    let default_path = if nets.len() > 1 {
+        format!("{}/store_mix.json", a.str("artifacts")?)
+    } else {
+        format!("{}/store_{}.json", a.str("artifacts")?, nets[0].name())
+    };
+    let path = a.get("out").unwrap_or(&default_path);
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    doc.save(std::path::Path::new(path))?;
+    println!(
+        "[store] exported {} network(s), {} configs -> {path} (schema {} v{}, digest {:016x})",
+        doc.networks.len(),
+        doc.total_configs(),
+        dynasplit::adapt::persist::SCHEMA,
+        dynasplit::adapt::persist::SCHEMA_VERSION,
+        doc.digest()
+    );
+    Ok(())
+}
+
+fn cmd_store_import() -> Result<()> {
+    let a = spec("store import", "validate a store document; print what a restart restores")
+        .opt_maybe("file", "store document path (required)")
+        .parse_env(3)?;
+    let path = match a.get("file") {
+        Some(path) => path.clone(),
+        None => bail!("store import needs --file <document>"),
+    };
+    let doc = StoreDocument::load(std::path::Path::new(&path))?;
+    println!(
+        "[store] {path}: schema {} v{}, digest {:016x}, {} network(s)",
+        dynasplit::adapt::persist::SCHEMA,
+        dynasplit::adapt::persist::SCHEMA_VERSION,
+        doc.digest(),
+        doc.networks.len()
+    );
+    for state in &doc.networks {
+        let store = state.restore()?;
+        let warm = &state.warm;
+        let ewma = match warm.ewma {
+            Some((value, count)) => format!("seeded ({value:.3} over {count} obs)"),
+            None => "unseeded".to_string(),
+        };
+        println!(
+            "[store]   {}: {} configs at epoch {} ({} registry entries); calibration \
+             {} per-config ratio(s); telemetry {} row(s), ewma {}",
+            state.net.name(),
+            state.front.len(),
+            store.epoch(),
+            state.registry.len(),
+            warm.calibration.observed_configs(),
+            warm.rows.len(),
+            ewma
+        );
+    }
+    println!("[store] validated: content digest + registry + fronts all check out");
+    Ok(())
+}
+
 fn cmd_serve() -> Result<()> {
     let a = spec("serve", "online phase: concurrent serving pipeline (simulated workload)")
         .opt("net", "vgg16", "network (vgg16|vit)")
@@ -240,6 +371,16 @@ fn cmd_serve() -> Result<()> {
             "serve a network mix from one pipeline, e.g. vgg16=0.7,vit=0.3 \
              (per-network Pareto stores; ignores --net)",
         )
+        .opt_maybe(
+            "store-in",
+            "boot from a `store export` document: restore fronts + epoch registry + \
+             warm state, skipping the offline solve entirely (DESIGN.md §17)",
+        )
+        .opt_maybe(
+            "store-out",
+            "export the store (and, with --adapt, the loop's warm state) to this \
+             path on clean shutdown",
+        )
         .parse_env(2)?;
     let ctx = Ctx::load(a.str("artifacts")?);
     let seed = a.u64("seed")?;
@@ -248,21 +389,47 @@ fn cmd_serve() -> Result<()> {
         return serve_mixed(&a, &ctx, seed, &mix);
     }
     let net = Network::parse(a.str("net")?)?;
-    let pareto = match a.get("pareto") {
-        Some(path) => SolverOutput::load_pareto(std::path::Path::new(path))?,
+    if a.get("pareto").is_some() && a.get("store-in").is_some() {
+        bail!("--pareto and --store-in both name a front source; pick one");
+    }
+    // warm-restart seam (DESIGN.md §17): an imported document replaces
+    // the offline solve entirely — fronts, epoch registry, and the
+    // adaptation loop's warm state all come from the previous process
+    let (store, store_source, warm_in) = match a.get("store-in") {
+        Some(path) => {
+            let doc = StoreDocument::load(std::path::Path::new(path))?;
+            let digest = format!("{:016x}", doc.digest());
+            let state = doc
+                .state(net)
+                .ok_or_else(|| anyhow::anyhow!("{path} has no {} section", net.name()))?;
+            let store = state.restore()?;
+            println!(
+                "[serve] store: imported {} configs at epoch {} from {path} \
+                 (digest {digest}; zero offline solves)",
+                state.front.len(),
+                store.epoch(),
+            );
+            (store, StoreSource::Imported { doc_digest: digest }, state.warm.clone())
+        }
         None => {
-            let mut solver = Solver::new(&ctx.testbed, net);
-            solver.batch_per_trial = a.usize("batch")?;
-            solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto
+            let pareto = match a.get("pareto") {
+                Some(path) => SolverOutput::load_pareto(std::path::Path::new(path))?,
+                None => {
+                    let mut solver = Solver::new(&ctx.testbed, net);
+                    solver.batch_per_trial = a.usize("batch")?;
+                    solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto
+                }
+            };
+            let sw = dynasplit::serve::Stopwatch::start();
+            let set = ConfigSet::new(pareto);
+            println!(
+                "[serve] startup: sorted + indexed {} configs in {:.3} ms",
+                set.len(),
+                sw.elapsed_ms()
+            );
+            (ConfigStore::new(set), StoreSource::Solved, WarmState::identity())
         }
     };
-    let sw = dynasplit::serve::Stopwatch::start();
-    let set = ConfigSet::new(pareto);
-    println!(
-        "[serve] startup: sorted + indexed {} configs in {:.3} ms",
-        set.len(),
-        sw.elapsed_ms()
-    );
     let policy = parse_policy(&a, &[net])?;
     let gen = WorkloadGen::paper(net);
     let mut rng = Pcg32::new(seed, 91);
@@ -279,7 +446,8 @@ fn cmd_serve() -> Result<()> {
         discrete: a.flag("discrete"),
     };
     let recorder = serve_recorder(&a, &cfg);
-    let report = if a.flag("adapt") {
+    let mut warm_out = WarmState::identity();
+    let mut report = if a.flag("adapt") {
         let adapt_cfg = AdaptConfig {
             window: a.usize("adapt-window")?,
             drift: DriftConfig {
@@ -290,10 +458,16 @@ fn cmd_serve() -> Result<()> {
             resolve: ResolveConfig { trials: a.usize("adapt-trials")?, seed, ..Default::default() },
             ..AdaptConfig::default()
         };
-        let store = ConfigStore::new(set);
         let telemetry = Telemetry::new(cfg.workers, adapt_cfg.telemetry_capacity);
-        let control = AdaptiveLoop::new(&store, &telemetry, &ctx.testbed, net, adapt_cfg)
+        let mut control = AdaptiveLoop::new(&store, &telemetry, &ctx.testbed, net, adapt_cfg)
             .with_recorder(&recorder);
+        if warm_in.is_warm() {
+            control.warm_start(&warm_in.samples(), warm_in.ewma);
+            println!(
+                "[serve] store: warm-started calibration from {} summary row(s)",
+                warm_in.rows.len()
+            );
+        }
         let closed = run_closed_loop(control, policy.as_ref(), &tl, &cfg, |_| {
             Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 })
         })?;
@@ -308,11 +482,11 @@ fn cmd_serve() -> Result<()> {
             s.swaps,
             closed.epochs.len()
         );
+        warm_out = closed.warm;
         closed.serve
     } else {
         // equivalent to `run_pipeline` (broadcast store, no retry, no
         // breakers) with the flight recorder threaded through
-        let store = ConfigStore::new(set);
         let stores = StoreMap::broadcast(&store);
         run_pipeline_resilient(
             &stores,
@@ -327,8 +501,22 @@ fn cmd_serve() -> Result<()> {
             |_| Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 }),
         )?
     };
+    report.store_source = store_source;
     println!("[serve] {} — {}", policy.name(), report.summary_line());
     write_serve_artifacts(&a, &recorder, &report)?;
+    if let Some(path) = a.get("store-out") {
+        let doc = StoreDocument::single(NetworkState::capture(net, &store).with_warm(warm_out));
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        doc.save(std::path::Path::new(path))?;
+        println!(
+            "[serve] store: exported {} configs at epoch {} -> {path} (digest {:016x})",
+            doc.total_configs(),
+            store.epoch(),
+            doc.digest()
+        );
+    }
     let metrics = report.to_metric_set("dynasplit");
     if !metrics.is_empty() {
         let (c, s, e) = metrics.placement_counts();
@@ -534,23 +722,51 @@ fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
     }
     let policy = parse_policy(a, &mix.networks())?;
     // offline phase: one 20%-budget search per mixed network — each
-    // network gets its own independently hot-swappable store
+    // network gets its own independently hot-swappable store.  With
+    // --store-in the per-network sections of one §17 document replace
+    // every solve: documents compose under --mix via StoreMap.
     let mut fronts = Vec::new();
-    for net in mix.networks() {
-        let mut solver = Solver::new(&ctx.testbed, net);
-        solver.batch_per_trial = a.usize("batch")?;
-        let sw = dynasplit::serve::Stopwatch::start();
-        let pareto = solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto;
-        let set = ConfigSet::new(pareto);
-        println!(
-            "[serve] {}: sorted + indexed {} configs in {:.3} ms ({:.0}% of traffic)",
-            net.name(),
-            set.len(),
-            sw.elapsed_ms(),
-            mix.share(net) * 100.0
-        );
-        fronts.push((net, ConfigStore::new(set)));
-    }
+    let store_source = match a.get("store-in") {
+        Some(path) => {
+            let doc = StoreDocument::load(std::path::Path::new(path))?;
+            let digest = format!("{:016x}", doc.digest());
+            for net in mix.networks() {
+                let state = doc
+                    .state(net)
+                    .ok_or_else(|| anyhow::anyhow!("{path} has no {} section", net.name()))?;
+                let store = state.restore()?;
+                println!(
+                    "[serve] {}: imported {} configs at epoch {} ({:.0}% of traffic; \
+                     zero offline solves)",
+                    net.name(),
+                    state.front.len(),
+                    store.epoch(),
+                    mix.share(net) * 100.0
+                );
+                fronts.push((net, store));
+            }
+            StoreSource::Imported { doc_digest: digest }
+        }
+        None => {
+            for net in mix.networks() {
+                let mut solver = Solver::new(&ctx.testbed, net);
+                solver.batch_per_trial = a.usize("batch")?;
+                let sw = dynasplit::serve::Stopwatch::start();
+                let pareto =
+                    solver.run(Strategy::NsgaIII, solver.trials_for_fraction(0.2), seed).pareto;
+                let set = ConfigSet::new(pareto);
+                println!(
+                    "[serve] {}: sorted + indexed {} configs in {:.3} ms ({:.0}% of traffic)",
+                    net.name(),
+                    set.len(),
+                    sw.elapsed_ms(),
+                    mix.share(net) * 100.0
+                );
+                fronts.push((net, ConfigStore::new(set)));
+            }
+            StoreSource::Solved
+        }
+    };
     let mut stores = StoreMap::new();
     for (net, store) in &fronts {
         stores.insert(*net, store);
@@ -569,7 +785,7 @@ fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
         discrete: a.flag("discrete"),
     };
     let recorder = serve_recorder(a, &cfg);
-    let report = run_pipeline_resilient(
+    let mut report = run_pipeline_resilient(
         &stores,
         policy.as_ref(),
         &tl,
@@ -581,8 +797,24 @@ fn serve_mixed(a: &Args, ctx: &Ctx, seed: u64, mix: &NetworkMix) -> Result<()> {
         &recorder,
         |_| Ok(PerRequestSimExecutor { testbed: &ctx.testbed, stream: 92 }),
     )?;
+    report.store_source = store_source;
     println!("[serve] {} — {}", policy.name(), report.summary_line());
     write_serve_artifacts(a, &recorder, &report)?;
+    if let Some(path) = a.get("store-out") {
+        let doc = StoreDocument::new(
+            fronts.iter().map(|(net, store)| NetworkState::capture(*net, store)).collect(),
+        );
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        doc.save(std::path::Path::new(path))?;
+        println!(
+            "[serve] store: exported {} network(s), {} configs -> {path} (digest {:016x})",
+            doc.networks.len(),
+            doc.total_configs(),
+            doc.digest()
+        );
+    }
     for b in report.breakdown() {
         println!(
             "[serve]   {:>6}: {}/{} done; QoS hit {:.0}%; {:.2} J/req; store epochs {:?}",

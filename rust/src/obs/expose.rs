@@ -259,6 +259,7 @@ mod tests {
             workers: 1,
             shards: 1,
             wall_ms: 10.0,
+            store_source: Default::default(),
         }
     }
 

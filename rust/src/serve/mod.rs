@@ -86,6 +86,7 @@ pub use multi::NetExecutorMap;
 pub use queue::{route_shard, AdmissionQueue, QueueStats, RequestSource, ShardWorkerView, ShardedQueue};
 pub use report::{
     CompletionView, NetworkBreakdown, ServeOutcome, ServeRecord, ServeReport, ShardBreakdown,
+    StoreSource,
 };
 pub use worker::{Resilience, RetryPolicy, Worker};
 
@@ -477,6 +478,7 @@ where
         workers: cfg.workers,
         shards: cfg.shards,
         wall_ms: wall.elapsed_ms(),
+        store_source: report::StoreSource::Solved,
     })
 }
 

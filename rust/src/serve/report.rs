@@ -353,6 +353,38 @@ impl ShardBreakdown {
     }
 }
 
+/// Where a run's scheduling state came from: solved in-process at
+/// boot, or imported from a persisted store document (DESIGN.md §17,
+/// `serve --store-in`).  Experiments and traces record this so a
+/// result can always be traced to the front that served it.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum StoreSource {
+    /// Fronts came from the in-process offline solve.
+    #[default]
+    Solved,
+    /// Fronts were imported from a store document with this content
+    /// digest (16 lowercase hex chars).
+    Imported { doc_digest: String },
+}
+
+impl StoreSource {
+    /// Short label for the summary line: `solved` or `imported`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StoreSource::Solved => "solved",
+            StoreSource::Imported { .. } => "imported",
+        }
+    }
+
+    /// The imported document's content digest, if any.
+    pub fn doc_digest(&self) -> Option<&str> {
+        match self {
+            StoreSource::Solved => None,
+            StoreSource::Imported { doc_digest } => Some(doc_digest),
+        }
+    }
+}
+
 /// Aggregated outcome of one pipeline run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -373,6 +405,10 @@ pub struct ServeReport {
     pub shards: usize,
     /// Wall-clock duration of the run (ms).
     pub wall_ms: f64,
+    /// Provenance of the fronts this run scheduled from (stamped by
+    /// the CLI after an import; the pipeline itself defaults to
+    /// [`StoreSource::Solved`]).
+    pub store_source: StoreSource,
 }
 
 impl ServeReport {
@@ -703,7 +739,7 @@ impl ServeReport {
              QoS hit {:.0}%; p50 {:.0} ms p99 {:.0} ms; \
              {:.2} J/req; {} reconfigs, {} avoided ({} coalesced); \
              {} retried, {} degraded-served; {:.0} req/s; \
-             {} store epoch(s); nets: {}{}",
+             {} store epoch(s); store: {}; nets: {}{}",
             self.completed(),
             self.rejected_queue_full(),
             self.shed_by_admission(),
@@ -724,6 +760,7 @@ impl ServeReport {
             self.degraded_served(),
             self.throughput_rps(),
             self.epochs_observed().len().max(1),
+            self.store_source.label(),
             if nets.is_empty() { "-".to_string() } else { nets },
             shard_suffix,
         )
@@ -804,6 +841,14 @@ impl ServeReport {
             ("mean_energy_j", Json::num(self.mean_energy_j())),
             ("throughput_rps", Json::num(self.throughput_rps())),
             ("store_epochs", n(self.epochs_observed().len().max(1))),
+            ("store_source", Json::str(self.store_source.label())),
+            (
+                "store_digest",
+                match self.store_source.doc_digest() {
+                    Some(digest) => Json::str(digest),
+                    None => Json::Null,
+                },
+            ),
             (
                 "cache",
                 Json::obj(vec![
@@ -928,6 +973,7 @@ mod tests {
             workers: 2,
             shards,
             wall_ms: 2000.0,
+            store_source: StoreSource::Solved,
         }
     }
 

@@ -20,7 +20,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dynasplit::adapt::{
-    AdaptConfig, AdaptiveLoop, ConfigStore, DriftConfig, ResolveConfig, Sample, Telemetry,
+    AdaptConfig, AdaptiveLoop, ConfigStore, DriftConfig, NetworkState, PersistError,
+    ResolveConfig, Sample, StoreDocument, Telemetry, WarmState,
 };
 use dynasplit::controller::policy::ConfigSet;
 use dynasplit::controller::{ExecOutcome, Executor, PaperPolicy, PerRequestSimExecutor};
@@ -28,7 +29,7 @@ use dynasplit::experiments::adaptation::shifted_testbed;
 use dynasplit::serve::{run_pipeline, run_pipeline_on, PipelineConfig, ServeOutcome};
 use dynasplit::simulator::Testbed;
 use dynasplit::solver::{ParetoEntry, Solver, Strategy};
-use dynasplit::space::{Config, Network, TpuMode};
+use dynasplit::space::{Config, Network, Space, TpuMode};
 use dynasplit::util::rng::Pcg32;
 use dynasplit::workload::{timeline, ArrivalProcess, Request, TimedRequest, WorkloadGen};
 
@@ -254,5 +255,255 @@ fn drift_detection_resolve_and_swap_recover_qos_after_a_world_shift() {
         "measurable QoS recovery expected: {:.3} -> {:.3}",
         before,
         after
+    );
+}
+
+// --- §17 warm-restart persistence: round-trip properties --------------------
+//
+// `rust/src/adapt/persist.rs` carries its own unit suite (typed rejection
+// of every poison class); these tests pin the *integration* contract: a
+// randomized live store — front, (epoch, digest) registry, calibration,
+// telemetry summaries — survives export ∘ import exactly, and a restored
+// store schedules a seeded run bitwise-identically with zero re-solves.
+
+/// `k` distinct feasible configs with random (finite, positive) objectives.
+fn random_front(net: Network, rng: &mut Pcg32, k: usize) -> Vec<ParetoEntry> {
+    let feasible = Space::new(net).enumerate_feasible();
+    let mut used = std::collections::BTreeSet::new();
+    let mut front = Vec::new();
+    while front.len() < k {
+        let i = rng.below(feasible.len() as u64) as usize;
+        if used.insert(i) {
+            front.push(ParetoEntry {
+                config: feasible[i],
+                latency_ms: rng.uniform(20.0, 400.0),
+                energy_j: rng.uniform(0.5, 30.0),
+                accuracy: rng.uniform(0.5, 1.0),
+            });
+        }
+    }
+    front
+}
+
+/// `n` telemetry samples drawn over the front with measured values jittered
+/// around the predictions (all finite and positive, as live telemetry is).
+fn random_samples(front: &[ParetoEntry], rng: &mut Pcg32, n: usize) -> Vec<Sample> {
+    (0..n)
+        .map(|_| {
+            let e = *rng.choose(front);
+            Sample {
+                epoch: 0,
+                config: e.config,
+                predicted_latency_ms: e.latency_ms,
+                predicted_energy_j: e.energy_j,
+                latency_ms: e.latency_ms * rng.uniform(0.8, 1.6),
+                energy_j: e.energy_j * rng.uniform(0.8, 1.6),
+                edge_energy_j: rng.uniform(0.1, 5.0),
+                cloud_energy_j: rng.uniform(0.1, 5.0),
+                accuracy: rng.uniform(0.5, 1.0),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn store_roundtrip_is_identity_for_randomized_stores() {
+    let mut rng = Pcg32::seeded(0x5707_2026);
+    for trial in 0..12u64 {
+        let net = if trial % 2 == 0 { Network::Vgg16 } else { Network::Vit };
+        let k = 2 + rng.below(6) as usize;
+        let store = ConfigStore::new(ConfigSet::new(random_front(net, &mut rng, k)));
+        for _ in 0..rng.below(3) {
+            let k2 = 1 + rng.below(5) as usize;
+            store.swap(ConfigSet::new(random_front(net, &mut rng, k2)));
+        }
+        let snap = store.snapshot();
+        let samples = random_samples(snap.set().entries(), &mut rng, 24);
+        let ewma = Some((rng.uniform(1.0, 50.0), 1 + rng.below(100)));
+        let warm = WarmState::from_samples(&samples, ewma);
+        let state = NetworkState::capture(net, &store).with_warm(warm);
+
+        let text = StoreDocument::single(state.clone()).encode();
+        let back = StoreDocument::parse(&text)
+            .unwrap_or_else(|e| panic!("trial {trial}: round trip parses: {e}"));
+        assert_eq!(back.encode(), text, "trial {trial}: canonical encode fixed point");
+
+        let got = back.state(net).expect("section survives");
+        assert_eq!(got.front, state.front, "trial {trial}: front contents");
+        assert_eq!(got.registry, state.registry, "trial {trial}: (epoch, digest) registry");
+        assert_eq!(got.warm.rows, state.warm.rows, "trial {trial}: telemetry rows");
+        assert_eq!(got.warm.ewma, state.warm.ewma, "trial {trial}: EWMA seed");
+        assert_eq!(got.warm.calibration.edge, state.warm.calibration.edge);
+        assert_eq!(got.warm.calibration.offload, state.warm.calibration.offload);
+        assert_eq!(
+            got.warm.calibration.per_config_ratios(),
+            state.warm.calibration.per_config_ratios(),
+            "trial {trial}: per-config calibration ratios"
+        );
+
+        let restored = got.restore().expect("imported state restores");
+        assert_eq!(restored.epoch(), store.epoch(), "trial {trial}: head epoch");
+        assert_eq!(restored.epochs(), store.epochs(), "trial {trial}: full registry");
+        let rsnap = restored.snapshot();
+        assert_eq!(rsnap.set().entries(), snap.set().entries(), "trial {trial}: head set");
+        assert_eq!(rsnap.digest(), snap.digest(), "trial {trial}: head digest");
+    }
+}
+
+#[test]
+fn store_documents_compose_per_network_and_reject_duplicates() {
+    let mut rng = Pcg32::seeded(0x171);
+    let vgg_store = ConfigStore::new(ConfigSet::new(random_front(Network::Vgg16, &mut rng, 4)));
+    let vit_store = ConfigStore::new(ConfigSet::new(random_front(Network::Vit, &mut rng, 3)));
+    let vgg = NetworkState::capture(Network::Vgg16, &vgg_store);
+    let vit = NetworkState::capture(Network::Vit, &vit_store);
+
+    // per-network documents compose under --mix via merge()
+    let merged = StoreDocument::merge(vec![
+        StoreDocument::single(vgg.clone()),
+        StoreDocument::single(vit.clone()),
+    ])
+    .expect("distinct networks merge");
+    let back = StoreDocument::parse(&merged.encode()).expect("multi-network document parses");
+    assert_eq!(back.networks.len(), 2);
+    assert_eq!(back.state(Network::Vgg16).expect("vgg16 section").front, vgg.front);
+    assert_eq!(back.state(Network::Vit).expect("vit section").front, vit.front);
+
+    let dup = StoreDocument::merge(vec![
+        StoreDocument::single(vgg.clone()),
+        StoreDocument::single(vgg),
+    ]);
+    assert!(
+        matches!(dup, Err(PersistError::DuplicateNetwork(Network::Vgg16))),
+        "same network twice must be a typed error: {dup:?}"
+    );
+}
+
+#[test]
+fn warm_imported_store_serves_bitwise_identically_with_zero_resolves() {
+    let net = Network::Vgg16;
+    let testbed = Testbed::synthetic();
+    let mut solver = Solver::new(&testbed, net);
+    solver.batch_per_trial = 40;
+    let pareto = solver.run(Strategy::NsgaIII, 120, 13).pareto;
+    let store_a = ConfigStore::new(ConfigSet::new(pareto.clone()));
+    // a mid-life swap makes the exported registry + head epoch non-trivial
+    let trimmed: Vec<ParetoEntry> = pareto.iter().skip(1).cloned().collect();
+    store_a.swap(ConfigSet::new(if trimmed.is_empty() { pareto } else { trimmed }));
+    assert_eq!(store_a.epoch(), 1);
+
+    let gen = WorkloadGen::paper(net);
+    let mut rng = Pcg32::seeded(0x200);
+    let tl = timeline(&gen, &ArrivalProcess::Poisson { rate_per_s: 150.0 }, 200, &mut rng);
+    let cfg = PipelineConfig {
+        workers: 1,
+        queue_capacity: 512,
+        max_batch: 2,
+        time_scale: 0.0,
+        seed: 21,
+        reuse: true,
+        discrete: true,
+        ..PipelineConfig::default()
+    };
+    let run = |store: &ConfigStore| {
+        run_pipeline_on(store, &PaperPolicy, &tl, &cfg, None, None, |_| {
+            Ok(PerRequestSimExecutor { testbed: &testbed, stream: 92 })
+        })
+        .expect("pipeline run")
+    };
+    let before = run(&store_a);
+
+    // export -> (conceptual process restart) -> import
+    let text = StoreDocument::single(NetworkState::capture(net, &store_a)).encode();
+    let imported = StoreDocument::parse(&text).expect("exported document validates");
+    let state = imported.state(net).expect("vgg16 section");
+    let store_b = state.restore().expect("imported state restores");
+    assert_eq!(store_b.epoch(), store_a.epoch(), "head epoch survives the restart");
+    assert_eq!(store_b.epochs(), store_a.epochs(), "(epoch, digest) registry survives");
+
+    let after = run(&store_b);
+    assert_eq!(after.records.len(), before.records.len(), "same request universe");
+    for (x, y) in before.records.iter().zip(after.records.iter()) {
+        assert_eq!(x.request_id, y.request_id, "record order is stable");
+        match (&x.outcome, &y.outcome) {
+            (
+                ServeOutcome::Done {
+                    config: ca,
+                    latency_ms: la,
+                    energy_j: ea,
+                    epoch: pa,
+                    store_digest: da,
+                    ..
+                },
+                ServeOutcome::Done {
+                    config: cb,
+                    latency_ms: lb,
+                    energy_j: eb,
+                    epoch: pb,
+                    store_digest: db,
+                    ..
+                },
+            ) => {
+                assert_eq!(ca, cb, "request {}: scheduled config", x.request_id);
+                assert_eq!(la, lb, "request {}: latency", x.request_id);
+                assert_eq!(ea, eb, "request {}: energy", x.request_id);
+                assert_eq!(pa, pb, "request {}: epoch stamp", x.request_id);
+                assert_eq!(da, db, "request {}: digest stamp", x.request_id);
+                assert_eq!(*pb, store_b.epoch(), "stamp is the imported head epoch");
+                assert_eq!(Some(*db), store_b.digest_of(*pb), "stamp is registered");
+            }
+            (a, b) => assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "request {}: non-completion outcomes agree",
+                x.request_id
+            ),
+        }
+    }
+    // zero re-solves after import: the restored store never moved
+    assert_eq!(store_b.epoch(), state.epoch(), "no swap/re-solve during the warm run");
+    assert_eq!(before.completed(), after.completed());
+    assert_eq!(before.qos_hit_rate(), after.qos_hit_rate());
+}
+
+#[test]
+fn warm_start_reseeds_calibration_from_an_imported_document() {
+    let net = Network::Vgg16;
+    let testbed = Testbed::synthetic();
+    let mut rng = Pcg32::seeded(0x7a3);
+    let front = random_front(net, &mut rng, 5);
+    let store = ConfigStore::new(ConfigSet::new(front.clone()));
+    let samples = random_samples(&front, &mut rng, 40);
+    let warm = WarmState::from_samples(&samples, Some((12.5, 9)));
+    let text = StoreDocument::single(NetworkState::capture(net, &store).with_warm(warm)).encode();
+    let doc = StoreDocument::parse(&text).expect("document parses");
+    let state = doc.state(net).expect("section").clone();
+    assert!(state.warm.is_warm());
+
+    let telemetry = Telemetry::new(1, 1024);
+    let cfg = AdaptConfig { history: 512, ..AdaptConfig::default() };
+    let mut lp = AdaptiveLoop::new(&store, &telemetry, &testbed, net, cfg);
+    lp.warm_start(&state.warm.samples(), state.warm.ewma);
+    let out = lp.warm_state();
+
+    assert_eq!(out.rows.len(), state.warm.rows.len(), "every summary row re-materialized");
+    for (a, b) in out.rows.iter().zip(state.warm.rows.iter()) {
+        assert_eq!(a.config, b.config, "row config");
+        assert_eq!(a.n, b.n, "row sample count");
+        assert!((a.latency_ms - b.latency_ms).abs() < 1e-9, "row mean latency");
+        assert!((a.energy_j - b.energy_j).abs() < 1e-9, "row mean energy");
+        assert!((a.latency_p50_ms - b.latency_p50_ms).abs() < 1e-9, "row p50");
+    }
+    let (value, _) = out.ewma.expect("EWMA reseeded from the imported value");
+    assert!((value - 12.5).abs() < 1e-12, "EWMA seed value survives: {value}");
+    let (ca, cb) = (&out.calibration, &state.warm.calibration);
+    assert!((ca.edge.0 - cb.edge.0).abs() < 1e-9 && (ca.edge.1 - cb.edge.1).abs() < 1e-9);
+    assert!(
+        (ca.offload.0 - cb.offload.0).abs() < 1e-9 && (ca.offload.1 - cb.offload.1).abs() < 1e-9
+    );
+    assert_eq!(
+        out.calibration.observed_configs(),
+        state.warm.calibration.observed_configs(),
+        "per-config calibration coverage survives the warm start"
     );
 }

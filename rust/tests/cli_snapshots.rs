@@ -1,0 +1,217 @@
+//! Golden-snapshot pinning of the deterministic CLI surface (DESIGN.md §17).
+//!
+//! Every test drives the real `dynasplit` binary (`CARGO_BIN_EXE_dynasplit`)
+//! and compares byte-for-byte against a golden under `rust/tests/snapshots/`.
+//! The goldens are machine artifacts, not hand-written fixtures:
+//!
+//! * `DYNASPLIT_BLESS=1 cargo test --test cli_snapshots` re-records every
+//!   golden from the current binary;
+//! * a missing golden is bootstrap-recorded on first run (so a fresh clone
+//!   passes), and every test *also* runs its command twice and asserts the
+//!   two outputs are byte-identical after masking — the determinism claim
+//!   holds even on the recording run;
+//! * an existing golden that drifts fails with a bless hint.
+//!
+//! Masking is minimal and explicit: the `{:.0} req/s` token of the serve
+//! summary line (wall-clock derived) and absolute temp paths.  Everything
+//! else — help trees, outcome counts, latency percentiles, metrics
+//! exposition, store documents — must be byte-stable across runs.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_dynasplit")
+}
+
+fn snapshot_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/snapshots")
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(bin()).args(args).output().expect("spawn dynasplit")
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// Fresh per-test scratch dir (no tempfile dep).  Distinct names keep
+/// concurrently running tests out of each other's artifacts.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dynasplit_snap_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Compare `actual` against the golden `name`, honouring `DYNASPLIT_BLESS=1`
+/// (re-record) and bootstrap-recording a missing golden.
+fn check_snapshot(name: &str, actual: &str) {
+    let path = snapshot_dir().join(name);
+    let bless = std::env::var("DYNASPLIT_BLESS").as_deref() == Ok("1");
+    if bless || !path.exists() {
+        fs::create_dir_all(snapshot_dir()).expect("create snapshot dir");
+        fs::write(&path, actual).expect("write snapshot");
+        eprintln!("[snapshot] recorded {}", path.display());
+        return;
+    }
+    let expected = fs::read_to_string(&path).expect("read snapshot");
+    assert_eq!(
+        expected, actual,
+        "snapshot {name} drifted — if the change is intentional, re-record with \
+         DYNASPLIT_BLESS=1 cargo test --test cli_snapshots"
+    );
+}
+
+/// Replace the wall-clock-derived `NNN req/s` summary segment with a stable
+/// token; every other segment must already be deterministic.
+fn mask_rps(line: &str) -> String {
+    line.split("; ")
+        .map(|seg| if seg.ends_with(" req/s") { "<RPS> req/s" } else { seg })
+        .collect::<Vec<_>>()
+        .join("; ")
+}
+
+fn mask_path(text: &str, dir: &Path) -> String {
+    text.replace(&dir.display().to_string(), "<TMP>")
+}
+
+// --- help trees ------------------------------------------------------------
+
+#[test]
+fn top_level_help_is_pinned() {
+    let out = run(&["--help"]);
+    assert!(out.status.success(), "top-level --help exits 0");
+    let text = stdout_of(&out);
+    assert!(text.contains("store"), "help advertises the store subcommand");
+    assert!(stderr_of(&out).is_empty(), "help goes to stdout only");
+    check_snapshot("help.txt", &text);
+}
+
+#[test]
+fn store_help_is_pinned() {
+    let out = run(&["store", "--help"]);
+    assert!(out.status.success(), "store --help exits 0");
+    let text = stdout_of(&out);
+    assert!(text.contains("export") && text.contains("import"));
+    check_snapshot("store_help.txt", &text);
+    let bare = run(&["store"]);
+    assert!(bare.status.success());
+    assert_eq!(stdout_of(&bare), text, "bare `store` prints the same help");
+}
+
+#[test]
+fn serve_help_is_pinned() {
+    let out = run(&["serve", "--help"]);
+    assert!(!out.status.success(), "subcommand --help routes usage to stderr, exit 1");
+    let text = stderr_of(&out);
+    assert!(text.contains("--store-in") && text.contains("--store-out"));
+    check_snapshot("serve_help.txt", &text);
+}
+
+#[test]
+fn store_export_help_is_pinned() {
+    let out = run(&["store", "export", "--help"]);
+    assert!(!out.status.success());
+    let text = stderr_of(&out);
+    assert!(text.contains("--out"));
+    check_snapshot("store_export_help.txt", &text);
+}
+
+// --- seeded serve summary line ---------------------------------------------
+
+fn serve_summary(artifacts: &Path) -> String {
+    let dir = artifacts.display().to_string();
+    let out = run(&[
+        "serve", "--net", "vgg16", "--requests", "60", "--workers", "1", "--discrete", "--seed",
+        "7", "--artifacts", &dir,
+    ]);
+    assert!(out.status.success(), "seeded serve run succeeds: {}", stderr_of(&out));
+    let stdout = stdout_of(&out);
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("[serve] paper — "))
+        .unwrap_or_else(|| panic!("no summary line in:\n{stdout}"));
+    mask_rps(line)
+}
+
+#[test]
+fn seeded_serve_summary_line_is_stable() {
+    let a = serve_summary(&scratch("serve_a"));
+    let b = serve_summary(&scratch("serve_b"));
+    assert_eq!(a, b, "twin seeded runs must agree byte-for-byte after the req/s mask");
+    assert!(a.contains("store: solved"), "provenance token present: {a}");
+    check_snapshot("serve_summary.txt", &a);
+}
+
+// --- metrics exposition -----------------------------------------------------
+
+fn metrics_body(artifacts: &Path) -> String {
+    let dir = artifacts.display().to_string();
+    let metrics = artifacts.join("metrics.prom");
+    let metrics_path = metrics.display().to_string();
+    let out = run(&[
+        "serve", "--net", "vgg16", "--requests", "60", "--workers", "1", "--discrete", "--seed",
+        "7", "--artifacts", &dir, "--metrics", &metrics_path,
+    ]);
+    assert!(out.status.success(), "metrics serve run succeeds: {}", stderr_of(&out));
+    fs::read_to_string(&metrics).expect("read metrics exposition")
+}
+
+#[test]
+fn metrics_exposition_is_stable() {
+    let a = metrics_body(&scratch("metrics_a"));
+    let b = metrics_body(&scratch("metrics_b"));
+    assert_eq!(a, b, "exposition must be byte-deterministic for a seeded discrete run");
+    assert!(a.contains("# TYPE dynasplit_requests_total counter"));
+    assert!(a.contains("dynasplit_latency_ms_bucket{le=\"+Inf\"}"));
+    check_snapshot("metrics.txt", &a);
+}
+
+// --- store export document + import stdout ----------------------------------
+
+fn export_doc(artifacts: &Path) -> (PathBuf, String) {
+    let dir = artifacts.display().to_string();
+    let doc = artifacts.join("store.json");
+    let doc_path = doc.display().to_string();
+    let out = run(&[
+        "store", "export", "--net", "vgg16", "--trials", "24", "--batch", "100", "--seed", "7",
+        "--artifacts", &dir, "--out", &doc_path,
+    ]);
+    assert!(out.status.success(), "store export succeeds: {}", stderr_of(&out));
+    let text = fs::read_to_string(&doc).expect("read store document");
+    (doc, text)
+}
+
+#[test]
+fn store_export_document_is_stable() {
+    let (_, a) = export_doc(&scratch("export_a"));
+    let (_, b) = export_doc(&scratch("export_b"));
+    assert_eq!(a, b, "twin seeded exports must be byte-identical");
+    let parsed = dynasplit::adapt::StoreDocument::parse(&a).expect("exported doc validates");
+    assert_eq!(parsed.encode() + "\n", a, "document is an encode fixed point");
+    check_snapshot("store_vgg16.json", &a);
+}
+
+#[test]
+fn store_import_stdout_is_pinned() {
+    let dir = scratch("import");
+    let (doc, _) = export_doc(&dir);
+    let doc_path = doc.display().to_string();
+    let import = || {
+        let out = run(&["store", "import", "--file", &doc_path]);
+        assert!(out.status.success(), "store import succeeds: {}", stderr_of(&out));
+        mask_path(&stdout_of(&out), &dir)
+    };
+    let a = import();
+    let b = import();
+    assert_eq!(a, b, "import report is deterministic");
+    assert!(a.contains("validated"), "import confirms validation: {a}");
+    check_snapshot("store_import.txt", &a);
+}

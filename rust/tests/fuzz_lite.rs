@@ -483,6 +483,226 @@ fn manifest_load_survives_field_targeted_corruption() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// StoreDocument::parse (warm-restart persistence, DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+use dynasplit::adapt::{ConfigStore, NetworkState, PersistError, Sample, StoreDocument, WarmState};
+use dynasplit::controller::policy::ConfigSet;
+use dynasplit::solver::ParetoEntry;
+use dynasplit::space::{Config, TpuMode};
+use dynasplit::util::hash::fnv1a;
+use dynasplit::util::json::Json;
+
+/// Deterministic, fully-populated seed: a two-epoch vgg16 store with a
+/// warm state (calibration + EWMA + telemetry rows).  Objective values
+/// are integral so field-targeted needles match the canonical encoding.
+fn store_seed_state() -> NetworkState {
+    let entry = |split: usize, latency: f64, energy: f64| ParetoEntry {
+        config: Config { net: Network::Vgg16, cpu_idx: 6, tpu: TpuMode::Off, gpu: true, split },
+        latency_ms: latency,
+        energy_j: energy,
+        accuracy: 0.9,
+    };
+    let store =
+        ConfigStore::new(ConfigSet::new(vec![entry(3, 100.0, 5.0), entry(9, 150.0, 8.0)]));
+    store.swap(ConfigSet::new(vec![
+        entry(3, 100.0, 5.0),
+        entry(9, 150.0, 8.0),
+        entry(12, 210.0, 12.0),
+    ]));
+    let samples: Vec<Sample> = (0..8)
+        .map(|i| Sample {
+            epoch: 1,
+            config: entry(3, 100.0, 5.0).config,
+            predicted_latency_ms: 100.0,
+            predicted_energy_j: 5.0,
+            latency_ms: 110.0 + i as f64,
+            energy_j: 6.0,
+            edge_energy_j: 2.0,
+            cloud_energy_j: 4.0,
+            accuracy: 0.9,
+        })
+        .collect();
+    NetworkState::capture(Network::Vgg16, &store)
+        .with_warm(WarmState::from_samples(&samples, Some((42.0, 7))))
+}
+
+/// Recompute + rewrite the content digest of a (syntactically valid)
+/// mutated document so field poisons reach the deep validators instead
+/// of dying at `DigestMismatch`.  Syntax-broken input passes through
+/// unchanged — it exercises the `Syntax` arm instead.
+fn restamp(text: &str) -> String {
+    let Ok(mut v) = Json::parse(text) else {
+        return text.to_string();
+    };
+    let Json::Obj(map) = &mut v else {
+        return text.to_string();
+    };
+    let Some(networks) = map.get("networks") else {
+        return text.to_string();
+    };
+    let digest = fnv1a(networks.encode().bytes().map(u64::from));
+    map.insert("digest".to_string(), Json::str(format!("{digest:016x}")));
+    v.encode()
+}
+
+/// The parse contract on arbitrary text: never panic, and any accepted
+/// document is fully self-consistent — canonical encode fixed point,
+/// non-empty, every section restores to a working store whose head set
+/// is exactly the (normalized) persisted front.
+fn check_store_parse(text: &str, seed_note: &str) {
+    if let Ok(doc) = StoreDocument::parse(text) {
+        let re = doc.encode();
+        let again = StoreDocument::parse(&re)
+            .unwrap_or_else(|e| panic!("{seed_note}: re-encode must re-parse: {e}"));
+        assert_eq!(again.encode(), re, "{seed_note}: encode not a fixed point");
+        assert!(!doc.networks.is_empty(), "{seed_note}: accepted an empty document");
+        for state in &doc.networks {
+            let store = state
+                .restore()
+                .unwrap_or_else(|e| panic!("{seed_note}: accepted section must restore: {e}"));
+            assert_eq!(store.epoch(), state.epoch(), "{seed_note}: head epoch mismatch");
+            let snap = store.snapshot();
+            assert_eq!(
+                snap.set().entries(),
+                state.front.as_slice(),
+                "{seed_note}: accepted front is not the normalized head set"
+            );
+        }
+    }
+}
+
+#[test]
+fn store_document_parse_survives_structured_mutation() {
+    let clean_text = StoreDocument::single(store_seed_state()).encode();
+    // the unmutated seed must round-trip before we start breaking it
+    let doc = StoreDocument::parse(&clean_text).expect("seed document parses");
+    assert_eq!(doc.encode(), clean_text, "seed is canonical");
+    let clean = clean_text.into_bytes();
+    let mut rng = Pcg32::new(0xf0a2_2026, 9);
+    for round in 0..ROUNDS {
+        let mut buf = clean.clone();
+        for _ in 0..rng.range_i64(1, 3) {
+            mutate(&mut buf, &mut rng);
+        }
+        let s = String::from_utf8_lossy(&buf);
+        check_store_parse(&s, &format!("mutation round {round}"));
+        // restamping the digest must never turn corruption into a panic
+        // either — it just routes the mutant to the deep validators
+        check_store_parse(&restamp(&s), &format!("restamped mutation round {round}"));
+    }
+}
+
+#[test]
+fn store_document_parse_survives_field_targeted_poisons() {
+    let clean = StoreDocument::single(store_seed_state()).encode();
+    let needles = [
+        "\"version\":1",
+        "\"schema\":\"dynasplit-store\"",
+        "\"epoch\":0",
+        "\"epoch\":1",
+        "\"cpu_idx\":6",
+        "\"split\":3",
+        "\"latency_ms\":100",
+        "\"energy_j\":5",
+        "\"n\":8",
+        "\"gpu\":true",
+        "\"count\":7",
+    ];
+    let poisons = [
+        "-1",
+        "0",
+        "1e400",
+        "NaN",
+        "null",
+        "\"zz\"",
+        "[1,2]",
+        "99",
+        "18446744073709551616",
+        "1e-310",
+    ];
+    let mut rng = Pcg32::new(0xf0a2_2026, 10);
+    for round in 0..ROUNDS {
+        let needle = *rng.choose(&needles);
+        let poison = *rng.choose(&poisons);
+        let (key, _) = needle.split_once(':').unwrap();
+        let mutant = match rng.below(3) {
+            // replace the field's value with a poisoned literal
+            0 => clean.replacen(needle, &format!("{key}:{poison}"), 1),
+            // delete the field entirely (dangling comma and all)
+            1 => clean.replacen(needle, "", 1),
+            // duplicate the key with a conflicting value appended
+            _ => clean.replacen(needle, &format!("{needle},{key}:{poison}"), 1),
+        };
+        let note = format!("targeted round {round} ({needle} -> {poison})");
+        check_store_parse(&mutant, &note);
+        check_store_parse(&restamp(&mutant), &format!("restamped {note}"));
+    }
+}
+
+#[test]
+fn store_document_poison_classes_map_to_typed_errors() {
+    let clean = StoreDocument::single(store_seed_state()).encode();
+
+    // unknown version (digest re-stamped so the version check is reached)
+    let vbump = restamp(&clean.replacen("\"version\":1", "\"version\":99", 1));
+    assert!(matches!(StoreDocument::parse(&vbump), Err(PersistError::UnknownVersion(99))));
+
+    // unknown schema
+    let schema = restamp(&clean.replacen("dynasplit-store", "dynasplit-stale", 1));
+    assert!(matches!(StoreDocument::parse(&schema), Err(PersistError::UnknownSchema(_))));
+
+    // digest flip — deliberately NOT restamped
+    let digest_pos = clean.find("\"digest\":\"").expect("digest key") + "\"digest\":\"".len();
+    let mut flipped = clean.clone();
+    let old = flipped.as_bytes()[digest_pos];
+    flipped.replace_range(digest_pos..digest_pos + 1, if old == b'0' { "1" } else { "0" });
+    assert!(matches!(StoreDocument::parse(&flipped), Err(PersistError::DigestMismatch { .. })));
+
+    // truncated front contradicts the (epoch, digest) registry
+    let mut short = store_seed_state();
+    short.front.pop();
+    let short_doc = StoreDocument::single(short).encode();
+    assert!(matches!(
+        StoreDocument::parse(&short_doc),
+        Err(PersistError::BadRegistry(_) | PersistError::DigestMismatch { .. })
+    ));
+
+    // non-finite objective (1e400 overflows to +inf in the JSON parser)
+    let inf = restamp(&clean.replacen("\"latency_ms\":100", "\"latency_ms\":1e400", 1));
+    assert!(matches!(StoreDocument::parse(&inf), Err(PersistError::NonFiniteObjective(_))));
+
+    // NaN is not JSON at all — syntax, not a panic
+    let nan = clean.replacen("\"latency_ms\":100", "\"latency_ms\":NaN", 1);
+    assert!(matches!(StoreDocument::parse(&nan), Err(PersistError::Syntax(_))));
+
+    // duplicate config in the front
+    let mut dup = store_seed_state();
+    dup.front.push(dup.front[0].clone());
+    let dup_doc = StoreDocument::single(dup).encode();
+    assert!(matches!(
+        StoreDocument::parse(&dup_doc),
+        Err(PersistError::DuplicateConfig(Network::Vgg16) | PersistError::NonNormalizedFront(_))
+    ));
+
+    // empty document
+    let empty = StoreDocument::new(vec![]).encode();
+    assert!(matches!(StoreDocument::parse(&empty), Err(PersistError::EmptyDocument)));
+
+    // registry that does not start at epoch 0 / skips epochs
+    let bad_reg = restamp(&clean.replacen("\"epoch\":1", "\"epoch\":7", 1));
+    assert!(StoreDocument::parse(&bad_reg).is_err(), "non-sequential registry accepted");
+
+    // garbage is Syntax, never a panic
+    for g in ["", "{", "nope", "[1,2,3", "{\"schema\":}"] {
+        assert!(
+            matches!(StoreDocument::parse(g), Err(PersistError::Syntax(_))),
+            "garbage {g:?} must be a syntax error"
+        );
+    }
+}
+
 #[test]
 fn crc32_mutation_detection_rate() {
     // Sanity on the integrity primitive itself: every 1-bit payload
